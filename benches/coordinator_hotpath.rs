@@ -1,0 +1,63 @@
+//! Bench: coordinator hot path — engine decode-step overhead over raw PJRT
+//! execution (target: <5%), batcher planning throughput, and state-pool
+//! gather/scatter rates.
+
+use fastmamba::config::ModelConfig;
+use fastmamba::coordinator::{DecodeBatcher, Engine, EngineConfig, Request, StatePool};
+use fastmamba::eval::load_corpus;
+use fastmamba::runtime::Runtime;
+use fastmamba::util::bench::{bench, bench_quick};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let cfg = rt.weights_host.cfg.clone();
+
+    // raw PJRT decode at B=8
+    let b = 8usize;
+    let conv = vec![0.0f32; b * cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()];
+    let ssm = vec![0.0f32; b * cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state];
+    let toks: Vec<i32> = (0..b as i32).collect();
+    rt.decode("fp32", b, &conv, &ssm, &toks)?; // warm
+    let raw = bench_quick("raw PJRT decode B8", || {
+        let _ = rt.decode("fp32", b, &conv, &ssm, &toks).unwrap();
+    });
+    println!("{raw}");
+
+    // engine-driven decode at 8 active requests (same executable)
+    let corpus = load_corpus(&rt.dir)?;
+    let mut engine = Engine::new(&rt, EngineConfig { max_active: 8, greedy_chunking: true });
+    for id in 0..8u64 {
+        let prompt: Vec<u32> = corpus[id as usize * 50..id as usize * 50 + 33]
+            .iter()
+            .map(|t| t % cfg.vocab_size as u32)
+            .collect();
+        engine.submit(Request::new(id, prompt, 100_000, "fp32")); // never finishes
+    }
+    engine.step()?; // admit (prefill) once
+    let eng = bench("engine decode step (8 active)", 2, 5, Duration::from_millis(300), || {
+        engine.step().unwrap();
+    });
+    println!("{eng}");
+    let overhead = (eng.median_s - raw.median_s) / raw.median_s * 100.0;
+    println!("coordinator overhead over raw PJRT: {overhead:.1}% (target < 5%)");
+
+    // batcher planning rate
+    let batcher = DecodeBatcher::new(rt.decode_batches());
+    let plan = bench_quick("batcher.plan(1000 active)", || {
+        std::hint::black_box(batcher.plan(1000));
+    });
+    println!("{plan}");
+
+    // state pool gather/scatter
+    let mut pool = StatePool::new(&ModelConfig::tiny(), 8);
+    let slots: Vec<usize> = (0..8).map(|_| pool.alloc().unwrap()).collect();
+    let gs = bench_quick("state gather+scatter (8 slots)", || {
+        let (c, s) = pool.gather(&slots);
+        pool.scatter(&slots, &c, &s);
+    });
+    println!("{gs}");
+    let bytes = 8.0 * pool.slot_bytes() as f64 * 2.0;
+    println!("state move bandwidth: {:.2} GB/s", bytes / gs.median_s / 1e9);
+    Ok(())
+}

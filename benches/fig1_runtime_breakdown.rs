@@ -1,0 +1,45 @@
+//! Bench: Fig. 1 — prefill runtime breakdown by component vs sequence
+//! length, on both the GPU model (the paper's measurement) and the FastMamba
+//! simulator (showing how the accelerator re-balances the components).
+
+use fastmamba::baseline::GpuModel;
+use fastmamba::config::{AcceleratorConfig, ModelConfig};
+use fastmamba::sim::PerfModel;
+use fastmamba::util::bench::Table;
+
+fn main() {
+    let cfg = ModelConfig::mamba2_130m();
+    let gpu = GpuModel::default();
+    println!("GPU (RTX 3090 model) prefill breakdown, Mamba2-130M:");
+    let mut t = Table::new(&["seq_len", "linear%", "conv%", "ssm%", "norm+silu%", "total_ms"]);
+    for l in [64usize, 128, 256, 512, 1024, 2048] {
+        let b = gpu.prefill_breakdown(&cfg, l);
+        let f = b.fractions();
+        t.row(&[
+            l.to_string(),
+            format!("{:.1}", f[0].1 * 100.0),
+            format!("{:.1}", f[1].1 * 100.0),
+            format!("{:.1}", f[2].1 * 100.0),
+            format!("{:.1}", f[3].1 * 100.0),
+            format!("{:.2}", b.total() * 1e3),
+        ]);
+    }
+    t.print();
+
+    println!("\nFastMamba simulator compute-cycle breakdown (same model):");
+    let fpga = PerfModel::new(AcceleratorConfig::default(), cfg);
+    let mut t2 = Table::new(&["seq_len", "linear%", "conv%", "ssm%", "norm+silu%", "ms"]);
+    for l in [64usize, 256, 1024] {
+        let p = fpga.prefill(l);
+        let f = p.breakdown.fractions();
+        t2.row(&[
+            l.to_string(),
+            format!("{:.1}", f[0].1 * 100.0),
+            format!("{:.1}", f[1].1 * 100.0),
+            format!("{:.1}", f[2].1 * 100.0),
+            format!("{:.1}", f[3].1 * 100.0),
+            format!("{:.2}", p.seconds * 1e3),
+        ]);
+    }
+    t2.print();
+}

@@ -1,0 +1,50 @@
+//! Bench: Fig. 9 — prefill latency/speedup (FPGA sim vs measured CPU vs GPU
+//! model) across sequence lengths on Mamba2-130M dimensions.  Also measures
+//! the *actual* tiny-model prefill on this host to validate the CPU
+//! composition model.
+
+use fastmamba::baseline::{CpuBaseline, GpuModel};
+use fastmamba::config::{AcceleratorConfig, ModelConfig};
+use fastmamba::model::{ModelWeights};
+use fastmamba::sim::PerfModel;
+use fastmamba::util::bench::{bench_quick, Table};
+
+fn main() {
+    let cfg = ModelConfig::mamba2_130m();
+    let fpga = PerfModel::new(AcceleratorConfig::default(), cfg.clone());
+    let gpu = GpuModel::default();
+    let cpu = CpuBaseline::measure();
+
+    let mut t = Table::new(&[
+        "seq_len", "fpga_ms", "gpu_ms", "cpu_raw_ms", "cpu_calib_ms", "vs_gpu", "vs_cpu",
+    ]);
+    for l in [64usize, 128, 256, 512, 1024, 2048] {
+        let f = fpga.prefill(l).seconds;
+        let g = gpu.prefill_seconds(&cfg, l);
+        let c_raw = cpu.prefill_seconds(&cfg, l);
+        let c = cpu.prefill_seconds_calibrated(&cfg, l);
+        t.row(&[
+            l.to_string(),
+            format!("{:.2}", f * 1e3),
+            format!("{:.2}", g * 1e3),
+            format!("{:.0}", c_raw * 1e3),
+            format!("{:.1}", c * 1e3),
+            format!("{:.2}x", g / f),
+            format!("{:.1}x", c / f),
+        ]);
+    }
+    t.print();
+
+    // validate the CPU model against a real measured prefill (tiny config)
+    let tiny = ModelConfig::tiny();
+    let w = ModelWeights::random(&tiny, 1);
+    let st = bench_quick("tiny fp32 prefill L=64 (measured)", || {
+        let _ = CpuBaseline::measure_prefill(&w, 64);
+    });
+    println!("{st}");
+    println!(
+        "model-predicted tiny L=64: {:.1} ms (measured median {:.1} ms)",
+        cpu.prefill_seconds(&tiny, 64) * 1e3,
+        st.median_s * 1e3
+    );
+}

@@ -1,0 +1,67 @@
+//! Bench: Hadamard-based Linear Module — host throughput of the functional
+//! quantized linear vs NormalQ vs fp32 (the Algorithm 1 overhead), and the
+//! module's simulated cycle counts per paper-sized layer.
+
+use fastmamba::config::AcceleratorConfig;
+use fastmamba::quant::hadamard::{self, prepare_weight};
+use fastmamba::quant::int8;
+use fastmamba::sim::linear_module::linear_cycles;
+use fastmamba::util::bench::{bench_quick, Table};
+use fastmamba::util::rng::Rng;
+
+fn main() {
+    let (l, d, q) = (32usize, 768usize, 768usize);
+    let mut rng = Rng::new(3);
+    let x = rng.normal_vec(l * d, 1.0);
+    let w = rng.normal_vec(q * d, 0.05);
+    let mut y = vec![0.0f32; l * q];
+
+    let mut t = Table::new(&["path", "median ms", "GMAC/s"]);
+    let macs = (l * d * q) as f64;
+
+    let st = bench_quick("fp32", || {
+        for r in 0..l {
+            for j in 0..q {
+                let mut acc = 0.0f32;
+                for k in 0..d {
+                    acc += x[r * d + k] * w[j * d + k];
+                }
+                y[r * q + j] = acc;
+            }
+        }
+        std::hint::black_box(&y);
+    });
+    t.row(&["fp32 matmul".into(), format!("{:.2}", st.median_s * 1e3),
+            format!("{:.2}", macs / st.median_s / 1e9)]);
+
+    let st = bench_quick("normalq", || {
+        int8::normalq_linear(&x, l, &w, q, d, None, &mut y);
+        std::hint::black_box(&y);
+    });
+    t.row(&["NormalQ W8A8".into(), format!("{:.2}", st.median_s * 1e3),
+            format!("{:.2}", macs / st.median_s / 1e9)]);
+
+    let pw = prepare_weight(&w, q, d, 64);
+    let st = bench_quick("hadamard", || {
+        hadamard::hadamard_linear(&x, l, &pw, None, &mut y);
+        std::hint::black_box(&y);
+    });
+    t.row(&["Hadamard W8A8 (Alg.1)".into(), format!("{:.2}", st.median_s * 1e3),
+            format!("{:.2}", macs / st.median_s / 1e9)]);
+    t.print();
+
+    println!("\nsimulated module cycles (250 MHz):");
+    let acc = AcceleratorConfig::default();
+    let mut t2 = Table::new(&["layer", "cycles", "µs", "eff int8 GMAC/s"]);
+    for (name, ll, dd, qq) in [
+        ("130M in_proj L=512", 512u64, 768u64, 3352u64),
+        ("130M out_proj L=512", 512, 1536, 768),
+        ("130M lm_head L=1", 1, 768, 50288),
+    ] {
+        let cyc = linear_cycles(&acc, ll, dd, qq);
+        let us = cyc as f64 / 250e6 * 1e6;
+        let rate = (ll * dd * qq) as f64 / (cyc as f64 / 250e6) / 1e9;
+        t2.row(&[name.into(), cyc.to_string(), format!("{us:.1}"), format!("{rate:.0}")]);
+    }
+    t2.print();
+}

@@ -1,0 +1,66 @@
+//! Bench: Table III — decode throughput & energy efficiency.
+//!
+//! Two parts: (a) the paper's Mamba2-2.7B comparison via the accelerator
+//! simulator + GPU model + power models; (b) *measured* PJRT decode
+//! throughput of the tiny serving model across batch buckets (the real
+//! serving hot path on this host).
+
+use fastmamba::baseline::GpuModel;
+use fastmamba::config::{AcceleratorConfig, ModelConfig};
+use fastmamba::runtime::Runtime;
+use fastmamba::sim::power::{accelerator_power_w, tokens_per_s_per_w};
+use fastmamba::sim::PerfModel;
+use fastmamba::util::bench::{bench_quick, Table};
+
+fn main() -> anyhow::Result<()> {
+    // (a) paper comparison at 2.7B
+    let cfg = ModelConfig::mamba2_2_7b();
+    let fpga = PerfModel::new(AcceleratorConfig::default(), cfg.clone());
+    let gpu = GpuModel::default();
+    let f = fpga.decode(1);
+    let f_w = accelerator_power_w(&fpga.acc, 0.85);
+    let g_tps = gpu.decode_tokens_per_s(&cfg);
+    let mut t = Table::new(&["platform", "tok/s", "W", "tok/(s*W)"]);
+    t.row(&["RTX3090 (model)".into(), format!("{g_tps:.1}"), "300".into(),
+            format!("{:.3}", tokens_per_s_per_w(g_tps, 300.0))]);
+    t.row(&["FastMamba (sim)".into(), format!("{:.2}", f.tokens_per_s),
+            format!("{f_w:.1}"), format!("{:.3}", tokens_per_s_per_w(f.tokens_per_s, f_w))]);
+    t.print();
+    println!(
+        "energy-efficiency ratio: {:.2}x (paper 1.65x) | FPGA decode is {}",
+        tokens_per_s_per_w(f.tokens_per_s, f_w) / tokens_per_s_per_w(g_tps, 300.0),
+        if f.compute_bound { "compute-bound" } else { "DRAM-bound" }
+    );
+    // batching sweep on the simulator
+    let mut t2 = Table::new(&["batch", "sim tok/s"]);
+    for b in [1usize, 2, 4, 8, 16, 32] {
+        t2.row(&[b.to_string(), format!("{:.2}", fpga.decode(b).tokens_per_s)]);
+    }
+    t2.print();
+
+    // (b) measured PJRT decode on the tiny serving model
+    let rt = Runtime::load_default()?;
+    let cfg = rt.weights_host.cfg.clone();
+    let mut t3 = Table::new(&["variant", "batch", "ms/step", "tok/s"]);
+    for variant in ["fp32", "fastmamba"] {
+        for &b in &rt.decode_batches() {
+            let conv = vec![0.0f32; b * cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()];
+            let ssm =
+                vec![0.0f32; b * cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state];
+            let toks: Vec<i32> = (0..b as i32).collect();
+            // warm the executable cache outside the timer
+            rt.decode(variant, b, &conv, &ssm, &toks)?;
+            let st = bench_quick(&format!("decode {variant} B{b}"), || {
+                let _ = rt.decode(variant, b, &conv, &ssm, &toks).unwrap();
+            });
+            t3.row(&[
+                variant.into(),
+                b.to_string(),
+                format!("{:.2}", st.median_s * 1e3),
+                format!("{:.1}", b as f64 / st.median_s),
+            ]);
+        }
+    }
+    t3.print();
+    Ok(())
+}

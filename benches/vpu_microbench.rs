@@ -1,0 +1,65 @@
+//! Bench: Table I VPUs + NAU — functional throughput of the simulator's
+//! fixed-point units on this host (elements/s), and the cycle-model rates
+//! they represent at 250 MHz.
+
+use fastmamba::config::FixedSpec;
+use fastmamba::sim::nau::{Nau, NauMode};
+use fastmamba::sim::vpu::{Vpu, VpuKind};
+use fastmamba::util::bench::{bench_quick, Table};
+
+fn main() {
+    let n = 4096usize;
+    let spec = FixedSpec::default();
+    let a: Vec<i32> = (0..n).map(|i| ((i * 37) % 2048) as i32 - 1024).collect();
+    let b: Vec<i32> = (0..n).map(|i| ((i * 53) % 2048) as i32 - 1024).collect();
+    let c: Vec<i32> = (0..n).map(|i| ((i * 71) % 2048) as i32 - 1024).collect();
+    let mut out = vec![0i32; n];
+    let _ = spec;
+
+    let mut t = Table::new(&["unit", "host Melem/s", "sim cycles (n=4096 as 64-wide ops)"]);
+    let pau = Vpu::new(VpuKind::Pau, 64);
+    let st = bench_quick("pau", || pau.pau(&a, &b, &mut out));
+    t.row(&["PAU".into(), format!("{:.1}", n as f64 / st.median_s / 1e6),
+            pau.cycles((n / 64) as u64).to_string()]);
+    let pmu = Vpu::new(VpuKind::Pmu, 64);
+    let st = bench_quick("pmu", || pmu.pmu(&a, &b, &mut out));
+    t.row(&["PMU".into(), format!("{:.1}", n as f64 / st.median_s / 1e6),
+            pmu.cycles((n / 64) as u64).to_string()]);
+    let pma = Vpu::new(VpuKind::Pma, 64);
+    let st = bench_quick("pma", || pma.pma(&a, &b, &c, &mut out));
+    t.row(&["PMA".into(), format!("{:.1}", n as f64 / st.median_s / 1e6),
+            pma.cycles((n / 64) as u64).to_string()]);
+    let hat = Vpu::new(VpuKind::Hat, 64);
+    let st = bench_quick("hat", || {
+        let mut s = 0i64;
+        for ch in a.chunks(64) {
+            s += hat.hat(ch) as i64;
+        }
+        std::hint::black_box(s);
+    });
+    t.row(&["HAT".into(), format!("{:.1}", n as f64 / st.median_s / 1e6),
+            hat.cycles((n / 64) as u64).to_string()]);
+    let mat = Vpu::new(VpuKind::Mat, 64);
+    let st = bench_quick("mat", || {
+        let mut s = 0i64;
+        for (ca, cb) in a.chunks(64).zip(b.chunks(64)) {
+            s += mat.mat(ca, cb) as i64;
+        }
+        std::hint::black_box(s);
+    });
+    t.row(&["MAT".into(), format!("{:.1}", n as f64 / st.median_s / 1e6),
+            mat.cycles((n / 64) as u64).to_string()]);
+
+    let nau = Nau::new(24);
+    let mut no = vec![0i32; n];
+    let st = bench_quick("nau.exp", || nau.eval(&a, NauMode::Exp, &mut no));
+    t.row(&["NAU exp".into(), format!("{:.1}", n as f64 / st.median_s / 1e6),
+            nau.cycles(n as u64).to_string()]);
+    let st = bench_quick("nau.softplus", || nau.eval(&a, NauMode::SoftPlus, &mut no));
+    t.row(&["NAU softplus".into(), format!("{:.1}", n as f64 / st.median_s / 1e6),
+            nau.cycles(n as u64).to_string()]);
+    t.print();
+    println!(
+        "(hardware rates at 250 MHz: PAU/PMU/PMA 64 lanes = 16 Gelem/s; NAU 24 lanes = 6 Gelem/s)"
+    );
+}

@@ -1,0 +1,20 @@
+//! Accelerator hardware reports: Table I (VPU configuration), Table IV
+//! (resource utilization), Fig. 10 (NAU vs FP16 nonlinear unit), plus the
+//! power/energy summary behind Table III.
+//!
+//! Run: cargo run --release --example accelerator_report
+
+use fastmamba::config::AcceleratorConfig;
+use fastmamba::report;
+use fastmamba::sim::power::accelerator_power_w;
+
+fn main() {
+    report::table1();
+    report::table4();
+    report::fig10();
+    let acc = AcceleratorConfig::default();
+    println!(
+        "\nestimated board power @85% activity: {:.1} W (paper-implied ~9.3 W class)",
+        accelerator_power_w(&acc, 0.85)
+    );
+}

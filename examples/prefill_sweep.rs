@@ -1,0 +1,21 @@
+//! Fig. 9 + Fig. 1 reproduction: prefill speedup of the simulated FastMamba
+//! accelerator over the measured-calibrated CPU baseline and the analytical
+//! RTX 3090 model, across sequence lengths, plus the GPU runtime breakdown
+//! that motivates the design.
+//!
+//! Run: cargo run --release --example prefill_sweep
+
+use fastmamba::baseline::CpuBaseline;
+use fastmamba::report;
+
+fn main() {
+    report::fig1();
+    let cpu = CpuBaseline::measure();
+    println!(
+        "\n(CPU microbench: {:.2} GMAC/s matmul, {:.2} Gop/s elementwise, x{} Xeon-4210R calibration)",
+        cpu.cal.matmul_macs_per_s / 1e9,
+        cpu.cal.elem_ops_per_s / 1e9,
+        fastmamba::baseline::cpu::XEON_4210R_SCALE
+    );
+    report::fig9(Some(&cpu));
+}

@@ -1,0 +1,19 @@
+//! Table II reproduction: perplexity + seven synthetic zero-shot tasks for
+//! every quantization method on the build-time-trained tiny Mamba2.
+//!
+//! Expected shape (the paper's ordinal result): NormalQ ≪ SmoothQ <
+//! FastMamba-LQ ≈ FP16 and FastMamba within ~1 point of FastMamba-LQ.
+//!
+//! Run: cargo run --release --example quant_accuracy [-- --ppl-windows 12 --cloze-items 30]
+
+use fastmamba::report;
+use fastmamba::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    report::table2(
+        args.usize_or("ppl-windows", 12),
+        args.usize_or("cloze-items", 30),
+    )?;
+    Ok(())
+}

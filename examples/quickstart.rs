@@ -1,0 +1,47 @@
+//! Quickstart: load the AOT artifacts, prefill a prompt, decode a few
+//! tokens — the minimal end-to-end path through the three-layer stack
+//! (Pallas kernels -> JAX model -> HLO artifacts -> PJRT -> Rust).
+//!
+//! Run: cargo run --release --example quickstart
+
+use fastmamba::coordinator::request::argmax;
+use fastmamba::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let cfg = rt.weights_host.cfg.clone();
+    println!(
+        "loaded {} ({} layers, d_model {}, vocab {})",
+        cfg.name, cfg.n_layer, cfg.d_model, cfg.vocab_size
+    );
+
+    // 1. prefill a 32-token prompt (one artifact bucket) with each variant
+    let prompt: Vec<i32> = (0..32).map(|i| (i * 11) % cfg.vocab_size as i32).collect();
+    for variant in ["fp32", "fastmamba"] {
+        let out = rt.prefill_fresh(variant, &prompt)?;
+        let last = &out.logits[(prompt.len() - 1) * cfg.vocab_size..];
+        println!(
+            "{variant:>9} prefill: argmax(next)={}, logit range [{:.2}, {:.2}]",
+            argmax(last),
+            last.iter().fold(f32::INFINITY, |a, b| a.min(*b)),
+            last.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b)),
+        );
+    }
+
+    // 2. greedy-decode 12 tokens from the fp32 prefill state
+    let out = rt.prefill_fresh("fp32", &prompt)?;
+    let mut conv = out.conv_state;
+    let mut ssm = out.ssm_state;
+    let mut tok = argmax(&out.logits[(prompt.len() - 1) * cfg.vocab_size..]) as i32;
+    let mut generated = vec![tok];
+    for _ in 0..11 {
+        let step = rt.decode("fp32", 1, &conv, &ssm, &[tok])?;
+        conv = step.conv_state;
+        ssm = step.ssm_state;
+        tok = argmax(&step.logits) as i32;
+        generated.push(tok);
+    }
+    println!("generated: {generated:?}");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,304 @@
+"""AOT compile path: lower every graph the Rust runtime needs to HLO text.
+
+HLO *text* (not ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs under --out-dir (default ../artifacts):
+  *.hlo.txt            one per lowered graph
+  weights/<name>.bin   raw little-endian tensors in manifest order
+  manifest.json        configs, parameter table, artifact table
+  tiny_weights.npz     (from train_tiny, invoked if missing)
+
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import mamba2
+from .config import CONFIGS, TINY, Mamba2Config
+from .kernels import conv1d as k_conv
+from .kernels import hadamard_matmul as k_had
+from .kernels import nonlinear as k_nau
+from .kernels import ssd_scan as k_ssd
+
+#: sequence-length buckets the prefill scheduler pads into.
+PREFILL_LENS = (32, 64, 128, 256)
+#: decode batch sizes the batcher forms.
+DECODE_BATCHES = (1, 2, 4, 8)
+#: model variants shipped to the runtime (fp32 baseline + the paper's).
+SERVE_VARIANTS = ("fp32", "fastmamba")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer ELIDES big literals as
+    # `constant({...})`, which xla_extension 0.5.1's text parser silently
+    # turns into zeros (discovered the hard way — the baked Hadamard matrix
+    # became 0 and every quantized linear output vanished).
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "elided constant survived; old XLA would zero it"
+    return text
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_meta(specs):
+    return [
+        {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype).name)} for s in specs
+    ]
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.artifacts = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, arg_specs, meta: dict):
+        lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *arg_specs)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": _shape_meta(jax.tree.leaves(arg_specs)),
+            "outputs": _shape_meta(jax.tree.leaves(out_specs)),
+            **meta,
+        }
+        self.artifacts.append(entry)
+        print(f"  emitted {fname} ({len(text) / 1e6:.2f} MB)")
+        return entry
+
+
+# ---------------------------------------------------------------------------
+# Model graphs
+# ---------------------------------------------------------------------------
+
+
+def load_or_train_params(out_dir: str, cfg: Mamba2Config):
+    npz_path = os.path.join(out_dir, "tiny_weights.npz")
+    if not os.path.exists(npz_path):
+        print("tiny weights missing; training (train_tiny.py)...")
+        from . import train_tiny
+
+        train_tiny.train(out_dir)
+    data = np.load(npz_path)
+    arrays = [jnp.asarray(data[k]) for k in data.files]
+    names = list(data.files)
+    # npz preserves insertion order == flatten order; sanity-check it.
+    flat_names = mamba2.flatten_params(mamba2.init_params(cfg, 0))[1]
+    assert names == flat_names, "weight manifest order mismatch"
+    return mamba2.unflatten_params(arrays, cfg.n_layer), arrays, names
+
+
+def param_specs(arrays):
+    return [_spec(a.shape, a.dtype) for a in arrays]
+
+
+def prepared_specs(cfg: Mamba2Config):
+    """Input specs of the flattened prepared-weight list (Hadamard variants).
+
+    The Rust runtime computes these tensors once at load
+    (`quant::hadamard::prepare_weight`) — the serve-time graphs then skip
+    the per-call weight transform+quantize (§Perf L2 optimization)."""
+    params = mamba2.init_params(cfg, 0)
+    prepared = mamba2.compute_prepared(params, cfg)
+    arrays, names = mamba2.flatten_prepared(prepared)
+    return [_spec(a.shape, a.dtype) for a in arrays], names
+
+
+def emit_model_graphs(em: Emitter, cfg: Mamba2Config, arrays):
+    n_flat = len(arrays)
+    pspecs = param_specs(arrays)
+    prep_specs, prep_names = prepared_specs(cfg)
+    n_prep = len(prep_specs)
+
+    for variant in SERVE_VARIANTS:
+        # fastmamba prefill routes through the Pallas kernels (L1 in the HLO);
+        # fp32 has no quantized hot path and lowers from the jnp reference.
+        use_pallas = variant == "fastmamba"
+        hadamard = variant in ("fastmamba", "fastmamba_lq")
+        extra_prep = prep_specs if hadamard else []
+        np_ = n_prep if hadamard else 0
+        conv_s = (cfg.n_layer, cfg.d_conv - 1, cfg.conv_dim)
+        ssm_s = (cfg.n_layer, cfg.nheads, cfg.headdim, cfg.d_state)
+        for seqlen in PREFILL_LENS:
+            def prefill_fn(*args, _v=variant, _p=use_pallas, _np=np_):
+                params = mamba2.unflatten_params(list(args[:n_flat]), cfg.n_layer)
+                prep = (mamba2.unflatten_prepared(
+                    list(args[n_flat:n_flat + _np]), cfg.n_layer)
+                    if _np else None)
+                base = n_flat + _np
+                return mamba2.prefill(
+                    params, args[base + 2], cfg, _v, _p,
+                    conv_states0=args[base], ssm_states0=args[base + 1],
+                    prepared=prep)
+
+            em.emit(
+                f"{cfg.name}_prefill_{variant}_L{seqlen}",
+                prefill_fn,
+                pspecs + extra_prep
+                + [_spec(conv_s), _spec(ssm_s), _spec((seqlen,), jnp.int32)],
+                {"kind": "prefill", "variant": variant, "seq_len": seqlen,
+                 "config": cfg.name, "n_params": n_flat, "n_prepared": np_},
+            )
+
+        for batch in DECODE_BATCHES:
+            def decode_fn(*args, _v=variant, _np=np_):
+                params = mamba2.unflatten_params(list(args[:n_flat]), cfg.n_layer)
+                prep = (mamba2.unflatten_prepared(
+                    list(args[n_flat:n_flat + _np]), cfg.n_layer)
+                    if _np else None)
+                base = n_flat + _np
+                conv_s, ssm_s, tokens = args[base], args[base + 1], args[base + 2]
+                return mamba2.decode_step_batched(
+                    params, conv_s, ssm_s, tokens, cfg, _v, prepared=prep)
+
+            conv_shape = (batch, cfg.n_layer, cfg.d_conv - 1, cfg.conv_dim)
+            ssm_shape = (batch, cfg.n_layer, cfg.nheads, cfg.headdim, cfg.d_state)
+            em.emit(
+                f"{cfg.name}_decode_{variant}_B{batch}",
+                decode_fn,
+                pspecs + extra_prep
+                + [_spec(conv_shape), _spec(ssm_shape), _spec((batch,), jnp.int32)],
+                {"kind": "decode", "variant": variant, "batch": batch,
+                 "config": cfg.name, "n_params": n_flat, "n_prepared": np_},
+            )
+    return prep_names
+
+
+# ---------------------------------------------------------------------------
+# Kernel micrographs (Pallas -> HLO -> PJRT composition proofs + benches)
+# ---------------------------------------------------------------------------
+
+
+def emit_kernel_graphs(em: Emitter, cfg: Mamba2Config):
+    group = mamba2.HADAMARD_GROUP
+
+    def hadamard_fn(x, w_q_t, s_w):
+        return (k_had.hadamard_linear_pallas(x, w_q_t, s_w, group),)
+
+    em.emit(
+        "kernel_hadamard_linear",
+        hadamard_fn,
+        [_spec((64, cfg.d_model)), _spec((cfg.d_model, cfg.d_inner), jnp.int8),
+         _spec((), jnp.float32)],
+        {"kind": "kernel", "kernel": "hadamard_linear"},
+    )
+
+    def nau_fn(x):
+        return (k_nau.softplus_fixed(x), k_nau.exp_fixed(jnp.minimum(x, 0)))
+
+    em.emit(
+        "kernel_nau",
+        nau_fn,
+        [_spec((1024,), jnp.int32)],
+        {"kind": "kernel", "kernel": "nau"},
+    )
+
+    def conv_fn(x, w, b):
+        return (k_conv.conv1d_pallas(x, w, b),)
+
+    em.emit(
+        "kernel_conv1d",
+        conv_fn,
+        [_spec((128, cfg.conv_dim)), _spec((cfg.conv_dim, cfg.d_conv)),
+         _spec((cfg.conv_dim,))],
+        {"kind": "kernel", "kernel": "conv1d"},
+    )
+
+    def ssd_fn(x, dt, abar, b, c, d, h0):
+        return k_ssd.ssd_scan_pallas(x, dt, abar, b, c, d, h0)
+
+    h_, l_, p_, n_ = cfg.nheads, 64, cfg.headdim, cfg.d_state
+    em.emit(
+        "kernel_ssd_scan",
+        ssd_fn,
+        [_spec((h_, l_, p_)), _spec((h_, l_)), _spec((h_, l_)), _spec((l_, n_)),
+         _spec((l_, n_)), _spec((h_,)), _spec((h_, p_, n_))],
+        {"kind": "kernel", "kernel": "ssd_scan"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def write_weights(out_dir: str, arrays, names):
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+    table = []
+    for i, (name, arr) in enumerate(zip(names, arrays)):
+        arr_np = np.asarray(arr)
+        fname = f"weights/p{i:03d}.bin"
+        arr_np.astype("<f4").tofile(os.path.join(out_dir, fname))
+        table.append(
+            {"index": i, "name": name, "shape": list(arr_np.shape),
+             "dtype": "float32", "file": fname}
+        )
+    return table
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+
+    cfg = TINY
+    em = Emitter(out_dir)
+    params, arrays, names = load_or_train_params(out_dir, cfg)
+
+    print("emitting model graphs (this lowers every serve-time executable)...")
+    prep_names = emit_model_graphs(em, cfg, arrays)
+    if not args.skip_kernels:
+        print("emitting kernel micrographs...")
+        emit_kernel_graphs(em, cfg)
+
+    weight_table = write_weights(out_dir, arrays, names)
+    prepared = mamba2.compute_prepared(params, cfg)
+    prep_arrays, _ = mamba2.flatten_prepared(prepared)
+    prep_table = [
+        {"name": n, "shape": list(np.shape(a)),
+         "dtype": str(np.asarray(a).dtype)}
+        for n, a in zip(prep_names, prep_arrays)
+    ]
+    manifest = {
+        "configs": {name: dataclasses.asdict(c) for name, c in CONFIGS.items()},
+        "serve_config": cfg.name,
+        "prefill_lens": list(PREFILL_LENS),
+        "decode_batches": list(DECODE_BATCHES),
+        "variants": list(SERVE_VARIANTS),
+        "params": weight_table,
+        "prepared": prep_table,
+        "artifacts": em.artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(em.artifacts)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

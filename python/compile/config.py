@@ -1,0 +1,119 @@
+"""Model and fixed-point configuration shared across the compile path.
+
+The dimensions mirror the published Mamba2 checkpoints the paper evaluates
+(130M for prefill experiments, 2.7B for decode) plus a `tiny` configuration
+that is trained at build time (see train_tiny.py) so accuracy experiments
+(Table II) run against a model with real, non-random weight statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    """Dimensions of a Mamba2 model (SSD variant, ngroups=1)."""
+
+    name: str
+    d_model: int
+    n_layer: int
+    d_state: int
+    headdim: int
+    d_conv: int = 4
+    expand: int = 2
+    ngroups: int = 1
+    vocab_size: int = 512
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def nheads(self) -> int:
+        assert self.d_inner % self.headdim == 0
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:
+        """Channels through the depthwise causal conv (x, B, C concatenated)."""
+        return self.d_inner + 2 * self.ngroups * self.d_state
+
+    @property
+    def d_in_proj(self) -> int:
+        """Output width of the input projection (z, xBC, dt)."""
+        return 2 * self.d_inner + 2 * self.ngroups * self.d_state + self.nheads
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+
+#: Mamba2-130M — the paper's prefill / accuracy model.
+MAMBA2_130M = Mamba2Config(
+    name="mamba2-130m",
+    d_model=768,
+    n_layer=24,
+    d_state=128,
+    headdim=64,
+    vocab_size=50288,
+)
+
+#: Mamba2-2.7B — the paper's decode / energy-efficiency model.
+MAMBA2_2_7B = Mamba2Config(
+    name="mamba2-2.7b",
+    d_model=2560,
+    n_layer=64,
+    d_state=128,
+    headdim=64,
+    vocab_size=50288,
+)
+
+#: Build-time-trained tiny model for accuracy-sensitive experiments.
+TINY = Mamba2Config(
+    name="mamba2-tiny",
+    d_model=256,
+    n_layer=4,
+    d_state=64,
+    headdim=32,
+    vocab_size=512,
+)
+
+CONFIGS = {c.name: c for c in (MAMBA2_130M, MAMBA2_2_7B, TINY)}
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointSpec:
+    """Q-format used by the accelerator's fixed-point datapath.
+
+    The paper's SSM module and NAU run on 16-bit fixed point; we use Q6.10
+    (1 sign, 5 integer, 10 fraction bits).  `LOG2E` is the paper's 4-bit
+    approximation log2(e) ~= (1.0111)_2 = 1.4375 (Eq. 3).
+    """
+
+    total_bits: int = 16
+    frac_bits: int = 10
+    #: number of PWL segments for 2^v, v in (-1, 0] (paper: 8).
+    pwl_segments: int = 8
+    #: internal PWL coefficient precision (Q1.14).
+    coeff_frac_bits: int = 14
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.frac_bits
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.total_bits - 1)) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.total_bits - 1))
+
+    @property
+    def log2e_fx(self) -> int:
+        # exactly 1.4375 = (1.0111)_2 in the datapath's Q-format
+        return int(1.4375 * self.scale)
+
+
+FXP = FixedPointSpec()

@@ -1,0 +1,54 @@
+"""Pallas kernel for the Convolution Module (32 MAT units, kernel size 4).
+
+The FPGA module assigns one 4-wide MAT unit per output element: a length-4
+dot between the kernel taps and a sliding input window.  Here the grid tiles
+the channel dimension (the module's 32-way channel parallelism) and each
+grid step computes the full causal sequence for its channel block from a
+VMEM-resident (L+K-1, block_c) input slab — one HBM read per channel block,
+like the module's single pass through the on-chip line buffer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: channel parallelism of the hardware module.
+CONV_MATS = 32
+
+
+def _conv1d_kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, l: int):
+    """x_ref: (l+k-1, bc) causally pre-padded; w_ref: (bc, k); b_ref: (1, bc)."""
+    acc = jnp.zeros_like(o_ref)
+    for tap in range(k):  # K is a static hardware constant (4)
+        acc += x_ref[tap : tap + l, :] * w_ref[:, tap][None, :]
+    o_ref[...] = acc + b_ref[0, :][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def conv1d_pallas(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, block_c: int = 64
+) -> jnp.ndarray:
+    """Depthwise causal conv1d.  x: (L, C); w: (C, K); b: (C,) -> (L, C)."""
+    l, c = x.shape
+    k = w.shape[1]
+    pad_c = (-c) % block_c
+    xp = jnp.pad(x, ((k - 1, 0), (0, pad_c)))
+    wp = jnp.pad(w, ((0, pad_c), (0, 0)))
+    bp = jnp.pad(b, (0, pad_c))[None, :]
+    out = pl.pallas_call(
+        functools.partial(_conv1d_kernel, k=k, l=l),
+        out_shape=jax.ShapeDtypeStruct((l, c + pad_c), jnp.float32),
+        grid=((c + pad_c) // block_c,),
+        in_specs=[
+            pl.BlockSpec((l + k - 1, block_c), lambda j: (0, j)),
+            pl.BlockSpec((block_c, k), lambda j: (j, 0)),
+            pl.BlockSpec((1, block_c), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((l, block_c), lambda j: (0, j)),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:, :c]

@@ -1,0 +1,141 @@
+"""Pallas kernels for the Hadamard-based Linear Module (Algorithm 1, Fig. 6).
+
+Two kernels mirror the module's two stages:
+
+1. `hadamard_transform_pallas` — the HAT stage: blocked Hadamard transform of
+   the activations (X[i] @ H[i] per group).  On the FPGA this is 4 parallel
+   Hadamard Adder Trees; here it is a tile-local matmul against the +-1
+   matrix held in VMEM.
+2. `int8_matmul_pallas` — the 64-MAT stage: int8 x int8 -> int32 tiled matmul
+   with the k-loop innermost in the grid, accumulating in the output tile
+   (the MXU-shaped analogue of the MAT array's multiply-accumulate).
+
+The activation scale s_X is found between the two stages (Algorithm 1 line
+7), exactly like the hardware's x s_coe / >> s_shift requantization step.
+Weights are transformed+quantized offline by `quantize.hadamard_prepare_weight`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import quantize
+
+INT8_MAX = 127.0
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _hadamard_kernel(x_ref, h_ref, o_ref, *, group: int):
+    """Transform one (bl, d) activation tile: each `group`-wide slice of the
+    feature dim is multiplied by the shared Hadamard matrix."""
+    x = x_ref[...]
+    h = h_ref[...]
+    bl, d = x.shape
+    xg = x.reshape(bl * (d // group), group)
+    o_ref[...] = (xg @ h).reshape(bl, d)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_l"))
+def hadamard_transform_pallas(x: jnp.ndarray, group: int, block_l: int = 64):
+    """Blocked Hadamard transform along the last axis via Pallas.
+
+    x: (L, d) with d % group == 0.  Grid tiles the row dimension; the +-1
+    Hadamard matrix (group x group) stays resident across grid steps.
+    """
+    l, d = x.shape
+    assert d % group == 0, (d, group)
+    h = jnp.asarray(quantize.hadamard_matrix(group))
+    xp = _pad_to(x, 0, block_l)
+    out = pl.pallas_call(
+        functools.partial(_hadamard_kernel, group=group),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        grid=(xp.shape[0] // block_l,),
+        in_specs=[
+            pl.BlockSpec((block_l, d), lambda i: (i, 0)),
+            pl.BlockSpec((group, group), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_l, d), lambda i: (i, 0)),
+        interpret=True,
+    )(xp, h)
+    return out[:l]
+
+
+def _int8_matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bl, bq) output tile; k innermost grid axis accumulates."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "block_q", "block_k"))
+def int8_matmul_pallas(
+    x_q: jnp.ndarray,
+    w_q_t: jnp.ndarray,
+    block_l: int = 64,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    """int8 x int8 -> int32 tiled matmul.  x_q: (L, d) int8; w_q_t: (d, q) int8."""
+    l, d = x_q.shape
+    d2, q = w_q_t.shape
+    assert d == d2
+    xp = _pad_to(_pad_to(x_q, 0, block_l), 1, block_k)
+    wp = _pad_to(_pad_to(w_q_t, 0, block_k), 1, block_q)
+    grid = (xp.shape[0] // block_l, wp.shape[1] // block_q, xp.shape[1] // block_k)
+    out = pl.pallas_call(
+        _int8_matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_l, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_q), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_l, block_q), lambda i, j, k: (i, j)),
+        interpret=True,
+    )(xp, wp)
+    return out[:l, :q]
+
+
+def hadamard_linear_pallas(
+    x: jnp.ndarray,
+    w_q_t: jnp.ndarray,
+    s_w: jnp.ndarray,
+    group: int,
+    bias: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Full Algorithm 1 forward with Pallas kernels for both stages.
+
+    x: (..., d) float activations; (w_q_t, s_w) from
+    `quantize.hadamard_prepare_weight`.  Matches `ref.hadamard_linear_ref`
+    bit-for-bit (same rounding, same scales).
+    """
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    x_h = hadamard_transform_pallas(x2, group)
+    s_x = jnp.maximum(jnp.max(jnp.abs(x_h)), 1e-8) / INT8_MAX
+    x_q = jnp.clip(jnp.round(x_h / s_x), -128, 127).astype(jnp.int8)
+    acc = int8_matmul_pallas(x_q, w_q_t)
+    y = acc.astype(jnp.float32) * (s_x * s_w / group)
+    if bias is not None:
+        y = y + bias
+    return y.reshape(*lead, -1)

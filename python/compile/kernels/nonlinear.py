@@ -1,0 +1,118 @@
+"""Pallas kernel for the Nonlinear Approximation Unit (NAU, Fig. 8).
+
+One multi-mode kernel computes either `exp` (Eq. 3) or `SoftPlus` (Eq. 6) on
+16-bit fixed point (carried in int32 lanes).  The hardware's 8-segment PWL
+of 2^v and the shift-by-|u| are expressed as branch-free integer ops so the
+kernel lowers to plain HLO under interpret=True.
+
+Hardware adaptation: the FPGA NAU is a 24-lane multiplexed pipeline (RPU
+negate -> EXP-INT -> post-add).  On a TPU-style target the same structure is
+a vectorized select tree over VMEM-resident tiles — the mode bit becomes a
+broadcast select, the segment LUT a tiny constant table held in registers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..config import FXP, FixedPointSpec
+from . import ref
+
+MODE_EXP = 0
+MODE_SOFTPLUS = 1
+
+#: lane width of the hardware NAU (Fig. 8: 24 x 16b).
+NAU_LANES = 24
+
+
+def _nau_kernel(x_ref, intercept_ref, slope_ref, o_ref, *, mode: int, spec: FixedPointSpec):
+    """Fixed-point NAU over one VMEM tile.  Values are Q<spec> in int32.
+
+    The PWL coefficient tables arrive as (tiny) kernel inputs — the hardware
+    analogue is the EXP-INT segment LUT held in registers.
+    """
+    f = spec.frac_bits
+    cf = spec.coeff_frac_bits
+    intercept = intercept_ref[...]
+    slope = slope_ref[...]
+    seg_shift = f - int(np.log2(spec.pwl_segments))
+
+    x = x_ref[...].astype(jnp.int32)
+
+    # Preprocessing part: RPU negation for SoftPlus's positive branch.
+    if mode == MODE_SOFTPLUS:
+        x_neg = jnp.minimum(x, -x)  # == -|x|, the EXP-INT input
+    else:
+        x_neg = jnp.minimum(x, 0)
+
+    # EXP-INT part (Eq. 3): t = x*log2e; u/v split; 8-seg PWL of 2^v; >>|u|.
+    t = (x_neg * spec.log2e_fx) >> f
+    neg = -t
+    u_abs = neg >> f
+    rem = neg & (spec.scale - 1)
+    seg = rem >> seg_shift
+    frac = rem - (seg << seg_shift)
+    val_q = intercept[seg] + slope[seg] * frac  # Q1.cf
+    u_clip = jnp.minimum(u_abs, 30)
+    e = jnp.where(u_abs >= 30, 0, (val_q >> u_clip) >> (cf - f))
+
+    # Postprocessing part: delay-unit add of x for the positive branch.
+    if mode == MODE_SOFTPLUS:
+        out = jnp.where(x > 0, x + e, e)
+    else:
+        out = e
+    o_ref[...] = out.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block"))
+def nau_fixed(x_fx: jnp.ndarray, mode: int = MODE_EXP, block: int = 256) -> jnp.ndarray:
+    """Run the NAU Pallas kernel over a 1-D int32 fixed-point tensor.
+
+    The grid tiles the flat tensor into `block`-lane chunks — `block` is a
+    multiple of the hardware's 24-lane width rounded to a TPU-friendly 256.
+    """
+    spec = FXP
+    intercept_np, slope_np = ref.pwl_tables(spec)
+    nseg = spec.pwl_segments
+    flat = x_fx.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    out = pl.pallas_call(
+        functools.partial(_nau_kernel, mode=mode, spec=spec),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.int32),
+        grid=(flat.shape[0] // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((nseg,), lambda i: (0,)),
+            pl.BlockSpec((nseg,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(flat, jnp.asarray(intercept_np), jnp.asarray(slope_np))
+    return out[:n].reshape(x_fx.shape)
+
+
+def exp_fixed(x_fx: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 3 exponential (x <= 0) on fixed point via the Pallas NAU."""
+    return nau_fixed(x_fx, mode=MODE_EXP)
+
+
+def softplus_fixed(x_fx: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 6 SoftPlus on fixed point via the Pallas NAU."""
+    return nau_fixed(x_fx, mode=MODE_SOFTPLUS)
+
+
+def exp_approx(x: jnp.ndarray) -> jnp.ndarray:
+    """Float wrapper: quantize -> NAU exp -> dequantize."""
+    return ref.from_fixed(exp_fixed(ref.to_fixed(x)))
+
+
+def softplus_approx(x: jnp.ndarray) -> jnp.ndarray:
+    """Float wrapper: quantize -> NAU SoftPlus -> dequantize."""
+    return ref.from_fixed(softplus_fixed(ref.to_fixed(x)))

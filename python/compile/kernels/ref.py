@@ -1,0 +1,195 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness contracts: pytest (python/tests/) asserts each
+Pallas kernel matches its oracle to tight tolerances across
+hypothesis-generated shapes and dtypes, and the Rust golden model
+(rust/src/model) is in turn validated against HLO lowered from these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import FXP, FixedPointSpec
+
+
+# ---------------------------------------------------------------------------
+# Nonlinear approximations (Eq. 3 - 6), float reference of the exact bit math
+# ---------------------------------------------------------------------------
+
+
+def pwl_tables(spec: FixedPointSpec = FXP) -> tuple[np.ndarray, np.ndarray]:
+    """Endpoint-interpolation PWL coefficients for g(rem) = 2^(-rem/2^F),
+    rem in [0, 2^F), split into `spec.pwl_segments` equal segments.
+
+    Returns (intercept_q, slope_q) in Q1.<coeff_frac_bits> fixed point; the
+    approximation on segment i is  g ~= intercept[i] + slope[i]*(rem - rem0).
+    """
+    f = spec.frac_bits
+    nseg = spec.pwl_segments
+    seg_w = (1 << f) // nseg
+    cs = 1 << spec.coeff_frac_bits
+    rem0 = np.arange(nseg) * seg_w
+    g0 = 2.0 ** (-rem0 / (1 << f))
+    g1 = 2.0 ** (-(rem0 + seg_w) / (1 << f))
+    intercept = np.round(g0 * cs).astype(np.int32)
+    slope = np.round((g1 - g0) / seg_w * cs).astype(np.int32)
+    return intercept, slope
+
+
+def exp_fixed_ref(x_fx: jnp.ndarray, spec: FixedPointSpec = FXP) -> jnp.ndarray:
+    """Bit-exact Eq. 3: e^x for x <= 0 on `spec` fixed point.
+
+    x_fx: int32 tensor holding Q6.10 values (value = x_fx / 2^F), x_fx <= 0.
+    Returns int32 Q6.10 exp values in [0, 2^F].
+
+    Pipeline (all integer): t = (x * LOG2E) >> F;  split t = u + v with
+    u integer <= 0 and v in (-1, 0];  2^v via 8-segment PWL;  >> |u|.
+    """
+    f = spec.frac_bits
+    cf = spec.coeff_frac_bits
+    intercept, slope = pwl_tables(spec)
+    intercept = jnp.asarray(intercept)
+    slope = jnp.asarray(slope)
+    seg_shift = f - int(np.log2(spec.pwl_segments))
+
+    x_fx = x_fx.astype(jnp.int32)
+    t = (x_fx * spec.log2e_fx) >> f  # arithmetic shift == floor
+    neg = -t  # >= 0
+    u_abs = neg >> f
+    rem = neg & (spec.scale - 1)
+    seg = rem >> seg_shift
+    frac = rem - (seg << seg_shift)
+    val_q = intercept[seg] + slope[seg] * frac  # Q1.cf, in (0, 2^cf]
+    u_clip = jnp.minimum(u_abs, 30)
+    out = (val_q >> u_clip) >> (cf - f)
+    return jnp.where(u_abs >= 30, 0, out).astype(jnp.int32)
+
+
+def softplus_fixed_ref(x_fx: jnp.ndarray, spec: FixedPointSpec = FXP) -> jnp.ndarray:
+    """Bit-exact Eq. 6 SoftPlus on fixed point (reusing the exp datapath).
+
+    x <= 0 : e^x            (Eq. 5 approximation ln(1+e^x) ~= e^x)
+    x >  0 : x + e^(-x)     (symmetry, Eq. 4)
+    """
+    x_fx = x_fx.astype(jnp.int32)
+    neg_branch = exp_fixed_ref(jnp.minimum(x_fx, 0), spec)
+    pos_branch = x_fx + exp_fixed_ref(jnp.minimum(-x_fx, 0), spec)
+    return jnp.where(x_fx > 0, pos_branch, neg_branch)
+
+
+def to_fixed(x: jnp.ndarray, spec: FixedPointSpec = FXP) -> jnp.ndarray:
+    """Float -> saturating Q-format int32."""
+    q = jnp.round(x * spec.scale)
+    return jnp.clip(q, spec.qmin, spec.qmax).astype(jnp.int32)
+
+
+def from_fixed(x_fx: jnp.ndarray, spec: FixedPointSpec = FXP) -> jnp.ndarray:
+    return x_fx.astype(jnp.float32) / spec.scale
+
+
+def exp_approx_f32(x: jnp.ndarray, spec: FixedPointSpec = FXP) -> jnp.ndarray:
+    """Float-in/float-out wrapper of the fixed-point exp (x <= 0)."""
+    return from_fixed(exp_fixed_ref(to_fixed(x, spec), spec), spec)
+
+
+def softplus_approx_f32(x: jnp.ndarray, spec: FixedPointSpec = FXP) -> jnp.ndarray:
+    """Float-in/float-out wrapper of the fixed-point SoftPlus."""
+    return from_fixed(softplus_fixed_ref(to_fixed(x, spec), spec), spec)
+
+
+# ---------------------------------------------------------------------------
+# Hadamard int8 linear oracle (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def hadamard_linear_ref(x, w, group: int, bias=None):
+    from .. import quantize
+
+    return quantize.hadamard_linear(x, w, group, bias)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d oracle (Convolution Module)
+# ---------------------------------------------------------------------------
+
+
+def conv1d_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv.  x: (L, C); w: (C, K); b: (C,).  y: (L, C).
+
+    y[t, c] = b[c] + sum_k w[c, k] * x[t - (K-1) + k, c]   (zero padded)
+    """
+    k = w.shape[1]
+    xp = jnp.pad(x, ((k - 1, 0), (0, 0)))
+    cols = jnp.stack([xp[i : i + x.shape[0]] for i in range(k)], axis=-1)  # (L,C,K)
+    return jnp.einsum("lck,ck->lc", cols, w) + b
+
+
+# ---------------------------------------------------------------------------
+# SSD scan oracle (SSM block, Eq. 2 over a sequence)
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan_ref(x, dt, a, b_mat, c_mat, d_vec, h0=None):
+    """Sequential reference of the Mamba2 SSD recurrence for one head.
+
+    Shapes (single head):
+      x:     (L, P)   head inputs
+      dt:    (L,)     post-SoftPlus step sizes
+      a:     ()       per-head A (negative scalar)
+      b_mat: (L, N)   input matrix rows B_t
+      c_mat: (L, N)   output matrix rows C_t
+      d_vec: ()       per-head feedthrough D
+      h0:    (P, N)   optional initial state
+    Returns (y: (L, P), h: (P, N) final state).
+
+      h_t = exp(dt_t * a) * h_{t-1} + dt_t * x_t (outer) B_t
+      y_t = h_t @ C_t + D * x_t
+    """
+    l, p = x.shape
+    n = b_mat.shape[1]
+    h = jnp.zeros((p, n), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        abar = jnp.exp(dt_t * a)
+        h = abar * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = h @ c_t + d_vec * x_t
+        return h, y_t
+
+    h, y = jax.lax.scan(step, h, (x, dt, b_mat, c_mat))
+    return y, h
+
+
+def ssd_scan_multihead_ref(x, dt, a, b_mat, c_mat, d_vec, h0=None):
+    """vmap of ssd_scan_ref over heads.
+
+    x: (L, H, P); dt: (L, H); a: (H,); b_mat/c_mat: (L, N) shared (ngroups=1);
+    d_vec: (H,); h0: (H, P, N).  Returns (y: (L, H, P), h: (H, P, N)).
+    """
+    nh = x.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((nh, x.shape[2], b_mat.shape[1]), jnp.float32)
+    fn = jax.vmap(ssd_scan_ref, in_axes=(1, 1, 0, None, None, 0, 0), out_axes=(1, 0))
+    return fn(x, dt, a, b_mat, c_mat, d_vec, h0)
+
+
+# ---------------------------------------------------------------------------
+# Float nonlinears kept in floating point by the accelerator
+# ---------------------------------------------------------------------------
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def gated_rmsnorm(x, z, w, eps: float = 1e-5):
+    """Mamba2's norm(y * silu(z)) gate before the output projection."""
+    return rmsnorm(x * silu(z), w, eps)

@@ -1,0 +1,78 @@
+"""Pallas kernel for the SSM Module's recurrence (Fig. 7, Step 3).
+
+The FPGA module iterates the SSD recurrence sequentially over the sequence —
+Step 3's 32-parallel PMU/PMA/MAT array updates the hidden state H and reads
+it out against C every cycle.  The kernel reproduces exactly that schedule:
+grid over heads (the module time-multiplexes heads), an in-kernel `fori_loop`
+over time, and the whole per-head state H (P x N) resident in VMEM for the
+entire sequence — H never spills, mirroring the paper's on-chip H buffer.
+
+Inputs take the *already preprocessed* abar = exp(dt * a) and dt so the same
+kernel serves both the float path and the PoT/NAU-quantized path (the model
+composes the NAU kernel upstream).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_scan_kernel(x_ref, dt_ref, abar_ref, b_ref, c_ref, d_ref, h0_ref, y_ref, h_ref):
+    """One head: x (1,L,P), dt (1,L), abar (1,L), b/c (L,N), d (1,1), h0 (1,P,N)."""
+    l = x_ref.shape[1]
+    h0 = h0_ref[0]
+    d_scalar = d_ref[0, 0]
+
+    def step(t, h):
+        x_t = x_ref[0, t, :]  # (P,)
+        dtx = dt_ref[0, t] * x_t  # PMU: dt * x
+        b_t = b_ref[t, :]
+        c_t = c_ref[t, :]
+        # PMU/PMA array: h = abar * h + (dt x) outer B
+        h = abar_ref[0, t] * h + dtx[:, None] * b_t[None, :]
+        # MAT array: y = h . C ; final PMA: + D * x
+        y_t = h @ c_t + d_scalar * x_t
+        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)), y_t[None, :])
+        return h
+
+    h = jax.lax.fori_loop(0, l, step, h0)
+    h_ref[0] = h
+
+
+@jax.jit
+def ssd_scan_pallas(x, dt, abar, b_mat, c_mat, d_vec, h0):
+    """Multi-head SSD scan.
+
+    x: (H, L, P); dt, abar: (H, L); b_mat, c_mat: (L, N) (ngroups=1, shared);
+    d_vec: (H,); h0: (H, P, N).  Returns (y: (H, L, P), h: (H, P, N)).
+    """
+    nh, l, p = x.shape
+    n = b_mat.shape[1]
+    d2 = d_vec.reshape(nh, 1)
+    y, h = pl.pallas_call(
+        _ssd_scan_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((nh, l, p), jnp.float32),
+            jax.ShapeDtypeStruct((nh, p, n), jnp.float32),
+        ),
+        grid=(nh,),
+        in_specs=[
+            pl.BlockSpec((1, l, p), lambda h_: (h_, 0, 0)),
+            pl.BlockSpec((1, l), lambda h_: (h_, 0)),
+            pl.BlockSpec((1, l), lambda h_: (h_, 0)),
+            pl.BlockSpec((l, n), lambda h_: (0, 0)),
+            pl.BlockSpec((l, n), lambda h_: (0, 0)),
+            pl.BlockSpec((1, 1), lambda h_: (h_, 0)),
+            pl.BlockSpec((1, p, n), lambda h_: (h_, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, l, p), lambda h_: (h_, 0, 0)),
+            pl.BlockSpec((1, p, n), lambda h_: (h_, 0, 0)),
+        ),
+        interpret=True,
+    )(x, dt, abar, b_mat, c_mat, d2, h0)
+    return y, h

@@ -1,0 +1,425 @@
+"""Layer-2 JAX Mamba2 model with the paper's five quantization variants.
+
+Variants (Table II rows):
+  * ``fp32``          — full-precision baseline (stands in for the paper's FP16).
+  * ``normalq``       — per-tensor absmax W8A8 on linear layers only.
+  * ``smoothq``       — SmoothQuant W8A8 on linear layers only.
+  * ``fastmamba_lq``  — Hadamard-based W8A8 (Algorithm 1) on linear layers only.
+  * ``fastmamba``     — fastmamba_lq + PoT quantization of the convolution
+                        layer and SSM block + PWL nonlinear approximations
+                        (Eq. 3-6).  This is the configuration the accelerator
+                        executes.
+
+``use_pallas=True`` routes the heavy ops through the Layer-1 Pallas kernels
+(hadamard_matmul / conv1d / ssd_scan / NAU) so they lower into the same HLO
+that the Rust runtime loads; ``use_pallas=False`` uses the pure-jnp oracles,
+which the test suite asserts are bit-identical.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize
+from .config import Mamba2Config
+from .kernels import conv1d as k_conv
+from .kernels import hadamard_matmul as k_had
+from .kernels import nonlinear as k_nau
+from .kernels import ref
+from .kernels import ssd_scan as k_ssd
+
+VARIANTS = ("fp32", "normalq", "smoothq", "fastmamba_lq", "fastmamba")
+
+#: Hadamard group size (d/m in Algorithm 1); 64 matches the module's 4x
+#: 64-wide HAT trees and divides every projection width we use.
+HADAMARD_GROUP = 64
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: Mamba2Config, seed: int = 0) -> Params:
+    """Random-init parameters with Mamba2's published init scheme."""
+    rng = np.random.RandomState(seed)
+
+    def normal(*shape, std=0.02):
+        return jnp.asarray(rng.normal(0.0, std, shape).astype(np.float32))
+
+    layers = []
+    for _ in range(cfg.n_layer):
+        dt = np.exp(
+            rng.uniform(np.log(1e-3), np.log(1e-1), cfg.nheads)
+        ).astype(np.float32)
+        dt_bias = dt + np.log(-np.expm1(-dt))  # inverse softplus
+        a_init = rng.uniform(1.0, 16.0, cfg.nheads).astype(np.float32)
+        layers.append(
+            {
+                "norm_w": jnp.ones((cfg.d_model,), jnp.float32),
+                "in_proj_w": normal(cfg.d_in_proj, cfg.d_model),
+                "conv_w": jnp.asarray(
+                    rng.uniform(
+                        -1.0 / np.sqrt(cfg.d_conv), 1.0 / np.sqrt(cfg.d_conv),
+                        (cfg.conv_dim, cfg.d_conv),
+                    ).astype(np.float32)
+                ),
+                "conv_b": jnp.zeros((cfg.conv_dim,), jnp.float32),
+                "dt_bias": jnp.asarray(dt_bias),
+                "a_log": jnp.asarray(np.log(a_init)),
+                "d": jnp.ones((cfg.nheads,), jnp.float32),
+                "norm_g_w": jnp.ones((cfg.d_inner,), jnp.float32),
+                "out_proj_w": normal(cfg.d_model, cfg.d_inner),
+            }
+        )
+    return {
+        "embed": normal(cfg.vocab_size, cfg.d_model),
+        "norm_f_w": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": layers,
+    }
+
+
+def flatten_params(params: Params) -> tuple[list[jnp.ndarray], list[str]]:
+    """Deterministic flat ordering shared with the Rust runtime (manifest)."""
+    arrays, names = [params["embed"], params["norm_f_w"]], ["embed", "norm_f_w"]
+    keys = (
+        "norm_w", "in_proj_w", "conv_w", "conv_b", "dt_bias",
+        "a_log", "d", "norm_g_w", "out_proj_w",
+    )
+    for i, lp in enumerate(params["layers"]):
+        for k in keys:
+            arrays.append(lp[k])
+            names.append(f"layers.{i}.{k}")
+    return arrays, names
+
+
+def unflatten_params(arrays: list[jnp.ndarray], n_layer: int) -> Params:
+    keys = (
+        "norm_w", "in_proj_w", "conv_w", "conv_b", "dt_bias",
+        "a_log", "d", "norm_g_w", "out_proj_w",
+    )
+    params = {"embed": arrays[0], "norm_f_w": arrays[1], "layers": []}
+    idx = 2
+    for _ in range(n_layer):
+        params["layers"].append({k: arrays[idx + j] for j, k in enumerate(keys)})
+        idx += len(keys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Variant-dispatched primitives
+# ---------------------------------------------------------------------------
+
+
+def linear(x, w, variant: str, use_pallas: bool = False, bias=None, prepared=None):
+    """Linear layer y = x @ w.T under the variant's quantizer.  w: (out, in).
+
+    `prepared` optionally carries the offline Hadamard-domain int8 weight
+    (w_q_t, s_w) so serve-time graphs skip the per-call weight transform —
+    the deployed configuration (the FPGA preprocesses weights offline too).
+    """
+    if variant == "fp32":
+        y = x @ w.T
+        return y if bias is None else y + bias
+    if variant == "normalq":
+        return quantize.normalq_linear(x, w, bias)
+    if variant == "smoothq":
+        return quantize.smoothq_linear(x, w, bias)
+    if variant in ("fastmamba_lq", "fastmamba"):
+        if prepared is not None:
+            w_q_t, s_w = prepared
+        else:
+            w_q_t, s_w = quantize.hadamard_prepare_weight(w, HADAMARD_GROUP)
+        if use_pallas:
+            return k_had.hadamard_linear_pallas(x, w_q_t, s_w, HADAMARD_GROUP, bias)
+        return quantize.hadamard_linear_prepared(x, w_q_t, s_w, HADAMARD_GROUP, bias)
+    raise ValueError(f"unknown variant {variant}")
+
+
+def compute_prepared(params: Params, cfg: Mamba2Config):
+    """Offline weight preparation for the Hadamard variants: per layer the
+    in/out projections plus the tied lm head.  Returns a pytree mirrored by
+    `flatten_prepared` (the Rust runtime computes identical tensors)."""
+    layers = []
+    for lp in params["layers"]:
+        layers.append({
+            "in_proj": quantize.hadamard_prepare_weight(lp["in_proj_w"], HADAMARD_GROUP),
+            "out_proj": quantize.hadamard_prepare_weight(lp["out_proj_w"], HADAMARD_GROUP),
+        })
+    return {"layers": layers,
+            "lm_head": quantize.hadamard_prepare_weight(params["embed"], HADAMARD_GROUP)}
+
+
+def flatten_prepared(prepared) -> tuple[list, list[str]]:
+    """Deterministic flat ordering of the prepared-weight pytree."""
+    arrays, names = [], []
+    for i, lp in enumerate(prepared["layers"]):
+        for key in ("in_proj", "out_proj"):
+            w_q_t, s_w = lp[key]
+            arrays += [w_q_t, s_w]
+            names += [f"layers.{i}.{key}.w_q_t", f"layers.{i}.{key}.s_w"]
+    w_q_t, s_w = prepared["lm_head"]
+    arrays += [w_q_t, s_w]
+    names += ["lm_head.w_q_t", "lm_head.s_w"]
+    return arrays, names
+
+
+def unflatten_prepared(arrays: list, n_layer: int):
+    layers = []
+    idx = 0
+    for _ in range(n_layer):
+        layers.append({
+            "in_proj": (arrays[idx], arrays[idx + 1]),
+            "out_proj": (arrays[idx + 2], arrays[idx + 3]),
+        })
+        idx += 4
+    return {"layers": layers, "lm_head": (arrays[idx], arrays[idx + 1])}
+
+
+def softplus_v(x, variant: str, use_pallas: bool = False):
+    if variant == "fastmamba":
+        return k_nau.softplus_approx(x) if use_pallas else ref.softplus_approx_f32(x)
+    return jax.nn.softplus(x)
+
+
+def exp_v(x, variant: str, use_pallas: bool = False):
+    """exp over non-positive arguments (dt * a with a < 0)."""
+    if variant == "fastmamba":
+        return k_nau.exp_approx(x) if use_pallas else ref.exp_approx_f32(x)
+    return jnp.exp(x)
+
+
+def conv_v(x, w, b, variant: str, use_pallas: bool = False):
+    if variant == "fastmamba":
+        w = quantize.pot_conv1d_prepare(w)
+        x = quantize.pot_fake_quant(x, axis=0)  # fine-grained: per channel
+    if use_pallas:
+        return k_conv.conv1d_pallas(x, w, b)
+    return ref.conv1d_ref(x, w, b)
+
+
+def conv_v_stateful(x_ext, w, b, variant: str, use_pallas: bool, k: int):
+    """Causal conv over a chunk with `k-1` rows of carried history prepended:
+    the kernels zero-pad internally, so the first `k-1` outputs (which saw
+    the synthetic zero padding) are dropped and the remaining L outputs have
+    exactly the carried history in their receptive field."""
+    y = conv_v(x_ext, w, b, variant, use_pallas)
+    return y[k - 1:]
+
+
+# ---------------------------------------------------------------------------
+# Block forward (prefill) — Fig. 2 computational flow
+# ---------------------------------------------------------------------------
+
+
+def _split_zxbcdt(zxbcdt, cfg: Mamba2Config):
+    d_in, d_st = cfg.d_inner, cfg.ngroups * cfg.d_state
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + d_in + 2 * d_st]
+    dt_raw = zxbcdt[..., d_in + d_in + 2 * d_st :]
+    return z, xbc, dt_raw
+
+
+def block_prefill(lp, u, cfg: Mamba2Config, variant: str, use_pallas: bool = False,
+                  conv_state0=None, ssm_state0=None, lp_prepared=None):
+    """One Mamba2 block over a sequence chunk u: (L, d_model).
+
+    `conv_state0` (d_conv-1, conv_dim) and `ssm_state0` (H, P, N) carry the
+    recurrent state from a previous chunk (zeros for a fresh sequence) — the
+    serving scheduler relies on this to prefill long prompts in bucket-sized
+    chunks.  Returns (residual output (L, d_model), conv_tail, ssm_state).
+    """
+    l = u.shape[0]
+    res = u
+    x = ref.rmsnorm(u, lp["norm_w"])
+    zxbcdt = linear(x, lp["in_proj_w"], variant, use_pallas,
+                    prepared=None if lp_prepared is None else lp_prepared["in_proj"])
+    z, xbc_pre, dt_raw = _split_zxbcdt(zxbcdt, cfg)
+
+    if conv_state0 is None:
+        conv_state0 = jnp.zeros((cfg.d_conv - 1, cfg.conv_dim), jnp.float32)
+    xbc_ext = jnp.concatenate([conv_state0, xbc_pre], axis=0)  # (K-1+L, C)
+    conv_tail = xbc_ext[l:, :]
+    xbc = ref.silu(conv_v_stateful(xbc_ext, lp["conv_w"], lp["conv_b"], variant,
+                                   use_pallas, cfg.d_conv))
+
+    x_ssm = xbc[:, : cfg.d_inner]
+    b_mat = xbc[:, cfg.d_inner : cfg.d_inner + cfg.d_state]
+    c_mat = xbc[:, cfg.d_inner + cfg.d_state :]
+
+    # Step 1 (Fig. 7): dt preprocessing through the NAU in SoftPlus mode.
+    dt = softplus_v(dt_raw + lp["dt_bias"], variant, use_pallas)  # (L, H)
+    a = -jnp.exp(lp["a_log"])  # (H,)
+    # Step 2: abar = exp(dt * a) through the NAU in exponential mode.
+    abar = exp_v(dt * a[None, :], variant, use_pallas)  # (L, H)
+
+    xh = x_ssm.reshape(l, cfg.nheads, cfg.headdim)
+    if variant == "fastmamba":
+        # Fine-grained PoT quantization of the SSM block operands.
+        xh = quantize.pot_fake_quant(xh, axis=(0, 2))  # per head
+        b_mat = quantize.pot_fake_quant(b_mat)
+        c_mat = quantize.pot_fake_quant(c_mat)
+        dt = quantize.pot_fake_quant(dt, axis=0)
+        abar = quantize.pot_fake_quant(abar, axis=0)
+
+    # Step 3: the recurrence.
+    if ssm_state0 is None:
+        ssm_state0 = jnp.zeros((cfg.nheads, cfg.headdim, cfg.d_state), jnp.float32)
+    if use_pallas:
+        y, h = k_ssd.ssd_scan_pallas(
+            xh.transpose(1, 0, 2), dt.T, abar.T, b_mat, c_mat, lp["d"], ssm_state0
+        )
+        y = y.transpose(1, 0, 2)
+    else:
+        y, h = _ssd_ref_with_abar(xh, dt, abar, b_mat, c_mat, lp["d"], ssm_state0)
+
+    y = y.reshape(l, cfg.d_inner)
+    y = ref.gated_rmsnorm(y, z, lp["norm_g_w"])
+    out = linear(y, lp["out_proj_w"], variant, use_pallas,
+                 prepared=None if lp_prepared is None else lp_prepared["out_proj"])
+    return res + out, conv_tail, h
+
+
+def _ssd_ref_with_abar(xh, dt, abar, b_mat, c_mat, d_vec, h0):
+    """Reference scan taking abar explicitly (matching the kernel contract)."""
+
+    def one_head(x, dt_h, abar_h, d_h, h0_h):
+        def step(h, inp):
+            x_t, dt_t, ab_t, b_t, c_t = inp
+            h = ab_t * h + (dt_t * x_t)[:, None] * b_t[None, :]
+            return h, h @ c_t + d_h * x_t
+
+        h, y = jax.lax.scan(step, h0_h, (x, dt_h, abar_h, b_mat, c_mat))
+        return y, h
+
+    fn = jax.vmap(one_head, in_axes=(1, 1, 1, 0, 0), out_axes=(1, 0))
+    return fn(xh, dt, abar, d_vec, h0)
+
+
+# ---------------------------------------------------------------------------
+# Full-model prefill
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "variant", "use_pallas"))
+def prefill(params: Params, tokens, cfg: Mamba2Config, variant: str = "fp32",
+            use_pallas: bool = False, conv_states0=None, ssm_states0=None,
+            prepared=None):
+    """tokens: (L,) int32 -> (logits (L, vocab), conv_states, ssm_states).
+
+    conv_states: (n_layer, d_conv-1, conv_dim); ssm_states: (n_layer, H, P, N).
+    Optional `*_states0` carry recurrent state from a previous chunk so long
+    prompts can be prefilled in bucket-sized chunks (chunked prefill).
+    """
+    x = params["embed"][tokens]
+    conv_states, ssm_states = [], []
+    for i, lp in enumerate(params["layers"]):
+        cs0 = None if conv_states0 is None else conv_states0[i]
+        ss0 = None if ssm_states0 is None else ssm_states0[i]
+        lpp = None if prepared is None else prepared["layers"][i]
+        x, ct, h = block_prefill(lp, x, cfg, variant, use_pallas, cs0, ss0, lpp)
+        conv_states.append(ct)
+        ssm_states.append(h)
+    x = ref.rmsnorm(x, params["norm_f_w"])
+    logits = linear(x, params["embed"], variant, use_pallas,
+                    prepared=None if prepared is None else prepared["lm_head"])
+    return logits, jnp.stack(conv_states), jnp.stack(ssm_states)
+
+
+def prefill_batched(params, tokens_b, cfg, variant="fp32", use_pallas=False):
+    """tokens_b: (B, L) — vmap of `prefill` (per-sequence quantizer scales)."""
+    return jax.vmap(
+        lambda t: prefill(params, t, cfg, variant, use_pallas)
+    )(tokens_b)
+
+
+# ---------------------------------------------------------------------------
+# Decode step (recurrent, Eq. 2)
+# ---------------------------------------------------------------------------
+
+
+def block_decode(lp, u, conv_state, h, cfg: Mamba2Config, variant: str,
+                 lp_prepared=None):
+    """Single-token block step.  u: (d_model,); conv_state: (d_conv-1,
+    conv_dim); h: (H, P, N).  Returns (out, conv_state', h')."""
+    res = u
+    x = ref.rmsnorm(u, lp["norm_w"])
+    zxbcdt = linear(x[None, :], lp["in_proj_w"], variant,
+                    prepared=None if lp_prepared is None else lp_prepared["in_proj"])[0]
+    z, xbc_pre, dt_raw = _split_zxbcdt(zxbcdt, cfg)
+
+    window = jnp.concatenate([conv_state, xbc_pre[None, :]], axis=0)  # (K, C)
+    conv_w = lp["conv_w"]
+    xbc_in = window
+    if variant == "fastmamba":
+        conv_w = quantize.pot_conv1d_prepare(conv_w)
+        xbc_in = quantize.pot_fake_quant(window, axis=0)
+    xbc = ref.silu(jnp.einsum("kc,ck->c", xbc_in, conv_w) + lp["conv_b"])
+    new_conv_state = window[1:]
+
+    x_ssm = xbc[: cfg.d_inner]
+    b_t = xbc[cfg.d_inner : cfg.d_inner + cfg.d_state]
+    c_t = xbc[cfg.d_inner + cfg.d_state :]
+
+    dt = softplus_v(dt_raw + lp["dt_bias"], variant)  # (H,)
+    a = -jnp.exp(lp["a_log"])
+    abar = exp_v(dt * a, variant)  # (H,)
+
+    xh = x_ssm.reshape(cfg.nheads, cfg.headdim)
+    if variant == "fastmamba":
+        xh = quantize.pot_fake_quant(xh, axis=1)
+        b_t = quantize.pot_fake_quant(b_t)
+        c_t = quantize.pot_fake_quant(c_t)
+        dt = quantize.pot_fake_quant(dt)
+        abar = quantize.pot_fake_quant(abar)
+
+    h = abar[:, None, None] * h + (dt[:, None] * xh)[..., None] * b_t[None, None, :]
+    y = h @ c_t + lp["d"][:, None] * xh  # (H, P)
+
+    y = ref.gated_rmsnorm(y.reshape(cfg.d_inner), z, lp["norm_g_w"])
+    out = linear(y[None, :], lp["out_proj_w"], variant,
+                 prepared=None if lp_prepared is None else lp_prepared["out_proj"])[0]
+    return res + out, new_conv_state, h
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "variant"))
+def decode_step(params: Params, conv_states, ssm_states, token, cfg: Mamba2Config,
+                variant: str = "fp32", prepared=None):
+    """One decode step.  token: () int32.  Returns (logits (vocab,), states')."""
+    x = params["embed"][token]
+    new_conv, new_ssm = [], []
+    for i, lp in enumerate(params["layers"]):
+        lpp = None if prepared is None else prepared["layers"][i]
+        x, ct, h = block_decode(lp, x, conv_states[i], ssm_states[i], cfg, variant, lpp)
+        new_conv.append(ct)
+        new_ssm.append(h)
+    x = ref.rmsnorm(x, params["norm_f_w"])
+    logits = linear(x[None, :], params["embed"], variant,
+                    prepared=None if prepared is None else prepared["lm_head"])[0]
+    return logits, jnp.stack(new_conv), jnp.stack(new_ssm)
+
+
+def decode_step_batched(params, conv_states_b, ssm_states_b, tokens_b, cfg,
+                        variant="fp32", prepared=None):
+    """Batched decode: tokens_b (B,), states with leading batch dim."""
+    return jax.vmap(
+        lambda cs, ss, t: decode_step(params, cs, ss, t, cfg, variant, prepared)
+    )(conv_states_b, ssm_states_b, tokens_b)
+
+
+def init_decode_state(cfg: Mamba2Config, batch: int | None = None):
+    conv = jnp.zeros((cfg.n_layer, cfg.d_conv - 1, cfg.conv_dim), jnp.float32)
+    ssm = jnp.zeros(
+        (cfg.n_layer, cfg.nheads, cfg.headdim, cfg.d_state), jnp.float32
+    )
+    if batch is not None:
+        conv = jnp.broadcast_to(conv[None], (batch, *conv.shape))
+        ssm = jnp.broadcast_to(ssm[None], (batch, *ssm.shape))
+    return conv, ssm

@@ -1,0 +1,24 @@
+# L2 facade: the paper's jax model (fwd for prefill + recurrent decode),
+# calling the Layer-1 kernels.  Implementation lives in mamba2.py; this
+# module re-exports the public compile-path API.
+from .config import CONFIGS, FXP, MAMBA2_130M, MAMBA2_2_7B, TINY, Mamba2Config
+from .mamba2 import (
+    VARIANTS,
+    block_decode,
+    block_prefill,
+    decode_step,
+    decode_step_batched,
+    flatten_params,
+    init_decode_state,
+    init_params,
+    prefill,
+    prefill_batched,
+    unflatten_params,
+)
+
+__all__ = [
+    "CONFIGS", "FXP", "MAMBA2_130M", "MAMBA2_2_7B", "TINY", "Mamba2Config",
+    "VARIANTS", "block_decode", "block_prefill", "decode_step",
+    "decode_step_batched", "flatten_params", "init_decode_state",
+    "init_params", "prefill", "prefill_batched", "unflatten_params",
+]

@@ -1,0 +1,198 @@
+"""Quantization algorithms from the paper, plus the two published baselines.
+
+* `hadamard_*`     — Algorithm 1: Hadamard-based W8A8 linear quantization.
+* `pot_*`          — fine-grained power-of-two quantization (SSM block, conv).
+* `normalq_*`      — plain per-tensor absmax W8A8 (the paper's NormalQ).
+* `smoothq_*`      — SmoothQuant-style activation/weight rebalancing W8A8.
+
+All fake-quant helpers return float tensors that are *bit-identical* to the
+values the integer datapath produces (quantize -> integer op -> dequantize),
+so the model-quality numbers measured at L2 transfer to the fixed-point
+hardware simulated at L3.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+INT8_MAX = 127.0
+
+
+# ---------------------------------------------------------------------------
+# Hadamard transform (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Sylvester-construction Hadamard matrix of order n = 2^k (unnormalized,
+    entries +-1).  `FindHadamard` in Algorithm 1."""
+    if n < 1 or (n & (n - 1)) != 0:
+        raise ValueError(f"Hadamard order must be a power of two, got {n}")
+    h = np.array([[1.0]], dtype=np.float64)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h.astype(np.float32)
+
+
+def hadamard_transform(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """Blocked Hadamard transform along the last axis (X[i] @ H[i], line 5).
+
+    The last axis is split into d/group groups; each is multiplied by the
+    unnormalized H_group.  Normalization by 1/group is folded into the final
+    dequantization step (the `m/d` factor of Algorithm 1 line 13).
+    """
+    d = x.shape[-1]
+    if d % group != 0:
+        raise ValueError(f"dim {d} not divisible by group {group}")
+    h = jnp.asarray(hadamard_matrix(group))
+    xg = x.reshape(*x.shape[:-1], d // group, group)
+    return (xg @ h).reshape(x.shape)
+
+
+def _absmax_scale(x: jnp.ndarray) -> jnp.ndarray:
+    """`FindScale`: symmetric int8 scale from the tensor absmax."""
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / INT8_MAX
+
+
+def quantize_int8(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """`Quant`: symmetric round-to-nearest int8."""
+    return jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+
+
+def hadamard_prepare_weight(w: jnp.ndarray, group: int):
+    """Offline half of Algorithm 1 for the (static) weight matrix.
+
+    w has shape (q, d) as in the paper (output-major).  Returns the int8
+    Hadamard-domain weight, already transposed to (d, q) for the activation
+    @ weight product, plus its scale.
+    """
+    w_h = hadamard_transform(w, group)  # rows of W transformed: H^T W^T == (W H)^T
+    s_w = _absmax_scale(w_h)
+    return quantize_int8(w_h, s_w).T, s_w
+
+
+def hadamard_linear_prepared(
+    x: jnp.ndarray,
+    w_q_t: jnp.ndarray,
+    s_w: jnp.ndarray,
+    group: int,
+    bias: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Algorithm 1 forward with the weight half done offline
+    (`hadamard_prepare_weight`) — the deployed configuration: the runtime
+    prepares int8 Hadamard-domain weights once at load time, exactly like
+    the FPGA's offline weight preprocessing."""
+    x_h = hadamard_transform(x, group)
+    s_x = _absmax_scale(x_h)
+    x_q = quantize_int8(x_h, s_x)
+    acc = jnp.matmul(
+        x_q.astype(jnp.int32), w_q_t.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    y = acc.astype(jnp.float32) * (s_x * s_w / group)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def hadamard_linear(
+    x: jnp.ndarray, w: jnp.ndarray, group: int, bias: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Full Algorithm 1 (reference path, no Pallas): Y = X W^T with W8A8
+    quantization in the Hadamard domain.
+
+    x: (..., d) activations; w: (q, d) weight.  Equivalent integer math:
+    Y = (X_H^int8 @ W_H^int8.T) * s_x * s_w / group.
+    """
+    w_q_t, s_w = hadamard_prepare_weight(w, group)
+    return hadamard_linear_prepared(x, w_q_t, s_w, group, bias)
+
+
+# ---------------------------------------------------------------------------
+# NormalQ / SmoothQuant baselines (Table II comparisons)
+# ---------------------------------------------------------------------------
+
+
+def normalq_linear(
+    x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Per-tensor absmax W8A8 with no outlier handling (NormalQ)."""
+    s_x = _absmax_scale(x)
+    s_w = _absmax_scale(w)
+    x_q = quantize_int8(x, s_x).astype(jnp.int32)
+    w_q = quantize_int8(w, s_w).astype(jnp.int32)
+    y = jnp.matmul(x_q, w_q.T, preferred_element_type=jnp.int32).astype(jnp.float32)
+    y = y * (s_x * s_w)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def smoothq_factors(x_absmax: jnp.ndarray, w: jnp.ndarray, alpha: float = 0.5):
+    """Per-input-channel smoothing factors s_j = max|X_j|^a / max|W_j|^(1-a).
+
+    x_absmax: (d,) calibration statistics of per-channel activation absmax.
+    """
+    w_absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-5)
+    x_absmax = jnp.maximum(x_absmax, 1e-5)
+    s = jnp.power(x_absmax, alpha) / jnp.power(w_absmax, 1.0 - alpha)
+    return jnp.clip(s, 1e-5, 1e5)
+
+
+def smoothq_linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    alpha: float = 0.5,
+    x_absmax: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """SmoothQuant W8A8: migrate activation outliers into the weights, then
+    per-tensor int8 on both sides.  Without an offline calibration pass we
+    use the batch's own per-channel absmax (favourable to the baseline)."""
+    if x_absmax is None:
+        x_absmax = jnp.max(jnp.abs(x.reshape(-1, x.shape[-1])), axis=0)
+    s = smoothq_factors(x_absmax, w, alpha)
+    return normalq_linear(x / s, w * s, bias)
+
+
+# ---------------------------------------------------------------------------
+# Power-of-two (PoT) quantization — SSM block & convolution layer
+# ---------------------------------------------------------------------------
+
+
+def pot_exponent(absmax: jnp.ndarray, bits: int = 16) -> jnp.ndarray:
+    """Smallest p with absmax/2^p representable in `bits`-bit signed ints."""
+    qmax = float((1 << (bits - 1)) - 1)
+    p = jnp.ceil(jnp.log2(jnp.maximum(absmax, 1e-20) / qmax))
+    return p.astype(jnp.int32)
+
+
+def pot_fake_quant(
+    x: jnp.ndarray, bits: int = 16, axis=None
+) -> jnp.ndarray:
+    """Quantize-dequantize with a power-of-two scale 2^p.
+
+    `axis=None` gives per-tensor PoT; an int/tuple gives the paper's
+    *fine-grained* variant (per-channel/per-group exponents).  The dequantized
+    float values are exactly the fixed-point values (value = int * 2^p), so
+    downstream float math matches the integer datapath wherever products stay
+    in range.
+    """
+    qmax = float((1 << (bits - 1)) - 1)
+    if axis is None:
+        absmax = jnp.max(jnp.abs(x))
+    else:
+        absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    p = jnp.ceil(jnp.log2(jnp.maximum(absmax, 1e-20) / qmax))
+    scale = jnp.exp2(p)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return q * scale
+
+
+def pot_conv1d_prepare(w: jnp.ndarray, bits: int = 16) -> jnp.ndarray:
+    """Fine-grained (per-channel) PoT fake-quant of the depthwise conv weight
+    (conv_dim, K)."""
+    return pot_fake_quant(w, bits=bits, axis=1)

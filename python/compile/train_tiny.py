@@ -1,0 +1,169 @@
+"""Build-time trainer for the tiny Mamba2 used by accuracy experiments.
+
+We cannot download the pretrained Mamba2-130M/2.7B checkpoints, so Table II's
+accuracy comparison runs on a tiny Mamba2 *trained here* on a synthetic
+Markov corpus — real gradient descent, real weight statistics, real
+perplexity gaps between quantizers.  The loss curve is recorded to
+artifacts/train_log.json (surfaced in EXPERIMENTS.md).
+
+After training we inject per-channel activation outliers (scaling a few
+RMSNorm gain channels) to reproduce the heavy-tailed activation
+distributions of Fig. 3 that large pretrained Mamba2 models exhibit and that
+motivate the Hadamard transform; the modified model *is* the FP baseline all
+quantizers are measured against, so the comparison stays fair.
+
+Run: python -m compile.train_tiny --out ../artifacts  (invoked by `make artifacts`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import mamba2
+from .config import TINY
+
+
+# ---------------------------------------------------------------------------
+# Synthetic corpus: sparse order-1 Markov chain over the tiny vocab
+# ---------------------------------------------------------------------------
+
+
+def make_markov(vocab: int, branch: int = 8, seed: int = 0):
+    """Transition table: from each state, `branch` successors with Zipf-ish
+    probabilities.  Entropy is well below log(vocab), so a trained model
+    separates clearly from a broken (badly quantized) one."""
+    rng = np.random.RandomState(seed)
+    succ = np.stack([rng.choice(vocab, branch, replace=False) for _ in range(vocab)])
+    p = 1.0 / np.arange(1, branch + 1)
+    p = p / p.sum()
+    return succ, p
+
+
+def sample_corpus(n_tokens: int, vocab: int, seed: int = 1, branch: int = 8):
+    succ, p = make_markov(vocab, branch)
+    rng = np.random.RandomState(seed)
+    out = np.empty(n_tokens, dtype=np.int32)
+    s = rng.randint(vocab)
+    choices = rng.choice(branch, n_tokens, p=p)
+    for i in range(n_tokens):
+        out[i] = s
+        s = succ[s, choices[i]]
+    return out
+
+
+def batches(corpus: np.ndarray, batch: int, seq: int, steps: int, seed: int = 2):
+    rng = np.random.RandomState(seed)
+    hi = len(corpus) - seq - 1
+    for _ in range(steps):
+        idx = rng.randint(0, hi, batch)
+        x = np.stack([corpus[i : i + seq] for i in idx])
+        y = np.stack([corpus[i + 1 : i + seq + 1] for i in idx])
+        yield jnp.asarray(x), jnp.asarray(y)
+
+
+# ---------------------------------------------------------------------------
+# Training loop (hand-rolled Adam; optax is not in the image)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, x, y, cfg):
+    logits, _, _ = jax.vmap(
+        lambda t: mamba2.prefill(params, t, cfg, "fp32")
+    )(x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, opt, lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def inject_outliers(params, n_channels: int = 12, gain: float = 8.0, seed: int = 7):
+    """Scale a few RMSNorm gain channels per layer: creates the per-channel
+    activation outliers of Fig. 3 at every linear-layer input."""
+    rng = np.random.RandomState(seed)
+    for lp in params["layers"]:
+        idx = rng.choice(lp["norm_w"].shape[0], n_channels, replace=False)
+        w = np.array(lp["norm_w"])
+        w[idx] *= gain
+        lp["norm_w"] = jnp.asarray(w)
+    return params
+
+
+def train(out_dir: str, steps: int = 200, batch: int = 8, seq: int = 64,
+          lr: float = 3e-3, seed: int = 0, outliers: bool = True):
+    cfg = TINY
+    params = mamba2.init_params(cfg, seed)
+    corpus = sample_corpus(200_000, cfg.vocab_size)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y, cfg)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    log = []
+    t0 = time.time()
+    for i, (x, y) in enumerate(batches(corpus, batch, seq, steps)):
+        params, opt, loss = step_fn(params, opt, x, y)
+        if i % 10 == 0 or i == steps - 1:
+            loss_v = float(loss)
+            log.append({"step": i, "loss": loss_v, "elapsed_s": time.time() - t0})
+            print(f"step {i:4d}  loss {loss_v:.4f}  ({time.time() - t0:.1f}s)")
+
+    if outliers:
+        params = inject_outliers(params)
+
+    os.makedirs(out_dir, exist_ok=True)
+    flat, names = mamba2.flatten_params(params)
+    np.savez(
+        os.path.join(out_dir, "tiny_weights.npz"),
+        **{n: np.asarray(a) for n, a in zip(names, flat)},
+    )
+    # held-out corpus for the eval harness (Table II)
+    heldout = sample_corpus(40_000, cfg.vocab_size, seed=99)
+    heldout.tofile(os.path.join(out_dir, "heldout_corpus.bin"))
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump({"config": cfg.name, "steps": steps, "batch": batch,
+                   "seq": seq, "lr": lr, "curve": log}, f, indent=2)
+    print(f"saved weights + log to {out_dir}")
+    return params, log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--no-outliers", action="store_true")
+    args = ap.parse_args()
+    train(args.out, steps=args.steps, batch=args.batch, seq=args.seq,
+          outliers=not args.no_outliers)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""AOT pipeline tests: HLO text emission, manifest integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, mamba2
+from compile.config import TINY
+
+
+class TestHloText:
+    def test_simple_fn_emits_parseable_text(self):
+        def fn(x, y):
+            return (x @ y + 1.0,)
+
+        spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        lowered = jax.jit(fn).lower(spec, spec)
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "parameter" in text.lower()
+
+    def test_pallas_kernel_lowers_to_plain_hlo(self):
+        """interpret=True Pallas must not leave custom-calls the CPU PJRT
+        client cannot execute."""
+        from compile.kernels import nonlinear
+
+        lowered = jax.jit(nonlinear.exp_fixed).lower(
+            jax.ShapeDtypeStruct((256,), jnp.int32)
+        )
+        text = aot.to_hlo_text(lowered)
+        assert "mosaic" not in text.lower()
+
+    def test_decode_graph_shapes(self):
+        cfg = TINY
+        params = mamba2.init_params(cfg, 0)
+        arrays, _ = mamba2.flatten_params(params)
+        n_flat = len(arrays)
+
+        def decode_fn(*args):
+            p = mamba2.unflatten_params(list(args[:n_flat]), cfg.n_layer)
+            return mamba2.decode_step_batched(
+                p, args[n_flat], args[n_flat + 1], args[n_flat + 2], cfg, "fp32")
+
+        conv_s = jax.ShapeDtypeStruct((2, cfg.n_layer, cfg.d_conv - 1, cfg.conv_dim),
+                                      jnp.float32)
+        ssm_s = jax.ShapeDtypeStruct(
+            (2, cfg.n_layer, cfg.nheads, cfg.headdim, cfg.d_state), jnp.float32)
+        tok_s = jax.ShapeDtypeStruct((2,), jnp.int32)
+        out = jax.eval_shape(decode_fn,
+                             *[jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrays],
+                             conv_s, ssm_s, tok_s)
+        logits, conv2, ssm2 = out
+        assert logits.shape == (2, cfg.vocab_size)
+        assert conv2.shape == conv_s.shape and ssm2.shape == ssm_s.shape
+
+
+ARTI = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTI, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTI, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_artifacts_exist(self, manifest):
+        for a in manifest["artifacts"]:
+            assert os.path.exists(os.path.join(ARTI, a["file"])), a["file"]
+
+    def test_all_weights_exist_with_right_size(self, manifest):
+        for p in manifest["params"]:
+            path = os.path.join(ARTI, p["file"])
+            assert os.path.exists(path)
+            n = int(np.prod(p["shape"])) if p["shape"] else 1
+            assert os.path.getsize(path) == 4 * n, p["name"]
+
+    def test_expected_artifact_set(self, manifest):
+        names = {a["name"] for a in manifest["artifacts"]}
+        for v in manifest["variants"]:
+            for l in manifest["prefill_lens"]:
+                assert f"mamba2-tiny_prefill_{v}_L{l}" in names
+            for b in manifest["decode_batches"]:
+                assert f"mamba2-tiny_decode_{v}_B{b}" in names
+        for k in ("kernel_hadamard_linear", "kernel_nau", "kernel_conv1d",
+                  "kernel_ssd_scan"):
+            assert k in names
+
+    def test_prefill_hlo_mentions_no_python(self, manifest):
+        a = manifest["artifacts"][0]
+        with open(os.path.join(ARTI, a["file"])) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule")
+
+    def test_param_count_matches(self, manifest):
+        cfg = TINY
+        assert len(manifest["params"]) == 2 + 9 * cfg.n_layer

@@ -1,0 +1,172 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+hypothesis sweeps shapes; assertions are exact (int paths) or allclose
+(float paths), per kernel contract.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quantize
+from compile.kernels import conv1d, hadamard_matmul, ref, ssd_scan
+
+RNG = np.random.RandomState(42)
+
+
+def randf(*shape, scale=1.0, rng=RNG):
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+class TestHadamardTransformPallas:
+    @pytest.mark.parametrize("l,d,group", [(4, 64, 64), (64, 128, 64),
+                                           (65, 256, 64), (1, 64, 32), (100, 128, 128)])
+    def test_matches_ref(self, l, d, group):
+        x = randf(l, d)
+        got = hadamard_matmul.hadamard_transform_pallas(x, group)
+        want = quantize.hadamard_transform(x, group)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(l=st.integers(1, 130), k=st.sampled_from([1, 2, 4]))
+    def test_hypothesis_shapes(self, l, k):
+        d = 64 * k
+        x = randf(l, d, rng=np.random.RandomState(l * 7 + k))
+        got = hadamard_matmul.hadamard_transform_pallas(x, 64)
+        want = quantize.hadamard_transform(x, 64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+class TestInt8MatmulPallas:
+    @pytest.mark.parametrize("l,d,q", [(4, 64, 8), (64, 128, 128), (65, 192, 200),
+                                       (1, 64, 1), (128, 256, 512)])
+    def test_exact_int(self, l, d, q):
+        rng = np.random.RandomState(l + d + q)
+        x = jnp.asarray(rng.randint(-128, 128, (l, d)), jnp.int8)
+        w = jnp.asarray(rng.randint(-128, 128, (d, q)), jnp.int8)
+        got = hadamard_matmul.int8_matmul_pallas(x, w)
+        want = x.astype(jnp.int32) @ w.astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestHadamardLinearPallas:
+    @pytest.mark.parametrize("l,d,q", [(16, 128, 96), (3, 64, 64), (64, 256, 40)])
+    def test_bitexact_vs_algorithm1(self, l, d, q):
+        x = randf(l, d)
+        w = randf(q, d)
+        w_q_t, s_w = quantize.hadamard_prepare_weight(w, 64)
+        got = hadamard_matmul.hadamard_linear_pallas(x, w_q_t, s_w, 64)
+        want = ref.hadamard_linear_ref(x, w, 64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+    def test_leading_dims(self):
+        x = randf(2, 5, 64)
+        w = randf(32, 64)
+        w_q_t, s_w = quantize.hadamard_prepare_weight(w, 64)
+        got = hadamard_matmul.hadamard_linear_pallas(x, w_q_t, s_w, 64)
+        assert got.shape == (2, 5, 32)
+
+
+class TestConv1dPallas:
+    @pytest.mark.parametrize("l,c,k", [(1, 8, 4), (17, 70, 4), (128, 640, 4),
+                                       (5, 64, 2), (33, 100, 3)])
+    def test_matches_ref(self, l, c, k):
+        rng = np.random.RandomState(l * 31 + c)
+        x = randf(l, c, rng=rng)
+        w = randf(c, k, rng=rng)
+        b = randf(c, rng=rng)
+        got = conv1d.conv1d_pallas(x, w, b)
+        want = ref.conv1d_ref(x, w, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_causality(self):
+        """Changing x[t] must not affect y[<t]."""
+        x = randf(20, 16)
+        w, b = randf(16, 4), randf(16)
+        y0 = np.asarray(conv1d.conv1d_pallas(x, w, b))
+        x2 = x.at[10].add(100.0)
+        y1 = np.asarray(conv1d.conv1d_pallas(x2, w, b))
+        np.testing.assert_array_equal(y0[:10], y1[:10])
+        assert np.abs(y1[10:14] - y0[10:14]).max() > 0
+
+    @settings(max_examples=15, deadline=None)
+    @given(l=st.integers(1, 64), c=st.integers(1, 96))
+    def test_hypothesis_shapes(self, l, c):
+        rng = np.random.RandomState(l * 131 + c)
+        x = randf(l, c, rng=rng)
+        w = randf(c, 4, rng=rng)
+        b = randf(c, rng=rng)
+        np.testing.assert_allclose(
+            np.asarray(conv1d.conv1d_pallas(x, w, b)),
+            np.asarray(ref.conv1d_ref(x, w, b)),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+class TestSsdScanPallas:
+    def _run(self, h, l, p, n, seed=0, h0_zero=True):
+        rng = np.random.RandomState(seed)
+        x = randf(h, l, p, rng=rng)
+        dt = jnp.asarray(rng.uniform(0.001, 0.3, (h, l)).astype(np.float32))
+        a = jnp.asarray(-rng.uniform(0.2, 4.0, h).astype(np.float32))
+        abar = jnp.exp(dt * a[:, None])
+        b = randf(l, n, rng=rng)
+        c = randf(l, n, rng=rng)
+        d = randf(h, rng=rng)
+        h0 = (jnp.zeros((h, p, n), jnp.float32) if h0_zero
+              else randf(h, p, n, rng=rng))
+        y_k, h_k = ssd_scan.ssd_scan_pallas(x, dt, abar, b, c, d, h0)
+        y_r, h_r = ref.ssd_scan_multihead_ref(
+            x.transpose(1, 0, 2), dt.T, a, b, c, d, h0
+        )
+        return np.asarray(y_k), np.asarray(h_k), np.asarray(y_r.transpose(1, 0, 2)), np.asarray(h_r)
+
+    @pytest.mark.parametrize("h,l,p,n", [(1, 1, 4, 4), (3, 12, 8, 16),
+                                         (16, 64, 32, 64), (2, 100, 16, 32)])
+    def test_matches_ref(self, h, l, p, n):
+        y_k, h_k, y_r, h_r = self._run(h, l, p, n, seed=h + l)
+        np.testing.assert_allclose(y_k, y_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(h_k, h_r, rtol=1e-4, atol=1e-4)
+
+    def test_nonzero_initial_state(self):
+        y_k, h_k, y_r, h_r = self._run(2, 8, 4, 8, seed=3, h0_zero=False)
+        np.testing.assert_allclose(y_k, y_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(h_k, h_r, rtol=1e-4, atol=1e-4)
+
+    def test_state_chaining_equals_full_scan(self):
+        """Running [0:l1] then [l1:] with carried state == full scan."""
+        h, l, p, n = 2, 24, 8, 16
+        rng = np.random.RandomState(9)
+        x = randf(h, l, p, rng=rng)
+        dt = jnp.asarray(rng.uniform(0.01, 0.3, (h, l)).astype(np.float32))
+        a = jnp.asarray(-rng.uniform(0.5, 2.0, h).astype(np.float32))
+        abar = jnp.exp(dt * a[:, None])
+        b, c = randf(l, n, rng=rng), randf(l, n, rng=rng)
+        d = randf(h, rng=rng)
+        h0 = jnp.zeros((h, p, n), jnp.float32)
+        y_full, h_full = ssd_scan.ssd_scan_pallas(x, dt, abar, b, c, d, h0)
+        l1 = 10
+        y1, hmid = ssd_scan.ssd_scan_pallas(
+            x[:, :l1], dt[:, :l1], abar[:, :l1], b[:l1], c[:l1], d, h0)
+        y2, hend = ssd_scan.ssd_scan_pallas(
+            x[:, l1:], dt[:, l1:], abar[:, l1:], b[l1:], c[l1:], d, hmid)
+        np.testing.assert_allclose(
+            np.asarray(y_full), np.concatenate([y1, y2], axis=1), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h_full), np.asarray(hend), rtol=1e-4, atol=1e-4)
+
+    def test_decay_only(self):
+        """x = 0: state decays by prod(abar); y = 0."""
+        h, l, p, n = 2, 6, 4, 8
+        rng = np.random.RandomState(11)
+        x = jnp.zeros((h, l, p), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.05, 0.2, (h, l)).astype(np.float32))
+        a = jnp.asarray(-rng.uniform(0.5, 1.0, h).astype(np.float32))
+        abar = jnp.exp(dt * a[:, None])
+        b, c = randf(l, n, rng=rng), randf(l, n, rng=rng)
+        d = randf(h, rng=rng)
+        h0 = randf(h, p, n, rng=rng)
+        y, h_out = ssd_scan.ssd_scan_pallas(x, dt, abar, b, c, d, h0)
+        decay = np.prod(np.asarray(abar), axis=1)[:, None, None]
+        np.testing.assert_allclose(np.asarray(h_out), np.asarray(h0) * decay, rtol=1e-4)

@@ -1,0 +1,138 @@
+"""L2 model tests: shapes, variants, decode consistency, Table II ordering."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import mamba2
+from compile.config import TINY
+
+CFG = TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return mamba2.init_params(CFG, 0)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jnp.asarray(np.random.RandomState(0).randint(0, CFG.vocab_size, 24),
+                       jnp.int32)
+
+
+class TestShapes:
+    def test_prefill_shapes(self, params, tokens):
+        logits, cs, ss = mamba2.prefill(params, tokens, CFG, "fp32")
+        assert logits.shape == (24, CFG.vocab_size)
+        assert cs.shape == (CFG.n_layer, CFG.d_conv - 1, CFG.conv_dim)
+        assert ss.shape == (CFG.n_layer, CFG.nheads, CFG.headdim, CFG.d_state)
+
+    def test_decode_shapes(self, params):
+        cs, ss = mamba2.init_decode_state(CFG)
+        logits, cs2, ss2 = mamba2.decode_step(params, cs, ss, jnp.int32(5), CFG, "fp32")
+        assert logits.shape == (CFG.vocab_size,)
+        assert cs2.shape == cs.shape and ss2.shape == ss.shape
+
+    def test_batched_decode(self, params):
+        cs, ss = mamba2.init_decode_state(CFG, batch=4)
+        toks = jnp.asarray([1, 2, 3, 4], jnp.int32)
+        logits, cs2, ss2 = mamba2.decode_step_batched(params, cs, ss, toks, CFG, "fp32")
+        assert logits.shape == (4, CFG.vocab_size)
+
+    @pytest.mark.parametrize("variant", mamba2.VARIANTS)
+    def test_all_variants_finite(self, params, tokens, variant):
+        logits, _, _ = mamba2.prefill(params, tokens, CFG, variant)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+class TestDecodeConsistency:
+    """Prefill(L) must equal prefill(L-1) + decode(1) — the contract the
+    serving scheduler relies on when switching a request between phases."""
+
+    def test_prefill_then_decode_fp32(self, params, tokens):
+        lg_full, cs_f, ss_f = mamba2.prefill(params, tokens, CFG, "fp32")
+        _, cs1, ss1 = mamba2.prefill(params, tokens[:-1], CFG, "fp32")
+        lg2, cs2, ss2 = mamba2.decode_step(params, cs1, ss1, tokens[-1], CFG, "fp32")
+        np.testing.assert_allclose(
+            np.asarray(lg2), np.asarray(lg_full[-1]), rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(ss2), np.asarray(ss_f), rtol=2e-3, atol=2e-3)
+
+    def test_prefill_then_decode_fastmamba(self, params, tokens):
+        """fastmamba re-derives activation scales per call (dynamic
+        quantization), so prefill/decode agree only to quantization noise —
+        the functional contract is distribution-level agreement."""
+        lg_full, _, ss_f = mamba2.prefill(params, tokens, CFG, "fastmamba")
+        _, cs1, ss1 = mamba2.prefill(params, tokens[:-1], CFG, "fastmamba")
+        lg2, _, ss2 = mamba2.decode_step(params, cs1, ss1, tokens[-1], CFG, "fastmamba")
+        a, b = np.asarray(lg2), np.asarray(lg_full[-1])
+        scale = np.abs(b).max()
+        assert np.abs(a - b).max() < 0.1 * scale
+        assert np.corrcoef(a, b)[0, 1] > 0.99
+        assert np.argmax(a) == np.argmax(b)
+        sd = np.abs(np.asarray(ss2) - np.asarray(ss_f)).max()
+        assert sd < 0.1 * np.abs(np.asarray(ss_f)).max()
+
+    def test_pure_decode_chain(self, params, tokens):
+        """Decoding token-by-token from scratch == prefill logits."""
+        lg_full, _, _ = mamba2.prefill(params, tokens[:8], CFG, "fp32")
+        cs, ss = mamba2.init_decode_state(CFG)
+        outs = []
+        for t in np.asarray(tokens[:8]):
+            lg, cs, ss = mamba2.decode_step(params, cs, ss, jnp.int32(t), CFG, "fp32")
+            outs.append(np.asarray(lg))
+        np.testing.assert_allclose(
+            np.stack(outs), np.asarray(lg_full), rtol=2e-4, atol=2e-4)
+
+
+class TestPallasParity:
+    def test_fastmamba_pallas_equals_ref(self, params, tokens):
+        lg_p, cs_p, ss_p = mamba2.prefill(params, tokens, CFG, "fastmamba",
+                                          use_pallas=True)
+        lg_r, cs_r, ss_r = mamba2.prefill(params, tokens, CFG, "fastmamba",
+                                          use_pallas=False)
+        np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_r),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(ss_p), np.asarray(ss_r),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestQuantOrdering:
+    """Table II's qualitative result on outlier-bearing activations."""
+
+    def test_fastmamba_lq_beats_normalq(self, params):
+        # amplified norm gains -> per-channel activation outliers (Fig. 3)
+        import copy
+
+        p2 = {"embed": params["embed"], "norm_f_w": params["norm_f_w"],
+              "layers": [dict(lp) for lp in params["layers"]]}
+        rng = np.random.RandomState(1)
+        for lp in p2["layers"]:
+            w = np.array(lp["norm_w"])
+            w[rng.choice(len(w), 10, replace=False)] *= 12.0
+            lp["norm_w"] = jnp.asarray(w)
+        toks = jnp.asarray(rng.randint(0, CFG.vocab_size, 32), jnp.int32)
+        lg_fp, _, _ = mamba2.prefill(p2, toks, CFG, "fp32")
+        fp = np.asarray(lg_fp)
+
+        def err(variant):
+            lg, _, _ = mamba2.prefill(p2, toks, CFG, variant)
+            return float(np.sqrt(np.mean((np.asarray(lg) - fp) ** 2)))
+
+        e_norm, e_lq, e_fm = err("normalq"), err("fastmamba_lq"), err("fastmamba")
+        assert e_lq < e_norm, (e_lq, e_norm)
+        # full FastMamba (PoT SSM+conv) stays close to LQ-only (paper: <1%)
+        assert e_fm < e_norm
+        assert e_fm < 3.0 * max(e_lq, 1e-6)
+
+
+class TestParamPlumbing:
+    def test_flatten_roundtrip(self, params):
+        flat, names = mamba2.flatten_params(params)
+        assert len(flat) == len(names) == 2 + 9 * CFG.n_layer
+        p2 = mamba2.unflatten_params(flat, CFG.n_layer)
+        for k in ("embed", "norm_f_w"):
+            np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(p2[k]))
+        for lp1, lp2 in zip(params["layers"], p2["layers"]):
+            for k in lp1:
+                np.testing.assert_array_equal(np.asarray(lp1[k]), np.asarray(lp2[k]))

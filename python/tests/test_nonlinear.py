@@ -1,0 +1,120 @@
+"""NAU (Eq. 3-6) correctness: Pallas kernel vs bit-exact reference vs math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.config import FXP
+from compile.kernels import nonlinear, ref
+
+RNG = np.random.RandomState(0)
+
+
+def fx(vals):
+    return jnp.asarray(np.asarray(vals, np.int32))
+
+
+class TestExpFixedRef:
+    def test_zero(self):
+        assert int(ref.exp_fixed_ref(fx([0]))[0]) == FXP.scale
+
+    def test_monotone_nonincreasing_in_magnitude(self):
+        xs = fx(-np.arange(0, 8 * FXP.scale, 13))
+        ys = np.asarray(ref.exp_fixed_ref(xs))
+        assert (np.diff(ys) <= 0).all()
+
+    def test_matches_true_exp(self):
+        x = RNG.uniform(-12, 0, 4096).astype(np.float32)
+        got = np.asarray(ref.exp_approx_f32(jnp.asarray(x)))
+        np.testing.assert_allclose(got, np.exp(x), atol=4e-3)
+
+    def test_underflow_to_zero(self):
+        assert int(ref.exp_fixed_ref(fx([FXP.qmin]))[0]) == 0
+
+    def test_range(self):
+        xs = fx(-RNG.randint(0, 1 << 15, 1000))
+        ys = np.asarray(ref.exp_fixed_ref(xs))
+        assert (ys >= 0).all() and (ys <= FXP.scale).all()
+
+
+class TestSoftplusFixedRef:
+    def test_symmetry_identity(self):
+        """Eq. 4: SoftPlus(x) = x + SoftPlus(-x), exactly in fixed point."""
+        xs = fx(RNG.randint(-(1 << 14), 1 << 14, 2000))
+        sp_pos = np.asarray(ref.softplus_fixed_ref(xs))
+        sp_neg = np.asarray(ref.softplus_fixed_ref(-xs))
+        np.testing.assert_array_equal(sp_pos - sp_neg, np.asarray(xs))
+
+    def test_matches_true_softplus(self):
+        x = RNG.uniform(-10, 10, 4096).astype(np.float32)
+        got = np.asarray(ref.softplus_approx_f32(jnp.asarray(x)))
+        # Eq. 5 is itself an approximation: ln(1+e^x) ~= e^x has error up to
+        # ~0.31 at x=0 (1 - ln 2); that is the paper's accepted error.
+        np.testing.assert_allclose(got, np.log1p(np.exp(x)), atol=0.32)
+
+    def test_large_positive_is_identity_plus_eps(self):
+        x = fx([20 * FXP.scale])
+        assert abs(int(ref.softplus_fixed_ref(x)[0]) - 20 * FXP.scale) <= 2
+
+    def test_nonnegative(self):
+        xs = fx(RNG.randint(FXP.qmin, FXP.qmax, 2000))
+        assert (np.asarray(ref.softplus_fixed_ref(xs)) >= 0).all()
+
+
+class TestNauKernel:
+    """The Pallas NAU must be bit-identical to the reference datapath."""
+
+    @pytest.mark.parametrize("n", [1, 23, 24, 100, 256, 1000])
+    def test_exp_bitexact(self, n):
+        xs = fx(-RNG.randint(0, 1 << 15, n))
+        np.testing.assert_array_equal(
+            np.asarray(nonlinear.exp_fixed(xs)), np.asarray(ref.exp_fixed_ref(xs))
+        )
+
+    @pytest.mark.parametrize("n", [1, 24, 257, 1000])
+    def test_softplus_bitexact(self, n):
+        xs = fx(RNG.randint(-(1 << 14), 1 << 14, n))
+        np.testing.assert_array_equal(
+            np.asarray(nonlinear.softplus_fixed(xs)),
+            np.asarray(ref.softplus_fixed_ref(xs)),
+        )
+
+    def test_2d_shape_preserved(self):
+        xs = fx(-RNG.randint(0, 1 << 14, (13, 7)))
+        out = nonlinear.exp_fixed(xs)
+        assert out.shape == (13, 7)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(min_value=-(1 << 15), max_value=(1 << 15) - 1),
+                    min_size=1, max_size=64))
+    def test_softplus_hypothesis_bitexact(self, vals):
+        xs = fx(vals)
+        np.testing.assert_array_equal(
+            np.asarray(nonlinear.softplus_fixed(xs)),
+            np.asarray(ref.softplus_fixed_ref(xs)),
+        )
+
+
+class TestPwlTables:
+    def test_eight_segments(self):
+        intercept, slope = ref.pwl_tables()
+        assert intercept.shape == (8,) and slope.shape == (8,)
+
+    def test_intercepts_decreasing(self):
+        intercept, _ = ref.pwl_tables()
+        assert (np.diff(intercept) < 0).all()
+
+    def test_pwl_error_bound(self):
+        """8-segment PWL of 2^v on (-1, 0] has error ~<= 2^-9."""
+        rem = np.arange(0, FXP.scale)
+        intercept, slope = ref.pwl_tables()
+        seg_w = FXP.scale // 8
+        seg = rem // seg_w
+        approx = (intercept[seg] + slope[seg] * (rem - seg * seg_w)) / (
+            1 << FXP.coeff_frac_bits
+        )
+        true = 2.0 ** (-rem / FXP.scale)
+        assert np.abs(approx - true).max() < 5e-3

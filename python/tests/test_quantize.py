@@ -1,0 +1,175 @@
+"""Quantization algorithm tests: Algorithm 1, PoT, baselines."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quantize
+
+RNG = np.random.RandomState(0)
+
+
+class TestHadamardMatrix:
+    @pytest.mark.parametrize("n", [1, 2, 4, 8, 64, 128])
+    def test_orthogonal(self, n):
+        h = quantize.hadamard_matrix(n)
+        np.testing.assert_allclose(h @ h.T, n * np.eye(n), atol=1e-4)
+
+    @pytest.mark.parametrize("n", [3, 6, 0, 100])
+    def test_rejects_non_pow2(self, n):
+        with pytest.raises(ValueError):
+            quantize.hadamard_matrix(n)
+
+    def test_entries_pm1(self):
+        h = quantize.hadamard_matrix(32)
+        assert set(np.unique(h)) == {-1.0, 1.0}
+
+
+class TestHadamardTransform:
+    def test_involution_up_to_scale(self):
+        """H H^T = n I: transforming twice recovers n*x."""
+        x = jnp.asarray(RNG.randn(5, 128).astype(np.float32))
+        y = quantize.hadamard_transform(quantize.hadamard_transform(x, 64), 64)
+        np.testing.assert_allclose(np.asarray(y), 64 * np.asarray(x), rtol=1e-3,
+                                   atol=1e-4)
+
+    def test_norm_preserved_up_to_scale(self):
+        x = jnp.asarray(RNG.randn(7, 256).astype(np.float32))
+        y = quantize.hadamard_transform(x, 64)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(y), axis=1),
+            np.sqrt(64) * np.linalg.norm(np.asarray(x), axis=1),
+            rtol=1e-4,
+        )
+
+    def test_outlier_dispersal(self):
+        """Fig. 3: a single huge channel spreads evenly across the group."""
+        x = np.zeros((1, 64), np.float32)
+        x[0, 17] = 100.0
+        y = np.asarray(quantize.hadamard_transform(jnp.asarray(x), 64))
+        assert np.abs(y).max() == pytest.approx(100.0)
+        assert np.abs(y).min() == pytest.approx(100.0)  # perfectly dispersed
+
+    def test_rejects_bad_group(self):
+        with pytest.raises(ValueError):
+            quantize.hadamard_transform(jnp.zeros((2, 100)), 64)
+
+
+class TestHadamardLinear:
+    def test_close_to_fp32(self):
+        x = jnp.asarray(RNG.randn(16, 128).astype(np.float32))
+        w = jnp.asarray(RNG.randn(96, 128).astype(np.float32))
+        y = np.asarray(quantize.hadamard_linear(x, w, 64))
+        y_fp = np.asarray(x @ w.T)
+        rel = np.abs(y - y_fp).max() / np.abs(y_fp).max()
+        assert rel < 0.03
+
+    def test_beats_normalq_under_outliers(self):
+        """The paper's core claim: with activation outliers, Hadamard W8A8
+        is far more accurate than per-tensor absmax W8A8."""
+        x = RNG.randn(32, 256).astype(np.float32)
+        x[:, 3] *= 80.0  # severe channel outlier
+        x[:, 200] *= 50.0
+        w = RNG.randn(128, 256).astype(np.float32)
+        xj, wj = jnp.asarray(x), jnp.asarray(w)
+        y_fp = np.asarray(xj @ wj.T)
+        err_had = np.abs(np.asarray(quantize.hadamard_linear(xj, wj, 64)) - y_fp).mean()
+        err_norm = np.abs(np.asarray(quantize.normalq_linear(xj, wj)) - y_fp).mean()
+        assert err_had < err_norm / 2
+
+    def test_bias_applied(self):
+        x = jnp.asarray(RNG.randn(4, 64).astype(np.float32))
+        w = jnp.asarray(RNG.randn(8, 64).astype(np.float32))
+        b = jnp.asarray(RNG.randn(8).astype(np.float32))
+        y0 = np.asarray(quantize.hadamard_linear(x, w, 64))
+        y1 = np.asarray(quantize.hadamard_linear(x, w, 64, bias=b))
+        np.testing.assert_allclose(y1 - y0, np.broadcast_to(b, (4, 8)), atol=1e-5)
+
+    def test_prepared_weight_matches_inline(self):
+        x = jnp.asarray(RNG.randn(4, 128).astype(np.float32))
+        w = jnp.asarray(RNG.randn(32, 128).astype(np.float32))
+        w_q_t, s_w = quantize.hadamard_prepare_weight(w, 64)
+        x_h = quantize.hadamard_transform(x, 64)
+        s_x = jnp.max(jnp.abs(x_h)) / 127.0
+        x_q = quantize.quantize_int8(x_h, s_x).astype(jnp.int32)
+        y_manual = (x_q @ w_q_t.astype(jnp.int32)).astype(jnp.float32) * (
+            s_x * s_w / 64
+        )
+        np.testing.assert_allclose(
+            np.asarray(y_manual), np.asarray(quantize.hadamard_linear(x, w, 64)),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+class TestSmoothQuant:
+    def test_improves_on_normalq_with_outliers(self):
+        x = RNG.randn(32, 128).astype(np.float32)
+        x[:, 5] *= 60.0
+        w = RNG.randn(64, 128).astype(np.float32)
+        xj, wj = jnp.asarray(x), jnp.asarray(w)
+        y_fp = np.asarray(xj @ wj.T)
+        err_s = np.abs(np.asarray(quantize.smoothq_linear(xj, wj)) - y_fp).mean()
+        err_n = np.abs(np.asarray(quantize.normalq_linear(xj, wj)) - y_fp).mean()
+        assert err_s < err_n
+
+    def test_factors_positive(self):
+        s = quantize.smoothq_factors(
+            jnp.abs(jnp.asarray(RNG.randn(64).astype(np.float32))) + 0.1,
+            jnp.asarray(RNG.randn(32, 64).astype(np.float32)),
+        )
+        assert (np.asarray(s) > 0).all()
+
+
+class TestPoT:
+    def test_scale_is_power_of_two(self):
+        x = jnp.asarray(RNG.randn(100).astype(np.float32) * 7)
+        q = np.asarray(quantize.pot_fake_quant(x, bits=16))
+        # every dequantized value is an integer multiple of a single 2^p
+        nz = q[q != 0]
+        exps = np.log2(np.abs(nz))
+        # representable on the 2^p grid: value / 2^p integral for the tensor p
+        p = int(np.asarray(quantize.pot_exponent(jnp.max(jnp.abs(x)))))
+        assert np.allclose(nz / (2.0**p), np.round(nz / (2.0**p)))
+
+    def test_error_bound(self):
+        x = jnp.asarray(RNG.randn(4096).astype(np.float32))
+        q = np.asarray(quantize.pot_fake_quant(x, bits=16))
+        p = int(np.asarray(quantize.pot_exponent(jnp.max(jnp.abs(x)))))
+        assert np.abs(q - np.asarray(x)).max() <= 2.0**p / 2 + 1e-9
+
+    def test_fine_grained_beats_per_tensor(self):
+        """The paper's *fine-grained* PoT: per-channel exponents reduce error
+        when channel magnitudes differ."""
+        x = RNG.randn(64, 32).astype(np.float32)
+        x[:, 0] *= 100.0
+        xj = jnp.asarray(x)
+        e_tensor = np.abs(np.asarray(quantize.pot_fake_quant(xj, bits=8)) - x).mean()
+        e_chan = np.abs(
+            np.asarray(quantize.pot_fake_quant(xj, bits=8, axis=0)) - x
+        ).mean()
+        assert e_chan < e_tensor
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=4, max_value=16))
+    def test_idempotent(self, bits):
+        x = jnp.asarray(RNG.randn(128).astype(np.float32))
+        q1 = quantize.pot_fake_quant(x, bits=bits)
+        q2 = quantize.pot_fake_quant(q1, bits=bits)
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-7)
+
+
+class TestInt8Helpers:
+    def test_quantize_range(self):
+        x = jnp.asarray(RNG.randn(1000).astype(np.float32) * 100)
+        s = jnp.max(jnp.abs(x)) / 127.0
+        q = np.asarray(quantize.quantize_int8(x, s))
+        assert q.min() >= -128 and q.max() <= 127
+
+    def test_roundtrip_error(self):
+        x = jnp.asarray(RNG.randn(1000).astype(np.float32))
+        s = jnp.max(jnp.abs(x)) / 127.0
+        q = quantize.quantize_int8(x, s)
+        err = np.abs(np.asarray(q, np.float32) * float(s) - np.asarray(x)).max()
+        assert err <= float(s) / 2 + 1e-7

@@ -1,0 +1,10 @@
+//! Baseline platforms for Fig. 1 / Fig. 9 / Table III: a *measured* CPU
+//! baseline (this host running the golden model, calibrated to the paper's
+//! Xeon 4210R) and an *analytical* GPU model (roofline + kernel-launch
+//! overhead, calibrated to the paper's RTX 3090 observations).
+
+pub mod cpu;
+pub mod gpu_model;
+
+pub use cpu::CpuBaseline;
+pub use gpu_model::GpuModel;

@@ -1,0 +1,273 @@
+//! Model, fixed-point, and accelerator configurations.
+//!
+//! Mirrors `python/compile/config.py` (the manifest carries the Python side's
+//! values; [`ModelConfig::from_manifest`] cross-checks them) and adds the
+//! accelerator instantiation constants from the paper's §IV.
+
+/// Dimensions of a Mamba2 model (SSD variant, `ngroups = 1`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub d_state: usize,
+    pub headdim: usize,
+    pub d_conv: usize,
+    pub expand: usize,
+    pub ngroups: usize,
+    pub vocab_size: usize,
+}
+
+impl ModelConfig {
+    pub fn d_inner(&self) -> usize {
+        self.expand * self.d_model
+    }
+
+    pub fn nheads(&self) -> usize {
+        self.d_inner() / self.headdim
+    }
+
+    /// Channels through the depthwise causal conv (x, B, C concatenated).
+    pub fn conv_dim(&self) -> usize {
+        self.d_inner() + 2 * self.ngroups * self.d_state
+    }
+
+    /// Output width of the input projection (z, xBC, dt).
+    pub fn d_in_proj(&self) -> usize {
+        2 * self.d_inner() + 2 * self.ngroups * self.d_state + self.nheads()
+    }
+
+    /// Mamba2-130M — the paper's prefill / accuracy model.
+    pub fn mamba2_130m() -> Self {
+        Self {
+            name: "mamba2-130m".into(),
+            d_model: 768,
+            n_layer: 24,
+            d_state: 128,
+            headdim: 64,
+            d_conv: 4,
+            expand: 2,
+            ngroups: 1,
+            vocab_size: 50288,
+        }
+    }
+
+    /// Mamba2-2.7B — the paper's decode / energy-efficiency model.
+    pub fn mamba2_2_7b() -> Self {
+        Self {
+            name: "mamba2-2.7b".into(),
+            d_model: 2560,
+            n_layer: 64,
+            d_state: 128,
+            headdim: 64,
+            d_conv: 4,
+            expand: 2,
+            ngroups: 1,
+            vocab_size: 50288,
+        }
+    }
+
+    /// The build-time-trained tiny model (serving artifacts).
+    pub fn tiny() -> Self {
+        Self {
+            name: "mamba2-tiny".into(),
+            d_model: 256,
+            n_layer: 4,
+            d_state: 64,
+            headdim: 32,
+            d_conv: 4,
+            expand: 2,
+            ngroups: 1,
+            vocab_size: 512,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "mamba2-130m" => Some(Self::mamba2_130m()),
+            "mamba2-2.7b" => Some(Self::mamba2_2_7b()),
+            "mamba2-tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// Parameter count (tied embedding).
+    pub fn n_params(&self) -> usize {
+        let per_layer = self.d_model // norm_w
+            + self.d_in_proj() * self.d_model
+            + self.conv_dim() * self.d_conv
+            + self.conv_dim()
+            + 3 * self.nheads() // dt_bias, a_log, d
+            + self.d_inner() // norm_g_w
+            + self.d_model * self.d_inner();
+        self.vocab_size * self.d_model + self.d_model + self.n_layer * per_layer
+    }
+}
+
+/// Q-format of the accelerator's 16-bit fixed-point datapath (Q6.10), and
+/// the Eq. 3 constants.  Mirrors `FixedPointSpec` in Python; the NAU tests
+/// assert bit-identical behaviour across the two implementations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixedSpec {
+    pub total_bits: u32,
+    pub frac_bits: u32,
+    pub pwl_segments: u32,
+    pub coeff_frac_bits: u32,
+}
+
+impl Default for FixedSpec {
+    fn default() -> Self {
+        Self {
+            total_bits: 16,
+            frac_bits: 10,
+            pwl_segments: 8,
+            coeff_frac_bits: 14,
+        }
+    }
+}
+
+impl FixedSpec {
+    pub fn scale(&self) -> i32 {
+        1 << self.frac_bits
+    }
+
+    pub fn qmax(&self) -> i32 {
+        (1 << (self.total_bits - 1)) - 1
+    }
+
+    pub fn qmin(&self) -> i32 {
+        -(1 << (self.total_bits - 1))
+    }
+
+    /// log2(e) ~= (1.0111)_2 = 1.4375 exactly, in Q-format (Eq. 3).
+    pub fn log2e_fx(&self) -> i32 {
+        (1.4375 * self.scale() as f64) as i32
+    }
+}
+
+/// Instantiation constants of the FastMamba accelerator (paper §IV) plus the
+/// VC709 (XC7VX690T) resource budget and clock.
+#[derive(Debug, Clone)]
+pub struct AcceleratorConfig {
+    /// Clock frequency in Hz (paper: 250 MHz).
+    pub clock_hz: u64,
+    /// Hadamard-based Linear Module: parallel computing groups (paper: 6).
+    pub linear_groups: usize,
+    /// HAT units per linear group (paper: 4, each 64-wide).
+    pub hats_per_group: usize,
+    /// Width of each HAT (the Hadamard group size d/m; paper Fig. 6: 64).
+    pub hat_width: usize,
+    /// MAT units per linear group for the int8 matrix product (paper: 64).
+    pub mats_per_group: usize,
+    /// int8 MAC lanes per linear MAT (activation vector length; paper: 4).
+    pub linear_mat_width: usize,
+    /// Convolution Module MAT units (paper: 32).
+    pub conv_mats: usize,
+    /// Conv kernel size (paper: 4).
+    pub conv_kernel: usize,
+    /// NAU lane count (paper Fig. 8: 24 x 16b).
+    pub nau_lanes: usize,
+    /// SSM Step-3 parallel PMU/PMA/MAT units (paper: 32).
+    pub ssm_step3_units: usize,
+    /// SSM Step-3 per-unit vector width (paper: H^l in R^{32x8}).
+    pub ssm_step3_width: usize,
+    /// Off-chip memory bandwidth, bytes/s (VC709 DDR3-1866 SODIMM, ~14.9 GB/s).
+    pub dram_bw_bytes: f64,
+    /// FPGA resource budget (XC7VX690T).
+    pub total_lut: u64,
+    pub total_ff: u64,
+    pub total_dsp: u64,
+    pub total_bram36: u64,
+}
+
+impl Default for AcceleratorConfig {
+    fn default() -> Self {
+        Self {
+            clock_hz: 250_000_000,
+            linear_groups: 6,
+            hats_per_group: 4,
+            hat_width: 64,
+            mats_per_group: 64,
+            linear_mat_width: 4,
+            conv_mats: 32,
+            conv_kernel: 4,
+            nau_lanes: 24,
+            ssm_step3_units: 32,
+            ssm_step3_width: 8,
+            dram_bw_bytes: 14.9e9,
+            total_lut: 433_200,
+            total_ff: 866_400,
+            total_dsp: 3_600,
+            total_bram36: 1_470,
+        }
+    }
+}
+
+impl AcceleratorConfig {
+    /// int8 MACs/cycle of the Hadamard-based Linear Module's MAT array.
+    pub fn linear_macs_per_cycle(&self) -> u64 {
+        (self.linear_groups * self.mats_per_group * self.linear_mat_width) as u64
+    }
+
+    /// MACs/cycle of the Convolution Module.
+    pub fn conv_macs_per_cycle(&self) -> u64 {
+        (self.conv_mats * self.conv_kernel) as u64
+    }
+
+    /// Fixed-point ops/cycle of the SSM module's Step-3 array.
+    pub fn ssm_ops_per_cycle(&self) -> u64 {
+        (self.ssm_step3_units * self.ssm_step3_width) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_130m() {
+        let c = ModelConfig::mamba2_130m();
+        assert_eq!(c.d_inner(), 1536);
+        assert_eq!(c.nheads(), 24); // the SSM module's 24-lane NAU width
+        assert_eq!(c.conv_dim(), 1792);
+        assert_eq!(c.d_in_proj(), 3352);
+    }
+
+    #[test]
+    fn dims_tiny() {
+        let c = ModelConfig::tiny();
+        assert_eq!(c.d_inner(), 512);
+        assert_eq!(c.nheads(), 16);
+        assert_eq!(c.conv_dim(), 640);
+    }
+
+    #[test]
+    fn param_count_130m_near_130m() {
+        let c = ModelConfig::mamba2_130m();
+        let n = c.n_params() as f64;
+        assert!(n > 100e6 && n < 180e6, "{n}");
+    }
+
+    #[test]
+    fn fixed_spec_constants() {
+        let s = FixedSpec::default();
+        assert_eq!(s.scale(), 1024);
+        assert_eq!(s.log2e_fx(), 1472); // 1.4375 * 1024
+        assert_eq!(s.qmax(), 32767);
+        assert_eq!(s.qmin(), -32768);
+    }
+
+    #[test]
+    fn accel_throughput_constants() {
+        let a = AcceleratorConfig::default();
+        assert_eq!(a.linear_macs_per_cycle(), 6 * 64 * 4);
+        assert_eq!(a.conv_macs_per_cycle(), 128);
+        assert_eq!(a.ssm_ops_per_cycle(), 256);
+    }
+
+    #[test]
+    fn config_lookup() {
+        assert!(ModelConfig::by_name("mamba2-130m").is_some());
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,123 @@
+//! Dynamic decode batcher: packs active sequences into the AOT-compiled
+//! batch buckets {1, 2, 4, 8}, padding the last partial batch with an idle
+//! slot replica (its output is discarded).
+
+/// Batch-formation plan for one decode step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// executable batch size (one of the compiled buckets)
+    pub bucket: usize,
+    /// indices (into the active list) of real sequences in the batch
+    pub members: Vec<usize>,
+    /// how many trailing slots are padding
+    pub padding: usize,
+}
+
+/// Greedy bucket packing: take as many sequences as fit the largest bucket;
+/// the remainder uses the smallest bucket that covers it.
+#[derive(Debug, Clone)]
+pub struct DecodeBatcher {
+    /// ascending compiled batch sizes
+    pub buckets: Vec<usize>,
+}
+
+impl DecodeBatcher {
+    pub fn new(mut buckets: Vec<usize>) -> Self {
+        assert!(!buckets.is_empty());
+        buckets.sort_unstable();
+        Self { buckets }
+    }
+
+    /// Plan the decode batches for `n_active` sequences (indices 0..n).
+    pub fn plan(&self, n_active: usize) -> Vec<BatchPlan> {
+        let mut plans = Vec::new();
+        let largest = *self.buckets.last().unwrap();
+        let mut next = 0usize;
+        let mut remaining = n_active;
+        while remaining > 0 {
+            let take = remaining.min(largest);
+            // smallest bucket >= take
+            let bucket = *self
+                .buckets
+                .iter()
+                .find(|b| **b >= take)
+                .unwrap_or(&largest);
+            let members: Vec<usize> = (next..next + take).collect();
+            plans.push(BatchPlan { bucket, members, padding: bucket - take });
+            next += take;
+            remaining -= take;
+        }
+        plans
+    }
+
+    /// Total padded-slot fraction for a given active count (efficiency
+    /// metric the batching policy minimizes).
+    pub fn waste(&self, n_active: usize) -> f64 {
+        let plans = self.plan(n_active);
+        let padded: usize = plans.iter().map(|p| p.padding).sum();
+        let total: usize = plans.iter().map(|p| p.bucket).sum();
+        if total == 0 { 0.0 } else { padded as f64 / total as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher() -> DecodeBatcher {
+        DecodeBatcher::new(vec![1, 2, 4, 8])
+    }
+
+    #[test]
+    fn exact_bucket_no_padding() {
+        for n in [1usize, 2, 4, 8] {
+            let p = batcher().plan(n);
+            assert_eq!(p.len(), 1);
+            assert_eq!(p[0].bucket, n);
+            assert_eq!(p[0].padding, 0);
+        }
+    }
+
+    #[test]
+    fn intermediate_counts_use_next_bucket() {
+        let p = batcher().plan(3);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].bucket, 4);
+        assert_eq!(p[0].padding, 1);
+        assert_eq!(p[0].members, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn overflow_splits_into_multiple_batches() {
+        let p = batcher().plan(13);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].bucket, 8);
+        assert_eq!(p[0].padding, 0);
+        assert_eq!(p[1].bucket, 8); // 5 -> bucket 8
+        assert_eq!(p[1].padding, 3);
+        let all: Vec<usize> = p.iter().flat_map(|b| b.members.clone()).collect();
+        assert_eq!(all, (0..13).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_active_is_empty() {
+        assert!(batcher().plan(0).is_empty());
+    }
+
+    #[test]
+    fn waste_decreases_at_bucket_sizes() {
+        let b = batcher();
+        assert_eq!(b.waste(8), 0.0);
+        assert!(b.waste(5) > 0.0);
+        assert!(b.waste(5) < 0.5);
+    }
+
+    #[test]
+    fn single_bucket_batcher() {
+        let b = DecodeBatcher::new(vec![4]);
+        let p = b.plan(6);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].padding, 0);
+        assert_eq!(p[1].padding, 2);
+    }
+}

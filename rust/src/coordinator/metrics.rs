@@ -1,0 +1,119 @@
+//! Serving metrics: TTFT / per-token latency / throughput accounting.
+
+use std::time::Instant;
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub prompt_tokens: u64,
+    pub prefill_chunks: u64,
+    pub decode_steps: u64,
+    pub decode_padded_slots: u64,
+    pub ttft_s: Vec<f64>,
+    pub request_latency_s: Vec<f64>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        self.finished = Some(Instant::now());
+    }
+
+    pub fn wall_s(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(a), Some(b)) => (b - a).as_secs_f64(),
+            (Some(a), None) => a.elapsed().as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        self.tokens_generated as f64 / self.wall_s().max(1e-12)
+    }
+
+    fn pct(v: &[f64], p: f64) -> f64 {
+        if v.is_empty() {
+            return 0.0;
+        }
+        let mut s = v.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[((s.len() as f64 * p) as usize).min(s.len() - 1)]
+    }
+
+    pub fn ttft_p50(&self) -> f64 {
+        Self::pct(&self.ttft_s, 0.50)
+    }
+
+    pub fn ttft_p95(&self) -> f64 {
+        Self::pct(&self.ttft_s, 0.95)
+    }
+
+    pub fn latency_p50(&self) -> f64 {
+        Self::pct(&self.request_latency_s, 0.50)
+    }
+
+    pub fn latency_p95(&self) -> f64 {
+        Self::pct(&self.request_latency_s, 0.95)
+    }
+
+    /// Fraction of decode-batch slots wasted on padding.
+    pub fn padding_frac(&self) -> f64 {
+        let total = self.decode_steps.max(1);
+        self.decode_padded_slots as f64 / (total as f64).max(1.0)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} prompt_toks={} gen_toks={} wall={:.3}s gen_tok/s={:.1} \
+             ttft_p50={:.1}ms ttft_p95={:.1}ms lat_p50={:.1}ms lat_p95={:.1}ms \
+             prefill_chunks={} decode_steps={}",
+            self.requests_completed,
+            self.prompt_tokens,
+            self.tokens_generated,
+            self.wall_s(),
+            self.decode_tokens_per_s(),
+            self.ttft_p50() * 1e3,
+            self.ttft_p95() * 1e3,
+            self.latency_p50() * 1e3,
+            self.latency_p95() * 1e3,
+            self.prefill_chunks,
+            self.decode_steps,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut m = Metrics::default();
+        m.ttft_s = vec![0.1, 0.2, 0.3, 0.4, 1.0];
+        assert_eq!(m.ttft_p50(), 0.3);
+        assert_eq!(m.ttft_p95(), 1.0);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.ttft_p50(), 0.0);
+        assert_eq!(m.decode_tokens_per_s(), 0.0);
+        let _ = m.summary();
+    }
+
+    #[test]
+    fn wall_clock_runs() {
+        let mut m = Metrics::default();
+        m.start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.stop();
+        assert!(m.wall_s() >= 0.004);
+    }
+}

@@ -1,0 +1,27 @@
+//! Layer-3 serving coordinator: request router, chunked-prefill scheduler,
+//! dynamic decode batcher, and the SSM state manager.
+//!
+//! Mamba serving differs from transformer serving in one decisive way: the
+//! per-request state is a *fixed-size* recurrent state (conv window + SSM
+//! hidden state) instead of a sequence-length-proportional KV cache, so
+//! admission control is O(1) per request and batches never fragment memory.
+//! The coordinator exploits that: a flat [`state::StatePool`] of equal-size
+//! slots, a [`batcher::DecodeBatcher`] that packs active sequences into the
+//! AOT-compiled batch buckets, and a [`scheduler::Engine`] that prefills
+//! prompts in bucket-sized chunks (exact chunked prefill — validated
+//! bit-exact against whole-sequence prefill) before handing them to the
+//! decode loop.  All compute goes through [`crate::runtime::Runtime`].
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod state;
+
+pub use batcher::DecodeBatcher;
+pub use metrics::Metrics;
+pub use request::{FinishedRequest, Request};
+pub use router::Router;
+pub use scheduler::{Engine, EngineConfig};
+pub use state::StatePool;

@@ -1,0 +1,77 @@
+//! Request and result types flowing through the coordinator.
+
+use std::time::Instant;
+
+/// An inference request (prompt + generation budget).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// model variant to execute ("fp32" or "fastmamba")
+    pub variant: String,
+    /// optional stop token (generation halts when sampled)
+    pub stop_token: Option<u32>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize, variant: &str) -> Self {
+        Self { id, prompt, max_new_tokens, variant: variant.to_string(), stop_token: None }
+    }
+}
+
+/// Lifecycle timestamps + output of a completed request.
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    pub id: u64,
+    pub generated: Vec<u32>,
+    /// time-to-first-token, seconds (prefill latency)
+    pub ttft_s: f64,
+    /// total latency from submission
+    pub total_s: f64,
+    pub prompt_len: usize,
+}
+
+/// In-flight request tracking inside the engine.
+#[derive(Debug)]
+pub(crate) struct InFlight {
+    pub req: Request,
+    pub slot: usize,
+    pub generated: Vec<u32>,
+    /// last sampled / last prompt token to feed next
+    pub next_token: u32,
+    pub submitted: Instant,
+    pub first_token_at: Option<Instant>,
+}
+
+/// Greedy (argmax) sampling over one logits row.
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, v) in logits.iter().enumerate() {
+        if *v > bv {
+            bv = *v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.9]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn request_builder() {
+        let r = Request::new(7, vec![1, 2, 3], 16, "fastmamba");
+        assert_eq!(r.id, 7);
+        assert_eq!(r.variant, "fastmamba");
+        assert!(r.stop_token.is_none());
+    }
+}

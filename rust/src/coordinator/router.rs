@@ -1,0 +1,155 @@
+//! Request router: spreads incoming requests over worker engines by least
+//! outstanding load (state-slot aware — the Mamba serving advantage: a
+//! worker's remaining capacity is exactly `capacity - in_use`, no
+//! sequence-length estimation needed).
+//!
+//! The single-host deployment runs one worker; the policy logic is
+//! nevertheless real and unit-tested with mock workers, and
+//! `serve_threaded` wires an [`Engine`] into a worker thread with mpsc
+//! queues for asynchronous submission.
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+
+use super::request::{FinishedRequest, Request};
+use super::scheduler::{Engine, EngineConfig};
+
+/// Abstract view of a worker the router can place requests on.
+pub trait Worker {
+    /// currently held state slots
+    fn load(&self) -> usize;
+    /// total state slots
+    fn capacity(&self) -> usize;
+}
+
+/// Least-loaded routing with capacity awareness.
+#[derive(Debug, Default)]
+pub struct Router {
+    /// requests routed per worker (for accounting/tests)
+    pub assignments: Vec<u64>,
+}
+
+impl Router {
+    pub fn new(n_workers: usize) -> Self {
+        Self { assignments: vec![0; n_workers] }
+    }
+
+    /// Pick the worker with the most free slots; `None` if all full.
+    pub fn route<W: Worker>(&mut self, workers: &[W]) -> Option<usize> {
+        let (mut best, mut best_free) = (None, 0usize);
+        for (i, w) in workers.iter().enumerate() {
+            let free = w.capacity().saturating_sub(w.load());
+            if free > best_free {
+                best = Some(i);
+                best_free = free;
+            }
+        }
+        if let Some(i) = best {
+            self.assignments[i] += 1;
+        }
+        best
+    }
+}
+
+/// Run an engine on a worker thread; returns a submission channel and a
+/// results channel.  The worker owns its own PJRT runtime (the `xla` crate
+/// is not Sync — exactly like a real deployment where each worker process
+/// owns a device).  Dropping the submitter drains and joins the worker.
+pub fn serve_threaded(
+    artifacts_dir: std::path::PathBuf,
+    cfg: EngineConfig,
+) -> (mpsc::Sender<Request>, mpsc::Receiver<FinishedRequest>, thread::JoinHandle<Result<()>>) {
+    let (tx_req, rx_req) = mpsc::channel::<Request>();
+    let (tx_done, rx_done) = mpsc::channel::<FinishedRequest>();
+    let handle = thread::spawn(move || -> Result<()> {
+        let rt = Runtime::load(artifacts_dir)?;
+        let mut engine = Engine::new(&rt, cfg);
+        engine.metrics.start();
+        loop {
+            // drain whatever is queued without blocking; block only if idle
+            let mut disconnected = false;
+            loop {
+                match rx_req.try_recv() {
+                    Ok(r) => engine.submit(r),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+            if engine.n_pending() == 0 && engine.n_active() == 0 {
+                if disconnected {
+                    break;
+                }
+                match rx_req.recv() {
+                    Ok(r) => engine.submit(r),
+                    Err(_) => break,
+                }
+            }
+            engine.step()?;
+            for f in engine.finished.drain(..) {
+                let _ = tx_done.send(f);
+            }
+        }
+        engine.metrics.stop();
+        Ok(())
+    });
+    (tx_req, rx_done, handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct MockWorker {
+        load: usize,
+        cap: usize,
+    }
+
+    impl Worker for MockWorker {
+        fn load(&self) -> usize {
+            self.load
+        }
+        fn capacity(&self) -> usize {
+            self.cap
+        }
+    }
+
+    #[test]
+    fn routes_to_least_loaded() {
+        let mut r = Router::new(3);
+        let ws = vec![
+            MockWorker { load: 5, cap: 8 },
+            MockWorker { load: 1, cap: 8 },
+            MockWorker { load: 7, cap: 8 },
+        ];
+        assert_eq!(r.route(&ws), Some(1));
+        assert_eq!(r.assignments, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn none_when_all_full() {
+        let mut r = Router::new(2);
+        let ws = vec![
+            MockWorker { load: 8, cap: 8 },
+            MockWorker { load: 8, cap: 8 },
+        ];
+        assert_eq!(r.route(&ws), None);
+    }
+
+    #[test]
+    fn capacity_aware_not_just_load() {
+        // worker 0 has lower load but less free capacity
+        let mut r = Router::new(2);
+        let ws = vec![
+            MockWorker { load: 1, cap: 2 },
+            MockWorker { load: 3, cap: 16 },
+        ];
+        assert_eq!(r.route(&ws), Some(1));
+    }
+}

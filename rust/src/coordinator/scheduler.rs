@@ -1,0 +1,277 @@
+//! The serving engine: chunked-prefill admission + batched decode loop.
+//!
+//! Scheduling policy (prefill-priority, like vLLM's default):
+//! 1. Admit pending requests while state slots remain: prefill the prompt
+//!    in bucket-sized chunks (largest bucket first, exact state chaining);
+//!    a sub-bucket remainder is absorbed through single-token decode steps.
+//! 2. Run one batched decode step over all active sequences (packed by the
+//!    [`DecodeBatcher`]), sample greedily, retire finished requests.
+//!
+//! The engine is synchronous and deterministic (drive it with [`Engine::run`]
+//! or step it manually in tests); `serve_threaded` in [`super::router`]
+//! wraps it in a worker thread with mpsc queues.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+
+use super::batcher::DecodeBatcher;
+use super::metrics::Metrics;
+use super::request::{argmax, FinishedRequest, InFlight, Request};
+use super::state::StatePool;
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// maximum concurrent sequences (state slots)
+    pub max_active: usize,
+    /// prompt chunk remainder threshold: remainders below the smallest
+    /// prefill bucket run as decode steps
+    pub greedy_chunking: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { max_active: 64, greedy_chunking: true }
+    }
+}
+
+pub struct Engine<'rt> {
+    rt: &'rt Runtime,
+    cfg: EngineConfig,
+    pool: StatePool,
+    batcher: DecodeBatcher,
+    prefill_buckets: Vec<usize>, // ascending
+    pending: VecDeque<Request>,
+    active: Vec<InFlight>,
+    pub finished: Vec<FinishedRequest>,
+    pub metrics: Metrics,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: EngineConfig) -> Self {
+        let pool = StatePool::new(&rt.weights_host.cfg, cfg.max_active);
+        let batcher = DecodeBatcher::new(rt.decode_batches());
+        let prefill_buckets = rt.prefill_buckets();
+        Self {
+            rt,
+            cfg,
+            pool,
+            batcher,
+            prefill_buckets,
+            pending: VecDeque::new(),
+            active: Vec::new(),
+            finished: Vec::new(),
+            metrics: Metrics::default(),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.pending.push_back(req);
+    }
+
+    pub fn n_pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Split a prompt length into prefill chunks (largest-bucket-first) and
+    /// a decode-step remainder.  The remainder is always ≥ 1 so the final
+    /// prompt token runs through decode and yields the logits that sample
+    /// the first generated token.
+    pub fn chunk_plan(&self, prompt_len: usize) -> (Vec<usize>, usize) {
+        assert!(prompt_len >= 1, "empty prompt");
+        let mut chunks = Vec::new();
+        let mut rest = prompt_len - 1; // reserve the last token for decode
+        for &b in self.prefill_buckets.iter().rev() {
+            while rest >= b {
+                chunks.push(b);
+                rest -= b;
+            }
+        }
+        let chunked: usize = chunks.iter().sum();
+        (chunks, prompt_len - chunked)
+    }
+
+    /// Admit pending requests (prefill) while capacity lasts.
+    fn admit(&mut self) -> Result<()> {
+        while let Some(_peek) = self.pending.front() {
+            if self.pool.in_use() >= self.cfg.max_active {
+                break;
+            }
+            let Some(slot) = self.pool.alloc() else { break };
+            let req = self.pending.pop_front().unwrap();
+            let submitted = Instant::now();
+
+            let (chunks, remainder) = self.chunk_plan(req.prompt.len());
+            let mut offset = 0usize;
+            for chunk_len in chunks {
+                let toks: Vec<i32> = req.prompt[offset..offset + chunk_len]
+                    .iter()
+                    .map(|t| *t as i32)
+                    .collect();
+                let st = self.pool.get(slot);
+                let out = self.rt.prefill(&req.variant, &toks, &st.conv, &st.ssm)?;
+                let stm = self.pool.get_mut(slot);
+                stm.conv = out.conv_state;
+                stm.ssm = out.ssm_state;
+                offset += chunk_len;
+                self.metrics.prefill_chunks += 1;
+            }
+            // remainder through single-token decode steps (exact)
+            let mut last_logits: Option<Vec<f32>> = None;
+            for i in 0..remainder {
+                let tok = req.prompt[offset + i] as i32;
+                let st = self.pool.get(slot);
+                let out = self.rt.decode(&req.variant, 1, &st.conv, &st.ssm, &[tok])?;
+                let stm = self.pool.get_mut(slot);
+                stm.conv = out.conv_state;
+                stm.ssm = out.ssm_state;
+                last_logits = Some(out.logits);
+                self.metrics.decode_steps += 1;
+            }
+            self.metrics.prompt_tokens += req.prompt.len() as u64;
+
+            // first generated token comes from the last prompt position
+            // (chunk_plan guarantees remainder >= 1, so last_logits is set)
+            let vocab = self.rt.weights_host.cfg.vocab_size;
+            let first = argmax(&last_logits.expect("remainder >= 1")[..vocab]);
+            let mut infl = InFlight {
+                next_token: 0,
+                slot,
+                generated: Vec::new(),
+                submitted,
+                first_token_at: None,
+                req,
+            };
+            infl.next_token = first;
+            infl.first_token_at = Some(Instant::now());
+            infl.generated.push(first);
+            self.metrics.ttft_s.push(submitted.elapsed().as_secs_f64());
+            self.metrics.tokens_generated += 1;
+            // finished immediately?
+            if infl.generated.len() >= infl.req.max_new_tokens
+                || infl.req.stop_token == Some(first)
+            {
+                self.retire(infl);
+            } else {
+                self.active.push(infl);
+            }
+        }
+        Ok(())
+    }
+
+    fn retire(&mut self, infl: InFlight) {
+        self.pool.release(infl.slot);
+        self.metrics.requests_completed += 1;
+        self.metrics
+            .request_latency_s
+            .push(infl.submitted.elapsed().as_secs_f64());
+        self.finished.push(FinishedRequest {
+            id: infl.req.id,
+            prompt_len: infl.req.prompt.len(),
+            generated: infl.generated,
+            ttft_s: infl
+                .first_token_at
+                .map(|t| (t - infl.submitted).as_secs_f64())
+                .unwrap_or(0.0),
+            total_s: infl.submitted.elapsed().as_secs_f64(),
+        });
+    }
+
+    /// One batched decode step over all active sequences.
+    fn decode_step(&mut self) -> Result<()> {
+        if self.active.is_empty() {
+            return Ok(());
+        }
+        // group by variant (different executables)
+        let variants: Vec<String> = {
+            let mut v: Vec<String> =
+                self.active.iter().map(|a| a.req.variant.clone()).collect();
+            v.sort();
+            v.dedup();
+            v
+        };
+        let vocab = self.rt.weights_host.cfg.vocab_size;
+        let mut to_retire: Vec<usize> = Vec::new();
+
+        for variant in variants {
+            let idxs: Vec<usize> = self
+                .active
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.req.variant == variant)
+                .map(|(i, _)| i)
+                .collect();
+            for plan in self.batcher.plan(idxs.len()) {
+                let members: Vec<usize> =
+                    plan.members.iter().map(|m| idxs[*m]).collect();
+                // gather states (pad by repeating the first member)
+                let mut slot_ids: Vec<usize> =
+                    members.iter().map(|i| self.active[*i].slot).collect();
+                let mut tokens: Vec<i32> = members
+                    .iter()
+                    .map(|i| self.active[*i].next_token as i32)
+                    .collect();
+                for _ in 0..plan.padding {
+                    slot_ids.push(slot_ids[0]);
+                    tokens.push(tokens[0]);
+                }
+                let (conv, ssm) = self.pool.gather(&slot_ids);
+                let out = self.rt.decode(&variant, plan.bucket, &conv, &ssm, &tokens)?;
+                // scatter only real members
+                let real = members.len();
+                let conv_len = conv.len() / plan.bucket;
+                let ssm_len = ssm.len() / plan.bucket;
+                self.pool.scatter(
+                    &slot_ids[..real],
+                    &out.conv_state[..real * conv_len],
+                    &out.ssm_state[..real * ssm_len],
+                );
+                self.metrics.decode_steps += 1;
+                self.metrics.decode_padded_slots += plan.padding as u64;
+
+                for (b, &ai) in members.iter().enumerate() {
+                    let logits = &out.logits[b * vocab..(b + 1) * vocab];
+                    let tok = argmax(logits);
+                    let infl = &mut self.active[ai];
+                    infl.next_token = tok;
+                    infl.generated.push(tok);
+                    self.metrics.tokens_generated += 1;
+                    if infl.generated.len() >= infl.req.max_new_tokens
+                        || infl.req.stop_token == Some(tok)
+                    {
+                        to_retire.push(ai);
+                    }
+                }
+            }
+        }
+        to_retire.sort_unstable();
+        for ai in to_retire.into_iter().rev() {
+            let infl = self.active.swap_remove(ai);
+            self.retire(infl);
+        }
+        Ok(())
+    }
+
+    /// One scheduler iteration: admit then decode.
+    pub fn step(&mut self) -> Result<()> {
+        self.admit()?;
+        self.decode_step()
+    }
+
+    /// Drive until every submitted request completes.
+    pub fn run(&mut self) -> Result<()> {
+        self.metrics.start();
+        while !self.pending.is_empty() || !self.active.is_empty() {
+            self.step()?;
+        }
+        self.metrics.stop();
+        Ok(())
+    }
+}

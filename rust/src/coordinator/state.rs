@@ -1,0 +1,161 @@
+//! SSM state pool: fixed-size per-request recurrent state slots.
+//!
+//! Because a Mamba2 request's state size is independent of its prompt or
+//! generation length, the pool is a flat arena of identical slots — O(1)
+//! allocate/free, zero fragmentation, exact capacity accounting (the
+//! admission-control advantage over KV-cache serving).
+
+use crate::config::ModelConfig;
+
+/// One request's recurrent state (host-side mirror of what the decode
+/// executable consumes/produces).
+#[derive(Debug, Clone)]
+pub struct StateSlot {
+    pub conv: Vec<f32>,
+    pub ssm: Vec<f32>,
+}
+
+/// Pool of pre-allocated state slots.
+#[derive(Debug)]
+pub struct StatePool {
+    slots: Vec<StateSlot>,
+    free: Vec<usize>,
+    conv_len: usize,
+    ssm_len: usize,
+}
+
+impl StatePool {
+    pub fn new(cfg: &ModelConfig, capacity: usize) -> Self {
+        let conv_len = cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim();
+        let ssm_len = cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state;
+        let slots = (0..capacity)
+            .map(|_| StateSlot { conv: vec![0.0; conv_len], ssm: vec![0.0; ssm_len] })
+            .collect();
+        Self { slots, free: (0..capacity).rev().collect(), conv_len, ssm_len }
+    }
+
+    /// Allocate a zeroed slot; `None` when the pool is exhausted.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let idx = self.free.pop()?;
+        self.slots[idx].conv.fill(0.0);
+        self.slots[idx].ssm.fill(0.0);
+        Some(idx)
+    }
+
+    pub fn release(&mut self, idx: usize) {
+        debug_assert!(!self.free.contains(&idx));
+        self.free.push(idx);
+    }
+
+    pub fn get(&self, idx: usize) -> &StateSlot {
+        &self.slots[idx]
+    }
+
+    pub fn get_mut(&mut self, idx: usize) -> &mut StateSlot {
+        &mut self.slots[idx]
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Bytes per slot — the O(1) admission cost.
+    pub fn slot_bytes(&self) -> usize {
+        4 * (self.conv_len + self.ssm_len)
+    }
+
+    /// Gather `slots` into batch-major contiguous buffers for the decode
+    /// executable.
+    pub fn gather(&self, idxs: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        let mut conv = Vec::with_capacity(idxs.len() * self.conv_len);
+        let mut ssm = Vec::with_capacity(idxs.len() * self.ssm_len);
+        for &i in idxs {
+            conv.extend_from_slice(&self.slots[i].conv);
+            ssm.extend_from_slice(&self.slots[i].ssm);
+        }
+        (conv, ssm)
+    }
+
+    /// Scatter batch-major outputs back into the slots.
+    pub fn scatter(&mut self, idxs: &[usize], conv: &[f32], ssm: &[f32]) {
+        assert_eq!(conv.len(), idxs.len() * self.conv_len);
+        assert_eq!(ssm.len(), idxs.len() * self.ssm_len);
+        for (b, &i) in idxs.iter().enumerate() {
+            self.slots[i]
+                .conv
+                .copy_from_slice(&conv[b * self.conv_len..(b + 1) * self.conv_len]);
+            self.slots[i]
+                .ssm
+                .copy_from_slice(&ssm[b * self.ssm_len..(b + 1) * self.ssm_len]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> StatePool {
+        StatePool::new(&ModelConfig::tiny(), 4)
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.in_use(), 2);
+        p.release(a);
+        assert_eq!(p.in_use(), 1);
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a); // LIFO reuse
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut p = pool();
+        for _ in 0..4 {
+            assert!(p.alloc().is_some());
+        }
+        assert!(p.alloc().is_none());
+    }
+
+    #[test]
+    fn alloc_zeroes_recycled_slot() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        p.get_mut(a).ssm[0] = 42.0;
+        p.release(a);
+        let b = p.alloc().unwrap();
+        assert_eq!(b, a);
+        assert_eq!(p.get(b).ssm[0], 0.0);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        p.get_mut(a).ssm[3] = 1.5;
+        p.get_mut(b).conv[7] = -2.5;
+        let (conv, ssm) = p.gather(&[a, b]);
+        // mutate then scatter back swapped
+        p.scatter(&[b, a], &conv, &ssm);
+        assert_eq!(p.get(b).ssm[3], 1.5);
+        assert_eq!(p.get(a).conv[7], -2.5);
+    }
+
+    #[test]
+    fn slot_bytes_matches_model() {
+        let p = pool();
+        let cfg = ModelConfig::tiny();
+        let expect = 4 * (cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()
+            + cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state);
+        assert_eq!(p.slot_bytes(), expect);
+    }
+}

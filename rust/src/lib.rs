@@ -1,0 +1,35 @@
+//! FastMamba: reproduction of "FastMamba: A High-Speed and Efficient Mamba
+//! Accelerator on FPGA with Accurate Quantization" (cs.AR 2025).
+//!
+//! The crate is the Layer-3 side of a three-layer stack:
+//!
+//! * **Layer 1** (build time): Pallas kernels — the quantized compute
+//!   hot-spots (`python/compile/kernels/`).
+//! * **Layer 2** (build time): the JAX Mamba2 model in five quantization
+//!   variants, AOT-lowered to HLO text artifacts (`python/compile/`).
+//! * **Layer 3** (this crate, serve time): a serving coordinator
+//!   ([`coordinator`]) that executes the artifacts through PJRT
+//!   ([`runtime`]), plus the substrates the paper's evaluation needs —
+//!   quantization ([`quant`]), the NAU nonlinear approximations
+//!   ([`nonlinear`]), a native Mamba2 golden model / CPU baseline
+//!   ([`model`]), a cycle-level simulator of the FastMamba FPGA
+//!   microarchitecture ([`sim`]), analytical CPU/GPU baselines
+//!   ([`baseline`]), the synthetic evaluation harness ([`eval`]), and the
+//!   table/figure report generators ([`report`]).
+//!
+//! Python never runs on the request path: `make artifacts` lowers
+//! everything once, and the `fastmamba` binary is self-contained.
+
+pub mod baseline;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod model;
+pub mod nonlinear;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use config::{AcceleratorConfig, FixedSpec, ModelConfig};

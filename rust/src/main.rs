@@ -1,0 +1,146 @@
+//! FastMamba CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   serve    — run the serving engine on a synthetic request trace
+//!   report   — regenerate any paper table/figure (--id table2|fig9|...|all)
+//!   simulate — accelerator performance model (prefill/decode sweeps)
+//!   info     — artifacts + model + accelerator summary
+
+use anyhow::{bail, Result};
+
+use fastmamba::config::{AcceleratorConfig, ModelConfig};
+use fastmamba::coordinator::{Engine, EngineConfig, Request};
+use fastmamba::runtime::Runtime;
+use fastmamba::sim::PerfModel;
+use fastmamba::util::cli::Args;
+use fastmamba::util::rng::Rng;
+use fastmamba::{eval, report};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("serve") => serve(&args),
+        Some("report") => run_report(&args),
+        Some("simulate") => simulate(&args),
+        Some("info") => info(),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o}");
+            }
+            eprintln!(
+                "usage: fastmamba <serve|report|simulate|info> [--flags]\n\
+                 \n  serve    --requests N --max-new N --variant fp32|fastmamba --prompt-len N\
+                 \n  report   --id all|table1|table2|table3|table4|fig1|fig3|fig9|fig10\
+                 \n  simulate --model mamba2-130m|mamba2-2.7b --seq-len N --batch N\
+                 \n  info"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let n_requests = args.usize_or("requests", 8);
+    let max_new = args.usize_or("max-new", 16);
+    let prompt_len = args.usize_or("prompt-len", 48);
+    let variant = args.get_or("variant", "fp32");
+    let vocab = rt.weights_host.cfg.vocab_size;
+
+    let mut engine = Engine::new(&rt, EngineConfig::default());
+    let mut rng = Rng::new(args.usize_or("seed", 7) as u64);
+    let corpus = eval::load_corpus(&rt.dir)?;
+    for id in 0..n_requests {
+        let start = rng.below(corpus.len() - prompt_len - 1);
+        let prompt: Vec<u32> = corpus[start..start + prompt_len]
+            .iter()
+            .map(|t| t % vocab as u32)
+            .collect();
+        engine.submit(Request::new(id as u64, prompt, max_new, &variant));
+    }
+    engine.run()?;
+    println!("{}", engine.metrics.summary());
+    for f in engine.finished.iter().take(3) {
+        println!(
+            "  req {}: {} prompt toks -> {:?}...",
+            f.id,
+            f.prompt_len,
+            &f.generated[..f.generated.len().min(8)]
+        );
+    }
+    Ok(())
+}
+
+fn run_report(args: &Args) -> Result<()> {
+    match args.get_or("id", "all").as_str() {
+        "all" => report::all()?,
+        "table1" => report::table1(),
+        "table2" => report::table2(
+            args.usize_or("ppl-windows", 6),
+            args.usize_or("cloze-items", 16),
+        )?,
+        "table3" => report::table3(),
+        "table4" => report::table4(),
+        "fig1" => report::fig1(),
+        "fig3" => report::fig3(),
+        "fig9" => report::fig9(None),
+        "fig10" => report::fig10(),
+        other => bail!("unknown report id {other}"),
+    }
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mamba2-130m");
+    let Some(cfg) = ModelConfig::by_name(&model) else {
+        bail!("unknown model {model}");
+    };
+    let pm = PerfModel::new(AcceleratorConfig::default(), cfg.clone());
+    let seq_len = args.usize_or("seq-len", 512);
+    let batch = args.usize_or("batch", 1);
+    let p = pm.prefill(seq_len);
+    println!(
+        "prefill {model} L={seq_len}: {:.3} ms ({} cycles, bottleneck={}) {:.0} tok/s",
+        p.seconds * 1e3,
+        p.cycles,
+        p.bottleneck,
+        p.tokens_per_s
+    );
+    for (name, frac) in p.breakdown.fractions() {
+        println!("  {name:<10} {:.1}%", frac * 100.0);
+    }
+    let d = pm.decode(batch);
+    println!(
+        "decode {model} B={batch}: {:.3} ms/step, {:.2} tok/s ({})",
+        d.seconds_per_step * 1e3,
+        d.tokens_per_s,
+        if d.compute_bound { "compute-bound" } else { "DRAM-bound" }
+    );
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let dir = fastmamba::model::weights::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    let rt = Runtime::load_default()?;
+    let cfg = &rt.weights_host.cfg;
+    println!(
+        "serve model: {} (d_model={} layers={} heads={} vocab={})",
+        cfg.name, cfg.d_model, cfg.n_layer, cfg.nheads(), cfg.vocab_size
+    );
+    println!(
+        "artifacts: {} graphs; prefill buckets {:?}; decode batches {:?}",
+        rt.manifest.artifacts.len(),
+        rt.prefill_buckets(),
+        rt.decode_batches()
+    );
+    let acc = AcceleratorConfig::default();
+    println!(
+        "accelerator: {} MHz, {} linear MAC/cyc, {} conv MAC/cyc, {} ssm ops/cyc",
+        acc.clock_hz / 1_000_000,
+        acc.linear_macs_per_cycle(),
+        acc.conv_macs_per_cycle(),
+        acc.ssm_ops_per_cycle()
+    );
+    Ok(())
+}

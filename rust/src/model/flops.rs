@@ -1,0 +1,124 @@
+//! Analytical per-component operation counts for a Mamba2 forward pass —
+//! the common workload model behind the CPU baseline, the GPU roofline
+//! model (Fig. 1 / Fig. 9 / Table III), and the simulator's sanity checks.
+//!
+//! Counts are multiply-accumulates (MACs) for matmul-like ops and scalar
+//! elementwise operations otherwise, per the runtime-breakdown methodology
+//! of Fig. 1 (linear / conv / SSM / norm+SiLU).
+
+use crate::config::ModelConfig;
+
+/// Op counts for one forward pass, split by the paper's four components.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ComponentOps {
+    /// Linear-layer MACs (in_proj, out_proj, lm head).
+    pub linear_macs: f64,
+    /// Convolution MACs.
+    pub conv_macs: f64,
+    /// SSM elementwise ops (state update + readout + dt/abar prep).
+    pub ssm_ops: f64,
+    /// Nonlinear function evaluations routed through the NAU (exp+softplus).
+    pub nau_ops: f64,
+    /// Floating-point norm + SiLU elementwise ops.
+    pub norm_silu_ops: f64,
+}
+
+impl ComponentOps {
+    pub fn total(&self) -> f64 {
+        self.linear_macs + self.conv_macs + self.ssm_ops + self.nau_ops + self.norm_silu_ops
+    }
+}
+
+/// Per-token op counts for one layer.
+fn layer_ops_per_token(cfg: &ModelConfig) -> ComponentOps {
+    let d = cfg.d_model as f64;
+    let d_inner = cfg.d_inner() as f64;
+    let d_state = cfg.d_state as f64;
+    let conv_dim = cfg.conv_dim() as f64;
+    let nheads = cfg.nheads() as f64;
+    let k = cfg.d_conv as f64;
+    let d_in_proj = cfg.d_in_proj() as f64;
+
+    let linear_macs = d * d_in_proj + d_inner * d;
+    let conv_macs = conv_dim * k;
+    // state update: abar*h + (dt x) B over (nheads, headdim, d_state) = 2 MAC
+    // readout: h·C (1 MAC); total ≈ 3 ops per state element + feedthrough
+    let state_elems = nheads * cfg.headdim as f64 * d_state;
+    let ssm_ops = 3.0 * state_elems + 2.0 * d_inner;
+    let nau_ops = 2.0 * nheads; // softplus(dt) + exp(dt*a)
+    let norm_silu_ops = 2.0 * d + 3.0 * d_inner + conv_dim; // norms + silu + gate
+    ComponentOps { linear_macs, conv_macs, ssm_ops, nau_ops, norm_silu_ops }
+}
+
+/// Ops for a prefill over `seq_len` tokens (whole model incl. lm head).
+pub fn prefill_ops(cfg: &ModelConfig, seq_len: usize) -> ComponentOps {
+    let per_tok = layer_ops_per_token(cfg);
+    let l = seq_len as f64;
+    let n = cfg.n_layer as f64;
+    ComponentOps {
+        linear_macs: l * (n * per_tok.linear_macs
+            + cfg.vocab_size as f64 * cfg.d_model as f64),
+        conv_macs: l * n * per_tok.conv_macs,
+        ssm_ops: l * n * per_tok.ssm_ops,
+        nau_ops: l * n * per_tok.nau_ops,
+        norm_silu_ops: l * n * per_tok.norm_silu_ops + l * cfg.d_model as f64,
+    }
+}
+
+/// Ops for one decode step (single token, whole model incl. lm head).
+pub fn decode_ops(cfg: &ModelConfig) -> ComponentOps {
+    prefill_ops(cfg, 1)
+}
+
+/// Weight bytes touched by one decode step (every weight read once) — the
+/// quantity that makes GPU decode bandwidth-bound.
+pub fn decode_weight_bytes(cfg: &ModelConfig, bytes_per_weight: f64) -> f64 {
+    cfg.n_params() as f64 * bytes_per_weight
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_dominates_at_short_seq() {
+        // Fig. 1: at L=64 the linear layer is the largest component.
+        let cfg = ModelConfig::mamba2_130m();
+        let ops = prefill_ops(&cfg, 64);
+        assert!(ops.linear_macs > ops.ssm_ops);
+        assert!(ops.linear_macs > ops.conv_macs);
+    }
+
+    #[test]
+    fn ops_scale_linearly_with_seq() {
+        let cfg = ModelConfig::mamba2_130m();
+        let a = prefill_ops(&cfg, 128);
+        let b = prefill_ops(&cfg, 256);
+        assert!((b.total() / a.total() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ssm_share_grows_with_state() {
+        // larger d_state shifts work into the SSM block
+        let mut cfg = ModelConfig::mamba2_130m();
+        let base = prefill_ops(&cfg, 128);
+        cfg.d_state *= 2;
+        let big = prefill_ops(&cfg, 128);
+        assert!(big.ssm_ops / big.total() > base.ssm_ops / base.total());
+    }
+
+    #[test]
+    fn decode_bytes_dominated_by_params() {
+        let cfg = ModelConfig::mamba2_2_7b();
+        let b = decode_weight_bytes(&cfg, 2.0); // fp16
+        assert!(b > 4e9 && b < 8e9, "{b}"); // ~2.7B params * 2B
+    }
+
+    #[test]
+    fn nau_ops_count() {
+        let cfg = ModelConfig::mamba2_130m();
+        let ops = decode_ops(&cfg);
+        // 24 layers * 24 heads * 2 evaluations
+        assert_eq!(ops.nau_ops as u64, 24 * 24 * 2);
+    }
+}

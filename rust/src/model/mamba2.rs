@@ -1,0 +1,636 @@
+//! Mamba2 forward passes (prefill + recurrent decode) under the paper's five
+//! quantization variants — the Rust mirror of `python/compile/mamba2.py`.
+//!
+//! This implementation serves three roles:
+//! 1. **Golden model** — integration tests compare it against the PJRT
+//!    executables lowered from JAX.
+//! 2. **CPU baseline** — its measured single-thread throughput calibrates
+//!    the Fig. 9 CPU comparison.
+//! 3. **Table II evaluator** — the synthetic perplexity/accuracy harness
+//!    runs every variant through this code.
+
+use crate::config::{FixedSpec, ModelConfig};
+use crate::nonlinear::{self, PwlTable};
+use crate::quant::hadamard::{self, PreparedWeight};
+use crate::quant::{int8, pot};
+
+use super::weights::{LayerWeights, ModelWeights};
+
+/// The five Table II quantization configurations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Full precision (stands in for the paper's FP16 baseline).
+    Fp32,
+    /// Per-tensor absmax W8A8, linear layers only.
+    NormalQ,
+    /// SmoothQuant W8A8, linear layers only.
+    SmoothQ,
+    /// Hadamard W8A8 (Algorithm 1), linear layers only.
+    FastMambaLq,
+    /// Hadamard linears + PoT conv/SSM + PWL nonlinears — the accelerator's
+    /// exact arithmetic.
+    FastMamba,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 5] = [
+        Variant::Fp32,
+        Variant::NormalQ,
+        Variant::SmoothQ,
+        Variant::FastMambaLq,
+        Variant::FastMamba,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Fp32 => "fp32",
+            Variant::NormalQ => "normalq",
+            Variant::SmoothQ => "smoothq",
+            Variant::FastMambaLq => "fastmamba_lq",
+            Variant::FastMamba => "fastmamba",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|v| v.name() == s)
+    }
+
+    fn hadamard(&self) -> bool {
+        matches!(self, Variant::FastMambaLq | Variant::FastMamba)
+    }
+}
+
+/// Hadamard group size (must match `mamba2.HADAMARD_GROUP` in Python).
+pub const HADAMARD_GROUP: usize = 64;
+
+/// Per-request recurrent state (what the coordinator's state manager pools).
+#[derive(Debug, Clone)]
+pub struct DecodeState {
+    /// (n_layer, d_conv-1, conv_dim) rolling pre-conv window.
+    pub conv: Vec<f32>,
+    /// (n_layer, nheads, headdim, d_state) SSM hidden state.
+    pub ssm: Vec<f32>,
+}
+
+impl DecodeState {
+    pub fn zeros(cfg: &ModelConfig) -> Self {
+        Self {
+            conv: vec![0.0; cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()],
+            ssm: vec![0.0; cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state],
+        }
+    }
+
+    /// Bytes per request — the O(1) admission cost Mamba serving enjoys
+    /// instead of a length-proportional KV cache.
+    pub fn nbytes(cfg: &ModelConfig) -> usize {
+        4 * (cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()
+            + cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state)
+    }
+}
+
+/// A model bound to weights with per-variant prepared (offline-quantized)
+/// linear weights.
+pub struct Mamba2 {
+    pub w: ModelWeights,
+    pub spec: FixedSpec,
+    pwl: PwlTable,
+    /// (in_proj, out_proj, lm_head) Hadamard-prepared per layer; lazy.
+    prepared: Option<Prepared>,
+}
+
+struct Prepared {
+    in_proj: Vec<PreparedWeight>,
+    out_proj: Vec<PreparedWeight>,
+    lm_head: PreparedWeight,
+}
+
+impl Mamba2 {
+    pub fn new(w: ModelWeights) -> Self {
+        let spec = FixedSpec::default();
+        let pwl = PwlTable::new(&spec);
+        Self { w, spec, pwl, prepared: None }
+    }
+
+    fn cfg(&self) -> &ModelConfig {
+        &self.w.cfg
+    }
+
+    /// Offline weight preparation for the Hadamard variants (Algorithm 1
+    /// lines 6/8/11 run once, like the FPGA's weight preprocessing).
+    pub fn prepare(&mut self) {
+        if self.prepared.is_some() {
+            return;
+        }
+        let cfg = self.cfg().clone();
+        let mut in_proj = Vec::new();
+        let mut out_proj = Vec::new();
+        for lw in &self.w.layers {
+            in_proj.push(hadamard::prepare_weight(
+                &lw.in_proj_w, cfg.d_in_proj(), cfg.d_model, HADAMARD_GROUP));
+            out_proj.push(hadamard::prepare_weight(
+                &lw.out_proj_w, cfg.d_model, cfg.d_inner(), HADAMARD_GROUP));
+        }
+        let lm_head = hadamard::prepare_weight(
+            &self.w.embed, cfg.vocab_size, cfg.d_model, HADAMARD_GROUP);
+        self.prepared = Some(Prepared { in_proj, out_proj, lm_head });
+    }
+
+    // -- linear dispatch ----------------------------------------------------
+
+    fn linear(
+        &self,
+        x: &[f32],
+        rows: usize,
+        w: &[f32],
+        q: usize,
+        d: usize,
+        variant: Variant,
+        prepared: Option<&PreparedWeight>,
+        out: &mut [f32],
+    ) {
+        match variant {
+            Variant::Fp32 => {
+                for r in 0..rows {
+                    for j in 0..q {
+                        let mut acc = 0.0f32;
+                        let xr = &x[r * d..(r + 1) * d];
+                        let wr = &w[j * d..(j + 1) * d];
+                        for k in 0..d {
+                            acc += xr[k] * wr[k];
+                        }
+                        out[r * q + j] = acc;
+                    }
+                }
+            }
+            Variant::NormalQ => int8::normalq_linear(x, rows, w, q, d, None, out),
+            Variant::SmoothQ => {
+                int8::smoothq_linear(x, rows, w, q, d, None, 0.5, out)
+            }
+            Variant::FastMambaLq | Variant::FastMamba => match prepared {
+                Some(pw) => hadamard::hadamard_linear(x, rows, pw, None, out),
+                None => {
+                    let pw = hadamard::prepare_weight(w, q, d, HADAMARD_GROUP);
+                    hadamard::hadamard_linear(x, rows, &pw, None, out);
+                }
+            },
+        }
+    }
+
+    fn softplus(&self, x: f32, variant: Variant) -> f32 {
+        if variant == Variant::FastMamba {
+            nonlinear::softplus_approx(x, &self.pwl, &self.spec)
+        } else {
+            // numerically stable ln(1+e^x)
+            if x > 0.0 { x + (-x).exp().ln_1p() } else { x.exp().ln_1p() }
+        }
+    }
+
+    fn exp_neg(&self, x: f32, variant: Variant) -> f32 {
+        if variant == Variant::FastMamba {
+            nonlinear::exp_approx(x, &self.pwl, &self.spec)
+        } else {
+            x.exp()
+        }
+    }
+
+    // -- prefill -------------------------------------------------------------
+
+    /// Full-sequence forward.  Returns logits `(L, vocab)` and the decode
+    /// state seeded for continuation.
+    pub fn prefill(&self, tokens: &[u32], variant: Variant) -> (Vec<f32>, DecodeState) {
+        let cfg = self.cfg().clone();
+        let l = tokens.len();
+        let d = cfg.d_model;
+        let mut x = vec![0.0f32; l * d];
+        for (t, tok) in tokens.iter().enumerate() {
+            x[t * d..(t + 1) * d]
+                .copy_from_slice(&self.w.embed[*tok as usize * d..(*tok as usize + 1) * d]);
+        }
+        let mut state = DecodeState::zeros(&cfg);
+        for (li, lw) in self.w.layers.iter().enumerate() {
+            self.block_prefill(li, lw, &mut x, l, variant, &mut state);
+        }
+        // final norm + tied lm head
+        for t in 0..l {
+            nonlinear::rmsnorm(&mut x[t * d..(t + 1) * d], &self.w.norm_f_w, 1e-5);
+        }
+        let mut logits = vec![0.0f32; l * cfg.vocab_size];
+        let pw = self.prepared.as_ref().map(|p| &p.lm_head);
+        self.linear(&x, l, &self.w.embed, cfg.vocab_size, d,
+                    if variant.hadamard() { variant } else { variant },
+                    if variant.hadamard() { pw } else { None }, &mut logits);
+        (logits, state)
+    }
+
+    fn block_prefill(
+        &self,
+        li: usize,
+        lw: &LayerWeights,
+        x: &mut [f32],
+        l: usize,
+        variant: Variant,
+        state: &mut DecodeState,
+    ) {
+        let cfg = self.cfg();
+        let d = cfg.d_model;
+        let d_inner = cfg.d_inner();
+        let d_state = cfg.d_state;
+        let conv_dim = cfg.conv_dim();
+        let nheads = cfg.nheads();
+        let headdim = cfg.headdim;
+        let k = cfg.d_conv;
+        let d_in_proj = cfg.d_in_proj();
+
+        // pre-norm
+        let mut xn = x.to_vec();
+        for t in 0..l {
+            nonlinear::rmsnorm(&mut xn[t * d..(t + 1) * d], &lw.norm_w, 1e-5);
+        }
+
+        // in_proj
+        let mut zxbcdt = vec![0.0f32; l * d_in_proj];
+        let pw = self.prepared.as_ref().map(|p| &p.in_proj[li]);
+        self.linear(&xn, l, &lw.in_proj_w, d_in_proj, d, variant,
+                    if variant.hadamard() { pw } else { None }, &mut zxbcdt);
+
+        // split z / xBC / dt
+        let mut z = vec![0.0f32; l * d_inner];
+        let mut xbc_pre = vec![0.0f32; l * conv_dim];
+        let mut dt_raw = vec![0.0f32; l * nheads];
+        for t in 0..l {
+            let row = &zxbcdt[t * d_in_proj..(t + 1) * d_in_proj];
+            z[t * d_inner..(t + 1) * d_inner].copy_from_slice(&row[..d_inner]);
+            xbc_pre[t * conv_dim..(t + 1) * conv_dim]
+                .copy_from_slice(&row[d_inner..d_inner + conv_dim]);
+            dt_raw[t * nheads..(t + 1) * nheads]
+                .copy_from_slice(&row[d_inner + conv_dim..]);
+        }
+
+        // conv state tail = last K-1 pre-conv rows (zero-padded)
+        {
+            let cs = &mut state.conv
+                [li * (k - 1) * conv_dim..(li + 1) * (k - 1) * conv_dim];
+            for i in 0..k - 1 {
+                let t = l as i64 - (k - 1 - i) as i64;
+                let dst = &mut cs[i * conv_dim..(i + 1) * conv_dim];
+                if t >= 0 {
+                    dst.copy_from_slice(
+                        &xbc_pre[t as usize * conv_dim..(t as usize + 1) * conv_dim]);
+                } else {
+                    dst.fill(0.0);
+                }
+            }
+        }
+
+        // depthwise causal conv (+PoT for FastMamba) then SiLU
+        let mut conv_w = lw.conv_w.clone();
+        let mut xbc_in = xbc_pre.clone();
+        if variant == Variant::FastMamba {
+            pot::pot_fake_quant_grouped(&mut conv_w, k, 16); // per-channel taps
+            pot::pot_fake_quant_per_col(&mut xbc_in, l, conv_dim, 16);
+        }
+        let mut xbc = vec![0.0f32; l * conv_dim];
+        for t in 0..l {
+            for c in 0..conv_dim {
+                let mut acc = lw.conv_b[c];
+                for tap in 0..k {
+                    let ti = t as i64 - (k - 1 - tap) as i64;
+                    if ti >= 0 {
+                        acc += conv_w[c * k + tap] * xbc_in[ti as usize * conv_dim + c];
+                    }
+                }
+                xbc[t * conv_dim + c] = nonlinear::silu(acc);
+            }
+        }
+
+        // split x / B / C
+        let mut xh = vec![0.0f32; l * d_inner];
+        let mut b_mat = vec![0.0f32; l * d_state];
+        let mut c_mat = vec![0.0f32; l * d_state];
+        for t in 0..l {
+            let row = &xbc[t * conv_dim..(t + 1) * conv_dim];
+            xh[t * d_inner..(t + 1) * d_inner].copy_from_slice(&row[..d_inner]);
+            b_mat[t * d_state..(t + 1) * d_state]
+                .copy_from_slice(&row[d_inner..d_inner + d_state]);
+            c_mat[t * d_state..(t + 1) * d_state]
+                .copy_from_slice(&row[d_inner + d_state..]);
+        }
+
+        // Step 1-2: dt = softplus(dt_raw + bias); abar = exp(dt * a)
+        let mut dt = vec![0.0f32; l * nheads];
+        let mut abar = vec![0.0f32; l * nheads];
+        for t in 0..l {
+            for h in 0..nheads {
+                let dtv = self.softplus(dt_raw[t * nheads + h] + lw.dt_bias[h], variant);
+                dt[t * nheads + h] = dtv;
+                abar[t * nheads + h] = self.exp_neg(-lw.a_log[h].exp() * dtv, variant);
+            }
+        }
+
+        if variant == Variant::FastMamba {
+            // fine-grained PoT on the SSM operands (per head / per tensor)
+            pot::pot_fake_quant_per_col(&mut dt, l, nheads, 16);
+            pot::pot_fake_quant_per_col(&mut abar, l, nheads, 16);
+            pot::pot_fake_quant(&mut b_mat, 16);
+            pot::pot_fake_quant(&mut c_mat, 16);
+            // per-head x: heads are contiguous headdim slices of each row
+            for h in 0..nheads {
+                let mut am = 0.0f32;
+                for t in 0..l {
+                    for p in 0..headdim {
+                        am = am.max(xh[t * d_inner + h * headdim + p].abs());
+                    }
+                }
+                let pexp = pot::pot_exponent(am, 16);
+                for t in 0..l {
+                    for p in 0..headdim {
+                        let v = &mut xh[t * d_inner + h * headdim + p];
+                        *v = pot::pot_fake_quant_scalar(*v, pexp, 16);
+                    }
+                }
+            }
+        }
+
+        // Step 3: the recurrence (H stays "on chip" per head)
+        let mut y = vec![0.0f32; l * d_inner];
+        let ssm = &mut state.ssm[li * nheads * headdim * d_state
+            ..(li + 1) * nheads * headdim * d_state];
+        for h in 0..nheads {
+            let hst = &mut ssm[h * headdim * d_state..(h + 1) * headdim * d_state];
+            for t in 0..l {
+                let ab = abar[t * nheads + h];
+                let dtv = dt[t * nheads + h];
+                let brow = &b_mat[t * d_state..(t + 1) * d_state];
+                let crow = &c_mat[t * d_state..(t + 1) * d_state];
+                for p in 0..headdim {
+                    let xv = dtv * xh[t * d_inner + h * headdim + p];
+                    let hrow = &mut hst[p * d_state..(p + 1) * d_state];
+                    let mut dot = 0.0f32;
+                    for n in 0..d_state {
+                        let hv = ab * hrow[n] + xv * brow[n];
+                        hrow[n] = hv;
+                        dot += hv * crow[n];
+                    }
+                    y[t * d_inner + h * headdim + p] =
+                        dot + lw.d[h] * xh[t * d_inner + h * headdim + p];
+                }
+            }
+        }
+
+        // gated RMSNorm + out_proj + residual
+        let pw_out = self.prepared.as_ref().map(|p| &p.out_proj[li]);
+        let mut out = vec![0.0f32; l * d];
+        for t in 0..l {
+            nonlinear::gated_rmsnorm(
+                &mut y[t * d_inner..(t + 1) * d_inner],
+                &z[t * d_inner..(t + 1) * d_inner],
+                &lw.norm_g_w,
+                1e-5,
+            );
+        }
+        self.linear(&y, l, &lw.out_proj_w, d, d_inner, variant,
+                    if variant.hadamard() { pw_out } else { None }, &mut out);
+        for i in 0..l * d {
+            x[i] += out[i];
+        }
+    }
+
+    // -- decode ---------------------------------------------------------------
+
+    /// One recurrent step.  Returns logits `(vocab,)`; `state` is updated.
+    pub fn decode_step(
+        &self,
+        token: u32,
+        state: &mut DecodeState,
+        variant: Variant,
+    ) -> Vec<f32> {
+        let cfg = self.cfg().clone();
+        let d = cfg.d_model;
+        let mut x =
+            self.w.embed[token as usize * d..(token as usize + 1) * d].to_vec();
+        for (li, lw) in self.w.layers.iter().enumerate() {
+            self.block_decode(li, lw, &mut x, variant, state);
+        }
+        nonlinear::rmsnorm(&mut x, &self.w.norm_f_w, 1e-5);
+        let mut logits = vec![0.0f32; cfg.vocab_size];
+        let pw = self.prepared.as_ref().map(|p| &p.lm_head);
+        self.linear(&x, 1, &self.w.embed, cfg.vocab_size, d, variant,
+                    if variant.hadamard() { pw } else { None }, &mut logits);
+        logits
+    }
+
+    fn block_decode(
+        &self,
+        li: usize,
+        lw: &LayerWeights,
+        x: &mut [f32],
+        variant: Variant,
+        state: &mut DecodeState,
+    ) {
+        let cfg = self.cfg();
+        let d = cfg.d_model;
+        let d_inner = cfg.d_inner();
+        let d_state = cfg.d_state;
+        let conv_dim = cfg.conv_dim();
+        let nheads = cfg.nheads();
+        let headdim = cfg.headdim;
+        let k = cfg.d_conv;
+        let d_in_proj = cfg.d_in_proj();
+
+        let mut xn = x.to_vec();
+        nonlinear::rmsnorm(&mut xn, &lw.norm_w, 1e-5);
+
+        let mut zxbcdt = vec![0.0f32; d_in_proj];
+        let pw = self.prepared.as_ref().map(|p| &p.in_proj[li]);
+        self.linear(&xn, 1, &lw.in_proj_w, d_in_proj, d, variant,
+                    if variant.hadamard() { pw } else { None }, &mut zxbcdt);
+
+        let z = &zxbcdt[..d_inner];
+        let xbc_new = &zxbcdt[d_inner..d_inner + conv_dim];
+        let dt_raw = &zxbcdt[d_inner + conv_dim..];
+
+        // rolling conv window: state rows [0..k-2] ++ new row
+        let cs_off = li * (k - 1) * conv_dim;
+        let mut window = vec![0.0f32; k * conv_dim];
+        window[..(k - 1) * conv_dim]
+            .copy_from_slice(&state.conv[cs_off..cs_off + (k - 1) * conv_dim]);
+        window[(k - 1) * conv_dim..].copy_from_slice(xbc_new);
+
+        let mut conv_w = lw.conv_w.clone();
+        let mut window_in = window.clone();
+        if variant == Variant::FastMamba {
+            pot::pot_fake_quant_grouped(&mut conv_w, k, 16);
+            pot::pot_fake_quant_per_col(&mut window_in, k, conv_dim, 16);
+        }
+        let mut xbc = vec![0.0f32; conv_dim];
+        for c in 0..conv_dim {
+            let mut acc = lw.conv_b[c];
+            for tap in 0..k {
+                acc += conv_w[c * k + tap] * window_in[tap * conv_dim + c];
+            }
+            xbc[c] = nonlinear::silu(acc);
+        }
+        // advance state
+        state.conv[cs_off..cs_off + (k - 1) * conv_dim]
+            .copy_from_slice(&window[conv_dim..]);
+
+        let mut xh = xbc[..d_inner].to_vec();
+        let mut b_t = xbc[d_inner..d_inner + d_state].to_vec();
+        let mut c_t = xbc[d_inner + d_state..].to_vec();
+
+        let mut dt = vec![0.0f32; nheads];
+        let mut abar = vec![0.0f32; nheads];
+        for h in 0..nheads {
+            let dtv = self.softplus(dt_raw[h] + lw.dt_bias[h], variant);
+            dt[h] = dtv;
+            abar[h] = self.exp_neg(-lw.a_log[h].exp() * dtv, variant);
+        }
+
+        if variant == Variant::FastMamba {
+            pot::pot_fake_quant_grouped(&mut xh, headdim, 16); // per head
+            pot::pot_fake_quant(&mut b_t, 16);
+            pot::pot_fake_quant(&mut c_t, 16);
+            pot::pot_fake_quant(&mut dt, 16);
+            pot::pot_fake_quant(&mut abar, 16);
+        }
+
+        let ssm_off = li * nheads * headdim * d_state;
+        let mut y = vec![0.0f32; d_inner];
+        for h in 0..nheads {
+            for p in 0..headdim {
+                let xv = dt[h] * xh[h * headdim + p];
+                let hrow = &mut state.ssm[ssm_off + (h * headdim + p) * d_state
+                    ..ssm_off + (h * headdim + p + 1) * d_state];
+                let mut dot = 0.0f32;
+                for n in 0..d_state {
+                    let hv = abar[h] * hrow[n] + xv * b_t[n];
+                    hrow[n] = hv;
+                    dot += hv * c_t[n];
+                }
+                y[h * headdim + p] = dot + lw.d[h] * xh[h * headdim + p];
+            }
+        }
+
+        nonlinear::gated_rmsnorm(&mut y, z, &lw.norm_g_w, 1e-5);
+        let pw_out = self.prepared.as_ref().map(|p| &p.out_proj[li]);
+        let mut out = vec![0.0f32; d];
+        self.linear(&y, 1, &lw.out_proj_w, d, d_inner, variant,
+                    if variant.hadamard() { pw_out } else { None }, &mut out);
+        for i in 0..d {
+            x[i] += out[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> Mamba2 {
+        let cfg = ModelConfig::tiny();
+        Mamba2::new(ModelWeights::random(&cfg, 3))
+    }
+
+    fn toks(n: usize, seed: u64) -> Vec<u32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s % 512) as u32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prefill_shapes_and_finite() {
+        let m = tiny_model();
+        let t = toks(12, 1);
+        let (logits, state) = m.prefill(&t, Variant::Fp32);
+        assert_eq!(logits.len(), 12 * 512);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(state.ssm.iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn decode_matches_prefill_fp32() {
+        let m = tiny_model();
+        let t = toks(10, 2);
+        let (logits_full, _) = m.prefill(&t, Variant::Fp32);
+        let (_, mut state) = m.prefill(&t[..9], Variant::Fp32);
+        let logits_step = m.decode_step(t[9], &mut state, Variant::Fp32);
+        let last = &logits_full[9 * 512..];
+        let mut max_err = 0.0f32;
+        for (a, b) in logits_step.iter().zip(last) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 1e-3, "max err {max_err}");
+    }
+
+    #[test]
+    fn pure_decode_chain_matches_prefill() {
+        let m = tiny_model();
+        let t = toks(6, 3);
+        let (logits_full, _) = m.prefill(&t, Variant::Fp32);
+        let mut state = DecodeState::zeros(&m.w.cfg);
+        for (i, tok) in t.iter().enumerate() {
+            let lg = m.decode_step(*tok, &mut state, Variant::Fp32);
+            let want = &logits_full[i * 512..(i + 1) * 512];
+            for (a, b) in lg.iter().zip(want) {
+                assert!((a - b).abs() < 1e-3, "t={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_variants_finite_and_distinct() {
+        let mut m = tiny_model();
+        m.prepare();
+        let t = toks(8, 4);
+        let (fp, _) = m.prefill(&t, Variant::Fp32);
+        for v in [Variant::NormalQ, Variant::SmoothQ, Variant::FastMambaLq,
+                  Variant::FastMamba] {
+            let (lg, _) = m.prefill(&t, v);
+            assert!(lg.iter().all(|x| x.is_finite()), "{v:?}");
+            let diff: f32 = lg.iter().zip(&fp).map(|(a, b)| (a - b).abs()).sum();
+            assert!(diff > 0.0, "{v:?} identical to fp32");
+            // and close: quantization, not corruption
+            let rms_fp = (fp.iter().map(|v| v * v).sum::<f32>() / fp.len() as f32).sqrt();
+            let rms_e = (lg.iter().zip(&fp).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+                / fp.len() as f32)
+                .sqrt();
+            assert!(rms_e < 0.5 * rms_fp, "{v:?} rel err {}", rms_e / rms_fp);
+        }
+    }
+
+    #[test]
+    fn hadamard_beats_normalq_with_outliers() {
+        let cfg = ModelConfig::tiny();
+        let mut w = ModelWeights::random(&cfg, 5);
+        w.inject_outliers(10, 12.0, 6);
+        let mut m = Mamba2::new(w);
+        m.prepare();
+        let t = toks(16, 7);
+        let (fp, _) = m.prefill(&t, Variant::Fp32);
+        let err = |v: Variant| -> f64 {
+            let (lg, _) = m.prefill(&t, v);
+            lg.iter().zip(&fp).map(|(a, b)| ((a - b) * (a - b)) as f64).sum::<f64>()
+        };
+        let e_norm = err(Variant::NormalQ);
+        let e_lq = err(Variant::FastMambaLq);
+        assert!(e_lq < e_norm, "hadamard {e_lq} vs normalq {e_norm}");
+    }
+
+    #[test]
+    fn state_bytes_constant_in_seq_len() {
+        let cfg = ModelConfig::tiny();
+        // O(1) state: same size regardless of how long the prompt was
+        let m = tiny_model();
+        let (_, s1) = m.prefill(&toks(4, 8), Variant::Fp32);
+        let (_, s2) = m.prefill(&toks(64, 8), Variant::Fp32);
+        assert_eq!(s1.ssm.len(), s2.ssm.len());
+        assert_eq!(s1.conv.len(), s2.conv.len());
+        assert_eq!(DecodeState::nbytes(&cfg), 4 * (s1.ssm.len() + s1.conv.len()));
+    }
+}

@@ -1,0 +1,14 @@
+//! Native Mamba2 implementation — the fp32 golden model, the measured CPU
+//! baseline, and the quantization-variant evaluator behind Table II.
+//!
+//! [`weights`] loads the build-time-trained tiny checkpoint from
+//! `artifacts/`; [`mamba2`] runs prefill/decode under any of the paper's
+//! five quantization variants; [`flops`] is the analytical op-count model
+//! shared by the CPU/GPU baselines and the simulator.
+
+pub mod flops;
+pub mod mamba2;
+pub mod weights;
+
+pub use mamba2::{Mamba2, Variant};
+pub use weights::ModelWeights;

@@ -1,0 +1,327 @@
+//! Weight loading: the `artifacts/` checkpoint written by the AOT pipeline
+//! (manifest order == `mamba2.flatten_params` order), plus deterministic
+//! synthetic weights for the large paper configurations we cannot download.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Per-layer parameter tensors (row-major).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub norm_w: Vec<f32>,     // (d_model,)
+    pub in_proj_w: Vec<f32>,  // (d_in_proj, d_model)
+    pub conv_w: Vec<f32>,     // (conv_dim, d_conv)
+    pub conv_b: Vec<f32>,     // (conv_dim,)
+    pub dt_bias: Vec<f32>,    // (nheads,)
+    pub a_log: Vec<f32>,      // (nheads,)
+    pub d: Vec<f32>,          // (nheads,)
+    pub norm_g_w: Vec<f32>,   // (d_inner,)
+    pub out_proj_w: Vec<f32>, // (d_model, d_inner)
+}
+
+/// Full model checkpoint (tied embedding).
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    pub embed: Vec<f32>, // (vocab, d_model)
+    pub norm_f_w: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+}
+
+/// One parameter entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestParam {
+    pub index: usize,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub file: String,
+}
+
+/// One lowered-graph entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestArtifact {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub variant: Option<String>,
+    pub seq_len: Option<usize>,
+    pub batch: Option<usize>,
+    pub n_params: Option<usize>,
+    /// number of prepared-weight inputs (Hadamard variants; 0 for fp32)
+    pub n_prepared: usize,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub serve_config: String,
+    pub prefill_lens: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+    pub variants: Vec<String>,
+    pub params: Vec<ManifestParam>,
+    pub artifacts: Vec<ManifestArtifact>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let text = fs::read_to_string(artifacts_dir.join("manifest.json"))
+            .map_err(|e| anyhow!("manifest.json missing (run `make artifacts`): {e}"))?;
+        let v = Json::parse(&text)?;
+        let usizes = |arr: &[Json]| -> Vec<usize> {
+            arr.iter().filter_map(Json::as_usize).collect()
+        };
+        let params = v
+            .arr_field("params")?
+            .iter()
+            .map(|p| {
+                Ok(ManifestParam {
+                    index: p.usize_field("index")?,
+                    name: p.str_field("name")?.to_string(),
+                    shape: usizes(p.arr_field("shape")?),
+                    file: p.str_field("file")?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = v
+            .arr_field("artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ManifestArtifact {
+                    name: a.str_field("name")?.to_string(),
+                    file: a.str_field("file")?.to_string(),
+                    kind: a.str_field("kind")?.to_string(),
+                    variant: a.get("variant").and_then(Json::as_str).map(String::from),
+                    seq_len: a.get("seq_len").and_then(Json::as_usize),
+                    batch: a.get("batch").and_then(Json::as_usize),
+                    n_params: a.get("n_params").and_then(Json::as_usize),
+                    n_prepared: a.get("n_prepared").and_then(Json::as_usize).unwrap_or(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            serve_config: v.str_field("serve_config")?.to_string(),
+            prefill_lens: usizes(v.arr_field("prefill_lens")?),
+            decode_batches: usizes(v.arr_field("decode_batches")?),
+            variants: v
+                .arr_field("variants")?
+                .iter()
+                .filter_map(Json::as_str)
+                .map(String::from)
+                .collect(),
+            params,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ManifestArtifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+fn read_f32_file(path: &Path, expect: usize) -> Result<Vec<f32>> {
+    let bytes = fs::read(path)?;
+    ensure!(
+        bytes.len() == expect * 4,
+        "{}: expected {} f32s, file has {} bytes",
+        path.display(),
+        expect,
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl ModelWeights {
+    /// Load the trained tiny checkpoint from `artifacts/`.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let cfg = ModelConfig::by_name(&manifest.serve_config)
+            .ok_or_else(|| anyhow!("unknown config {}", manifest.serve_config))?;
+
+        let get = |name: &str| -> Result<Vec<f32>> {
+            let p = manifest
+                .params
+                .iter()
+                .find(|p| p.name == name)
+                .ok_or_else(|| anyhow!("param {name} not in manifest"))?;
+            let n: usize = p.shape.iter().product::<usize>().max(1);
+            read_f32_file(&artifacts_dir.join(&p.file), n)
+        };
+
+        let mut layers = Vec::with_capacity(cfg.n_layer);
+        for i in 0..cfg.n_layer {
+            layers.push(LayerWeights {
+                norm_w: get(&format!("layers.{i}.norm_w"))?,
+                in_proj_w: get(&format!("layers.{i}.in_proj_w"))?,
+                conv_w: get(&format!("layers.{i}.conv_w"))?,
+                conv_b: get(&format!("layers.{i}.conv_b"))?,
+                dt_bias: get(&format!("layers.{i}.dt_bias"))?,
+                a_log: get(&format!("layers.{i}.a_log"))?,
+                d: get(&format!("layers.{i}.d"))?,
+                norm_g_w: get(&format!("layers.{i}.norm_g_w"))?,
+                out_proj_w: get(&format!("layers.{i}.out_proj_w"))?,
+            });
+        }
+        Ok(Self {
+            embed: get("embed")?,
+            norm_f_w: get("norm_f_w")?,
+            layers,
+            cfg,
+        })
+    }
+
+    /// Flat parameter list in manifest order (what the PJRT executables take).
+    pub fn flat(&self) -> Vec<(&'static str, &[f32])> {
+        let mut out: Vec<(&'static str, &[f32])> =
+            vec![("embed", &self.embed), ("norm_f_w", &self.norm_f_w)];
+        for lw in &self.layers {
+            out.push(("norm_w", &lw.norm_w));
+            out.push(("in_proj_w", &lw.in_proj_w));
+            out.push(("conv_w", &lw.conv_w));
+            out.push(("conv_b", &lw.conv_b));
+            out.push(("dt_bias", &lw.dt_bias));
+            out.push(("a_log", &lw.a_log));
+            out.push(("d", &lw.d));
+            out.push(("norm_g_w", &lw.norm_g_w));
+            out.push(("out_proj_w", &lw.out_proj_w));
+        }
+        out
+    }
+
+    /// Deterministic synthetic weights with Mamba2's init statistics — used
+    /// for the 130M-dimension benchmarks where no checkpoint exists.
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::with_capacity(cfg.n_layer);
+        for _ in 0..cfg.n_layer {
+            let dt: Vec<f32> = (0..cfg.nheads())
+                .map(|_| rng.range_f64((1e-3f64).ln(), (1e-1f64).ln()).exp() as f32)
+                .collect();
+            layers.push(LayerWeights {
+                norm_w: vec![1.0; cfg.d_model],
+                in_proj_w: rng.normal_vec(cfg.d_in_proj() * cfg.d_model, 0.02),
+                conv_w: rng.normal_vec(cfg.conv_dim() * cfg.d_conv, 0.3),
+                conv_b: vec![0.0; cfg.conv_dim()],
+                dt_bias: dt.iter().map(|d| d + (-(-d).exp_m1()).ln()).collect(),
+                a_log: (0..cfg.nheads())
+                    .map(|_| (rng.range_f64(1.0, 16.0) as f32).ln())
+                    .collect(),
+                d: vec![1.0; cfg.nheads()],
+                norm_g_w: vec![1.0; cfg.d_inner()],
+                out_proj_w: rng.normal_vec(cfg.d_model * cfg.d_inner(), 0.02),
+            });
+        }
+        Self {
+            embed: rng.normal_vec(cfg.vocab_size * cfg.d_model, 0.02),
+            norm_f_w: vec![1.0; cfg.d_model],
+            layers,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Inject per-channel activation outliers (scale RMSNorm gains) — the
+    /// Fig. 3 heavy-tail generator used by synthetic accuracy experiments.
+    pub fn inject_outliers(&mut self, n_channels: usize, gain: f32, seed: u64) {
+        let mut rng = Rng::new(seed);
+        for lw in &mut self.layers {
+            for _ in 0..n_channels {
+                let idx = rng.below(lw.norm_w.len());
+                lw.norm_w[idx] *= gain;
+            }
+        }
+    }
+}
+
+/// Default artifacts directory (repo root), overridable via FASTMAMBA_ARTIFACTS.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("FASTMAMBA_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // Look upward from CWD for an `artifacts/manifest.json`.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_weights_have_right_shapes() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::random(&cfg, 0);
+        assert_eq!(w.embed.len(), cfg.vocab_size * cfg.d_model);
+        assert_eq!(w.layers.len(), cfg.n_layer);
+        let lw = &w.layers[0];
+        assert_eq!(lw.in_proj_w.len(), cfg.d_in_proj() * cfg.d_model);
+        assert_eq!(lw.conv_w.len(), cfg.conv_dim() * cfg.d_conv);
+        assert_eq!(lw.out_proj_w.len(), cfg.d_model * cfg.d_inner());
+    }
+
+    #[test]
+    fn random_weights_deterministic() {
+        let cfg = ModelConfig::tiny();
+        let a = ModelWeights::random(&cfg, 7);
+        let b = ModelWeights::random(&cfg, 7);
+        assert_eq!(a.embed, b.embed);
+        assert_eq!(a.layers[1].in_proj_w, b.layers[1].in_proj_w);
+    }
+
+    #[test]
+    fn flat_order_matches_python_contract() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::random(&cfg, 0);
+        let flat = w.flat();
+        assert_eq!(flat.len(), 2 + 9 * cfg.n_layer);
+        assert_eq!(flat[0].0, "embed");
+        assert_eq!(flat[2].0, "norm_w");
+        assert_eq!(flat[10].0, "out_proj_w");
+    }
+
+    #[test]
+    fn outlier_injection_changes_gains() {
+        let cfg = ModelConfig::tiny();
+        let mut w = ModelWeights::random(&cfg, 0);
+        w.inject_outliers(4, 8.0, 1);
+        let big = w.layers[0].norm_w.iter().filter(|v| **v > 4.0).count();
+        assert!(big >= 1);
+    }
+
+    #[test]
+    fn loads_artifacts_checkpoint_if_present() {
+        let dir = artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let w = ModelWeights::load(&dir).expect("load failed");
+            assert_eq!(w.cfg.name, "mamba2-tiny");
+            let s: f32 = w.layers[0].in_proj_w.iter().map(|v| v.abs()).sum();
+            assert!(s > 0.0);
+        }
+    }
+
+    #[test]
+    fn manifest_artifact_lookup_if_present() {
+        let dir = artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifact("mamba2-tiny_decode_fp32_B1").is_some());
+            assert!(m.artifact("missing").is_none());
+            assert_eq!(m.params.len(), 2 + 9 * 4);
+        }
+    }
+}

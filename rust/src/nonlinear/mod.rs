@@ -1,0 +1,170 @@
+//! Nonlinear approximation algorithms (paper §III-B, Eq. 3–6) and the float
+//! nonlinears the accelerator keeps in floating point (RMSNorm, SiLU).
+//!
+//! [`exp_fixed`] / [`softplus_fixed`] are the *bit-exact* mirror of the
+//! Python NAU datapath (`kernels/nonlinear.py` / `kernels/ref.py`): same
+//! Q6.10 carry, same (1.0111)₂ log2(e), same 8-segment PWL coefficients,
+//! same floor shifts.  Integration tests assert Rust == Pallas == reference
+//! across the full 16-bit input range.
+
+pub mod pwl;
+
+use crate::config::FixedSpec;
+use crate::quant::fixed::{from_fixed, to_fixed};
+pub use pwl::PwlTable;
+
+/// Eq. 3 — e^x for x ≤ 0 on the fixed-point datapath.
+///
+/// `t = (x · log2e) >> F`; split `t = u + v`, `u ∈ Z≤0`, `v ∈ (-1, 0]`;
+/// `2^v` by 8-segment first-order PWL; result `= 2^v >> |u|`.
+pub fn exp_fixed(x_fx: i32, table: &PwlTable, spec: &FixedSpec) -> i32 {
+    let f = spec.frac_bits;
+    let cf = spec.coeff_frac_bits;
+    let t = (x_fx as i64 * spec.log2e_fx() as i64 >> f) as i32; // arithmetic
+    let neg = -t; // ≥ 0 for x ≤ 0
+    let u_abs = neg >> f;
+    let rem = neg & (spec.scale() - 1);
+    let seg_shift = f - spec.pwl_segments.trailing_zeros();
+    let seg = (rem >> seg_shift) as usize;
+    let frac = rem - ((seg as i32) << seg_shift);
+    let val_q = table.intercept[seg] + table.slope[seg] * frac; // Q1.cf
+    if u_abs >= 30 {
+        0
+    } else {
+        (val_q >> u_abs) >> (cf - f)
+    }
+}
+
+/// Eq. 6 — SoftPlus on fixed point, reusing the exp datapath (Fig. 8):
+/// `x ≤ 0 → e^x`;  `x > 0 → x + e^(−x)` (RPU negate + delay + post-add).
+pub fn softplus_fixed(x_fx: i32, table: &PwlTable, spec: &FixedSpec) -> i32 {
+    if x_fx > 0 {
+        x_fx + exp_fixed(-x_fx, table, spec)
+    } else {
+        exp_fixed(x_fx, table, spec)
+    }
+}
+
+/// Float wrapper of [`exp_fixed`] (quantize → NAU → dequantize).
+pub fn exp_approx(x: f32, table: &PwlTable, spec: &FixedSpec) -> f32 {
+    from_fixed(exp_fixed(to_fixed(x.min(0.0), spec), table, spec), spec)
+}
+
+/// Float wrapper of [`softplus_fixed`].
+pub fn softplus_approx(x: f32, table: &PwlTable, spec: &FixedSpec) -> f32 {
+    from_fixed(softplus_fixed(to_fixed(x, spec), table, spec), spec)
+}
+
+// ---------------------------------------------------------------------------
+// Floating-point nonlinears (the paper's "floating-point computing group")
+// ---------------------------------------------------------------------------
+
+/// SiLU activation x·σ(x).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// RMS normalization with gain `w`, in place over one feature vector.
+pub fn rmsnorm(x: &mut [f32], w: &[f32], eps: f32) {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    for (v, g) in x.iter_mut().zip(w) {
+        *v *= r * g;
+    }
+}
+
+/// Mamba2's gated RMSNorm: `rmsnorm(y ⊙ silu(z)) ⊙ w`.
+pub fn gated_rmsnorm(y: &mut [f32], z: &[f32], w: &[f32], eps: f32) {
+    for (v, zi) in y.iter_mut().zip(z) {
+        *v *= silu(*zi);
+    }
+    rmsnorm(y, w, eps);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (PwlTable, FixedSpec) {
+        let spec = FixedSpec::default();
+        (PwlTable::new(&spec), spec)
+    }
+
+    #[test]
+    fn exp_of_zero_is_one() {
+        let (t, s) = setup();
+        assert_eq!(exp_fixed(0, &t, &s), s.scale());
+    }
+
+    #[test]
+    fn exp_monotone_and_bounded() {
+        let (t, s) = setup();
+        let mut prev = i32::MAX;
+        for k in 0..2000 {
+            let v = exp_fixed(-k * 13, &t, &s);
+            assert!(v <= prev);
+            assert!((0..=s.scale()).contains(&v));
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn exp_accuracy_vs_true() {
+        let (t, s) = setup();
+        let mut max_err = 0.0f32;
+        for i in 0..4000 {
+            let x = -12.0 * i as f32 / 4000.0;
+            let err = (exp_approx(x, &t, &s) - x.exp()).abs();
+            max_err = max_err.max(err);
+        }
+        assert!(max_err < 4e-3, "max err {max_err}");
+    }
+
+    #[test]
+    fn softplus_symmetry_exact() {
+        // Eq. 4 holds exactly in fixed point: SP(x) - SP(-x) == x.
+        let (t, s) = setup();
+        for k in (-16000..16000).step_by(37) {
+            assert_eq!(
+                softplus_fixed(k, &t, &s) - softplus_fixed(-k, &t, &s),
+                k
+            );
+        }
+    }
+
+    #[test]
+    fn softplus_accuracy_within_paper_band() {
+        // ln(1+e^x) ≈ e^x (Eq. 5) carries ≤ 1-ln2 ≈ 0.307 intrinsic error.
+        let (t, s) = setup();
+        for i in 0..2000 {
+            let x = -10.0 + 20.0 * i as f32 / 2000.0;
+            let err = (softplus_approx(x, &t, &s) - (1.0 + x.exp()).ln()).abs();
+            assert!(err < 0.32, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn silu_known_values() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!((silu(1.0) - 0.731_058_6).abs() < 1e-5);
+        assert!(silu(-20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_unit_output_norm() {
+        let mut x = vec![3.0f32, -4.0, 12.0, 0.5];
+        let w = vec![1.0f32; 4];
+        rmsnorm(&mut x, &w, 1e-5);
+        let ms = x.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((ms - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gated_rmsnorm_zero_gate_zeroes() {
+        let mut y = vec![1.0f32, 2.0, 3.0, 4.0];
+        let z = vec![0.0f32; 4]; // silu(0)=0
+        gated_rmsnorm(&mut y, &z, &[1.0; 4], 1e-5);
+        assert!(y.iter().all(|v| v.abs() < 1e-6));
+    }
+}

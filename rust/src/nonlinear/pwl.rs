@@ -1,0 +1,93 @@
+//! 8-segment first-order PWL coefficients for 2^v, v ∈ (−1, 0]
+//! (the EXP-INT segment LUT of Fig. 8).
+//!
+//! Generated identically to `ref.pwl_tables` in Python: endpoint
+//! interpolation of g(rem) = 2^(−rem/2^F) over `pwl_segments` equal
+//! segments, coefficients in Q1.<coeff_frac_bits>.
+
+use crate::config::FixedSpec;
+
+/// Segment LUT: `g(rem) ≈ intercept[i] + slope[i]·(rem − rem0_i)`.
+#[derive(Debug, Clone)]
+pub struct PwlTable {
+    pub intercept: Vec<i32>,
+    pub slope: Vec<i32>,
+}
+
+impl PwlTable {
+    pub fn new(spec: &FixedSpec) -> Self {
+        let f = spec.frac_bits;
+        let nseg = spec.pwl_segments as usize;
+        let seg_w = (1usize << f) / nseg;
+        let cs = (1i64 << spec.coeff_frac_bits) as f64;
+        let mut intercept = Vec::with_capacity(nseg);
+        let mut slope = Vec::with_capacity(nseg);
+        for i in 0..nseg {
+            let rem0 = (i * seg_w) as f64;
+            let g0 = 2f64.powf(-rem0 / (1u64 << f) as f64);
+            let g1 = 2f64.powf(-(rem0 + seg_w as f64) / (1u64 << f) as f64);
+            // round in f64 to match numpy exactly
+            intercept.push((g0 * cs).round_ties_even() as i32);
+            slope.push(((g1 - g0) / seg_w as f64 * cs).round_ties_even() as i32);
+        }
+        Self { intercept, slope }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_segments_default() {
+        let t = PwlTable::new(&FixedSpec::default());
+        assert_eq!(t.intercept.len(), 8);
+        assert_eq!(t.slope.len(), 8);
+    }
+
+    #[test]
+    fn first_intercept_is_one() {
+        let spec = FixedSpec::default();
+        let t = PwlTable::new(&spec);
+        assert_eq!(t.intercept[0], 1 << spec.coeff_frac_bits); // 2^0 = 1
+    }
+
+    #[test]
+    fn intercepts_strictly_decreasing_slopes_negative() {
+        let t = PwlTable::new(&FixedSpec::default());
+        for w in t.intercept.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+        assert!(t.slope.iter().all(|s| *s < 0));
+    }
+
+    #[test]
+    fn matches_python_generated_values() {
+        // Golden values computed by python ref.pwl_tables(FXP) — pins the
+        // cross-language bit-exactness contract.
+        let t = PwlTable::new(&FixedSpec::default());
+        let py_intercept = [16384, 15024, 13777, 12634, 11585, 10624, 9742, 8933];
+        let py_slope = [-11, -10, -9, -8, -8, -7, -6, -6];
+        assert_eq!(t.intercept, py_intercept);
+        assert_eq!(t.slope, py_slope);
+    }
+
+    #[test]
+    fn pwl_error_bound() {
+        let spec = FixedSpec::default();
+        let t = PwlTable::new(&spec);
+        let f = spec.frac_bits;
+        let seg_w = (1 << f) / spec.pwl_segments as i32;
+        let cs = (1i64 << spec.coeff_frac_bits) as f64;
+        let mut max_err = 0.0f64;
+        for rem in 0..(1 << f) {
+            let seg = (rem / seg_w) as usize;
+            let approx = (t.intercept[seg] + t.slope[seg] * (rem - seg as i32 * seg_w))
+                as f64
+                / cs;
+            let true_v = 2f64.powf(-rem as f64 / (1u64 << f) as f64);
+            max_err = max_err.max((approx - true_v).abs());
+        }
+        assert!(max_err < 5e-3, "{max_err}");
+    }
+}

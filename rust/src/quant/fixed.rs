@@ -1,0 +1,119 @@
+//! Q-format fixed-point arithmetic — the 16-bit datapath of the SSM module.
+//!
+//! Values are carried in `i32` lanes holding Q6.10 (by default) numbers;
+//! every operation saturates to the 16-bit range exactly like the RTL.
+//! Shifts are arithmetic (floor), multiplication keeps the full 32-bit
+//! product before renormalizing.
+
+use crate::config::FixedSpec;
+use crate::quant::round_ties_even;
+
+/// A fixed-point value bound to a [`FixedSpec`] (zero-cost newtype over i32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Fx(pub i32);
+
+/// Float → saturating Q-format (round-half-even, matching `ref.to_fixed`).
+pub fn to_fixed(x: f32, spec: &FixedSpec) -> i32 {
+    let q = round_ties_even(x * spec.scale() as f32);
+    (q as i64).clamp(spec.qmin() as i64, spec.qmax() as i64) as i32
+}
+
+/// Q-format → float.
+pub fn from_fixed(x: i32, spec: &FixedSpec) -> f32 {
+    x as f32 / spec.scale() as f32
+}
+
+/// Saturating add on the datapath width.
+pub fn sat_add(a: i32, b: i32, spec: &FixedSpec) -> i32 {
+    ((a as i64 + b as i64).clamp(spec.qmin() as i64, spec.qmax() as i64)) as i32
+}
+
+/// Fixed-point multiply: full product then arithmetic shift right by F.
+pub fn fx_mul(a: i32, b: i32, spec: &FixedSpec) -> i32 {
+    let prod = (a as i64 * b as i64) >> spec.frac_bits;
+    prod.clamp(spec.qmin() as i64, spec.qmax() as i64) as i32
+}
+
+/// Fixed-point multiply-accumulate without intermediate saturation — the
+/// MAT units accumulate in a wide register (paper Fig. 6: "4 x 21b").
+pub fn fx_mac(acc: i64, a: i32, b: i32) -> i64 {
+    acc + a as i64 * b as i64
+}
+
+/// Renormalize a wide MAC accumulator back to the datapath width.
+pub fn fx_renorm(acc: i64, spec: &FixedSpec) -> i32 {
+    (acc >> spec.frac_bits).clamp(spec.qmin() as i64, spec.qmax() as i64) as i32
+}
+
+/// Vectorized conversions.
+pub fn to_fixed_vec(x: &[f32], spec: &FixedSpec) -> Vec<i32> {
+    x.iter().map(|v| to_fixed(*v, spec)).collect()
+}
+
+pub fn from_fixed_vec(x: &[i32], spec: &FixedSpec) -> Vec<f32> {
+    x.iter().map(|v| from_fixed(*v, spec)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> FixedSpec {
+        FixedSpec::default()
+    }
+
+    #[test]
+    fn roundtrip_small_values() {
+        let s = spec();
+        for v in [-3.5f32, -1.0, -0.0009765625, 0.0, 0.25, 1.4375, 31.0] {
+            let fx = to_fixed(v, &s);
+            assert!((from_fixed(fx, &s) - v).abs() <= 0.5 / s.scale() as f32);
+        }
+    }
+
+    #[test]
+    fn saturates() {
+        let s = spec();
+        assert_eq!(to_fixed(1e9, &s), s.qmax());
+        assert_eq!(to_fixed(-1e9, &s), s.qmin());
+        assert_eq!(sat_add(s.qmax(), s.qmax(), &s), s.qmax());
+        assert_eq!(sat_add(s.qmin(), s.qmin(), &s), s.qmin());
+    }
+
+    #[test]
+    fn mul_exact_on_grid() {
+        let s = spec();
+        // 1.5 * 2.25 = 3.375, exactly representable in Q6.10
+        let a = to_fixed(1.5, &s);
+        let b = to_fixed(2.25, &s);
+        assert_eq!(from_fixed(fx_mul(a, b, &s), &s), 3.375);
+    }
+
+    #[test]
+    fn mul_shift_is_floor() {
+        let s = spec();
+        // (-1 * 1) >> 10 with -1 lsb: floor semantics → -1 not 0
+        assert_eq!(fx_mul(-1, 1, &s), -1 >> s.frac_bits);
+    }
+
+    #[test]
+    fn mac_renorm_matches_sequential_mul_add_when_exact() {
+        let s = spec();
+        let a = [to_fixed(0.5, &s), to_fixed(-1.25, &s), to_fixed(2.0, &s)];
+        let b = [to_fixed(4.0, &s), to_fixed(0.5, &s), to_fixed(-0.75, &s)];
+        let mut acc = 0i64;
+        for i in 0..3 {
+            acc = fx_mac(acc, a[i], b[i]);
+        }
+        let got = from_fixed(fx_renorm(acc, &s), &s);
+        assert_eq!(got, 0.5 * 4.0 + -1.25 * 0.5 + 2.0 * -0.75);
+    }
+
+    #[test]
+    fn rounding_matches_numpy_half_even() {
+        let s = spec();
+        // 0.5/1024 ties: 512.5 scale points -> depends on parity
+        assert_eq!(to_fixed(0.00048828125, &s), 0); // 0.5 lsb -> even 0
+        assert_eq!(to_fixed(0.00146484375, &s), 2); // 1.5 lsb -> even 2
+    }
+}

@@ -1,0 +1,274 @@
+//! Hadamard transform and Algorithm 1 (Hadamard-based linear quantization).
+//!
+//! The transform "evenly disperses the outliers of activation values and
+//! weights across channels" (paper §III-A / Fig. 3), which is what makes
+//! 8-bit symmetric quantization of the linear layers accurate.
+
+use super::int8::{absmax, quantize_int8_into};
+
+/// Sylvester-construction Hadamard matrix of order `n = 2^k`, entries ±1.
+/// (`FindHadamard` in Algorithm 1.)
+pub fn hadamard_matrix(n: usize) -> Vec<f32> {
+    assert!(n.is_power_of_two() && n >= 1, "order must be 2^k, got {n}");
+    let mut h = vec![1.0f32];
+    let mut m = 1;
+    while m < n {
+        let mut next = vec![0.0f32; 4 * m * m];
+        for r in 0..m {
+            for c in 0..m {
+                let v = h[r * m + c];
+                next[r * 2 * m + c] = v;
+                next[r * 2 * m + (c + m)] = v;
+                next[(r + m) * 2 * m + c] = v;
+                next[(r + m) * 2 * m + (c + m)] = -v;
+            }
+        }
+        h = next;
+        m *= 2;
+    }
+    h
+}
+
+/// In-place fast Walsh–Hadamard transform of a `group`-length slice
+/// (natural/Sylvester order, unnormalized — matches `x @ H`).
+///
+/// This is the butterfly network the 4 parallel HAT adder trees implement:
+/// log2(group) add/sub stages, no multipliers.
+pub fn fwht_inplace(x: &mut [f32]) {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// Blocked Hadamard transform along the last axis of a row-major `(rows, d)`
+/// matrix: each `group`-wide slice is transformed independently (line 5 of
+/// Algorithm 1 with m = d/group groups).
+pub fn hadamard_transform(x: &[f32], rows: usize, d: usize, group: usize) -> Vec<f32> {
+    assert_eq!(x.len(), rows * d);
+    assert_eq!(d % group, 0, "dim {d} not divisible by group {group}");
+    let mut out = x.to_vec();
+    for r in 0..rows {
+        for g in 0..d / group {
+            let s = r * d + g * group;
+            fwht_inplace(&mut out[s..s + group]);
+        }
+    }
+    out
+}
+
+/// Offline-prepared Hadamard-domain int8 weight (Algorithm 1 lines 6, 8, 11).
+#[derive(Debug, Clone)]
+pub struct PreparedWeight {
+    /// int8 W_H, stored transposed as (d, q) for the activation product.
+    pub w_q_t: Vec<i8>,
+    pub d: usize,
+    pub q: usize,
+    pub scale: f32,
+    pub group: usize,
+}
+
+/// Transform + quantize a `(q, d)` weight matrix (output-major, y = x W^T).
+pub fn prepare_weight(w: &[f32], q: usize, d: usize, group: usize) -> PreparedWeight {
+    let w_h = hadamard_transform(w, q, d, group);
+    let scale = absmax(&w_h).max(1e-8) / 127.0;
+    let mut wq = vec![0i8; q * d];
+    quantize_int8_into(&w_h, scale, &mut wq);
+    // transpose (q, d) -> (d, q)
+    let mut w_q_t = vec![0i8; d * q];
+    for r in 0..q {
+        for c in 0..d {
+            w_q_t[c * q + r] = wq[r * d + c];
+        }
+    }
+    PreparedWeight { w_q_t, d, q, scale, group }
+}
+
+/// Full Algorithm 1 forward: `y = x @ w^T` with W8A8 Hadamard quantization.
+/// `x` is `(rows, d)` row-major; returns `(rows, q)`.
+pub fn hadamard_linear(
+    x: &[f32],
+    rows: usize,
+    pw: &PreparedWeight,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    let (d, q, group) = (pw.d, pw.q, pw.group);
+    assert_eq!(x.len(), rows * d);
+    assert_eq!(out.len(), rows * q);
+    let x_h = hadamard_transform(x, rows, d, group);
+    let s_x = absmax(&x_h).max(1e-8) / 127.0;
+    let mut x_q = vec![0i8; rows * d];
+    quantize_int8_into(&x_h, s_x, &mut x_q);
+
+    let dequant = s_x * pw.scale / group as f32;
+    for r in 0..rows {
+        let xrow = &x_q[r * d..(r + 1) * d];
+        let orow = &mut out[r * q..(r + 1) * q];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let mut acc: i32 = 0;
+            for k in 0..d {
+                acc += xrow[k] as i32 * pw.w_q_t[k * q + j] as i32;
+            }
+            *o = acc as f32 * dequant + bias.map_or(0.0, |b| b[j]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        // xorshift — deterministic, no rand dep needed in unit tests
+        let mut s = seed.wrapping_mul(2685821657736338717).max(1);
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matrix_orthogonal() {
+        for n in [1usize, 2, 4, 8, 64] {
+            let h = hadamard_matrix(n);
+            for i in 0..n {
+                for j in 0..n {
+                    let dot: f32 = (0..n).map(|k| h[i * n + k] * h[j * n + k]).sum();
+                    let want = if i == j { n as f32 } else { 0.0 };
+                    assert_eq!(dot, want, "n={n} i={i} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_matches_matrix_product() {
+        let n = 64;
+        let h = hadamard_matrix(n);
+        let x = rand_vec(n, 3);
+        let mut fast = x.clone();
+        fwht_inplace(&mut fast);
+        for j in 0..n {
+            let slow: f32 = (0..n).map(|k| x[k] * h[k * n + j]).sum();
+            assert!((fast[j] - slow).abs() < 1e-3, "{} vs {slow}", fast[j]);
+        }
+    }
+
+    #[test]
+    fn fwht_involution() {
+        let n = 128;
+        let x = rand_vec(n, 7);
+        let mut y = x.clone();
+        fwht_inplace(&mut y);
+        fwht_inplace(&mut y);
+        for i in 0..n {
+            assert!((y[i] - n as f32 * x[i]).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn outlier_dispersal() {
+        // Fig. 3: one huge channel spreads uniformly over the group.
+        let mut x = vec![0.0f32; 64];
+        x[17] = 100.0;
+        fwht_inplace(&mut x);
+        for v in &x {
+            assert_eq!(v.abs(), 100.0);
+        }
+    }
+
+    #[test]
+    fn linear_close_to_fp32() {
+        let (rows, d, q, group) = (16, 128, 32, 64);
+        let x = rand_vec(rows * d, 1);
+        let w = rand_vec(q * d, 2);
+        let pw = prepare_weight(&w, q, d, group);
+        let mut y = vec![0.0f32; rows * q];
+        hadamard_linear(&x, rows, &pw, None, &mut y);
+        let mut maxerr: f32 = 0.0;
+        let mut maxref: f32 = 0.0;
+        for r in 0..rows {
+            for j in 0..q {
+                let fp: f32 = (0..d).map(|k| x[r * d + k] * w[j * d + k]).sum();
+                maxerr = maxerr.max((y[r * q + j] - fp).abs());
+                maxref = maxref.max(fp.abs());
+            }
+        }
+        assert!(maxerr / maxref < 0.03, "rel err {}", maxerr / maxref);
+    }
+
+    #[test]
+    fn linear_beats_naive_int8_under_outliers() {
+        let (rows, d, q, group) = (8, 128, 16, 64);
+        let mut x = rand_vec(rows * d, 4);
+        for r in 0..rows {
+            x[r * d + 5] *= 80.0; // severe channel outlier
+        }
+        let w = rand_vec(q * d, 5);
+        let pw = prepare_weight(&w, q, d, group);
+        let mut y = vec![0.0f32; rows * q];
+        hadamard_linear(&x, rows, &pw, None, &mut y);
+
+        // naive per-tensor int8 (NormalQ)
+        let sx = absmax(&x) / 127.0;
+        let sw = absmax(&w) / 127.0;
+        let mut xq = vec![0i8; x.len()];
+        let mut wq = vec![0i8; w.len()];
+        quantize_int8_into(&x, sx, &mut xq);
+        quantize_int8_into(&w, sw, &mut wq);
+
+        let (mut e_had, mut e_norm) = (0.0f64, 0.0f64);
+        for r in 0..rows {
+            for j in 0..q {
+                let fp: f32 = (0..d).map(|k| x[r * d + k] * w[j * d + k]).sum();
+                let ni: i32 = (0..d)
+                    .map(|k| xq[r * d + k] as i32 * wq[j * d + k] as i32)
+                    .sum();
+                e_had += (y[r * q + j] - fp).abs() as f64;
+                e_norm += (ni as f32 * sx * sw - fp).abs() as f64;
+            }
+        }
+        assert!(e_had * 2.0 < e_norm, "had {e_had} norm {e_norm}");
+    }
+
+    #[test]
+    fn bias_applied() {
+        let (rows, d, q, group) = (2, 64, 4, 64);
+        let x = rand_vec(rows * d, 8);
+        let w = rand_vec(q * d, 9);
+        let bias = vec![1.0f32, -2.0, 3.0, 0.5];
+        let pw = prepare_weight(&w, q, d, group);
+        let mut y0 = vec![0.0f32; rows * q];
+        let mut y1 = vec![0.0f32; rows * q];
+        hadamard_linear(&x, rows, &pw, None, &mut y0);
+        hadamard_linear(&x, rows, &pw, Some(&bias), &mut y1);
+        for r in 0..rows {
+            for j in 0..q {
+                assert!((y1[r * q + j] - y0[r * q + j] - bias[j]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_pow2() {
+        hadamard_matrix(3);
+    }
+}

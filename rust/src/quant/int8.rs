@@ -1,0 +1,169 @@
+//! Symmetric int8 helpers shared by every W8A8 quantizer, plus the NormalQ
+//! and SmoothQuant baselines of Table II.
+
+use super::round_ties_even;
+
+/// Tensor absolute maximum (`FindScale` numerator in Algorithm 1).
+pub fn absmax(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// Symmetric round-to-nearest-even int8 quantization into `out`.
+pub fn quantize_int8_into(x: &[f32], scale: f32, out: &mut [i8]) {
+    debug_assert_eq!(x.len(), out.len());
+    let inv = 1.0 / scale;
+    for (o, v) in out.iter_mut().zip(x) {
+        *o = round_ties_even(v * inv).clamp(-128.0, 127.0) as i8;
+    }
+}
+
+/// NormalQ (Table II): plain per-tensor absmax W8A8 matmul, no outlier
+/// handling.  `x` is `(rows, d)`, `w` is `(q, d)`; returns `(rows, q)`.
+pub fn normalq_linear(
+    x: &[f32],
+    rows: usize,
+    w: &[f32],
+    q: usize,
+    d: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    let s_x = absmax(x).max(1e-8) / 127.0;
+    let s_w = absmax(w).max(1e-8) / 127.0;
+    let mut xq = vec![0i8; x.len()];
+    let mut wq = vec![0i8; w.len()];
+    quantize_int8_into(x, s_x, &mut xq);
+    quantize_int8_into(w, s_w, &mut wq);
+    let dq = s_x * s_w;
+    for r in 0..rows {
+        for j in 0..q {
+            let mut acc: i32 = 0;
+            for k in 0..d {
+                acc += xq[r * d + k] as i32 * wq[j * d + k] as i32;
+            }
+            out[r * q + j] = acc as f32 * dq + bias.map_or(0.0, |b| b[j]);
+        }
+    }
+}
+
+/// SmoothQuant (Table II): per-input-channel rebalancing
+/// `s_j = max|X_j|^alpha / max|W_j|^(1-alpha)` then per-tensor W8A8.
+pub fn smoothq_linear(
+    x: &[f32],
+    rows: usize,
+    w: &[f32],
+    q: usize,
+    d: usize,
+    bias: Option<&[f32]>,
+    alpha: f32,
+    out: &mut [f32],
+) {
+    // per-channel absmax of activations and weights
+    let mut xa = vec![1e-5f32; d];
+    for r in 0..rows {
+        for k in 0..d {
+            xa[k] = xa[k].max(x[r * d + k].abs());
+        }
+    }
+    let mut wa = vec![1e-5f32; d];
+    for j in 0..q {
+        for k in 0..d {
+            wa[k] = wa[k].max(w[j * d + k].abs());
+        }
+    }
+    let s: Vec<f32> = xa
+        .iter()
+        .zip(&wa)
+        .map(|(a, b)| (a.powf(alpha) / b.powf(1.0 - alpha)).clamp(1e-5, 1e5))
+        .collect();
+
+    let mut xs = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        for k in 0..d {
+            xs[r * d + k] = x[r * d + k] / s[k];
+        }
+    }
+    let mut ws = vec![0.0f32; w.len()];
+    for j in 0..q {
+        for k in 0..d {
+            ws[j * d + k] = w[j * d + k] * s[k];
+        }
+    }
+    normalq_linear(&xs, rows, &ws, q, d, bias, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(6364136223846793005).max(1);
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let x = vec![1000.0f32, -1000.0, 0.0];
+        let mut q = vec![0i8; 3];
+        quantize_int8_into(&x, 1.0, &mut q);
+        assert_eq!(q, vec![127, -128, 0]);
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let x = rand_vec(1000, 1);
+        let s = absmax(&x) / 127.0;
+        let mut q = vec![0i8; 1000];
+        quantize_int8_into(&x, s, &mut q);
+        for (v, qi) in x.iter().zip(&q) {
+            assert!((*qi as f32 * s - v).abs() <= s / 2.0 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn normalq_close_without_outliers() {
+        let (rows, d, q) = (8, 64, 16);
+        let x = rand_vec(rows * d, 2);
+        let w = rand_vec(q * d, 3);
+        let mut y = vec![0.0f32; rows * q];
+        normalq_linear(&x, rows, &w, q, d, None, &mut y);
+        let mut rel: f32 = 0.0;
+        for r in 0..rows {
+            for j in 0..q {
+                let fp: f32 = (0..d).map(|k| x[r * d + k] * w[j * d + k]).sum();
+                rel = rel.max((y[r * q + j] - fp).abs());
+            }
+        }
+        assert!(rel < 0.5, "abs err {rel}");
+    }
+
+    #[test]
+    fn smoothq_beats_normalq_with_outliers() {
+        let (rows, d, q) = (16, 64, 16);
+        let mut x = rand_vec(rows * d, 4);
+        for r in 0..rows {
+            x[r * d + 9] *= 60.0;
+        }
+        let w = rand_vec(q * d, 5);
+        let mut yn = vec![0.0f32; rows * q];
+        let mut ys = vec![0.0f32; rows * q];
+        normalq_linear(&x, rows, &w, q, d, None, &mut yn);
+        smoothq_linear(&x, rows, &w, q, d, None, 0.5, &mut ys);
+        let (mut en, mut es) = (0.0f64, 0.0f64);
+        for r in 0..rows {
+            for j in 0..q {
+                let fp: f32 = (0..d).map(|k| x[r * d + k] * w[j * d + k]).sum();
+                en += (yn[r * q + j] - fp).abs() as f64;
+                es += (ys[r * q + j] - fp).abs() as f64;
+            }
+        }
+        assert!(es < en, "smooth {es} normal {en}");
+    }
+}

@@ -1,0 +1,34 @@
+//! Quantization substrates: Hadamard W8A8 (Algorithm 1), power-of-two
+//! scaling, int8 helpers, and the Q-format fixed-point arithmetic the
+//! simulator's datapath runs on.
+//!
+//! Rounding matches the Python side bit-for-bit: all float→int conversions
+//! use round-half-to-even (numpy/jnp semantics), all fixed-point shifts are
+//! arithmetic (floor), exactly like the RTL the paper describes.
+
+pub mod fixed;
+pub mod hadamard;
+pub mod int8;
+pub mod pot;
+
+/// Round-half-to-even, matching `jnp.round` / IEEE `roundTiesToEven`.
+#[inline]
+pub fn round_ties_even(x: f32) -> f32 {
+    // f32::round_ties_even is stable since 1.77
+    x.round_ties_even()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ties_go_to_even() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+        assert_eq!(round_ties_even(3.2), 3.0);
+    }
+}

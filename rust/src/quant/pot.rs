@@ -1,0 +1,151 @@
+//! Fine-grained power-of-two (PoT) quantization (paper §III-B).
+//!
+//! Scaling factors are constrained to 2^p so de/re-quantization is a barrel
+//! shift on the FPGA — no DSP multipliers.  "Fine-grained" = independent
+//! exponents per channel/group rather than per tensor.
+
+use super::round_ties_even;
+
+/// Smallest exponent p such that `absmax / 2^p` fits in `bits`-bit signed.
+pub fn pot_exponent(absmax: f32, bits: u32) -> i32 {
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    (absmax.max(1e-20) / qmax).log2().ceil() as i32
+}
+
+/// Quantize-dequantize one value on the 2^p grid.
+#[inline]
+pub fn pot_fake_quant_scalar(x: f32, p: i32, bits: u32) -> f32 {
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let scale = (p as f32).exp2();
+    let q = round_ties_even(x / scale).clamp(-qmax - 1.0, qmax);
+    q * scale
+}
+
+/// Per-tensor PoT fake-quant (in place).
+pub fn pot_fake_quant(x: &mut [f32], bits: u32) -> i32 {
+    let am = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let p = pot_exponent(am, bits);
+    for v in x.iter_mut() {
+        *v = pot_fake_quant_scalar(*v, p, bits);
+    }
+    p
+}
+
+/// Fine-grained PoT: independent exponent per contiguous `chunk`-sized group
+/// (e.g. per channel when the channel is the innermost axis).
+pub fn pot_fake_quant_grouped(x: &mut [f32], chunk: usize, bits: u32) -> Vec<i32> {
+    assert_eq!(x.len() % chunk, 0);
+    x.chunks_mut(chunk).map(|c| pot_fake_quant(c, bits)).collect()
+}
+
+/// Fine-grained PoT across strided channels: `x` is row-major `(rows, cols)`
+/// and each *column* gets its own exponent (per-channel over the row axis).
+pub fn pot_fake_quant_per_col(x: &mut [f32], rows: usize, cols: usize, bits: u32) -> Vec<i32> {
+    assert_eq!(x.len(), rows * cols);
+    let mut ps = Vec::with_capacity(cols);
+    for c in 0..cols {
+        let mut am = 0.0f32;
+        for r in 0..rows {
+            am = am.max(x[r * cols + c].abs());
+        }
+        let p = pot_exponent(am, bits);
+        for r in 0..rows {
+            x[r * cols + c] = pot_fake_quant_scalar(x[r * cols + c], p, bits);
+        }
+        ps.push(p);
+    }
+    ps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exponent_covers_range() {
+        let p = pot_exponent(100.0, 16);
+        let scale = (p as f32).exp2();
+        assert!(100.0 / scale <= 32767.0);
+        assert!(100.0 / scale > 32767.0 / 2.0); // smallest such p
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let mut x = rand_vec(4096, 1);
+        let orig = x.clone();
+        let p = pot_fake_quant(&mut x, 16);
+        let step = (p as f32).exp2();
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut x = rand_vec(256, 2);
+        pot_fake_quant(&mut x, 12);
+        let once = x.clone();
+        pot_fake_quant(&mut x, 12);
+        assert_eq!(once, x);
+    }
+
+    #[test]
+    fn values_on_pot_grid() {
+        let mut x = rand_vec(100, 3);
+        let p = pot_fake_quant(&mut x, 16);
+        let scale = (p as f32).exp2();
+        for v in &x {
+            let q = v / scale;
+            assert!((q - q.round()).abs() < 1e-4, "{v} not on 2^{p} grid");
+        }
+    }
+
+    #[test]
+    fn fine_grained_beats_per_tensor() {
+        // one channel 100x larger: per-column exponents keep the small
+        // channels' precision (the paper's motivation for fine-grained PoT).
+        let rows = 64;
+        let cols = 8;
+        let mut big = rand_vec(rows * cols, 4);
+        for r in 0..rows {
+            big[r * cols] *= 100.0;
+        }
+        let orig = big.clone();
+
+        let mut per_tensor = big.clone();
+        pot_fake_quant(&mut per_tensor, 8);
+        let mut per_col = big.clone();
+        pot_fake_quant_per_col(&mut per_col, rows, cols, 8);
+
+        let err = |q: &[f32]| -> f64 {
+            q.iter().zip(&orig).map(|(a, b)| (a - b).abs() as f64).sum()
+        };
+        assert!(err(&per_col) < err(&per_tensor));
+    }
+
+    #[test]
+    fn grouped_matches_manual() {
+        let mut x = rand_vec(64, 5);
+        let manual: Vec<f32> = {
+            let mut a = x[..32].to_vec();
+            let mut b = x[32..].to_vec();
+            pot_fake_quant(&mut a, 16);
+            pot_fake_quant(&mut b, 16);
+            a.into_iter().chain(b).collect()
+        };
+        pot_fake_quant_grouped(&mut x, 32, 16);
+        assert_eq!(x, manual);
+    }
+}

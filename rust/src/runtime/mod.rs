@@ -1,0 +1,360 @@
+//! PJRT runtime: loads the AOT-lowered HLO text artifacts and executes them
+//! on the CPU PJRT client — the only compute path the coordinator uses at
+//! serve time (Python never runs here).
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and `python/compile/aot.py`).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::weights::{artifacts_dir, Manifest, ModelWeights};
+
+/// A compiled executable cache keyed by artifact name, plus the weight
+/// literals shared by every model executable.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    executables: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// flat weight literals in manifest order
+    weights: Vec<xla::Literal>,
+    /// offline Hadamard-prepared int8 weights + scales (flatten_prepared
+    /// order) — computed once here so the quantized executables skip the
+    /// per-call weight transform (§Perf L2)
+    prepared: Vec<xla::Literal>,
+    pub weights_host: ModelWeights,
+}
+
+/// Output of a prefill executable.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    /// (L, vocab) row-major
+    pub logits: Vec<f32>,
+    /// (n_layer, d_conv-1, conv_dim)
+    pub conv_state: Vec<f32>,
+    /// (n_layer, nheads, headdim, d_state)
+    pub ssm_state: Vec<f32>,
+}
+
+/// Output of a batched decode executable.
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    /// (B, vocab)
+    pub logits: Vec<f32>,
+    /// (B, n_layer, d_conv-1, conv_dim)
+    pub conv_state: Vec<f32>,
+    /// (B, n_layer, nheads, headdim, d_state)
+    pub ssm_state: Vec<f32>,
+}
+
+fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+    Ok(lit.reshape(&dims_i64)?)
+}
+
+fn i32_literal(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+    Ok(lit.reshape(&dims_i64)?)
+}
+
+fn i8_literal(data: &[i8], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S8,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Hadamard group size — must match `mamba2.HADAMARD_GROUP` in Python.
+const HADAMARD_GROUP: usize = 64;
+
+/// Build the prepared-weight literals in `flatten_prepared` order:
+/// per layer [in_proj.w_q_t, in_proj.s_w, out_proj.w_q_t, out_proj.s_w],
+/// then [lm_head.w_q_t, lm_head.s_w].
+fn build_prepared(w: &ModelWeights) -> Result<Vec<xla::Literal>> {
+    use crate::quant::hadamard::prepare_weight;
+    let cfg = &w.cfg;
+    let mut out = Vec::new();
+    let mut push = |raw: &[f32], q: usize, d: usize| -> Result<()> {
+        let pw = prepare_weight(raw, q, d, HADAMARD_GROUP);
+        out.push(i8_literal(&pw.w_q_t, &[d, q])?);
+        out.push(xla::Literal::from(pw.scale));
+        Ok(())
+    };
+    for lw in &w.layers {
+        push(&lw.in_proj_w, cfg.d_in_proj(), cfg.d_model)?;
+        push(&lw.out_proj_w, cfg.d_model, cfg.d_inner())?;
+    }
+    push(&w.embed, cfg.vocab_size, cfg.d_model)?;
+    Ok(out)
+}
+
+impl Runtime {
+    /// Create a runtime over the default artifacts directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(artifacts_dir())
+    }
+
+    pub fn load(dir: PathBuf) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let weights_host = ModelWeights::load(&dir)?;
+        let mut weights = Vec::new();
+        // manifest order == flatten order: build literals with true shapes
+        let flat = weights_host.flat();
+        for p in &manifest.params {
+            let (_, data) = flat[p.index];
+            let dims = if p.shape.is_empty() { vec![1] } else { p.shape.clone() };
+            weights.push(f32_literal(data, &dims)?);
+        }
+        let prepared = build_prepared(&weights_host)?;
+        Ok(Self {
+            client,
+            manifest,
+            dir,
+            executables: Mutex::new(HashMap::new()),
+            weights,
+            prepared,
+            weights_host,
+        })
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        let mut cache = self.executables.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let art = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.executables.lock().unwrap().len()
+    }
+
+    /// Warm the cache for a set of artifacts (done at server startup so the
+    /// request path never compiles).
+    pub fn warmup(&self, names: &[String]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    fn run_tuple3(
+        &self,
+        name: &str,
+        extra: Vec<xla::Literal>,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.ensure_compiled(name)?;
+        let n_prepared = self
+            .manifest
+            .artifact(name)
+            .map(|a| a.n_prepared)
+            .unwrap_or(0);
+        let cache = self.executables.lock().unwrap();
+        let exe = cache.get(name).unwrap();
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        if n_prepared > 0 {
+            debug_assert_eq!(n_prepared, self.prepared.len());
+            args.extend(self.prepared.iter());
+        }
+        args.extend(extra.iter());
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (a, b, c) = result.to_tuple3()?;
+        Ok((a.to_vec::<f32>()?, b.to_vec::<f32>()?, c.to_vec::<f32>()?))
+    }
+
+    /// Zero-initialized (conv, ssm) state pair for a fresh sequence.
+    pub fn zero_state(&self) -> (Vec<f32>, Vec<f32>) {
+        let cfg = &self.weights_host.cfg;
+        (
+            vec![0.0; cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()],
+            vec![0.0; cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state],
+        )
+    }
+
+    /// Run a prefill executable over one chunk.  `tokens.len()` must equal
+    /// the artifact's bucket length; `conv/ssm_state` carry the recurrent
+    /// state from earlier chunks (chunked prefill), zeros for a fresh start.
+    pub fn prefill(
+        &self,
+        variant: &str,
+        tokens: &[i32],
+        conv_state: &[f32],
+        ssm_state: &[f32],
+    ) -> Result<PrefillOut> {
+        let cfg = &self.weights_host.cfg;
+        let name = format!("{}_prefill_{}_L{}", cfg.name, variant, tokens.len());
+        let conv_dims = [cfg.n_layer, cfg.d_conv - 1, cfg.conv_dim()];
+        let ssm_dims = [cfg.n_layer, cfg.nheads(), cfg.headdim, cfg.d_state];
+        let extra = vec![
+            f32_literal(conv_state, &conv_dims)?,
+            f32_literal(ssm_state, &ssm_dims)?,
+            i32_literal(tokens, &[tokens.len()])?,
+        ];
+        let (logits, conv_state, ssm_state) = self.run_tuple3(&name, extra)?;
+        Ok(PrefillOut { logits, conv_state, ssm_state })
+    }
+
+    /// Prefill a fresh sequence (zero state).
+    pub fn prefill_fresh(&self, variant: &str, tokens: &[i32]) -> Result<PrefillOut> {
+        let (c, s) = self.zero_state();
+        self.prefill(variant, tokens, &c, &s)
+    }
+
+    /// Run a batched decode executable.  All state slices are batch-major.
+    pub fn decode(
+        &self,
+        variant: &str,
+        batch: usize,
+        conv_state: &[f32],
+        ssm_state: &[f32],
+        tokens: &[i32],
+    ) -> Result<DecodeOut> {
+        let cfg = &self.weights_host.cfg;
+        assert_eq!(tokens.len(), batch);
+        let name = format!("{}_decode_{}_B{}", cfg.name, variant, batch);
+        let conv_dims = [batch, cfg.n_layer, cfg.d_conv - 1, cfg.conv_dim()];
+        let ssm_dims = [batch, cfg.n_layer, cfg.nheads(), cfg.headdim, cfg.d_state];
+        let extra = vec![
+            f32_literal(conv_state, &conv_dims)?,
+            f32_literal(ssm_state, &ssm_dims)?,
+            i32_literal(tokens, &[batch])?,
+        ];
+        let (logits, conv_state, ssm_state) = self.run_tuple3(&name, extra)?;
+        Ok(DecodeOut { logits, conv_state, ssm_state })
+    }
+
+    /// Prefill bucket lengths available in the manifest (ascending).
+    pub fn prefill_buckets(&self) -> Vec<usize> {
+        let mut v = self.manifest.prefill_lens.clone();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn decode_batches(&self) -> Vec<usize> {
+        let mut v = self.manifest.decode_batches.clone();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Mamba2, Variant};
+
+    fn runtime() -> Option<Runtime> {
+        let dir = artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Runtime::load(dir).expect("runtime load"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn prefill_executes_and_matches_golden_model() {
+        let Some(rt) = runtime() else { return };
+        let tokens: Vec<i32> = (0..32).map(|i| (i * 7) % 512).collect();
+        let out = rt.prefill_fresh("fp32", &tokens).expect("prefill");
+        let cfg = &rt.weights_host.cfg;
+        assert_eq!(out.logits.len(), 32 * cfg.vocab_size);
+
+        // golden model parity (same weights, same tokens)
+        let golden = Mamba2::new(rt.weights_host.clone());
+        let t_u32: Vec<u32> = tokens.iter().map(|t| *t as u32).collect();
+        let (want, state) = golden.prefill(&t_u32, Variant::Fp32);
+        let mut max_err = 0.0f32;
+        for (a, b) in out.logits.iter().zip(&want) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 2e-2, "PJRT vs golden max err {max_err}");
+        let mut s_err = 0.0f32;
+        for (a, b) in out.ssm_state.iter().zip(&state.ssm) {
+            s_err = s_err.max((a - b).abs());
+        }
+        assert!(s_err < 2e-2, "state err {s_err}");
+    }
+
+    #[test]
+    fn decode_step_continues_prefill() {
+        let Some(rt) = runtime() else { return };
+        let cfg = rt.weights_host.cfg.clone();
+        let tokens: Vec<i32> = (0..32).map(|i| (i * 5) % 512).collect();
+        let pre = rt.prefill_fresh("fp32", &tokens).unwrap();
+        let out = rt
+            .decode("fp32", 1, &pre.conv_state, &pre.ssm_state, &[tokens[31]])
+            .unwrap();
+        assert_eq!(out.logits.len(), cfg.vocab_size);
+        assert!(out.logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fastmamba_variant_runs() {
+        let Some(rt) = runtime() else { return };
+        let tokens: Vec<i32> = (0..32).map(|i| (i * 3) % 512).collect();
+        let out = rt.prefill_fresh("fastmamba", &tokens).expect("fastmamba prefill");
+        assert!(out.logits.iter().all(|v| v.is_finite()));
+        // quantized logits close to fp32 logits (Table II premise)
+        let fp = rt.prefill_fresh("fp32", &tokens).unwrap();
+        let rms_fp = (fp.logits.iter().map(|v| v * v).sum::<f32>()
+            / fp.logits.len() as f32)
+            .sqrt();
+        let rms_e = (out
+            .logits
+            .iter()
+            .zip(&fp.logits)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / fp.logits.len() as f32)
+            .sqrt();
+        assert!(rms_e < 0.3 * rms_fp, "rel {}", rms_e / rms_fp);
+    }
+
+    #[test]
+    fn batched_decode_shapes() {
+        let Some(rt) = runtime() else { return };
+        let cfg = rt.weights_host.cfg.clone();
+        let b = 4;
+        let conv = vec![0.0f32; b * cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()];
+        let ssm = vec![0.0f32; b * cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state];
+        let out = rt.decode("fp32", b, &conv, &ssm, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(out.logits.len(), b * cfg.vocab_size);
+        assert_eq!(out.conv_state.len(), conv.len());
+        assert_eq!(out.ssm_state.len(), ssm.len());
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(rt) = runtime() else { return };
+        let tokens: Vec<i32> = vec![0; 32];
+        rt.prefill_fresh("fp32", &tokens).unwrap();
+        let n1 = rt.compiled_count();
+        rt.prefill_fresh("fp32", &tokens).unwrap();
+        assert_eq!(rt.compiled_count(), n1);
+    }
+}

@@ -1,0 +1,115 @@
+//! Convolution Module (paper §IV-A): 32 MAT units, each performing the
+//! kernel-size-4 dot product of a 1-D depthwise causal convolution.
+//!
+//! One MAT produces one output channel-sample per cycle (vector length 4 ==
+//! kernel size), so the module processes 32 channels per cycle and a full
+//! `(l, conv_dim)` activation in `l * conv_dim / 32` cycles.
+
+use crate::config::AcceleratorConfig;
+use crate::quant::pot;
+
+/// Cycle count for the depthwise conv over `(l, conv_dim)`.
+pub fn conv_cycles(acc: &AcceleratorConfig, l: u64, conv_dim: u64) -> u64 {
+    let per_cycle = acc.conv_mats as u64;
+    l * conv_dim.div_ceil(per_cycle) + 8 // pipeline fill
+}
+
+/// Functional PoT-quantized conv on the module (mirrors the FastMamba
+/// variant of the golden model: per-channel PoT taps, per-channel PoT
+/// activations, fp accumulate on the PoT grid).
+pub struct ConvModule<'a> {
+    pub acc: &'a AcceleratorConfig,
+}
+
+impl<'a> ConvModule<'a> {
+    pub fn new(acc: &'a AcceleratorConfig) -> Self {
+        Self { acc }
+    }
+
+    /// x: `(l, c)` row-major; w: `(c, k)`; b: `(c,)`.  Returns (y, cycles)
+    /// *before* the SiLU (the float group applies activation).
+    pub fn forward(&self, x: &[f32], l: usize, c: usize, w: &[f32], k: usize,
+                   b: &[f32]) -> (Vec<f32>, u64) {
+        let mut wq = w.to_vec();
+        pot::pot_fake_quant_grouped(&mut wq, k, 16);
+        let mut xq = x.to_vec();
+        pot::pot_fake_quant_per_col(&mut xq, l, c, 16);
+        let mut y = vec![0.0f32; l * c];
+        for t in 0..l {
+            for ch in 0..c {
+                let mut acc_v = b[ch];
+                for tap in 0..k {
+                    let ti = t as i64 - (k - 1 - tap) as i64;
+                    if ti >= 0 {
+                        acc_v += wq[ch * k + tap] * xq[ti as usize * c + ch];
+                    }
+                }
+                y[t * c + ch] = acc_v;
+            }
+        }
+        (y, conv_cycles(self.acc, l as u64, c as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn causal_and_close_to_float() {
+        let acc = AcceleratorConfig::default();
+        let m = ConvModule::new(&acc);
+        let mut rng = Rng::new(2);
+        let (l, c, k) = (20, 64, 4);
+        let x = rng.normal_vec(l * c, 1.0);
+        let w = rng.normal_vec(c * k, 0.3);
+        let b = rng.normal_vec(c, 0.1);
+        let (y, _) = m.forward(&x, l, c, &w, k, &b);
+        // float reference
+        for t in 0..l {
+            for ch in 0..c {
+                let mut want = b[ch];
+                for tap in 0..k {
+                    let ti = t as i64 - (k - 1 - tap) as i64;
+                    if ti >= 0 {
+                        want += w[ch * k + tap] * x[ti as usize * c + ch];
+                    }
+                }
+                let got = y[t * c + ch];
+                assert!((got - want).abs() < 0.05, "t={t} ch={ch} {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn causality_holds() {
+        let acc = AcceleratorConfig::default();
+        let m = ConvModule::new(&acc);
+        let mut rng = Rng::new(3);
+        let (l, c, k) = (16, 32, 4);
+        let mut x = rng.normal_vec(l * c, 1.0);
+        let w = rng.normal_vec(c * k, 0.3);
+        let b = vec![0.0f32; c];
+        let (y0, _) = m.forward(&x, l, c, &w, k, &b);
+        for v in &mut x[8 * c..] {
+            *v += 10.0; // perturb tokens >= 8
+        }
+        let (y1, _) = m.forward(&x, l, c, &w, k, &b);
+        // outputs before t=8 unchanged (up to requant noise of the column)
+        for t in 0..8 {
+            for ch in 0..c {
+                let d = (y0[t * c + ch] - y1[t * c + ch]).abs();
+                assert!(d < 0.2, "t={t} ch={ch} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn cycles_formula() {
+        let acc = AcceleratorConfig::default();
+        // 1792 channels / 32 MATs = 56 cycles per token
+        assert_eq!(conv_cycles(&acc, 1, 1792), 56 + 8);
+        assert_eq!(conv_cycles(&acc, 100, 1792), 5600 + 8);
+    }
+}

@@ -1,0 +1,67 @@
+//! Floating-point computing group (paper Fig. 4): RMS Normalization Module
+//! and SiLU Module.  The paper keeps these in floating point because their
+//! share of total compute is small (Fig. 1) and quantizing them costs
+//! accuracy; we model a modest vector unit (16 FP lanes per module).
+
+use crate::config::AcceleratorConfig;
+use crate::nonlinear;
+
+/// FP lanes per float module (an implementation constant consistent with
+/// the DSP budget Table IV assigns to the RMS Norm / SiLU group).
+pub const FP_LANES: u64 = 16;
+/// fp pipeline depth (mult + add + special-function stages).
+pub const FP_DEPTH: u64 = 8;
+
+/// Cycles for an RMSNorm over `(l, d)`: square+reduce pass and scale pass.
+pub fn rmsnorm_cycles(_acc: &AcceleratorConfig, l: u64, d: u64) -> u64 {
+    let per_tok = 2 * d.div_ceil(FP_LANES) + FP_DEPTH; // reduce + scale
+    l * per_tok
+}
+
+/// Cycles for a SiLU over `n` elements.
+pub fn silu_cycles(_acc: &AcceleratorConfig, n: u64) -> u64 {
+    n.div_ceil(FP_LANES) + FP_DEPTH
+}
+
+/// Functional wrappers (same math as the nonlinear module — fp32 here
+/// stands in for the FPGA's fp16, which Table II shows is accuracy-neutral).
+pub struct FloatModule;
+
+impl FloatModule {
+    pub fn rmsnorm(x: &mut [f32], w: &[f32], eps: f32) {
+        nonlinear::rmsnorm(x, w, eps);
+    }
+
+    pub fn silu(x: &mut [f32]) {
+        for v in x.iter_mut() {
+            *v = nonlinear::silu(*v);
+        }
+    }
+
+    pub fn gated_rmsnorm(y: &mut [f32], z: &[f32], w: &[f32], eps: f32) {
+        nonlinear::gated_rmsnorm(y, z, w, eps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn silu_matches_scalar() {
+        let mut x = vec![-2.0f32, 0.0, 1.0, 3.5];
+        FloatModule::silu(&mut x);
+        assert_eq!(x[1], 0.0);
+        assert!((x[2] - 0.731_058_6).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cycles_scale() {
+        let acc = AcceleratorConfig::default();
+        assert_eq!(silu_cycles(&acc, 16), 1 + FP_DEPTH);
+        assert_eq!(silu_cycles(&acc, 17), 2 + FP_DEPTH);
+        let a = rmsnorm_cycles(&acc, 1, 768);
+        let b = rmsnorm_cycles(&acc, 2, 768);
+        assert_eq!(b, 2 * a);
+    }
+}

@@ -1,0 +1,29 @@
+//! Cycle-level simulator of the FastMamba FPGA microarchitecture (paper §IV).
+//!
+//! The simulator has two coupled halves:
+//!
+//! * **Functional models** — bit-faithful fixed-point execution of each
+//!   module (VPUs on Q6.10 lanes, int8 MAT arrays, the multi-mode NAU),
+//!   validated against the Rust golden model and, transitively, against the
+//!   Pallas kernels.
+//! * **Timing models** — cycle counts derived from the paper's published
+//!   unit counts, vector widths and pipeline structure (Fig. 4–8), plus a
+//!   DRAM streaming model for the weight traffic that bounds decode.
+//!
+//! [`perf`] composes the per-module cycle counts into end-to-end prefill
+//! latency (Fig. 9) and decode throughput (Table III); [`resources`] and
+//! [`power`] produce Table IV / Fig. 10 and the energy-efficiency numbers.
+
+pub mod buffer;
+pub mod conv_module;
+pub mod dataflow;
+pub mod float_module;
+pub mod linear_module;
+pub mod nau;
+pub mod perf;
+pub mod power;
+pub mod resources;
+pub mod ssm_module;
+pub mod vpu;
+
+pub use perf::{DecodePerf, PerfModel, PrefillPerf};

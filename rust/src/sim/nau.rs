@@ -1,0 +1,122 @@
+//! The Nonlinear Approximation Unit (paper Fig. 8): a 24-lane multi-mode
+//! pipeline computing `exp` (Eq. 3) or `SoftPlus` (Eq. 6) on 16-bit fixed
+//! point.
+//!
+//! Structure mirrored here: Preprocessing (RPU negate + Delay Unit) →
+//! EXP-INT (×log2e, u/v split, 8-segment PWL of 2^v, shift) →
+//! Postprocessing (adder).  The functional path is bit-identical to
+//! `nonlinear::{exp,softplus}_fixed` — one shared datapath, exactly like
+//! the multiplexed hardware.
+
+use crate::config::FixedSpec;
+use crate::nonlinear::{exp_fixed, softplus_fixed, PwlTable};
+
+use super::vpu::{ADD_LAT, MUL_LAT};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NauMode {
+    Exp,
+    SoftPlus,
+}
+
+/// A `lanes`-wide NAU instance.
+#[derive(Debug, Clone)]
+pub struct Nau {
+    pub lanes: usize,
+    pub spec: FixedSpec,
+    table: PwlTable,
+}
+
+impl Nau {
+    pub fn new(lanes: usize) -> Self {
+        let spec = FixedSpec::default();
+        let table = PwlTable::new(&spec);
+        Self { lanes, spec, table }
+    }
+
+    /// Pipeline depth: RPU(1) + mult(3) + split(1) + PWL mult-add(4) +
+    /// shift(1) + post-add(1).
+    pub fn depth(&self) -> u64 {
+        ADD_LAT + MUL_LAT + 1 + (MUL_LAT + ADD_LAT) + 1 + ADD_LAT
+    }
+
+    /// Cycles to process `n` scalars: ceil(n/lanes) vector issues, pipelined.
+    pub fn cycles(&self, n: u64) -> u64 {
+        if n == 0 {
+            0
+        } else {
+            n.div_ceil(self.lanes as u64) + self.depth()
+        }
+    }
+
+    /// Functional evaluation over a fixed-point vector (any length; the
+    /// hardware streams ceil(n/lanes) beats).
+    pub fn eval(&self, x_fx: &[i32], mode: NauMode, out: &mut [i32]) {
+        debug_assert_eq!(x_fx.len(), out.len());
+        match mode {
+            NauMode::Exp => {
+                for (o, x) in out.iter_mut().zip(x_fx) {
+                    *o = exp_fixed((*x).min(0), &self.table, &self.spec);
+                }
+            }
+            NauMode::SoftPlus => {
+                for (o, x) in out.iter_mut().zip(x_fx) {
+                    *o = softplus_fixed(*x, &self.table, &self.spec);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fixed::{from_fixed, to_fixed};
+
+    #[test]
+    fn exp_mode_matches_nonlinear_module() {
+        let nau = Nau::new(24);
+        let s = nau.spec;
+        let xs: Vec<i32> = (0..100).map(|i| to_fixed(-8.0 * i as f32 / 100.0, &s)).collect();
+        let mut out = vec![0i32; 100];
+        nau.eval(&xs, NauMode::Exp, &mut out);
+        let t = PwlTable::new(&s);
+        for (x, o) in xs.iter().zip(&out) {
+            assert_eq!(*o, exp_fixed(*x, &t, &s));
+        }
+    }
+
+    #[test]
+    fn softplus_mode_positive_branch() {
+        let nau = Nau::new(24);
+        let s = nau.spec;
+        let x = to_fixed(3.0, &s);
+        let mut out = vec![0i32];
+        nau.eval(&[x], NauMode::SoftPlus, &mut out);
+        // x + exp(-x): ≈ 3.0 + 0.0498
+        let got = from_fixed(out[0], &s);
+        assert!((got - 3.0498).abs() < 0.01, "{got}");
+    }
+
+    #[test]
+    fn cycle_model_scales_with_lanes() {
+        let nau = Nau::new(24);
+        assert_eq!(nau.cycles(0), 0);
+        assert_eq!(nau.cycles(24), 1 + nau.depth());
+        assert_eq!(nau.cycles(25), 2 + nau.depth());
+        assert_eq!(nau.cycles(240), 10 + nau.depth());
+    }
+
+    #[test]
+    fn modes_share_datapath() {
+        // For x <= 0 SoftPlus ≡ exp (Eq. 6 upper branch): same outputs.
+        let nau = Nau::new(24);
+        let s = nau.spec;
+        let xs: Vec<i32> = (0..50).map(|i| to_fixed(-5.0 * i as f32 / 50.0, &s)).collect();
+        let mut e = vec![0i32; 50];
+        let mut p = vec![0i32; 50];
+        nau.eval(&xs, NauMode::Exp, &mut e);
+        nau.eval(&xs, NauMode::SoftPlus, &mut p);
+        assert_eq!(e, p);
+    }
+}

@@ -1,0 +1,276 @@
+//! End-to-end performance model: composes the per-module cycle counts and
+//! the DRAM streaming model into prefill latency (Fig. 9), runtime
+//! breakdowns (Fig. 1-style) and decode throughput (Table III).
+
+use crate::config::{AcceleratorConfig, ModelConfig};
+
+use super::buffer::{dram_cycles, weight_stream_bytes};
+use super::conv_module::conv_cycles;
+use super::dataflow::{pipelined, sequential, Stage};
+use super::float_module::{rmsnorm_cycles, silu_cycles};
+use super::linear_module::linear_cycles;
+use super::ssm_module::ssm_cycles_per_token;
+
+/// Per-component cycles for one forward pass (the Fig. 1 decomposition).
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    pub linear: u64,
+    pub conv: u64,
+    pub ssm: u64,
+    pub norm_silu: u64,
+    pub dram: u64,
+}
+
+impl Breakdown {
+    pub fn compute_total(&self) -> u64 {
+        self.linear + self.conv + self.ssm + self.norm_silu
+    }
+
+    /// Fractions of compute (Fig. 1 bars).
+    pub fn fractions(&self) -> [(&'static str, f64); 4] {
+        let t = self.compute_total().max(1) as f64;
+        [
+            ("linear", self.linear as f64 / t),
+            ("conv", self.conv as f64 / t),
+            ("ssm", self.ssm as f64 / t),
+            ("norm_silu", self.norm_silu as f64 / t),
+        ]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PrefillPerf {
+    pub seq_len: usize,
+    pub cycles: u64,
+    pub seconds: f64,
+    pub tokens_per_s: f64,
+    pub breakdown: Breakdown,
+    pub bottleneck: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct DecodePerf {
+    pub batch: usize,
+    pub cycles_per_step: u64,
+    pub seconds_per_step: f64,
+    pub tokens_per_s: f64,
+    pub compute_bound: bool,
+    pub breakdown: Breakdown,
+}
+
+/// The FastMamba accelerator performance model.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    pub acc: AcceleratorConfig,
+    pub cfg: ModelConfig,
+    /// pipelined dataflow (paper) vs sequential (ablation)
+    pub pipelined_dataflow: bool,
+}
+
+impl PerfModel {
+    pub fn new(acc: AcceleratorConfig, cfg: ModelConfig) -> Self {
+        Self { acc, cfg, pipelined_dataflow: true }
+    }
+
+    /// Stages of one layer at `l` tokens (per-token steady-state cycles).
+    fn layer_stages(&self, _l: u64) -> Vec<Stage> {
+        let acc = &self.acc;
+        let cfg = &self.cfg;
+        let d = cfg.d_model as u64;
+        vec![
+            Stage::new("norm", rmsnorm_cycles(acc, 1, d), 4),
+            Stage::new(
+                "linear.in_proj",
+                linear_cycles(acc, 1, d, cfg.d_in_proj() as u64) - 16,
+                16,
+            ),
+            Stage::new(
+                "conv",
+                conv_cycles(acc, 1, cfg.conv_dim() as u64) - 8,
+                8,
+            ),
+            Stage::new(
+                "silu",
+                silu_cycles(acc, cfg.conv_dim() as u64) - 8,
+                8,
+            ),
+            Stage::new("ssm", ssm_cycles_per_token(acc, cfg), 12),
+            Stage::new(
+                "gated_norm",
+                rmsnorm_cycles(acc, 1, cfg.d_inner() as u64),
+                4,
+            ),
+            Stage::new(
+                "linear.out_proj",
+                linear_cycles(acc, 1, cfg.d_inner() as u64, d) - 16,
+                16,
+            ),
+        ]
+    }
+
+    fn accumulate_breakdown(&self, stages: &[Stage], l: u64, bd: &mut Breakdown) {
+        for s in stages {
+            let c = s.per_token * l;
+            if s.name.starts_with("linear") {
+                bd.linear += c;
+            } else if s.name == "conv" {
+                bd.conv += c;
+            } else if s.name == "ssm" {
+                bd.ssm += c;
+            } else {
+                bd.norm_silu += c;
+            }
+        }
+    }
+
+    /// Prefill latency for `seq_len` tokens (lm head on the final token).
+    pub fn prefill(&self, seq_len: usize) -> PrefillPerf {
+        let l = seq_len as u64;
+        let cfg = &self.cfg;
+        let stages = self.layer_stages(l);
+        let sched = if self.pipelined_dataflow {
+            pipelined(&stages, l)
+        } else {
+            sequential(&stages, l)
+        };
+        let mut compute = sched.total_cycles * cfg.n_layer as u64;
+        let mut bd = Breakdown::default();
+        self.accumulate_breakdown(&stages, l, &mut bd);
+        // scale all components by n_layer (accumulate did one layer)
+        let nl = cfg.n_layer as u64;
+        bd.linear *= nl;
+        bd.conv *= nl;
+        bd.ssm *= nl;
+        bd.norm_silu *= nl;
+        // final norm + lm head on last token
+        let lm = linear_cycles(&self.acc, 1, cfg.d_model as u64, cfg.vocab_size as u64);
+        compute += lm + rmsnorm_cycles(&self.acc, 1, cfg.d_model as u64);
+        bd.linear += lm;
+        // weights streamed once per pass, overlapped with compute
+        let dram = dram_cycles(&self.acc, weight_stream_bytes(cfg));
+        bd.dram = dram;
+        let cycles = compute.max(dram);
+        let seconds = cycles as f64 / self.acc.clock_hz as f64;
+        PrefillPerf {
+            seq_len,
+            cycles,
+            seconds,
+            tokens_per_s: seq_len as f64 / seconds,
+            breakdown: bd,
+            bottleneck: if dram > compute { "dram".into() } else { sched.bottleneck },
+        }
+    }
+
+    /// Decode throughput at `batch` concurrent sequences (weights streamed
+    /// once per step and shared across the batch).
+    pub fn decode(&self, batch: usize) -> DecodePerf {
+        let cfg = &self.cfg;
+        let stages = self.layer_stages(1);
+        let per_layer: u64 = stages.iter().map(|s| s.per_token).sum();
+        let fills: u64 = stages.iter().map(|s| s.fill).sum();
+        let lm = linear_cycles(&self.acc, 1, cfg.d_model as u64, cfg.vocab_size as u64);
+        let compute_one = per_layer * cfg.n_layer as u64 + fills + lm;
+        let compute = compute_one * batch as u64; // batch shares weights
+        let dram = dram_cycles(&self.acc, weight_stream_bytes(cfg));
+        let cycles = compute.max(dram);
+        let mut bd = Breakdown::default();
+        self.accumulate_breakdown(&stages, 1, &mut bd);
+        let nl = cfg.n_layer as u64;
+        bd.conv *= nl;
+        bd.ssm *= nl;
+        bd.norm_silu *= nl;
+        bd.linear += lm;
+        bd.dram = dram;
+        let seconds = cycles as f64 / self.acc.clock_hz as f64;
+        DecodePerf {
+            batch,
+            cycles_per_step: cycles,
+            seconds_per_step: seconds,
+            tokens_per_s: batch as f64 / seconds,
+            compute_bound: compute >= dram,
+            breakdown: bd,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_130m() -> PerfModel {
+        PerfModel::new(AcceleratorConfig::default(), ModelConfig::mamba2_130m())
+    }
+
+    fn model_2_7b() -> PerfModel {
+        PerfModel::new(AcceleratorConfig::default(), ModelConfig::mamba2_2_7b())
+    }
+
+    #[test]
+    fn prefill_scales_sublinearly_then_linearly() {
+        let m = model_130m();
+        let t256 = m.prefill(256).seconds;
+        let t1024 = m.prefill(1024).seconds;
+        let r = t1024 / t256;
+        assert!(r > 3.0 && r < 4.3, "{r}");
+    }
+
+    #[test]
+    fn prefill_130m_throughput_order_of_magnitude() {
+        // compute-bound prefill ≈ thousands of tokens/s at 250 MHz
+        let p = model_130m().prefill(512);
+        assert!(
+            p.tokens_per_s > 1_000.0 && p.tokens_per_s < 100_000.0,
+            "{}",
+            p.tokens_per_s
+        );
+        assert_ne!(p.bottleneck, "dram");
+    }
+
+    #[test]
+    fn decode_2_7b_matches_table3_class() {
+        // Table III: 5.68 token/s on Mamba2-2.7B — bandwidth-bound
+        let d = model_2_7b().decode(1);
+        assert!(!d.compute_bound, "2.7B decode must be DRAM-bound");
+        assert!(
+            d.tokens_per_s > 3.0 && d.tokens_per_s < 9.0,
+            "tok/s = {}",
+            d.tokens_per_s
+        );
+    }
+
+    #[test]
+    fn decode_batching_amortizes_weight_stream() {
+        let m = model_2_7b();
+        let t1 = m.decode(1).tokens_per_s;
+        let t8 = m.decode(8).tokens_per_s;
+        assert!(t8 > 4.0 * t1, "B8 {t8} vs B1 {t1}");
+    }
+
+    #[test]
+    fn pipelining_ablation_shows_gain() {
+        let mut m = model_130m();
+        let piped = m.prefill(512).cycles;
+        m.pipelined_dataflow = false;
+        let seq = m.prefill(512).cycles;
+        assert!(
+            seq as f64 / piped as f64 > 1.3,
+            "pipelining gain {}",
+            seq as f64 / piped as f64
+        );
+    }
+
+    #[test]
+    fn breakdown_fractions_sum_to_one() {
+        let p = model_130m().prefill(256);
+        let s: f64 = p.breakdown.fractions().iter().map(|(_, f)| f).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_dominates_130m_compute() {
+        // in_proj is by far the widest op at these dims
+        let p = model_130m().prefill(256);
+        assert!(p.breakdown.linear > p.breakdown.conv);
+        assert!(p.breakdown.linear > p.breakdown.norm_silu);
+    }
+}

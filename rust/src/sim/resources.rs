@@ -1,0 +1,247 @@
+//! FPGA resource model (Table IV / Fig. 10): composes per-primitive
+//! LUT/FF/DSP/BRAM costs over the units each module instantiates.
+//!
+//! Primitive costs are standard Virtex-7 synthesis results: an int8 MAC in
+//! fabric ≈ 45 LUT, a 16×16 fixed multiply = 1 DSP48, an FP16 mult ≈ 2 DSP +
+//! control, etc.  The paper's headline comparisons are *relative* (which
+//! module dominates which resource; NAU vs FP16-unit savings), which this
+//! composition reproduces.
+
+use crate::config::AcceleratorConfig;
+
+use super::buffer::BufferPlan;
+use crate::config::ModelConfig;
+
+/// Resource vector.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Resources {
+    pub lut: u64,
+    pub ff: u64,
+    pub dsp: u64,
+    pub bram: u64,
+}
+
+impl Resources {
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            dsp: self.dsp + o.dsp,
+            bram: self.bram + o.bram,
+        }
+    }
+
+    pub fn scale(&self, k: u64) -> Resources {
+        Resources { lut: self.lut * k, ff: self.ff * k, dsp: self.dsp * k, bram: self.bram * k }
+    }
+}
+
+// ---- primitive costs (Virtex-7 class) ----
+
+/// int8 multiply-add in LUT fabric (the paper: "8-bit MAT units are mainly
+/// implemented using LUT units").
+pub const INT8_MAC: Resources = Resources { lut: 45, ff: 16, dsp: 0, bram: 0 };
+/// 16-bit fixed multiply on a DSP48E1.
+pub const FX16_MUL: Resources = Resources { lut: 12, ff: 32, dsp: 1, bram: 0 };
+/// 16-bit fixed add in fabric.
+pub const FX16_ADD: Resources = Resources { lut: 16, ff: 16, dsp: 0, bram: 0 };
+/// FP16 multiplier (DSP-based) — used by the Half Float Nonlinear Unit.
+pub const FP16_MUL: Resources = Resources { lut: 120, ff: 120, dsp: 1, bram: 0 };
+/// FP16 adder.
+pub const FP16_ADD: Resources = Resources { lut: 200, ff: 120, dsp: 1, bram: 0 };
+/// FP16 special-function evaluator stage (range reduction + poly, per lane).
+pub const FP16_SFU_STAGE: Resources = Resources { lut: 260, ff: 150, dsp: 2, bram: 0 };
+/// control/sequencing overhead per module
+pub const MODULE_CTRL: Resources = Resources { lut: 1800, ff: 2400, dsp: 0, bram: 0 };
+
+/// Hadamard-based Linear Module (6 groups × {4 HAT64 + 64 MAT4-int8}).
+pub fn linear_module(acc: &AcceleratorConfig) -> Resources {
+    let g = acc.linear_groups as u64;
+    // HAT: 64-input add/sub butterfly = 63 16-bit adders + sign muxes
+    let hat = FX16_ADD.scale((acc.hat_width - 1) as u64)
+        .add(&Resources { lut: 700, ff: 500, dsp: 0, bram: 0 });
+    let hats = hat.scale((acc.hats_per_group) as u64 * g);
+    // int8 MAT of width 4: 4 MACs + tree + 21b accumulator
+    let mat = INT8_MAC.scale(acc.linear_mat_width as u64)
+        .add(&Resources { lut: 40, ff: 42, dsp: 0, bram: 0 });
+    let mats = mat.scale(acc.mats_per_group as u64 * g);
+    // requantization (×s_coe, >>s_shift): one DSP multiplier per group lane
+    let requant = FX16_MUL.scale(4 * g).add(&FX16_ADD.scale(4 * g));
+    hats.add(&mats).add(&requant).add(&MODULE_CTRL.scale(2))
+}
+
+/// Convolution Module (32 MAT4, 16-bit fixed → DSP MACs).
+pub fn conv_module(acc: &AcceleratorConfig) -> Resources {
+    let mat = FX16_MUL.scale(acc.conv_kernel as u64)
+        .add(&FX16_ADD.scale(acc.conv_kernel as u64 - 1))
+        .add(&Resources { lut: 30, ff: 40, dsp: 0, bram: 0 });
+    mat.scale(acc.conv_mats as u64)
+        .add(&FX16_MUL.scale(acc.conv_mats as u64)) // requant
+        .add(&MODULE_CTRL)
+}
+
+/// The 24-lane Nonlinear Approximation Unit (Fig. 8).
+pub fn nau_unit(acc: &AcceleratorConfig) -> Resources {
+    let lanes = acc.nau_lanes as u64;
+    // per lane: ×log2e (1 DSP), u/v split (fabric), PWL mult-add (1 DSP +
+    // adds), barrel shift, RPU negate, delay regs, post-add
+    let per_lane = FX16_MUL
+        .add(&FX16_MUL)
+        .add(&FX16_ADD.scale(3))
+        .add(&Resources { lut: 90, ff: 120, dsp: 0, bram: 0 }); // shift+LUT+delay
+    per_lane.scale(lanes).add(&Resources { lut: 400, ff: 600, dsp: 0, bram: 0 })
+}
+
+/// FP16 nonlinear unit of the same 24-lane throughput (the Fig. 10
+/// comparison baseline): per lane an FP16 SFU pipeline (~4 stages) plus
+/// FP16 mult/add pre/post processing.
+pub fn half_float_nonlinear_unit(acc: &AcceleratorConfig) -> Resources {
+    let lanes = acc.nau_lanes as u64;
+    let per_lane = FP16_SFU_STAGE
+        .add(&FP16_MUL)
+        .add(&FP16_ADD)
+        .add(&Resources { lut: 60, ff: 60, dsp: 0, bram: 0 });
+    per_lane.scale(lanes).add(&Resources { lut: 500, ff: 800, dsp: 0, bram: 0 })
+}
+
+/// SSM Module: Step1 {PAU24+NAU24}, Step2 {PMU24+NAU24, PMU64},
+/// Step3 {32×(PMU8+PMA8+MAT8)} + final PMA32.  16-bit fixed → DSP-heavy.
+pub fn ssm_module(acc: &AcceleratorConfig) -> Resources {
+    let pau24 = FX16_ADD.scale(24);
+    let naus = nau_unit(acc).scale(2);
+    let pmu24 = FX16_MUL.scale(24);
+    let pmu64 = FX16_MUL.scale(64);
+    let step3_unit = FX16_MUL
+        .scale(acc.ssm_step3_width as u64) // PMU8
+        .add(&FX16_MUL.scale(acc.ssm_step3_width as u64)) // PMA mul
+        .add(&FX16_ADD.scale(acc.ssm_step3_width as u64)) // PMA add
+        .add(&FX16_MUL.scale(acc.ssm_step3_width as u64)) // MAT mul
+        .add(&FX16_ADD.scale(acc.ssm_step3_width as u64 - 1)); // MAT tree
+    let step3 = step3_unit.scale(acc.ssm_step3_units as u64);
+    let final_pma = FX16_MUL.scale(32).add(&FX16_ADD.scale(32));
+    pau24
+        .add(&naus)
+        .add(&pmu24)
+        .add(&pmu64)
+        .add(&step3)
+        .add(&final_pma)
+        .add(&MODULE_CTRL.scale(3))
+}
+
+/// RMS Norm + SiLU floating-point group (16 FP lanes × two modules, plus
+/// rsqrt/sigmoid SFUs).
+pub fn float_modules(_acc: &AcceleratorConfig) -> Resources {
+    let lanes = 16u64;
+    let fp_mac = FP16_MUL.add(&FP16_ADD);
+    let rms = fp_mac.scale(lanes).add(&FP16_SFU_STAGE.scale(4)); // rsqrt
+    let silu = fp_mac.scale(lanes).add(&FP16_SFU_STAGE.scale(8)); // sigmoid
+    rms.add(&silu).add(&MODULE_CTRL.scale(2))
+}
+
+/// Buffer region (Table IV row "Buffer"): BRAM for the 130M working set +
+/// addressing fabric.
+pub fn buffer_region(acc: &AcceleratorConfig) -> Resources {
+    let plan = BufferPlan::for_layer(&ModelConfig::mamba2_130m(), 64, 1.0);
+    let brams = plan.brams().min(acc.total_bram36);
+    Resources { lut: 13_000, ff: 60_000, dsp: 0, bram: brams }
+}
+
+/// Interconnect/control/DMA ("Others" row).
+pub fn others() -> Resources {
+    Resources { lut: 44_000, ff: 46_000, dsp: 192, bram: 0 }
+}
+
+/// Full Table IV–style report.
+#[derive(Debug, Clone)]
+pub struct UtilizationReport {
+    pub rows: Vec<(String, Resources)>,
+    pub total: Resources,
+    pub budget: Resources,
+}
+
+pub fn utilization(acc: &AcceleratorConfig) -> UtilizationReport {
+    let rows = vec![
+        ("Linear".to_string(), linear_module(acc)),
+        ("Convolution".to_string(), conv_module(acc)),
+        ("SSM".to_string(), ssm_module(acc)),
+        ("RMS Norm. & SiLU".to_string(), float_modules(acc)),
+        ("Buffer".to_string(), buffer_region(acc)),
+        ("Others".to_string(), others()),
+    ];
+    let total = rows
+        .iter()
+        .fold(Resources::default(), |a, (_, r)| a.add(r));
+    UtilizationReport {
+        rows,
+        total,
+        budget: Resources {
+            lut: acc.total_lut,
+            ff: acc.total_ff,
+            dsp: acc.total_dsp,
+            bram: acc.total_bram36,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acc() -> AcceleratorConfig {
+        AcceleratorConfig::default()
+    }
+
+    #[test]
+    fn fits_the_chip() {
+        let u = utilization(&acc());
+        assert!(u.total.lut <= u.budget.lut, "LUT {} > {}", u.total.lut, u.budget.lut);
+        assert!(u.total.dsp <= u.budget.dsp, "DSP {} > {}", u.total.dsp, u.budget.dsp);
+        assert!(u.total.bram <= u.budget.bram);
+        assert!(u.total.ff <= u.budget.ff);
+    }
+
+    #[test]
+    fn ssm_dominates_dsp_like_table4() {
+        // Table IV: SSM uses 66% of DSPs — by far the largest consumer.
+        let u = utilization(&acc());
+        let ssm = u.rows.iter().find(|(n, _)| n == "SSM").unwrap().1;
+        for (name, r) in &u.rows {
+            if name != "SSM" {
+                assert!(ssm.dsp > r.dsp, "SSM {} vs {name} {}", ssm.dsp, r.dsp);
+            }
+        }
+        let frac = ssm.dsp as f64 / u.total.dsp as f64;
+        assert!(frac > 0.5, "SSM DSP share {frac}");
+    }
+
+    #[test]
+    fn linear_dominates_lut_like_table4() {
+        // Table IV: the int8 MAT arrays put Linear on top of the LUT column.
+        let u = utilization(&acc());
+        let lin = u.rows.iter().find(|(n, _)| n == "Linear").unwrap().1;
+        let ssm = u.rows.iter().find(|(n, _)| n == "SSM").unwrap().1;
+        assert!(lin.lut > ssm.lut);
+        assert_eq!(lin.dsp < 200, true, "linear mostly LUT-based: {}", lin.dsp);
+    }
+
+    #[test]
+    fn buffer_owns_all_bram() {
+        let u = utilization(&acc());
+        for (name, r) in &u.rows {
+            if name != "Buffer" {
+                assert_eq!(r.bram, 0, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig10_nau_saves_dsp_and_ff() {
+        // Fig. 10: NAU saves ~56% DSP and ~49% FF vs the FP16 unit.
+        let nau = nau_unit(&acc());
+        let fp = half_float_nonlinear_unit(&acc());
+        let dsp_save = 1.0 - nau.dsp as f64 / fp.dsp as f64;
+        let ff_save = 1.0 - nau.ff as f64 / fp.ff as f64;
+        assert!(dsp_save > 0.4 && dsp_save < 0.75, "DSP saving {dsp_save}");
+        assert!(ff_save > 0.3 && ff_save < 0.65, "FF saving {ff_save}");
+    }
+}

@@ -1,0 +1,194 @@
+//! Vector Processing Units (paper Table I / Fig. 5): the five primitive
+//! units every FastMamba module is built from.
+//!
+//! | VPU | inputs            | output | function            |
+//! |-----|-------------------|--------|---------------------|
+//! | PAU | A:n, B:n          | P:n    | A + B               |
+//! | PMU | A:n, B:n          | P:n    | A × B               |
+//! | PMA | A:n, B:n, C:n     | P:n    | A × B + C           |
+//! | HAT | A:n               | P:1    | Σ A_i (adder tree)  |
+//! | MAT | A:n, B:n          | P:1    | Σ A_i × B_i         |
+//!
+//! Functional ops run on the Q6.10 fixed-point datapath (i32 lanes, wide
+//! i64 accumulators in the trees, exactly like the "4 × 21b" accumulation
+//! of Fig. 6).  The cycle model is: throughput 1 vector issue/cycle,
+//! pipeline latency = `depth()` cycles to drain.
+
+use crate::config::FixedSpec;
+use crate::quant::fixed::{fx_mac, fx_mul, fx_renorm, sat_add};
+
+/// Pipeline depths in cycles (DSP48 multiply = 3-stage, adder = 1-stage,
+/// tree = log2(n) adder stages).
+pub const ADD_LAT: u64 = 1;
+pub const MUL_LAT: u64 = 3;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VpuKind {
+    Pau,
+    Pmu,
+    Pma,
+    Hat,
+    Mat,
+}
+
+/// A VPU instance of a fixed vector width.
+#[derive(Debug, Clone)]
+pub struct Vpu {
+    pub kind: VpuKind,
+    pub width: usize,
+    pub spec: FixedSpec,
+}
+
+impl Vpu {
+    pub fn new(kind: VpuKind, width: usize) -> Self {
+        Self { kind, width, spec: FixedSpec::default() }
+    }
+
+    /// Pipeline latency of one vector operation.
+    pub fn depth(&self) -> u64 {
+        let tree = (self.width.max(2) as f64).log2().ceil() as u64 * ADD_LAT;
+        match self.kind {
+            VpuKind::Pau => ADD_LAT,
+            VpuKind::Pmu => MUL_LAT,
+            VpuKind::Pma => MUL_LAT + ADD_LAT,
+            VpuKind::Hat => tree,
+            VpuKind::Mat => MUL_LAT + tree,
+        }
+    }
+
+    /// Cycles to issue `n_vectors` back-to-back operations (pipelined).
+    pub fn cycles(&self, n_vectors: u64) -> u64 {
+        if n_vectors == 0 {
+            0
+        } else {
+            n_vectors + self.depth()
+        }
+    }
+
+    // ---- functional fixed-point ops ----
+
+    pub fn pau(&self, a: &[i32], b: &[i32], out: &mut [i32]) {
+        debug_assert_eq!(self.kind, VpuKind::Pau);
+        for i in 0..a.len() {
+            out[i] = sat_add(a[i], b[i], &self.spec);
+        }
+    }
+
+    pub fn pmu(&self, a: &[i32], b: &[i32], out: &mut [i32]) {
+        debug_assert_eq!(self.kind, VpuKind::Pmu);
+        for i in 0..a.len() {
+            out[i] = fx_mul(a[i], b[i], &self.spec);
+        }
+    }
+
+    pub fn pma(&self, a: &[i32], b: &[i32], c: &[i32], out: &mut [i32]) {
+        debug_assert_eq!(self.kind, VpuKind::Pma);
+        for i in 0..a.len() {
+            out[i] = sat_add(fx_mul(a[i], b[i], &self.spec), c[i], &self.spec);
+        }
+    }
+
+    /// Adder tree: Σ A_i with a wide accumulator, renormalized at the root.
+    pub fn hat(&self, a: &[i32]) -> i32 {
+        debug_assert_eq!(self.kind, VpuKind::Hat);
+        let acc: i64 = a.iter().map(|v| *v as i64).sum();
+        acc.clamp(self.spec.qmin() as i64, self.spec.qmax() as i64) as i32
+    }
+
+    /// Multiplier-adder tree: Σ A_i × B_i (wide accumulate, renormalize).
+    pub fn mat(&self, a: &[i32], b: &[i32]) -> i32 {
+        debug_assert_eq!(self.kind, VpuKind::Mat);
+        let mut acc = 0i64;
+        for i in 0..a.len() {
+            acc = fx_mac(acc, a[i], b[i]);
+        }
+        fx_renorm(acc, &self.spec)
+    }
+
+    /// int8 MAT (the Hadamard Linear Module's 8-bit arrays): exact i32 sum.
+    pub fn mat_i8(a: &[i8], b: &[i8]) -> i32 {
+        let mut acc = 0i32;
+        for i in 0..a.len() {
+            acc += a[i] as i32 * b[i] as i32;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fixed::to_fixed;
+
+    fn spec() -> FixedSpec {
+        FixedSpec::default()
+    }
+
+    #[test]
+    fn table1_functional_contracts() {
+        let s = spec();
+        let a: Vec<i32> = [1.0f32, 2.0, -3.0, 0.5].iter().map(|v| to_fixed(*v, &s)).collect();
+        let b: Vec<i32> = [0.5f32, -1.0, 2.0, 4.0].iter().map(|v| to_fixed(*v, &s)).collect();
+        let c: Vec<i32> = [10.0f32, 10.0, 10.0, 10.0].iter().map(|v| to_fixed(*v, &s)).collect();
+        let mut out = vec![0i32; 4];
+
+        Vpu::new(VpuKind::Pau, 4).pau(&a, &b, &mut out);
+        assert_eq!(out[0], to_fixed(1.5, &s));
+        assert_eq!(out[2], to_fixed(-1.0, &s));
+
+        Vpu::new(VpuKind::Pmu, 4).pmu(&a, &b, &mut out);
+        assert_eq!(out[1], to_fixed(-2.0, &s));
+        assert_eq!(out[3], to_fixed(2.0, &s));
+
+        Vpu::new(VpuKind::Pma, 4).pma(&a, &b, &c, &mut out);
+        assert_eq!(out[0], to_fixed(10.5, &s));
+
+        let hat = Vpu::new(VpuKind::Hat, 4);
+        assert_eq!(hat.hat(&a), to_fixed(0.5, &s));
+
+        let mat = Vpu::new(VpuKind::Mat, 4);
+        // 1*0.5 + 2*(-1) + (-3)*2 + 0.5*4 = -5.5
+        assert_eq!(mat.mat(&a, &b), to_fixed(-5.5, &s));
+    }
+
+    #[test]
+    fn mat_i8_exact() {
+        let a = [100i8, -100, 127, -128];
+        let b = [100i8, 100, 127, -128];
+        assert_eq!(Vpu::mat_i8(&a, &b), 10000 - 10000 + 16129 + 16384);
+    }
+
+    #[test]
+    fn pipeline_cycle_model() {
+        let pmu = Vpu::new(VpuKind::Pmu, 24);
+        assert_eq!(pmu.cycles(0), 0);
+        assert_eq!(pmu.cycles(1), 1 + MUL_LAT);
+        assert_eq!(pmu.cycles(100), 100 + MUL_LAT); // pipelined
+        let mat64 = Vpu::new(VpuKind::Mat, 64);
+        assert_eq!(mat64.depth(), MUL_LAT + 6); // log2(64)=6 tree stages
+    }
+
+    #[test]
+    fn saturation_in_tree() {
+        let s = spec();
+        let big = vec![s.qmax(); 8];
+        let hat = Vpu::new(VpuKind::Hat, 8);
+        assert_eq!(hat.hat(&big), s.qmax()); // saturates, doesn't wrap
+    }
+
+    #[test]
+    fn pma_matches_separate_ops() {
+        let s = spec();
+        let n = 16;
+        let a: Vec<i32> = (0..n).map(|i| to_fixed(i as f32 * 0.25 - 2.0, &s)).collect();
+        let b: Vec<i32> = (0..n).map(|i| to_fixed(1.0 - i as f32 * 0.125, &s)).collect();
+        let c: Vec<i32> = (0..n).map(|i| to_fixed(i as f32 * 0.5, &s)).collect();
+        let mut pma_out = vec![0i32; n];
+        Vpu::new(VpuKind::Pma, n).pma(&a, &b, &c, &mut pma_out);
+        let mut mul_out = vec![0i32; n];
+        Vpu::new(VpuKind::Pmu, n).pmu(&a, &b, &mut mul_out);
+        let mut add_out = vec![0i32; n];
+        Vpu::new(VpuKind::Pau, n).pau(&mul_out, &c, &mut add_out);
+        assert_eq!(pma_out, add_out);
+    }
+}

@@ -1,0 +1,166 @@
+//! Micro-benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations, robust statistics, and table-style reporting shared by
+//! every `benches/` target.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement series.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub stddev_s: f64,
+}
+
+impl Stats {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.median_s
+    }
+}
+
+/// Run `f` until `min_time` has elapsed (after `warmup` iterations) and at
+/// least `min_iters` samples are collected.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize,
+                         min_time: Duration, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    stats_from(name, &mut samples)
+}
+
+/// Quick preset: 2 warmups, ≥5 iters, ≥200 ms.
+pub fn bench_quick<F: FnMut()>(name: &str, f: F) -> Stats {
+    bench(name, 2, 5, Duration::from_millis(200), f)
+}
+
+fn stats_from(name: &str, samples: &mut [f64]) -> Stats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        median_s: samples[n / 2],
+        p95_s: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        min_s: samples[0],
+        stddev_s: var.sqrt(),
+    }
+}
+
+/// Human-readable time.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} median {:>12}  mean {:>12}  p95 {:>12}  (n={})",
+            self.name,
+            fmt_time(self.median_s),
+            fmt_time(self.mean_s),
+            fmt_time(self.p95_s),
+            self.iters
+        )
+    }
+}
+
+/// Markdown-ish table printer used by the table/figure regenerators.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let body: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", body.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0u64;
+        let st = bench("noop", 1, 10, Duration::from_millis(5), || {
+            n += 1;
+            std::hint::black_box(n);
+        });
+        assert!(st.iters >= 10);
+        assert!(st.median_s >= 0.0);
+        assert!(st.min_s <= st.median_s && st.median_s <= st.p95_s);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // shouldn't panic
+    }
+}

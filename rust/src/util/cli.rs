@@ -1,0 +1,93 @@
+//! Tiny CLI argument parser (clap is unavailable offline): positional
+//! subcommand + `--flag value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut argv = argv.peekable();
+        while let Some(a) = argv.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = if let Some(nxt) = argv.peek() {
+                    if nxt.starts_with("--") {
+                        "true".to_string()
+                    } else {
+                        argv.next().unwrap()
+                    }
+                } else {
+                    "true".to_string()
+                };
+                out.flags.insert(name.to_string(), val);
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --batch 8 --variant fastmamba --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("batch", 1), 8);
+        assert_eq!(a.get("variant"), Some("fastmamba"));
+        assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("report");
+        assert_eq!(a.usize_or("batch", 4), 4);
+        assert_eq!(a.get_or("variant", "fp32"), "fp32");
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("run file1 file2 --x 1");
+        assert_eq!(a.positionals, vec!["file1", "file2"]);
+    }
+}

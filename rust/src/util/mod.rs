@@ -1,0 +1,9 @@
+//! Dependency-free substrates: a JSON parser for the AOT manifest, a
+//! deterministic RNG, a statistics-reporting micro-benchmark harness, and a
+//! tiny CLI argument parser.  (The build environment is offline; everything
+//! beyond the `xla` crate is implemented here.)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

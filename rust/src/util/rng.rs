@@ -1,0 +1,130 @@
+//! Deterministic RNG (SplitMix64 core) — workload generation, synthetic
+//! weights, and property-test inputs all derive from explicit seeds so every
+//! experiment is reproducible bit-for-bit.
+
+/// SplitMix64: tiny, fast, good equidistribution for non-crypto use.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.uniform() * (hi - lo)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal (Box–Muller).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-300);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Vec of N(0, std) f32s.
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32 * std).collect()
+    }
+
+    /// Heavy-tailed vector: mostly N(0,1) with a few channels scaled up —
+    /// the Fig. 3 activation distribution generator.
+    pub fn outlier_vec(&mut self, n: usize, outlier_frac: f64, gain: f32) -> Vec<f32> {
+        let mut v = self.normal_vec(n, 1.0);
+        let n_out = ((n as f64 * outlier_frac).ceil() as usize).max(1);
+        for _ in 0..n_out {
+            let i = self.below(n);
+            v[i] *= gain;
+        }
+        v
+    }
+
+    /// Exponential with rate lambda (Poisson inter-arrival times).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.uniform().max(1e-300).ln() / lambda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let v = r.normal_vec(50_000, 1.0);
+        let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
+        let var: f32 = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+            / v.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn outliers_increase_kurtosis() {
+        let mut r = Rng::new(5);
+        let base = r.normal_vec(10_000, 1.0);
+        let heavy = r.outlier_vec(10_000, 0.01, 30.0);
+        let kurt = |v: &[f32]| {
+            let m = v.iter().sum::<f32>() / v.len() as f32;
+            let v2 = v.iter().map(|x| (x - m).powi(2)).sum::<f32>() / v.len() as f32;
+            let v4 = v.iter().map(|x| (x - m).powi(4)).sum::<f32>() / v.len() as f32;
+            v4 / (v2 * v2)
+        };
+        assert!(kurt(&heavy) > 3.0 * kurt(&base));
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(9);
+        let mean: f64 =
+            (0..20_000).map(|_| r.exponential(4.0)).sum::<f64>() / 20_000.0;
+        assert!((mean - 0.25).abs() < 0.02, "{mean}");
+    }
+}
