@@ -1,0 +1,111 @@
+//! Bench: speculative decode throughput vs draft length k and acceptance
+//! rate, alongside `table3_decode_throughput`.
+//!
+//! Two parts: (a) the accelerator-model prediction (Mamba2-2.7B on the
+//! VC709 performance model) of tokens/s and speedup across k ∈ {2, 4, 8}
+//! and acceptance rates; (b) *measured* PJRT speculative decode on the
+//! tiny serving model — fastmamba drafter + fp32 verifier vs plain greedy
+//! fp32 decode on the same trace, with the acceptance rate that trace
+//! actually achieves.
+
+use fastmamba::config::{AcceleratorConfig, ModelConfig};
+use fastmamba::coordinator::{
+    DrafterBackend, Engine, EngineConfig, Request, SpecConfig, SpecEngine,
+};
+use fastmamba::eval::load_corpus;
+use fastmamba::runtime::Runtime;
+use fastmamba::sim::SpecSim;
+use fastmamba::util::bench::Table;
+use fastmamba::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // (a) accelerator-model prediction at 2.7B (DRAM-bound decode)
+    let sim = SpecSim::new(AcceleratorConfig::default(), ModelConfig::mamba2_2_7b());
+    let base = sim.perf.decode(1).tokens_per_s;
+    println!(
+        "sim baseline decode (Mamba2-2.7B): {base:.2} tok/s; drafter step = \
+         {:.2}x a verifier step",
+        sim.draft_cost_ratio
+    );
+    let mut t = Table::new(&["k", "accept", "committed/round", "sim tok/s", "speedup"]);
+    for k in [2usize, 4, 8] {
+        for p in [0.6f64, 0.8, 0.9, 1.0] {
+            let pt = sim.point(k, p);
+            t.row(&[
+                k.to_string(),
+                format!("{p:.2}"),
+                format!("{:.2}", pt.committed_per_round),
+                format!("{:.2}", pt.tokens_per_s),
+                format!("{:.2}x", pt.speedup),
+            ]);
+        }
+    }
+    t.print();
+
+    // (b) measured PJRT speculative decode on the tiny serving model
+    let rt = match Runtime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("(measured part skipped: {e})");
+            return Ok(());
+        }
+    };
+    let corpus = load_corpus(&rt.dir)?;
+    let vocab = rt.weights_host.cfg.vocab_size as u32;
+    let n_requests = 8usize;
+    let max_new = 32usize;
+    let trace = |seed: u64| -> Vec<Request> {
+        let mut rng = Rng::new(seed);
+        (0..n_requests)
+            .map(|id| {
+                let plen = [24usize, 40, 70, 100][rng.below(4)];
+                let start = rng.below(corpus.len() - plen - 1);
+                let prompt: Vec<u32> =
+                    corpus[start..start + plen].iter().map(|t| t % vocab).collect();
+                Request::new(id as u64, prompt, max_new, "fp32")
+            })
+            .collect()
+    };
+
+    let mut base_eng = Engine::new(&rt, EngineConfig { max_active: 1, greedy_chunking: true });
+    for r in trace(3) {
+        base_eng.submit(r);
+    }
+    base_eng.run()?;
+    let base_tps = base_eng.metrics.decode_tokens_per_s();
+    println!("\nmeasured baseline (greedy fp32, B=1): {base_tps:.1} gen tok/s");
+
+    let mut t2 = Table::new(&["k", "drafter", "gen tok/s", "speedup", "accept", "rollbacks"]);
+    let cases = [
+        (2usize, DrafterBackend::Native),
+        (4, DrafterBackend::Native),
+        (8, DrafterBackend::Native),
+        (4, DrafterBackend::Pjrt),
+    ];
+    for (k, backend) in cases {
+        let mut spec = SpecEngine::new(
+            &rt,
+            SpecConfig {
+                draft_k: k,
+                max_active: 1,
+                drafter_backend: backend,
+                ..SpecConfig::default()
+            },
+        );
+        for r in trace(3) {
+            spec.submit(r);
+        }
+        spec.run()?;
+        let tps = spec.metrics.decode_tokens_per_s();
+        t2.row(&[
+            k.to_string(),
+            format!("{backend:?}").to_lowercase(),
+            format!("{tps:.1}"),
+            format!("{:.2}x", tps / base_tps),
+            format!("{:.1}%", spec.metrics.acceptance_rate() * 100.0),
+            spec.metrics.rollbacks.to_string(),
+        ]);
+    }
+    t2.print();
+    Ok(())
+}

@@ -13,6 +13,30 @@ pub struct BatchPlan {
     pub padding: usize,
 }
 
+/// Smallest bucket that covers `n` items, from an ascending bucket list;
+/// `None` when even the largest bucket is too small.  Shared by the decode
+/// batcher (batch buckets) and the speculative engine (verify windows over
+/// the prefill buckets).
+pub fn smallest_covering(buckets_ascending: &[usize], n: usize) -> Option<usize> {
+    buckets_ascending.iter().copied().find(|b| *b >= n)
+}
+
+/// Cover `n` items with full buckets, largest first; returns the chunk
+/// list and the remainder (always smaller than the smallest bucket).
+/// Shared by the engine's chunked-prefill admission and the speculative
+/// engine's verifier-debt consolidation.
+pub fn full_bucket_plan(buckets_ascending: &[usize], n: usize) -> (Vec<usize>, usize) {
+    let mut chunks = Vec::new();
+    let mut rest = n;
+    for &b in buckets_ascending.iter().rev() {
+        while rest >= b {
+            chunks.push(b);
+            rest -= b;
+        }
+    }
+    (chunks, rest)
+}
+
 /// Greedy bucket packing: take as many sequences as fit the largest bucket;
 /// the remainder uses the smallest bucket that covers it.
 #[derive(Debug, Clone)]
@@ -36,12 +60,7 @@ impl DecodeBatcher {
         let mut remaining = n_active;
         while remaining > 0 {
             let take = remaining.min(largest);
-            // smallest bucket >= take
-            let bucket = *self
-                .buckets
-                .iter()
-                .find(|b| **b >= take)
-                .unwrap_or(&largest);
+            let bucket = smallest_covering(&self.buckets, take).unwrap_or(largest);
             let members: Vec<usize> = (next..next + take).collect();
             plans.push(BatchPlan { bucket, members, padding: bucket - take });
             next += take;
@@ -119,5 +138,28 @@ mod tests {
         assert_eq!(p.len(), 2);
         assert_eq!(p[0].padding, 0);
         assert_eq!(p[1].padding, 2);
+    }
+
+    #[test]
+    fn full_bucket_plan_covers_largest_first() {
+        let buckets = [32usize, 64, 128, 256];
+        assert_eq!(full_bucket_plan(&buckets, 0), (vec![], 0));
+        assert_eq!(full_bucket_plan(&buckets, 31), (vec![], 31));
+        assert_eq!(full_bucket_plan(&buckets, 32), (vec![32], 0));
+        assert_eq!(full_bucket_plan(&buckets, 300), (vec![256, 32], 12));
+        let (chunks, rest) = full_bucket_plan(&buckets, 511);
+        assert_eq!(chunks.iter().sum::<usize>() + rest, 511);
+        assert!(rest < 32);
+    }
+
+    #[test]
+    fn smallest_covering_picks_minimal_bucket() {
+        let buckets = [32usize, 64, 128, 256];
+        assert_eq!(smallest_covering(&buckets, 1), Some(32));
+        assert_eq!(smallest_covering(&buckets, 32), Some(32));
+        assert_eq!(smallest_covering(&buckets, 33), Some(64));
+        assert_eq!(smallest_covering(&buckets, 256), Some(256));
+        assert_eq!(smallest_covering(&buckets, 257), None);
+        assert_eq!(smallest_covering(&[], 1), None);
     }
 }

@@ -1,4 +1,5 @@
-//! Serving metrics: TTFT / per-token latency / throughput accounting.
+//! Serving metrics: TTFT / per-token latency / throughput accounting, plus
+//! decode-batch padding waste and speculative-decoding acceptance tracking.
 
 use std::time::Instant;
 
@@ -10,6 +11,23 @@ pub struct Metrics {
     pub prefill_chunks: u64,
     pub decode_steps: u64,
     pub decode_padded_slots: u64,
+    /// total decode-batch slots dispatched (real + padding) — the
+    /// denominator that makes [`Metrics::padding_frac`] a true fraction
+    pub decode_batch_slots: u64,
+    /// speculative decoding: draft tokens proposed by the drafter
+    pub draft_tokens: u64,
+    /// speculative decoding: draft tokens accepted by the verifier
+    pub draft_accepted: u64,
+    /// speculative decoding: draft/verify rounds executed
+    pub spec_rounds: u64,
+    /// speculative decoding: chunked-prefill verify calls issued
+    pub verify_calls: u64,
+    /// speculative decoding: drafter state rollbacks (mid-round rejections)
+    pub rollbacks: u64,
+    /// speculative decoding: extra drafter catch-up steps after full accepts
+    pub resync_steps: u64,
+    /// per-request draft acceptance rate, pushed at retire time
+    pub per_request_acceptance: Vec<f64>,
     pub ttft_s: Vec<f64>,
     pub request_latency_s: Vec<f64>,
     started: Option<Instant>,
@@ -62,17 +80,37 @@ impl Metrics {
         Self::pct(&self.request_latency_s, 0.95)
     }
 
-    /// Fraction of decode-batch slots wasted on padding.
+    /// Fraction of dispatched decode-batch slots wasted on padding.
     pub fn padding_frac(&self) -> f64 {
-        let total = self.decode_steps.max(1);
-        self.decode_padded_slots as f64 / (total as f64).max(1.0)
+        if self.decode_batch_slots == 0 {
+            return 0.0;
+        }
+        self.decode_padded_slots as f64 / self.decode_batch_slots as f64
+    }
+
+    /// Overall draft-token acceptance rate (0.0 when nothing was drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.draft_tokens == 0 {
+            return 0.0;
+        }
+        self.draft_accepted as f64 / self.draft_tokens as f64
+    }
+
+    /// Median per-request acceptance rate (speculative requests only).
+    pub fn acceptance_p50(&self) -> f64 {
+        Self::pct(&self.per_request_acceptance, 0.50)
     }
 
     pub fn summary(&self) -> String {
+        let accept = if self.draft_tokens > 0 {
+            format!("{:.1}%", self.acceptance_rate() * 100.0)
+        } else {
+            "n/a".to_string()
+        };
         format!(
             "requests={} prompt_toks={} gen_toks={} wall={:.3}s gen_tok/s={:.1} \
              ttft_p50={:.1}ms ttft_p95={:.1}ms lat_p50={:.1}ms lat_p95={:.1}ms \
-             prefill_chunks={} decode_steps={}",
+             prefill_chunks={} decode_steps={} pad_waste={:.1}% accept={}",
             self.requests_completed,
             self.prompt_tokens,
             self.tokens_generated,
@@ -84,6 +122,8 @@ impl Metrics {
             self.latency_p95() * 1e3,
             self.prefill_chunks,
             self.decode_steps,
+            self.padding_frac() * 100.0,
+            accept,
         )
     }
 }
@@ -115,5 +155,39 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(5));
         m.stop();
         assert!(m.wall_s() >= 0.004);
+    }
+
+    #[test]
+    fn padding_frac_is_a_fraction_of_slots() {
+        let mut m = Metrics::default();
+        m.decode_batch_slots = 16;
+        m.decode_padded_slots = 4;
+        assert!((m.padding_frac() - 0.25).abs() < 1e-12);
+        let empty = Metrics::default();
+        assert_eq!(empty.padding_frac(), 0.0);
+    }
+
+    #[test]
+    fn acceptance_rate_tracks_drafts() {
+        let mut m = Metrics::default();
+        assert_eq!(m.acceptance_rate(), 0.0);
+        m.draft_tokens = 10;
+        m.draft_accepted = 8;
+        assert!((m.acceptance_rate() - 0.8).abs() < 1e-12);
+        m.per_request_acceptance = vec![0.5, 0.8, 0.9];
+        assert_eq!(m.acceptance_p50(), 0.8);
+    }
+
+    #[test]
+    fn summary_shows_padding_and_acceptance() {
+        let mut m = Metrics::default();
+        m.decode_batch_slots = 10;
+        m.decode_padded_slots = 1;
+        let s = m.summary();
+        assert!(s.contains("pad_waste=10.0%"), "{s}");
+        assert!(s.contains("accept=n/a"), "{s}");
+        m.draft_tokens = 4;
+        m.draft_accepted = 3;
+        assert!(m.summary().contains("accept=75.0%"), "{}", m.summary());
     }
 }

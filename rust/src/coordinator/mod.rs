@@ -1,5 +1,6 @@
 //! Layer-3 serving coordinator: request router, chunked-prefill scheduler,
-//! dynamic decode batcher, and the SSM state manager.
+//! dynamic decode batcher, the SSM state manager, and the speculative
+//! decoding engine.
 //!
 //! Mamba serving differs from transformer serving in one decisive way: the
 //! per-request state is a *fixed-size* recurrent state (conv window + SSM
@@ -11,17 +12,31 @@
 //! prompts in bucket-sized chunks (exact chunked prefill — validated
 //! bit-exact against whole-sequence prefill) before handing them to the
 //! decode loop.  All compute goes through [`crate::runtime::Runtime`].
+//!
+//! The second serving mode is speculative: [`speculative::SpecEngine`]
+//! drives a draft-k / verify-1 loop in which the quantized `fastmamba`
+//! variant drafts candidate tokens with single-token decode steps and the
+//! `fp32` verifier scores the whole draft window in one chunked-prefill
+//! style call.  The recurrent-state problem this creates (rejected drafts
+//! must un-happen) is solved by versioned snapshots in
+//! [`state::StatePool`]: checkpoint before each draft step, roll back to
+//! the commit point in O(state) on rejection — no token is ever
+//! recomputed.  The output is token-exact with plain greedy fp32 decoding;
+//! [`metrics::Metrics`] tracks draft acceptance alongside the batching
+//! efficiency counters.
 
 pub mod batcher;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod scheduler;
+pub mod speculative;
 pub mod state;
 
 pub use batcher::DecodeBatcher;
 pub use metrics::Metrics;
-pub use request::{FinishedRequest, Request};
+pub use request::{FinishedRequest, Request, SpecStats};
 pub use router::Router;
 pub use scheduler::{Engine, EngineConfig};
-pub use state::StatePool;
+pub use speculative::{DrafterBackend, SpecConfig, SpecEngine};
+pub use state::{SnapshotId, StatePool};

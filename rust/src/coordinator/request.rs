@@ -20,6 +20,26 @@ impl Request {
     }
 }
 
+/// Speculative-decoding accounting for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecStats {
+    /// draft tokens proposed by the drafter
+    pub drafted: u64,
+    /// draft tokens accepted by the verifier
+    pub accepted: u64,
+    /// draft/verify rounds executed
+    pub rounds: u64,
+}
+
+impl SpecStats {
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.drafted as f64
+    }
+}
+
 /// Lifecycle timestamps + output of a completed request.
 #[derive(Debug, Clone)]
 pub struct FinishedRequest {
@@ -30,6 +50,8 @@ pub struct FinishedRequest {
     /// total latency from submission
     pub total_s: f64,
     pub prompt_len: usize,
+    /// `Some` when the request was served by the speculative engine
+    pub spec: Option<SpecStats>,
 }
 
 /// In-flight request tracking inside the engine.
@@ -73,5 +95,13 @@ mod tests {
         assert_eq!(r.id, 7);
         assert_eq!(r.variant, "fastmamba");
         assert!(r.stop_token.is_none());
+    }
+
+    #[test]
+    fn spec_stats_acceptance() {
+        let s = SpecStats { drafted: 8, accepted: 6, rounds: 2 };
+        assert!((s.acceptance_rate() - 0.75).abs() < 1e-12);
+        let none = SpecStats { drafted: 0, accepted: 0, rounds: 0 };
+        assert_eq!(none.acceptance_rate(), 0.0);
     }
 }

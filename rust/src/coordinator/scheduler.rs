@@ -86,16 +86,10 @@ impl<'rt> Engine<'rt> {
     /// the first generated token.
     pub fn chunk_plan(&self, prompt_len: usize) -> (Vec<usize>, usize) {
         assert!(prompt_len >= 1, "empty prompt");
-        let mut chunks = Vec::new();
-        let mut rest = prompt_len - 1; // reserve the last token for decode
-        for &b in self.prefill_buckets.iter().rev() {
-            while rest >= b {
-                chunks.push(b);
-                rest -= b;
-            }
-        }
-        let chunked: usize = chunks.iter().sum();
-        (chunks, prompt_len - chunked)
+        // reserve the last token for decode
+        let (chunks, rest) =
+            super::batcher::full_bucket_plan(&self.prefill_buckets, prompt_len - 1);
+        (chunks, rest + 1)
     }
 
     /// Admit pending requests (prefill) while capacity lasts.
@@ -134,6 +128,7 @@ impl<'rt> Engine<'rt> {
                 stm.ssm = out.ssm_state;
                 last_logits = Some(out.logits);
                 self.metrics.decode_steps += 1;
+                self.metrics.decode_batch_slots += 1;
             }
             self.metrics.prompt_tokens += req.prompt.len() as u64;
 
@@ -181,6 +176,7 @@ impl<'rt> Engine<'rt> {
                 .map(|t| (t - infl.submitted).as_secs_f64())
                 .unwrap_or(0.0),
             total_s: infl.submitted.elapsed().as_secs_f64(),
+            spec: None,
         });
     }
 
@@ -235,6 +231,7 @@ impl<'rt> Engine<'rt> {
                 );
                 self.metrics.decode_steps += 1;
                 self.metrics.decode_padded_slots += plan.padding as u64;
+                self.metrics.decode_batch_slots += plan.bucket as u64;
 
                 for (b, &ai) in members.iter().enumerate() {
                     let logits = &out.logits[b * vocab..(b + 1) * vocab];

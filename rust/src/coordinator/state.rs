@@ -1,9 +1,17 @@
-//! SSM state pool: fixed-size per-request recurrent state slots.
+//! SSM state pool: fixed-size per-request recurrent state slots, with
+//! versioned snapshots for speculative decoding.
 //!
 //! Because a Mamba2 request's state size is independent of its prompt or
 //! generation length, the pool is a flat arena of identical slots — O(1)
 //! allocate/free, zero fragmentation, exact capacity accounting (the
 //! admission-control advantage over KV-cache serving).
+//!
+//! Speculative decoding adds the second requirement transformers don't
+//! have: when draft tokens are rejected, the recurrent state must return
+//! to the last committed position.  [`StatePool::snapshot`] captures a
+//! slot's (conv window, SSM hidden state) under a monotonically increasing
+//! version, and [`StatePool::rollback`] restores it in O(state) — a pair
+//! of buffer moves, no recompute of the token prefix.
 
 use crate::config::ModelConfig;
 
@@ -15,6 +23,23 @@ pub struct StateSlot {
     pub ssm: Vec<f32>,
 }
 
+/// Handle to a versioned snapshot taken with [`StatePool::snapshot`].
+///
+/// Versions are global and monotonic, so a stale id (slot released and
+/// re-allocated, or snapshot already consumed) can never silently resolve
+/// to another request's state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SnapshotId {
+    slot: usize,
+    version: u64,
+}
+
+impl SnapshotId {
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+}
+
 /// Pool of pre-allocated state slots.
 #[derive(Debug)]
 pub struct StatePool {
@@ -22,6 +47,9 @@ pub struct StatePool {
     free: Vec<usize>,
     conv_len: usize,
     ssm_len: usize,
+    /// per-slot stack of (version, saved state), oldest first
+    saved: Vec<Vec<(u64, StateSlot)>>,
+    next_version: u64,
 }
 
 impl StatePool {
@@ -31,12 +59,20 @@ impl StatePool {
         let slots = (0..capacity)
             .map(|_| StateSlot { conv: vec![0.0; conv_len], ssm: vec![0.0; ssm_len] })
             .collect();
-        Self { slots, free: (0..capacity).rev().collect(), conv_len, ssm_len }
+        Self {
+            slots,
+            free: (0..capacity).rev().collect(),
+            conv_len,
+            ssm_len,
+            saved: (0..capacity).map(|_| Vec::new()).collect(),
+            next_version: 0,
+        }
     }
 
     /// Allocate a zeroed slot; `None` when the pool is exhausted.
     pub fn alloc(&mut self) -> Option<usize> {
         let idx = self.free.pop()?;
+        debug_assert!(self.saved[idx].is_empty());
         self.slots[idx].conv.fill(0.0);
         self.slots[idx].ssm.fill(0.0);
         Some(idx)
@@ -44,7 +80,60 @@ impl StatePool {
 
     pub fn release(&mut self, idx: usize) {
         debug_assert!(!self.free.contains(&idx));
+        self.saved[idx].clear();
         self.free.push(idx);
+    }
+
+    /// Capture the slot's current state under a fresh version.  Snapshots
+    /// stack per slot (speculative rounds nest), oldest first.
+    pub fn snapshot(&mut self, idx: usize) -> SnapshotId {
+        self.next_version += 1;
+        let copy = self.slots[idx].clone();
+        self.saved[idx].push((self.next_version, copy));
+        SnapshotId { slot: idx, version: self.next_version }
+    }
+
+    /// Restore the slot to `id` and drop `id` plus every newer snapshot of
+    /// the slot (they describe a rejected continuation).  O(state): the
+    /// saved buffers are moved back, nothing is recomputed.
+    ///
+    /// Panics on a stale id — rolling back to a state the pool no longer
+    /// holds is a scheduling bug, not a recoverable condition.
+    pub fn rollback(&mut self, id: SnapshotId) {
+        let stack = &mut self.saved[id.slot];
+        let pos = stack
+            .iter()
+            .position(|(v, _)| *v == id.version)
+            .expect("rollback of a discarded or stale snapshot");
+        let mut tail = stack.split_off(pos);
+        let (_, snap) = tail.swap_remove(0);
+        self.slots[id.slot] = snap;
+    }
+
+    /// Drop a snapshot without restoring it (the accepted-draft path).
+    /// Discarding an already-dropped id is a no-op.
+    pub fn discard(&mut self, id: SnapshotId) {
+        let stack = &mut self.saved[id.slot];
+        if let Some(pos) = stack.iter().position(|(v, _)| *v == id.version) {
+            stack.remove(pos);
+        }
+    }
+
+    /// Drop every snapshot held for `idx`.
+    pub fn clear_snapshots(&mut self, idx: usize) {
+        self.saved[idx].clear();
+    }
+
+    /// Snapshots currently held for `idx`.
+    pub fn n_snapshots(&self, idx: usize) -> usize {
+        self.saved[idx].len()
+    }
+
+    /// Bytes currently held by snapshots across the pool (the speculative
+    /// overhead the admission accounting must include).
+    pub fn snapshot_bytes(&self) -> usize {
+        let per = 4 * (self.conv_len + self.ssm_len);
+        self.saved.iter().map(|s| s.len() * per).sum()
     }
 
     pub fn get(&self, idx: usize) -> &StateSlot {
@@ -157,5 +246,92 @@ mod tests {
         let expect = 4 * (cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()
             + cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state);
         assert_eq!(p.slot_bytes(), expect);
+    }
+
+    #[test]
+    fn snapshot_rollback_restores_state() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        p.get_mut(a).ssm[0] = 1.0;
+        p.get_mut(a).conv[2] = -3.0;
+        let snap = p.snapshot(a);
+        p.get_mut(a).ssm[0] = 2.0;
+        p.get_mut(a).conv[2] = 9.0;
+        p.rollback(snap);
+        assert_eq!(p.get(a).ssm[0], 1.0);
+        assert_eq!(p.get(a).conv[2], -3.0);
+        assert_eq!(p.n_snapshots(a), 0); // consumed
+    }
+
+    #[test]
+    fn discard_keeps_current_state() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        p.get_mut(a).ssm[0] = 1.0;
+        let snap = p.snapshot(a);
+        p.get_mut(a).ssm[0] = 2.0;
+        p.discard(snap);
+        assert_eq!(p.get(a).ssm[0], 2.0);
+        assert_eq!(p.n_snapshots(a), 0);
+        p.discard(snap); // double-discard is a no-op
+    }
+
+    #[test]
+    fn rollback_drops_newer_snapshots() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        p.get_mut(a).ssm[0] = 1.0;
+        let s1 = p.snapshot(a);
+        p.get_mut(a).ssm[0] = 2.0;
+        let _s2 = p.snapshot(a);
+        p.get_mut(a).ssm[0] = 3.0;
+        assert_eq!(p.n_snapshots(a), 2);
+        p.rollback(s1); // restores 1.0, drops s1 and the newer s2
+        assert_eq!(p.get(a).ssm[0], 1.0);
+        assert_eq!(p.n_snapshots(a), 0);
+    }
+
+    #[test]
+    fn rollback_keeps_older_snapshots() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        p.get_mut(a).ssm[0] = 1.0;
+        let s1 = p.snapshot(a);
+        p.get_mut(a).ssm[0] = 2.0;
+        let s2 = p.snapshot(a);
+        p.get_mut(a).ssm[0] = 3.0;
+        p.rollback(s2);
+        assert_eq!(p.get(a).ssm[0], 2.0);
+        assert_eq!(p.n_snapshots(a), 1); // s1 survives
+        p.rollback(s1);
+        assert_eq!(p.get(a).ssm[0], 1.0);
+    }
+
+    #[test]
+    fn release_clears_snapshots() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        p.snapshot(a);
+        assert_eq!(p.snapshot_bytes(), p.slot_bytes());
+        p.release(a);
+        let b = p.alloc().unwrap();
+        assert_eq!(b, a);
+        assert_eq!(p.n_snapshots(b), 0);
+        assert_eq!(p.snapshot_bytes(), 0);
+    }
+
+    #[test]
+    fn snapshots_are_per_slot() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        p.get_mut(a).ssm[0] = 1.0;
+        p.get_mut(b).ssm[0] = 10.0;
+        let sa = p.snapshot(a);
+        p.get_mut(a).ssm[0] = 2.0;
+        p.get_mut(b).ssm[0] = 20.0;
+        p.rollback(sa);
+        assert_eq!(p.get(a).ssm[0], 1.0);
+        assert_eq!(p.get(b).ssm[0], 20.0); // untouched
     }
 }

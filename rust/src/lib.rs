@@ -17,6 +17,16 @@
 //!   ([`baseline`]), the synthetic evaluation harness ([`eval`]), and the
 //!   table/figure report generators ([`report`]).
 //!
+//! Two serving modes share those artifacts.  The batched greedy path
+//! ([`coordinator::scheduler::Engine`]) packs active sequences into the
+//! AOT decode buckets.  The speculative path
+//! ([`coordinator::speculative::SpecEngine`], `serve --speculate K`)
+//! drafts with the quantized `fastmamba` variant and verifies with
+//! `fp32` in chunked-prefill-style calls, rolling rejected drafts back
+//! through versioned SSM-state snapshots
+//! ([`coordinator::state::StatePool`]) — token-exact with greedy fp32
+//! decoding, and modeled on the accelerator by [`sim::speculative`].
+//!
 //! Python never runs on the request path: `make artifacts` lowers
 //! everything once, and the `fastmamba` binary is self-contained.
 

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   serve    — run the serving engine on a synthetic request trace
+//!              (--speculate K switches to the draft/verify speculative mode)
 //!   report   — regenerate any paper table/figure (--id table2|fig9|...|all)
 //!   simulate — accelerator performance model (prefill/decode sweeps)
 //!   info     — artifacts + model + accelerator summary
@@ -9,7 +10,9 @@
 use anyhow::{bail, Result};
 
 use fastmamba::config::{AcceleratorConfig, ModelConfig};
-use fastmamba::coordinator::{Engine, EngineConfig, Request};
+use fastmamba::coordinator::{
+    DrafterBackend, Engine, EngineConfig, Request, SpecConfig, SpecEngine,
+};
 use fastmamba::runtime::Runtime;
 use fastmamba::sim::PerfModel;
 use fastmamba::util::cli::Args;
@@ -30,7 +33,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: fastmamba <serve|report|simulate|info> [--flags]\n\
                  \n  serve    --requests N --max-new N --variant fp32|fastmamba --prompt-len N\
-                 \n  report   --id all|table1|table2|table3|table4|fig1|fig3|fig9|fig10\
+                 \n           --speculate K [--draft-backend native|pjrt]\
+                 \n  report   --id all|table1|table2|table3|table4|table_spec|fig1|fig3|fig9|fig10\
                  \n  simulate --model mamba2-130m|mamba2-2.7b --seq-len N --batch N\
                  \n  info"
             );
@@ -45,22 +49,63 @@ fn serve(args: &Args) -> Result<()> {
     let max_new = args.usize_or("max-new", 16);
     let prompt_len = args.usize_or("prompt-len", 48);
     let variant = args.get_or("variant", "fp32");
+    let speculate = args.usize_or("speculate", 0);
     let vocab = rt.weights_host.cfg.vocab_size;
 
-    let mut engine = Engine::new(&rt, EngineConfig::default());
     let mut rng = Rng::new(args.usize_or("seed", 7) as u64);
     let corpus = eval::load_corpus(&rt.dir)?;
-    for id in 0..n_requests {
-        let start = rng.below(corpus.len() - prompt_len - 1);
-        let prompt: Vec<u32> = corpus[start..start + prompt_len]
-            .iter()
-            .map(|t| t % vocab as u32)
-            .collect();
-        engine.submit(Request::new(id as u64, prompt, max_new, &variant));
-    }
-    engine.run()?;
-    println!("{}", engine.metrics.summary());
-    for f in engine.finished.iter().take(3) {
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|id| {
+            let start = rng.below(corpus.len() - prompt_len - 1);
+            let prompt: Vec<u32> = corpus[start..start + prompt_len]
+                .iter()
+                .map(|t| t % vocab as u32)
+                .collect();
+            Request::new(id as u64, prompt, max_new, &variant)
+        })
+        .collect();
+
+    let finished = if speculate > 0 {
+        // speculative mode: quantized drafter, `--variant` as the verifier
+        let backend = match args.get_or("draft-backend", "native").as_str() {
+            "pjrt" => DrafterBackend::Pjrt,
+            _ => DrafterBackend::Native,
+        };
+        let mut engine = SpecEngine::new(
+            &rt,
+            SpecConfig {
+                draft_k: speculate,
+                draft_variant: args.get_or("draft-variant", "fastmamba"),
+                verify_variant: variant.clone(),
+                drafter_backend: backend,
+                max_active: 8,
+            },
+        );
+        for r in requests {
+            engine.submit(r);
+        }
+        engine.run()?;
+        println!("{}", engine.metrics.summary());
+        println!(
+            "speculative: k={} rounds={} verify_calls={} rollbacks={} \
+             accept_p50={:.1}%",
+            speculate,
+            engine.metrics.spec_rounds,
+            engine.metrics.verify_calls,
+            engine.metrics.rollbacks,
+            engine.metrics.acceptance_p50() * 100.0
+        );
+        engine.finished
+    } else {
+        let mut engine = Engine::new(&rt, EngineConfig::default());
+        for r in requests {
+            engine.submit(r);
+        }
+        engine.run()?;
+        println!("{}", engine.metrics.summary());
+        engine.finished
+    };
+    for f in finished.iter().take(3) {
         println!(
             "  req {}: {} prompt toks -> {:?}...",
             f.id,
@@ -81,6 +126,7 @@ fn run_report(args: &Args) -> Result<()> {
         )?,
         "table3" => report::table3(),
         "table4" => report::table4(),
+        "table_spec" => report::table_spec(),
         "fig1" => report::fig1(),
         "fig3" => report::fig3(),
         "fig9" => report::fig9(None),

@@ -8,7 +8,7 @@ use crate::model::{Mamba2, ModelWeights};
 use crate::quant::hadamard::hadamard_transform;
 use crate::sim::power::{accelerator_power_w, tokens_per_s_per_w};
 use crate::sim::resources::{half_float_nonlinear_unit, nau_unit, utilization};
-use crate::sim::PerfModel;
+use crate::sim::{PerfModel, SpecSim};
 use crate::util::bench::Table;
 use crate::util::rng::Rng;
 
@@ -219,6 +219,48 @@ pub fn table2(ppl_windows: usize, cloze_items: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Speculative decoding — baseline vs speculative decode throughput on the
+/// accelerator model, across draft length k and acceptance rate.
+pub fn table_spec() {
+    println!(
+        "\n== Speculative decode: baseline vs draft-k/verify-1 throughput \
+         (Mamba2-2.7B, VC709 sim) =="
+    );
+    let sim = SpecSim::new(AcceleratorConfig::default(), ModelConfig::mamba2_2_7b());
+    let base = sim.perf.decode(1);
+    println!(
+        "baseline decode: {:.2} tok/s ({}; drafter step = {:.2}x a verifier step)",
+        base.tokens_per_s,
+        if base.compute_bound { "compute-bound" } else { "DRAM-bound" },
+        sim.draft_cost_ratio
+    );
+    let accepts = [0.5f64, 0.7, 0.8, 0.9, 0.95];
+    let mut headers: Vec<String> = vec!["k".into()];
+    for p in accepts {
+        headers.push(format!("accept {p:.2}"));
+    }
+    headers.push("break-even".into());
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    for k in [2usize, 4, 8] {
+        let mut row = vec![k.to_string()];
+        for p in accepts {
+            let pt = sim.point(k, p);
+            row.push(format!("{:.2} tok/s ({:.2}x)", pt.tokens_per_s, pt.speedup));
+        }
+        row.push(match sim.break_even_acceptance(k) {
+            Some(p) => format!("p >= {p:.2}"),
+            None => "never".into(),
+        });
+        t.row(&row);
+    }
+    t.print();
+    println!(
+        "(serve-time acceptance of the int8+PoT drafter is reported by \
+         `serve --speculate K`; see examples/spec_decode.rs for measured speedup)"
+    );
+}
+
 /// Table I — VPU configuration echo (sanity documentation).
 pub fn table1() {
     println!("\n== Table I: VPU function configuration ==");
@@ -239,6 +281,7 @@ pub fn all() -> anyhow::Result<()> {
     table2(6, 16)?;
     fig9(None);
     table3();
+    table_spec();
     table4();
     fig10();
     Ok(())

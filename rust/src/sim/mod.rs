@@ -12,7 +12,9 @@
 //!
 //! [`perf`] composes the per-module cycle counts into end-to-end prefill
 //! latency (Fig. 9) and decode throughput (Table III); [`resources`] and
-//! [`power`] produce Table IV / Fig. 10 and the energy-efficiency numbers.
+//! [`power`] produce Table IV / Fig. 10 and the energy-efficiency numbers;
+//! [`speculative`] extends the decode model to the draft/verify loop of
+//! `coordinator::speculative` (speedup vs acceptance rate and draft length).
 
 pub mod buffer;
 pub mod conv_module;
@@ -23,7 +25,9 @@ pub mod nau;
 pub mod perf;
 pub mod power;
 pub mod resources;
+pub mod speculative;
 pub mod ssm_module;
 pub mod vpu;
 
 pub use perf::{DecodePerf, PerfModel, PrefillPerf};
+pub use speculative::{SpecPoint, SpecSim};

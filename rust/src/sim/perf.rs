@@ -175,7 +175,10 @@ impl PerfModel {
         let cycles = compute.max(dram);
         let mut bd = Breakdown::default();
         self.accumulate_breakdown(&stages, 1, &mut bd);
+        // scale all components by n_layer (accumulate did one layer), then
+        // add the single lm-head matmul
         let nl = cfg.n_layer as u64;
+        bd.linear *= nl;
         bd.conv *= nl;
         bd.ssm *= nl;
         bd.norm_silu *= nl;
@@ -272,5 +275,20 @@ mod tests {
         let p = model_130m().prefill(256);
         assert!(p.breakdown.linear > p.breakdown.conv);
         assert!(p.breakdown.linear > p.breakdown.norm_silu);
+    }
+
+    #[test]
+    fn decode_breakdown_scales_all_components_by_layers() {
+        // regression: decode's linear component was missing the n_layer
+        // factor, under-counting the dominant op by 24x on 130M.  A decode
+        // step is a one-token pass, so its per-component compute must equal
+        // prefill at L = 1.
+        let m = model_130m();
+        let d = m.decode(1).breakdown;
+        let p = m.prefill(1).breakdown;
+        assert_eq!(d.linear, p.linear);
+        assert_eq!(d.conv, p.conv);
+        assert_eq!(d.ssm, p.ssm);
+        assert_eq!(d.norm_silu, p.norm_silu);
     }
 }

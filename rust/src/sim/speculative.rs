@@ -1,0 +1,170 @@
+//! Speculative-decoding cycle model on the VC709 performance model.
+//!
+//! Decode on the accelerator is DRAM-bound (Table III): every generated
+//! token streams the full weight set once.  Speculative decoding changes
+//! the streaming economics — a round of `k` drafter steps plus one
+//! verify pass commits `E[m] + 1` tokens for `k` (cheaper) drafter
+//! streams and a single verifier stream, because the verify call scores
+//! all `k + 1` positions under one weight pass, exactly like prefill.
+//!
+//! The model composes [`PerfModel`] cycle counts with two speculative
+//! parameters: the per-token draft acceptance probability `p` (measured
+//! at serve time by `coordinator::metrics`) and the drafter's cost ratio
+//! relative to a verifier decode step (< 1 for a lower-precision or
+//! distilled drafter whose weight stream is smaller).
+
+use crate::config::{AcceleratorConfig, ModelConfig};
+
+use super::perf::PerfModel;
+
+/// Predicted performance of one speculative configuration.
+#[derive(Debug, Clone)]
+pub struct SpecPoint {
+    pub k: usize,
+    pub accept_rate: f64,
+    /// expected committed tokens per round (E[m] + 1)
+    pub committed_per_round: f64,
+    pub round_seconds: f64,
+    pub tokens_per_s: f64,
+    /// vs plain verifier decode at B = 1
+    pub speedup: f64,
+}
+
+/// Speculative decoding performance model over the FastMamba accelerator.
+#[derive(Debug, Clone)]
+pub struct SpecSim {
+    pub perf: PerfModel,
+    /// drafter decode-step cost relative to a verifier decode step.
+    /// Decode is weight-stream-bound, so this is approximately the ratio
+    /// of streamed weight bytes: 0.5 models a drafter at half the
+    /// verifier's weight precision (e.g. W4 drafts for a W8 verifier) or
+    /// a distilled half-size drafter.
+    pub draft_cost_ratio: f64,
+}
+
+impl SpecSim {
+    pub fn new(acc: AcceleratorConfig, cfg: ModelConfig) -> Self {
+        Self { perf: PerfModel::new(acc, cfg), draft_cost_ratio: 0.5 }
+    }
+
+    /// Expected accepted-prefix length for i.i.d. per-token acceptance
+    /// probability `p`: E[m] = Σ_{i=1..k} p^i (the prefix survives to
+    /// draft i only if all i drafts match).
+    pub fn expected_accepted(k: usize, p: f64) -> f64 {
+        let mut e = 0.0;
+        let mut pi = 1.0;
+        for _ in 0..k {
+            pi *= p;
+            e += pi;
+        }
+        e
+    }
+
+    /// Committed tokens per round: the accepted prefix plus the verifier's
+    /// bonus token (every round commits at least one token).
+    pub fn committed_per_round(k: usize, p: f64) -> f64 {
+        Self::expected_accepted(k, p) + 1.0
+    }
+
+    /// Wall time of one draft-k / verify-1 round.
+    pub fn round_seconds(&self, k: usize) -> f64 {
+        let step = self.perf.decode(1).seconds_per_step;
+        let draft = k as f64 * step * self.draft_cost_ratio;
+        // the verifier scores k+1 positions in one prefill-style pass
+        let verify = self.perf.prefill(k + 1).seconds;
+        draft + verify
+    }
+
+    pub fn point(&self, k: usize, p: f64) -> SpecPoint {
+        let committed = Self::committed_per_round(k, p);
+        let round = self.round_seconds(k);
+        let tokens_per_s = committed / round;
+        let base = self.perf.decode(1).tokens_per_s;
+        SpecPoint {
+            k,
+            accept_rate: p,
+            committed_per_round: committed,
+            round_seconds: round,
+            tokens_per_s,
+            speedup: tokens_per_s / base,
+        }
+    }
+
+    pub fn speedup(&self, k: usize, p: f64) -> f64 {
+        self.point(k, p).speedup
+    }
+
+    /// Smallest acceptance rate (1% grid) at which speculation beats plain
+    /// decode for draft length `k`; `None` if even p = 1.0 loses.
+    pub fn break_even_acceptance(&self, k: usize) -> Option<f64> {
+        (0..=100)
+            .map(|i| i as f64 / 100.0)
+            .find(|&p| self.speedup(k, p) >= 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> SpecSim {
+        // the paper's decode model: Mamba2-2.7B, DRAM-bound
+        SpecSim::new(AcceleratorConfig::default(), ModelConfig::mamba2_2_7b())
+    }
+
+    #[test]
+    fn expected_accepted_limits() {
+        assert_eq!(SpecSim::expected_accepted(4, 1.0), 4.0);
+        assert_eq!(SpecSim::expected_accepted(4, 0.0), 0.0);
+        // geometric partial sum, monotone in p
+        let lo = SpecSim::expected_accepted(8, 0.5);
+        let hi = SpecSim::expected_accepted(8, 0.9);
+        assert!(lo < hi && hi < 8.0);
+        assert!((SpecSim::expected_accepted(2, 0.5) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_acceptance_beats_baseline() {
+        let s = sim();
+        for k in [2usize, 4, 8] {
+            let sp = s.speedup(k, 1.0);
+            assert!(sp > 1.0, "k={k}: speedup {sp}");
+        }
+    }
+
+    #[test]
+    fn zero_acceptance_loses() {
+        let s = sim();
+        for k in [2usize, 4, 8] {
+            let sp = s.speedup(k, 0.0);
+            assert!(sp < 1.0, "k={k}: speedup {sp} should be < 1 at p=0");
+        }
+    }
+
+    #[test]
+    fn speedup_monotone_in_acceptance() {
+        let s = sim();
+        let mut last = 0.0;
+        for p in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let sp = s.speedup(4, p);
+            assert!(sp > last, "p={p}: {sp} <= {last}");
+            last = sp;
+        }
+    }
+
+    #[test]
+    fn break_even_sits_between_extremes() {
+        let s = sim();
+        let be = s.break_even_acceptance(4).expect("p=1 must win at k=4");
+        assert!(be > 0.0 && be < 1.0, "{be}");
+        assert!(s.speedup(4, be) >= 1.0);
+    }
+
+    #[test]
+    fn cheaper_drafter_raises_speedup() {
+        let mut s = sim();
+        let base = s.speedup(4, 0.9);
+        s.draft_cost_ratio = 0.25;
+        assert!(s.speedup(4, 0.9) > base);
+    }
+}
