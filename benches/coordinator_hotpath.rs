@@ -1,32 +1,35 @@
-//! Bench: coordinator hot path — engine decode-step overhead over raw PJRT
-//! execution (target: <5%), batcher planning throughput, and state-pool
-//! gather/scatter rates.
+//! Bench: coordinator hot path — engine decode-step overhead over raw
+//! backend execution (target: <5%), batcher planning throughput, and
+//! state-pool gather/scatter rates.  Runs on whichever backend is
+//! available (PJRT artifacts or the artifact-free native model).
 
+use fastmamba::backend::{self, BackendKind};
 use fastmamba::config::ModelConfig;
 use fastmamba::coordinator::{DecodeBatcher, Engine, EngineConfig, Request, StatePool};
-use fastmamba::eval::load_corpus;
-use fastmamba::runtime::Runtime;
+use fastmamba::eval::corpus_for;
 use fastmamba::util::bench::{bench, bench_quick};
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load_default()?;
-    let cfg = rt.weights_host.cfg.clone();
+    let be = backend::load(BackendKind::Auto)?;
+    let cfg = be.cfg().clone();
+    println!("backend: {}", be.name());
 
-    // raw PJRT decode at B=8
+    // raw backend decode at B=8
     let b = 8usize;
     let conv = vec![0.0f32; b * cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()];
     let ssm = vec![0.0f32; b * cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state];
     let toks: Vec<i32> = (0..b as i32).collect();
-    rt.decode("fp32", b, &conv, &ssm, &toks)?; // warm
-    let raw = bench_quick("raw PJRT decode B8", || {
-        let _ = rt.decode("fp32", b, &conv, &ssm, &toks).unwrap();
+    be.decode("fp32", b, &conv, &ssm, &toks)?; // warm
+    let raw = bench_quick("raw backend decode B8", || {
+        let _ = be.decode("fp32", b, &conv, &ssm, &toks).unwrap();
     });
     println!("{raw}");
 
     // engine-driven decode at 8 active requests (same executable)
-    let corpus = load_corpus(&rt.dir)?;
-    let mut engine = Engine::new(&rt, EngineConfig { max_active: 8, greedy_chunking: true });
+    let corpus = corpus_for(be.as_ref());
+    let mut engine =
+        Engine::new(be.as_ref(), EngineConfig { max_active: 8, greedy_chunking: true });
     for id in 0..8u64 {
         let prompt: Vec<u32> = corpus[id as usize * 50..id as usize * 50 + 33]
             .iter()
@@ -40,10 +43,10 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{eng}");
     let overhead = (eng.median_s - raw.median_s) / raw.median_s * 100.0;
-    println!("coordinator overhead over raw PJRT: {overhead:.1}% (target < 5%)");
+    println!("coordinator overhead over raw backend: {overhead:.1}% (target < 5%)");
 
     // batcher planning rate
-    let batcher = DecodeBatcher::new(rt.decode_batches());
+    let batcher = DecodeBatcher::new(be.decode_batches());
     let plan = bench_quick("batcher.plan(1000 active)", || {
         std::hint::black_box(batcher.plan(1000));
     });

@@ -3,17 +3,15 @@
 //!
 //! Two parts: (a) the accelerator-model prediction (Mamba2-2.7B on the
 //! VC709 performance model) of tokens/s and speedup across k ∈ {2, 4, 8}
-//! and acceptance rates; (b) *measured* PJRT speculative decode on the
-//! tiny serving model — fastmamba drafter + fp32 verifier vs plain greedy
+//! and acceptance rates; (b) *measured* speculative decode on the tiny
+//! serving model — fastmamba drafter + fp32 verifier vs plain greedy
 //! fp32 decode on the same trace, with the acceptance rate that trace
-//! actually achieves.
+//! actually achieves — on whichever backend is available.
 
+use fastmamba::backend::{self, BackendKind, InferenceBackend, NativeBackend};
 use fastmamba::config::{AcceleratorConfig, ModelConfig};
-use fastmamba::coordinator::{
-    DrafterBackend, Engine, EngineConfig, Request, SpecConfig, SpecEngine,
-};
-use fastmamba::eval::load_corpus;
-use fastmamba::runtime::Runtime;
+use fastmamba::coordinator::{Engine, EngineConfig, Request, SpecConfig, SpecEngine};
+use fastmamba::eval::corpus_for;
 use fastmamba::sim::SpecSim;
 use fastmamba::util::bench::Table;
 use fastmamba::util::rng::Rng;
@@ -42,16 +40,11 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    // (b) measured PJRT speculative decode on the tiny serving model
-    let rt = match Runtime::load_default() {
-        Ok(rt) => rt,
-        Err(e) => {
-            println!("(measured part skipped: {e})");
-            return Ok(());
-        }
-    };
-    let corpus = load_corpus(&rt.dir)?;
-    let vocab = rt.weights_host.cfg.vocab_size as u32;
+    // (b) measured speculative decode on the tiny serving model
+    let be = backend::load(BackendKind::Auto)?;
+    println!("\nmeasured backend: {}", be.name());
+    let corpus = corpus_for(be.as_ref());
+    let vocab = be.cfg().vocab_size as u32;
     let n_requests = 8usize;
     let max_new = 32usize;
     let trace = |seed: u64| -> Vec<Request> {
@@ -67,30 +60,36 @@ fn main() -> anyhow::Result<()> {
             .collect()
     };
 
-    let mut base_eng = Engine::new(&rt, EngineConfig { max_active: 1, greedy_chunking: true });
+    let mut base_eng = Engine::new(
+        be.as_ref(),
+        EngineConfig { max_active: 1, greedy_chunking: true },
+    );
     for r in trace(3) {
         base_eng.submit(r);
     }
     base_eng.run()?;
     let base_tps = base_eng.metrics.decode_tokens_per_s();
-    println!("\nmeasured baseline (greedy fp32, B=1): {base_tps:.1} gen tok/s");
+    println!("measured baseline (greedy fp32, B=1): {base_tps:.1} gen tok/s");
 
+    // a separate in-process drafter only makes sense next to a device
+    // verifier; on a native serving backend "native" == "shared"
+    let native_drafter: Option<NativeBackend> = if be.name() == "native" {
+        None
+    } else {
+        Some(NativeBackend::load_default()?)
+    };
     let mut t2 = Table::new(&["k", "drafter", "gen tok/s", "speedup", "accept", "rollbacks"]);
-    let cases = [
-        (2usize, DrafterBackend::Native),
-        (4, DrafterBackend::Native),
-        (8, DrafterBackend::Native),
-        (4, DrafterBackend::Pjrt),
-    ];
-    for (k, backend) in cases {
-        let mut spec = SpecEngine::new(
-            &rt,
-            SpecConfig {
-                draft_k: k,
-                max_active: 1,
-                drafter_backend: backend,
-                ..SpecConfig::default()
-            },
+    let cases: [(usize, &str); 4] =
+        [(2, "native"), (4, "native"), (8, "native"), (4, "shared")];
+    for (k, wiring) in cases {
+        let drafter: &dyn InferenceBackend = match (wiring, &native_drafter) {
+            ("native", Some(d)) => d,
+            _ => be.as_ref(),
+        };
+        let mut spec = SpecEngine::with_drafter(
+            drafter,
+            be.as_ref(),
+            SpecConfig { draft_k: k, max_active: 1, ..SpecConfig::default() },
         );
         for r in trace(3) {
             spec.submit(r);
@@ -99,7 +98,7 @@ fn main() -> anyhow::Result<()> {
         let tps = spec.metrics.decode_tokens_per_s();
         t2.row(&[
             k.to_string(),
-            format!("{backend:?}").to_lowercase(),
+            wiring.to_string(),
             format!("{tps:.1}"),
             format!("{:.2}x", tps / base_tps),
             format!("{:.1}%", spec.metrics.acceptance_rate() * 100.0),

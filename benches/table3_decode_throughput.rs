@@ -1,13 +1,14 @@
 //! Bench: Table III — decode throughput & energy efficiency.
 //!
 //! Two parts: (a) the paper's Mamba2-2.7B comparison via the accelerator
-//! simulator + GPU model + power models; (b) *measured* PJRT decode
-//! throughput of the tiny serving model across batch buckets (the real
-//! serving hot path on this host).
+//! simulator + GPU model + power models; (b) *measured* decode throughput
+//! of the tiny serving model across batch buckets on whichever backend is
+//! available — PJRT artifacts or the native model (the real serving hot
+//! path on this host).
 
+use fastmamba::backend::{self, BackendKind};
 use fastmamba::baseline::GpuModel;
 use fastmamba::config::{AcceleratorConfig, ModelConfig};
-use fastmamba::runtime::Runtime;
 use fastmamba::sim::power::{accelerator_power_w, tokens_per_s_per_w};
 use fastmamba::sim::PerfModel;
 use fastmamba::util::bench::{bench_quick, Table};
@@ -38,20 +39,22 @@ fn main() -> anyhow::Result<()> {
     }
     t2.print();
 
-    // (b) measured PJRT decode on the tiny serving model
-    let rt = Runtime::load_default()?;
-    let cfg = rt.weights_host.cfg.clone();
+    // (b) measured decode on the tiny serving model (PJRT artifacts when
+    // available, the native backend otherwise)
+    let be = backend::load(BackendKind::Auto)?;
+    let cfg = be.cfg().clone();
+    println!("\nmeasured backend: {}", be.name());
     let mut t3 = Table::new(&["variant", "batch", "ms/step", "tok/s"]);
     for variant in ["fp32", "fastmamba"] {
-        for &b in &rt.decode_batches() {
+        for &b in &be.decode_batches() {
             let conv = vec![0.0f32; b * cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()];
             let ssm =
                 vec![0.0f32; b * cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state];
             let toks: Vec<i32> = (0..b as i32).collect();
             // warm the executable cache outside the timer
-            rt.decode(variant, b, &conv, &ssm, &toks)?;
+            be.decode(variant, b, &conv, &ssm, &toks)?;
             let st = bench_quick(&format!("decode {variant} B{b}"), || {
-                let _ = rt.decode(variant, b, &conv, &ssm, &toks).unwrap();
+                let _ = be.decode(variant, b, &conv, &ssm, &toks).unwrap();
             });
             t3.row(&[
                 variant.into(),

@@ -1,24 +1,34 @@
-//! Quickstart: load the AOT artifacts, prefill a prompt, decode a few
-//! tokens — the minimal end-to-end path through the three-layer stack
-//! (Pallas kernels -> JAX model -> HLO artifacts -> PJRT -> Rust).
+//! Quickstart: load a backend, prefill a prompt, decode a few tokens —
+//! the minimal end-to-end path through the execution contract.  With
+//! artifacts present (and the `pjrt` feature) this exercises the full
+//! three-layer stack (Pallas kernels -> JAX model -> HLO artifacts ->
+//! PJRT -> Rust); without them the native backend serves the same calls.
 //!
-//! Run: cargo run --release --example quickstart
+//! Run: cargo run --release --example quickstart [-- --backend auto|pjrt|native]
 
+use fastmamba::backend::{self, BackendKind};
 use fastmamba::coordinator::request::argmax;
-use fastmamba::runtime::Runtime;
+use fastmamba::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load_default()?;
-    let cfg = rt.weights_host.cfg.clone();
+    let args = Args::parse(std::env::args().skip(1));
+    let kind = BackendKind::from_name(&args.get_or("backend", "auto"))
+        .expect("--backend auto|pjrt|native");
+    let be = backend::load(kind)?;
+    let cfg = be.cfg().clone();
     println!(
-        "loaded {} ({} layers, d_model {}, vocab {})",
-        cfg.name, cfg.n_layer, cfg.d_model, cfg.vocab_size
+        "loaded {} backend: {} ({} layers, d_model {}, vocab {})",
+        be.name(),
+        cfg.name,
+        cfg.n_layer,
+        cfg.d_model,
+        cfg.vocab_size
     );
 
     // 1. prefill a 32-token prompt (one artifact bucket) with each variant
     let prompt: Vec<i32> = (0..32).map(|i| (i * 11) % cfg.vocab_size as i32).collect();
     for variant in ["fp32", "fastmamba"] {
-        let out = rt.prefill_fresh(variant, &prompt)?;
+        let out = be.prefill_fresh(variant, &prompt)?;
         let last = &out.logits[(prompt.len() - 1) * cfg.vocab_size..];
         println!(
             "{variant:>9} prefill: argmax(next)={}, logit range [{:.2}, {:.2}]",
@@ -29,13 +39,13 @@ fn main() -> anyhow::Result<()> {
     }
 
     // 2. greedy-decode 12 tokens from the fp32 prefill state
-    let out = rt.prefill_fresh("fp32", &prompt)?;
+    let out = be.prefill_fresh("fp32", &prompt)?;
     let mut conv = out.conv_state;
     let mut ssm = out.ssm_state;
     let mut tok = argmax(&out.logits[(prompt.len() - 1) * cfg.vocab_size..]) as i32;
     let mut generated = vec![tok];
     for _ in 0..11 {
-        let step = rt.decode("fp32", 1, &conv, &ssm, &[tok])?;
+        let step = be.decode("fp32", 1, &conv, &ssm, &[tok])?;
         conv = step.conv_state;
         ssm = step.ssm_state;
         tok = argmax(&step.logits) as i32;

@@ -1,13 +1,14 @@
 //! Serving scenario: a Poisson-ish arrival trace of mixed-length prompts
 //! batched through the engine, reporting TTFT / latency / throughput for
-//! both the fp32 and fastmamba (quantized) executables — the end-to-end
-//! driver proving all layers compose on a real workload.
+//! both the fp32 and fastmamba (quantized) variants — the end-to-end
+//! driver proving all layers compose on a real workload, on whichever
+//! backend is available (PJRT artifacts or the artifact-free native model).
 //!
-//! Run: cargo run --release --example serve_requests [-- --requests 24]
+//! Run: cargo run --release --example serve_requests [-- --requests 24 --backend native]
 
+use fastmamba::backend::{self, BackendKind};
 use fastmamba::coordinator::{Engine, EngineConfig, Request};
-use fastmamba::eval::load_corpus;
-use fastmamba::runtime::Runtime;
+use fastmamba::eval::corpus_for;
 use fastmamba::util::cli::Args;
 use fastmamba::util::rng::Rng;
 
@@ -15,13 +16,20 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let n_requests = args.usize_or("requests", 16);
     let max_new = args.usize_or("max-new", 12);
+    let max_active = args.usize_or("max-active", 16);
 
-    let rt = Runtime::load_default()?;
-    let corpus = load_corpus(&rt.dir)?;
-    let vocab = rt.weights_host.cfg.vocab_size as u32;
+    let kind = BackendKind::from_name(&args.get_or("backend", "auto"))
+        .expect("--backend auto|pjrt|native");
+    let be = backend::load(kind)?;
+    let corpus = corpus_for(be.as_ref());
+    let vocab = be.cfg().vocab_size as u32;
+    println!("backend: {}", be.name());
 
     for variant in ["fp32", "fastmamba"] {
-        let mut engine = Engine::new(&rt, EngineConfig { max_active: 16, greedy_chunking: true });
+        let mut engine = Engine::new(
+            be.as_ref(),
+            EngineConfig { max_active, greedy_chunking: true },
+        );
         let mut rng = Rng::new(11);
         for id in 0..n_requests {
             // mixed prompt lengths exercise the chunk planner

@@ -1,0 +1,30 @@
+//! Bucket arithmetic shared by every execution backend and the coordinator:
+//! AOT artifacts exist only at fixed prefill lengths / decode batch sizes,
+//! so arbitrary workloads are covered by chunking (full buckets + remainder)
+//! or padding (smallest covering bucket).
+
+/// Smallest bucket that covers `n` items, from an ascending bucket list;
+/// `None` when even the largest bucket is too small.  Shared by the decode
+/// batcher (batch buckets) and the speculative engine (verify windows over
+/// the prefill buckets).
+pub fn smallest_covering(buckets_ascending: &[usize], n: usize) -> Option<usize> {
+    buckets_ascending.iter().copied().find(|b| *b >= n)
+}
+
+/// Cover `n` items with full buckets, largest first; returns the chunk
+/// list and the remainder (always smaller than the smallest bucket).
+/// Shared by the engine's chunked-prefill admission, the speculative
+/// engine's verifier-debt consolidation, and the default
+/// [`InferenceBackend::forward_logits`](super::InferenceBackend::forward_logits)
+/// implementation.
+pub fn full_bucket_plan(buckets_ascending: &[usize], n: usize) -> (Vec<usize>, usize) {
+    let mut chunks = Vec::new();
+    let mut rest = n;
+    for &b in buckets_ascending.iter().rev() {
+        while rest >= b {
+            chunks.push(b);
+            rest -= b;
+        }
+    }
+    (chunks, rest)
+}

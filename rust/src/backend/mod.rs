@@ -1,0 +1,314 @@
+//! The execution API: one trait every serving layer programs against.
+//!
+//! [`InferenceBackend`] is the single contract between the coordinator
+//! stack ([`crate::coordinator`]: `Engine`, `SpecEngine`, `serve_threaded`)
+//! and whatever actually runs the model.  Two first-class implementations
+//! ship today:
+//!
+//! * [`PjrtBackend`] (`pjrt` cargo feature, on by default) — the AOT-lowered
+//!   HLO artifacts executed through the XLA PJRT client
+//!   ([`crate::runtime::Runtime`]).  Fastest on this host; requires
+//!   `artifacts/manifest.json` (run `make artifacts`) and a local
+//!   `xla_extension` install at build time.
+//! * [`NativeBackend`] — the in-process Rust Mamba2 golden model
+//!   ([`crate::model::Mamba2`]).  Artifact-free: loads the trained
+//!   checkpoint when `artifacts/` is present and falls back to
+//!   deterministic synthetic weights otherwise, so every engine path (and
+//!   its tests) runs on any machine, including hosts with no XLA and no
+//!   Python toolchain.
+//!
+//! The contract is bucket-shaped because the PJRT artifacts are: `prefill`
+//! consumes exact bucket-length chunks with explicit state chaining, and
+//! `decode` consumes batch-major state for one of the compiled batch sizes.
+//! `NativeBackend` accepts *arbitrary* lengths and batch sizes but honours
+//! the same call shapes, so the coordinator code is identical over both.
+//! Future backends (multi-device PJRT, a real FPGA bridge, remote workers)
+//! implement the same six methods and inherit the whole serving stack.
+
+pub mod bucket;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+
+/// Output of one prefill call over a token chunk.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    /// (L, vocab) row-major — exact per-position logits
+    pub logits: Vec<f32>,
+    /// (n_layer, d_conv-1, conv_dim)
+    pub conv_state: Vec<f32>,
+    /// (n_layer, nheads, headdim, d_state)
+    pub ssm_state: Vec<f32>,
+}
+
+/// Output of one batched decode step.
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    /// (B, vocab)
+    pub logits: Vec<f32>,
+    /// (B, n_layer, d_conv-1, conv_dim)
+    pub conv_state: Vec<f32>,
+    /// (B, n_layer, nheads, headdim, d_state)
+    pub ssm_state: Vec<f32>,
+}
+
+/// One execution backend: prefill/decode over explicit recurrent state.
+///
+/// State is carried *by the caller* (flat `conv`/`ssm` buffers, the same
+/// layout [`crate::coordinator::StatePool`] pools), so engines can gather,
+/// scatter, snapshot, and roll back without the backend's involvement —
+/// the property speculative decoding depends on.
+pub trait InferenceBackend {
+    /// Short identifier ("pjrt", "native") for logs and CLI output.
+    fn name(&self) -> &'static str;
+
+    /// The model this backend serves.
+    fn cfg(&self) -> &ModelConfig;
+
+    /// Quantization variants this backend can execute.
+    fn variants(&self) -> Vec<String>;
+
+    /// The artifacts directory backing this backend, when there is one
+    /// (used to locate side-band data such as the held-out corpus).
+    fn artifacts_dir(&self) -> Option<&Path> {
+        None
+    }
+
+    /// Zero-initialized (conv, ssm) state pair for a fresh sequence.
+    fn zero_state(&self) -> (Vec<f32>, Vec<f32>) {
+        let cfg = self.cfg();
+        (
+            vec![0.0; cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()],
+            vec![0.0; cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state],
+        )
+    }
+
+    /// Run prefill over one chunk, continuing from `(conv_state, ssm_state)`
+    /// (zeros for a fresh sequence — chunked prefill chains exactly).
+    /// PJRT requires `tokens.len()` to be a compiled bucket length; the
+    /// native backend accepts any length.
+    fn prefill(
+        &self,
+        variant: &str,
+        tokens: &[i32],
+        conv_state: &[f32],
+        ssm_state: &[f32],
+    ) -> Result<PrefillOut>;
+
+    /// Prefill a fresh sequence (zero state).
+    fn prefill_fresh(&self, variant: &str, tokens: &[i32]) -> Result<PrefillOut> {
+        let (c, s) = self.zero_state();
+        self.prefill(variant, tokens, &c, &s)
+    }
+
+    /// One batched decode step.  All state slices are batch-major;
+    /// `tokens.len() == batch`.  PJRT requires `batch` to be a compiled
+    /// bucket; the native backend accepts any batch size.
+    fn decode(
+        &self,
+        variant: &str,
+        batch: usize,
+        conv_state: &[f32],
+        ssm_state: &[f32],
+        tokens: &[i32],
+    ) -> Result<DecodeOut>;
+
+    /// Prefill chunk lengths this backend executes (ascending).
+    fn prefill_buckets(&self) -> Vec<usize>;
+
+    /// Decode batch sizes this backend executes (ascending).
+    fn decode_batches(&self) -> Vec<usize>;
+
+    /// Pre-compile / pre-warm everything the listed variants need, so the
+    /// request path never pays one-time costs.  No-op where nothing is
+    /// lazily compiled (the native backend).
+    fn warmup(&self, _variants: &[String]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Exact per-position logits `(L, vocab)` for an arbitrary-length
+    /// sequence from a fresh state: full prefill buckets first, then the
+    /// sub-bucket remainder through single-token decode steps — the same
+    /// exact chaining the engine's admission path uses.  Backends with
+    /// unrestricted prefill lengths override this with a single call.
+    fn forward_logits(&self, variant: &str, tokens: &[i32]) -> Result<Vec<f32>> {
+        let vocab = self.cfg().vocab_size;
+        let (mut conv, mut ssm) = self.zero_state();
+        let buckets = self.prefill_buckets();
+        let (chunks, rest) = bucket::full_bucket_plan(&buckets, tokens.len());
+        let mut logits = Vec::with_capacity(tokens.len() * vocab);
+        let mut off = 0usize;
+        for b in chunks {
+            let out = self.prefill(variant, &tokens[off..off + b], &conv, &ssm)?;
+            conv = out.conv_state;
+            ssm = out.ssm_state;
+            logits.extend(out.logits);
+            off += b;
+        }
+        for i in off..off + rest {
+            let out = self.decode(variant, 1, &conv, &ssm, &tokens[i..i + 1])?;
+            conv = out.conv_state;
+            ssm = out.ssm_state;
+            logits.extend(out.logits);
+        }
+        Ok(logits)
+    }
+}
+
+/// Which backend to load — the CLI's `--backend` flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT when the build has it and artifacts exist, native otherwise.
+    Auto,
+    /// The in-process Rust model (artifact-free).
+    Native,
+    /// The AOT artifacts through the XLA PJRT client.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(Self::Auto),
+            "native" => Some(Self::Native),
+            "pjrt" => Some(Self::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn load_pjrt() -> Result<Box<dyn InferenceBackend>> {
+    Ok(Box::new(PjrtBackend::load_default()?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn load_pjrt() -> Result<Box<dyn InferenceBackend>> {
+    anyhow::bail!(
+        "this build has no PJRT backend: rebuild with `--features pjrt` \
+         (needs a local xla_extension), or use `--backend native`"
+    )
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_artifacts_present() -> bool {
+    crate::model::weights::artifacts_dir().join("manifest.json").exists()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_artifacts_present() -> bool {
+    false
+}
+
+/// Load a backend by kind.  `Auto` prefers PJRT (compiled artifacts) and
+/// falls back to the native model, so every entry point works on a host
+/// with no artifacts and no xla_extension.
+pub fn load(kind: BackendKind) -> Result<Box<dyn InferenceBackend>> {
+    match kind {
+        BackendKind::Pjrt => load_pjrt(),
+        BackendKind::Native => Ok(Box::new(NativeBackend::load_default()?)),
+        BackendKind::Auto => {
+            if pjrt_artifacts_present() {
+                load_pjrt()
+            } else {
+                Ok(Box::new(NativeBackend::load_default()?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::from_name("auto"), Some(BackendKind::Auto));
+        assert_eq!(BackendKind::from_name("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::from_name("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::from_name("tpu"), None);
+    }
+
+    #[test]
+    fn load_native_always_works() {
+        let be = load(BackendKind::Native).expect("native backend");
+        assert_eq!(be.name(), "native");
+        assert!(be.cfg().vocab_size > 0);
+        assert!(!be.prefill_buckets().is_empty());
+        assert!(!be.decode_batches().is_empty());
+        be.warmup(&be.variants()).unwrap();
+    }
+
+    /// Wrapper that hides the native backend's arbitrary-length prefill so
+    /// the trait's *default* chunked `forward_logits` path is exercised.
+    struct Bucketed(NativeBackend);
+
+    impl InferenceBackend for Bucketed {
+        fn name(&self) -> &'static str {
+            "bucketed-test"
+        }
+        fn cfg(&self) -> &ModelConfig {
+            self.0.cfg()
+        }
+        fn variants(&self) -> Vec<String> {
+            self.0.variants()
+        }
+        fn prefill(
+            &self,
+            variant: &str,
+            tokens: &[i32],
+            conv_state: &[f32],
+            ssm_state: &[f32],
+        ) -> Result<PrefillOut> {
+            assert!(
+                self.prefill_buckets().contains(&tokens.len()),
+                "default forward_logits must send exact bucket lengths, got {}",
+                tokens.len()
+            );
+            self.0.prefill(variant, tokens, conv_state, ssm_state)
+        }
+        fn decode(
+            &self,
+            variant: &str,
+            batch: usize,
+            conv_state: &[f32],
+            ssm_state: &[f32],
+            tokens: &[i32],
+        ) -> Result<DecodeOut> {
+            self.0.decode(variant, batch, conv_state, ssm_state, tokens)
+        }
+        fn prefill_buckets(&self) -> Vec<usize> {
+            vec![8, 16]
+        }
+        fn decode_batches(&self) -> Vec<usize> {
+            vec![1, 2]
+        }
+    }
+
+    #[test]
+    fn default_forward_logits_chunks_exactly() {
+        // 21 tokens over buckets {8, 16} -> chunks [16] + 5 decode steps;
+        // must match the native one-shot prefill per position
+        let be = Bucketed(NativeBackend::synthetic(3));
+        let vocab = be.cfg().vocab_size;
+        let tokens: Vec<i32> = (0..21).map(|i| (i * 13) % vocab as i32).collect();
+        let chunked = be.forward_logits("fp32", &tokens).unwrap();
+        let full = be.0.forward_logits("fp32", &tokens).unwrap();
+        assert_eq!(chunked.len(), tokens.len() * vocab);
+        let mut max_err = 0.0f32;
+        for (a, b) in chunked.iter().zip(&full) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 1e-3, "default vs native forward_logits err {max_err}");
+    }
+}

@@ -1,0 +1,320 @@
+//! The artifact-free execution backend: the in-process Rust Mamba2 golden
+//! model behind the [`InferenceBackend`] contract.
+//!
+//! Everything the PJRT artifacts can do, this does without them: all five
+//! quantization variants, chunked prefill with exact state chaining
+//! ([`Mamba2::prefill_chunk`]), and batched decode at *arbitrary* batch
+//! sizes (each sequence's recurrent step is independent, so batching is a
+//! loop — no compiled bucket constraint).  It loads the trained tiny
+//! checkpoint when `artifacts/` is present and deterministic synthetic
+//! weights otherwise, which is what lets the whole coordinator stack run —
+//! and be tested, unconditionally — on hosts with no XLA, no artifacts,
+//! and no Python.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::config::ModelConfig;
+use crate::model::mamba2::DecodeState;
+use crate::model::weights::{artifacts_dir, Manifest, ModelWeights};
+use crate::model::{Mamba2, Variant};
+
+use super::{DecodeOut, InferenceBackend, PrefillOut};
+
+/// Seed for the synthetic-weights fallback.  One fixed value so every
+/// artifact-free `NativeBackend::load_default()` in a process (serve
+/// backend, drafter, test baseline) sees *identical* weights.
+pub const SYNTHETIC_SEED: u64 = 3;
+
+/// Default bucket lists when no manifest dictates them — mirrors
+/// `PREFILL_LENS` / `DECODE_BATCHES` in `python/compile/aot.py` so chunk
+/// plans and batch packing behave the same on either backend.
+const DEFAULT_PREFILL_BUCKETS: [usize; 4] = [32, 64, 128, 256];
+const DEFAULT_DECODE_BATCHES: [usize; 4] = [1, 2, 4, 8];
+
+pub struct NativeBackend {
+    model: Mamba2,
+    prefill_buckets: Vec<usize>,
+    decode_batches: Vec<usize>,
+    dir: Option<PathBuf>,
+}
+
+impl NativeBackend {
+    /// Wrap a model (Hadamard weights prepared once, like the FPGA's
+    /// offline weight preprocessing) with the default bucket lists.
+    pub fn new(weights: ModelWeights) -> Self {
+        let mut model = Mamba2::new(weights);
+        model.prepare();
+        Self {
+            model,
+            prefill_buckets: DEFAULT_PREFILL_BUCKETS.to_vec(),
+            decode_batches: DEFAULT_DECODE_BATCHES.to_vec(),
+            dir: None,
+        }
+    }
+
+    /// Override the advertised buckets (the backend itself accepts any
+    /// length/batch; the lists steer the coordinator's planning).
+    pub fn with_buckets(mut self, prefill: Vec<usize>, decode: Vec<usize>) -> Self {
+        assert!(!prefill.is_empty() && !decode.is_empty());
+        self.prefill_buckets = prefill;
+        self.decode_batches = decode;
+        self.prefill_buckets.sort_unstable();
+        self.decode_batches.sort_unstable();
+        self
+    }
+
+    /// Deterministic synthetic tiny model — what tests and artifact-free
+    /// hosts run.
+    pub fn synthetic(seed: u64) -> Self {
+        Self::new(ModelWeights::random(&ModelConfig::tiny(), seed))
+    }
+
+    /// Trained checkpoint from `artifacts/` when present (adopting the
+    /// manifest's bucket lists so plans match the PJRT backend exactly),
+    /// synthetic weights otherwise.
+    pub fn load_default() -> Result<Self> {
+        let dir = artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let weights = ModelWeights::load(&dir)?;
+            let manifest = Manifest::load(&dir)?;
+            let mut be = Self::new(weights)
+                .with_buckets(manifest.prefill_lens, manifest.decode_batches);
+            be.dir = Some(dir);
+            Ok(be)
+        } else {
+            Ok(Self::synthetic(SYNTHETIC_SEED))
+        }
+    }
+
+    pub fn model(&self) -> &Mamba2 {
+        &self.model
+    }
+
+    fn variant(&self, name: &str) -> Result<Variant> {
+        Variant::from_name(name).ok_or_else(|| anyhow!("unknown variant {name}"))
+    }
+
+    fn conv_len(&self) -> usize {
+        let cfg = self.cfg();
+        cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()
+    }
+
+    fn ssm_len(&self) -> usize {
+        let cfg = self.cfg();
+        cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn cfg(&self) -> &ModelConfig {
+        &self.model.w.cfg
+    }
+
+    fn variants(&self) -> Vec<String> {
+        Variant::ALL.iter().map(|v| v.name().to_string()).collect()
+    }
+
+    fn artifacts_dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    fn prefill(
+        &self,
+        variant: &str,
+        tokens: &[i32],
+        conv_state: &[f32],
+        ssm_state: &[f32],
+    ) -> Result<PrefillOut> {
+        let v = self.variant(variant)?;
+        ensure!(!tokens.is_empty(), "empty prefill chunk");
+        ensure!(conv_state.len() == self.conv_len(), "conv state length");
+        ensure!(ssm_state.len() == self.ssm_len(), "ssm state length");
+        let mut state =
+            DecodeState { conv: conv_state.to_vec(), ssm: ssm_state.to_vec() };
+        let toks: Vec<u32> = tokens.iter().map(|t| *t as u32).collect();
+        let logits = self.model.prefill_chunk(&toks, v, &mut state);
+        Ok(PrefillOut { logits, conv_state: state.conv, ssm_state: state.ssm })
+    }
+
+    fn decode(
+        &self,
+        variant: &str,
+        batch: usize,
+        conv_state: &[f32],
+        ssm_state: &[f32],
+        tokens: &[i32],
+    ) -> Result<DecodeOut> {
+        let v = self.variant(variant)?;
+        ensure!(tokens.len() == batch, "tokens.len() != batch");
+        let (cl, sl) = (self.conv_len(), self.ssm_len());
+        ensure!(conv_state.len() == batch * cl, "conv state length");
+        ensure!(ssm_state.len() == batch * sl, "ssm state length");
+        let vocab = self.cfg().vocab_size;
+        let mut logits = Vec::with_capacity(batch * vocab);
+        let mut out_conv = vec![0.0f32; batch * cl];
+        let mut out_ssm = vec![0.0f32; batch * sl];
+        // sequences are independent at decode time: batch = loop
+        for b in 0..batch {
+            let mut st = DecodeState {
+                conv: conv_state[b * cl..(b + 1) * cl].to_vec(),
+                ssm: ssm_state[b * sl..(b + 1) * sl].to_vec(),
+            };
+            logits.extend(self.model.decode_step(tokens[b] as u32, &mut st, v));
+            out_conv[b * cl..(b + 1) * cl].copy_from_slice(&st.conv);
+            out_ssm[b * sl..(b + 1) * sl].copy_from_slice(&st.ssm);
+        }
+        Ok(DecodeOut { logits, conv_state: out_conv, ssm_state: out_ssm })
+    }
+
+    fn prefill_buckets(&self) -> Vec<usize> {
+        self.prefill_buckets.clone()
+    }
+
+    fn decode_batches(&self) -> Vec<usize> {
+        self.decode_batches.clone()
+    }
+
+    fn forward_logits(&self, variant: &str, tokens: &[i32]) -> Result<Vec<f32>> {
+        // no bucket constraint in-process: one exact full-length prefill
+        let out = self.prefill_fresh(variant, tokens)?;
+        Ok(out.logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::argmax;
+
+    fn be() -> NativeBackend {
+        NativeBackend::synthetic(SYNTHETIC_SEED)
+    }
+
+    fn toks(n: usize, vocab: usize, seed: usize) -> Vec<i32> {
+        (0..n).map(|i| ((i * 17 + seed * 131) % vocab) as i32).collect()
+    }
+
+    #[test]
+    fn chunked_prefill_matches_one_shot() {
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let t = toks(80, vocab, 1);
+        let full = be.prefill_fresh("fp32", &t).unwrap();
+        let (mut conv, mut ssm) = be.zero_state();
+        let mut logits = Vec::new();
+        for chunk in [&t[..32], &t[32..64], &t[64..]] {
+            let out = be.prefill("fp32", chunk, &conv, &ssm).unwrap();
+            conv = out.conv_state;
+            ssm = out.ssm_state;
+            logits.extend(out.logits);
+        }
+        let mut max_err = 0.0f32;
+        for (a, b) in logits.iter().zip(&full.logits) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 1e-4, "chunked vs full logits err {max_err}");
+        let mut s_err = 0.0f32;
+        for (a, b) in ssm.iter().zip(&full.ssm_state) {
+            s_err = s_err.max((a - b).abs());
+        }
+        assert!(s_err < 1e-4, "chunked vs full state err {s_err}");
+    }
+
+    #[test]
+    fn batched_decode_matches_singles() {
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        // independent per-sequence states from three different prompts
+        let mut convs = Vec::new();
+        let mut ssms = Vec::new();
+        let mut next = Vec::new();
+        for s in 0..3usize {
+            let t = toks(32, vocab, s + 2);
+            let out = be.prefill_fresh("fp32", &t).unwrap();
+            convs.push(out.conv_state);
+            ssms.push(out.ssm_state);
+            next.push(*t.last().unwrap());
+        }
+        let conv_b: Vec<f32> = convs.concat();
+        let ssm_b: Vec<f32> = ssms.concat();
+        let batched = be.decode("fp32", 3, &conv_b, &ssm_b, &next).unwrap();
+        for s in 0..3 {
+            let single = be
+                .decode("fp32", 1, &convs[s], &ssms[s], &next[s..s + 1])
+                .unwrap();
+            assert_eq!(
+                single.logits,
+                batched.logits[s * vocab..(s + 1) * vocab].to_vec(),
+                "seq {s} logits"
+            );
+            let cl = convs[s].len();
+            let sl = ssms[s].len();
+            assert_eq!(single.conv_state, batched.conv_state[s * cl..(s + 1) * cl]);
+            assert_eq!(single.ssm_state, batched.ssm_state[s * sl..(s + 1) * sl]);
+        }
+    }
+
+    #[test]
+    fn arbitrary_batch_and_chunk_sizes_accepted() {
+        // no compiled-bucket constraint: batch 5 and a 7-token chunk work
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let (conv, ssm) = be.zero_state();
+        let conv5: Vec<f32> = conv.repeat(5);
+        let ssm5: Vec<f32> = ssm.repeat(5);
+        let out = be.decode("fp32", 5, &conv5, &ssm5, &[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(out.logits.len(), 5 * vocab);
+        let out = be.prefill_fresh("fp32", &toks(7, vocab, 4)).unwrap();
+        assert_eq!(out.logits.len(), 7 * vocab);
+    }
+
+    #[test]
+    fn all_variants_execute() {
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let t = toks(16, vocab, 5);
+        for v in be.variants() {
+            let out = be.prefill_fresh(&v, &t).unwrap();
+            assert!(out.logits.iter().all(|x| x.is_finite()), "{v}");
+            let d = be
+                .decode(&v, 1, &out.conv_state, &out.ssm_state, &t[15..])
+                .unwrap();
+            assert!(d.logits.iter().all(|x| x.is_finite()), "{v}");
+        }
+        assert!(be.prefill_fresh("nosuch", &t).is_err());
+    }
+
+    #[test]
+    fn prefill_then_decode_token_exact_with_forward_logits() {
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let t = toks(40, vocab, 6);
+        let all = be.forward_logits("fp32", &t).unwrap();
+        let pre = be.prefill_fresh("fp32", &t[..39]).unwrap();
+        let step = be
+            .decode("fp32", 1, &pre.conv_state, &pre.ssm_state, &t[39..])
+            .unwrap();
+        assert_eq!(
+            argmax(&step.logits),
+            argmax(&all[39 * vocab..40 * vocab]),
+            "decode continuation must agree with full forward"
+        );
+    }
+
+    #[test]
+    fn synthetic_backend_is_deterministic() {
+        let a = NativeBackend::synthetic(7);
+        let b = NativeBackend::synthetic(7);
+        let t = toks(8, a.cfg().vocab_size, 7);
+        assert_eq!(
+            a.prefill_fresh("fp32", &t).unwrap().logits,
+            b.prefill_fresh("fp32", &t).unwrap().logits
+        );
+    }
+}

@@ -1,0 +1,209 @@
+//! The PJRT execution backend: the AOT-lowered HLO artifacts run through
+//! the XLA CPU client, adapted to the [`InferenceBackend`] contract.
+//!
+//! A thin delegation layer over [`Runtime`] — the runtime keeps owning
+//! executable compilation/caching and weight literals; this type only maps
+//! the trait's variant-level `warmup` onto artifact names and exposes the
+//! manifest's bucket lists.  Compiled only under the `pjrt` cargo feature
+//! (the `xla` crate needs a local `xla_extension` install).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::runtime::Runtime;
+
+use super::{DecodeOut, InferenceBackend, PrefillOut};
+
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    /// Load over the default artifacts directory (`FASTMAMBA_ARTIFACTS` or
+    /// the nearest `artifacts/manifest.json`).
+    pub fn load_default() -> Result<Self> {
+        Ok(Self { rt: Runtime::load_default()? })
+    }
+
+    pub fn load(dir: PathBuf) -> Result<Self> {
+        Ok(Self { rt: Runtime::load(dir)? })
+    }
+
+    pub fn from_runtime(rt: Runtime) -> Self {
+        Self { rt }
+    }
+
+    /// The underlying runtime (executable cache inspection, manifest).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn cfg(&self) -> &ModelConfig {
+        &self.rt.weights_host.cfg
+    }
+
+    fn variants(&self) -> Vec<String> {
+        self.rt.manifest.variants.clone()
+    }
+
+    fn artifacts_dir(&self) -> Option<&Path> {
+        Some(&self.rt.dir)
+    }
+
+    fn zero_state(&self) -> (Vec<f32>, Vec<f32>) {
+        self.rt.zero_state()
+    }
+
+    fn prefill(
+        &self,
+        variant: &str,
+        tokens: &[i32],
+        conv_state: &[f32],
+        ssm_state: &[f32],
+    ) -> Result<PrefillOut> {
+        self.rt.prefill(variant, tokens, conv_state, ssm_state)
+    }
+
+    fn decode(
+        &self,
+        variant: &str,
+        batch: usize,
+        conv_state: &[f32],
+        ssm_state: &[f32],
+        tokens: &[i32],
+    ) -> Result<DecodeOut> {
+        self.rt.decode(variant, batch, conv_state, ssm_state, tokens)
+    }
+
+    fn prefill_buckets(&self) -> Vec<usize> {
+        self.rt.prefill_buckets()
+    }
+
+    fn decode_batches(&self) -> Vec<usize> {
+        self.rt.decode_batches()
+    }
+
+    fn warmup(&self, variants: &[String]) -> Result<()> {
+        let cfg = self.cfg();
+        let mut names = Vec::new();
+        for v in variants {
+            for l in self.prefill_buckets() {
+                names.push(format!("{}_prefill_{}_L{}", cfg.name, v, l));
+            }
+            for b in self.decode_batches() {
+                names.push(format!("{}_decode_{}_B{}", cfg.name, v, b));
+            }
+        }
+        // warm only what the manifest actually lowered
+        names.retain(|n| self.rt.manifest.artifact(n).is_some());
+        self.rt.warmup(&names)
+    }
+}
+
+/// Backend-parity suite (satellite): the native golden model and the PJRT
+/// executables must be *token-exact* on the fp32 variant — same argmax at
+/// every prefill position and along a decode chain.  Gated on artifacts.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::coordinator::request::argmax;
+    use crate::model::weights::artifacts_dir;
+
+    fn both() -> Option<(NativeBackend, PjrtBackend)> {
+        if !artifacts_dir().join("manifest.json").exists() {
+            return None;
+        }
+        Some((
+            NativeBackend::load_default().expect("native load"),
+            PjrtBackend::load_default().expect("pjrt load"),
+        ))
+    }
+
+    #[test]
+    fn warmup_compiles_fp32_graphs() {
+        let Some((_, pj)) = both() else { return };
+        pj.warmup(&["fp32".to_string()]).expect("warmup");
+        let max = pj.prefill_buckets().len() + pj.decode_batches().len();
+        let got = pj.runtime().compiled_count();
+        assert!(got > 0 && got <= max, "warmed {got} of <= {max} artifacts");
+        // warming again must not recompile
+        pj.warmup(&["fp32".to_string()]).expect("warmup");
+        assert_eq!(pj.runtime().compiled_count(), got);
+    }
+
+    #[test]
+    fn prefill_token_exact_fp32() {
+        let Some((na, pj)) = both() else { return };
+        assert_eq!(na.cfg(), pj.cfg());
+        let vocab = pj.cfg().vocab_size;
+        let tokens: Vec<i32> = (0..64).map(|i| (i * 7) % vocab as i32).collect();
+        let n = na.prefill_fresh("fp32", &tokens).unwrap();
+        let p = pj.prefill_fresh("fp32", &tokens).unwrap();
+        for t in 0..tokens.len() {
+            assert_eq!(
+                argmax(&n.logits[t * vocab..(t + 1) * vocab]),
+                argmax(&p.logits[t * vocab..(t + 1) * vocab]),
+                "prefill position {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_state_parity() {
+        // chain two buckets through both backends: final states must agree
+        // to runtime tolerance and next-token argmax must match
+        let Some((na, pj)) = both() else { return };
+        let vocab = pj.cfg().vocab_size;
+        let tokens: Vec<i32> = (0..96).map(|i| (i * 5) % vocab as i32).collect();
+        let run = |be: &dyn InferenceBackend| {
+            let (mut conv, mut ssm) = be.zero_state();
+            for chunk in [&tokens[..64], &tokens[64..]] {
+                let out = be.prefill("fp32", chunk, &conv, &ssm).unwrap();
+                conv = out.conv_state;
+                ssm = out.ssm_state;
+            }
+            be.decode("fp32", 1, &conv, &ssm, &tokens[95..]).unwrap()
+        };
+        let n = run(&na);
+        let p = run(&pj);
+        assert_eq!(argmax(&n.logits), argmax(&p.logits));
+        let mut s_err = 0.0f32;
+        for (a, b) in n.ssm_state.iter().zip(&p.ssm_state) {
+            s_err = s_err.max((a - b).abs());
+        }
+        assert!(s_err < 2e-2, "chained state err {s_err}");
+    }
+
+    #[test]
+    fn decode_chain_token_exact_fp32() {
+        let Some((na, pj)) = both() else { return };
+        let vocab = pj.cfg().vocab_size;
+        let prompt: Vec<i32> = (0..32).map(|i| (i * 11) % vocab as i32).collect();
+        let mut chains = Vec::new();
+        for be in [&na as &dyn InferenceBackend, &pj as &dyn InferenceBackend] {
+            let out = be.prefill_fresh("fp32", &prompt).unwrap();
+            let mut conv = out.conv_state;
+            let mut ssm = out.ssm_state;
+            let mut tok = argmax(&out.logits[31 * vocab..32 * vocab]) as i32;
+            let mut chain = vec![tok];
+            for _ in 0..12 {
+                let d = be.decode("fp32", 1, &conv, &ssm, &[tok]).unwrap();
+                conv = d.conv_state;
+                ssm = d.ssm_state;
+                tok = argmax(&d.logits) as i32;
+                chain.push(tok);
+            }
+            chains.push(chain);
+        }
+        assert_eq!(chains[0], chains[1], "native vs pjrt greedy decode chain");
+    }
+}

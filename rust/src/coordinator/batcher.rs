@@ -13,29 +13,10 @@ pub struct BatchPlan {
     pub padding: usize,
 }
 
-/// Smallest bucket that covers `n` items, from an ascending bucket list;
-/// `None` when even the largest bucket is too small.  Shared by the decode
-/// batcher (batch buckets) and the speculative engine (verify windows over
-/// the prefill buckets).
-pub fn smallest_covering(buckets_ascending: &[usize], n: usize) -> Option<usize> {
-    buckets_ascending.iter().copied().find(|b| *b >= n)
-}
-
-/// Cover `n` items with full buckets, largest first; returns the chunk
-/// list and the remainder (always smaller than the smallest bucket).
-/// Shared by the engine's chunked-prefill admission and the speculative
-/// engine's verifier-debt consolidation.
-pub fn full_bucket_plan(buckets_ascending: &[usize], n: usize) -> (Vec<usize>, usize) {
-    let mut chunks = Vec::new();
-    let mut rest = n;
-    for &b in buckets_ascending.iter().rev() {
-        while rest >= b {
-            chunks.push(b);
-            rest -= b;
-        }
-    }
-    (chunks, rest)
-}
+// Bucket arithmetic moved next to the execution trait (every backend and
+// the trait's default `forward_logits` need it); re-exported here so the
+// coordinator-side paths keep working.
+pub use crate::backend::bucket::{full_bucket_plan, smallest_covering};
 
 /// Greedy bucket packing: take as many sequences as fit the largest bucket;
 /// the remainder uses the smallest bucket that covers it.

@@ -11,11 +11,15 @@
 //! AOT-compiled batch buckets, and a [`scheduler::Engine`] that prefills
 //! prompts in bucket-sized chunks (exact chunked prefill — validated
 //! bit-exact against whole-sequence prefill) before handing them to the
-//! decode loop.  All compute goes through [`crate::runtime::Runtime`].
+//! decode loop.  All compute goes through the
+//! [`crate::backend::InferenceBackend`] trait — the engines are identical
+//! over the PJRT artifacts and the artifact-free native model, and any
+//! future backend inherits them unchanged.
 //!
 //! The second serving mode is speculative: [`speculative::SpecEngine`]
 //! drives a draft-k / verify-1 loop in which the quantized `fastmamba`
-//! variant drafts candidate tokens with single-token decode steps and the
+//! variant drafts candidate tokens with single-token decode steps (on any
+//! backend — drafter and verifier pair freely) and the
 //! `fp32` verifier scores the whole draft window in one chunked-prefill
 //! style call.  The recurrent-state problem this creates (rejected drafts
 //! must un-happen) is solved by versioned snapshots in
@@ -38,5 +42,5 @@ pub use metrics::Metrics;
 pub use request::{FinishedRequest, Request, SpecStats};
 pub use router::Router;
 pub use scheduler::{Engine, EngineConfig};
-pub use speculative::{DrafterBackend, SpecConfig, SpecEngine};
+pub use speculative::{SpecConfig, SpecEngine};
 pub use state::{SnapshotId, StatePool};

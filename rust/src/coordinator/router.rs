@@ -13,7 +13,7 @@ use std::thread;
 
 use anyhow::Result;
 
-use crate::runtime::Runtime;
+use crate::backend::InferenceBackend;
 
 use super::request::{FinishedRequest, Request};
 use super::scheduler::{Engine, EngineConfig};
@@ -56,18 +56,23 @@ impl Router {
 }
 
 /// Run an engine on a worker thread; returns a submission channel and a
-/// results channel.  The worker owns its own PJRT runtime (the `xla` crate
-/// is not Sync — exactly like a real deployment where each worker process
-/// owns a device).  Dropping the submitter drains and joins the worker.
-pub fn serve_threaded(
-    artifacts_dir: std::path::PathBuf,
+/// results channel.  The worker *constructs* its own backend from the
+/// factory closure rather than borrowing one (PJRT clients are not Sync —
+/// exactly like a real deployment where each worker process owns a
+/// device; the same factory shape is what a sharded multi-worker launch
+/// will fan out).  Dropping the submitter drains and joins the worker.
+pub fn serve_threaded<F>(
+    make_backend: F,
     cfg: EngineConfig,
-) -> (mpsc::Sender<Request>, mpsc::Receiver<FinishedRequest>, thread::JoinHandle<Result<()>>) {
+) -> (mpsc::Sender<Request>, mpsc::Receiver<FinishedRequest>, thread::JoinHandle<Result<()>>)
+where
+    F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+{
     let (tx_req, rx_req) = mpsc::channel::<Request>();
     let (tx_done, rx_done) = mpsc::channel::<FinishedRequest>();
     let handle = thread::spawn(move || -> Result<()> {
-        let rt = Runtime::load(artifacts_dir)?;
-        let mut engine = Engine::new(&rt, cfg);
+        let be = make_backend()?;
+        let mut engine = Engine::new(be.as_ref(), cfg);
         engine.metrics.start();
         loop {
             // drain whatever is queued without blocking; block only if idle
@@ -151,5 +156,30 @@ mod tests {
             MockWorker { load: 3, cap: 16 },
         ];
         assert_eq!(r.route(&ws), Some(1));
+    }
+
+    #[test]
+    fn serve_threaded_roundtrip_on_native_backend() {
+        use crate::backend::NativeBackend;
+
+        let (tx, rx, handle) = serve_threaded(
+            || Ok(Box::new(NativeBackend::synthetic(3)) as Box<dyn InferenceBackend>),
+            EngineConfig { max_active: 4, greedy_chunking: true },
+        );
+        let n = 3usize;
+        for id in 0..n {
+            let prompt: Vec<u32> = (0..24).map(|j| ((id * 97 + j * 13) % 512) as u32).collect();
+            tx.send(Request::new(id as u64, prompt, 5, "fp32")).unwrap();
+        }
+        let mut done = Vec::new();
+        for _ in 0..n {
+            let f = rx.recv().expect("worker produced a result");
+            assert_eq!(f.generated.len(), 5);
+            done.push(f.id);
+        }
+        done.sort_unstable();
+        assert_eq!(done, vec![0, 1, 2]);
+        drop(tx); // drains and joins the worker
+        handle.join().unwrap().unwrap();
     }
 }

@@ -16,7 +16,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::Runtime;
+use crate::backend::InferenceBackend;
 
 use super::batcher::DecodeBatcher;
 use super::metrics::Metrics;
@@ -38,8 +38,8 @@ impl Default for EngineConfig {
     }
 }
 
-pub struct Engine<'rt> {
-    rt: &'rt Runtime,
+pub struct Engine<'be> {
+    be: &'be dyn InferenceBackend,
     cfg: EngineConfig,
     pool: StatePool,
     batcher: DecodeBatcher,
@@ -50,13 +50,13 @@ pub struct Engine<'rt> {
     pub metrics: Metrics,
 }
 
-impl<'rt> Engine<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: EngineConfig) -> Self {
-        let pool = StatePool::new(&rt.weights_host.cfg, cfg.max_active);
-        let batcher = DecodeBatcher::new(rt.decode_batches());
-        let prefill_buckets = rt.prefill_buckets();
+impl<'be> Engine<'be> {
+    pub fn new(be: &'be dyn InferenceBackend, cfg: EngineConfig) -> Self {
+        let pool = StatePool::new(be.cfg(), cfg.max_active);
+        let batcher = DecodeBatcher::new(be.decode_batches());
+        let prefill_buckets = be.prefill_buckets();
         Self {
-            rt,
+            be,
             cfg,
             pool,
             batcher,
@@ -110,7 +110,7 @@ impl<'rt> Engine<'rt> {
                     .map(|t| *t as i32)
                     .collect();
                 let st = self.pool.get(slot);
-                let out = self.rt.prefill(&req.variant, &toks, &st.conv, &st.ssm)?;
+                let out = self.be.prefill(&req.variant, &toks, &st.conv, &st.ssm)?;
                 let stm = self.pool.get_mut(slot);
                 stm.conv = out.conv_state;
                 stm.ssm = out.ssm_state;
@@ -122,7 +122,7 @@ impl<'rt> Engine<'rt> {
             for i in 0..remainder {
                 let tok = req.prompt[offset + i] as i32;
                 let st = self.pool.get(slot);
-                let out = self.rt.decode(&req.variant, 1, &st.conv, &st.ssm, &[tok])?;
+                let out = self.be.decode(&req.variant, 1, &st.conv, &st.ssm, &[tok])?;
                 let stm = self.pool.get_mut(slot);
                 stm.conv = out.conv_state;
                 stm.ssm = out.ssm_state;
@@ -134,7 +134,7 @@ impl<'rt> Engine<'rt> {
 
             // first generated token comes from the last prompt position
             // (chunk_plan guarantees remainder >= 1, so last_logits is set)
-            let vocab = self.rt.weights_host.cfg.vocab_size;
+            let vocab = self.be.cfg().vocab_size;
             let first = argmax(&last_logits.expect("remainder >= 1")[..vocab]);
             let mut infl = InFlight {
                 next_token: 0,
@@ -193,7 +193,7 @@ impl<'rt> Engine<'rt> {
             v.dedup();
             v
         };
-        let vocab = self.rt.weights_host.cfg.vocab_size;
+        let vocab = self.be.cfg().vocab_size;
         let mut to_retire: Vec<usize> = Vec::new();
 
         for variant in variants {
@@ -219,7 +219,7 @@ impl<'rt> Engine<'rt> {
                     tokens.push(tokens[0]);
                 }
                 let (conv, ssm) = self.pool.gather(&slot_ids);
-                let out = self.rt.decode(&variant, plan.bucket, &conv, &ssm, &tokens)?;
+                let out = self.be.decode(&variant, plan.bucket, &conv, &ssm, &tokens)?;
                 // scatter only real members
                 let real = members.len();
                 let conv_len = conv.len() / plan.bucket;
@@ -270,5 +270,123 @@ impl<'rt> Engine<'rt> {
         }
         self.metrics.stop();
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+
+    fn be() -> NativeBackend {
+        NativeBackend::synthetic(3)
+    }
+
+    fn requests(vocab: usize, max_new: usize) -> Vec<Request> {
+        // mixed lengths: single-token, sub-bucket, bucket-crossing
+        let lens = [1usize, 5, 24, 33, 64, 100];
+        lens.iter()
+            .enumerate()
+            .map(|(i, &plen)| {
+                let prompt: Vec<u32> =
+                    (0..plen).map(|j| ((i * 131 + j * 17) % vocab) as u32).collect();
+                Request::new(i as u64, prompt, max_new, "fp32")
+            })
+            .collect()
+    }
+
+    #[test]
+    fn chunk_plan_reserves_final_token() {
+        let be = be();
+        let eng = Engine::new(&be, EngineConfig::default());
+        for plen in [1usize, 2, 31, 32, 33, 64, 100, 257] {
+            let (chunks, rest) = eng.chunk_plan(plen);
+            assert!(rest >= 1, "plen {plen}");
+            assert_eq!(chunks.iter().sum::<usize>() + rest, plen, "plen {plen}");
+            assert!(rest <= 32, "plen {plen}: remainder {rest} exceeds smallest bucket");
+        }
+    }
+
+    #[test]
+    fn engine_completes_mixed_trace_on_native_backend() {
+        // the formerly artifact-gated end-to-end path, now unconditional
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let mut eng = Engine::new(&be, EngineConfig::default());
+        let reqs = requests(vocab, 6);
+        let n = reqs.len();
+        for r in reqs {
+            eng.submit(r);
+        }
+        eng.run().unwrap();
+        assert_eq!(eng.finished.len(), n);
+        assert_eq!(eng.metrics.requests_completed, n as u64);
+        for f in &eng.finished {
+            assert_eq!(f.generated.len(), 6, "req {}", f.id);
+        }
+        assert_eq!(eng.n_pending(), 0);
+        assert_eq!(eng.n_active(), 0);
+    }
+
+    #[test]
+    fn batched_decode_matches_one_at_a_time() {
+        // packing sequences into decode batches must not change any output
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let run = |max_active: usize| -> Vec<(u64, Vec<u32>)> {
+            let mut eng = Engine::new(
+                &be,
+                EngineConfig { max_active, greedy_chunking: true },
+            );
+            for r in requests(vocab, 8) {
+                eng.submit(r);
+            }
+            eng.run().unwrap();
+            let mut got: Vec<(u64, Vec<u32>)> =
+                eng.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+            got.sort();
+            got
+        };
+        assert_eq!(run(1), run(8), "batching changed generated tokens");
+    }
+
+    #[test]
+    fn max_active_bounds_concurrency() {
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let mut eng = Engine::new(&be, EngineConfig { max_active: 2, greedy_chunking: true });
+        for r in requests(vocab, 12) {
+            eng.submit(r);
+        }
+        let n = 6;
+        while eng.n_pending() > 0 || eng.n_active() > 0 {
+            eng.step().unwrap();
+            assert!(eng.n_active() <= 2);
+        }
+        assert_eq!(eng.finished.len(), n);
+    }
+
+    #[test]
+    fn stop_token_halts_generation() {
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..33).map(|j| ((j * 13) % vocab) as u32).collect();
+        // discover the greedy trace, then stop on its 3rd token
+        let mut probe = Engine::new(&be, EngineConfig::default());
+        probe.submit(Request::new(0, prompt.clone(), 8, "fp32"));
+        probe.run().unwrap();
+        let gen = probe.finished[0].generated.clone();
+        let stop = gen[2];
+        if gen[..2].contains(&stop) {
+            return; // degenerate trace; stop position ambiguous
+        }
+        let mut eng = Engine::new(&be, EngineConfig::default());
+        let mut req = Request::new(0, prompt, 8, "fp32");
+        req.stop_token = Some(stop);
+        eng.submit(req);
+        eng.run().unwrap();
+        let got = &eng.finished[0].generated;
+        assert_eq!(got.last(), Some(&stop));
+        assert_eq!(got.len(), 3, "must halt at the stop token, got {got:?}");
     }
 }

@@ -29,24 +29,27 @@
 //!   chunked-prefill call (the same bit-exact chaining the [`Engine`]
 //!   admission path uses).
 //!
-//! The drafter executes the quantized `fastmamba` variant — either the
-//! AOT decode executable through PJRT or the native golden model
-//! in-process (see [`DrafterBackend`]) — and is seeded from the
-//! verifier's exact post-prefill state (same architecture, same state
-//! shapes), which both skips a second prompt prefill and keeps the
-//! drafter's trajectory close to the verifier's — acceptance is limited
+//! Drafter and verifier are each **any [`InferenceBackend`]** — the
+//! classic deployment pairs an in-process [`NativeBackend`] drafter (a
+//! drafter step on a host runtime is dominated by per-call marshalling,
+//! not FLOPs, so in-process drafting mirrors the FPGA drafter's smaller
+//! weight stream) with a PJRT verifier, but drafting on the serving
+//! backend itself, or verifying natively on an artifact-free host, are
+//! the same code path.  The drafter is seeded from the verifier's exact
+//! post-prefill state (same architecture, same state shapes — enforced at
+//! construction), which both skips a second prompt prefill and keeps the
+//! drafter's trajectory close to the verifier's: acceptance is limited
 //! only by int8+PoT quantization noise, not state divergence.
 //!
 //! [`Engine`]: super::scheduler::Engine
+//! [`NativeBackend`]: crate::backend::NativeBackend
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::model::mamba2::DecodeState;
-use crate::model::{Mamba2, Variant};
-use crate::runtime::Runtime;
+use crate::backend::InferenceBackend;
 
 use super::batcher::{full_bucket_plan, smallest_covering};
 use super::metrics::Metrics;
@@ -69,20 +72,6 @@ pub fn accept_drafts(drafts: &[u32], verify: &[u32]) -> (usize, u32) {
     (m, verify[m])
 }
 
-/// Where the drafter's single-token decode steps execute.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum DrafterBackend {
-    /// The native Rust golden model (quantized variant).  On a host
-    /// runtime a drafter step is dominated not by FLOPs but by per-call
-    /// state marshalling into PJRT, so running drafts in-process keeps
-    /// the draft side far cheaper than a verifier step — the same
-    /// asymmetry the FPGA gets from the drafter's smaller weight stream.
-    Native,
-    /// The AOT-compiled quantized decode executable through PJRT — the
-    /// deployment shape when drafter and verifier share one accelerator.
-    Pjrt,
-}
-
 #[derive(Debug, Clone)]
 pub struct SpecConfig {
     /// draft tokens proposed per round (clamped per-round near the
@@ -92,7 +81,6 @@ pub struct SpecConfig {
     pub draft_variant: String,
     /// variant executed by the verifier ("fp32" — the equivalence target)
     pub verify_variant: String,
-    pub drafter_backend: DrafterBackend,
     /// maximum concurrently active requests (each holds two state slots:
     /// drafter + verifier)
     pub max_active: usize,
@@ -104,7 +92,6 @@ impl Default for SpecConfig {
             draft_k: 4,
             draft_variant: "fastmamba".into(),
             verify_variant: "fp32".into(),
-            drafter_backend: DrafterBackend::Native,
             max_active: 8,
         }
     }
@@ -133,25 +120,60 @@ struct SpecInFlight {
 /// The speculative serving engine: drives a draft-k / verify-1 loop per
 /// active request, round-robin across admissions.  Token-exact with greedy
 /// decoding of the verifier variant (see `examples/spec_decode.rs`).
-pub struct SpecEngine<'rt> {
-    rt: &'rt Runtime,
+pub struct SpecEngine<'be> {
+    drafter: &'be dyn InferenceBackend,
+    verifier: &'be dyn InferenceBackend,
     cfg: SpecConfig,
     pool: StatePool,
-    prefill_buckets: Vec<usize>, // ascending
-    /// in-process drafter (`DrafterBackend::Native`); shares the verifier's
-    /// host weights, prepared once
-    drafter_model: Option<Mamba2>,
-    draft_variant_native: Variant,
+    prefill_buckets: Vec<usize>, // ascending (verifier's)
     pending: VecDeque<Request>,
     active: Vec<SpecInFlight>,
     pub finished: Vec<FinishedRequest>,
     pub metrics: Metrics,
 }
 
-impl<'rt> SpecEngine<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: SpecConfig) -> Self {
-        let prefill_buckets = rt.prefill_buckets();
-        assert!(!prefill_buckets.is_empty(), "no prefill buckets in manifest");
+impl<'be> SpecEngine<'be> {
+    /// Draft and verify on the same backend.
+    pub fn new(be: &'be dyn InferenceBackend, cfg: SpecConfig) -> Self {
+        Self::with_drafter(be, be, cfg)
+    }
+
+    /// Pair any drafter backend with any verifier backend.  Both must
+    /// serve the same model configuration: the drafter slot is seeded by
+    /// copying the verifier's exact recurrent state.
+    pub fn with_drafter(
+        drafter: &'be dyn InferenceBackend,
+        verifier: &'be dyn InferenceBackend,
+        cfg: SpecConfig,
+    ) -> Self {
+        assert_eq!(
+            drafter.cfg(),
+            verifier.cfg(),
+            "drafter and verifier must serve the same model (state seeding)"
+        );
+        assert!(
+            drafter.variants().contains(&cfg.draft_variant),
+            "drafter backend has no variant {}",
+            cfg.draft_variant
+        );
+        assert!(
+            verifier.variants().contains(&cfg.verify_variant),
+            "verifier backend has no variant {}",
+            cfg.verify_variant
+        );
+        if cfg.verify_variant != "fp32" {
+            // the token-exactness contract needs a chunking-invariant
+            // verifier: quantized variants calibrate per verify window
+            // (e.g. PoT per-column absmax over the padded chunk), so their
+            // speculative output can diverge from plain greedy decode
+            eprintln!(
+                "warning: verify variant {:?} quantizes per verify window; \
+                 speculative output is only guaranteed token-exact with fp32",
+                cfg.verify_variant
+            );
+        }
+        let prefill_buckets = verifier.prefill_buckets();
+        assert!(!prefill_buckets.is_empty(), "verifier has no prefill buckets");
         let smallest = prefill_buckets[0];
         let largest = *prefill_buckets.last().unwrap();
         assert!(cfg.draft_k >= 1, "draft_k must be >= 1");
@@ -163,24 +185,13 @@ impl<'rt> SpecEngine<'rt> {
             smallest,
             largest
         );
-        let draft_variant_native = Variant::from_name(&cfg.draft_variant)
-            .unwrap_or_else(|| panic!("unknown draft variant {}", cfg.draft_variant));
-        let drafter_model = match cfg.drafter_backend {
-            DrafterBackend::Native => {
-                let mut m = Mamba2::new(rt.weights_host.clone());
-                m.prepare();
-                Some(m)
-            }
-            DrafterBackend::Pjrt => None,
-        };
-        let pool = StatePool::new(&rt.weights_host.cfg, cfg.max_active * 2);
+        let pool = StatePool::new(verifier.cfg(), cfg.max_active * 2);
         Self {
-            rt,
+            drafter,
+            verifier,
             cfg,
             pool,
             prefill_buckets,
-            drafter_model,
-            draft_variant_native,
             pending: VecDeque::new(),
             active: Vec::new(),
             finished: Vec::new(),
@@ -204,25 +215,14 @@ impl<'rt> SpecEngine<'rt> {
     fn draft_step(&mut self, slot: usize, token: u32) -> Result<Vec<f32>> {
         self.metrics.decode_steps += 1;
         self.metrics.decode_batch_slots += 1;
-        if let Some(model) = self.drafter_model.take() {
-            // native drafter: step the golden model directly on the slot's
-            // buffers (moved out and back — no copies, no marshalling)
-            let s = self.pool.get_mut(slot);
-            let mut st = DecodeState {
-                conv: std::mem::take(&mut s.conv),
-                ssm: std::mem::take(&mut s.ssm),
-            };
-            let logits = model.decode_step(token, &mut st, self.draft_variant_native);
-            let s = self.pool.get_mut(slot);
-            s.conv = st.conv;
-            s.ssm = st.ssm;
-            self.drafter_model = Some(model);
-            return Ok(logits);
-        }
         let st = self.pool.get(slot);
-        let out = self
-            .rt
-            .decode(&self.cfg.draft_variant, 1, &st.conv, &st.ssm, &[token as i32])?;
+        let out = self.drafter.decode(
+            &self.cfg.draft_variant,
+            1,
+            &st.conv,
+            &st.ssm,
+            &[token as i32],
+        )?;
         let stm = self.pool.get_mut(slot);
         stm.conv = out.conv_state;
         stm.ssm = out.ssm_state;
@@ -233,7 +233,8 @@ impl<'rt> SpecEngine<'rt> {
     fn verifier_prefill(&mut self, slot: usize, tokens: &[u32]) -> Result<()> {
         let toks: Vec<i32> = tokens.iter().map(|t| *t as i32).collect();
         let st = self.pool.get(slot);
-        let out = self.rt.prefill(&self.cfg.verify_variant, &toks, &st.conv, &st.ssm)?;
+        let out =
+            self.verifier.prefill(&self.cfg.verify_variant, &toks, &st.conv, &st.ssm)?;
         let stm = self.pool.get_mut(slot);
         stm.conv = out.conv_state;
         stm.ssm = out.ssm_state;
@@ -318,7 +319,7 @@ impl<'rt> SpecEngine<'rt> {
     /// One draft-k / verify-1 round for active request `ai`.
     fn round(&mut self, ai: usize) -> Result<()> {
         self.consolidate(ai)?;
-        let vocab = self.rt.weights_host.cfg.vocab_size;
+        let vocab = self.verifier.cfg().vocab_size;
         let (dslot, vslot, frontier, max_new, stop, gen_len) = {
             let a = &self.active[ai];
             (
@@ -367,7 +368,8 @@ impl<'rt> SpecEngine<'rt> {
         let pad = *window.last().unwrap();
         window.resize(bucket, pad);
         let st = self.pool.get(vslot);
-        let out = self.rt.prefill(&self.cfg.verify_variant, &window, &st.conv, &st.ssm)?;
+        let out =
+            self.verifier.prefill(&self.cfg.verify_variant, &window, &st.conv, &st.ssm)?;
         self.metrics.verify_calls += 1;
 
         // verify[i] = verifier's token after consuming frontier + drafts[..i]
@@ -506,8 +508,8 @@ impl<'rt> SpecEngine<'rt> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::NativeBackend;
     use crate::coordinator::scheduler::{Engine, EngineConfig};
-    use crate::model::weights::artifacts_dir;
 
     #[test]
     fn accept_drafts_prefix_rules() {
@@ -521,13 +523,8 @@ mod tests {
         assert_eq!(accept_drafts(&[], &[8]), (0, 8));
     }
 
-    fn runtime() -> Option<Runtime> {
-        let dir = artifacts_dir();
-        if dir.join("manifest.json").exists() {
-            Some(Runtime::load(dir).expect("runtime load"))
-        } else {
-            None
-        }
+    fn be() -> NativeBackend {
+        NativeBackend::synthetic(3)
     }
 
     fn mixed_requests(vocab: usize) -> Vec<Request> {
@@ -543,17 +540,31 @@ mod tests {
             .collect()
     }
 
+    fn greedy_baseline(be: &NativeBackend) -> Vec<(u64, Vec<u32>)> {
+        let mut base =
+            Engine::new(be, EngineConfig { max_active: 1, greedy_chunking: true });
+        for r in mixed_requests(be.cfg().vocab_size) {
+            base.submit(r);
+        }
+        base.run().unwrap();
+        let mut want: Vec<(u64, Vec<u32>)> =
+            base.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+        want.sort();
+        want
+    }
+
     #[test]
     fn snapshot_rollback_redecode_bit_identical() {
-        // satellite: snapshot -> decode n steps -> rollback -> re-decode
-        // must reproduce bit-identical states and logits
-        let Some(rt) = runtime() else { return };
-        let cfg = rt.weights_host.cfg.clone();
+        // snapshot -> decode n steps -> rollback -> re-decode must
+        // reproduce bit-identical states and logits (any backend; runs
+        // unconditionally on the native one)
+        let be = be();
+        let cfg = be.cfg().clone();
         let mut pool = StatePool::new(&cfg, 1);
         let slot = pool.alloc().unwrap();
         let tokens: Vec<i32> =
             (0..32).map(|i| (i * 11) % cfg.vocab_size as i32).collect();
-        let out = rt
+        let out = be
             .prefill("fp32", &tokens, &pool.get(slot).conv, &pool.get(slot).ssm)
             .unwrap();
         pool.get_mut(slot).conv = out.conv_state;
@@ -565,7 +576,7 @@ mod tests {
             let mut tok = tokens[31];
             for _ in 0..4 {
                 let st = pool.get(slot);
-                let o = rt.decode("fp32", 1, &st.conv, &st.ssm, &[tok]).unwrap();
+                let o = be.decode("fp32", 1, &st.conv, &st.ssm, &[tok]).unwrap();
                 pool.get_mut(slot).conv = o.conv_state;
                 pool.get_mut(slot).ssm = o.ssm_state;
                 tok = argmax(&o.logits[..cfg.vocab_size]) as i32;
@@ -583,34 +594,17 @@ mod tests {
 
     #[test]
     fn speculative_matches_plain_greedy_fp32() {
-        let Some(rt) = runtime() else { return };
-        let vocab = rt.weights_host.cfg.vocab_size;
+        // the PR-1 equivalence contract, now unconditional: the quantized
+        // drafter + fp32 verifier must reproduce plain greedy fp32 exactly
+        // at every draft length, shared-backend or split-backend
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let want = greedy_baseline(&be);
 
-        // baseline: plain greedy fp32 decode, one request at a time
-        let mut base = Engine::new(&rt, EngineConfig { max_active: 1, greedy_chunking: true });
-        for r in mixed_requests(vocab) {
-            base.submit(r);
-        }
-        base.run().unwrap();
-        let mut want: Vec<(u64, Vec<u32>)> =
-            base.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
-        want.sort();
-
-        let cases = [
-            (1usize, DrafterBackend::Native),
-            (2, DrafterBackend::Native),
-            (4, DrafterBackend::Native),
-            (4, DrafterBackend::Pjrt),
-        ];
-        for (k, backend) in cases {
+        for k in [1usize, 2, 4] {
             let mut spec = SpecEngine::new(
-                &rt,
-                SpecConfig {
-                    draft_k: k,
-                    max_active: 2,
-                    drafter_backend: backend,
-                    ..SpecConfig::default()
-                },
+                &be,
+                SpecConfig { draft_k: k, max_active: 2, ..SpecConfig::default() },
             );
             for r in mixed_requests(vocab) {
                 spec.submit(r);
@@ -621,7 +615,7 @@ mod tests {
             got.sort();
             assert_eq!(
                 want, got,
-                "k={k} {backend:?}: speculative output diverged from greedy fp32"
+                "k={k}: speculative output diverged from greedy fp32"
             );
             // accounting invariants
             assert_eq!(spec.metrics.requests_completed, want.len() as u64);
@@ -635,13 +629,92 @@ mod tests {
     }
 
     #[test]
+    fn split_drafter_backend_matches_greedy_fp32() {
+        // drafter on its own backend instance (the deployment shape where
+        // drafts run in-process next to a device verifier)
+        let verifier = be();
+        let drafter = be();
+        let vocab = verifier.cfg().vocab_size;
+        let want = greedy_baseline(&verifier);
+        let mut spec = SpecEngine::with_drafter(
+            &drafter,
+            &verifier,
+            SpecConfig { draft_k: 4, max_active: 2, ..SpecConfig::default() },
+        );
+        for r in mixed_requests(vocab) {
+            spec.submit(r);
+        }
+        spec.run().unwrap();
+        let mut got: Vec<(u64, Vec<u32>)> =
+            spec.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+        got.sort();
+        assert_eq!(want, got, "split drafter/verifier diverged from greedy fp32");
+    }
+
+    #[test]
+    #[should_panic(expected = "same model")]
+    fn mismatched_backends_rejected() {
+        // different weights are tolerated (only the verifier commits), but
+        // a different *architecture* breaks state seeding and must panic
+        let mut cfg = crate::config::ModelConfig::tiny();
+        cfg.n_layer = 2;
+        cfg.name = "mamba2-tiny-halved".into();
+        let small = NativeBackend::new(crate::model::ModelWeights::random(&cfg, 1));
+        let full = be();
+        let _ = SpecEngine::with_drafter(&small, &full, SpecConfig::default());
+    }
+
+    /// Gated end-to-end coverage on the AOT artifacts: a native drafter
+    /// paired with a PJRT verifier, and drafting on the PJRT backend
+    /// itself, both reproduce plain greedy fp32 on the compiled graphs.
+    #[cfg(feature = "pjrt")]
+    #[test]
+    fn speculative_on_pjrt_matches_plain_greedy_fp32() {
+        use crate::backend::PjrtBackend;
+        use crate::model::weights::artifacts_dir;
+        if !artifacts_dir().join("manifest.json").exists() {
+            return;
+        }
+        let pj = PjrtBackend::load_default().expect("pjrt load");
+        let vocab = pj.cfg().vocab_size;
+        let mut base =
+            Engine::new(&pj, EngineConfig { max_active: 1, greedy_chunking: true });
+        for r in mixed_requests(vocab) {
+            base.submit(r);
+        }
+        base.run().unwrap();
+        let mut want: Vec<(u64, Vec<u32>)> =
+            base.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+        want.sort();
+
+        let native_drafter = NativeBackend::load_default().expect("native load");
+        let drafters: [&dyn InferenceBackend; 2] = [&native_drafter, &pj];
+        for (di, drafter) in drafters.into_iter().enumerate() {
+            let mut spec = SpecEngine::with_drafter(
+                drafter,
+                &pj,
+                SpecConfig { draft_k: 4, max_active: 2, ..SpecConfig::default() },
+            );
+            for r in mixed_requests(vocab) {
+                spec.submit(r);
+            }
+            spec.run().unwrap();
+            let mut got: Vec<(u64, Vec<u32>)> =
+                spec.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+            got.sort();
+            assert_eq!(want, got, "drafter {di}: diverged from greedy fp32 on PJRT");
+        }
+    }
+
+    #[test]
     fn stop_token_halts_speculative_decode() {
-        let Some(rt) = runtime() else { return };
-        let vocab = rt.weights_host.cfg.vocab_size;
+        let be = be();
+        let vocab = be.cfg().vocab_size;
         let prompt: Vec<u32> = (0..33).map(|j| ((j * 13) % vocab) as u32).collect();
 
         // discover what greedy fp32 generates, then stop on its 3rd token
-        let mut probe = Engine::new(&rt, EngineConfig { max_active: 1, greedy_chunking: true });
+        let mut probe =
+            Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true });
         probe.submit(Request::new(0, prompt.clone(), 8, "fp32"));
         probe.run().unwrap();
         let gen = probe.finished[0].generated.clone();
@@ -650,7 +723,7 @@ mod tests {
             return; // degenerate trace; stop-token position ambiguous
         }
 
-        let mut spec = SpecEngine::new(&rt, SpecConfig::default());
+        let mut spec = SpecEngine::new(&be, SpecConfig::default());
         let mut req = Request::new(0, prompt, 8, "fp32");
         req.stop_token = Some(stop);
         spec.submit(req);

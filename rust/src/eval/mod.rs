@@ -9,12 +9,17 @@
 //! ordinal — NormalQ ≪ SmoothQ < FastMamba-LQ ≈ FP16, with full FastMamba
 //! within ~1% of LQ — and that ordering is produced by the quantizers, not
 //! the datasets.
+//!
+//! The harness is backend-generic: every metric runs through
+//! [`InferenceBackend::forward_logits`], which chains exact prefill buckets
+//! and decode steps, so the same sweep scores the native golden model or
+//! the PJRT executables (arbitrary context lengths included).
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::model::{Mamba2, Variant};
+use crate::backend::InferenceBackend;
 use crate::util::rng::Rng;
 
 /// The seven synthetic stand-ins for the paper's task list.
@@ -49,6 +54,43 @@ pub fn load_corpus(artifacts_dir: &Path) -> Result<Vec<u32>> {
         .collect())
 }
 
+/// Deterministic synthetic corpus for artifact-free hosts: an order-1
+/// drifting chain over the vocab (enough short-range structure that serve
+/// traces are not pure noise, no training required).
+pub fn synthetic_corpus(vocab: usize, len: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(len);
+    let mut cur = rng.below(vocab);
+    for _ in 0..len {
+        // mostly local moves, occasional jumps
+        cur = if rng.below(8) == 0 {
+            rng.below(vocab)
+        } else {
+            (cur + 1 + rng.below(7)) % vocab
+        };
+        out.push(cur as u32);
+    }
+    out
+}
+
+/// The corpus a backend's workload should draw from: the trained held-out
+/// corpus when the backend is serving the `artifacts/` checkpoint, a
+/// synthetic one otherwise.
+pub fn corpus_for(be: &dyn InferenceBackend) -> Vec<u32> {
+    if let Some(dir) = be.artifacts_dir() {
+        match load_corpus(dir) {
+            Ok(c) => return c,
+            // backend serves the trained checkpoint but its corpus is
+            // missing/corrupt: don't silently score it on synthetic data
+            Err(e) => eprintln!(
+                "warning: held-out corpus unavailable ({e:#}); \
+                 falling back to a synthetic corpus"
+            ),
+        }
+    }
+    synthetic_corpus(be.cfg().vocab_size, 20_000, 17)
+}
+
 fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
     let m = logits.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b));
     let lse: f64 = logits.iter().map(|v| ((v - m) as f64).exp()).sum::<f64>().ln()
@@ -56,49 +98,53 @@ fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
     logits[idx] as f64 - lse
 }
 
+fn to_i32(tokens: &[u32]) -> Vec<i32> {
+    tokens.iter().map(|t| *t as i32).collect()
+}
+
 /// Perplexity over sliding windows of the corpus.
 pub fn perplexity(
-    model: &Mamba2,
-    variant: Variant,
+    be: &dyn InferenceBackend,
+    variant: &str,
     corpus: &[u32],
     window: usize,
     n_windows: usize,
-) -> f64 {
-    let vocab = model.w.cfg.vocab_size;
+) -> Result<f64> {
+    let vocab = be.cfg().vocab_size;
     let stride = (corpus.len() - window - 1) / n_windows.max(1);
     let mut nll = 0.0f64;
     let mut count = 0usize;
     for wi in 0..n_windows {
         let start = wi * stride;
         let toks = &corpus[start..start + window + 1];
-        let (logits, _) = model.prefill(&toks[..window], variant);
+        let logits = be.forward_logits(variant, &to_i32(&toks[..window]))?;
         for t in 0..window {
             let target = toks[t + 1] as usize;
             nll -= log_softmax_at(&logits[t * vocab..(t + 1) * vocab], target);
             count += 1;
         }
     }
-    (nll / count as f64).exp()
+    Ok((nll / count as f64).exp())
 }
 
 /// One synthetic cloze task: contexts drawn from the corpus, the true next
 /// token must outscore 3 random distractors.
 pub fn cloze_accuracy(
-    model: &Mamba2,
-    variant: Variant,
+    be: &dyn InferenceBackend,
+    variant: &str,
     corpus: &[u32],
     context_len: usize,
     n_items: usize,
     seed: u64,
-) -> f64 {
-    let vocab = model.w.cfg.vocab_size as u32;
+) -> Result<f64> {
+    let vocab = be.cfg().vocab_size as u32;
     let mut rng = Rng::new(seed);
     let mut correct = 0usize;
     for _ in 0..n_items {
         let start = rng.below(corpus.len() - context_len - 1);
         let ctx = &corpus[start..start + context_len];
         let answer = corpus[start + context_len];
-        let (logits, _) = model.prefill(ctx, variant);
+        let logits = be.forward_logits(variant, &to_i32(ctx))?;
         let last = &logits[(context_len - 1) * vocab as usize..];
         let mut best_is_answer = true;
         let answer_score = last[answer as usize];
@@ -122,80 +168,94 @@ pub fn cloze_accuracy(
             correct += 1;
         }
     }
-    correct as f64 / n_items as f64
+    Ok(correct as f64 / n_items as f64)
 }
 
 /// RMS logit disagreement with FP32 on a probe window.
-pub fn logit_rmse(model: &Mamba2, variant: Variant, corpus: &[u32], window: usize) -> f64 {
-    let toks = &corpus[..window];
-    let (fp, _) = model.prefill(toks, Variant::Fp32);
-    let (qt, _) = model.prefill(toks, variant);
+pub fn logit_rmse(
+    be: &dyn InferenceBackend,
+    variant: &str,
+    corpus: &[u32],
+    window: usize,
+) -> Result<f64> {
+    let toks = to_i32(&corpus[..window]);
+    let fp = be.forward_logits("fp32", &toks)?;
+    let qt = be.forward_logits(variant, &toks)?;
     let mse: f64 = fp
         .iter()
         .zip(&qt)
         .map(|(a, b)| ((a - b) as f64).powi(2))
         .sum::<f64>()
         / fp.len() as f64;
-    mse.sqrt()
+    Ok(mse.sqrt())
 }
 
-/// Full Table II sweep.
+/// Full Table II sweep over every variant the backend executes.
 pub fn table2(
-    model: &Mamba2,
+    be: &dyn InferenceBackend,
     corpus: &[u32],
     ppl_windows: usize,
     cloze_items: usize,
-) -> Vec<EvalRow> {
+) -> Result<Vec<EvalRow>> {
     let mut rows = Vec::new();
-    for variant in Variant::ALL {
-        let ppl = perplexity(model, variant, corpus, 64, ppl_windows);
+    for variant in be.variants() {
+        let ppl = perplexity(be, &variant, corpus, 64, ppl_windows)?;
         let mut task_acc = Vec::new();
         let mut sum = 0.0;
         for (name, ctx_len, seed) in TASKS {
-            let acc = cloze_accuracy(model, variant, corpus, ctx_len, cloze_items, seed);
+            let acc = cloze_accuracy(be, &variant, corpus, ctx_len, cloze_items, seed)?;
             sum += acc;
             task_acc.push((name.to_string(), acc));
         }
         rows.push(EvalRow {
-            method: variant.name().to_string(),
-            ppl,
+            logit_rmse: logit_rmse(be, &variant, corpus, 48)?,
+            method: variant,
             avg_acc: sum / TASKS.len() as f64,
             task_acc,
-            logit_rmse: logit_rmse(model, variant, corpus, 48),
+            ppl,
         });
     }
-    rows
+    Ok(rows)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::NativeBackend;
     use crate::config::ModelConfig;
     use crate::model::weights::{artifacts_dir, ModelWeights};
 
-    fn trained_model() -> Option<(Mamba2, Vec<u32>)> {
+    fn trained_backend() -> Option<(NativeBackend, Vec<u32>)> {
         let dir = artifacts_dir();
         if !dir.join("manifest.json").exists() {
             return None;
         }
-        let w = ModelWeights::load(&dir).ok()?;
+        let be = NativeBackend::load_default().ok()?;
         let corpus = load_corpus(&dir).ok()?;
-        let mut m = Mamba2::new(w);
-        m.prepare();
-        Some((m, corpus))
+        Some((be, corpus))
     }
 
     #[test]
     fn corpus_tokens_in_vocab() {
-        let Some((m, corpus)) = trained_model() else { return };
+        let Some((be, corpus)) = trained_backend() else { return };
         assert!(corpus.len() > 10_000);
-        assert!(corpus.iter().all(|t| (*t as usize) < m.w.cfg.vocab_size));
+        assert!(corpus.iter().all(|t| (*t as usize) < be.cfg().vocab_size));
+    }
+
+    #[test]
+    fn synthetic_corpus_always_available() {
+        let be = NativeBackend::synthetic(3);
+        let c = corpus_for(&be);
+        assert!(c.len() >= 10_000);
+        assert!(c.iter().all(|t| (*t as usize) < be.cfg().vocab_size));
+        // deterministic
+        assert_eq!(synthetic_corpus(512, 100, 17), synthetic_corpus(512, 100, 17));
     }
 
     #[test]
     fn trained_ppl_beats_uniform() {
-        let Some((m, corpus)) = trained_model() else { return };
-        let ppl = perplexity(&m, Variant::Fp32, &corpus, 64, 4);
+        let Some((be, corpus)) = trained_backend() else { return };
+        let ppl = perplexity(&be, "fp32", &corpus, 64, 4).unwrap();
         // uniform over 512 tokens would be 512; the Markov floor is ~6.4
         assert!(ppl < 80.0, "trained fp32 ppl {ppl}");
         assert!(ppl > 3.0);
@@ -203,16 +263,16 @@ mod tests {
 
     #[test]
     fn cloze_beats_chance() {
-        let Some((m, corpus)) = trained_model() else { return };
-        let acc = cloze_accuracy(&m, Variant::Fp32, &corpus, 16, 24, 1);
+        let Some((be, corpus)) = trained_backend() else { return };
+        let acc = cloze_accuracy(&be, "fp32", &corpus, 16, 24, 1).unwrap();
         assert!(acc > 0.4, "acc {acc} vs 0.25 chance"); // chance = 0.25
     }
 
     #[test]
     fn table2_ordering_holds() {
         // The paper's ordinal result on the trained, outlier-bearing model.
-        let Some((m, corpus)) = trained_model() else { return };
-        let rows = table2(&m, &corpus, 3, 10);
+        let Some((be, corpus)) = trained_backend() else { return };
+        let rows = table2(&be, &corpus, 3, 10).unwrap();
         let get = |name: &str| rows.iter().find(|r| r.method == name).unwrap();
         let fp = get("fp32");
         let normal = get("normalq");
@@ -229,13 +289,30 @@ mod tests {
     }
 
     #[test]
+    fn eval_runs_on_artifact_free_backend() {
+        // the whole harness must execute end-to-end with no artifacts:
+        // synthetic weights, synthetic corpus, every variant
+        let be = NativeBackend::synthetic(3);
+        let corpus = synthetic_corpus(be.cfg().vocab_size, 4000, 5);
+        let rows = table2(&be, &corpus, 1, 3).unwrap();
+        assert_eq!(rows.len(), be.variants().len());
+        for r in &rows {
+            assert!(r.ppl.is_finite() && r.ppl > 1.0, "{}: ppl {}", r.method, r.ppl);
+            assert!((0.0..=1.0).contains(&r.avg_acc), "{}", r.method);
+            assert!(r.logit_rmse.is_finite());
+        }
+        let fp = rows.iter().find(|r| r.method == "fp32").unwrap();
+        assert_eq!(fp.logit_rmse, 0.0, "fp32 rmse vs itself");
+    }
+
+    #[test]
     fn uniform_random_model_near_chance() {
         // sanity: an untrained model scores ~chance on cloze
         let cfg = ModelConfig::tiny();
-        let m = Mamba2::new(ModelWeights::random(&cfg, 9));
+        let be = NativeBackend::new(ModelWeights::random(&cfg, 9));
         let mut rng = Rng::new(3);
         let corpus: Vec<u32> = (0..4000).map(|_| rng.below(512) as u32).collect();
-        let acc = cloze_accuracy(&m, Variant::Fp32, &corpus, 8, 30, 2);
+        let acc = cloze_accuracy(&be, "fp32", &corpus, 8, 30, 2).unwrap();
         assert!(acc < 0.6);
     }
 }

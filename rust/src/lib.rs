@@ -8,8 +8,12 @@
 //! * **Layer 2** (build time): the JAX Mamba2 model in five quantization
 //!   variants, AOT-lowered to HLO text artifacts (`python/compile/`).
 //! * **Layer 3** (this crate, serve time): a serving coordinator
-//!   ([`coordinator`]) that executes the artifacts through PJRT
-//!   ([`runtime`]), plus the substrates the paper's evaluation needs —
+//!   ([`coordinator`]) that executes the model through a single execution
+//!   contract ([`backend::InferenceBackend`]) with two first-class
+//!   implementations — the AOT artifacts through PJRT
+//!   (`backend::PjrtBackend`, `pjrt` cargo feature) and the artifact-free
+//!   in-process model ([`backend::NativeBackend`]) — plus the substrates
+//!   the paper's evaluation needs —
 //!   quantization ([`quant`]), the NAU nonlinear approximations
 //!   ([`nonlinear`]), a native Mamba2 golden model / CPU baseline
 //!   ([`model`]), a cycle-level simulator of the FastMamba FPGA
@@ -28,8 +32,11 @@
 //! decoding, and modeled on the accelerator by [`sim::speculative`].
 //!
 //! Python never runs on the request path: `make artifacts` lowers
-//! everything once, and the `fastmamba` binary is self-contained.
+//! everything once, and the `fastmamba` binary is self-contained.  Build
+//! with `--no-default-features` on hosts without `xla_extension`: every
+//! serving path then runs on [`backend::NativeBackend`].
 
+pub mod backend;
 pub mod baseline;
 pub mod config;
 pub mod coordinator;
@@ -38,6 +45,7 @@ pub mod model;
 pub mod nonlinear;
 pub mod quant;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod util;

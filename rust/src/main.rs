@@ -2,18 +2,22 @@
 //!
 //! Subcommands:
 //!   serve    — run the serving engine on a synthetic request trace
-//!              (--speculate K switches to the draft/verify speculative mode)
+//!              (--backend pjrt|native|auto picks the execution backend;
+//!              --speculate K switches to the draft/verify speculative mode)
 //!   report   — regenerate any paper table/figure (--id table2|fig9|...|all)
 //!   simulate — accelerator performance model (prefill/decode sweeps)
-//!   info     — artifacts + model + accelerator summary
+//!   info     — backend + artifacts + model + accelerator summary
+//!
+//! Every subcommand works with no `artifacts/manifest.json` and no
+//! xla_extension: `--backend auto` (the default) falls back to the
+//! artifact-free native backend.
 
 use anyhow::{bail, Result};
 
+use fastmamba::backend::{self, BackendKind, InferenceBackend, NativeBackend};
 use fastmamba::config::{AcceleratorConfig, ModelConfig};
-use fastmamba::coordinator::{
-    DrafterBackend, Engine, EngineConfig, Request, SpecConfig, SpecEngine,
-};
-use fastmamba::runtime::Runtime;
+use fastmamba::coordinator::{Engine, EngineConfig, Request, SpecConfig, SpecEngine};
+use fastmamba::model::weights::{artifacts_dir, Manifest};
 use fastmamba::sim::PerfModel;
 use fastmamba::util::cli::Args;
 use fastmamba::util::rng::Rng;
@@ -33,6 +37,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: fastmamba <serve|report|simulate|info> [--flags]\n\
                  \n  serve    --requests N --max-new N --variant fp32|fastmamba --prompt-len N\
+                 \n           --backend auto|pjrt|native --max-active N\
                  \n           --speculate K [--draft-backend native|pjrt]\
                  \n  report   --id all|table1|table2|table3|table4|table_spec|fig1|fig3|fig9|fig10\
                  \n  simulate --model mamba2-130m|mamba2-2.7b --seq-len N --batch N\
@@ -43,17 +48,28 @@ fn main() -> Result<()> {
     }
 }
 
+fn load_backend(args: &Args) -> Result<Box<dyn InferenceBackend>> {
+    let name = args.get_or("backend", "auto");
+    let Some(kind) = BackendKind::from_name(&name) else {
+        bail!("unknown backend {name} (expected auto|pjrt|native)");
+    };
+    backend::load(kind)
+}
+
 fn serve(args: &Args) -> Result<()> {
-    let rt = Runtime::load_default()?;
+    let be = load_backend(args)?;
     let n_requests = args.usize_or("requests", 8);
     let max_new = args.usize_or("max-new", 16);
     let prompt_len = args.usize_or("prompt-len", 48);
     let variant = args.get_or("variant", "fp32");
     let speculate = args.usize_or("speculate", 0);
-    let vocab = rt.weights_host.cfg.vocab_size;
+    // both engine paths honor --max-active (speculative requests hold two
+    // state slots each, hence the lower default)
+    let max_active = args.usize_or("max-active", if speculate > 0 { 8 } else { 64 });
+    let vocab = be.cfg().vocab_size;
 
     let mut rng = Rng::new(args.usize_or("seed", 7) as u64);
-    let corpus = eval::load_corpus(&rt.dir)?;
+    let corpus = eval::corpus_for(be.as_ref());
     let requests: Vec<Request> = (0..n_requests)
         .map(|id| {
             let start = rng.below(corpus.len() - prompt_len - 1);
@@ -65,20 +81,36 @@ fn serve(args: &Args) -> Result<()> {
         })
         .collect();
 
+    println!(
+        "backend: {} ({}; prefill buckets {:?}, decode batches {:?})",
+        be.name(),
+        be.cfg().name,
+        be.prefill_buckets(),
+        be.decode_batches()
+    );
     let finished = if speculate > 0 {
-        // speculative mode: quantized drafter, `--variant` as the verifier
-        let backend = match args.get_or("draft-backend", "native").as_str() {
-            "pjrt" => DrafterBackend::Pjrt,
-            _ => DrafterBackend::Native,
-        };
-        let mut engine = SpecEngine::new(
-            &rt,
+        // speculative mode: quantized drafter, `--variant` as the verifier.
+        // The drafter is its own backend ("native": in-process golden
+        // model; "pjrt": the AOT decode executable — shared with the
+        // serving backend when that already is PJRT).
+        let drafter_box: Option<Box<dyn InferenceBackend>> =
+            match args.get_or("draft-backend", "native").as_str() {
+                "pjrt" if be.name() == "pjrt" => None, // share the device
+                "pjrt" => Some(backend::load(BackendKind::Pjrt)?),
+                "native" if be.name() == "native" => None, // already in-process
+                "native" => Some(Box::new(NativeBackend::load_default()?)),
+                other => bail!("unknown draft backend {other} (expected native|pjrt)"),
+            };
+        let drafter: &dyn InferenceBackend =
+            drafter_box.as_deref().unwrap_or(be.as_ref());
+        let mut engine = SpecEngine::with_drafter(
+            drafter,
+            be.as_ref(),
             SpecConfig {
                 draft_k: speculate,
                 draft_variant: args.get_or("draft-variant", "fastmamba"),
                 verify_variant: variant.clone(),
-                drafter_backend: backend,
-                max_active: 8,
+                max_active,
             },
         );
         for r in requests {
@@ -87,9 +119,10 @@ fn serve(args: &Args) -> Result<()> {
         engine.run()?;
         println!("{}", engine.metrics.summary());
         println!(
-            "speculative: k={} rounds={} verify_calls={} rollbacks={} \
+            "speculative: k={} drafter={} rounds={} verify_calls={} rollbacks={} \
              accept_p50={:.1}%",
             speculate,
+            drafter.name(),
             engine.metrics.spec_rounds,
             engine.metrics.verify_calls,
             engine.metrics.rollbacks,
@@ -97,7 +130,8 @@ fn serve(args: &Args) -> Result<()> {
         );
         engine.finished
     } else {
-        let mut engine = Engine::new(&rt, EngineConfig::default());
+        let mut engine =
+            Engine::new(be.as_ref(), EngineConfig { max_active, greedy_chunking: true });
         for r in requests {
             engine.submit(r);
         }
@@ -166,20 +200,30 @@ fn simulate(args: &Args) -> Result<()> {
 }
 
 fn info() -> Result<()> {
-    let dir = fastmamba::model::weights::artifacts_dir();
-    println!("artifacts dir: {}", dir.display());
-    let rt = Runtime::load_default()?;
-    let cfg = &rt.weights_host.cfg;
+    let dir = artifacts_dir();
+    let have_artifacts = dir.join("manifest.json").exists();
     println!(
-        "serve model: {} (d_model={} layers={} heads={} vocab={})",
+        "artifacts dir: {} ({})",
+        dir.display(),
+        if have_artifacts { "present" } else { "absent — native fallback" }
+    );
+    let be = backend::load(BackendKind::Auto)?;
+    let cfg = be.cfg();
+    println!(
+        "backend: {} | model: {} (d_model={} layers={} heads={} vocab={})",
+        be.name(),
         cfg.name, cfg.d_model, cfg.n_layer, cfg.nheads(), cfg.vocab_size
     );
     println!(
-        "artifacts: {} graphs; prefill buckets {:?}; decode batches {:?}",
-        rt.manifest.artifacts.len(),
-        rt.prefill_buckets(),
-        rt.decode_batches()
+        "prefill buckets {:?}; decode batches {:?}; variants {:?}",
+        be.prefill_buckets(),
+        be.decode_batches(),
+        be.variants()
     );
+    if have_artifacts {
+        let m = Manifest::load(&dir)?;
+        println!("artifacts: {} lowered graphs", m.artifacts.len());
+    }
     let acc = AcceleratorConfig::default();
     println!(
         "accelerator: {} MHz, {} linear MAC/cyc, {} conv MAC/cyc, {} ssm ops/cyc",

@@ -195,9 +195,28 @@ impl Mamba2 {
 
     // -- prefill -------------------------------------------------------------
 
-    /// Full-sequence forward.  Returns logits `(L, vocab)` and the decode
-    /// state seeded for continuation.
+    /// Full-sequence forward from a fresh (zero) state.  Returns logits
+    /// `(L, vocab)` and the decode state seeded for continuation.
     pub fn prefill(&self, tokens: &[u32], variant: Variant) -> (Vec<f32>, DecodeState) {
+        let mut state = DecodeState::zeros(self.cfg());
+        let logits = self.prefill_chunk(tokens, variant, &mut state);
+        (logits, state)
+    }
+
+    /// Chunked prefill: forward one chunk *continuing* from `state` (the
+    /// recurrent state left by earlier chunks or decode steps), updating it
+    /// in place.  Mirrors the Python `block_prefill(conv_state0, ssm_state0)`
+    /// contract the AOT prefill artifacts lower: the carried conv window
+    /// supplies the receptive-field history of the first `d_conv - 1`
+    /// positions, so chaining chunks is exact (bit-identical to one full
+    /// prefill under fp32, where no cross-chunk quantization statistics
+    /// exist).
+    pub fn prefill_chunk(
+        &self,
+        tokens: &[u32],
+        variant: Variant,
+        state: &mut DecodeState,
+    ) -> Vec<f32> {
         let cfg = self.cfg().clone();
         let l = tokens.len();
         let d = cfg.d_model;
@@ -206,9 +225,8 @@ impl Mamba2 {
             x[t * d..(t + 1) * d]
                 .copy_from_slice(&self.w.embed[*tok as usize * d..(*tok as usize + 1) * d]);
         }
-        let mut state = DecodeState::zeros(&cfg);
         for (li, lw) in self.w.layers.iter().enumerate() {
-            self.block_prefill(li, lw, &mut x, l, variant, &mut state);
+            self.block_prefill(li, lw, &mut x, l, variant, state);
         }
         // final norm + tied lm head
         for t in 0..l {
@@ -216,10 +234,9 @@ impl Mamba2 {
         }
         let mut logits = vec![0.0f32; l * cfg.vocab_size];
         let pw = self.prepared.as_ref().map(|p| &p.lm_head);
-        self.linear(&x, l, &self.w.embed, cfg.vocab_size, d,
-                    if variant.hadamard() { variant } else { variant },
+        self.linear(&x, l, &self.w.embed, cfg.vocab_size, d, variant,
                     if variant.hadamard() { pw } else { None }, &mut logits);
-        (logits, state)
+        logits
     }
 
     fn block_prefill(
@@ -266,38 +283,35 @@ impl Mamba2 {
                 .copy_from_slice(&row[d_inner + conv_dim..]);
         }
 
-        // conv state tail = last K-1 pre-conv rows (zero-padded)
-        {
-            let cs = &mut state.conv
-                [li * (k - 1) * conv_dim..(li + 1) * (k - 1) * conv_dim];
-            for i in 0..k - 1 {
-                let t = l as i64 - (k - 1 - i) as i64;
-                let dst = &mut cs[i * conv_dim..(i + 1) * conv_dim];
-                if t >= 0 {
-                    dst.copy_from_slice(
-                        &xbc_pre[t as usize * conv_dim..(t as usize + 1) * conv_dim]);
-                } else {
-                    dst.fill(0.0);
-                }
-            }
-        }
+        // extended pre-conv rows: carried history (K-1 rows from `state`,
+        // zeros on a fresh sequence) ++ this chunk — the Python side's
+        // `xbc_ext = concat([conv_state0, xbc_pre])`
+        let ext = (k - 1) + l;
+        let mut xbc_ext = vec![0.0f32; ext * conv_dim];
+        xbc_ext[..(k - 1) * conv_dim].copy_from_slice(
+            &state.conv[li * (k - 1) * conv_dim..(li + 1) * (k - 1) * conv_dim]);
+        xbc_ext[(k - 1) * conv_dim..].copy_from_slice(&xbc_pre);
+
+        // new carried history = last K-1 *unquantized* extended rows
+        // (handles l < K-1: old rows roll forward)
+        state.conv[li * (k - 1) * conv_dim..(li + 1) * (k - 1) * conv_dim]
+            .copy_from_slice(&xbc_ext[l * conv_dim..]);
 
         // depthwise causal conv (+PoT for FastMamba) then SiLU
         let mut conv_w = lw.conv_w.clone();
-        let mut xbc_in = xbc_pre.clone();
+        let mut xbc_in = xbc_ext;
         if variant == Variant::FastMamba {
             pot::pot_fake_quant_grouped(&mut conv_w, k, 16); // per-channel taps
-            pot::pot_fake_quant_per_col(&mut xbc_in, l, conv_dim, 16);
+            pot::pot_fake_quant_per_col(&mut xbc_in, ext, conv_dim, 16);
         }
+        // output position t sees extended rows t..t+K-1 (exactly the carried
+        // history for the first K-1 positions of the chunk)
         let mut xbc = vec![0.0f32; l * conv_dim];
         for t in 0..l {
             for c in 0..conv_dim {
                 let mut acc = lw.conv_b[c];
                 for tap in 0..k {
-                    let ti = t as i64 - (k - 1 - tap) as i64;
-                    if ti >= 0 {
-                        acc += conv_w[c * k + tap] * xbc_in[ti as usize * conv_dim + c];
-                    }
+                    acc += conv_w[c * k + tap] * xbc_in[(t + tap) * conv_dim + c];
                 }
                 xbc[t * conv_dim + c] = nonlinear::silu(acc);
             }
@@ -577,6 +591,50 @@ mod tests {
         for (i, tok) in t.iter().enumerate() {
             let lg = m.decode_step(*tok, &mut state, Variant::Fp32);
             let want = &logits_full[i * 512..(i + 1) * 512];
+            for (a, b) in lg.iter().zip(want) {
+                assert!((a - b).abs() < 1e-3, "t={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_chains_exactly() {
+        // chained chunks (incl. one shorter than the conv window) must
+        // reproduce the one-shot prefill — the contract the Engine's
+        // chunked admission and the NativeBackend rely on
+        let m = tiny_model();
+        let t = toks(23, 5);
+        let (full, full_state) = m.prefill(&t, Variant::Fp32);
+        let mut state = DecodeState::zeros(&m.w.cfg);
+        let mut got = Vec::new();
+        for chunk in [&t[..9], &t[9..11], &t[11..]] {
+            got.extend(m.prefill_chunk(chunk, Variant::Fp32, &mut state));
+        }
+        assert_eq!(got.len(), full.len());
+        let mut max_err = 0.0f32;
+        for (a, b) in got.iter().zip(&full) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 1e-5, "chunked logits err {max_err}");
+        let mut s_err = 0.0f32;
+        for (a, b) in state.ssm.iter().zip(&full_state.ssm) {
+            s_err = s_err.max((a - b).abs());
+        }
+        assert!(s_err < 1e-5, "chunked ssm state err {s_err}");
+        // the conv window carries unquantized pre-conv rows — bit-exact
+        assert_eq!(state.conv, full_state.conv);
+    }
+
+    #[test]
+    fn chunked_prefill_then_decode_matches_full() {
+        let m = tiny_model();
+        let t = toks(14, 6);
+        let (full, _) = m.prefill(&t, Variant::Fp32);
+        let mut state = DecodeState::zeros(&m.w.cfg);
+        let _ = m.prefill_chunk(&t[..10], Variant::Fp32, &mut state);
+        for i in 10..14 {
+            let lg = m.decode_step(t[i], &mut state, Variant::Fp32);
+            let want = &full[i * 512..(i + 1) * 512];
             for (a, b) in lg.iter().zip(want) {
                 assert!((a - b).abs() < 1e-3, "t={i}");
             }

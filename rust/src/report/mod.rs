@@ -4,7 +4,6 @@
 
 use crate::baseline::{CpuBaseline, GpuModel};
 use crate::config::{AcceleratorConfig, ModelConfig};
-use crate::model::{Mamba2, ModelWeights};
 use crate::quant::hadamard::hadamard_transform;
 use crate::sim::power::{accelerator_power_w, tokens_per_s_per_w};
 use crate::sim::resources::{half_float_nonlinear_unit, nau_unit, utilization};
@@ -187,14 +186,18 @@ pub fn fig10() {
     println!("(paper: 56% DSP / 49% FF saved)");
 }
 
-/// Table II — quantization accuracy (delegates to the eval harness).
+/// Table II — quantization accuracy (delegates to the eval harness on the
+/// native backend: trained checkpoint + held-out corpus when `artifacts/`
+/// is present, deterministic synthetic stand-ins otherwise).
 pub fn table2(ppl_windows: usize, cloze_items: usize) -> anyhow::Result<()> {
-    println!("\n== Table II: W8A8 quantization accuracy (trained tiny Mamba2) ==");
-    let dir = crate::model::weights::artifacts_dir();
-    let mut m = Mamba2::new(ModelWeights::load(&dir)?);
-    m.prepare();
-    let corpus = crate::eval::load_corpus(&dir)?;
-    let rows = crate::eval::table2(&m, &corpus, ppl_windows, cloze_items);
+    use crate::backend::{InferenceBackend, NativeBackend};
+    println!("\n== Table II: W8A8 quantization accuracy (tiny Mamba2) ==");
+    let be = NativeBackend::load_default()?;
+    if be.artifacts_dir().is_none() {
+        println!("(no artifacts: synthetic weights + corpus — ordering only)");
+    }
+    let corpus = crate::eval::corpus_for(&be);
+    let rows = crate::eval::table2(&be, &corpus, ppl_windows, cloze_items)?;
     let mut headers: Vec<&str> = vec!["Method", "PPL", "logit RMSE"];
     let names: Vec<String> = crate::eval::TASKS.iter().map(|t| t.0.to_string()).collect();
     for n in &names {

@@ -14,6 +14,10 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::model::weights::{artifacts_dir, Manifest, ModelWeights};
 
+// Interchange types live with the execution trait now; re-exported here so
+// `crate::runtime::{PrefillOut, DecodeOut}` paths keep working.
+pub use crate::backend::{DecodeOut, PrefillOut};
+
 /// A compiled executable cache keyed by artifact name, plus the weight
 /// literals shared by every model executable.
 pub struct Runtime {
@@ -28,28 +32,6 @@ pub struct Runtime {
     /// per-call weight transform (§Perf L2)
     prepared: Vec<xla::Literal>,
     pub weights_host: ModelWeights,
-}
-
-/// Output of a prefill executable.
-#[derive(Debug, Clone)]
-pub struct PrefillOut {
-    /// (L, vocab) row-major
-    pub logits: Vec<f32>,
-    /// (n_layer, d_conv-1, conv_dim)
-    pub conv_state: Vec<f32>,
-    /// (n_layer, nheads, headdim, d_state)
-    pub ssm_state: Vec<f32>,
-}
-
-/// Output of a batched decode executable.
-#[derive(Debug, Clone)]
-pub struct DecodeOut {
-    /// (B, vocab)
-    pub logits: Vec<f32>,
-    /// (B, n_layer, d_conv-1, conv_dim)
-    pub conv_state: Vec<f32>,
-    /// (B, n_layer, nheads, headdim, d_state)
-    pub ssm_state: Vec<f32>,
 }
 
 fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
