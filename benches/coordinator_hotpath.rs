@@ -15,16 +15,39 @@ fn main() -> anyhow::Result<()> {
     let cfg = be.cfg().clone();
     println!("backend: {}", be.name());
 
-    // raw backend decode at B=8
+    // raw backend decode at B=8 (batch-major: one pass over the batch)
     let b = 8usize;
-    let conv = vec![0.0f32; b * cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()];
-    let ssm = vec![0.0f32; b * cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state];
+    let cl = cfg.conv_state_len();
+    let sl = cfg.ssm_state_len();
+    let conv = vec![0.0f32; b * cl];
+    let ssm = vec![0.0f32; b * sl];
     let toks: Vec<i32> = (0..b as i32).collect();
     be.decode("fp32", b, &conv, &ssm, &toks)?; // warm
-    let raw = bench_quick("raw backend decode B8", || {
+    let raw = bench_quick("raw backend decode B8 (batch-major)", || {
         let _ = be.decode("fp32", b, &conv, &ssm, &toks).unwrap();
     });
     println!("{raw}");
+
+    // the retired shape: the same 8 sequences stepped one at a time —
+    // what NativeBackend::decode used to do internally per DecodeState copy
+    let per_seq = bench_quick("raw backend decode 8 x B1 (per-sequence)", || {
+        for s in 0..b {
+            let _ = be
+                .decode(
+                    "fp32",
+                    1,
+                    &conv[s * cl..(s + 1) * cl],
+                    &ssm[s * sl..(s + 1) * sl],
+                    &toks[s..s + 1],
+                )
+                .unwrap();
+        }
+    });
+    println!("{per_seq}");
+    println!(
+        "batch-major speedup over per-sequence stepping: {:.2}x",
+        per_seq.median_s / raw.median_s
+    );
 
     // engine-driven decode at 8 active requests (same executable)
     let corpus = corpus_for(be.as_ref());

@@ -1,0 +1,120 @@
+//! Bench: multi-worker serving throughput scaling.
+//!
+//! Drives one fixed-seed mixed-length request trace through `serve_pool`
+//! at N ∈ {1, 2, 4} workers (each worker owns its own backend instance)
+//! and reports aggregate generated-token throughput per worker count —
+//! the serving analogue of the paper's keep-every-unit-busy scaling
+//! argument.  Outputs are token-identical across worker counts (asserted),
+//! so the only thing that changes is wall clock.
+//!
+//! `--json PATH` additionally writes a machine-readable record (uploaded
+//! as a CI artifact to track the scaling trajectory over time).
+//!
+//! Run: cargo bench --bench multi_worker_throughput [-- --requests 48 --json out.json]
+
+use std::time::Instant;
+
+use fastmamba::backend::{self, BackendKind};
+use fastmamba::coordinator::{serve_pool, EngineConfig, PoolConfig, Request};
+use fastmamba::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_requests = args.usize_or("requests", 48);
+    let max_new = args.usize_or("max-new", 24);
+    let max_active = args.usize_or("max-active", 8);
+    let kind = BackendKind::from_name(&args.get_or("backend", "native"))
+        .expect("--backend auto|pjrt|native");
+
+    let probe = backend::load(kind)?;
+    let vocab = probe.cfg().vocab_size;
+    println!("backend: {} ({} requests, max_new {max_new})", probe.name(), n_requests);
+    drop(probe); // workers construct their own
+
+    let make_requests = || -> Vec<Request> {
+        (0..n_requests)
+            .map(|i| {
+                let plen = [9usize, 17, 33, 48][i % 4];
+                let prompt: Vec<u32> =
+                    (0..plen).map(|j| ((i * 131 + j * 17) % vocab) as u32).collect();
+                Request::new(i as u64, prompt, max_new, "fp32")
+            })
+            .collect()
+    };
+
+    let mut rows: Vec<(usize, u64, f64, f64)> = Vec::new();
+    let mut outputs: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
+    for n_workers in [1usize, 2, 4] {
+        let pool = serve_pool(
+            move || backend::load(kind),
+            PoolConfig {
+                engine: EngineConfig { max_active, greedy_chunking: true },
+                n_workers,
+                spec: None,
+            },
+        );
+        // warm up outside the timed window: one tiny request per worker
+        // forces every worker to finish backend construction (and any lazy
+        // compilation) before the clock starts
+        for w in 0..n_workers {
+            pool.submit(Request::new(1_000_000 + w as u64, vec![1, 2, 3], 2, "fp32"))?;
+        }
+        for _ in 0..n_workers {
+            pool.results.recv().expect("warmup result");
+        }
+
+        let t0 = Instant::now();
+        for r in make_requests() {
+            pool.submit(r)?;
+        }
+        let mut got: Vec<(u64, Vec<u32>)> = (0..n_requests)
+            .map(|_| {
+                let f = pool.results.recv().expect("pool result");
+                (f.id, f.generated)
+            })
+            .collect();
+        let wall = t0.elapsed().as_secs_f64();
+        let report = pool.finish()?;
+        assert!(report.errors.is_empty(), "worker errors: {:?}", report.errors);
+        got.sort();
+        // count only the measured trace (the merged metrics include warmup)
+        let toks: u64 = got.iter().map(|(_, g)| g.len() as u64).sum();
+        outputs.push(got);
+        let tok_s = toks as f64 / wall;
+        println!(
+            "workers={n_workers}: {toks} gen toks in {wall:.3}s -> {tok_s:.1} tok/s \
+             (assignments {:?}, load peaks {:?})",
+            report.assignments, report.load_peak
+        );
+        println!("  merged: {}", report.merged.summary());
+        rows.push((n_workers, toks, wall, tok_s));
+    }
+
+    for w in outputs.windows(2) {
+        assert_eq!(w[0], w[1], "worker count changed generated tokens");
+    }
+    println!("outputs token-identical across worker counts: true");
+    let monotonic = rows.windows(2).all(|w| w[1].3 >= w[0].3);
+    println!("aggregate gen tok/s monotone non-decreasing 1 -> 4 workers: {monotonic}");
+
+    if let Some(path) = args.get("json") {
+        let entries: Vec<String> = rows
+            .iter()
+            .map(|(n, t, w, ts)| {
+                format!(
+                    "{{\"workers\":{n},\"gen_tokens\":{t},\"wall_s\":{w:.6},\
+                     \"tok_per_s\":{ts:.2}}}"
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\"bench\":\"multi_worker_throughput\",\"requests\":{n_requests},\
+             \"max_new\":{max_new},\"max_active\":{max_active},\
+             \"monotonic\":{monotonic},\"runs\":[{}]}}\n",
+            entries.join(",")
+        );
+        std::fs::write(path, json)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

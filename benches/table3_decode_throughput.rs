@@ -47,9 +47,8 @@ fn main() -> anyhow::Result<()> {
     let mut t3 = Table::new(&["variant", "batch", "ms/step", "tok/s"]);
     for variant in ["fp32", "fastmamba"] {
         for &b in &be.decode_batches() {
-            let conv = vec![0.0f32; b * cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()];
-            let ssm =
-                vec![0.0f32; b * cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state];
+            let conv = vec![0.0f32; b * cfg.conv_state_len()];
+            let ssm = vec![0.0f32; b * cfg.ssm_state_len()];
             let toks: Vec<i32> = (0..b as i32).collect();
             // warm the executable cache outside the timer
             be.decode(variant, b, &conv, &ssm, &toks)?;

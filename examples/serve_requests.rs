@@ -4,10 +4,15 @@
 //! driver proving all layers compose on a real workload, on whichever
 //! backend is available (PJRT artifacts or the artifact-free native model).
 //!
-//! Run: cargo run --release --example serve_requests [-- --requests 24 --backend native]
+//! With `--workers N` (N > 1) the same trace additionally runs through the
+//! multi-worker pool (`serve_pool`) and the outputs are asserted
+//! token-identical to the single-engine run — worker fan-out changes
+//! throughput, never tokens.
+//!
+//! Run: cargo run --release --example serve_requests [-- --requests 24 --backend native --workers 4]
 
 use fastmamba::backend::{self, BackendKind};
-use fastmamba::coordinator::{Engine, EngineConfig, Request};
+use fastmamba::coordinator::{serve_pool, Engine, EngineConfig, PoolConfig, Request};
 use fastmamba::eval::corpus_for;
 use fastmamba::util::cli::Args;
 use fastmamba::util::rng::Rng;
@@ -17,6 +22,7 @@ fn main() -> anyhow::Result<()> {
     let n_requests = args.usize_or("requests", 16);
     let max_new = args.usize_or("max-new", 12);
     let max_active = args.usize_or("max-active", 16);
+    let workers = args.usize_or("workers", 1);
 
     let kind = BackendKind::from_name(&args.get_or("backend", "auto"))
         .expect("--backend auto|pjrt|native");
@@ -26,18 +32,22 @@ fn main() -> anyhow::Result<()> {
     println!("backend: {}", be.name());
 
     for variant in ["fp32", "fastmamba"] {
+        let trace = |id: usize, rng: &mut Rng| -> Request {
+            // mixed prompt lengths exercise the chunk planner
+            let plen = [24usize, 40, 70, 100, 150][rng.below(5)];
+            let start = rng.below(corpus.len() - plen - 1);
+            let prompt: Vec<u32> =
+                corpus[start..start + plen].iter().map(|t| t % vocab).collect();
+            Request::new(id as u64, prompt, max_new, variant)
+        };
+
         let mut engine = Engine::new(
             be.as_ref(),
             EngineConfig { max_active, greedy_chunking: true },
         );
         let mut rng = Rng::new(11);
         for id in 0..n_requests {
-            // mixed prompt lengths exercise the chunk planner
-            let plen = [24usize, 40, 70, 100, 150][rng.below(5)];
-            let start = rng.below(corpus.len() - plen - 1);
-            let prompt: Vec<u32> =
-                corpus[start..start + plen].iter().map(|t| t % vocab).collect();
-            engine.submit(Request::new(id as u64, prompt, max_new, variant));
+            engine.submit(trace(id, &mut rng));
         }
         engine.run()?;
         println!("[{variant}] {}", engine.metrics.summary());
@@ -49,6 +59,44 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(engine.finished.len(), n_requests);
         for f in &engine.finished {
             assert_eq!(f.generated.len(), max_new);
+        }
+
+        if workers > 1 {
+            // the same trace through the worker pool: token-identical
+            let pool = serve_pool(
+                move || backend::load(kind),
+                PoolConfig {
+                    engine: EngineConfig { max_active, greedy_chunking: true },
+                    n_workers: workers,
+                    spec: None,
+                },
+            );
+            let mut rng = Rng::new(11);
+            for id in 0..n_requests {
+                pool.submit(trace(id, &mut rng))?;
+            }
+            let mut pooled: Vec<(u64, Vec<u32>)> = (0..n_requests)
+                .map(|_| {
+                    let f = pool.results.recv().expect("pool result");
+                    (f.id, f.generated)
+                })
+                .collect();
+            let report = pool.finish()?;
+            assert!(report.errors.is_empty(), "{:?}", report.errors);
+            pooled.sort();
+            let mut single: Vec<(u64, Vec<u32>)> = engine
+                .finished
+                .iter()
+                .map(|f| (f.id, f.generated.clone()))
+                .collect();
+            single.sort();
+            assert_eq!(single, pooled, "[{variant}] pool output diverged");
+            println!("[{variant}] pool ({workers} workers): {}", report.merged.summary());
+            println!(
+                "[{variant}] pool assignments {:?}, load peaks {:?} — token-exact \
+                 with the single engine",
+                report.assignments, report.load_peak
+            );
         }
     }
     println!("serve_requests OK");

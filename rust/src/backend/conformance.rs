@@ -1,0 +1,326 @@
+//! Backend conformance suite: the executable contract every
+//! [`InferenceBackend`] must satisfy, as a reusable assertion harness.
+//!
+//! The coordinator stack assumes more than the trait signatures say: the
+//! engine's chunked admission needs prefill state chaining to be exact,
+//! the decode batcher needs batching to never change a sequence's tokens
+//! (requests are packed and padded by load, so a batch-sensitive backend
+//! would make outputs depend on traffic), `forward_logits` must agree
+//! with prefill-then-decode chaining, the bucket lists must be sane (and
+//! include batch 1 — the admission path's remainder steps), and
+//! `zero_state` must match the model's state shapes.  Each `check_*`
+//! function asserts one of those properties against any backend;
+//! [`run_all`] runs the lot.
+//!
+//! Instantiations: [`NativeBackend`] unconditionally (every host), and
+//! [`PjrtBackend`] gated on compiled artifacts — a future backend gets
+//! the same coverage by adding one test that calls [`run_all`].
+//!
+//! [`NativeBackend`]: super::NativeBackend
+//! [`PjrtBackend`]: super::PjrtBackend
+
+use crate::coordinator::request::argmax;
+
+use super::bucket::full_bucket_plan;
+use super::InferenceBackend;
+
+/// Deterministic token sequence inside the backend's vocabulary.
+fn toks(n: usize, vocab: usize, seed: usize) -> Vec<i32> {
+    (0..n).map(|i| ((i * 17 + seed * 131 + 7) % vocab) as i32).collect()
+}
+
+/// Largest advertised decode batch no bigger than `cap` (falls back to the
+/// smallest bucket; the lists are never empty by `check_buckets`).
+fn batch_at_most(be: &dyn InferenceBackend, cap: usize) -> usize {
+    let batches = be.decode_batches();
+    batches
+        .iter()
+        .rev()
+        .find(|&&b| b <= cap)
+        .copied()
+        .unwrap_or(batches[0])
+}
+
+/// Bucket lists are non-empty, strictly ascending, and decode includes
+/// batch 1 (the engine's admission remainder and the speculative drafter
+/// both decode single sequences).
+pub fn check_buckets(be: &dyn InferenceBackend) {
+    let prefill = be.prefill_buckets();
+    let decode = be.decode_batches();
+    assert!(!prefill.is_empty(), "{}: no prefill buckets", be.name());
+    assert!(!decode.is_empty(), "{}: no decode batches", be.name());
+    for w in prefill.windows(2) {
+        assert!(w[0] < w[1], "{}: prefill buckets not ascending: {prefill:?}", be.name());
+    }
+    for w in decode.windows(2) {
+        assert!(w[0] < w[1], "{}: decode batches not ascending: {decode:?}", be.name());
+    }
+    assert!(prefill[0] >= 1, "{}: zero-length prefill bucket", be.name());
+    assert_eq!(decode[0], 1, "{}: decode batch list must include 1", be.name());
+}
+
+/// `zero_state` returns all-zero buffers of exactly the model's flat state
+/// shapes — the layout `StatePool` pools and `decode` consumes batch-major.
+pub fn check_zero_state_shape(be: &dyn InferenceBackend) {
+    let cfg = be.cfg();
+    let (conv, ssm) = be.zero_state();
+    assert_eq!(
+        conv.len(),
+        cfg.conv_state_len(),
+        "{}: conv state is not (n_layer, d_conv-1, conv_dim)",
+        be.name()
+    );
+    assert_eq!(
+        ssm.len(),
+        cfg.ssm_state_len(),
+        "{}: ssm state is not (n_layer, nheads, headdim, d_state)",
+        be.name()
+    );
+    assert!(conv.iter().all(|v| *v == 0.0), "{}: conv state not zeroed", be.name());
+    assert!(ssm.iter().all(|v| *v == 0.0), "{}: ssm state not zeroed", be.name());
+}
+
+/// Every advertised variant executes prefill (one bucket) and decode
+/// (batch 1) with finite, correctly-shaped outputs; an unknown variant
+/// name is an error, not a fallback.
+pub fn check_variant_coverage(be: &dyn InferenceBackend) {
+    let variants = be.variants();
+    assert!(!variants.is_empty(), "{}: no variants", be.name());
+    let vocab = be.cfg().vocab_size;
+    let l = be.prefill_buckets()[0];
+    let (cl, sl) = {
+        let (c, s) = be.zero_state();
+        (c.len(), s.len())
+    };
+    for v in &variants {
+        let t = toks(l, vocab, 1);
+        let out = be
+            .prefill_fresh(v, &t)
+            .unwrap_or_else(|e| panic!("{}: prefill {v} failed: {e}", be.name()));
+        assert_eq!(out.logits.len(), l * vocab, "{}: {v} prefill logits shape", be.name());
+        assert_eq!(out.conv_state.len(), cl, "{}: {v} prefill conv shape", be.name());
+        assert_eq!(out.ssm_state.len(), sl, "{}: {v} prefill ssm shape", be.name());
+        assert!(
+            out.logits.iter().all(|x| x.is_finite()),
+            "{}: {v} prefill logits not finite",
+            be.name()
+        );
+        let d = be
+            .decode(v, 1, &out.conv_state, &out.ssm_state, &t[l - 1..])
+            .unwrap_or_else(|e| panic!("{}: decode {v} failed: {e}", be.name()));
+        assert_eq!(d.logits.len(), vocab, "{}: {v} decode logits shape", be.name());
+        assert_eq!(d.conv_state.len(), cl, "{}: {v} decode conv shape", be.name());
+        assert_eq!(d.ssm_state.len(), sl, "{}: {v} decode ssm shape", be.name());
+        assert!(
+            d.logits.iter().all(|x| x.is_finite()),
+            "{}: {v} decode logits not finite",
+            be.name()
+        );
+    }
+    let t = toks(l, vocab, 1);
+    assert!(
+        be.prefill_fresh("no-such-variant", &t).is_err(),
+        "{}: unknown variant silently accepted",
+        be.name()
+    );
+}
+
+/// Two different bucket-legal chunkings of the same fp32 sequence — the
+/// trait-default largest-first plan and a smallest-bucket-only plan —
+/// must produce the same per-position logits (token-exact, and close in
+/// value), and both must agree with the backend's own `forward_logits`.
+/// Fp32 only: the quantized variants calibrate per chunk by design.
+pub fn check_prefill_chunking_equivalence(be: &dyn InferenceBackend) {
+    let vocab = be.cfg().vocab_size;
+    let buckets = be.prefill_buckets();
+    let smallest = buckets[0];
+    let l = 2 * smallest + 3;
+    let t = toks(l, vocab, 2);
+
+    // a chunk plan is (full buckets, decode-step remainder)
+    let run = |plan: (Vec<usize>, usize)| -> Vec<f32> {
+        let (chunks, rest) = plan;
+        let (mut conv, mut ssm) = be.zero_state();
+        let mut logits = Vec::with_capacity(l * vocab);
+        let mut off = 0usize;
+        for b in chunks {
+            let out = be.prefill("fp32", &t[off..off + b], &conv, &ssm).unwrap();
+            conv = out.conv_state;
+            ssm = out.ssm_state;
+            logits.extend(out.logits);
+            off += b;
+        }
+        for i in off..off + rest {
+            let out = be.decode("fp32", 1, &conv, &ssm, &t[i..i + 1]).unwrap();
+            conv = out.conv_state;
+            ssm = out.ssm_state;
+            logits.extend(out.logits);
+        }
+        assert_eq!(off + rest, l);
+        logits
+    };
+
+    let largest_first = run(full_bucket_plan(&buckets, l));
+    let smallest_only = run((vec![smallest; 2], l - 2 * smallest));
+    let own = be.forward_logits("fp32", &t).unwrap();
+    assert_eq!(own.len(), l * vocab, "{}: forward_logits shape", be.name());
+
+    for (name, got) in [("smallest-bucket", &smallest_only), ("forward_logits", &own)] {
+        let mut max_err = 0.0f32;
+        for (a, b) in got.iter().zip(&largest_first) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(
+            max_err < 5e-3,
+            "{}: {name} chunking diverged from largest-first: err {max_err}",
+            be.name()
+        );
+        for p in 0..l {
+            assert_eq!(
+                argmax(&got[p * vocab..(p + 1) * vocab]),
+                argmax(&largest_first[p * vocab..(p + 1) * vocab]),
+                "{}: {name} chunking changed the argmax at position {p}",
+                be.name()
+            );
+        }
+    }
+}
+
+/// Batched decode must be *token-exact* with single-sequence decode for
+/// every variant — the engine packs concurrent requests (plus padding)
+/// into batches, so a batch-sensitive backend would make a request's
+/// output depend on unrelated traffic.
+pub fn check_batched_decode_matches_singles(be: &dyn InferenceBackend) {
+    let vocab = be.cfg().vocab_size;
+    let b = batch_at_most(be, 4);
+    for v in be.variants() {
+        // distinct per-sequence states: one decode step over distinct
+        // tokens from the zero state (cheap, and legal on every backend)
+        let mut convs = Vec::new();
+        let mut ssms = Vec::new();
+        let mut next: Vec<i32> = Vec::new();
+        for s in 0..b {
+            let (conv, ssm) = be.zero_state();
+            let t = [((s * 37 + 11) % vocab) as i32];
+            let out = be.decode(&v, 1, &conv, &ssm, &t).unwrap();
+            next.push(argmax(&out.logits) as i32);
+            convs.push(out.conv_state);
+            ssms.push(out.ssm_state);
+        }
+        let conv_b: Vec<f32> = convs.concat();
+        let ssm_b: Vec<f32> = ssms.concat();
+        let batched = be.decode(&v, b, &conv_b, &ssm_b, &next).unwrap();
+        for s in 0..b {
+            let single = be.decode(&v, 1, &convs[s], &ssms[s], &next[s..s + 1]).unwrap();
+            assert_eq!(
+                argmax(&single.logits),
+                argmax(&batched.logits[s * vocab..(s + 1) * vocab]),
+                "{}: variant {v} batch {b} changed seq {s}'s token",
+                be.name()
+            );
+        }
+    }
+}
+
+/// `forward_logits` must chain with decode: prefilling a bucket and then
+/// decoding token-by-token yields the same per-position predictions as
+/// one `forward_logits` call over the whole sequence.
+pub fn check_forward_logits_chaining(be: &dyn InferenceBackend) {
+    let vocab = be.cfg().vocab_size;
+    let smallest = be.prefill_buckets()[0];
+    let l = smallest + 2;
+    let t = toks(l, vocab, 3);
+    let full = be.forward_logits("fp32", &t).unwrap();
+
+    let pre = be.prefill_fresh("fp32", &t[..smallest]).unwrap();
+    let mut conv = pre.conv_state;
+    let mut ssm = pre.ssm_state;
+    let mut chained: Vec<f32> = pre.logits;
+    for i in smallest..l {
+        let out = be.decode("fp32", 1, &conv, &ssm, &t[i..i + 1]).unwrap();
+        conv = out.conv_state;
+        ssm = out.ssm_state;
+        chained.extend(out.logits);
+    }
+    for p in 0..l {
+        assert_eq!(
+            argmax(&chained[p * vocab..(p + 1) * vocab]),
+            argmax(&full[p * vocab..(p + 1) * vocab]),
+            "{}: prefill+decode chain disagrees with forward_logits at {p}",
+            be.name()
+        );
+    }
+}
+
+/// Run every conformance check against one backend.
+pub fn run_all(be: &dyn InferenceBackend) {
+    check_buckets(be);
+    check_zero_state_shape(be);
+    check_variant_coverage(be);
+    check_prefill_chunking_equivalence(be);
+    check_batched_decode_matches_singles(be);
+    check_forward_logits_chaining(be);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+
+    // -- NativeBackend: unconditional on every host -------------------------
+
+    fn be() -> NativeBackend {
+        NativeBackend::synthetic(crate::backend::native::SYNTHETIC_SEED)
+    }
+
+    #[test]
+    fn native_buckets() {
+        check_buckets(&be());
+    }
+
+    #[test]
+    fn native_zero_state_shape() {
+        check_zero_state_shape(&be());
+    }
+
+    #[test]
+    fn native_variant_coverage() {
+        check_variant_coverage(&be());
+    }
+
+    #[test]
+    fn native_prefill_chunking_equivalence() {
+        check_prefill_chunking_equivalence(&be());
+    }
+
+    #[test]
+    fn native_batched_decode_matches_singles() {
+        check_batched_decode_matches_singles(&be());
+    }
+
+    #[test]
+    fn native_forward_logits_chaining() {
+        check_forward_logits_chaining(&be());
+    }
+
+    #[test]
+    fn native_conforms_with_narrow_buckets() {
+        // the harness itself must not assume the default bucket lists
+        let be = NativeBackend::synthetic(3).with_buckets(vec![8, 16], vec![1, 2]);
+        run_all(&be);
+    }
+
+    // -- PjrtBackend: gated on compiled artifacts ---------------------------
+
+    #[cfg(feature = "pjrt")]
+    #[test]
+    fn pjrt_conforms() {
+        use crate::backend::PjrtBackend;
+        use crate::model::weights::artifacts_dir;
+        if !artifacts_dir().join("manifest.json").exists() {
+            return;
+        }
+        let be = PjrtBackend::load_default().expect("pjrt load");
+        run_all(&be);
+    }
+}

@@ -23,9 +23,15 @@
 //! `NativeBackend` accepts *arbitrary* lengths and batch sizes but honours
 //! the same call shapes, so the coordinator code is identical over both.
 //! Future backends (multi-device PJRT, a real FPGA bridge, remote workers)
-//! implement the same six methods and inherit the whole serving stack.
+//! implement the same six methods and inherit the whole serving stack —
+//! and the whole contract test surface: [`conformance`] is a reusable
+//! assertion harness (chunking equivalence, batched-decode token
+//! exactness, `forward_logits` chaining, bucket sanity, variant coverage,
+//! state shapes) instantiated unconditionally for `NativeBackend` and
+//! artifact-gated for `PjrtBackend`.
 
 pub mod bucket;
+pub mod conformance;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -88,8 +94,8 @@ pub trait InferenceBackend {
     fn zero_state(&self) -> (Vec<f32>, Vec<f32>) {
         let cfg = self.cfg();
         (
-            vec![0.0; cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()],
-            vec![0.0; cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state],
+            vec![0.0; cfg.conv_state_len()],
+            vec![0.0; cfg.ssm_state_len()],
         )
     }
 

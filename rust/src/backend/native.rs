@@ -3,9 +3,10 @@
 //!
 //! Everything the PJRT artifacts can do, this does without them: all five
 //! quantization variants, chunked prefill with exact state chaining
-//! ([`Mamba2::prefill_chunk`]), and batched decode at *arbitrary* batch
-//! sizes (each sequence's recurrent step is independent, so batching is a
-//! loop — no compiled bucket constraint).  It loads the trained tiny
+//! ([`Mamba2::prefill_chunk`]), and batch-major decode at *arbitrary* batch
+//! sizes ([`Mamba2::decode_batch`] steps every sequence through the
+//! `[batch, state]` buffers in one pass — no compiled bucket constraint,
+//! no per-sequence state copies).  It loads the trained tiny
 //! checkpoint when `artifacts/` is present and deterministic synthetic
 //! weights otherwise, which is what lets the whole coordinator stack run —
 //! and be tested, unconditionally — on hosts with no XLA, no artifacts,
@@ -97,13 +98,11 @@ impl NativeBackend {
     }
 
     fn conv_len(&self) -> usize {
-        let cfg = self.cfg();
-        cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()
+        self.cfg().conv_state_len()
     }
 
     fn ssm_len(&self) -> usize {
-        let cfg = self.cfg();
-        cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state
+        self.cfg().ssm_state_len()
     }
 }
 
@@ -155,20 +154,14 @@ impl InferenceBackend for NativeBackend {
         let (cl, sl) = (self.conv_len(), self.ssm_len());
         ensure!(conv_state.len() == batch * cl, "conv state length");
         ensure!(ssm_state.len() == batch * sl, "ssm state length");
-        let vocab = self.cfg().vocab_size;
-        let mut logits = Vec::with_capacity(batch * vocab);
-        let mut out_conv = vec![0.0f32; batch * cl];
-        let mut out_ssm = vec![0.0f32; batch * sl];
-        // sequences are independent at decode time: batch = loop
-        for b in 0..batch {
-            let mut st = DecodeState {
-                conv: conv_state[b * cl..(b + 1) * cl].to_vec(),
-                ssm: ssm_state[b * sl..(b + 1) * sl].to_vec(),
-            };
-            logits.extend(self.model.decode_step(tokens[b] as u32, &mut st, v));
-            out_conv[b * cl..(b + 1) * cl].copy_from_slice(&st.conv);
-            out_ssm[b * sl..(b + 1) * sl].copy_from_slice(&st.ssm);
-        }
+        // batch-major in one pass: the caller's state is copied once into
+        // the output buffers and every sequence steps through them in place
+        // (`Mamba2::decode_batch`) — no per-sequence DecodeState marshalling,
+        // one weight stream per step for the whole batch
+        let mut out_conv = conv_state.to_vec();
+        let mut out_ssm = ssm_state.to_vec();
+        let toks: Vec<u32> = tokens.iter().map(|t| *t as u32).collect();
+        let logits = self.model.decode_batch(&toks, v, &mut out_conv, &mut out_ssm);
         Ok(DecodeOut { logits, conv_state: out_conv, ssm_state: out_ssm })
     }
 

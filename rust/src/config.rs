@@ -37,6 +37,19 @@ impl ModelConfig {
         2 * self.d_inner() + 2 * self.ngroups * self.d_state + self.nheads()
     }
 
+    /// Flat length of one sequence's rolling pre-conv window,
+    /// `(n_layer, d_conv-1, conv_dim)` — the layout every backend, the
+    /// state pool, and batch-major decode agree on.
+    pub fn conv_state_len(&self) -> usize {
+        self.n_layer * (self.d_conv - 1) * self.conv_dim()
+    }
+
+    /// Flat length of one sequence's SSM hidden state,
+    /// `(n_layer, nheads, headdim, d_state)`.
+    pub fn ssm_state_len(&self) -> usize {
+        self.n_layer * self.nheads() * self.headdim * self.d_state
+    }
+
     /// Mamba2-130M — the paper's prefill / accuracy model.
     pub fn mamba2_130m() -> Self {
         Self {

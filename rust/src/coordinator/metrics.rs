@@ -1,7 +1,21 @@
 //! Serving metrics: TTFT / per-token latency / throughput accounting, plus
-//! decode-batch padding waste and speculative-decoding acceptance tracking.
+//! decode-batch padding waste, speculative-decoding acceptance tracking, and
+//! — for the multi-worker pool — per-worker queue-depth/utilization roll-ups
+//! merged into one aggregate view ([`Metrics::merge`]).
 
 use std::time::Instant;
+
+/// Per-worker roll-up attached to a merged [`Metrics`] by the multi-worker
+/// pool dispatcher (`coordinator::router::serve_pool`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerStat {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    /// peak pending+active requests the worker's engine held
+    pub queue_depth_peak: u64,
+    /// busy-time fraction of the worker's wall clock, in [0, 1]
+    pub utilization: f64,
+}
 
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
@@ -30,6 +44,15 @@ pub struct Metrics {
     pub per_request_acceptance: Vec<f64>,
     pub ttft_s: Vec<f64>,
     pub request_latency_s: Vec<f64>,
+    /// peak pending+active requests observed by the engine (max across
+    /// workers after a merge)
+    pub queue_depth_peak: u64,
+    /// wall time accumulated by scheduler steps that had work queued or
+    /// active — the numerator of [`Metrics::utilization`] (summed across
+    /// workers after a merge)
+    pub busy_s: f64,
+    /// per-worker roll-ups, attached by the pool dispatcher on merge
+    pub worker_stats: Vec<WorkerStat>,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -101,16 +124,89 @@ impl Metrics {
         Self::pct(&self.per_request_acceptance, 0.50)
     }
 
+    /// Busy-time fraction of the wall clock.  For a single engine this is
+    /// in [0, 1]; for a merged multi-worker view `busy_s` sums across
+    /// workers, so the value approaches the worker count at full load.
+    pub fn utilization(&self) -> f64 {
+        let w = self.wall_s();
+        if w <= 0.0 {
+            return 0.0;
+        }
+        self.busy_s / w
+    }
+
+    /// Record that the engine currently holds `depth` requests
+    /// (pending + active), keeping the peak.
+    pub fn note_queue_depth(&mut self, depth: usize) {
+        self.queue_depth_peak = self.queue_depth_peak.max(depth as u64);
+    }
+
+    /// Fold another engine's metrics into this one (the multi-worker
+    /// aggregate): counters add, latency samples concatenate, the wall
+    /// clock spans the earliest start to the latest stop, and the queue
+    /// depth keeps the per-worker peak.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests_completed += other.requests_completed;
+        self.tokens_generated += other.tokens_generated;
+        self.prompt_tokens += other.prompt_tokens;
+        self.prefill_chunks += other.prefill_chunks;
+        self.decode_steps += other.decode_steps;
+        self.decode_padded_slots += other.decode_padded_slots;
+        self.decode_batch_slots += other.decode_batch_slots;
+        self.draft_tokens += other.draft_tokens;
+        self.draft_accepted += other.draft_accepted;
+        self.spec_rounds += other.spec_rounds;
+        self.verify_calls += other.verify_calls;
+        self.rollbacks += other.rollbacks;
+        self.resync_steps += other.resync_steps;
+        self.per_request_acceptance
+            .extend_from_slice(&other.per_request_acceptance);
+        self.ttft_s.extend_from_slice(&other.ttft_s);
+        self.request_latency_s.extend_from_slice(&other.request_latency_s);
+        self.queue_depth_peak = self.queue_depth_peak.max(other.queue_depth_peak);
+        self.busy_s += other.busy_s;
+        self.worker_stats.extend(other.worker_stats.iter().cloned());
+        self.started = match (self.started, other.started) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.finished = match (self.finished, other.finished) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+    }
+
     pub fn summary(&self) -> String {
         let accept = if self.draft_tokens > 0 {
             format!("{:.1}%", self.acceptance_rate() * 100.0)
         } else {
             "n/a".to_string()
         };
+        let workers = if self.worker_stats.is_empty() {
+            String::new()
+        } else {
+            let utils: Vec<String> = self
+                .worker_stats
+                .iter()
+                .map(|w| format!("{:.0}%", w.utilization * 100.0))
+                .collect();
+            let depths: Vec<String> = self
+                .worker_stats
+                .iter()
+                .map(|w| w.queue_depth_peak.to_string())
+                .collect();
+            format!(
+                " workers={} util=[{}] qdepth=[{}]",
+                self.worker_stats.len(),
+                utils.join("/"),
+                depths.join("/")
+            )
+        };
         format!(
             "requests={} prompt_toks={} gen_toks={} wall={:.3}s gen_tok/s={:.1} \
              ttft_p50={:.1}ms ttft_p95={:.1}ms lat_p50={:.1}ms lat_p95={:.1}ms \
-             prefill_chunks={} decode_steps={} pad_waste={:.1}% accept={}",
+             prefill_chunks={} decode_steps={} pad_waste={:.1}% accept={} \
+             qdepth_peak={} util={:.0}%{}",
             self.requests_completed,
             self.prompt_tokens,
             self.tokens_generated,
@@ -124,6 +220,9 @@ impl Metrics {
             self.decode_steps,
             self.padding_frac() * 100.0,
             accept,
+            self.queue_depth_peak,
+            self.utilization() * 100.0,
+            workers,
         )
     }
 }
@@ -176,6 +275,87 @@ mod tests {
         assert!((m.acceptance_rate() - 0.8).abs() < 1e-12);
         m.per_request_acceptance = vec![0.5, 0.8, 0.9];
         assert_eq!(m.acceptance_p50(), 0.8);
+    }
+
+    #[test]
+    fn queue_depth_and_utilization_in_summary() {
+        let mut m = Metrics::default();
+        m.note_queue_depth(3);
+        m.note_queue_depth(7);
+        m.note_queue_depth(2);
+        assert_eq!(m.queue_depth_peak, 7);
+        m.start();
+        std::thread::sleep(std::time::Duration::from_millis(4));
+        m.busy_s = m.wall_s() * 0.5;
+        m.stop();
+        let u = m.utilization();
+        assert!(u > 0.0 && u <= 1.0, "utilization {u}");
+        let s = m.summary();
+        assert!(s.contains("qdepth_peak=7"), "{s}");
+        assert!(s.contains("util="), "{s}");
+        assert!(!s.contains("workers="), "no per-worker block before merge: {s}");
+    }
+
+    #[test]
+    fn per_worker_stats_in_summary() {
+        let mut m = Metrics::default();
+        m.worker_stats = vec![
+            WorkerStat {
+                requests_completed: 3,
+                tokens_generated: 30,
+                queue_depth_peak: 4,
+                utilization: 0.9,
+            },
+            WorkerStat {
+                requests_completed: 2,
+                tokens_generated: 20,
+                queue_depth_peak: 2,
+                utilization: 0.5,
+            },
+        ];
+        let s = m.summary();
+        assert!(s.contains("workers=2"), "{s}");
+        assert!(s.contains("util=[90%/50%]"), "{s}");
+        assert!(s.contains("qdepth=[4/2]"), "{s}");
+    }
+
+    #[test]
+    fn merge_sums_counters_and_spans_wall() {
+        let mut a = Metrics::default();
+        a.start();
+        a.requests_completed = 2;
+        a.tokens_generated = 20;
+        a.decode_steps = 5;
+        a.ttft_s = vec![0.1];
+        a.queue_depth_peak = 3;
+        a.busy_s = 0.5;
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        a.stop();
+
+        let mut b = Metrics::default();
+        b.start();
+        b.requests_completed = 3;
+        b.tokens_generated = 10;
+        b.decode_steps = 7;
+        b.ttft_s = vec![0.2, 0.3];
+        b.queue_depth_peak = 5;
+        b.busy_s = 0.25;
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        b.stop();
+
+        let mut m = Metrics::default();
+        m.merge(&a);
+        m.merge(&b);
+        assert_eq!(m.requests_completed, 5);
+        assert_eq!(m.tokens_generated, 30);
+        assert_eq!(m.decode_steps, 12);
+        assert_eq!(m.ttft_s.len(), 3);
+        assert_eq!(m.queue_depth_peak, 5); // max, not sum
+        assert!((m.busy_s - 0.75).abs() < 1e-12); // sum
+        // the merged wall spans a's start to b's stop, so it is at least
+        // as long as either worker's own span
+        assert!(m.wall_s() >= a.wall_s());
+        assert!(m.wall_s() >= b.wall_s());
     }
 
     #[test]

@@ -16,6 +16,13 @@
 //! over the PJRT artifacts and the artifact-free native model, and any
 //! future backend inherits them unchanged.
 //!
+//! [`router::serve_pool`] scales this out: N worker threads, each owning
+//! its own backend (built from a factory closure) and its own engine,
+//! behind the capacity-aware [`router::Router`] with a shared ingress
+//! channel and per-worker [`metrics::Metrics`] merged into one aggregate.
+//! Worker count changes throughput, never tokens — the fan-out is
+//! token-exact with a single worker.
+//!
 //! The second serving mode is speculative: [`speculative::SpecEngine`]
 //! drives a draft-k / verify-1 loop in which the quantized `fastmamba`
 //! variant drafts candidate tokens with single-token decode steps (on any
@@ -38,9 +45,9 @@ pub mod speculative;
 pub mod state;
 
 pub use batcher::DecodeBatcher;
-pub use metrics::Metrics;
+pub use metrics::{Metrics, WorkerStat};
 pub use request::{FinishedRequest, Request, SpecStats};
-pub use router::Router;
+pub use router::{serve_pool, serve_threaded, PoolConfig, PoolReport, Router, ServePool};
 pub use scheduler::{Engine, EngineConfig};
 pub use speculative::{SpecConfig, SpecEngine};
 pub use state::{SnapshotId, StatePool};

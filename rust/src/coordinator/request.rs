@@ -12,11 +12,22 @@ pub struct Request {
     pub variant: String,
     /// optional stop token (generation halts when sampled)
     pub stop_token: Option<u32>,
+    /// when the request entered the system (set at construction) — the
+    /// anchor for TTFT/latency, so queue time in a pool dispatcher or an
+    /// engine's pending list counts toward the reported latency
+    pub submitted_at: Instant,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize, variant: &str) -> Self {
-        Self { id, prompt, max_new_tokens, variant: variant.to_string(), stop_token: None }
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            variant: variant.to_string(),
+            stop_token: None,
+            submitted_at: Instant::now(),
+        }
     }
 }
 

@@ -1,22 +1,37 @@
-//! Request router: spreads incoming requests over worker engines by least
-//! outstanding load (state-slot aware — the Mamba serving advantage: a
-//! worker's remaining capacity is exactly `capacity - in_use`, no
-//! sequence-length estimation needed).
+//! Request router and the multi-worker serving pool.
 //!
-//! The single-host deployment runs one worker; the policy logic is
-//! nevertheless real and unit-tested with mock workers, and
-//! `serve_threaded` wires an [`Engine`] into a worker thread with mpsc
-//! queues for asynchronous submission.
+//! [`Router`] spreads incoming requests over workers by least outstanding
+//! load (state-slot aware — the Mamba serving advantage: a worker's
+//! remaining capacity is exactly `capacity - in_use`, no sequence-length
+//! estimation needed).
+//!
+//! [`serve_pool`] fans the serving engine out to N worker threads behind
+//! that policy.  Each worker **constructs** its own backend from the
+//! factory closure rather than borrowing one (PJRT clients are not Sync —
+//! exactly like a real deployment where each worker process owns a
+//! device), runs its own [`Engine`] (or [`SpecEngine`] when
+//! [`PoolConfig::spec`] is set), and reports completions back to a
+//! dispatcher that owns the [`Router`], tracks per-worker outstanding
+//! load, and forwards results to the shared results channel.  Ingress is
+//! one shared submission channel; dropping it (or calling
+//! [`ServePool::finish`]) drains every worker and merges their
+//! [`Metrics`] into one aggregate with per-worker roll-ups.
+//!
+//! [`SpecEngine`]: super::speculative::SpecEngine
 
+use std::collections::VecDeque;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::backend::InferenceBackend;
 
+use super::metrics::{Metrics, WorkerStat};
 use super::request::{FinishedRequest, Request};
 use super::scheduler::{Engine, EngineConfig};
+use super::speculative::{SpecConfig, SpecEngine};
 
 /// Abstract view of a worker the router can place requests on.
 pub trait Worker {
@@ -55,61 +70,503 @@ impl Router {
     }
 }
 
-/// Run an engine on a worker thread; returns a submission channel and a
-/// results channel.  The worker *constructs* its own backend from the
-/// factory closure rather than borrowing one (PJRT clients are not Sync —
-/// exactly like a real deployment where each worker process owns a
-/// device; the same factory shape is what a sharded multi-worker launch
-/// will fan out).  Dropping the submitter drains and joins the worker.
-pub fn serve_threaded<F>(
-    make_backend: F,
-    cfg: EngineConfig,
-) -> (mpsc::Sender<Request>, mpsc::Receiver<FinishedRequest>, thread::JoinHandle<Result<()>>)
+/// Configuration of a [`serve_pool`] launch.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// per-worker engine configuration (plain batched-greedy mode)
+    pub engine: EngineConfig,
+    /// worker threads, one backend each
+    pub n_workers: usize,
+    /// when set, each worker runs a speculative [`SpecEngine`] (drafting
+    /// and verifying on the worker's own backend) instead of the plain
+    /// engine; `spec.max_active` then bounds the worker's concurrency
+    pub spec: Option<SpecConfig>,
+}
+
+impl PoolConfig {
+    /// State-slot capacity the router budgets per worker.
+    pub fn capacity_per_worker(&self) -> usize {
+        match &self.spec {
+            Some(s) => s.max_active,
+            None => self.engine.max_active,
+        }
+    }
+}
+
+/// What the pool measured, returned by [`ServePool::finish`].
+#[derive(Debug)]
+pub struct PoolReport {
+    /// all workers' metrics folded into one aggregate (wall clock spans
+    /// the earliest worker start to the latest stop), with
+    /// [`Metrics::worker_stats`] carrying the per-worker roll-ups
+    pub merged: Metrics,
+    /// each worker's own metrics, indexed by worker id
+    pub per_worker: Vec<Metrics>,
+    /// requests routed per worker (the router's accounting)
+    pub assignments: Vec<u64>,
+    /// highest outstanding (dispatched, not yet finished) count per
+    /// worker — never exceeds [`PoolReport::capacity_per_worker`]
+    pub load_peak: Vec<usize>,
+    pub capacity_per_worker: usize,
+    /// worker failures (dead backends, engine errors).  A dead worker's
+    /// unfinished requests re-route to the survivors, so results still
+    /// arrive unless *every* worker dies — in which case the pool shuts
+    /// down and the results channel closes.  Empty on a clean run.
+    /// The dropped-request tally counts requests that reached the
+    /// dispatcher; submissions still in flight through the ingress channel
+    /// when an all-dead pool shuts down are lost without being counted.
+    pub errors: Vec<String>,
+}
+
+/// Handle to a running worker pool: submit requests, read results, then
+/// [`ServePool::finish`] to drain, join, and collect the [`PoolReport`].
+pub struct ServePool {
+    submit: Option<mpsc::Sender<Request>>,
+    pub results: mpsc::Receiver<FinishedRequest>,
+    dispatcher: Option<thread::JoinHandle<Result<PoolReport>>>,
+    pub n_workers: usize,
+}
+
+impl ServePool {
+    /// Queue a request for dispatch.
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.submit
+            .as_ref()
+            .ok_or_else(|| anyhow!("pool ingress already closed"))?
+            .send(req)
+            .map_err(|_| anyhow!("pool dispatcher is gone"))
+    }
+
+    /// Clone the ingress channel (for concurrent submitters).
+    ///
+    /// End-of-input is signalled by hangup: **every** clone handed out
+    /// here must be dropped (in addition to the pool's own handle via
+    /// [`ServePool::finish`] / [`ServePool::close_ingress`]) before the
+    /// pool can drain — `finish` blocks until the last submitter hangs up.
+    pub fn sender(&self) -> mpsc::Sender<Request> {
+        self.submit.clone().expect("pool ingress already closed")
+    }
+
+    /// Close ingress without joining (outstanding requests still finish).
+    pub fn close_ingress(&mut self) {
+        self.submit = None;
+    }
+
+    /// Close ingress, wait for every dispatched request to complete, join
+    /// all workers, and return the merged report.  Read everything you
+    /// want from [`ServePool::results`] first: `finish` consumes the
+    /// pool, so results still buffered in the channel are discarded.
+    ///
+    /// Blocks until all work drains, which requires every
+    /// [`ServePool::sender`] clone to have been dropped (see there).
+    pub fn finish(mut self) -> Result<PoolReport> {
+        self.submit = None; // end-of-input: forwarder signals the dispatcher
+        let handle = self.dispatcher.take().expect("finish called once");
+        match handle.join() {
+            Ok(report) => report,
+            Err(_) => Err(anyhow!("pool dispatcher panicked")),
+        }
+    }
+}
+
+/// Dispatcher-side view of a worker (dead workers advertise capacity 0 so
+/// the router can never pick them).
+struct WorkerView {
+    load: usize,
+    capacity: usize,
+}
+
+impl Worker for WorkerView {
+    fn load(&self) -> usize {
+        self.load
+    }
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+enum Msg {
+    Incoming(Request),
+    IngressClosed,
+    Done { worker: usize, fin: FinishedRequest },
+    WorkerDead { worker: usize, error: String },
+}
+
+/// Either serving engine, so one worker loop drives both modes.
+enum WorkerEngine<'be> {
+    Plain(Engine<'be>),
+    Spec(SpecEngine<'be>),
+}
+
+impl<'be> WorkerEngine<'be> {
+    fn submit(&mut self, req: Request) {
+        match self {
+            Self::Plain(e) => e.submit(req),
+            Self::Spec(e) => e.submit(req),
+        }
+    }
+
+    fn idle(&self) -> bool {
+        match self {
+            Self::Plain(e) => e.n_pending() == 0 && e.n_active() == 0,
+            Self::Spec(e) => e.n_pending() == 0 && e.n_active() == 0,
+        }
+    }
+
+    fn step(&mut self) -> Result<()> {
+        match self {
+            Self::Plain(e) => e.step(),
+            Self::Spec(e) => e.step(),
+        }
+    }
+
+    fn drain_finished(&mut self) -> Vec<FinishedRequest> {
+        match self {
+            Self::Plain(e) => e.finished.drain(..).collect(),
+            Self::Spec(e) => e.finished.drain(..).collect(),
+        }
+    }
+
+    fn metrics_mut(&mut self) -> &mut Metrics {
+        match self {
+            Self::Plain(e) => &mut e.metrics,
+            Self::Spec(e) => &mut e.metrics,
+        }
+    }
+
+    fn into_metrics(self) -> Metrics {
+        match self {
+            Self::Plain(e) => e.metrics,
+            Self::Spec(e) => e.metrics,
+        }
+    }
+}
+
+/// Sends `Msg::WorkerDead` when dropped while armed, so the dispatcher
+/// learns of *every* abnormal worker exit — error returns AND panics
+/// (unwind drops the guard).  Because the notice travels the same channel
+/// as the worker's `Done` messages, it is guaranteed to arrive after all
+/// of them: the dispatcher's outstanding list is exact at burial time.
+struct DeathNotice {
+    worker: usize,
+    pool_tx: mpsc::Sender<Msg>,
+    error: String,
+    armed: bool,
+}
+
+impl Drop for DeathNotice {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = self.pool_tx.send(Msg::WorkerDead {
+                worker: self.worker,
+                error: std::mem::take(&mut self.error),
+            });
+        }
+    }
+}
+
+/// One worker thread: build the backend, run the engine until ingress
+/// disconnects and all work drains, return the engine's metrics.
+fn run_worker<F>(
+    id: usize,
+    make_backend: Arc<F>,
+    cfg: PoolConfig,
+    rx: mpsc::Receiver<Request>,
+    pool_tx: mpsc::Sender<Msg>,
+) -> Result<Metrics>
 where
-    F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+    F: Fn() -> Result<Box<dyn InferenceBackend>>,
 {
-    let (tx_req, rx_req) = mpsc::channel::<Request>();
-    let (tx_done, rx_done) = mpsc::channel::<FinishedRequest>();
-    let handle = thread::spawn(move || -> Result<()> {
-        let be = make_backend()?;
-        let mut engine = Engine::new(be.as_ref(), cfg);
-        engine.metrics.start();
+    let mut notice = DeathNotice {
+        worker: id,
+        pool_tx: pool_tx.clone(),
+        error: "worker panicked".to_string(),
+        armed: true,
+    };
+    let be = match make_backend() {
+        Ok(be) => be,
+        Err(e) => {
+            notice.error = format!("backend construction failed: {e}");
+            return Err(e); // the death notice fires on drop
+        }
+    };
+    let mut engine = match &cfg.spec {
+        Some(sc) => WorkerEngine::Spec(SpecEngine::new(be.as_ref(), sc.clone())),
+        None => WorkerEngine::Plain(Engine::new(be.as_ref(), cfg.engine.clone())),
+    };
+    engine.metrics_mut().start();
+    loop {
+        // drain whatever is queued without blocking; block only if idle
+        let mut disconnected = false;
         loop {
-            // drain whatever is queued without blocking; block only if idle
-            let mut disconnected = false;
-            loop {
-                match rx_req.try_recv() {
-                    Ok(r) => engine.submit(r),
-                    Err(mpsc::TryRecvError::Empty) => break,
-                    Err(mpsc::TryRecvError::Disconnected) => {
-                        disconnected = true;
-                        break;
-                    }
-                }
-            }
-            if engine.n_pending() == 0 && engine.n_active() == 0 {
-                if disconnected {
+            match rx.try_recv() {
+                Ok(r) => engine.submit(r),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
                     break;
                 }
-                match rx_req.recv() {
-                    Ok(r) => engine.submit(r),
-                    Err(_) => break,
-                }
-            }
-            engine.step()?;
-            for f in engine.finished.drain(..) {
-                let _ = tx_done.send(f);
             }
         }
-        engine.metrics.stop();
-        Ok(())
-    });
-    (tx_req, rx_done, handle)
+        if engine.idle() {
+            if disconnected {
+                break;
+            }
+            match rx.recv() {
+                Ok(r) => engine.submit(r),
+                Err(_) => break,
+            }
+        }
+        if let Err(e) = engine.step() {
+            notice.error = format!("engine step failed: {e}");
+            return Err(e); // the death notice fires on drop
+        }
+        for f in engine.drain_finished() {
+            let _ = pool_tx.send(Msg::Done { worker: id, fin: f });
+        }
+    }
+    notice.armed = false; // clean drain: no death notice
+    engine.metrics_mut().stop();
+    Ok(engine.into_metrics())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dispatch(
+    n: usize,
+    capacity: usize,
+    worker_tx: Vec<mpsc::Sender<Request>>,
+    handles: Vec<thread::JoinHandle<Result<Metrics>>>,
+    pool_rx: mpsc::Receiver<Msg>,
+    tx_done: mpsc::Sender<FinishedRequest>,
+) -> Result<PoolReport> {
+    let mut router = Router::new(n);
+    // the dispatcher keeps a copy of every request a worker currently
+    // holds: a worker's load IS its outstanding list, and when a worker
+    // dies its unfinished requests re-route to the survivors (a worker's
+    // own Done messages always precede its WorkerDead on the same channel,
+    // so the list is exact — re-routing never duplicates a result)
+    let mut outstanding: Vec<Vec<Request>> = vec![Vec::new(); n];
+    let mut load_peak = vec![0usize; n];
+    let mut alive = vec![true; n];
+    let mut backlog: VecDeque<Request> = VecDeque::new();
+    let mut ingress_open = true;
+    let mut errors: Vec<String> = Vec::new();
+
+    fn bury(
+        w: usize,
+        alive: &mut [bool],
+        outstanding: &mut [Vec<Request>],
+        backlog: &mut VecDeque<Request>,
+        errors: &mut Vec<String>,
+    ) {
+        alive[w] = false;
+        let lost = std::mem::take(&mut outstanding[w]);
+        if !lost.is_empty() {
+            errors.push(format!(
+                "worker {w} died holding {} request(s); re-routing",
+                lost.len()
+            ));
+            for r in lost {
+                backlog.push_back(r);
+            }
+        }
+    }
+
+    loop {
+        // place as much backlog as worker capacity allows; `route` returning
+        // None means every live worker is at capacity — wait for a `Done`
+        while !backlog.is_empty() {
+            let views: Vec<WorkerView> = (0..n)
+                .map(|i| WorkerView {
+                    load: outstanding[i].len(),
+                    capacity: if alive[i] { capacity } else { 0 },
+                })
+                .collect();
+            let Some(w) = router.route(&views) else { break };
+            let req = backlog.pop_front().unwrap();
+            match worker_tx[w].send(req.clone()) {
+                Ok(()) => {
+                    outstanding[w].push(req);
+                    load_peak[w] = load_peak[w].max(outstanding[w].len());
+                }
+                Err(mpsc::SendError(_)) => {
+                    // the worker's channel is gone, so its death notice is
+                    // already in flight — and ordered AFTER any Done messages
+                    // still queued from it.  Burying it here would re-route
+                    // requests whose results are about to arrive (duplicates),
+                    // so only undo this routing decision and stop selecting
+                    // the worker; the WorkerDead message does the burial.
+                    router.assignments[w] -= 1;
+                    alive[w] = false;
+                    backlog.push_front(req);
+                }
+            }
+        }
+
+        if !alive.iter().any(|a| *a) {
+            // nothing can make progress; drain the queue — forwarding
+            // results the dead workers already computed and recording any
+            // still-queued death notices — then break so tx_done drops and
+            // readers waiting on the results channel error out instead of
+            // hanging
+            while let Ok(msg) = pool_rx.try_recv() {
+                match msg {
+                    Msg::Done { worker, fin } => {
+                        if let Some(pos) =
+                            outstanding[worker].iter().position(|r| r.id == fin.id)
+                        {
+                            outstanding[worker].remove(pos);
+                        }
+                        let _ = tx_done.send(fin);
+                    }
+                    Msg::WorkerDead { worker, error } => {
+                        errors.push(format!("worker {worker}: {error}"));
+                        bury(worker, &mut alive, &mut outstanding, &mut backlog,
+                             &mut errors);
+                    }
+                    Msg::Incoming(req) => backlog.push_back(req),
+                    Msg::IngressClosed => {}
+                }
+            }
+            let lost = backlog.len()
+                + outstanding.iter().map(|o| o.len()).sum::<usize>();
+            if lost > 0 {
+                errors.push(format!(
+                    "{lost} request(s) dropped: every worker died"
+                ));
+            }
+            break;
+        }
+        if !ingress_open
+            && backlog.is_empty()
+            && outstanding.iter().all(|o| o.is_empty())
+        {
+            break;
+        }
+
+        match pool_rx.recv() {
+            Ok(Msg::Incoming(req)) => backlog.push_back(req),
+            Ok(Msg::IngressClosed) => ingress_open = false,
+            Ok(Msg::Done { worker, fin }) => {
+                if let Some(pos) =
+                    outstanding[worker].iter().position(|r| r.id == fin.id)
+                {
+                    outstanding[worker].remove(pos);
+                }
+                let _ = tx_done.send(fin);
+            }
+            Ok(Msg::WorkerDead { worker, error }) => {
+                errors.push(format!("worker {worker}: {error}"));
+                bury(worker, &mut alive, &mut outstanding, &mut backlog, &mut errors);
+            }
+            Err(_) => break, // every sender (forwarder + workers) is gone
+        }
+    }
+
+    // end-of-input for the workers: drain and join
+    drop(worker_tx);
+    let mut per_worker: Vec<Metrics> = Vec::with_capacity(n);
+    for (w, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(m)) => per_worker.push(m),
+            Ok(Err(_)) => per_worker.push(Metrics::default()), // already recorded
+            Err(_) => {
+                errors.push(format!("worker {w} panicked"));
+                per_worker.push(Metrics::default());
+            }
+        }
+    }
+    let mut merged = Metrics::default();
+    let mut stats = Vec::with_capacity(n);
+    for m in &per_worker {
+        merged.merge(m);
+        stats.push(WorkerStat {
+            requests_completed: m.requests_completed,
+            tokens_generated: m.tokens_generated,
+            queue_depth_peak: m.queue_depth_peak,
+            utilization: m.utilization(),
+        });
+    }
+    merged.worker_stats = stats;
+    Ok(PoolReport {
+        merged,
+        per_worker,
+        assignments: router.assignments,
+        load_peak,
+        capacity_per_worker: capacity,
+        errors,
+    })
+}
+
+/// Fan the serving engine out to `cfg.n_workers` threads behind the
+/// capacity-aware [`Router`].  Each worker owns a backend built by
+/// `make_backend`; the dispatcher never sends a worker more outstanding
+/// requests than its state-slot capacity, so a worker's engine is always
+/// admitting from a queue it can hold.
+pub fn serve_pool<F>(make_backend: F, cfg: PoolConfig) -> ServePool
+where
+    F: Fn() -> Result<Box<dyn InferenceBackend>> + Send + Sync + 'static,
+{
+    assert!(cfg.n_workers >= 1, "n_workers must be >= 1");
+    let n = cfg.n_workers;
+    let capacity = cfg.capacity_per_worker();
+    assert!(capacity >= 1, "worker capacity must be >= 1");
+    let make = Arc::new(make_backend);
+
+    let (tx_req, rx_req) = mpsc::channel::<Request>();
+    let (tx_done, rx_done) = mpsc::channel::<FinishedRequest>();
+    let (pool_tx, pool_rx) = mpsc::channel::<Msg>();
+
+    // ingress forwarder: bridges the public Sender<Request> into the
+    // dispatcher's message stream and signals end-of-input when every
+    // submitter handle is dropped
+    {
+        let pool_tx = pool_tx.clone();
+        thread::spawn(move || {
+            for r in rx_req {
+                if pool_tx.send(Msg::Incoming(r)).is_err() {
+                    return;
+                }
+            }
+            let _ = pool_tx.send(Msg::IngressClosed);
+        });
+    }
+
+    let mut worker_tx = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for id in 0..n {
+        let (tx, rx) = mpsc::channel::<Request>();
+        worker_tx.push(tx);
+        let make = Arc::clone(&make);
+        let wcfg = cfg.clone();
+        let ptx = pool_tx.clone();
+        handles.push(thread::spawn(move || run_worker(id, make, wcfg, rx, ptx)));
+    }
+    drop(pool_tx);
+
+    let dispatcher =
+        thread::spawn(move || dispatch(n, capacity, worker_tx, handles, pool_rx, tx_done));
+    ServePool {
+        submit: Some(tx_req),
+        results: rx_done,
+        dispatcher: Some(dispatcher),
+        n_workers: n,
+    }
+}
+
+/// Single-worker convenience wrapper over [`serve_pool`] — the original
+/// threaded-serving entry point, now one instance of the pool.
+pub fn serve_threaded<F>(make_backend: F, cfg: EngineConfig) -> ServePool
+where
+    F: Fn() -> Result<Box<dyn InferenceBackend>> + Send + Sync + 'static,
+{
+    serve_pool(make_backend, PoolConfig { engine: cfg, n_workers: 1, spec: None })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::NativeBackend;
 
     struct MockWorker {
         load: usize,
@@ -160,26 +617,170 @@ mod tests {
 
     #[test]
     fn serve_threaded_roundtrip_on_native_backend() {
-        use crate::backend::NativeBackend;
-
-        let (tx, rx, handle) = serve_threaded(
+        let pool = serve_threaded(
             || Ok(Box::new(NativeBackend::synthetic(3)) as Box<dyn InferenceBackend>),
             EngineConfig { max_active: 4, greedy_chunking: true },
         );
         let n = 3usize;
         for id in 0..n {
-            let prompt: Vec<u32> = (0..24).map(|j| ((id * 97 + j * 13) % 512) as u32).collect();
-            tx.send(Request::new(id as u64, prompt, 5, "fp32")).unwrap();
+            let prompt: Vec<u32> =
+                (0..24).map(|j| ((id * 97 + j * 13) % 512) as u32).collect();
+            pool.submit(Request::new(id as u64, prompt, 5, "fp32")).unwrap();
         }
         let mut done = Vec::new();
         for _ in 0..n {
-            let f = rx.recv().expect("worker produced a result");
+            let f = pool.results.recv().expect("worker produced a result");
             assert_eq!(f.generated.len(), 5);
             done.push(f.id);
         }
         done.sort_unstable();
         assert_eq!(done, vec![0, 1, 2]);
-        drop(tx); // drains and joins the worker
-        handle.join().unwrap().unwrap();
+        let report = pool.finish().unwrap();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        assert_eq!(report.merged.requests_completed, 3);
+        assert_eq!(report.assignments, vec![3]);
+    }
+
+    /// A deliberately small model so the 64-request stress trace runs fast
+    /// in debug builds; same-seed construction gives every worker (and
+    /// every pool) identical weights.
+    fn micro_backend() -> NativeBackend {
+        let mut cfg = crate::config::ModelConfig::tiny();
+        cfg.name = "mamba2-micro".into();
+        cfg.d_model = 64;
+        cfg.n_layer = 2;
+        cfg.d_state = 16;
+        cfg.headdim = 16;
+        cfg.vocab_size = 128;
+        NativeBackend::new(crate::model::ModelWeights::random(&cfg, 9))
+            .with_buckets(vec![8, 16, 32], vec![1, 2, 4])
+    }
+
+    fn stress_requests() -> Vec<Request> {
+        // >= 64 mixed-length requests, deterministic, mixed variants
+        let lens = [1usize, 3, 9, 17, 33, 48];
+        (0..64usize)
+            .map(|i| {
+                let plen = lens[i % lens.len()];
+                let prompt: Vec<u32> =
+                    (0..plen).map(|j| ((i * 131 + j * 17) % 128) as u32).collect();
+                let variant = if i % 3 == 0 { "fastmamba" } else { "fp32" };
+                Request::new(i as u64, prompt, 2 + (i % 5), variant)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn multi_worker_pool_token_exact_and_capacity_bounded() {
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let n_reqs = stress_requests().len();
+
+        let run = |n_workers: usize| -> (Vec<(u64, Vec<u32>)>, PoolReport) {
+            let pool = serve_pool(
+                make,
+                PoolConfig {
+                    engine: EngineConfig { max_active: 4, greedy_chunking: true },
+                    n_workers,
+                    spec: None,
+                },
+            );
+            // rebuilt per run: Request::new stamps submitted_at, and reusing
+            // clones would bleed the first run's wall time into the second
+            // run's latency samples
+            for r in stress_requests() {
+                pool.submit(r).unwrap();
+            }
+            let mut got: Vec<(u64, Vec<u32>)> = (0..n_reqs)
+                .map(|_| {
+                    let f = pool.results.recv().expect("pool produced a result");
+                    (f.id, f.generated)
+                })
+                .collect();
+            let report = pool.finish().unwrap();
+            got.sort();
+            (got, report)
+        };
+
+        let (got1, rep1) = run(1);
+        let (got4, rep4) = run(4);
+        assert_eq!(got1, got4, "worker count changed generated tokens");
+        assert!(rep1.errors.is_empty(), "{:?}", rep1.errors);
+        assert!(rep4.errors.is_empty(), "{:?}", rep4.errors);
+
+        // the router accounted for every request and never overcommitted
+        assert_eq!(rep1.assignments.iter().sum::<u64>(), n_reqs as u64);
+        assert_eq!(rep4.assignments.iter().sum::<u64>(), n_reqs as u64);
+        assert_eq!(rep4.load_peak.len(), 4);
+        for (w, &peak) in rep4.load_peak.iter().enumerate() {
+            assert!(
+                peak <= rep4.capacity_per_worker,
+                "worker {w} exceeded capacity: peak {peak} > {}",
+                rep4.capacity_per_worker
+            );
+        }
+        // 64 requests over 4 capacity-4 workers: everyone saw traffic
+        assert!(rep4.assignments.iter().all(|&a| a > 0), "{:?}", rep4.assignments);
+
+        // merged metrics are the sum of the per-worker views
+        assert_eq!(rep4.merged.requests_completed, n_reqs as u64);
+        assert_eq!(rep4.merged.worker_stats.len(), 4);
+        assert_eq!(
+            rep4.merged.tokens_generated,
+            rep4.per_worker.iter().map(|m| m.tokens_generated).sum::<u64>()
+        );
+        assert_eq!(
+            rep4.merged.requests_completed,
+            rep4.per_worker.iter().map(|m| m.requests_completed).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn speculative_pool_matches_plain_greedy() {
+        // SpecEngine workers behind the router must reproduce the plain
+        // greedy fp32 outputs (token-exactness survives the fan-out)
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let make_reqs = || -> Vec<Request> {
+            [9usize, 17, 20, 33]
+                .iter()
+                .enumerate()
+                .map(|(i, &plen)| {
+                    let prompt: Vec<u32> =
+                        (0..plen).map(|j| ((i * 131 + j * 17) % 128) as u32).collect();
+                    Request::new(i as u64, prompt, 4, "fp32")
+                })
+                .collect()
+        };
+        let n_reqs = make_reqs().len();
+
+        let run = |spec: Option<SpecConfig>, n_workers: usize| {
+            let pool = serve_pool(
+                make,
+                PoolConfig {
+                    engine: EngineConfig { max_active: 2, greedy_chunking: true },
+                    n_workers,
+                    spec,
+                },
+            );
+            for r in make_reqs() {
+                pool.submit(r).unwrap();
+            }
+            let mut got: Vec<(u64, Vec<u32>)> = (0..n_reqs)
+                .map(|_| {
+                    let f = pool.results.recv().expect("pool produced a result");
+                    (f.id, f.generated)
+                })
+                .collect();
+            let report = pool.finish().unwrap();
+            assert!(report.errors.is_empty(), "{:?}", report.errors);
+            got.sort();
+            got
+        };
+
+        let want = run(None, 1);
+        let got = run(
+            Some(SpecConfig { draft_k: 2, max_active: 2, ..SpecConfig::default() }),
+            2,
+        );
+        assert_eq!(want, got, "speculative pool diverged from plain greedy");
     }
 }

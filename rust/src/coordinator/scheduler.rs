@@ -70,6 +70,8 @@ impl<'be> Engine<'be> {
 
     pub fn submit(&mut self, req: Request) {
         self.pending.push_back(req);
+        self.metrics
+            .note_queue_depth(self.pending.len() + self.active.len());
     }
 
     pub fn n_pending(&self) -> usize {
@@ -100,7 +102,10 @@ impl<'be> Engine<'be> {
             }
             let Some(slot) = self.pool.alloc() else { break };
             let req = self.pending.pop_front().unwrap();
-            let submitted = Instant::now();
+            // latency anchors at request creation, not admission: queue
+            // time (engine pending list, pool dispatcher backlog) is part
+            // of the user-visible TTFT
+            let submitted = req.submitted_at;
 
             let (chunks, remainder) = self.chunk_plan(req.prompt.len());
             let mut offset = 0usize;
@@ -258,8 +263,16 @@ impl<'be> Engine<'be> {
 
     /// One scheduler iteration: admit then decode.
     pub fn step(&mut self) -> Result<()> {
+        let depth = self.pending.len() + self.active.len();
+        self.metrics.note_queue_depth(depth);
+        let t0 = Instant::now();
         self.admit()?;
-        self.decode_step()
+        let r = self.decode_step();
+        if depth > 0 {
+            // only steps that had work count toward utilization
+            self.metrics.busy_s += t0.elapsed().as_secs_f64();
+        }
+        r
     }
 
     /// Drive until every submitted request completes.
@@ -348,6 +361,23 @@ mod tests {
             got
         };
         assert_eq!(run(1), run(8), "batching changed generated tokens");
+    }
+
+    #[test]
+    fn engine_tracks_queue_depth_and_busy_time() {
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let mut eng = Engine::new(&be, EngineConfig::default());
+        let reqs = requests(vocab, 4);
+        let n = reqs.len();
+        for r in reqs {
+            eng.submit(r);
+        }
+        assert_eq!(eng.metrics.queue_depth_peak, n as u64);
+        eng.run().unwrap();
+        assert!(eng.metrics.busy_s > 0.0, "busy time accumulated");
+        assert!(eng.metrics.utilization() > 0.0);
+        assert!(eng.metrics.utilization() <= 1.0 + 1e-9);
     }
 
     #[test]

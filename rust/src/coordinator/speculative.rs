@@ -138,18 +138,32 @@ impl<'be> SpecEngine<'be> {
         Self::with_drafter(be, be, cfg)
     }
 
-    /// Pair any drafter backend with any verifier backend.  Both must
-    /// serve the same model configuration: the drafter slot is seeded by
-    /// copying the verifier's exact recurrent state.
+    /// Pair any drafter backend with any verifier backend.  The drafter
+    /// need **not** serve the verifier's exact configuration (a distilled
+    /// drafter has its own weights, and may even partition heads
+    /// differently); what state seeding requires is that the flat
+    /// (conv, ssm) recurrent-state buffers have the same lengths, and
+    /// token exchange requires a shared vocabulary.  Output correctness
+    /// never depends on the drafter — only the verifier commits tokens.
     pub fn with_drafter(
         drafter: &'be dyn InferenceBackend,
         verifier: &'be dyn InferenceBackend,
         cfg: SpecConfig,
     ) -> Self {
+        let state_shape = |c: &crate::config::ModelConfig| {
+            (c.conv_state_len(), c.ssm_state_len())
+        };
         assert_eq!(
-            drafter.cfg(),
-            verifier.cfg(),
-            "drafter and verifier must serve the same model (state seeding)"
+            state_shape(drafter.cfg()),
+            state_shape(verifier.cfg()),
+            "drafter and verifier must have the same state shape (conv, ssm \
+             buffer lengths) — the drafter slot is seeded by copying the \
+             verifier's recurrent state"
+        );
+        assert_eq!(
+            drafter.cfg().vocab_size,
+            verifier.cfg().vocab_size,
+            "drafter and verifier must share a vocabulary"
         );
         assert!(
             drafter.variants().contains(&cfg.draft_variant),
@@ -201,6 +215,8 @@ impl<'be> SpecEngine<'be> {
 
     pub fn submit(&mut self, req: Request) {
         self.pending.push_back(req);
+        self.metrics
+            .note_queue_depth(self.pending.len() + self.active.len());
     }
 
     pub fn n_pending(&self) -> usize {
@@ -250,7 +266,8 @@ impl<'be> SpecEngine<'be> {
             }
             let req = self.pending.pop_front().unwrap();
             assert!(!req.prompt.is_empty(), "empty prompt");
-            let submitted = Instant::now();
+            // latency anchors at request creation (see Engine::admit)
+            let submitted = req.submitted_at;
             let verify_slot = self.pool.alloc().expect("capacity checked");
             let draft_slot = self.pool.alloc().expect("capacity checked");
 
@@ -480,6 +497,9 @@ impl<'be> SpecEngine<'be> {
 
     /// One scheduler iteration: admit, then one round per active request.
     pub fn step(&mut self) -> Result<()> {
+        let depth = self.pending.len() + self.active.len();
+        self.metrics.note_queue_depth(depth);
+        let t0 = Instant::now();
         self.admit()?;
         let mut i = 0;
         while i < self.active.len() {
@@ -490,6 +510,9 @@ impl<'be> SpecEngine<'be> {
             } else {
                 i += 1;
             }
+        }
+        if depth > 0 {
+            self.metrics.busy_s += t0.elapsed().as_secs_f64();
         }
         Ok(())
     }
@@ -652,16 +675,110 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "same model")]
+    #[should_panic(expected = "state shape")]
     fn mismatched_backends_rejected() {
         // different weights are tolerated (only the verifier commits), but
-        // a different *architecture* breaks state seeding and must panic
+        // a different state *shape* breaks state seeding and must panic
         let mut cfg = crate::config::ModelConfig::tiny();
         cfg.n_layer = 2;
         cfg.name = "mamba2-tiny-halved".into();
         let small = NativeBackend::new(crate::model::ModelWeights::random(&cfg, 1));
         let full = be();
         let _ = SpecEngine::with_drafter(&small, &full, SpecConfig::default());
+    }
+
+    #[test]
+    fn distinct_cfg_drafter_accepted_when_state_shapes_match() {
+        // the ROADMAP "distilled drafter" shape: a drafter whose config is
+        // *not* equal to the verifier's (different name, different weights)
+        // but whose flat state buffers match — construction must succeed
+        // and the output must stay token-exact with plain greedy fp32
+        let verifier = be();
+        let mut cfg = crate::config::ModelConfig::tiny();
+        cfg.name = "mamba2-tiny-distilled".into();
+        let drafter =
+            NativeBackend::new(crate::model::ModelWeights::random(&cfg, 11));
+        assert_ne!(drafter.cfg(), verifier.cfg(), "configs differ by metadata");
+
+        // small trace: a fresh-weights drafter accepts rarely, so every
+        // committed token costs a verify window — keep the budget tight
+        let vocab = verifier.cfg().vocab_size;
+        let reqs: Vec<Request> = [24usize, 33]
+            .iter()
+            .enumerate()
+            .map(|(i, &plen)| {
+                let prompt: Vec<u32> =
+                    (0..plen).map(|j| ((i * 131 + j * 17) % vocab) as u32).collect();
+                Request::new(i as u64, prompt, 5, "fp32")
+            })
+            .collect();
+        let mut base = Engine::new(
+            &verifier,
+            EngineConfig { max_active: 1, greedy_chunking: true },
+        );
+        for r in reqs.clone() {
+            base.submit(r);
+        }
+        base.run().unwrap();
+        let mut want: Vec<(u64, Vec<u32>)> =
+            base.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+        want.sort();
+
+        let mut spec = SpecEngine::with_drafter(
+            &drafter,
+            &verifier,
+            SpecConfig { draft_k: 3, max_active: 2, ..SpecConfig::default() },
+        );
+        for r in reqs {
+            spec.submit(r);
+        }
+        spec.run().unwrap();
+        let mut got: Vec<(u64, Vec<u32>)> =
+            spec.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+        got.sort();
+        assert_eq!(want, got, "distinct-cfg drafter diverged from greedy fp32");
+    }
+
+    #[test]
+    fn repartitioned_head_drafter_stays_token_exact() {
+        // a drafter that partitions the same d_inner into twice as many
+        // half-size heads: d_in_proj and every weight shape differ from the
+        // verifier's, but conv_dim and the flat ssm volume
+        // (nheads * headdim = d_inner) are identical, so state seeding is
+        // legal.  Acceptance may be poor; the committed tokens may not be.
+        let verifier = be();
+        let mut cfg = crate::config::ModelConfig::tiny();
+        cfg.headdim /= 2;
+        cfg.name = "mamba2-tiny-headdim-half".into();
+        let drafter =
+            NativeBackend::new(crate::model::ModelWeights::random(&cfg, 12));
+        let shape = |c: &crate::config::ModelConfig| {
+            (c.conv_state_len(), c.ssm_state_len())
+        };
+        assert_eq!(shape(drafter.cfg()), shape(verifier.cfg()));
+        assert_ne!(drafter.cfg().nheads(), verifier.cfg().nheads());
+
+        let vocab = verifier.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..33).map(|j| ((j * 13) % vocab) as u32).collect();
+        let mut base = Engine::new(
+            &verifier,
+            EngineConfig { max_active: 1, greedy_chunking: true },
+        );
+        base.submit(Request::new(0, prompt.clone(), 6, "fp32"));
+        base.run().unwrap();
+        let want = base.finished[0].generated.clone();
+
+        let mut spec = SpecEngine::with_drafter(
+            &drafter,
+            &verifier,
+            SpecConfig { draft_k: 2, max_active: 1, ..SpecConfig::default() },
+        );
+        spec.submit(Request::new(0, prompt, 6, "fp32"));
+        spec.run().unwrap();
+        assert_eq!(
+            spec.finished[0].generated, want,
+            "repartitioned-head drafter diverged from greedy fp32"
+        );
     }
 
     /// Gated end-to-end coverage on the AOT artifacts: a native drafter

@@ -54,8 +54,8 @@ pub struct StatePool {
 
 impl StatePool {
     pub fn new(cfg: &ModelConfig, capacity: usize) -> Self {
-        let conv_len = cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim();
-        let ssm_len = cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state;
+        let conv_len = cfg.conv_state_len();
+        let ssm_len = cfg.ssm_state_len();
         let slots = (0..capacity)
             .map(|_| StateSlot { conv: vec![0.0; conv_len], ssm: vec![0.0; ssm_len] })
             .collect();

@@ -21,7 +21,10 @@
 //!   ([`baseline`]), the synthetic evaluation harness ([`eval`]), and the
 //!   table/figure report generators ([`report`]).
 //!
-//! Two serving modes share those artifacts.  The batched greedy path
+//! Two serving modes share those artifacts, and both fan out to N worker
+//! threads — one backend each, behind the capacity-aware router — via
+//! [`coordinator::router::serve_pool`] (`serve --workers N`).  The batched
+//! greedy path
 //! ([`coordinator::scheduler::Engine`]) packs active sequences into the
 //! AOT decode buckets.  The speculative path
 //! ([`coordinator::speculative::SpecEngine`], `serve --speculate K`)

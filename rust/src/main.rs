@@ -16,7 +16,9 @@ use anyhow::{bail, Result};
 
 use fastmamba::backend::{self, BackendKind, InferenceBackend, NativeBackend};
 use fastmamba::config::{AcceleratorConfig, ModelConfig};
-use fastmamba::coordinator::{Engine, EngineConfig, Request, SpecConfig, SpecEngine};
+use fastmamba::coordinator::{
+    serve_pool, Engine, EngineConfig, PoolConfig, Request, SpecConfig, SpecEngine,
+};
 use fastmamba::model::weights::{artifacts_dir, Manifest};
 use fastmamba::sim::PerfModel;
 use fastmamba::util::cli::Args;
@@ -37,7 +39,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: fastmamba <serve|report|simulate|info> [--flags]\n\
                  \n  serve    --requests N --max-new N --variant fp32|fastmamba --prompt-len N\
-                 \n           --backend auto|pjrt|native --max-active N\
+                 \n           --backend auto|pjrt|native --max-active N --workers N\
                  \n           --speculate K [--draft-backend native|pjrt]\
                  \n  report   --id all|table1|table2|table3|table4|table_spec|fig1|fig3|fig9|fig10\
                  \n  simulate --model mamba2-130m|mamba2-2.7b --seq-len N --batch N\
@@ -48,21 +50,23 @@ fn main() -> Result<()> {
     }
 }
 
-fn load_backend(args: &Args) -> Result<Box<dyn InferenceBackend>> {
+fn backend_kind(args: &Args) -> Result<BackendKind> {
     let name = args.get_or("backend", "auto");
     let Some(kind) = BackendKind::from_name(&name) else {
         bail!("unknown backend {name} (expected auto|pjrt|native)");
     };
-    backend::load(kind)
+    Ok(kind)
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let be = load_backend(args)?;
+    let kind = backend_kind(args)?;
+    let be = backend::load(kind)?;
     let n_requests = args.usize_or("requests", 8);
     let max_new = args.usize_or("max-new", 16);
     let prompt_len = args.usize_or("prompt-len", 48);
     let variant = args.get_or("variant", "fp32");
     let speculate = args.usize_or("speculate", 0);
+    let workers = args.usize_or("workers", 1);
     // both engine paths honor --max-active (speculative requests hold two
     // state slots each, hence the lower default)
     let max_active = args.usize_or("max-active", if speculate > 0 { 8 } else { 64 });
@@ -88,7 +92,61 @@ fn serve(args: &Args) -> Result<()> {
         be.prefill_buckets(),
         be.decode_batches()
     );
-    let finished = if speculate > 0 {
+    let finished = if workers > 1 {
+        // multi-worker pool: every worker builds its own backend from the
+        // factory and runs its own engine behind the capacity-aware router
+        // (speculative workers draft and verify on their own backend, so
+        // --draft-backend does not apply here)
+        if speculate > 0 && args.get("draft-backend").is_some() {
+            eprintln!(
+                "note: --draft-backend is ignored with --workers > 1 \
+                 (each worker drafts on its own backend)"
+            );
+        }
+        drop(be); // workers own their backends; the probe served request gen
+        let pool = serve_pool(
+            move || backend::load(kind),
+            PoolConfig {
+                engine: EngineConfig { max_active, greedy_chunking: true },
+                n_workers: workers,
+                spec: (speculate > 0).then(|| SpecConfig {
+                    draft_k: speculate,
+                    draft_variant: args.get_or("draft-variant", "fastmamba"),
+                    verify_variant: variant.clone(),
+                    max_active,
+                }),
+            },
+        );
+        for r in requests {
+            pool.submit(r)?;
+        }
+        let mut finished = Vec::with_capacity(n_requests);
+        for _ in 0..n_requests {
+            match pool.results.recv() {
+                Ok(f) => finished.push(f),
+                // pool collapsed (all workers dead): stop reading so
+                // finish() can surface the per-worker failure causes
+                Err(_) => break,
+            }
+        }
+        let report = pool.finish()?;
+        for e in &report.errors {
+            eprintln!("worker error: {e}");
+        }
+        println!("{}", report.merged.summary());
+        println!(
+            "pool: workers={} assignments={:?} load_peak={:?} (capacity {}/worker)",
+            workers, report.assignments, report.load_peak, report.capacity_per_worker
+        );
+        if finished.len() < n_requests {
+            bail!(
+                "pool completed {}/{} requests (worker errors above)",
+                finished.len(),
+                n_requests
+            );
+        }
+        finished
+    } else if speculate > 0 {
         // speculative mode: quantized drafter, `--variant` as the verifier.
         // The drafter is its own backend ("native": in-process golden
         // model; "pjrt": the AOT decode executable — shared with the

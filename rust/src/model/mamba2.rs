@@ -75,16 +75,15 @@ pub struct DecodeState {
 impl DecodeState {
     pub fn zeros(cfg: &ModelConfig) -> Self {
         Self {
-            conv: vec![0.0; cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()],
-            ssm: vec![0.0; cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state],
+            conv: vec![0.0; cfg.conv_state_len()],
+            ssm: vec![0.0; cfg.ssm_state_len()],
         }
     }
 
     /// Bytes per request — the O(1) admission cost Mamba serving enjoys
     /// instead of a length-proportional KV cache.
     pub fn nbytes(cfg: &ModelConfig) -> usize {
-        4 * (cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()
-            + cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state)
+        4 * (cfg.conv_state_len() + cfg.ssm_state_len())
     }
 }
 
@@ -173,6 +172,42 @@ impl Mamba2 {
                     hadamard::hadamard_linear(x, rows, &pw, None, out);
                 }
             },
+        }
+    }
+
+    /// Linear over a batch of *independent* rows (one per sequence).  The
+    /// quantized variants calibrate activation scales per call (absmax over
+    /// every row passed in), so batching rows would couple sequences and
+    /// change their outputs; they run one row per call instead, keeping
+    /// batch-major decode token-exact with single-sequence stepping.  Fp32
+    /// has no calibration, so its rows batch into a single matmul.
+    #[allow(clippy::too_many_arguments)]
+    fn linear_rows(
+        &self,
+        x: &[f32],
+        rows: usize,
+        w: &[f32],
+        q: usize,
+        d: usize,
+        variant: Variant,
+        prepared: Option<&PreparedWeight>,
+        out: &mut [f32],
+    ) {
+        if variant == Variant::Fp32 || rows == 1 {
+            self.linear(x, rows, w, q, d, variant, prepared, out);
+        } else {
+            for r in 0..rows {
+                self.linear(
+                    &x[r * d..(r + 1) * d],
+                    1,
+                    w,
+                    q,
+                    d,
+                    variant,
+                    prepared,
+                    &mut out[r * q..(r + 1) * q],
+                );
+            }
         }
     }
 
@@ -412,34 +447,74 @@ impl Mamba2 {
     // -- decode ---------------------------------------------------------------
 
     /// One recurrent step.  Returns logits `(vocab,)`; `state` is updated.
+    /// (A batch-1 view of [`Mamba2::decode_batch`] — one code path.)
     pub fn decode_step(
         &self,
         token: u32,
         state: &mut DecodeState,
         variant: Variant,
     ) -> Vec<f32> {
+        self.decode_batch(&[token], variant, &mut state.conv, &mut state.ssm)
+    }
+
+    /// One recurrent step over a batch of independent sequences, batch-major:
+    /// `conv` is `(B, n_layer, d_conv-1, conv_dim)` and `ssm` is
+    /// `(B, n_layer, nheads, headdim, d_state)`, both advanced **in place**.
+    /// Returns logits `(B, vocab)`.
+    ///
+    /// The whole batch makes one pass through the layer stack (each layer's
+    /// weights are streamed once per step instead of once per sequence — the
+    /// weight-reuse the paper's batched decode depends on), and no
+    /// per-sequence state is copied out and back.  Token-exact with B
+    /// separate [`Mamba2::decode_step`] calls: the fp32 linears batch rows
+    /// into one matmul (per-row accumulation is unchanged), while the
+    /// quantized variants keep per-sequence activation scales (`linear_rows`).
+    pub fn decode_batch(
+        &self,
+        tokens: &[u32],
+        variant: Variant,
+        conv: &mut [f32],
+        ssm: &mut [f32],
+    ) -> Vec<f32> {
         let cfg = self.cfg().clone();
+        let b = tokens.len();
         let d = cfg.d_model;
-        let mut x =
-            self.w.embed[token as usize * d..(token as usize + 1) * d].to_vec();
-        for (li, lw) in self.w.layers.iter().enumerate() {
-            self.block_decode(li, lw, &mut x, variant, state);
+        let conv_len = cfg.conv_state_len();
+        let ssm_len = cfg.ssm_state_len();
+        assert_eq!(conv.len(), b * conv_len, "conv is not (B, n_layer, K-1, conv_dim)");
+        assert_eq!(ssm.len(), b * ssm_len, "ssm is not (B, n_layer, nheads, P, N)");
+
+        let mut x = vec![0.0f32; b * d];
+        for (r, tok) in tokens.iter().enumerate() {
+            x[r * d..(r + 1) * d].copy_from_slice(
+                &self.w.embed[*tok as usize * d..(*tok as usize + 1) * d]);
         }
-        nonlinear::rmsnorm(&mut x, &self.w.norm_f_w, 1e-5);
-        let mut logits = vec![0.0f32; cfg.vocab_size];
+        for (li, lw) in self.w.layers.iter().enumerate() {
+            self.block_decode_batch(li, lw, &mut x, b, variant, conv, ssm,
+                                    conv_len, ssm_len);
+        }
+        for r in 0..b {
+            nonlinear::rmsnorm(&mut x[r * d..(r + 1) * d], &self.w.norm_f_w, 1e-5);
+        }
+        let mut logits = vec![0.0f32; b * cfg.vocab_size];
         let pw = self.prepared.as_ref().map(|p| &p.lm_head);
-        self.linear(&x, 1, &self.w.embed, cfg.vocab_size, d, variant,
-                    if variant.hadamard() { pw } else { None }, &mut logits);
+        self.linear_rows(&x, b, &self.w.embed, cfg.vocab_size, d, variant,
+                         if variant.hadamard() { pw } else { None }, &mut logits);
         logits
     }
 
-    fn block_decode(
+    #[allow(clippy::too_many_arguments)]
+    fn block_decode_batch(
         &self,
         li: usize,
         lw: &LayerWeights,
         x: &mut [f32],
+        b: usize,
         variant: Variant,
-        state: &mut DecodeState,
+        conv: &mut [f32],
+        ssm: &mut [f32],
+        conv_len: usize,
+        ssm_len: usize,
     ) {
         let cfg = self.cfg();
         let d = cfg.d_model;
@@ -452,85 +527,108 @@ impl Mamba2 {
         let d_in_proj = cfg.d_in_proj();
 
         let mut xn = x.to_vec();
-        nonlinear::rmsnorm(&mut xn, &lw.norm_w, 1e-5);
+        for r in 0..b {
+            nonlinear::rmsnorm(&mut xn[r * d..(r + 1) * d], &lw.norm_w, 1e-5);
+        }
 
-        let mut zxbcdt = vec![0.0f32; d_in_proj];
+        let mut zxbcdt = vec![0.0f32; b * d_in_proj];
         let pw = self.prepared.as_ref().map(|p| &p.in_proj[li]);
-        self.linear(&xn, 1, &lw.in_proj_w, d_in_proj, d, variant,
-                    if variant.hadamard() { pw } else { None }, &mut zxbcdt);
+        self.linear_rows(&xn, b, &lw.in_proj_w, d_in_proj, d, variant,
+                         if variant.hadamard() { pw } else { None }, &mut zxbcdt);
 
-        let z = &zxbcdt[..d_inner];
-        let xbc_new = &zxbcdt[d_inner..d_inner + conv_dim];
-        let dt_raw = &zxbcdt[d_inner + conv_dim..];
+        // conv taps are sequence-invariant: quantize them (FastMamba) once
+        // per layer per step, not once per sequence
+        let conv_w_q: Option<Vec<f32>> = (variant == Variant::FastMamba).then(|| {
+            let mut cw = lw.conv_w.clone();
+            pot::pot_fake_quant_grouped(&mut cw, k, 16);
+            cw
+        });
+        let conv_w: &[f32] = conv_w_q.as_deref().unwrap_or(&lw.conv_w);
 
-        // rolling conv window: state rows [0..k-2] ++ new row
-        let cs_off = li * (k - 1) * conv_dim;
-        let mut window = vec![0.0f32; k * conv_dim];
-        window[..(k - 1) * conv_dim]
-            .copy_from_slice(&state.conv[cs_off..cs_off + (k - 1) * conv_dim]);
-        window[(k - 1) * conv_dim..].copy_from_slice(xbc_new);
+        // conv window + SSM recurrence stay per-sequence (the recurrent state
+        // is independent per sequence, and FastMamba's PoT calibration is
+        // per-sequence by contract), writing straight into the batch-major
+        // buffers — no per-sequence state marshalling
+        let mut y_all = vec![0.0f32; b * d_inner];
+        for r in 0..b {
+            let row = &zxbcdt[r * d_in_proj..(r + 1) * d_in_proj];
+            let z = &row[..d_inner];
+            let xbc_new = &row[d_inner..d_inner + conv_dim];
+            let dt_raw = &row[d_inner + conv_dim..];
 
-        let mut conv_w = lw.conv_w.clone();
-        let mut window_in = window.clone();
-        if variant == Variant::FastMamba {
-            pot::pot_fake_quant_grouped(&mut conv_w, k, 16);
-            pot::pot_fake_quant_per_col(&mut window_in, k, conv_dim, 16);
-        }
-        let mut xbc = vec![0.0f32; conv_dim];
-        for c in 0..conv_dim {
-            let mut acc = lw.conv_b[c];
-            for tap in 0..k {
-                acc += conv_w[c * k + tap] * window_in[tap * conv_dim + c];
-            }
-            xbc[c] = nonlinear::silu(acc);
-        }
-        // advance state
-        state.conv[cs_off..cs_off + (k - 1) * conv_dim]
-            .copy_from_slice(&window[conv_dim..]);
+            // rolling conv window: state rows [0..k-2] ++ new row
+            let cs_off = r * conv_len + li * (k - 1) * conv_dim;
+            let mut window = vec![0.0f32; k * conv_dim];
+            window[..(k - 1) * conv_dim]
+                .copy_from_slice(&conv[cs_off..cs_off + (k - 1) * conv_dim]);
+            window[(k - 1) * conv_dim..].copy_from_slice(xbc_new);
 
-        let mut xh = xbc[..d_inner].to_vec();
-        let mut b_t = xbc[d_inner..d_inner + d_state].to_vec();
-        let mut c_t = xbc[d_inner + d_state..].to_vec();
-
-        let mut dt = vec![0.0f32; nheads];
-        let mut abar = vec![0.0f32; nheads];
-        for h in 0..nheads {
-            let dtv = self.softplus(dt_raw[h] + lw.dt_bias[h], variant);
-            dt[h] = dtv;
-            abar[h] = self.exp_neg(-lw.a_log[h].exp() * dtv, variant);
-        }
-
-        if variant == Variant::FastMamba {
-            pot::pot_fake_quant_grouped(&mut xh, headdim, 16); // per head
-            pot::pot_fake_quant(&mut b_t, 16);
-            pot::pot_fake_quant(&mut c_t, 16);
-            pot::pot_fake_quant(&mut dt, 16);
-            pot::pot_fake_quant(&mut abar, 16);
-        }
-
-        let ssm_off = li * nheads * headdim * d_state;
-        let mut y = vec![0.0f32; d_inner];
-        for h in 0..nheads {
-            for p in 0..headdim {
-                let xv = dt[h] * xh[h * headdim + p];
-                let hrow = &mut state.ssm[ssm_off + (h * headdim + p) * d_state
-                    ..ssm_off + (h * headdim + p + 1) * d_state];
-                let mut dot = 0.0f32;
-                for n in 0..d_state {
-                    let hv = abar[h] * hrow[n] + xv * b_t[n];
-                    hrow[n] = hv;
-                    dot += hv * c_t[n];
+            let window_q: Vec<f32>;
+            let window_in: &[f32] = if variant == Variant::FastMamba {
+                let mut wq = window.clone();
+                pot::pot_fake_quant_per_col(&mut wq, k, conv_dim, 16);
+                window_q = wq;
+                &window_q
+            } else {
+                &window
+            };
+            let mut xbc = vec![0.0f32; conv_dim];
+            for c in 0..conv_dim {
+                let mut acc = lw.conv_b[c];
+                for tap in 0..k {
+                    acc += conv_w[c * k + tap] * window_in[tap * conv_dim + c];
                 }
-                y[h * headdim + p] = dot + lw.d[h] * xh[h * headdim + p];
+                xbc[c] = nonlinear::silu(acc);
             }
+            // advance state (unquantized window rows, as in prefill)
+            conv[cs_off..cs_off + (k - 1) * conv_dim]
+                .copy_from_slice(&window[conv_dim..]);
+
+            let mut xh = xbc[..d_inner].to_vec();
+            let mut b_t = xbc[d_inner..d_inner + d_state].to_vec();
+            let mut c_t = xbc[d_inner + d_state..].to_vec();
+
+            let mut dt = vec![0.0f32; nheads];
+            let mut abar = vec![0.0f32; nheads];
+            for h in 0..nheads {
+                let dtv = self.softplus(dt_raw[h] + lw.dt_bias[h], variant);
+                dt[h] = dtv;
+                abar[h] = self.exp_neg(-lw.a_log[h].exp() * dtv, variant);
+            }
+
+            if variant == Variant::FastMamba {
+                pot::pot_fake_quant_grouped(&mut xh, headdim, 16); // per head
+                pot::pot_fake_quant(&mut b_t, 16);
+                pot::pot_fake_quant(&mut c_t, 16);
+                pot::pot_fake_quant(&mut dt, 16);
+                pot::pot_fake_quant(&mut abar, 16);
+            }
+
+            let ssm_off = r * ssm_len + li * nheads * headdim * d_state;
+            let y = &mut y_all[r * d_inner..(r + 1) * d_inner];
+            for h in 0..nheads {
+                for p in 0..headdim {
+                    let xv = dt[h] * xh[h * headdim + p];
+                    let hrow = &mut ssm[ssm_off + (h * headdim + p) * d_state
+                        ..ssm_off + (h * headdim + p + 1) * d_state];
+                    let mut dot = 0.0f32;
+                    for n in 0..d_state {
+                        let hv = abar[h] * hrow[n] + xv * b_t[n];
+                        hrow[n] = hv;
+                        dot += hv * c_t[n];
+                    }
+                    y[h * headdim + p] = dot + lw.d[h] * xh[h * headdim + p];
+                }
+            }
+
+            nonlinear::gated_rmsnorm(y, z, &lw.norm_g_w, 1e-5);
         }
 
-        nonlinear::gated_rmsnorm(&mut y, z, &lw.norm_g_w, 1e-5);
         let pw_out = self.prepared.as_ref().map(|p| &p.out_proj[li]);
-        let mut out = vec![0.0f32; d];
-        self.linear(&y, 1, &lw.out_proj_w, d, d_inner, variant,
-                    if variant.hadamard() { pw_out } else { None }, &mut out);
-        for i in 0..d {
+        let mut out = vec![0.0f32; b * d];
+        self.linear_rows(&y_all, b, &lw.out_proj_w, d, d_inner, variant,
+                         if variant.hadamard() { pw_out } else { None }, &mut out);
+        for i in 0..b * d {
             x[i] += out[i];
         }
     }
@@ -639,6 +737,45 @@ mod tests {
                 assert!((a - b).abs() < 1e-3, "t={i}");
             }
         }
+    }
+
+    #[test]
+    fn decode_batch_bit_identical_to_single_steps_all_variants() {
+        // the batch-major step must reproduce B independent decode_step
+        // calls bit-for-bit — logits AND advanced states — under every
+        // variant (quantized activation scales stay per-sequence)
+        let mut m = tiny_model();
+        m.prepare();
+        let cfg = m.w.cfg.clone();
+        let (cl, sl) = {
+            let s = DecodeState::zeros(&cfg);
+            (s.conv.len(), s.ssm.len())
+        };
+        for v in Variant::ALL {
+            let mut states: Vec<DecodeState> = Vec::new();
+            let mut toks: Vec<u32> = Vec::new();
+            for s in 0..3usize {
+                let t = toks_seed(10 + s as u64);
+                let (_, st) = m.prefill(&t, v);
+                states.push(st);
+                toks.push(t[t.len() - 1]);
+            }
+            let mut conv: Vec<f32> =
+                states.iter().flat_map(|s| s.conv.iter().copied()).collect();
+            let mut ssm: Vec<f32> =
+                states.iter().flat_map(|s| s.ssm.iter().copied()).collect();
+            let logits = m.decode_batch(&toks, v, &mut conv, &mut ssm);
+            for (i, st) in states.iter_mut().enumerate() {
+                let lg = m.decode_step(toks[i], st, v);
+                assert_eq!(lg, logits[i * 512..(i + 1) * 512], "{v:?} seq {i} logits");
+                assert_eq!(st.conv, conv[i * cl..(i + 1) * cl], "{v:?} seq {i} conv");
+                assert_eq!(st.ssm, ssm[i * sl..(i + 1) * sl], "{v:?} seq {i} ssm");
+            }
+        }
+    }
+
+    fn toks_seed(seed: u64) -> Vec<u32> {
+        toks(8, seed)
     }
 
     #[test]

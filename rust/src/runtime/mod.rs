@@ -173,8 +173,8 @@ impl Runtime {
     pub fn zero_state(&self) -> (Vec<f32>, Vec<f32>) {
         let cfg = &self.weights_host.cfg;
         (
-            vec![0.0; cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()],
-            vec![0.0; cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state],
+            vec![0.0; cfg.conv_state_len()],
+            vec![0.0; cfg.ssm_state_len()],
         )
     }
 
@@ -322,8 +322,8 @@ mod tests {
         let Some(rt) = runtime() else { return };
         let cfg = rt.weights_host.cfg.clone();
         let b = 4;
-        let conv = vec![0.0f32; b * cfg.n_layer * (cfg.d_conv - 1) * cfg.conv_dim()];
-        let ssm = vec![0.0f32; b * cfg.n_layer * cfg.nheads() * cfg.headdim * cfg.d_state];
+        let conv = vec![0.0f32; b * cfg.conv_state_len()];
+        let ssm = vec![0.0f32; b * cfg.ssm_state_len()];
         let out = rt.decode("fp32", b, &conv, &ssm, &[1, 2, 3, 4]).unwrap();
         assert_eq!(out.logits.len(), b * cfg.vocab_size);
         assert_eq!(out.conv_state.len(), conv.len());
