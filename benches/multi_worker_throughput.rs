@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
                 engine: EngineConfig { max_active, greedy_chunking: true },
                 n_workers,
                 spec: None,
+                cache: None,
             },
         );
         // warm up outside the timed window: one tiny request per worker

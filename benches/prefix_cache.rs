@@ -1,0 +1,187 @@
+//! Bench: SSM state-cache effectiveness on the two workloads it exists
+//! for — shared system prompts and multi-turn sessions.
+//!
+//! Because Mamba2 state is constant-size, a prompt-cache hit costs one
+//! O(state) snapshot copy instead of O(tokens) of KV memory; what this
+//! bench measures is the serving payoff: prefill tokens actually skipped
+//! and the resulting tok/s, cache on vs off.
+//!
+//! * **shared-prefix**: N requests sharing one long system prompt with
+//!   short unique tails.  Cache-on output is asserted bit-identical to
+//!   cache-off (prefix hits replay the identical chunk plan), and the
+//!   prefill-token reduction is asserted > 50%.
+//! * **sessions**: S chats x T turns, each turn replaying the whole
+//!   transcript plus fresh input; resumed turns skip the transcript.
+//!
+//! `--json PATH` writes a machine-readable record (uploaded as a CI
+//! artifact alongside `multi_worker_throughput`).
+//!
+//! Run: cargo bench --bench prefix_cache [-- --requests 24 --prefix-len 192 --json out.json]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fastmamba::backend::{self, BackendKind};
+use fastmamba::coordinator::{Engine, EngineConfig, Metrics, Request};
+use fastmamba::statecache::{CacheConfig, StateCache};
+use fastmamba::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_requests = args.usize_or("requests", 24);
+    let prefix_len = args.usize_or("prefix-len", 192);
+    let max_new = args.usize_or("max-new", 8);
+    let sessions = args.usize_or("sessions", 4);
+    let turns = args.usize_or("turns", 3);
+    let cache_mb = args.usize_or("state-cache-mb", 64);
+    let kind = BackendKind::from_name(&args.get_or("backend", "native"))
+        .expect("--backend auto|pjrt|native");
+
+    let be = backend::load(kind)?;
+    let vocab = be.cfg().vocab_size as u32;
+    println!(
+        "backend: {} (requests {n_requests}, prefix {prefix_len}, cache {cache_mb} MiB)",
+        be.name()
+    );
+
+    // ---- workload A: shared system prompt ---------------------------------
+    let sys: Vec<u32> = (0..prefix_len as u32).map(|j| (j * 7 + 3) % vocab).collect();
+    let make_reqs = || -> Vec<Request> {
+        (0..n_requests)
+            .map(|i| {
+                let mut prompt = sys.clone();
+                prompt.extend(
+                    (0..8 + 3 * (i % 9) as u32).map(|j| (i as u32 * 131 + j * 17) % vocab),
+                );
+                Request::new(i as u64, prompt, max_new, "fp32")
+            })
+            .collect()
+    };
+    let run = |cache: Option<Arc<StateCache>>| -> (Vec<(u64, Vec<u32>)>, Metrics, f64) {
+        let mut eng = Engine::new(be.as_ref(), EngineConfig::default());
+        if let Some(c) = cache {
+            eng = eng.with_cache(c);
+        }
+        let t0 = Instant::now();
+        for r in make_reqs() {
+            eng.submit(r);
+        }
+        eng.run().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let mut got: Vec<(u64, Vec<u32>)> =
+            eng.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+        got.sort();
+        (got, eng.metrics, wall)
+    };
+
+    let (out_off, m_off, wall_off) = run(None);
+    let cache = Arc::new(StateCache::new(CacheConfig::with_mb(cache_mb)));
+    let (out_on, m_on, wall_on) = run(Some(Arc::clone(&cache)));
+    assert_eq!(out_off, out_on, "state cache changed generated tokens");
+
+    let total_prompt = m_on.prompt_tokens;
+    let saved = m_on.cache_tokens_saved;
+    let reduction = saved as f64 / total_prompt.max(1) as f64;
+    let gen_toks: u64 = out_on.iter().map(|(_, g)| g.len() as u64).sum();
+    let tok_s_off = gen_toks as f64 / wall_off;
+    let tok_s_on = gen_toks as f64 / wall_on;
+    println!("shared-prefix cache off: {}", m_off.summary());
+    println!("shared-prefix cache on : {}", m_on.summary());
+    println!(
+        "shared-prefix: {saved}/{total_prompt} prefill tokens skipped \
+         ({:.1}% reduction), {tok_s_off:.1} -> {tok_s_on:.1} gen tok/s",
+        reduction * 100.0
+    );
+    assert!(
+        m_on.cache_hits > 0 && m_on.summary().contains("cache_hit="),
+        "nonzero hit rate must be reported: {}",
+        m_on.summary()
+    );
+    assert!(
+        reduction > 0.5,
+        "shared-system-prompt workload must skip >50% of prefill tokens, got {:.1}%",
+        reduction * 100.0
+    );
+
+    // ---- workload B: multi-turn sessions ----------------------------------
+    let run_sessions = |cache: Option<Arc<StateCache>>| -> (Metrics, f64) {
+        let mut eng = Engine::new(be.as_ref(), EngineConfig::default());
+        if let Some(c) = cache {
+            eng = eng.with_cache(c);
+        }
+        let mut history: Vec<Vec<u32>> = (0..sessions)
+            .map(|s| {
+                (0..48 + 8 * (s as u32 % 4)).map(|j| (s as u32 * 211 + j * 13 + 1) % vocab).collect()
+            })
+            .collect();
+        let t0 = Instant::now();
+        for turn in 0..turns {
+            for (sid, h) in history.iter().enumerate() {
+                eng.submit(
+                    Request::new((turn * sessions + sid) as u64, h.clone(), max_new, "fp32")
+                        .with_session(sid as u64),
+                );
+            }
+            eng.run().unwrap();
+            for f in eng.finished.drain(..) {
+                let sid = (f.id as usize) % sessions;
+                history[sid].extend_from_slice(&f.generated);
+                let t = history[sid].len() as u32;
+                history[sid].extend((0..16u32).map(|j| (t * 31 + j * 13) % vocab));
+            }
+        }
+        (eng.metrics, t0.elapsed().as_secs_f64())
+    };
+
+    let (sm_off, swall_off) = run_sessions(None);
+    let scache = Arc::new(StateCache::new(CacheConfig::with_mb(cache_mb)));
+    let (sm_on, swall_on) = run_sessions(Some(Arc::clone(&scache)));
+    let s_reduction = sm_on.cache_tokens_saved as f64 / sm_on.prompt_tokens.max(1) as f64;
+    println!("sessions cache off: {}", sm_off.summary());
+    println!("sessions cache on : {}", sm_on.summary());
+    println!(
+        "sessions ({sessions} x {turns} turns): {}/{} prompt tokens skipped \
+         ({:.1}% reduction), wall {swall_off:.3}s -> {swall_on:.3}s",
+        sm_on.cache_tokens_saved,
+        sm_on.prompt_tokens,
+        s_reduction * 100.0
+    );
+    assert!(
+        sm_on.cache_hits >= (sessions * (turns - 1)) as u64,
+        "every resumed turn must hit the session cache: {}",
+        sm_on.summary()
+    );
+
+    println!("cache: {}", cache.stats().summary());
+    if let Some(path) = args.get("json") {
+        let json = format!(
+            "{{\"bench\":\"prefix_cache\",\"requests\":{n_requests},\
+             \"prefix_len\":{prefix_len},\"max_new\":{max_new},\
+             \"shared_prefix\":{{\"prompt_tokens\":{},\"tokens_saved\":{},\
+             \"reduction\":{:.4},\"hits\":{},\"misses\":{},\
+             \"wall_s_off\":{:.6},\"wall_s_on\":{:.6},\
+             \"tok_per_s_off\":{:.2},\"tok_per_s_on\":{:.2}}},\
+             \"sessions\":{{\"sessions\":{sessions},\"turns\":{turns},\
+             \"prompt_tokens\":{},\"tokens_saved\":{},\"reduction\":{:.4},\
+             \"hits\":{},\"wall_s_off\":{:.6},\"wall_s_on\":{:.6}}}}}\n",
+            total_prompt,
+            saved,
+            reduction,
+            m_on.cache_hits,
+            m_on.cache_misses,
+            wall_off,
+            wall_on,
+            tok_s_off,
+            tok_s_on,
+            sm_on.prompt_tokens,
+            sm_on.cache_tokens_saved,
+            s_reduction,
+            sm_on.cache_hits,
+            swall_off,
+            swall_on,
+        );
+        std::fs::write(path, json)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -7,13 +7,24 @@
 //! With `--workers N` (N > 1) the same trace additionally runs through the
 //! multi-worker pool (`serve_pool`) and the outputs are asserted
 //! token-identical to the single-engine run — worker fan-out changes
-//! throughput, never tokens.
+//! throughput, never tokens.  With `--state-cache-mb N` the pool workers
+//! share one SSM state cache (prefix hits are bit-exact, so the equality
+//! assertion still holds).
 //!
-//! Run: cargo run --release --example serve_requests [-- --requests 24 --backend native --workers 4]
+//! With `--sessions S --turns T` (T > 1) a multi-turn chat scenario runs
+//! on top: S concurrent sessions, each turn replaying the whole transcript
+//! plus fresh user tokens.  Every resumed turn must hit the session cache
+//! and skip its entire history prefill — the O(state) alternative to
+//! O(tokens) KV prompt caching.
+//!
+//! Run: cargo run --release --example serve_requests [-- --requests 24 --backend native --workers 4 --sessions 4 --turns 3 --state-cache-mb 64]
+
+use std::sync::Arc;
 
 use fastmamba::backend::{self, BackendKind};
 use fastmamba::coordinator::{serve_pool, Engine, EngineConfig, PoolConfig, Request};
 use fastmamba::eval::corpus_for;
+use fastmamba::statecache::{CacheConfig, StateCache};
 use fastmamba::util::cli::Args;
 use fastmamba::util::rng::Rng;
 
@@ -23,6 +34,9 @@ fn main() -> anyhow::Result<()> {
     let max_new = args.usize_or("max-new", 12);
     let max_active = args.usize_or("max-active", 16);
     let workers = args.usize_or("workers", 1);
+    let sessions = args.usize_or("sessions", 4);
+    let turns = args.usize_or("turns", 3);
+    let cache_mb = args.usize_or("state-cache-mb", 64);
 
     let kind = BackendKind::from_name(&args.get_or("backend", "auto"))
         .expect("--backend auto|pjrt|native");
@@ -62,13 +76,17 @@ fn main() -> anyhow::Result<()> {
         }
 
         if workers > 1 {
-            // the same trace through the worker pool: token-identical
+            // the same trace through the worker pool: token-identical even
+            // with a shared state cache (prefix hits are bit-exact)
+            let pool_cache = (cache_mb > 0)
+                .then(|| Arc::new(StateCache::new(CacheConfig::with_mb(cache_mb))));
             let pool = serve_pool(
                 move || backend::load(kind),
                 PoolConfig {
                     engine: EngineConfig { max_active, greedy_chunking: true },
                     n_workers: workers,
                     spec: None,
+                    cache: pool_cache.clone(),
                 },
             );
             let mut rng = Rng::new(11);
@@ -97,7 +115,65 @@ fn main() -> anyhow::Result<()> {
                  with the single engine",
                 report.assignments, report.load_peak
             );
+            if let Some(c) = &pool_cache {
+                println!("[{variant}] pool state cache: {}", c.stats().summary());
+            }
         }
+    }
+
+    if sessions > 0 && turns > 1 && cache_mb > 0 {
+        // multi-turn session mode: every turn after the first replays the
+        // whole transcript and must resume from the session cache instead
+        // of re-prefilling it
+        let cache = Arc::new(StateCache::new(CacheConfig::with_mb(cache_mb)));
+        let mut engine = Engine::new(
+            be.as_ref(),
+            EngineConfig { max_active, greedy_chunking: true },
+        )
+        .with_cache(Arc::clone(&cache));
+        let mut rng = Rng::new(23);
+        // per-session transcript so far (prompt of the next turn)
+        let mut history: Vec<Vec<u32>> = (0..sessions)
+            .map(|_| {
+                let plen = 48 + 8 * rng.below(5);
+                let start = rng.below(corpus.len() - plen - 1);
+                corpus[start..start + plen].iter().map(|t| t % vocab).collect()
+            })
+            .collect();
+        for turn in 0..turns {
+            for (sid, h) in history.iter().enumerate() {
+                let req = Request::new((turn * sessions + sid) as u64, h.clone(), max_new, "fp32")
+                    .with_session(sid as u64);
+                engine.submit(req);
+            }
+            engine.run()?;
+            let finished: Vec<_> = engine.finished.drain(..).collect();
+            for f in finished {
+                let sid = (f.id as usize) % sessions;
+                // next turn: transcript + the model's reply + new user input
+                let h = &mut history[sid];
+                h.extend_from_slice(&f.generated);
+                let start = rng.below(corpus.len() - 17);
+                h.extend(corpus[start..start + 16].iter().map(|t| t % vocab));
+            }
+        }
+        let m = &engine.metrics;
+        println!("sessions ({sessions} x {turns} turns): {}", m.summary());
+        println!("session state cache: {}", cache.stats().summary());
+        // every turn after the first resumes its session mid-transcript
+        assert!(
+            m.cache_hits >= (sessions * (turns - 1)) as u64,
+            "every resumed turn must hit the session cache: {}",
+            m.summary()
+        );
+        assert!(
+            m.cache_tokens_saved > 0,
+            "resumed turns must skip transcript prefill"
+        );
+        println!(
+            "session resume skipped {} of {} transcript prompt tokens",
+            m.cache_tokens_saved, m.prompt_tokens
+        );
     }
     println!("serve_requests OK");
     Ok(())

@@ -7,8 +7,10 @@
 //! (requests are packed and padded by load, so a batch-sensitive backend
 //! would make outputs depend on traffic), `forward_logits` must agree
 //! with prefill-then-decode chaining, the bucket lists must be sane (and
-//! include batch 1 — the admission path's remainder steps), and
-//! `zero_state` must match the model's state shapes.  Each `check_*`
+//! include batch 1 — the admission path's remainder steps), `zero_state`
+//! must match the model's state shapes, and carried state must fully
+//! determine continuation ([`check_state_reuse`] — the property the
+//! [`crate::statecache`] prefix cache banks on).  Each `check_*`
 //! function asserts one of those properties against any backend;
 //! [`run_all`] runs the lot.
 //!
@@ -222,6 +224,87 @@ pub fn check_batched_decode_matches_singles(be: &dyn InferenceBackend) {
     }
 }
 
+/// The state-reuse contract the `statecache` subsystem banks on:
+/// prefilling a prefix, carrying the returned (conv, ssm) state — even
+/// across unrelated interleaved calls — and then prefilling the remaining
+/// chunks must reproduce the continuous chained run **bit-exactly**, for
+/// every variant and every bucket-aligned split of the plan.  A backend
+/// with hidden per-sequence state (or per-call calibration leakage) would
+/// fail here, and a cached boundary snapshot plus suffix prefill would no
+/// longer equal the uncached computation.
+pub fn check_state_reuse(be: &dyn InferenceBackend) {
+    let vocab = be.cfg().vocab_size;
+    let buckets = be.prefill_buckets();
+    let smallest = buckets[0];
+    let l = 3 * smallest + 2;
+    let (chunks, rest) = full_bucket_plan(&buckets, l);
+    assert!(chunks.len() >= 2, "{}: split test needs >= 2 chunks", be.name());
+    for v in be.variants() {
+        let t = toks(l, vocab, 4);
+
+        // continuous run: capture every boundary state and all logits
+        let (mut conv, mut ssm) = be.zero_state();
+        let mut logits: Vec<f32> = Vec::with_capacity(l * vocab);
+        let mut boundaries: Vec<(usize, Vec<f32>, Vec<f32>)> = Vec::new();
+        let mut off = 0usize;
+        for &b in &chunks {
+            let out = be.prefill(&v, &t[off..off + b], &conv, &ssm).unwrap();
+            conv = out.conv_state;
+            ssm = out.ssm_state;
+            logits.extend(out.logits);
+            off += b;
+            boundaries.push((off, conv.clone(), ssm.clone()));
+        }
+        for i in off..off + rest {
+            let out = be.decode(&v, 1, &conv, &ssm, &t[i..i + 1]).unwrap();
+            conv = out.conv_state;
+            ssm = out.ssm_state;
+            logits.extend(out.logits);
+        }
+
+        // resume from every boundary snapshot
+        for (bi, (boundary, bconv, bssm)) in boundaries.iter().enumerate() {
+            // unrelated traffic between prefix and suffix: a backend with
+            // hidden per-sequence state would contaminate the resumption
+            let decoy = toks(smallest, vocab, 13 + bi);
+            let _ = be.prefill_fresh(&v, &decoy).unwrap();
+
+            let (mut rconv, mut rssm) = (bconv.clone(), bssm.clone());
+            let mut got: Vec<f32> = Vec::new();
+            let mut roff = *boundary;
+            for &b in &chunks[bi + 1..] {
+                let out = be.prefill(&v, &t[roff..roff + b], &rconv, &rssm).unwrap();
+                rconv = out.conv_state;
+                rssm = out.ssm_state;
+                got.extend(out.logits);
+                roff += b;
+            }
+            for i in roff..roff + rest {
+                let out = be.decode(&v, 1, &rconv, &rssm, &t[i..i + 1]).unwrap();
+                rconv = out.conv_state;
+                rssm = out.ssm_state;
+                got.extend(out.logits);
+            }
+            assert_eq!(
+                rconv, conv,
+                "{}: {v} split@{boundary}: conv state diverged from the continuous run",
+                be.name()
+            );
+            assert_eq!(
+                rssm, ssm,
+                "{}: {v} split@{boundary}: ssm state diverged from the continuous run",
+                be.name()
+            );
+            assert_eq!(
+                got.as_slice(),
+                &logits[boundary * vocab..],
+                "{}: {v} split@{boundary}: suffix logits diverged from the continuous run",
+                be.name()
+            );
+        }
+    }
+}
+
 /// `forward_logits` must chain with decode: prefilling a bucket and then
 /// decoding token-by-token yields the same per-position predictions as
 /// one `forward_logits` call over the whole sequence.
@@ -260,6 +343,7 @@ pub fn run_all(be: &dyn InferenceBackend) {
     check_prefill_chunking_equivalence(be);
     check_batched_decode_matches_singles(be);
     check_forward_logits_chaining(be);
+    check_state_reuse(be);
 }
 
 #[cfg(test)]
@@ -301,6 +385,11 @@ mod tests {
     #[test]
     fn native_forward_logits_chaining() {
         check_forward_logits_chaining(&be());
+    }
+
+    #[test]
+    fn native_state_reuse() {
+        check_state_reuse(&be());
     }
 
     #[test]

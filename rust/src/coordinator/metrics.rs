@@ -15,6 +15,10 @@ pub struct WorkerStat {
     pub queue_depth_peak: u64,
     /// busy-time fraction of the worker's wall clock, in [0, 1]
     pub utilization: f64,
+    /// admissions this worker seeded from the shared state cache
+    pub cache_hits: u64,
+    /// prompt tokens this worker skipped prefilling via cached state
+    pub cache_tokens_saved: u64,
 }
 
 #[derive(Debug, Default, Clone)]
@@ -38,8 +42,21 @@ pub struct Metrics {
     pub verify_calls: u64,
     /// speculative decoding: drafter state rollbacks (mid-round rejections)
     pub rollbacks: u64,
-    /// speculative decoding: extra drafter catch-up steps after full accepts
+    /// speculative decoding: extra drafter catch-up steps (after full
+    /// accepts, and replaying residual debt after a drafter re-seed)
     pub resync_steps: u64,
+    /// speculative decoding: drafter re-seeds from the verifier's exact
+    /// state at debt-consolidation points (bounds quantized-state drift)
+    pub drafter_reseeds: u64,
+    /// state cache: admissions seeded from a cached snapshot (longest
+    /// prefix or session resume)
+    pub cache_hits: u64,
+    /// state cache: admissions that probed the cache and found nothing
+    /// (only counted while a cache is attached)
+    pub cache_misses: u64,
+    /// state cache: prompt tokens whose prefill was skipped because a
+    /// cached snapshot already covered them
+    pub cache_tokens_saved: u64,
     /// per-request draft acceptance rate, pushed at retire time
     pub per_request_acceptance: Vec<f64>,
     pub ttft_s: Vec<f64>,
@@ -124,6 +141,16 @@ impl Metrics {
         Self::pct(&self.per_request_acceptance, 0.50)
     }
 
+    /// State-cache hit rate over admissions that probed the cache
+    /// (0.0 when no cache was attached).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let probes = self.cache_hits + self.cache_misses;
+        if probes == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / probes as f64
+    }
+
     /// Busy-time fraction of the wall clock.  For a single engine this is
     /// in [0, 1]; for a merged multi-worker view `busy_s` sums across
     /// workers, so the value approaches the worker count at full load.
@@ -159,6 +186,10 @@ impl Metrics {
         self.verify_calls += other.verify_calls;
         self.rollbacks += other.rollbacks;
         self.resync_steps += other.resync_steps;
+        self.drafter_reseeds += other.drafter_reseeds;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.cache_tokens_saved += other.cache_tokens_saved;
         self.per_request_acceptance
             .extend_from_slice(&other.per_request_acceptance);
         self.ttft_s.extend_from_slice(&other.ttft_s);
@@ -181,6 +212,15 @@ impl Metrics {
             format!("{:.1}%", self.acceptance_rate() * 100.0)
         } else {
             "n/a".to_string()
+        };
+        let cache = if self.cache_hits + self.cache_misses > 0 {
+            format!(
+                " cache_hit={:.0}% saved_toks={}",
+                self.cache_hit_rate() * 100.0,
+                self.cache_tokens_saved
+            )
+        } else {
+            String::new()
         };
         let workers = if self.worker_stats.is_empty() {
             String::new()
@@ -205,7 +245,7 @@ impl Metrics {
         format!(
             "requests={} prompt_toks={} gen_toks={} wall={:.3}s gen_tok/s={:.1} \
              ttft_p50={:.1}ms ttft_p95={:.1}ms lat_p50={:.1}ms lat_p95={:.1}ms \
-             prefill_chunks={} decode_steps={} pad_waste={:.1}% accept={} \
+             prefill_chunks={} decode_steps={} pad_waste={:.1}% accept={}{} \
              qdepth_peak={} util={:.0}%{}",
             self.requests_completed,
             self.prompt_tokens,
@@ -220,6 +260,7 @@ impl Metrics {
             self.decode_steps,
             self.padding_frac() * 100.0,
             accept,
+            cache,
             self.queue_depth_peak,
             self.utilization() * 100.0,
             workers,
@@ -305,12 +346,16 @@ mod tests {
                 tokens_generated: 30,
                 queue_depth_peak: 4,
                 utilization: 0.9,
+                cache_hits: 2,
+                cache_tokens_saved: 64,
             },
             WorkerStat {
                 requests_completed: 2,
                 tokens_generated: 20,
                 queue_depth_peak: 2,
                 utilization: 0.5,
+                cache_hits: 0,
+                cache_tokens_saved: 0,
             },
         ];
         let s = m.summary();
@@ -356,6 +401,33 @@ mod tests {
         // as long as either worker's own span
         assert!(m.wall_s() >= a.wall_s());
         assert!(m.wall_s() >= b.wall_s());
+    }
+
+    #[test]
+    fn cache_counters_merge_and_summary() {
+        let m = Metrics::default();
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        assert!(!m.summary().contains("cache_hit="), "no cache block before probes");
+
+        let mut a = Metrics::default();
+        a.cache_hits = 3;
+        a.cache_misses = 1;
+        a.cache_tokens_saved = 96;
+        let mut b = Metrics::default();
+        b.cache_hits = 1;
+        b.cache_misses = 3;
+        b.cache_tokens_saved = 32;
+
+        let mut m = Metrics::default();
+        m.merge(&a);
+        m.merge(&b);
+        assert_eq!(m.cache_hits, 4);
+        assert_eq!(m.cache_misses, 4);
+        assert_eq!(m.cache_tokens_saved, 128);
+        assert!((m.cache_hit_rate() - 0.5).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("cache_hit=50%"), "{s}");
+        assert!(s.contains("saved_toks=128"), "{s}");
     }
 
     #[test]

@@ -23,6 +23,15 @@
 //! Worker count changes throughput, never tokens — the fan-out is
 //! token-exact with a single worker.
 //!
+//! The constant-size state also makes **prompt caching** O(state) instead
+//! of O(tokens): both engines optionally attach a shared
+//! [`crate::statecache::StateCache`] (`Engine::with_cache`,
+//! `SpecEngine::with_cache`, [`PoolConfig::with_cache`] for the pool) that
+//! stores bucket-aligned prefix snapshots during admission and per-session
+//! end-of-turn states at retire ([`request::Request::session_id`]), so
+//! shared system prompts and multi-turn conversations skip their
+//! redundant prefill — bit-exact with the uncached path for prefix hits.
+//!
 //! The second serving mode is speculative: [`speculative::SpecEngine`]
 //! drives a draft-k / verify-1 loop in which the quantized `fastmamba`
 //! variant drafts candidate tokens with single-token decode steps (on any

@@ -12,6 +12,12 @@ pub struct Request {
     pub variant: String,
     /// optional stop token (generation halts when sampled)
     pub stop_token: Option<u32>,
+    /// optional conversation id for the state cache: on completion the
+    /// request's end-of-turn SSM state is stored under this id, and a
+    /// follow-up request carrying the same id whose prompt extends the
+    /// stored transcript resumes from that state with zero prefix
+    /// recompute (`statecache::StateCache::lookup_session`)
+    pub session_id: Option<u64>,
     /// when the request entered the system (set at construction) — the
     /// anchor for TTFT/latency, so queue time in a pool dispatcher or an
     /// engine's pending list counts toward the reported latency
@@ -26,8 +32,15 @@ impl Request {
             max_new_tokens,
             variant: variant.to_string(),
             stop_token: None,
+            session_id: None,
             submitted_at: Instant::now(),
         }
+    }
+
+    /// Tag the request as one turn of a multi-turn session.
+    pub fn with_session(mut self, session_id: u64) -> Self {
+        self.session_id = Some(session_id);
+        self
     }
 }
 
@@ -106,6 +119,9 @@ mod tests {
         assert_eq!(r.id, 7);
         assert_eq!(r.variant, "fastmamba");
         assert!(r.stop_token.is_none());
+        assert!(r.session_id.is_none());
+        let r = r.with_session(99);
+        assert_eq!(r.session_id, Some(99));
     }
 
     #[test]

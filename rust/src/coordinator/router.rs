@@ -27,6 +27,7 @@ use std::thread;
 use anyhow::{anyhow, Result};
 
 use crate::backend::InferenceBackend;
+use crate::statecache::StateCache;
 
 use super::metrics::{Metrics, WorkerStat};
 use super::request::{FinishedRequest, Request};
@@ -81,6 +82,11 @@ pub struct PoolConfig {
     /// and verifying on the worker's own backend) instead of the plain
     /// engine; `spec.max_active` then bounds the worker's concurrency
     pub spec: Option<SpecConfig>,
+    /// shared SSM state cache: every worker's engine attaches this same
+    /// `Arc`, so a prefix snapshot published by one worker's admission is
+    /// hit by every other worker (interior sharded locking — no
+    /// coordination through the dispatcher)
+    pub cache: Option<Arc<StateCache>>,
 }
 
 impl PoolConfig {
@@ -90,6 +96,12 @@ impl PoolConfig {
             Some(s) => s.max_active,
             None => self.engine.max_active,
         }
+    }
+
+    /// Attach a shared state cache to every worker.
+    pub fn with_cache(mut self, cache: Arc<StateCache>) -> Self {
+        self.cache = Some(cache);
+        self
     }
 }
 
@@ -291,8 +303,20 @@ where
         }
     };
     let mut engine = match &cfg.spec {
-        Some(sc) => WorkerEngine::Spec(SpecEngine::new(be.as_ref(), sc.clone())),
-        None => WorkerEngine::Plain(Engine::new(be.as_ref(), cfg.engine.clone())),
+        Some(sc) => {
+            let mut e = SpecEngine::new(be.as_ref(), sc.clone());
+            if let Some(c) = &cfg.cache {
+                e = e.with_cache(Arc::clone(c));
+            }
+            WorkerEngine::Spec(e)
+        }
+        None => {
+            let mut e = Engine::new(be.as_ref(), cfg.engine.clone());
+            if let Some(c) = &cfg.cache {
+                e = e.with_cache(Arc::clone(c));
+            }
+            WorkerEngine::Plain(e)
+        }
     };
     engine.metrics_mut().start();
     loop {
@@ -485,6 +509,8 @@ fn dispatch(
             tokens_generated: m.tokens_generated,
             queue_depth_peak: m.queue_depth_peak,
             utilization: m.utilization(),
+            cache_hits: m.cache_hits,
+            cache_tokens_saved: m.cache_tokens_saved,
         });
     }
     merged.worker_stats = stats;
@@ -560,7 +586,10 @@ pub fn serve_threaded<F>(make_backend: F, cfg: EngineConfig) -> ServePool
 where
     F: Fn() -> Result<Box<dyn InferenceBackend>> + Send + Sync + 'static,
 {
-    serve_pool(make_backend, PoolConfig { engine: cfg, n_workers: 1, spec: None })
+    serve_pool(
+        make_backend,
+        PoolConfig { engine: cfg, n_workers: 1, spec: None, cache: None },
+    )
 }
 
 #[cfg(test)]
@@ -682,6 +711,7 @@ mod tests {
                     engine: EngineConfig { max_active: 4, greedy_chunking: true },
                     n_workers,
                     spec: None,
+                    cache: None,
                 },
             );
             // rebuilt per run: Request::new stamps submitted_at, and reusing
@@ -735,6 +765,88 @@ mod tests {
     }
 
     #[test]
+    fn shared_system_prompt_stress_cache_is_bit_identical() {
+        use crate::model::Variant;
+        use crate::statecache::{CacheConfig, StateCache};
+        // 32 mixed-length requests sharing a 33-token system prompt,
+        // cycling through ALL five variants, over 4 workers: the shared
+        // state cache must change prefill work only — the pool's output
+        // must be bit-identical with the cache off
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let make_reqs = || -> Vec<Request> {
+            let sys: Vec<u32> = (0..33).map(|j| ((j * 7 + 5) % 128) as u32).collect();
+            (0..32usize)
+                .map(|i| {
+                    let mut prompt = sys.clone();
+                    prompt.extend((0..1 + (i % 11)).map(|j| ((i * 131 + j * 17) % 128) as u32));
+                    let variant = Variant::ALL[i % 5].name();
+                    Request::new(i as u64, prompt, 2 + (i % 4), variant)
+                })
+                .collect()
+        };
+        let n_reqs = make_reqs().len();
+
+        let run = |cache: Option<Arc<StateCache>>| -> (Vec<(u64, Vec<u32>)>, PoolReport) {
+            let pool = serve_pool(
+                make,
+                PoolConfig {
+                    engine: EngineConfig { max_active: 4, greedy_chunking: true },
+                    n_workers: 4,
+                    spec: None,
+                    cache,
+                },
+            );
+            for r in make_reqs() {
+                pool.submit(r).unwrap();
+            }
+            let mut got: Vec<(u64, Vec<u32>)> = (0..n_reqs)
+                .map(|_| {
+                    let f = pool.results.recv().expect("pool result");
+                    (f.id, f.generated)
+                })
+                .collect();
+            let report = pool.finish().unwrap();
+            assert!(report.errors.is_empty(), "{:?}", report.errors);
+            got.sort();
+            (got, report)
+        };
+
+        let (off, rep_off) = run(None);
+        assert_eq!(rep_off.merged.cache_hits + rep_off.merged.cache_misses, 0);
+
+        let cache = Arc::new(StateCache::new(CacheConfig::default()));
+        let (on, rep_on) = run(Some(Arc::clone(&cache)));
+        assert_eq!(off, on, "state cache changed generated tokens");
+
+        // every prompt's plan starts with the shared 32-token boundary, so
+        // after each variant's first admission the rest hit it.  Workers
+        // race on first admissions, so bound loosely: at most one miss per
+        // (variant, worker) pair.
+        let m = &rep_on.merged;
+        assert!(m.cache_hits + m.cache_misses >= n_reqs as u64);
+        assert!(m.cache_hits >= (n_reqs - 5 * 4) as u64, "{}", m.summary());
+        assert!(m.cache_tokens_saved >= m.cache_hits * 32, "{}", m.summary());
+        assert!(m.summary().contains("cache_hit="), "{}", m.summary());
+        // the per-worker roll-ups carry the cache counters and sum to the
+        // aggregate
+        assert_eq!(m.worker_stats.len(), 4);
+        assert_eq!(
+            m.worker_stats.iter().map(|w| w.cache_hits).sum::<u64>(),
+            m.cache_hits
+        );
+        assert_eq!(
+            m.worker_stats.iter().map(|w| w.cache_tokens_saved).sum::<u64>(),
+            m.cache_tokens_saved
+        );
+        // and the cache itself observed the traffic
+        let stats = cache.stats();
+        assert_eq!(stats.hits, m.cache_hits);
+        assert!(stats.entries > 0);
+        assert!(stats.bytes_resident > 0);
+        assert!(stats.bytes_resident <= cache.max_bytes());
+    }
+
+    #[test]
     fn speculative_pool_matches_plain_greedy() {
         // SpecEngine workers behind the router must reproduce the plain
         // greedy fp32 outputs (token-exactness survives the fan-out)
@@ -759,6 +871,7 @@ mod tests {
                     engine: EngineConfig { max_active: 2, greedy_chunking: true },
                     n_workers,
                     spec,
+                    cache: None,
                 },
             );
             for r in make_reqs() {

@@ -12,13 +12,15 @@
 //! wraps it in a worker thread with mpsc queues.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::backend::InferenceBackend;
+use crate::statecache::StateCache;
 
-use super::batcher::DecodeBatcher;
+use super::batcher::{full_bucket_plan, DecodeBatcher};
 use super::metrics::Metrics;
 use super::request::{argmax, FinishedRequest, InFlight, Request};
 use super::state::StatePool;
@@ -44,6 +46,9 @@ pub struct Engine<'be> {
     pool: StatePool,
     batcher: DecodeBatcher,
     prefill_buckets: Vec<usize>, // ascending
+    /// shared SSM state cache (prefix reuse + session resume); `None`
+    /// runs every prompt through full prefill
+    cache: Option<Arc<StateCache>>,
     pending: VecDeque<Request>,
     active: Vec<InFlight>,
     pub finished: Vec<FinishedRequest>,
@@ -61,11 +66,22 @@ impl<'be> Engine<'be> {
             pool,
             batcher,
             prefill_buckets,
+            cache: None,
             pending: VecDeque::new(),
             active: Vec::new(),
             finished: Vec::new(),
             metrics: Metrics::default(),
         }
+    }
+
+    /// Attach a (shared) SSM state cache: admissions seed from the longest
+    /// cached prefix of the prompt (or the session's end-of-turn state)
+    /// and prefill only the suffix; completed prefill chunks and
+    /// end-of-turn states are inserted back.  Prefix hits are bit-exact
+    /// with the uncached path (see [`crate::statecache`]).
+    pub fn with_cache(mut self, cache: Arc<StateCache>) -> Self {
+        self.cache = Some(cache);
+        self
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -89,8 +105,7 @@ impl<'be> Engine<'be> {
     pub fn chunk_plan(&self, prompt_len: usize) -> (Vec<usize>, usize) {
         assert!(prompt_len >= 1, "empty prompt");
         // reserve the last token for decode
-        let (chunks, rest) =
-            super::batcher::full_bucket_plan(&self.prefill_buckets, prompt_len - 1);
+        let (chunks, rest) = full_bucket_plan(&self.prefill_buckets, prompt_len - 1);
         (chunks, rest + 1)
     }
 
@@ -107,8 +122,56 @@ impl<'be> Engine<'be> {
             // of the user-visible TTFT
             let submitted = req.submitted_at;
 
-            let (chunks, remainder) = self.chunk_plan(req.prompt.len());
-            let mut offset = 0usize;
+            let (mut chunks, mut remainder) = self.chunk_plan(req.prompt.len());
+            // state-cache seeding: a session hit (the previous turn's exact
+            // end state, which can reach past any bucket boundary) beats a
+            // prefix hit (longest bucket-aligned snapshot of this prompt's
+            // own canonical chunk plan); either way only the uncovered
+            // suffix is prefilled
+            let mut offset = 0usize; // prompt tokens the slot has consumed
+            let mut done_chunks: Vec<usize> = Vec::new(); // canonical chunk prefix
+            let mut prefix_cacheable = self.cache.is_some();
+            if let Some(cache) = self.cache.clone() {
+                let probed = req.session_id.is_some() || !chunks.is_empty();
+                let mut hit = false;
+                if let Some(sid) = req.session_id {
+                    if let Some(s) = cache.lookup_session(sid, &req.variant, &req.prompt)
+                    {
+                        if self.pool.seed(slot, &s.conv, &s.ssm) {
+                            offset = s.covered;
+                            // the session state's provenance is the previous
+                            // turn's trajectory, not this prompt's canonical
+                            // chunk plan: plan the suffix fresh and insert no
+                            // prefix entries from it
+                            let (c, r) = full_bucket_plan(
+                                &self.prefill_buckets,
+                                req.prompt.len() - offset - 1,
+                            );
+                            chunks = c;
+                            remainder = r + 1;
+                            prefix_cacheable = false;
+                            hit = true;
+                        }
+                    }
+                }
+                if !hit {
+                    if let Some(p) = cache.lookup_prefix(&req.variant, &req.prompt, &chunks)
+                    {
+                        if self.pool.seed(slot, &p.conv, &p.ssm) {
+                            offset = p.covered;
+                            done_chunks = chunks[..p.chunks_used].to_vec();
+                            chunks = chunks[p.chunks_used..].to_vec();
+                            hit = true;
+                        }
+                    }
+                }
+                if hit {
+                    self.metrics.cache_hits += 1;
+                    self.metrics.cache_tokens_saved += offset as u64;
+                } else if probed {
+                    self.metrics.cache_misses += 1;
+                }
+            }
             for chunk_len in chunks {
                 let toks: Vec<i32> = req.prompt[offset..offset + chunk_len]
                     .iter()
@@ -121,6 +184,22 @@ impl<'be> Engine<'be> {
                 stm.ssm = out.ssm_state;
                 offset += chunk_len;
                 self.metrics.prefill_chunks += 1;
+                if prefix_cacheable {
+                    // publish the boundary snapshot: the next request that
+                    // shares this (variant, chunk-plan prefix, token prefix)
+                    // skips straight past it — on any worker sharing the Arc
+                    done_chunks.push(chunk_len);
+                    if let Some(cache) = &self.cache {
+                        let st = self.pool.get(slot);
+                        cache.insert_prefix(
+                            &req.variant,
+                            &req.prompt[..offset],
+                            &done_chunks,
+                            &st.conv,
+                            &st.ssm,
+                        );
+                    }
+                }
             }
             // remainder through single-token decode steps (exact)
             let mut last_logits: Option<Vec<f32>> = None;
@@ -167,6 +246,17 @@ impl<'be> Engine<'be> {
     }
 
     fn retire(&mut self, infl: InFlight) {
+        // session entries capture the end-of-turn state before the slot is
+        // recycled.  The state has consumed prompt + generated[..n-1]: the
+        // last sampled token was never fed back, so it is not part of the
+        // state — the next turn's prompt (which repeats it) re-feeds it.
+        if let (Some(cache), Some(sid)) = (&self.cache, infl.req.session_id) {
+            let consumed = infl.generated.len().saturating_sub(1);
+            let mut toks = infl.req.prompt.clone();
+            toks.extend_from_slice(&infl.generated[..consumed]);
+            let st = self.pool.get(infl.slot);
+            cache.insert_session(sid, &infl.req.variant, &toks, &st.conv, &st.ssm);
+        }
         self.pool.release(infl.slot);
         self.metrics.requests_completed += 1;
         self.metrics
@@ -394,6 +484,97 @@ mod tests {
             assert!(eng.n_active() <= 2);
         }
         assert_eq!(eng.finished.len(), n);
+    }
+
+    #[test]
+    fn cache_on_is_bit_identical_to_cache_off() {
+        use crate::statecache::{CacheConfig, StateCache};
+        // shared 70-token system prompt, mixed tails and variants: the
+        // cache must change prefill work, never tokens
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let make_reqs = || -> Vec<Request> {
+            let sys: Vec<u32> = (0..70).map(|j| ((j * 7 + 3) % vocab) as u32).collect();
+            (0..6usize)
+                .map(|i| {
+                    let mut prompt = sys.clone();
+                    prompt.extend((0..2 + i * 7).map(|j| ((i * 131 + j * 17) % vocab) as u32));
+                    let variant = if i % 2 == 0 { "fp32" } else { "fastmamba" };
+                    Request::new(i as u64, prompt, 4, variant)
+                })
+                .collect()
+        };
+        let run = |cache: Option<Arc<StateCache>>| -> (Vec<(u64, Vec<u32>)>, Metrics) {
+            let mut eng = Engine::new(&be, EngineConfig::default());
+            if let Some(c) = cache {
+                eng = eng.with_cache(c);
+            }
+            for r in make_reqs() {
+                eng.submit(r);
+            }
+            eng.run().unwrap();
+            let mut got: Vec<(u64, Vec<u32>)> =
+                eng.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+            got.sort();
+            (got, eng.metrics)
+        };
+
+        let (off, m_off) = run(None);
+        assert_eq!(m_off.cache_hits + m_off.cache_misses, 0, "no cache, no probes");
+
+        let cache = Arc::new(StateCache::new(CacheConfig::default()));
+        let (on, m_on) = run(Some(Arc::clone(&cache)));
+        assert_eq!(off, on, "state cache changed generated tokens");
+        // sequential admission: the first request per variant misses, the
+        // rest hit the shared 64-token boundary snapshot
+        assert_eq!(m_on.cache_hits, 4, "{}", m_on.summary());
+        assert_eq!(m_on.cache_misses, 2);
+        assert_eq!(m_on.cache_tokens_saved, 4 * 64);
+        assert!(m_on.summary().contains("cache_hit="), "{}", m_on.summary());
+
+        // a second engine sharing the cache hits on every admission
+        let (again, m2) = run(Some(Arc::clone(&cache)));
+        assert_eq!(off, again);
+        assert_eq!(m2.cache_hits, 6);
+        assert_eq!(m2.cache_misses, 0);
+        assert!(cache.stats().hits >= 10);
+    }
+
+    #[test]
+    fn session_resume_skips_prefix_recompute() {
+        use crate::statecache::{CacheConfig, StateCache};
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let cache = Arc::new(StateCache::new(CacheConfig::default()));
+        let p1: Vec<u32> = (0..40).map(|j| ((j * 13 + 1) % vocab) as u32).collect();
+
+        // turn 1
+        let mut eng = Engine::new(&be, EngineConfig::default()).with_cache(Arc::clone(&cache));
+        eng.submit(Request::new(0, p1.clone(), 6, "fp32").with_session(9));
+        eng.run().unwrap();
+        let gen1 = eng.finished[0].generated.clone();
+        assert_eq!(gen1.len(), 6);
+
+        // turn 2: the prompt replays the whole transcript plus new input
+        let mut p2 = p1.clone();
+        p2.extend_from_slice(&gen1);
+        p2.extend((0..8).map(|j| ((j * 29 + 5) % vocab) as u32));
+
+        let mut eng2 =
+            Engine::new(&be, EngineConfig::default()).with_cache(Arc::clone(&cache));
+        eng2.submit(Request::new(1, p2.clone(), 6, "fp32").with_session(9));
+        eng2.run().unwrap();
+        let gen2 = eng2.finished[0].generated.clone();
+        // the end-of-turn state covered prompt + 5 consumed generated tokens
+        assert_eq!(eng2.metrics.cache_hits, 1, "{}", eng2.metrics.summary());
+        assert_eq!(eng2.metrics.cache_tokens_saved, (p1.len() + gen1.len() - 1) as u64);
+
+        // resumed output matches serving the full turn-2 prompt from scratch
+        // (fp32: chunking-invariant argmax, the conformance contract)
+        let mut base = Engine::new(&be, EngineConfig::default());
+        base.submit(Request::new(2, p2, 6, "fp32"));
+        base.run().unwrap();
+        assert_eq!(gen2, base.finished[0].generated, "session resume diverged");
     }
 
     #[test]

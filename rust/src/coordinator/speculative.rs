@@ -45,11 +45,13 @@
 //! [`NativeBackend`]: crate::backend::NativeBackend
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::backend::InferenceBackend;
+use crate::statecache::StateCache;
 
 use super::batcher::{full_bucket_plan, smallest_covering};
 use super::metrics::Metrics;
@@ -84,6 +86,13 @@ pub struct SpecConfig {
     /// maximum concurrently active requests (each holds two state slots:
     /// drafter + verifier)
     pub max_active: usize,
+    /// re-sync the drafter slot from the verifier's exact state at every
+    /// debt-consolidation point (ROADMAP "drafter re-seeding"): the
+    /// drafter's quantized trajectory drifts from the verifier's over long
+    /// generations, and each re-seed restarts it from exact state, at the
+    /// cost of replaying the residual (sub-bucket) debt with draft steps.
+    /// Never affects output tokens — only the verifier commits.
+    pub reseed_drafter: bool,
 }
 
 impl Default for SpecConfig {
@@ -93,6 +102,7 @@ impl Default for SpecConfig {
             draft_variant: "fastmamba".into(),
             verify_variant: "fp32".into(),
             max_active: 8,
+            reseed_drafter: true,
         }
     }
 }
@@ -108,6 +118,10 @@ struct SpecInFlight {
     debt: Vec<u32>,
     /// last committed token — consumed by the next round's draft/verify
     frontier: u32,
+    /// committed tokens the *verifier slot* has consumed (admission chunks
+    /// plus consolidated debt) — the exact-state coverage a session-cache
+    /// entry can claim at retire time
+    consumed: usize,
     generated: Vec<u32>,
     drafted: u64,
     accepted: u64,
@@ -126,6 +140,9 @@ pub struct SpecEngine<'be> {
     cfg: SpecConfig,
     pool: StatePool,
     prefill_buckets: Vec<usize>, // ascending (verifier's)
+    /// shared SSM state cache for the verifier's prefill path (keys use
+    /// `verify_variant`, so entries interchange with the plain engine's)
+    cache: Option<Arc<StateCache>>,
     pending: VecDeque<Request>,
     active: Vec<SpecInFlight>,
     pub finished: Vec<FinishedRequest>,
@@ -206,11 +223,21 @@ impl<'be> SpecEngine<'be> {
             cfg,
             pool,
             prefill_buckets,
+            cache: None,
             pending: VecDeque::new(),
             active: Vec::new(),
             finished: Vec::new(),
             metrics: Metrics::default(),
         }
+    }
+
+    /// Attach a (shared) SSM state cache: admissions seed the verifier
+    /// slot from the longest cached prefix (or the session's end-of-turn
+    /// state) and prefill only the suffix; the drafter is then seeded from
+    /// the verifier as usual.  See [`crate::statecache`].
+    pub fn with_cache(mut self, cache: Arc<StateCache>) -> Self {
+        self.cache = Some(cache);
+        self
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -274,14 +301,74 @@ impl<'be> SpecEngine<'be> {
             // verifier: exact full-bucket prefill of the prompt body; the
             // sub-bucket remainder becomes debt and the last prompt token
             // the frontier (its logits come from the first verify round)
-            let body = &req.prompt[..req.prompt.len() - 1];
-            let (chunks, _rest) = full_bucket_plan(&self.prefill_buckets, body.len());
+            let body = req.prompt[..req.prompt.len() - 1].to_vec();
+            let (mut chunks, _rest) = full_bucket_plan(&self.prefill_buckets, body.len());
+            // state-cache seeding, exactly as in the plain engine's
+            // admission: the body plan here equals Engine::chunk_plan's
+            // chunk list for the same prompt, so prefix entries interchange
+            // between the two engines (verify_variant keys them)
             let mut offset = 0usize;
+            let mut done_chunks: Vec<usize> = Vec::new();
+            let mut prefix_cacheable = self.cache.is_some();
+            if let Some(cache) = self.cache.clone() {
+                let probed = req.session_id.is_some() || !chunks.is_empty();
+                let mut hit = false;
+                if let Some(sid) = req.session_id {
+                    if let Some(s) =
+                        cache.lookup_session(sid, &self.cfg.verify_variant, &req.prompt)
+                    {
+                        // lookup_session bounds coverage at prompt.len()-1,
+                        // i.e. at most the whole body
+                        if self.pool.seed(verify_slot, &s.conv, &s.ssm) {
+                            offset = s.covered;
+                            let (c, _r) = full_bucket_plan(
+                                &self.prefill_buckets,
+                                body.len() - offset,
+                            );
+                            chunks = c;
+                            prefix_cacheable = false;
+                            hit = true;
+                        }
+                    }
+                }
+                if !hit {
+                    if let Some(p) =
+                        cache.lookup_prefix(&self.cfg.verify_variant, &body, &chunks)
+                    {
+                        if self.pool.seed(verify_slot, &p.conv, &p.ssm) {
+                            offset = p.covered;
+                            done_chunks = chunks[..p.chunks_used].to_vec();
+                            chunks = chunks[p.chunks_used..].to_vec();
+                            hit = true;
+                        }
+                    }
+                }
+                if hit {
+                    self.metrics.cache_hits += 1;
+                    self.metrics.cache_tokens_saved += offset as u64;
+                } else if probed {
+                    self.metrics.cache_misses += 1;
+                }
+            }
             for chunk in chunks {
                 let toks = body[offset..offset + chunk].to_vec();
                 self.verifier_prefill(verify_slot, &toks)?;
                 offset += chunk;
+                if prefix_cacheable {
+                    done_chunks.push(chunk);
+                    if let Some(cache) = &self.cache {
+                        let st = self.pool.get(verify_slot);
+                        cache.insert_prefix(
+                            &self.cfg.verify_variant,
+                            &body[..offset],
+                            &done_chunks,
+                            &st.conv,
+                            &st.ssm,
+                        );
+                    }
+                }
             }
+            let consumed = offset;
             let debt: Vec<u32> = body[offset..].to_vec();
 
             // drafter: seeded from the verifier's exact state, then catches
@@ -302,6 +389,7 @@ impl<'be> SpecEngine<'be> {
                 verify_slot,
                 debt,
                 frontier,
+                consumed,
                 generated: Vec::new(),
                 drafted: 0,
                 accepted: 0,
@@ -314,9 +402,12 @@ impl<'be> SpecEngine<'be> {
         Ok(())
     }
 
-    /// Fold full buckets of the verifier's debt into its state slot.
+    /// Fold full buckets of the verifier's debt into its state slot, then
+    /// (when [`SpecConfig::reseed_drafter`] is set) restart the drafter
+    /// from the verifier's exact state at the new consolidation point.
     fn consolidate(&mut self, ai: usize) -> Result<()> {
         let min_bucket = self.prefill_buckets[0];
+        let mut folded = false;
         while self.active[ai].debt.len() >= min_bucket {
             let len = self.active[ai].debt.len();
             let b = *self
@@ -329,6 +420,31 @@ impl<'be> SpecEngine<'be> {
             let toks: Vec<u32> = self.active[ai].debt[..b].to_vec();
             self.verifier_prefill(vslot, &toks)?;
             self.active[ai].debt.drain(..b);
+            self.active[ai].consumed += b;
+            folded = true;
+        }
+        if folded && self.cfg.reseed_drafter {
+            // drafter re-seeding (ROADMAP): the drafter slot has advanced
+            // through its own quantized decode steps since admission and
+            // drifts from the verifier's trajectory; restarting it from
+            // the verifier's exact state bounds that drift on long
+            // generations.  The residual (sub-bucket) debt is replayed
+            // with draft steps so the drafter lands back just behind the
+            // frontier — the same catch-up the admission path runs.
+            // Output tokens never depend on this: only the verifier
+            // commits.  No drafter snapshots are live here (each round
+            // resolves its own before returning).
+            let dslot = self.active[ai].draft_slot;
+            let vslot = self.active[ai].verify_slot;
+            debug_assert_eq!(self.pool.n_snapshots(dslot), 0);
+            let seed = self.pool.get(vslot).clone();
+            self.pool.seed(dslot, &seed.conv, &seed.ssm);
+            let residual = self.active[ai].debt.clone();
+            for &t in &residual {
+                let _ = self.draft_step(dslot, t)?;
+            }
+            self.metrics.drafter_reseeds += 1;
+            self.metrics.resync_steps += residual.len() as u64;
         }
         Ok(())
     }
@@ -467,6 +583,25 @@ impl<'be> SpecEngine<'be> {
     }
 
     fn retire(&mut self, infl: SpecInFlight) {
+        // session entry: the verifier slot's exact state covers the first
+        // `consumed` tokens of the transcript (un-consolidated debt and
+        // the frontier stay outside it — a resumed turn prefills them as
+        // part of its suffix)
+        if let (Some(cache), Some(sid)) = (&self.cache, infl.req.session_id) {
+            if infl.consumed > 0 {
+                let mut toks = infl.req.prompt.clone();
+                toks.extend_from_slice(&infl.generated);
+                toks.truncate(infl.consumed);
+                let st = self.pool.get(infl.verify_slot);
+                cache.insert_session(
+                    sid,
+                    &self.cfg.verify_variant,
+                    &toks,
+                    &st.conv,
+                    &st.ssm,
+                );
+            }
+        }
         self.pool.release(infl.draft_slot);
         self.pool.release(infl.verify_slot);
         self.metrics.requests_completed += 1;
@@ -821,6 +956,117 @@ mod tests {
             got.sort();
             assert_eq!(want, got, "drafter {di}: diverged from greedy fp32 on PJRT");
         }
+    }
+
+    /// Small fast model with narrow buckets so debt consolidates (and the
+    /// drafter re-seeds) every few committed tokens.
+    fn micro() -> NativeBackend {
+        let mut cfg = crate::config::ModelConfig::tiny();
+        cfg.name = "mamba2-micro".into();
+        cfg.d_model = 64;
+        cfg.n_layer = 2;
+        cfg.d_state = 16;
+        cfg.headdim = 16;
+        cfg.vocab_size = 128;
+        NativeBackend::new(crate::model::ModelWeights::random(&cfg, 9))
+            .with_buckets(vec![8, 16, 32], vec![1, 2, 4])
+    }
+
+    #[test]
+    fn drafter_reseeding_long_generation_stays_token_exact() {
+        // ROADMAP "drafter re-seeding": on a long generation the drafter
+        // re-syncs from the verifier's exact state at every consolidation
+        // point.  The output must be token-exact with plain greedy fp32
+        // with re-seeding on AND off — only acceptance may change.
+        let be = micro();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..21).map(|j| ((j * 13 + 2) % vocab) as u32).collect();
+        let max_new = 40;
+
+        let mut base = Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true });
+        base.submit(Request::new(0, prompt.clone(), max_new, "fp32"));
+        base.run().unwrap();
+        let want = base.finished[0].generated.clone();
+        assert_eq!(want.len(), max_new);
+
+        for reseed in [true, false] {
+            let mut spec = SpecEngine::new(
+                &be,
+                SpecConfig {
+                    draft_k: 4,
+                    max_active: 1,
+                    reseed_drafter: reseed,
+                    ..SpecConfig::default()
+                },
+            );
+            spec.submit(Request::new(0, prompt.clone(), max_new, "fp32"));
+            spec.run().unwrap();
+            assert_eq!(
+                spec.finished[0].generated, want,
+                "reseed={reseed}: long generation diverged from plain greedy"
+            );
+            if reseed {
+                assert!(
+                    spec.metrics.drafter_reseeds >= 2,
+                    "40 committed tokens over min-bucket-8 debt must consolidate \
+                     repeatedly, got {} reseeds",
+                    spec.metrics.drafter_reseeds
+                );
+            } else {
+                assert_eq!(spec.metrics.drafter_reseeds, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn spec_engine_shares_the_state_cache() {
+        use crate::statecache::{CacheConfig, StateCache};
+        use std::sync::Arc;
+        // two requests sharing a long prompt prefix: the second admission
+        // seeds the verifier from the first's boundary snapshot, and the
+        // output still matches plain greedy fp32 exactly
+        let be = micro();
+        let vocab = be.cfg().vocab_size;
+        let make_reqs = || -> Vec<Request> {
+            let sys: Vec<u32> = (0..33).map(|j| ((j * 7 + 1) % vocab) as u32).collect();
+            (0..2usize)
+                .map(|i| {
+                    let mut prompt = sys.clone();
+                    prompt.extend((0..3 + i * 5).map(|j| ((i * 131 + j * 17) % vocab) as u32));
+                    Request::new(i as u64, prompt, 6, "fp32").with_session(50 + i as u64)
+                })
+                .collect()
+        };
+
+        let mut base = Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true });
+        for r in make_reqs() {
+            base.submit(r);
+        }
+        base.run().unwrap();
+        let mut want: Vec<(u64, Vec<u32>)> =
+            base.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+        want.sort();
+
+        let cache = Arc::new(StateCache::new(CacheConfig::default()));
+        let mut spec = SpecEngine::new(
+            &be,
+            SpecConfig { draft_k: 2, max_active: 1, ..SpecConfig::default() },
+        )
+        .with_cache(Arc::clone(&cache));
+        for r in make_reqs() {
+            spec.submit(r);
+        }
+        spec.run().unwrap();
+        let mut got: Vec<(u64, Vec<u32>)> =
+            spec.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+        got.sort();
+        assert_eq!(want, got, "cached speculative admission diverged from greedy");
+        // max_active 1 serializes admissions: request 1 hits request 0's
+        // shared 32-token boundary snapshot
+        assert_eq!(spec.metrics.cache_hits, 1, "{}", spec.metrics.summary());
+        assert!(spec.metrics.cache_tokens_saved >= 32);
+        // both requests carried session ids, so both end states are stored
+        assert!(cache.stats().entries >= 2);
     }
 
     #[test]

@@ -136,6 +136,19 @@ impl StatePool {
         self.saved.iter().map(|s| s.len() * per).sum()
     }
 
+    /// Overwrite a slot with an externally held snapshot (a state-cache
+    /// hit).  Returns false — leaving the slot untouched — when the
+    /// snapshot's buffer lengths don't match this pool's model, which can
+    /// only happen if a cache is shared across different model shapes.
+    pub fn seed(&mut self, idx: usize, conv: &[f32], ssm: &[f32]) -> bool {
+        if conv.len() != self.conv_len || ssm.len() != self.ssm_len {
+            return false;
+        }
+        self.slots[idx].conv.copy_from_slice(conv);
+        self.slots[idx].ssm.copy_from_slice(ssm);
+        true
+    }
+
     pub fn get(&self, idx: usize) -> &StateSlot {
         &self.slots[idx]
     }
@@ -223,6 +236,20 @@ mod tests {
         let b = p.alloc().unwrap();
         assert_eq!(b, a);
         assert_eq!(p.get(b).ssm[0], 0.0);
+    }
+
+    #[test]
+    fn seed_checks_shapes_and_overwrites() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let conv = vec![1.5f32; p.get(a).conv.len()];
+        let ssm = vec![-2.5f32; p.get(a).ssm.len()];
+        assert!(p.seed(a, &conv, &ssm));
+        assert_eq!(p.get(a).conv[0], 1.5);
+        assert_eq!(p.get(a).ssm[0], -2.5);
+        // wrong shape: rejected, slot untouched
+        assert!(!p.seed(a, &conv[1..], &ssm));
+        assert_eq!(p.get(a).conv[0], 1.5);
     }
 
     #[test]

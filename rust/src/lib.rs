@@ -34,6 +34,13 @@
 //! ([`coordinator::state::StatePool`]) — token-exact with greedy fp32
 //! decoding, and modeled on the accelerator by [`sim::speculative`].
 //!
+//! Because the recurrent state is constant-size, "prompt caching" costs
+//! one O(state) snapshot copy per hit instead of O(tokens) of KV memory:
+//! the [`statecache`] subsystem (`serve --state-cache-mb N`) stores
+//! bucket-aligned prefix snapshots plus per-session end-of-turn states,
+//! shared across all pool workers, so shared system prompts and
+//! multi-turn conversations skip their redundant prefill entirely.
+//!
 //! Python never runs on the request path: `make artifacts` lowers
 //! everything once, and the `fastmamba` binary is self-contained.  Build
 //! with `--no-default-features` on hosts without `xla_extension`: every
@@ -51,6 +58,7 @@ pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
+pub mod statecache;
 pub mod util;
 
 pub use config::{AcceleratorConfig, FixedSpec, ModelConfig};

@@ -12,6 +12,8 @@
 //! xla_extension: `--backend auto` (the default) falls back to the
 //! artifact-free native backend.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use fastmamba::backend::{self, BackendKind, InferenceBackend, NativeBackend};
@@ -19,6 +21,7 @@ use fastmamba::config::{AcceleratorConfig, ModelConfig};
 use fastmamba::coordinator::{
     serve_pool, Engine, EngineConfig, PoolConfig, Request, SpecConfig, SpecEngine,
 };
+use fastmamba::statecache::{CacheConfig, StateCache};
 use fastmamba::model::weights::{artifacts_dir, Manifest};
 use fastmamba::sim::PerfModel;
 use fastmamba::util::cli::Args;
@@ -41,6 +44,7 @@ fn main() -> Result<()> {
                  \n  serve    --requests N --max-new N --variant fp32|fastmamba --prompt-len N\
                  \n           --backend auto|pjrt|native --max-active N --workers N\
                  \n           --speculate K [--draft-backend native|pjrt]\
+                 \n           --state-cache-mb N (0 = off; shared SSM prefix/session cache)\
                  \n  report   --id all|table1|table2|table3|table4|table_spec|fig1|fig3|fig9|fig10\
                  \n  simulate --model mamba2-130m|mamba2-2.7b --seq-len N --batch N\
                  \n  info"
@@ -70,6 +74,12 @@ fn serve(args: &Args) -> Result<()> {
     // both engine paths honor --max-active (speculative requests hold two
     // state slots each, hence the lower default)
     let max_active = args.usize_or("max-active", if speculate > 0 { 8 } else { 64 });
+    // shared SSM state cache (prefix reuse + session resume); one Arc is
+    // threaded through whichever serving path runs, including every pool
+    // worker
+    let cache_mb = args.usize_or("state-cache-mb", 0);
+    let cache: Option<Arc<StateCache>> =
+        (cache_mb > 0).then(|| Arc::new(StateCache::new(CacheConfig::with_mb(cache_mb))));
     let vocab = be.cfg().vocab_size;
 
     let mut rng = Rng::new(args.usize_or("seed", 7) as u64);
@@ -114,7 +124,9 @@ fn serve(args: &Args) -> Result<()> {
                     draft_variant: args.get_or("draft-variant", "fastmamba"),
                     verify_variant: variant.clone(),
                     max_active,
+                    reseed_drafter: true,
                 }),
+                cache: cache.clone(),
             },
         );
         for r in requests {
@@ -169,8 +181,12 @@ fn serve(args: &Args) -> Result<()> {
                 draft_variant: args.get_or("draft-variant", "fastmamba"),
                 verify_variant: variant.clone(),
                 max_active,
+                reseed_drafter: true,
             },
         );
+        if let Some(c) = &cache {
+            engine = engine.with_cache(Arc::clone(c));
+        }
         for r in requests {
             engine.submit(r);
         }
@@ -190,6 +206,9 @@ fn serve(args: &Args) -> Result<()> {
     } else {
         let mut engine =
             Engine::new(be.as_ref(), EngineConfig { max_active, greedy_chunking: true });
+        if let Some(c) = &cache {
+            engine = engine.with_cache(Arc::clone(c));
+        }
         for r in requests {
             engine.submit(r);
         }
@@ -197,6 +216,9 @@ fn serve(args: &Args) -> Result<()> {
         println!("{}", engine.metrics.summary());
         engine.finished
     };
+    if let Some(c) = &cache {
+        println!("state cache ({cache_mb} MiB): {}", c.stats().summary());
+    }
     for f in finished.iter().take(3) {
         println!(
             "  req {}: {} prompt toks -> {:?}...",

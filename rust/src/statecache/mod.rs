@@ -1,0 +1,623 @@
+//! SSM state cache: O(state) prefix reuse and multi-turn sessions.
+//!
+//! Mamba2 serving has a caching advantage transformers can only
+//! approximate: the per-request state is a **constant-size** recurrent
+//! pair (conv window + SSM hidden state), so "prompt caching" costs one
+//! O(state) snapshot copy per hit instead of O(tokens) of KV memory.
+//! This module is that subsystem — a content-addressed store mapping
+//!
+//! ```text
+//! (variant, prefill-chunk sequence, token prefix)  ->  (conv, ssm) snapshot
+//! ```
+//!
+//! at **bucket-aligned chunk boundaries**, plus per-session end-of-turn
+//! entries keyed by [`Request::session_id`], shared across all
+//! [`serve_pool`] workers through one `Arc<StateCache>` with interior
+//! sharded locking.
+//!
+//! ## Exactness contract
+//!
+//! A prefix hit is **bit-exact** with the uncached path: entries are keyed
+//! by the exact chunk sequence that produced them (not just the token
+//! prefix), because the quantized variants calibrate per prefill chunk —
+//! a state reached through a different chunking is a different state.  A
+//! request only hits entries whose chunk sequence is a prefix of its own
+//! canonical chunk plan, so seeding from the snapshot and prefilling the
+//! remaining chunks runs the *identical* call sequence the cache-off path
+//! would (the property [`backend::conformance::check_state_reuse`]
+//! certifies per backend).  Hits additionally verify the stored token
+//! prefix — a hash collision can never seed another request's state.
+//!
+//! Session entries relax this: they capture the end-of-turn state of a
+//! serving *trajectory* (prefill + decode steps), so a resumed turn
+//! continues the exact conversation state with zero prefix recompute, but
+//! the suffix is chunk-planned fresh — equivalent to the uncached path
+//! for `fp32` (chunking-invariant argmax, see
+//! `conformance::check_prefill_chunking_equivalence`), and a documented
+//! trade for the per-chunk-calibrated quantized variants.
+//!
+//! ## Eviction
+//!
+//! [`CacheConfig::max_bytes`] bounds residency.  The budget is split
+//! evenly over the lock shards; inserting past a shard's slice evicts
+//! least-recently-used entries (hits refresh recency) until it fits.
+//! Entries larger than a shard's whole slice are not cached at all.
+//!
+//! [`Request::session_id`]: crate::coordinator::Request::session_id
+//! [`serve_pool`]: crate::coordinator::serve_pool
+//! [`backend::conformance::check_state_reuse`]: crate::backend::conformance::check_state_reuse
+
+mod store;
+
+use std::collections::hash_map::DefaultHasher;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use store::{entry_bytes, Entry, Shard};
+
+/// Sizing of a [`StateCache`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// total byte budget across all shards (snapshot payload + accounted
+    /// per-entry overhead); 0 disables caching entirely
+    pub max_bytes: usize,
+    /// lock shards (clamped to >= 1).  More shards = less contention
+    /// between pool workers; each shard owns `max_bytes / shards` of the
+    /// budget and evicts independently.
+    pub shards: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self { max_bytes: 64 << 20, shards: 8 }
+    }
+}
+
+impl CacheConfig {
+    /// Budget in MiB with the default shard count — the CLI's
+    /// `--state-cache-mb` flag.
+    pub fn with_mb(mb: usize) -> Self {
+        Self { max_bytes: mb << 20, ..Self::default() }
+    }
+}
+
+/// Aggregate counters, readable at any time via [`StateCache::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    /// lookups that returned a snapshot (prefix or session)
+    pub hits: u64,
+    /// lookups that probed at least one key and found nothing
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// entries currently resident
+    pub entries: usize,
+    /// bytes currently resident (accounted, across all shards)
+    pub bytes_resident: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "hits={} misses={} hit_rate={:.0}% insertions={} evictions={} \
+             entries={} resident={:.2}MiB",
+            self.hits,
+            self.misses,
+            self.hit_rate() * 100.0,
+            self.insertions,
+            self.evictions,
+            self.entries,
+            self.bytes_resident as f64 / (1 << 20) as f64,
+        )
+    }
+}
+
+/// A prefix-cache hit: the snapshot covers `covered` prompt tokens,
+/// produced by the first `chunks_used` chunks of the request's plan.
+#[derive(Debug, Clone)]
+pub struct PrefixHit {
+    pub covered: usize,
+    pub chunks_used: usize,
+    pub conv: Vec<f32>,
+    pub ssm: Vec<f32>,
+}
+
+/// A session-cache hit: the previous turn's end state covers `covered`
+/// tokens of the new prompt (always leaving at least one token to feed).
+#[derive(Debug, Clone)]
+pub struct SessionHit {
+    pub covered: usize,
+    pub conv: Vec<f32>,
+    pub ssm: Vec<f32>,
+}
+
+/// The shared, internally synchronized snapshot store.  All methods take
+/// `&self`; clone an `Arc<StateCache>` into every worker/engine.
+pub struct StateCache {
+    shards: Vec<Mutex<Shard>>,
+    /// per-shard slice of [`CacheConfig::max_bytes`]
+    shard_budget: usize,
+    max_bytes: usize,
+    /// global LRU clock
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl fmt::Debug for StateCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("StateCache")
+            .field("max_bytes", &self.max_bytes)
+            .field("shards", &self.shards.len())
+            .finish_non_exhaustive()
+    }
+}
+
+impl StateCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let n = cfg.shards.max(1);
+        Self {
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_budget: cfg.max_bytes / n,
+            max_bytes: cfg.max_bytes,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn max_bytes(&self) -> usize {
+        self.max_bytes
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn prefix_hash(variant: &str, chunks: &[usize], tokens: &[u32]) -> u64 {
+        let mut h = DefaultHasher::new();
+        variant.hash(&mut h);
+        chunks.hash(&mut h);
+        tokens.hash(&mut h);
+        h.finish()
+    }
+
+    fn session_shard(&self, id: u64) -> &Mutex<Shard> {
+        let mut h = DefaultHasher::new();
+        id.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    fn shard_for(&self, hash: u64) -> &Mutex<Shard> {
+        &self.shards[(hash as usize) % self.shards.len()]
+    }
+
+    /// Longest cached prefix of `tokens` at the boundaries of `chunks`
+    /// (the request's canonical prefill plan), probed longest-first.
+    /// `variant`, the chunk-sequence prefix, and the token prefix must all
+    /// match the stored entry exactly.
+    pub fn lookup_prefix(
+        &self,
+        variant: &str,
+        tokens: &[u32],
+        chunks: &[usize],
+    ) -> Option<PrefixHit> {
+        let mut bounds = Vec::with_capacity(chunks.len());
+        let mut boundary = 0usize;
+        for (i, &c) in chunks.iter().enumerate() {
+            boundary += c;
+            if boundary > tokens.len() {
+                break; // malformed plan; probe only what the prompt covers
+            }
+            bounds.push((i + 1, boundary));
+        }
+        for &(nc, b) in bounds.iter().rev() {
+            let h = Self::prefix_hash(variant, &chunks[..nc], &tokens[..b]);
+            if let Some(hit) =
+                self.lookup_prefix_hashed(h, variant, &chunks[..nc], &tokens[..b])
+            {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(hit);
+            }
+        }
+        if !bounds.is_empty() {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        None
+    }
+
+    /// One exact-key probe.  Split out (and hash-parameterized) so the
+    /// collision-safety tests can force two keys onto one hash and prove
+    /// the stored token prefix — not the hash — decides the hit.
+    fn lookup_prefix_hashed(
+        &self,
+        hash: u64,
+        variant: &str,
+        chunks: &[usize],
+        tokens: &[u32],
+    ) -> Option<PrefixHit> {
+        let tick = self.next_tick();
+        let mut shard = self.shard_for(hash).lock().unwrap();
+        let chain = shard.prefix.get_mut(&hash)?;
+        let e = chain.iter_mut().find(|e| e.matches(variant, chunks, tokens))?;
+        e.last_used = tick;
+        Some(PrefixHit {
+            covered: tokens.len(),
+            chunks_used: chunks.len(),
+            conv: e.conv.clone(),
+            ssm: e.ssm.clone(),
+        })
+    }
+
+    /// Insert a boundary snapshot: the state after prefilling exactly
+    /// `chunks` over `tokens` (so `chunks` must sum to `tokens.len()`).
+    /// Re-inserting an existing key only refreshes its recency.
+    pub fn insert_prefix(
+        &self,
+        variant: &str,
+        tokens: &[u32],
+        chunks: &[usize],
+        conv: &[f32],
+        ssm: &[f32],
+    ) {
+        debug_assert_eq!(
+            chunks.iter().sum::<usize>(),
+            tokens.len(),
+            "prefix snapshot chunks must cover the token prefix exactly"
+        );
+        let h = Self::prefix_hash(variant, chunks, tokens);
+        self.insert_prefix_hashed(h, variant, tokens, chunks, conv, ssm);
+    }
+
+    fn insert_prefix_hashed(
+        &self,
+        hash: u64,
+        variant: &str,
+        tokens: &[u32],
+        chunks: &[usize],
+        conv: &[f32],
+        ssm: &[f32],
+    ) {
+        let bytes = entry_bytes(tokens.len(), chunks.len(), conv.len(), ssm.len());
+        if bytes > self.shard_budget {
+            return; // would evict the whole shard and still not fit
+        }
+        let tick = self.next_tick();
+        let mut shard = self.shard_for(hash).lock().unwrap();
+        {
+            let chain = shard.prefix.entry(hash).or_default();
+            if let Some(e) = chain.iter_mut().find(|e| e.matches(variant, chunks, tokens)) {
+                e.last_used = tick; // dedupe: identical key -> refresh only
+                return;
+            }
+            chain.push(Entry {
+                variant: variant.to_string(),
+                chunks: chunks.to_vec(),
+                tokens: tokens.to_vec(),
+                conv: conv.to_vec(),
+                ssm: ssm.to_vec(),
+                last_used: tick,
+                bytes,
+            });
+        }
+        shard.bytes += bytes;
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        let evicted = shard.evict_to(self.shard_budget);
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+    }
+
+    /// The previous turn of session `id` whose consumed tokens are a
+    /// strict prefix of `tokens` (leaving at least one token to feed the
+    /// decode path).  Variant and the full token prefix are verified.
+    pub fn lookup_session(
+        &self,
+        id: u64,
+        variant: &str,
+        tokens: &[u32],
+    ) -> Option<SessionHit> {
+        let tick = self.next_tick();
+        let hit = {
+            let mut shard = self.session_shard(id).lock().unwrap();
+            match shard.sessions.get_mut(&id) {
+                Some(e)
+                    if e.variant == variant
+                        && e.tokens.len() + 1 <= tokens.len()
+                        && e.tokens[..] == tokens[..e.tokens.len()] =>
+                {
+                    e.last_used = tick;
+                    Some(SessionHit {
+                        covered: e.tokens.len(),
+                        conv: e.conv.clone(),
+                        ssm: e.ssm.clone(),
+                    })
+                }
+                _ => None,
+            }
+        };
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Store (or replace) session `id`'s end-of-turn state: the snapshot
+    /// after consuming exactly `tokens` of the conversation.
+    pub fn insert_session(
+        &self,
+        id: u64,
+        variant: &str,
+        tokens: &[u32],
+        conv: &[f32],
+        ssm: &[f32],
+    ) {
+        if tokens.is_empty() {
+            return;
+        }
+        let bytes = entry_bytes(tokens.len(), 0, conv.len(), ssm.len());
+        if bytes > self.shard_budget {
+            return;
+        }
+        let tick = self.next_tick();
+        let mut shard = self.session_shard(id).lock().unwrap();
+        let entry = Entry {
+            variant: variant.to_string(),
+            chunks: Vec::new(),
+            tokens: tokens.to_vec(),
+            conv: conv.to_vec(),
+            ssm: ssm.to_vec(),
+            last_used: tick,
+            bytes,
+        };
+        if let Some(old) = shard.sessions.insert(id, entry) {
+            shard.bytes -= old.bytes;
+        }
+        shard.bytes += bytes;
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        let evicted = shard.evict_to(self.shard_budget);
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+    }
+
+    /// Bytes currently resident across all shards.
+    pub fn bytes_resident(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().bytes).sum()
+    }
+
+    /// Entries currently resident across all shards.
+    pub fn entries(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().n_entries()).sum()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.entries(),
+            bytes_resident: self.bytes_resident(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 13 + seed * 131).collect()
+    }
+
+    fn state(tag: f32, len: usize) -> (Vec<f32>, Vec<f32>) {
+        (vec![tag; len], vec![-tag; len])
+    }
+
+    #[test]
+    fn prefix_roundtrip_prefers_longest_boundary() {
+        let c = StateCache::new(CacheConfig::default());
+        let t = toks(24, 1);
+        let (cv8, sm8) = state(8.0, 6);
+        let (cv16, sm16) = state(16.0, 6);
+        c.insert_prefix("fp32", &t[..8], &[8], &cv8, &sm8);
+        c.insert_prefix("fp32", &t[..16], &[8, 8], &cv16, &sm16);
+
+        // request plan [8, 8, 8]: boundary 16 must win over boundary 8
+        let hit = c.lookup_prefix("fp32", &t, &[8, 8, 8]).expect("hit");
+        assert_eq!(hit.covered, 16);
+        assert_eq!(hit.chunks_used, 2);
+        assert_eq!(hit.conv, cv16);
+        assert_eq!(hit.ssm, sm16);
+
+        // a plan that only reaches boundary 8 gets the shorter entry
+        let hit = c.lookup_prefix("fp32", &t[..13], &[8]).expect("hit");
+        assert_eq!(hit.covered, 8);
+        assert_eq!(hit.conv, cv8);
+
+        // different variant: no hit (and a counted miss)
+        assert!(c.lookup_prefix("fastmamba", &t, &[8, 8, 8]).is_none());
+        let s = c.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+        assert!(s.hit_rate() > 0.6 && s.hit_rate() < 0.7);
+    }
+
+    #[test]
+    fn chunk_plan_mismatch_is_a_miss() {
+        // same tokens, same boundary, different chunking: quantized
+        // variants calibrate per chunk, so this must never hit
+        let c = StateCache::new(CacheConfig::default());
+        let t = toks(16, 2);
+        let (cv, sm) = state(1.0, 4);
+        c.insert_prefix("fastmamba", &t, &[16], &cv, &sm);
+        assert!(c.lookup_prefix("fastmamba", &t, &[8, 8]).is_none());
+        assert!(c.lookup_prefix("fastmamba", &t, &[16]).is_some());
+    }
+
+    #[test]
+    fn hash_collision_never_crosses_token_prefixes() {
+        // force two different keys onto ONE hash: the chain plus the
+        // stored-token verification must keep them apart
+        let c = StateCache::new(CacheConfig::default());
+        let ta = toks(8, 3);
+        let tb = toks(8, 4);
+        let (cva, sma) = state(3.0, 4);
+        let (cvb, smb) = state(4.0, 4);
+        let h = 0xDEAD_BEEF_u64;
+        c.insert_prefix_hashed(h, "fp32", &ta, &[8], &cva, &sma);
+        c.insert_prefix_hashed(h, "fp32", &tb, &[8], &cvb, &smb);
+
+        let a = c.lookup_prefix_hashed(h, "fp32", &[8], &ta).expect("a");
+        assert_eq!(a.conv, cva, "collision chain returned the wrong snapshot");
+        let b = c.lookup_prefix_hashed(h, "fp32", &[8], &tb).expect("b");
+        assert_eq!(b.conv, cvb);
+        // same hash, tokens that match neither entry: must miss
+        assert!(c.lookup_prefix_hashed(h, "fp32", &[8], &toks(8, 5)).is_none());
+    }
+
+    #[test]
+    fn lru_eviction_under_byte_budget() {
+        let per = entry_bytes(8, 1, 16, 16);
+        // room for exactly two entries in one shard
+        let c = StateCache::new(CacheConfig { max_bytes: 2 * per, shards: 1 });
+        let (cv, sm) = state(1.0, 16);
+        let (ta, tb, tc) = (toks(8, 1), toks(8, 2), toks(8, 3));
+        c.insert_prefix("fp32", &ta, &[8], &cv, &sm);
+        c.insert_prefix("fp32", &tb, &[8], &cv, &sm);
+        assert_eq!(c.bytes_resident(), 2 * per);
+
+        // touch A so B becomes the LRU victim
+        assert!(c.lookup_prefix("fp32", &ta, &[8]).is_some());
+        c.insert_prefix("fp32", &tc, &[8], &cv, &sm);
+
+        assert!(c.lookup_prefix("fp32", &ta, &[8]).is_some(), "A survived");
+        assert!(c.lookup_prefix("fp32", &tb, &[8]).is_none(), "B evicted");
+        assert!(c.lookup_prefix("fp32", &tc, &[8]).is_some(), "C resident");
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        assert!(s.bytes_resident <= c.max_bytes());
+    }
+
+    #[test]
+    fn byte_accounting_tracks_inserts_dedupe_and_overwrites() {
+        let c = StateCache::new(CacheConfig { max_bytes: 1 << 20, shards: 1 });
+        let (cv, sm) = state(1.0, 16);
+        let t = toks(8, 1);
+        c.insert_prefix("fp32", &t, &[8], &cv, &sm);
+        let b1 = c.bytes_resident();
+        assert_eq!(b1, entry_bytes(8, 1, 16, 16));
+        // identical re-insert only refreshes recency
+        c.insert_prefix("fp32", &t, &[8], &cv, &sm);
+        assert_eq!(c.bytes_resident(), b1);
+        assert_eq!(c.stats().insertions, 1);
+
+        // session overwrite swaps byte accounting, never accumulates
+        c.insert_session(9, "fp32", &t[..4], &cv, &sm);
+        let b2 = c.bytes_resident();
+        assert_eq!(b2 - b1, entry_bytes(4, 0, 16, 16));
+        c.insert_session(9, "fp32", &t, &cv, &sm);
+        let b3 = c.bytes_resident();
+        assert_eq!(b3 - b1, entry_bytes(8, 0, 16, 16));
+        assert_eq!(c.entries(), 2);
+    }
+
+    #[test]
+    fn oversized_entry_is_not_cached() {
+        let c = StateCache::new(CacheConfig { max_bytes: 256, shards: 1 });
+        let (cv, sm) = state(1.0, 4096); // ~32 KiB payload >> 256 B budget
+        let t = toks(8, 1);
+        c.insert_prefix("fp32", &t, &[8], &cv, &sm);
+        c.insert_session(1, "fp32", &t, &cv, &sm);
+        assert_eq!(c.entries(), 0);
+        assert_eq!(c.bytes_resident(), 0);
+        assert_eq!(c.stats().insertions, 0);
+    }
+
+    #[test]
+    fn session_resume_rules() {
+        let c = StateCache::new(CacheConfig::default());
+        let hist = toks(10, 7);
+        let (cv, sm) = state(7.0, 8);
+        c.insert_session(42, "fp32", &hist, &cv, &sm);
+
+        // prompt extends the history: hit, covering exactly the history
+        let mut prompt = hist.clone();
+        prompt.extend_from_slice(&[1, 2, 3]);
+        let hit = c.lookup_session(42, "fp32", &prompt).expect("hit");
+        assert_eq!(hit.covered, 10);
+        assert_eq!(hit.conv, cv);
+
+        // prompt == history: no token left to feed -> miss
+        assert!(c.lookup_session(42, "fp32", &hist).is_none());
+        // diverging history -> miss
+        let mut fork = hist.clone();
+        fork[5] ^= 1;
+        fork.extend_from_slice(&[1, 2, 3]);
+        assert!(c.lookup_session(42, "fp32", &fork).is_none());
+        // other variant, other session -> miss
+        assert!(c.lookup_session(42, "fastmamba", &prompt).is_none());
+        assert!(c.lookup_session(43, "fp32", &prompt).is_none());
+    }
+
+    #[test]
+    fn empty_plan_probes_nothing() {
+        let c = StateCache::new(CacheConfig::default());
+        assert!(c.lookup_prefix("fp32", &[1, 2], &[]).is_none());
+        assert_eq!(c.stats().misses, 0, "no boundary probed, no miss counted");
+    }
+
+    #[test]
+    fn state_reuse_contract_holds_for_the_cached_backend() {
+        // the cache's whole correctness story reduces to the backend
+        // state-reuse contract: seed-from-snapshot + suffix prefill IS the
+        // continuous run.  Certify it for the backend the tests cache.
+        let be = crate::backend::NativeBackend::synthetic(3).with_buckets(
+            vec![8, 16],
+            vec![1, 2],
+        );
+        crate::backend::conformance::check_state_reuse(&be);
+    }
+
+    #[test]
+    fn sharded_concurrent_access_is_safe() {
+        let c = Arc::new(StateCache::new(CacheConfig { max_bytes: 1 << 20, shards: 4 }));
+        let handles: Vec<_> = (0..4u32)
+            .map(|w| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for i in 0..32u32 {
+                        let t = toks(8, w * 100 + i);
+                        let (cv, sm) = state(i as f32, 8);
+                        c.insert_prefix("fp32", &t, &[8], &cv, &sm);
+                        assert!(c.lookup_prefix("fp32", &t, &[8]).is_some());
+                        c.insert_session((w * 100 + i) as u64, "fp32", &t, &cv, &sm);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = c.stats();
+        assert_eq!(s.entries, 4 * 32 * 2);
+        assert_eq!(s.insertions, 4 * 32 * 2);
+        assert_eq!(s.hits, 4 * 32);
+        assert!(s.summary().contains("hit_rate=100%"), "{}", s.summary());
+    }
+}

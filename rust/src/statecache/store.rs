@@ -1,0 +1,192 @@
+//! Shard internals of the [`StateCache`](super::StateCache): entries, byte
+//! accounting, and least-recently-used eviction.
+//!
+//! A shard owns two maps under one mutex — content-hashed prefix entries
+//! (with a collision chain per hash, because a hit must *never* be decided
+//! by the hash alone) and per-session end-of-turn entries — plus the
+//! running byte total the eviction policy keeps under the shard's slice of
+//! the global budget.
+
+use std::collections::HashMap;
+
+/// Fixed per-entry overhead charged on top of the payload buffers
+/// (map slots, Vec headers, LRU bookkeeping) so the byte budget tracks
+/// real residency, not just float counts.
+pub(crate) const ENTRY_OVERHEAD: usize = 64;
+
+/// Bytes one cached snapshot is accounted at.
+pub(crate) fn entry_bytes(
+    n_tokens: usize,
+    n_chunks: usize,
+    conv_len: usize,
+    ssm_len: usize,
+) -> usize {
+    4 * (conv_len + ssm_len) + 4 * n_tokens + 8 * n_chunks + ENTRY_OVERHEAD
+}
+
+/// One cached snapshot: the recurrent (conv, ssm) state after consuming
+/// `tokens`, plus everything a hit must verify.
+#[derive(Debug, Clone)]
+pub(crate) struct Entry {
+    /// quantization variant the state was computed under — quantized
+    /// variants calibrate per chunk, so states are never variant-portable
+    pub variant: String,
+    /// exact prefill-chunk sequence that produced the state (prefix
+    /// entries; empty for session entries, whose provenance is the
+    /// previous turn's serving trajectory itself).  Verified on hit:
+    /// a state reached through a different chunking is a different state
+    /// for the quantized variants.
+    pub chunks: Vec<usize>,
+    /// the full token prefix the state has consumed — verified on every
+    /// hit, so a hash collision can never seed another request's state
+    pub tokens: Vec<u32>,
+    pub conv: Vec<f32>,
+    pub ssm: Vec<f32>,
+    /// LRU clock value at last insert/hit (global monotonic tick)
+    pub last_used: u64,
+    /// accounted size ([`entry_bytes`])
+    pub bytes: usize,
+}
+
+impl Entry {
+    /// Does this entry describe exactly this (variant, chunking, tokens)?
+    pub fn matches(&self, variant: &str, chunks: &[usize], tokens: &[u32]) -> bool {
+        self.variant == variant && self.chunks == chunks && self.tokens == tokens
+    }
+}
+
+/// One lock domain of the cache.
+#[derive(Debug, Default)]
+pub(crate) struct Shard {
+    /// content hash -> collision chain of prefix entries
+    pub prefix: HashMap<u64, Vec<Entry>>,
+    /// session id -> latest end-of-turn entry
+    pub sessions: HashMap<u64, Entry>,
+    /// accounted bytes across both maps
+    pub bytes: usize,
+}
+
+/// What `evict_one` decided to remove.
+enum Victim {
+    Prefix { hash: u64, pos: usize },
+    Session { id: u64 },
+}
+
+impl Shard {
+    pub fn n_entries(&self) -> usize {
+        self.prefix.values().map(|c| c.len()).sum::<usize>() + self.sessions.len()
+    }
+
+    /// Remove the least-recently-used entry (across both maps).  Returns
+    /// false when the shard is already empty.
+    fn evict_one(&mut self) -> bool {
+        let mut best: Option<(u64, Victim)> = None;
+        for (h, chain) in &self.prefix {
+            for (i, e) in chain.iter().enumerate() {
+                if best.as_ref().is_none_or(|(t, _)| e.last_used < *t) {
+                    best = Some((e.last_used, Victim::Prefix { hash: *h, pos: i }));
+                }
+            }
+        }
+        for (id, e) in &self.sessions {
+            if best.as_ref().is_none_or(|(t, _)| e.last_used < *t) {
+                best = Some((e.last_used, Victim::Session { id: *id }));
+            }
+        }
+        match best {
+            None => false,
+            Some((_, Victim::Prefix { hash, pos })) => {
+                let chain = self.prefix.get_mut(&hash).expect("victim chain");
+                let e = chain.remove(pos);
+                self.bytes -= e.bytes;
+                if chain.is_empty() {
+                    self.prefix.remove(&hash);
+                }
+                true
+            }
+            Some((_, Victim::Session { id })) => {
+                let e = self.sessions.remove(&id).expect("victim session");
+                self.bytes -= e.bytes;
+                true
+            }
+        }
+    }
+
+    /// Evict LRU entries until the shard holds at most `budget` bytes.
+    /// Returns how many entries were evicted.
+    pub fn evict_to(&mut self, budget: usize) -> u64 {
+        let mut n = 0u64;
+        while self.bytes > budget {
+            if !self.evict_one() {
+                break;
+            }
+            n += 1;
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(tag: u32, last_used: u64) -> Entry {
+        let tokens = vec![tag; 4];
+        let bytes = entry_bytes(4, 1, 8, 8);
+        Entry {
+            variant: "fp32".into(),
+            chunks: vec![4],
+            tokens,
+            conv: vec![tag as f32; 8],
+            ssm: vec![tag as f32; 8],
+            last_used,
+            bytes,
+        }
+    }
+
+    #[test]
+    fn evicts_oldest_first_across_maps() {
+        let mut s = Shard::default();
+        let e1 = entry(1, 10);
+        let e2 = entry(2, 5); // oldest
+        let e3 = entry(3, 20);
+        let per = e1.bytes;
+        s.bytes = 3 * per;
+        s.prefix.insert(101, vec![e1]);
+        s.prefix.insert(102, vec![e2]);
+        s.sessions.insert(7, e3);
+        assert_eq!(s.n_entries(), 3);
+
+        let n = s.evict_to(2 * per);
+        assert_eq!(n, 1);
+        assert!(!s.prefix.contains_key(&102), "LRU prefix entry evicted first");
+        assert!(s.sessions.contains_key(&7));
+
+        let n = s.evict_to(per);
+        assert_eq!(n, 1);
+        assert!(!s.prefix.contains_key(&101), "next-oldest evicted second");
+        assert!(s.sessions.contains_key(&7), "newest survives");
+        assert_eq!(s.bytes, per);
+    }
+
+    #[test]
+    fn evict_to_zero_empties_shard() {
+        let mut s = Shard::default();
+        let e = entry(1, 1);
+        s.bytes = e.bytes;
+        s.sessions.insert(1, e);
+        assert_eq!(s.evict_to(0), 1);
+        assert_eq!(s.n_entries(), 0);
+        assert_eq!(s.bytes, 0);
+        assert_eq!(s.evict_to(0), 0, "empty shard evicts nothing");
+    }
+
+    #[test]
+    fn entry_bytes_accounts_payload_and_overhead() {
+        assert_eq!(entry_bytes(0, 0, 0, 0), ENTRY_OVERHEAD);
+        assert_eq!(
+            entry_bytes(10, 2, 100, 200),
+            4 * 300 + 4 * 10 + 8 * 2 + ENTRY_OVERHEAD
+        );
+    }
+}
