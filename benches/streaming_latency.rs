@@ -1,0 +1,236 @@
+//! Bench: streaming request lifecycle latency — TTFT and inter-token
+//! latency (TPOT) percentiles, streaming vs batch collection, at 1 and 4
+//! workers.
+//!
+//! The streaming mode consumes each request's per-token `Event` stream
+//! (`ServePool::submit` handles) and timestamps every token at arrival:
+//! TTFT is first-token arrival minus submission, TPOT the gap between
+//! consecutive tokens of one request.  The batch mode reads only the
+//! aggregate results channel, so the first output a client can see is the
+//! whole completion — its "TTFT" column is the full request latency.  The
+//! gap between those two columns is the point of the streaming API.
+//!
+//! Streamed token sequences are asserted bit-identical to the batch
+//! results (streaming changes delivery, never tokens).
+//!
+//! `--json PATH` writes a machine-readable record (uploaded as a CI
+//! artifact to track the latency trajectory over time).
+//!
+//! Run: cargo bench --bench streaming_latency [-- --requests 24 --json out.json]
+
+use std::time::{Duration, Instant};
+
+use fastmamba::backend::{self, BackendKind};
+use fastmamba::coordinator::{serve_pool, EngineConfig, Event, PoolConfig, Request};
+use fastmamba::util::cli::Args;
+
+fn pct(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s[((s.len() as f64 * p) as usize).min(s.len() - 1)]
+}
+
+struct Row {
+    workers: usize,
+    mode: &'static str,
+    ttft_p50_ms: f64,
+    ttft_p95_ms: f64,
+    tpot_p50_ms: f64,
+    tpot_p95_ms: f64,
+    wall_s: f64,
+    tok_per_s: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_requests = args.usize_or("requests", 24);
+    let max_new = args.usize_or("max-new", 24);
+    let max_active = args.usize_or("max-active", 8);
+    let kind = BackendKind::from_name(&args.get_or("backend", "native"))
+        .expect("--backend auto|pjrt|native");
+
+    let probe = backend::load(kind)?;
+    let vocab = probe.cfg().vocab_size;
+    println!(
+        "backend: {} ({n_requests} requests, max_new {max_new})",
+        probe.name()
+    );
+    drop(probe); // workers construct their own
+
+    let make_prompts = || -> Vec<Vec<u32>> {
+        (0..n_requests)
+            .map(|i| {
+                let plen = [9usize, 17, 33, 48][i % 4];
+                (0..plen).map(|j| ((i * 131 + j * 17) % vocab) as u32).collect()
+            })
+            .collect()
+    };
+
+    let make_pool = |n_workers: usize| {
+        let pool = serve_pool(
+            move || backend::load(kind),
+            PoolConfig {
+                engine: EngineConfig { max_active, greedy_chunking: true },
+                n_workers,
+                spec: None,
+                cache: None,
+            },
+        );
+        // warm up outside the timed window: one tiny request per worker
+        for w in 0..n_workers {
+            pool.submit(Request::new(1_000_000 + w as u64, vec![1, 2, 3], 2, "fp32"))
+                .unwrap();
+        }
+        for _ in 0..n_workers {
+            pool.results.recv().expect("warmup result");
+        }
+        pool
+    };
+
+    let mut rows: Vec<Row> = Vec::new();
+    for n_workers in [1usize, 4] {
+        // --- streaming: consume per-request event streams, timestamping
+        // every token at arrival
+        let pool = make_pool(n_workers);
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(n_requests);
+        let mut submit_at = Vec::with_capacity(n_requests);
+        for (i, prompt) in make_prompts().into_iter().enumerate() {
+            submit_at.push(Instant::now());
+            handles.push(pool.submit(Request::new(i as u64, prompt, max_new, "fp32"))?);
+        }
+        let mut ttft = Vec::with_capacity(n_requests);
+        let mut tpot = Vec::new();
+        let mut streams: Vec<Vec<u32>> = vec![Vec::new(); n_requests];
+        let mut last: Vec<Option<Instant>> = vec![None; n_requests];
+        let mut done = 0usize;
+        while done < n_requests {
+            let mut progressed = false;
+            for (i, h) in handles.iter().enumerate() {
+                while let Some(ev) = h.try_event() {
+                    progressed = true;
+                    let now = Instant::now();
+                    match ev {
+                        Event::FirstToken => {}
+                        Event::Token { tok, .. } => {
+                            match last[i] {
+                                Some(prev) => tpot.push((now - prev).as_secs_f64()),
+                                None => ttft.push((now - submit_at[i]).as_secs_f64()),
+                            }
+                            last[i] = Some(now);
+                            streams[i].push(tok);
+                        }
+                        Event::Finished(_) => done += 1,
+                    }
+                }
+            }
+            if !progressed {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        for _ in 0..n_requests {
+            pool.results.recv().expect("buffered result"); // drain aggregate
+        }
+        pool.finish()?;
+        let toks: u64 = streams.iter().map(|s| s.len() as u64).sum();
+        rows.push(Row {
+            workers: n_workers,
+            mode: "stream",
+            ttft_p50_ms: pct(&ttft, 0.50) * 1e3,
+            ttft_p95_ms: pct(&ttft, 0.95) * 1e3,
+            tpot_p50_ms: pct(&tpot, 0.50) * 1e3,
+            tpot_p95_ms: pct(&tpot, 0.95) * 1e3,
+            wall_s: wall,
+            tok_per_s: toks as f64 / wall,
+        });
+
+        // --- batch: only the aggregate results channel; the first output
+        // visible per request is its whole completion
+        let pool = make_pool(n_workers);
+        let t0 = Instant::now();
+        let mut submit_at = Vec::with_capacity(n_requests);
+        for (i, prompt) in make_prompts().into_iter().enumerate() {
+            submit_at.push(Instant::now());
+            pool.submit(Request::new(i as u64, prompt, max_new, "fp32"))?;
+        }
+        let mut first_visible = Vec::with_capacity(n_requests);
+        let mut batch: Vec<(u64, Vec<u32>)> = Vec::with_capacity(n_requests);
+        for _ in 0..n_requests {
+            let f = pool.results.recv().expect("pool result");
+            first_visible
+                .push((Instant::now() - submit_at[f.id as usize]).as_secs_f64());
+            batch.push((f.id, f.generated));
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        pool.finish()?;
+        let toks: u64 = batch.iter().map(|(_, g)| g.len() as u64).sum();
+        rows.push(Row {
+            workers: n_workers,
+            mode: "batch",
+            ttft_p50_ms: pct(&first_visible, 0.50) * 1e3,
+            ttft_p95_ms: pct(&first_visible, 0.95) * 1e3,
+            tpot_p50_ms: 0.0,
+            tpot_p95_ms: 0.0,
+            wall_s: wall,
+            tok_per_s: toks as f64 / wall,
+        });
+
+        // streaming changes delivery, never tokens
+        batch.sort();
+        let streamed: Vec<(u64, Vec<u32>)> = streams
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i as u64, s.clone()))
+            .collect();
+        assert_eq!(streamed, batch, "streamed tokens diverged from batch output");
+        println!("workers={n_workers}: streamed == batch (token-identical)");
+    }
+
+    for r in &rows {
+        println!(
+            "workers={} mode={:<6} ttft_p50={:.2}ms ttft_p95={:.2}ms \
+             tpot_p50={:.3}ms tpot_p95={:.3}ms wall={:.3}s tok/s={:.1}",
+            r.workers,
+            r.mode,
+            r.ttft_p50_ms,
+            r.ttft_p95_ms,
+            r.tpot_p50_ms,
+            r.tpot_p95_ms,
+            r.wall_s,
+            r.tok_per_s
+        );
+    }
+
+    if let Some(path) = args.get("json") {
+        let entries: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"workers\":{},\"mode\":\"{}\",\"ttft_p50_ms\":{:.4},\
+                     \"ttft_p95_ms\":{:.4},\"tpot_p50_ms\":{:.4},\
+                     \"tpot_p95_ms\":{:.4},\"wall_s\":{:.6},\"tok_per_s\":{:.2}}}",
+                    r.workers,
+                    r.mode,
+                    r.ttft_p50_ms,
+                    r.ttft_p95_ms,
+                    r.tpot_p50_ms,
+                    r.tpot_p95_ms,
+                    r.wall_s,
+                    r.tok_per_s
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\"bench\":\"streaming_latency\",\"requests\":{n_requests},\
+             \"max_new\":{max_new},\"max_active\":{max_active},\"runs\":[{}]}}\n",
+            entries.join(",")
+        );
+        std::fs::write(path, json)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

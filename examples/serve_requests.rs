@@ -17,16 +17,30 @@
 //! and skip its entire history prefill — the O(state) alternative to
 //! O(tokens) KV prompt caching.
 //!
-//! Run: cargo run --release --example serve_requests [-- --requests 24 --backend native --workers 4 --sessions 4 --turns 3 --state-cache-mb 64]
+//! With `--stream` the engine is stepped manually and every request's
+//! lifecycle events (`FirstToken`, per-token `Token`, terminal `Finished`)
+//! are printed as the SSM step produces them; the streamed token sequences
+//! are asserted bit-identical to the batch `FinishedRequest` output (this
+//! assertion runs in both modes — streaming changes delivery, never
+//! tokens).
+//!
+//! Run: cargo run --release --example serve_requests [-- --requests 24 --backend native --workers 4 --sessions 4 --turns 3 --state-cache-mb 64 --stream]
 
 use std::sync::Arc;
 
 use fastmamba::backend::{self, BackendKind};
-use fastmamba::coordinator::{serve_pool, Engine, EngineConfig, PoolConfig, Request};
+use fastmamba::coordinator::{serve_pool, Engine, EngineConfig, Event, PoolConfig, Request};
 use fastmamba::eval::corpus_for;
 use fastmamba::statecache::{CacheConfig, StateCache};
 use fastmamba::util::cli::Args;
 use fastmamba::util::rng::Rng;
+
+/// Record a token event into the per-request stream transcript.
+fn record(streams: &mut [Vec<u32>], id: u64, ev: &Event) {
+    if let Event::Token { tok, .. } = ev {
+        streams[id as usize].push(*tok);
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
@@ -37,6 +51,7 @@ fn main() -> anyhow::Result<()> {
     let sessions = args.usize_or("sessions", 4);
     let turns = args.usize_or("turns", 3);
     let cache_mb = args.usize_or("state-cache-mb", 64);
+    let stream = args.bool("stream");
 
     let kind = BackendKind::from_name(&args.get_or("backend", "auto"))
         .expect("--backend auto|pjrt|native");
@@ -60,10 +75,49 @@ fn main() -> anyhow::Result<()> {
             EngineConfig { max_active, greedy_chunking: true },
         );
         let mut rng = Rng::new(11);
+        let mut handles = Vec::with_capacity(n_requests);
         for id in 0..n_requests {
-            engine.submit(trace(id, &mut rng));
+            handles.push(engine.submit(trace(id, &mut rng)));
         }
-        engine.run()?;
+        let mut streams: Vec<Vec<u32>> = vec![Vec::new(); n_requests];
+        if stream {
+            // manual drive: drain and print lifecycle events after every
+            // engine step — tokens appear as the SSM step produces them
+            let mut printed = 0usize;
+            engine.metrics.start();
+            while engine.n_pending() > 0 || engine.n_active() > 0 {
+                engine.step()?;
+                for h in &handles {
+                    while let Some(ev) = h.try_event() {
+                        if printed < 24 {
+                            match &ev {
+                                Event::FirstToken => println!(
+                                    "[{variant}][stream] req {}: first token",
+                                    h.id()
+                                ),
+                                Event::Token { tok, index } => println!(
+                                    "[{variant}][stream] req {}: #{index} -> {tok}",
+                                    h.id()
+                                ),
+                                Event::Finished(f) => println!(
+                                    "[{variant}][stream] req {}: finished ({:?})",
+                                    h.id(),
+                                    f.finish_reason
+                                ),
+                            }
+                            printed += 1;
+                            if printed == 24 {
+                                println!("[{variant}][stream] ... (output capped)");
+                            }
+                        }
+                        record(&mut streams, h.id(), &ev);
+                    }
+                }
+            }
+            engine.metrics.stop();
+        } else {
+            engine.run()?;
+        }
         println!("[{variant}] {}", engine.metrics.summary());
         println!(
             "[{variant}] decode batch padding waste: {:.1}% of slots",
@@ -73,6 +127,21 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(engine.finished.len(), n_requests);
         for f in &engine.finished {
             assert_eq!(f.generated.len(), max_new);
+        }
+        // streaming changes delivery, never tokens: the per-request event
+        // streams must be bit-identical to the batch output (in batch mode
+        // the events are drained here — they buffered during run())
+        for h in &handles {
+            while let Some(ev) = h.try_event() {
+                record(&mut streams, h.id(), &ev);
+            }
+        }
+        for f in &engine.finished {
+            assert_eq!(
+                streams[f.id as usize], f.generated,
+                "[{variant}] req {}: stream diverged from batch output",
+                f.id
+            );
         }
 
         if workers > 1 {

@@ -1,0 +1,125 @@
+//! Admission-time helpers shared by both serving engines.
+//!
+//! [`seed_from_cache`] is the state-cache seeding block that used to be
+//! duplicated between `Engine::admit` and `SpecEngine::admit` (flagged in
+//! the PR-4 review).  The two copies must stay in lock-step for cache
+//! entries to interchange between the engines — a session entry written by
+//! the plain engine must seed a speculative admission and vice versa — so
+//! the sharing is structural now, not a review checklist item.
+//!
+//! Both engines chunk-prefill at most `prompt.len() - 1` tokens (the plain
+//! engine reserves the final token for the decode path; the speculative
+//! engine's "body" excludes the frontier token), which is what makes one
+//! helper serve both: the canonical chunk plan, the session-hit replan, and
+//! the prefix-boundary probes are computed over the same token range.
+
+use std::sync::Arc;
+
+use super::batcher::full_bucket_plan;
+use super::metrics::Metrics;
+use super::request::{Event, FinishReason, FinishedRequest, Request};
+use super::state::StatePool;
+use crate::statecache::StateCache;
+
+/// Outcome of seeding one admission from the shared state cache.
+pub(crate) struct AdmissionSeed {
+    /// prompt tokens the seeded slot has already consumed (0 on a miss)
+    pub offset: usize,
+    /// chunks still to prefill, starting at `offset`
+    pub chunks: Vec<usize>,
+    /// canonical chunk-plan prefix already covered (grown and published as
+    /// the remaining chunks complete); empty after a session hit
+    pub done_chunks: Vec<usize>,
+    /// whether boundary snapshots of this admission may be published (a
+    /// session hit disables it: the seeded state's provenance is the
+    /// previous turn's trajectory, not this prompt's canonical chunk plan)
+    pub prefix_cacheable: bool,
+}
+
+/// Probe the state cache for this admission and seed `slot` from the best
+/// hit: a session hit (the previous turn's exact end state, which can
+/// reach past any bucket boundary) beats the longest bucket-aligned prefix
+/// hit of the prompt's own canonical plan.  Either way only the uncovered
+/// suffix remains to prefill.  Cache metrics are recorded here; with no
+/// cache attached this is a no-op returning the unmodified plan.
+///
+/// `chunks` is the canonical full-bucket plan over `prompt[..len-1]`; the
+/// caller derives its own remainder/debt from `offset` + the returned
+/// chunks, so both engines keep their exact pre-helper arithmetic.
+pub(crate) fn seed_from_cache(
+    cache: Option<&Arc<StateCache>>,
+    pool: &mut StatePool,
+    metrics: &mut Metrics,
+    slot: usize,
+    variant: &str,
+    prompt: &[u32],
+    session_id: Option<u64>,
+    buckets: &[usize],
+    chunks: Vec<usize>,
+) -> AdmissionSeed {
+    let mut seed = AdmissionSeed {
+        offset: 0,
+        chunks,
+        done_chunks: Vec::new(),
+        prefix_cacheable: cache.is_some(),
+    };
+    let Some(cache) = cache else { return seed };
+    let plan_len = prompt.len() - 1; // both engines chunk at most len-1
+    let probed = session_id.is_some() || !seed.chunks.is_empty();
+    let mut hit = false;
+    if let Some(sid) = session_id {
+        if let Some(s) = cache.lookup_session(sid, variant, prompt) {
+            // lookup_session bounds coverage at prompt.len() - 1, i.e. at
+            // most the whole chunkable range
+            if pool.seed(slot, &s.conv, &s.ssm) {
+                seed.offset = s.covered;
+                seed.chunks = full_bucket_plan(buckets, plan_len - s.covered).0;
+                seed.prefix_cacheable = false;
+                hit = true;
+            }
+        }
+    }
+    if !hit {
+        if let Some(p) = cache.lookup_prefix(variant, prompt, &seed.chunks) {
+            if pool.seed(slot, &p.conv, &p.ssm) {
+                seed.offset = p.covered;
+                seed.done_chunks = seed.chunks[..p.chunks_used].to_vec();
+                seed.chunks = seed.chunks[p.chunks_used..].to_vec();
+                hit = true;
+            }
+        }
+    }
+    if hit {
+        metrics.cache_hits += 1;
+        metrics.cache_tokens_saved += seed.offset as u64;
+    } else if probed {
+        metrics.cache_misses += 1;
+    }
+    seed
+}
+
+/// Retire a request that never reached admission (cancelled or past its
+/// deadline while still pending): no slot to free, empty output, terminal
+/// event emitted — the same `FinishedRequest` surface as the normal path.
+pub(crate) fn finish_unadmitted(
+    metrics: &mut Metrics,
+    finished: &mut Vec<FinishedRequest>,
+    req: Request,
+    reason: FinishReason,
+) {
+    metrics.note_finish_reason(reason);
+    metrics.requests_completed += 1;
+    let total_s = req.submitted_at.elapsed().as_secs_f64();
+    metrics.request_latency_s.push(total_s);
+    let fin = FinishedRequest {
+        id: req.id,
+        prompt_len: req.prompt.len(),
+        generated: Vec::new(),
+        finish_reason: reason,
+        ttft_s: 0.0,
+        total_s,
+        spec: None,
+    };
+    req.emit(Event::Finished(fin.clone()));
+    finished.push(fin);
+}

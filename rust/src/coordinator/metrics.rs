@@ -1,9 +1,13 @@
 //! Serving metrics: TTFT / per-token latency / throughput accounting, plus
-//! decode-batch padding waste, speculative-decoding acceptance tracking, and
-//! — for the multi-worker pool — per-worker queue-depth/utilization roll-ups
-//! merged into one aggregate view ([`Metrics::merge`]).
+//! decode-batch padding waste, speculative-decoding acceptance tracking,
+//! streaming lifecycle counters (inter-token latency, cancellations,
+//! deadline expiries), and — for the multi-worker pool — per-worker
+//! queue-depth/utilization roll-ups merged into one aggregate view
+//! ([`Metrics::merge`]).
 
 use std::time::Instant;
+
+use super::request::FinishReason;
 
 /// Per-worker roll-up attached to a merged [`Metrics`] by the multi-worker
 /// pool dispatcher (`coordinator::router::serve_pool`).
@@ -19,6 +23,12 @@ pub struct WorkerStat {
     pub cache_hits: u64,
     /// prompt tokens this worker skipped prefilling via cached state
     pub cache_tokens_saved: u64,
+    /// requests this worker retired with [`FinishReason::Cancelled`]
+    pub cancelled: u64,
+    /// requests this worker retired with [`FinishReason::Deadline`]
+    pub deadline_expired: u64,
+    /// this worker's median inter-token latency, seconds
+    pub tpot_p50_s: f64,
 }
 
 #[derive(Debug, Default, Clone)]
@@ -57,6 +67,22 @@ pub struct Metrics {
     /// state cache: prompt tokens whose prefill was skipped because a
     /// cached snapshot already covered them
     pub cache_tokens_saved: u64,
+    /// streaming lifecycle: requests retired with
+    /// [`FinishReason::Cancelled`]
+    pub cancelled_requests: u64,
+    /// streaming lifecycle: requests retired with
+    /// [`FinishReason::Deadline`]
+    pub deadline_expired: u64,
+    /// inter-token latency (TPOT) samples: seconds between consecutive
+    /// token emissions of one request.  The speculative engine commits a
+    /// round's accepted run at once, so intra-round tokens record ~0 and
+    /// the round's first token carries the verify-call latency — the
+    /// honest arrival-time view a streaming client sees.  Unlike the
+    /// per-request sample vectors, this grows per *token*, so it is
+    /// bounded: past [`TPOT_SAMPLE_CAP`] samples, [`Metrics::note_tpot`]
+    /// overwrites ring-buffer style and the percentiles describe the most
+    /// recent window.
+    pub tpot_s: Vec<f64>,
     /// per-request draft acceptance rate, pushed at retire time
     pub per_request_acceptance: Vec<f64>,
     pub ttft_s: Vec<f64>,
@@ -70,9 +96,17 @@ pub struct Metrics {
     pub busy_s: f64,
     /// per-worker roll-ups, attached by the pool dispatcher on merge
     pub worker_stats: Vec<WorkerStat>,
+    /// total TPOT samples observed (drives the ring-buffer overwrite
+    /// position once `tpot_s` is at capacity)
+    tpot_seen: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
+
+/// Memory bound for [`Metrics::tpot_s`]: one sample per generated token
+/// would grow without limit in a long-lived serving process, so past this
+/// many samples the buffer wraps (512 KiB of f64s).
+pub const TPOT_SAMPLE_CAP: usize = 65_536;
 
 impl Metrics {
     pub fn start(&mut self) {
@@ -118,6 +152,36 @@ impl Metrics {
 
     pub fn latency_p95(&self) -> f64 {
         Self::pct(&self.request_latency_s, 0.95)
+    }
+
+    /// Record one inter-token latency sample (ring-buffered at
+    /// [`TPOT_SAMPLE_CAP`] so per-token accounting stays bounded).
+    pub fn note_tpot(&mut self, seconds: f64) {
+        if self.tpot_s.len() < TPOT_SAMPLE_CAP {
+            self.tpot_s.push(seconds);
+        } else {
+            self.tpot_s[(self.tpot_seen as usize) % TPOT_SAMPLE_CAP] = seconds;
+        }
+        self.tpot_seen += 1;
+    }
+
+    /// Median inter-token latency (seconds).
+    pub fn tpot_p50(&self) -> f64 {
+        Self::pct(&self.tpot_s, 0.50)
+    }
+
+    pub fn tpot_p95(&self) -> f64 {
+        Self::pct(&self.tpot_s, 0.95)
+    }
+
+    /// Count a retirement's lifecycle reason (normal reasons are already
+    /// covered by `requests_completed`).
+    pub fn note_finish_reason(&mut self, reason: FinishReason) {
+        match reason {
+            FinishReason::Cancelled => self.cancelled_requests += 1,
+            FinishReason::Deadline => self.deadline_expired += 1,
+            _ => {}
+        }
     }
 
     /// Fraction of dispatched decode-batch slots wasted on padding.
@@ -190,6 +254,11 @@ impl Metrics {
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
         self.cache_tokens_saved += other.cache_tokens_saved;
+        self.cancelled_requests += other.cancelled_requests;
+        self.deadline_expired += other.deadline_expired;
+        for &s in &other.tpot_s {
+            self.note_tpot(s);
+        }
         self.per_request_acceptance
             .extend_from_slice(&other.per_request_acceptance);
         self.ttft_s.extend_from_slice(&other.ttft_s);
@@ -222,6 +291,14 @@ impl Metrics {
         } else {
             String::new()
         };
+        let lifecycle = if self.cancelled_requests + self.deadline_expired > 0 {
+            format!(
+                " cancelled={} deadline_expired={}",
+                self.cancelled_requests, self.deadline_expired
+            )
+        } else {
+            String::new()
+        };
         let workers = if self.worker_stats.is_empty() {
             String::new()
         } else {
@@ -235,17 +312,24 @@ impl Metrics {
                 .iter()
                 .map(|w| w.queue_depth_peak.to_string())
                 .collect();
+            let tpots: Vec<String> = self
+                .worker_stats
+                .iter()
+                .map(|w| format!("{:.2}", w.tpot_p50_s * 1e3))
+                .collect();
             format!(
-                " workers={} util=[{}] qdepth=[{}]",
+                " workers={} util=[{}] qdepth=[{}] tpot_ms=[{}]",
                 self.worker_stats.len(),
                 utils.join("/"),
-                depths.join("/")
+                depths.join("/"),
+                tpots.join("/")
             )
         };
         format!(
             "requests={} prompt_toks={} gen_toks={} wall={:.3}s gen_tok/s={:.1} \
              ttft_p50={:.1}ms ttft_p95={:.1}ms lat_p50={:.1}ms lat_p95={:.1}ms \
-             prefill_chunks={} decode_steps={} pad_waste={:.1}% accept={}{} \
+             tpot_p50={:.2}ms tpot_p95={:.2}ms \
+             prefill_chunks={} decode_steps={} pad_waste={:.1}% accept={}{}{} \
              qdepth_peak={} util={:.0}%{}",
             self.requests_completed,
             self.prompt_tokens,
@@ -256,11 +340,14 @@ impl Metrics {
             self.ttft_p95() * 1e3,
             self.latency_p50() * 1e3,
             self.latency_p95() * 1e3,
+            self.tpot_p50() * 1e3,
+            self.tpot_p95() * 1e3,
             self.prefill_chunks,
             self.decode_steps,
             self.padding_frac() * 100.0,
             accept,
             cache,
+            lifecycle,
             self.queue_depth_peak,
             self.utilization() * 100.0,
             workers,
@@ -348,6 +435,9 @@ mod tests {
                 utilization: 0.9,
                 cache_hits: 2,
                 cache_tokens_saved: 64,
+                cancelled: 1,
+                deadline_expired: 0,
+                tpot_p50_s: 0.0015,
             },
             WorkerStat {
                 requests_completed: 2,
@@ -356,12 +446,16 @@ mod tests {
                 utilization: 0.5,
                 cache_hits: 0,
                 cache_tokens_saved: 0,
+                cancelled: 0,
+                deadline_expired: 0,
+                tpot_p50_s: 0.0005,
             },
         ];
         let s = m.summary();
         assert!(s.contains("workers=2"), "{s}");
         assert!(s.contains("util=[90%/50%]"), "{s}");
         assert!(s.contains("qdepth=[4/2]"), "{s}");
+        assert!(s.contains("tpot_ms=[1.50/0.50]"), "{s}");
     }
 
     #[test]
@@ -428,6 +522,52 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("cache_hit=50%"), "{s}");
         assert!(s.contains("saved_toks=128"), "{s}");
+    }
+
+    #[test]
+    fn lifecycle_counters_merge_and_summary() {
+        let m = Metrics::default();
+        assert!(
+            !m.summary().contains("cancelled="),
+            "no lifecycle block before any cancellation/expiry"
+        );
+        assert!(m.summary().contains("tpot_p50=0.00ms"), "{}", m.summary());
+
+        let mut a = Metrics::default();
+        a.note_finish_reason(FinishReason::Cancelled);
+        a.note_finish_reason(FinishReason::Length); // not counted
+        a.note_finish_reason(FinishReason::StopToken); // not counted
+        a.tpot_s = vec![0.001, 0.002];
+        let mut b = Metrics::default();
+        b.note_finish_reason(FinishReason::Deadline);
+        b.note_finish_reason(FinishReason::Cancelled);
+        b.tpot_s = vec![0.004];
+
+        let mut m = Metrics::default();
+        m.merge(&a);
+        m.merge(&b);
+        assert_eq!(m.cancelled_requests, 2);
+        assert_eq!(m.deadline_expired, 1);
+        assert_eq!(m.tpot_s.len(), 3);
+        assert_eq!(m.tpot_p50(), 0.002);
+        assert_eq!(m.tpot_p95(), 0.004);
+        let s = m.summary();
+        assert!(s.contains("cancelled=2"), "{s}");
+        assert!(s.contains("deadline_expired=1"), "{s}");
+        assert!(s.contains("tpot_p50=2.00ms"), "{s}");
+    }
+
+    #[test]
+    fn tpot_ring_buffer_stays_bounded() {
+        let mut m = Metrics::default();
+        for i in 0..(TPOT_SAMPLE_CAP + 100) {
+            m.note_tpot(i as f64);
+        }
+        assert_eq!(m.tpot_s.len(), TPOT_SAMPLE_CAP, "per-token samples stay bounded");
+        // the oldest samples were overwritten by the newest, in order
+        assert_eq!(m.tpot_s[0], TPOT_SAMPLE_CAP as f64);
+        assert_eq!(m.tpot_s[99], (TPOT_SAMPLE_CAP + 99) as f64);
+        assert_eq!(m.tpot_s[100], 100.0);
     }
 
     #[test]

@@ -32,6 +32,17 @@
 //! shared system prompts and multi-turn conversations skip their
 //! redundant prefill — bit-exact with the uncached path for prefix hits.
 //!
+//! The client-facing contract is a **streaming request lifecycle**: every
+//! submit path returns a [`request::SubmitHandle`] with a per-request
+//! [`request::Event`] stream (`FirstToken`, per-token `Token`, terminal
+//! `Finished` carrying a [`request::FinishReason`]) plus `cancel()`;
+//! [`request::Request`] takes an optional deadline and a priority.  Both
+//! engines check cancellation and deadline every step and retire through
+//! the normal path, so an abandoned request frees its constant-size state
+//! slot immediately and still publishes its session-cache entry.  Batch
+//! collection is unchanged — `finished` vectors and the pool's aggregate
+//! `results` channel receive every terminal result.
+//!
 //! The second serving mode is speculative: [`speculative::SpecEngine`]
 //! drives a draft-k / verify-1 loop in which the quantized `fastmamba`
 //! variant drafts candidate tokens with single-token decode steps (on any
@@ -45,6 +56,7 @@
 //! [`metrics::Metrics`] tracks draft acceptance alongside the batching
 //! efficiency counters.
 
+pub(crate) mod admission;
 pub mod batcher;
 pub mod metrics;
 pub mod request;
@@ -55,7 +67,9 @@ pub mod state;
 
 pub use batcher::DecodeBatcher;
 pub use metrics::{Metrics, WorkerStat};
-pub use request::{FinishedRequest, Request, SpecStats};
+pub use request::{
+    CancelFlag, Event, FinishReason, FinishedRequest, Request, SpecStats, SubmitHandle,
+};
 pub use router::{serve_pool, serve_threaded, PoolConfig, PoolReport, Router, ServePool};
 pub use scheduler::{Engine, EngineConfig};
 pub use speculative::{SpecConfig, SpecEngine};

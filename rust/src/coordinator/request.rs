@@ -1,6 +1,143 @@
-//! Request and result types flowing through the coordinator.
+//! Request, result, and streaming-lifecycle types flowing through the
+//! coordinator.
+//!
+//! The client-facing contract is a **streaming request lifecycle**: every
+//! submit path ([`Engine::submit`], [`SpecEngine::submit`],
+//! [`ServePool::submit`]) returns a [`SubmitHandle`] carrying a per-request
+//! [`Event`] receiver plus `cancel()`.  Tokens stream out as the SSM step
+//! produces them ([`Event::Token`]), a terminal [`Event::Finished`] carries
+//! the full [`FinishedRequest`] with its [`FinishReason`], and abandoned or
+//! over-deadline requests free their constant-size Mamba2 state slot at the
+//! next engine step instead of burning it to `max_new_tokens`.
+//!
+//! [`Engine::submit`]: super::scheduler::Engine::submit
+//! [`SpecEngine::submit`]: super::speculative::SpecEngine::submit
+//! [`ServePool::submit`]: super::router::ServePool::submit
 
-use std::time::Instant;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Shared cancellation flag: one per request, shared by every clone of the
+/// request (the pool dispatcher's outstanding copy, the owning worker's
+/// copy) and by the [`SubmitHandle`] — so a `cancel()` reaches the owning
+/// worker's engine no matter where the request currently lives.
+#[derive(Debug, Clone, Default)]
+pub struct CancelFlag(Arc<AtomicBool>);
+
+impl CancelFlag {
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Why a request stopped generating (carried on [`FinishedRequest`] and
+/// the terminal [`Event::Finished`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// the generation budget (`max_new_tokens`) was reached
+    Length,
+    /// the configured stop token was sampled
+    StopToken,
+    /// the client cancelled via [`SubmitHandle::cancel`]; `generated`
+    /// holds the partial output produced before the cancel was observed
+    Cancelled,
+    /// [`Request::deadline`] elapsed before completion; `generated` holds
+    /// the partial output
+    Deadline,
+    /// the owning pool worker died and no survivor could re-serve the
+    /// request (every worker dead); `generated` is empty
+    WorkerDied,
+}
+
+/// One step of a request's streaming lifecycle.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// the first generated token exists (the TTFT marker); always
+    /// immediately followed by `Token { index: 0, .. }`
+    FirstToken,
+    /// one generated token; `index` is its position in `generated`.  The
+    /// speculative engine emits these only when the verifier consolidates
+    /// a round — an emitted token is *committed*, never an unverified
+    /// draft.  After a pool worker dies mid-request the replacement run
+    /// re-streams from index 0 (consumers keyed by index should reset on
+    /// a lower-than-expected index).
+    Token { tok: u32, index: usize },
+    /// terminal: the request retired (any [`FinishReason`]); also fed to
+    /// the pool's aggregate `results` channel
+    Finished(FinishedRequest),
+}
+
+/// Per-request handle returned by every submit path: the event stream plus
+/// cancellation.
+///
+/// The synchronous engines ([`Engine`], [`SpecEngine`]) emit events while
+/// their owner calls `step()`/`run()`, so events buffer in the channel
+/// until drained (`try_event` between manual steps streams live); the
+/// worker pool emits in real time from its worker threads.  Dropping the
+/// handle is free — the engines' sends to a dropped receiver are no-ops —
+/// so batch callers can keep ignoring the return value.
+///
+/// [`Engine`]: super::scheduler::Engine
+/// [`SpecEngine`]: super::speculative::SpecEngine
+pub struct SubmitHandle {
+    id: u64,
+    cancel: CancelFlag,
+    events: mpsc::Receiver<Event>,
+}
+
+impl SubmitHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request cancellation.  The owning engine observes the flag at its
+    /// next step and retires the request through the normal path: slot
+    /// freed, partial `generated` returned with
+    /// [`FinishReason::Cancelled`], state-cache session entry still
+    /// published for resumable turns.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// Non-blocking: the next buffered event, if any.
+    pub fn try_event(&self) -> Option<Event> {
+        self.events.try_recv().ok()
+    }
+
+    /// Blocking: the next event; `None` once the serving side is gone
+    /// (engine dropped / pool shut down) with no event buffered.
+    pub fn next_event(&self) -> Option<Event> {
+        self.events.recv().ok()
+    }
+
+    /// Blocking with a timeout; `None` on timeout or disconnect.
+    pub fn next_event_timeout(&self, timeout: Duration) -> Option<Event> {
+        self.events.recv_timeout(timeout).ok()
+    }
+
+    /// Drain events (blocking) until the terminal [`Event::Finished`]
+    /// arrives; `None` if the channel closes first.  Intermediate
+    /// `FirstToken`/`Token` events are discarded — batch-style callers
+    /// that only want the result.
+    pub fn wait_finished(&self) -> Option<FinishedRequest> {
+        while let Some(ev) = self.next_event() {
+            if let Event::Finished(f) = ev {
+                return Some(f);
+            }
+        }
+        None
+    }
+}
 
 /// An inference request (prompt + generation budget).
 #[derive(Debug, Clone)]
@@ -18,10 +155,22 @@ pub struct Request {
     /// stored transcript resumes from that state with zero prefix
     /// recompute (`statecache::StateCache::lookup_session`)
     pub session_id: Option<u64>,
+    /// optional completion deadline, measured from `submitted_at`; the
+    /// owning engine checks it every step and retires an expired request
+    /// with [`FinishReason::Deadline`] and whatever was generated so far
+    pub deadline: Option<Duration>,
+    /// admission priority: higher admits first; FIFO within a priority
+    /// level (default 0 keeps the old strict-FIFO behavior)
+    pub priority: i32,
     /// when the request entered the system (set at construction) — the
-    /// anchor for TTFT/latency, so queue time in a pool dispatcher or an
-    /// engine's pending list counts toward the reported latency
+    /// anchor for TTFT/latency and the deadline, so queue time in a pool
+    /// dispatcher or an engine's pending list counts toward both
     pub submitted_at: Instant,
+    /// shared cancellation flag (all clones observe the same flag)
+    pub(crate) cancel: CancelFlag,
+    /// per-request event stream, attached by the submit path; `None` for
+    /// requests injected through a raw pool `sender()` clone
+    pub(crate) events: Option<mpsc::Sender<Event>>,
 }
 
 impl Request {
@@ -33,7 +182,11 @@ impl Request {
             variant: variant.to_string(),
             stop_token: None,
             session_id: None,
+            deadline: None,
+            priority: 0,
             submitted_at: Instant::now(),
+            cancel: CancelFlag::default(),
+            events: None,
         }
     }
 
@@ -42,6 +195,73 @@ impl Request {
         self.session_id = Some(session_id);
         self
     }
+
+    /// Bound completion latency: past `deadline` (from submission) the
+    /// request retires with [`FinishReason::Deadline`].
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Admission priority (higher first; FIFO within a level).
+    pub fn with_priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Halt generation when `tok` is sampled.
+    pub fn with_stop_token(mut self, tok: u32) -> Self {
+        self.stop_token = Some(tok);
+        self
+    }
+
+    /// Clone of the request's cancellation flag — for callers submitting
+    /// through a raw pool `sender()` clone, which bypasses
+    /// [`SubmitHandle`] creation.
+    pub fn cancel_flag(&self) -> CancelFlag {
+        self.cancel.clone()
+    }
+
+    /// Create the event channel and the client-side [`SubmitHandle`].
+    /// Called exactly once, by the public submit paths.
+    pub(crate) fn attach_events(&mut self) -> SubmitHandle {
+        debug_assert!(self.events.is_none(), "request submitted twice");
+        let (tx, rx) = mpsc::channel();
+        self.events = Some(tx);
+        SubmitHandle { id: self.id, cancel: self.cancel.clone(), events: rx }
+    }
+
+    /// Emit a lifecycle event to the handle, if one is attached and still
+    /// listening (a dropped handle makes this a no-op).
+    pub(crate) fn emit(&self, ev: Event) {
+        if let Some(tx) = &self.events {
+            let _ = tx.send(ev);
+        }
+    }
+
+    /// Should this request stop now for a lifecycle reason?  Cancellation
+    /// wins over an expired deadline.
+    pub(crate) fn lifecycle_reason(&self) -> Option<FinishReason> {
+        if self.cancel.is_cancelled() {
+            return Some(FinishReason::Cancelled);
+        }
+        match self.deadline {
+            Some(d) if self.submitted_at.elapsed() >= d => Some(FinishReason::Deadline),
+            _ => None,
+        }
+    }
+}
+
+/// Insert into a pending queue keeping higher [`Request::priority`] first
+/// and FIFO order within a priority level (all-default-priority traffic
+/// degenerates to plain `push_back`, preserving the old admission order).
+pub(crate) fn insert_by_priority(queue: &mut VecDeque<Request>, req: Request) {
+    let pos = queue
+        .iter()
+        .rposition(|r| r.priority >= req.priority)
+        .map(|p| p + 1)
+        .unwrap_or(0);
+    queue.insert(pos, req);
 }
 
 /// Speculative-decoding accounting for one request.
@@ -69,6 +289,9 @@ impl SpecStats {
 pub struct FinishedRequest {
     pub id: u64,
     pub generated: Vec<u32>,
+    /// why generation stopped (partial `generated` for
+    /// `Cancelled`/`Deadline`, empty for `WorkerDied`)
+    pub finish_reason: FinishReason,
     /// time-to-first-token, seconds (prefill latency)
     pub ttft_s: f64,
     /// total latency from submission
@@ -88,6 +311,9 @@ pub(crate) struct InFlight {
     pub next_token: u32,
     pub submitted: Instant,
     pub first_token_at: Option<Instant>,
+    /// when the latest token was emitted — the TPOT (inter-token latency)
+    /// anchor
+    pub last_token_at: Option<Instant>,
 }
 
 /// Greedy (argmax) sampling over one logits row.
@@ -120,8 +346,67 @@ mod tests {
         assert_eq!(r.variant, "fastmamba");
         assert!(r.stop_token.is_none());
         assert!(r.session_id.is_none());
-        let r = r.with_session(99);
+        assert!(r.deadline.is_none());
+        assert_eq!(r.priority, 0);
+        let r = r
+            .with_session(99)
+            .with_deadline(Duration::from_millis(250))
+            .with_priority(3)
+            .with_stop_token(5);
         assert_eq!(r.session_id, Some(99));
+        assert_eq!(r.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(r.priority, 3);
+        assert_eq!(r.stop_token, Some(5));
+    }
+
+    #[test]
+    fn cancel_flag_is_shared_across_clones_and_handle() {
+        let mut r = Request::new(1, vec![1], 4, "fp32");
+        let clone = r.clone(); // e.g. the dispatcher's outstanding copy
+        let h = r.attach_events();
+        assert!(r.lifecycle_reason().is_none());
+        h.cancel();
+        assert!(h.is_cancelled());
+        assert_eq!(r.lifecycle_reason(), Some(FinishReason::Cancelled));
+        assert_eq!(clone.lifecycle_reason(), Some(FinishReason::Cancelled));
+    }
+
+    #[test]
+    fn deadline_expires_and_cancel_wins() {
+        let r = Request::new(1, vec![1], 4, "fp32").with_deadline(Duration::ZERO);
+        assert_eq!(r.lifecycle_reason(), Some(FinishReason::Deadline));
+        r.cancel.cancel();
+        assert_eq!(r.lifecycle_reason(), Some(FinishReason::Cancelled));
+        let r = Request::new(2, vec![1], 4, "fp32").with_deadline(Duration::from_secs(3600));
+        assert!(r.lifecycle_reason().is_none());
+    }
+
+    #[test]
+    fn events_roundtrip_and_dropped_handle_is_noop() {
+        let mut r = Request::new(4, vec![1], 4, "fp32");
+        r.emit(Event::FirstToken); // no channel attached: no-op
+        let h = r.attach_events();
+        r.emit(Event::FirstToken);
+        r.emit(Event::Token { tok: 9, index: 0 });
+        assert!(matches!(h.try_event(), Some(Event::FirstToken)));
+        assert!(matches!(h.try_event(), Some(Event::Token { tok: 9, index: 0 })));
+        assert!(h.try_event().is_none());
+        drop(h);
+        r.emit(Event::Token { tok: 1, index: 1 }); // dropped receiver: no-op
+    }
+
+    #[test]
+    fn priority_queue_orders_high_first_fifo_within() {
+        let mut q = VecDeque::new();
+        let mk = |id: u64, p: i32| Request::new(id, vec![1], 1, "fp32").with_priority(p);
+        insert_by_priority(&mut q, mk(0, 0));
+        insert_by_priority(&mut q, mk(1, 0));
+        insert_by_priority(&mut q, mk(2, 5));
+        insert_by_priority(&mut q, mk(3, 5));
+        insert_by_priority(&mut q, mk(4, -1));
+        insert_by_priority(&mut q, mk(5, 0));
+        let order: Vec<u64> = q.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![2, 3, 0, 1, 5, 4]);
     }
 
     #[test]

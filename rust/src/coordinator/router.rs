@@ -23,6 +23,7 @@ use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -30,7 +31,9 @@ use crate::backend::InferenceBackend;
 use crate::statecache::StateCache;
 
 use super::metrics::{Metrics, WorkerStat};
-use super::request::{FinishedRequest, Request};
+use super::request::{
+    insert_by_priority, Event, FinishReason, FinishedRequest, Request, SubmitHandle,
+};
 use super::scheduler::{Engine, EngineConfig};
 use super::speculative::{SpecConfig, SpecEngine};
 
@@ -121,12 +124,14 @@ pub struct PoolReport {
     pub load_peak: Vec<usize>,
     pub capacity_per_worker: usize,
     /// worker failures (dead backends, engine errors).  A dead worker's
-    /// unfinished requests re-route to the survivors, so results still
-    /// arrive unless *every* worker dies — in which case the pool shuts
-    /// down and the results channel closes.  Empty on a clean run.
-    /// The dropped-request tally counts requests that reached the
-    /// dispatcher; submissions still in flight through the ingress channel
-    /// when an all-dead pool shuts down are lost without being counted.
+    /// genuinely unfinished requests re-route to the survivors (its own
+    /// `Done` results always arrive first, so nothing duplicates; a
+    /// re-served request re-streams from token index 0).  If *every*
+    /// worker dies, each remaining request is finished with
+    /// [`FinishReason::WorkerDied`] — terminal event + aggregate result,
+    /// empty output — and the pool shuts down.  Empty on a clean run.
+    /// Submissions still in flight through the ingress channel when an
+    /// all-dead pool shuts down are lost without being counted.
     pub errors: Vec<String>,
 }
 
@@ -140,13 +145,22 @@ pub struct ServePool {
 }
 
 impl ServePool {
-    /// Queue a request for dispatch.
-    pub fn submit(&self, req: Request) -> Result<()> {
+    /// Queue a request for dispatch and return its streaming
+    /// [`SubmitHandle`].  The owning worker emits events in real time;
+    /// `cancel()` travels with the request (the flag is shared by every
+    /// clone, including the dispatcher's outstanding copy), so whichever
+    /// worker holds the request observes it at its next engine step and
+    /// frees the state slot immediately.  The terminal `Finished` event
+    /// also feeds the aggregate [`ServePool::results`] channel, so batch
+    /// collectors keep working unchanged.
+    pub fn submit(&self, mut req: Request) -> Result<SubmitHandle> {
+        let handle = req.attach_events();
         self.submit
             .as_ref()
             .ok_or_else(|| anyhow!("pool ingress already closed"))?
             .send(req)
-            .map_err(|_| anyhow!("pool dispatcher is gone"))
+            .map_err(|_| anyhow!("pool dispatcher is gone"))?;
+        Ok(handle)
     }
 
     /// Clone the ingress channel (for concurrent submitters).
@@ -212,9 +226,11 @@ enum WorkerEngine<'be> {
 
 impl<'be> WorkerEngine<'be> {
     fn submit(&mut self, req: Request) {
+        // enqueue, not submit: the event channel was attached by
+        // ServePool::submit before the request crossed into this worker
         match self {
-            Self::Plain(e) => e.submit(req),
-            Self::Spec(e) => e.submit(req),
+            Self::Plain(e) => e.enqueue(req),
+            Self::Spec(e) => e.enqueue(req),
         }
     }
 
@@ -375,6 +391,23 @@ fn dispatch(
     let mut backlog: VecDeque<Request> = VecDeque::new();
     let mut ingress_open = true;
     let mut errors: Vec<String> = Vec::new();
+    // requests the dispatcher itself resolved (cancelled/expired while
+    // queued, or terminally lost to worker death) — folded into the merged
+    // metrics so the aggregate accounts for every submitted request
+    let mut dispatcher = Metrics::default();
+
+    /// Terminal result for a request that never finished on a worker.
+    fn dropped_fin(req: &Request, reason: FinishReason) -> FinishedRequest {
+        FinishedRequest {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            generated: Vec::new(),
+            finish_reason: reason,
+            ttft_s: 0.0,
+            total_s: req.submitted_at.elapsed().as_secs_f64(),
+            spec: None,
+        }
+    }
 
     fn bury(
         w: usize,
@@ -384,6 +417,9 @@ fn dispatch(
         errors: &mut Vec<String>,
     ) {
         alive[w] = false;
+        // its own Done messages always precede the WorkerDead notice on the
+        // shared channel, so everything still listed here is genuinely
+        // unfinished — re-routing never duplicates a result
         let lost = std::mem::take(&mut outstanding[w]);
         if !lost.is_empty() {
             errors.push(format!(
@@ -391,12 +427,32 @@ fn dispatch(
                 lost.len()
             ));
             for r in lost {
-                backlog.push_back(r);
+                insert_by_priority(backlog, r);
             }
         }
     }
 
     loop {
+        // resolve cancelled / past-deadline backlog entries without ever
+        // occupying a worker: terminal event + aggregate result right here.
+        // (Requests already on a worker are the worker engine's job — the
+        // shared flag travels with the request, so the owning worker sees
+        // the cancellation at its next step and frees the slot.)
+        let mut i = 0;
+        while i < backlog.len() {
+            if let Some(reason) = backlog[i].lifecycle_reason() {
+                let req = backlog.remove(i).expect("index in bounds");
+                let fin = dropped_fin(&req, reason);
+                dispatcher.note_finish_reason(reason);
+                dispatcher.requests_completed += 1;
+                dispatcher.request_latency_s.push(fin.total_s);
+                req.emit(Event::Finished(fin.clone()));
+                let _ = tx_done.send(fin);
+            } else {
+                i += 1;
+            }
+        }
+
         // place as much backlog as worker capacity allows; `route` returning
         // None means every live worker is at capacity — wait for a `Done`
         while !backlog.is_empty() {
@@ -430,9 +486,10 @@ fn dispatch(
         if !alive.iter().any(|a| *a) {
             // nothing can make progress; drain the queue — forwarding
             // results the dead workers already computed and recording any
-            // still-queued death notices — then break so tx_done drops and
-            // readers waiting on the results channel error out instead of
-            // hanging
+            // still-queued death notices — then finish every remaining
+            // request with `FinishReason::WorkerDied` (terminal event +
+            // aggregate result, empty output) so stream consumers and
+            // result readers unblock instead of hanging
             while let Ok(msg) = pool_rx.try_recv() {
                 match msg {
                     Msg::Done { worker, fin } => {
@@ -448,15 +505,25 @@ fn dispatch(
                         bury(worker, &mut alive, &mut outstanding, &mut backlog,
                              &mut errors);
                     }
-                    Msg::Incoming(req) => backlog.push_back(req),
+                    Msg::Incoming(req) => insert_by_priority(&mut backlog, req),
                     Msg::IngressClosed => {}
                 }
             }
-            let lost = backlog.len()
-                + outstanding.iter().map(|o| o.len()).sum::<usize>();
+            let mut lost = 0usize;
+            for req in backlog
+                .drain(..)
+                .chain(outstanding.iter_mut().flat_map(|o| o.drain(..)))
+            {
+                lost += 1;
+                let fin = dropped_fin(&req, FinishReason::WorkerDied);
+                dispatcher.requests_completed += 1;
+                dispatcher.request_latency_s.push(fin.total_s);
+                req.emit(Event::Finished(fin.clone()));
+                let _ = tx_done.send(fin);
+            }
             if lost > 0 {
                 errors.push(format!(
-                    "{lost} request(s) dropped: every worker died"
+                    "{lost} request(s) finished with WorkerDied: every worker died"
                 ));
             }
             break;
@@ -468,8 +535,21 @@ fn dispatch(
             break;
         }
 
-        match pool_rx.recv() {
-            Ok(Msg::Incoming(req)) => backlog.push_back(req),
+        // with queued requests waiting, wake periodically even if no worker
+        // traffic arrives, so the lifecycle sweep can resolve a backlog
+        // cancellation / deadline expiry promptly instead of only at the
+        // next Done message
+        let msg = if backlog.is_empty() {
+            pool_rx.recv().map_err(|_| ())
+        } else {
+            match pool_rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(m) => Ok(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue, // re-run the sweep
+                Err(mpsc::RecvTimeoutError::Disconnected) => Err(()),
+            }
+        };
+        match msg {
+            Ok(Msg::Incoming(req)) => insert_by_priority(&mut backlog, req),
             Ok(Msg::IngressClosed) => ingress_open = false,
             Ok(Msg::Done { worker, fin }) => {
                 if let Some(pos) =
@@ -483,7 +563,7 @@ fn dispatch(
                 errors.push(format!("worker {worker}: {error}"));
                 bury(worker, &mut alive, &mut outstanding, &mut backlog, &mut errors);
             }
-            Err(_) => break, // every sender (forwarder + workers) is gone
+            Err(()) => break, // every sender (forwarder + workers) is gone
         }
     }
 
@@ -511,9 +591,18 @@ fn dispatch(
             utilization: m.utilization(),
             cache_hits: m.cache_hits,
             cache_tokens_saved: m.cache_tokens_saved,
+            cancelled: m.cancelled_requests,
+            deadline_expired: m.deadline_expired,
+            tpot_p50_s: m.tpot_p50(),
         });
     }
     merged.worker_stats = stats;
+    // fold in the requests the dispatcher resolved itself (queued
+    // cancellations/expiries, worker-death drops) so the aggregate counts
+    // every submitted request exactly once — including their latency
+    // samples, so percentiles cover the same population as
+    // requests_completed
+    merged.merge(&dispatcher);
     Ok(PoolReport {
         merged,
         per_worker,
@@ -895,5 +984,231 @@ mod tests {
             2,
         );
         assert_eq!(want, got, "speculative pool diverged from plain greedy");
+    }
+
+    /// Block (with a bound) until a handle's terminal event arrives.
+    fn finished_within(h: &SubmitHandle, secs: u64) -> FinishedRequest {
+        use std::time::Duration;
+        loop {
+            match h.next_event_timeout(Duration::from_secs(secs)) {
+                Some(Event::Finished(f)) => return f,
+                Some(_) => {}
+                None => panic!("req {}: no terminal event within {secs}s", h.id()),
+            }
+        }
+    }
+
+    #[test]
+    fn pool_streams_are_token_identical_to_batch_results() {
+        use crate::model::Variant;
+        // 4 workers, all five variants: every per-request stream must be
+        // bit-identical to the batch result delivered on the aggregate
+        // channel (which existing tests pin to the 1-worker engine output)
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let pool = serve_pool(
+            make,
+            PoolConfig {
+                engine: EngineConfig { max_active: 4, greedy_chunking: true },
+                n_workers: 4,
+                spec: None,
+                cache: None,
+            },
+        );
+        let n = 20usize;
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let plen = 5 + (i % 7) * 4;
+            let prompt: Vec<u32> =
+                (0..plen).map(|j| ((i * 131 + j * 17) % 128) as u32).collect();
+            let variant = Variant::ALL[i % 5].name();
+            handles
+                .push(pool.submit(Request::new(i as u64, prompt, 3 + (i % 3), variant)).unwrap());
+        }
+        let mut results: Vec<FinishedRequest> =
+            (0..n).map(|_| pool.results.recv().expect("pool result")).collect();
+        let report = pool.finish().unwrap();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        results.sort_by_key(|f| f.id);
+        for h in &handles {
+            let want = &results[h.id() as usize];
+            let mut toks = Vec::new();
+            let mut first = false;
+            let mut fin = None;
+            while let Some(ev) = h.try_event() {
+                match ev {
+                    Event::FirstToken => {
+                        assert!(toks.is_empty());
+                        first = true;
+                    }
+                    Event::Token { tok, index } => {
+                        assert_eq!(index, toks.len(), "req {}", h.id());
+                        toks.push(tok);
+                    }
+                    Event::Finished(f) => fin = Some(f),
+                }
+            }
+            assert!(first, "req {}", h.id());
+            assert_eq!(toks, want.generated, "req {}: stream != batch result", h.id());
+            let fin = fin.expect("terminal event");
+            assert_eq!(fin.generated, want.generated);
+            assert_eq!(fin.finish_reason, FinishReason::Length);
+        }
+        // TPOT roll-ups made it through the merge
+        assert!(!report.merged.tpot_s.is_empty());
+        assert_eq!(report.merged.worker_stats.len(), 4);
+    }
+
+    #[test]
+    fn pool_cancel_frees_capacity_for_queued_request() {
+        use std::time::Duration;
+        // four capacity-1 workers saturated by never-ending requests, one
+        // queued short request: a mid-generation cancel must free a slot
+        // (the queued request completes) and return the partial greedy
+        // prefix with FinishReason::Cancelled
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let n_workers = 4usize;
+        let pool = serve_pool(
+            make,
+            PoolConfig {
+                engine: EngineConfig { max_active: 1, greedy_chunking: true },
+                n_workers,
+                spec: None,
+                cache: None,
+            },
+        );
+        let prompt: Vec<u32> = (0..17).map(|j| ((j * 13 + 5) % 128) as u32).collect();
+        // reference greedy trace (same seed => same weights as the workers)
+        let reference = {
+            let be = micro_backend();
+            let mut eng =
+                Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true });
+            eng.submit(Request::new(99, prompt.clone(), 4096, "fp32"));
+            eng.run().unwrap();
+            eng.finished[0].generated.clone()
+        };
+
+        let long = 100_000usize;
+        let victims: Vec<SubmitHandle> = (0..n_workers)
+            .map(|i| pool.submit(Request::new(i as u64, prompt.clone(), long, "fp32")).unwrap())
+            .collect();
+        // wait until every worker is demonstrably mid-generation
+        for v in &victims {
+            let mut toks = 0;
+            while toks < 2 {
+                match v.next_event_timeout(Duration::from_secs(60)).expect("victim streams")
+                {
+                    Event::Token { .. } => toks += 1,
+                    Event::Finished(f) => panic!("victim finished early: {f:?}"),
+                    Event::FirstToken => {}
+                }
+            }
+        }
+        // every worker at capacity: the queued request cannot start
+        let queued = pool.submit(Request::new(10, prompt.clone(), 4, "fp32")).unwrap();
+        assert!(queued.try_event().is_none(), "queued request must wait for capacity");
+
+        // cancel one victim mid-generation -> its slot frees -> the queued
+        // request is placed and completes
+        victims[0].cancel();
+        let vfin = finished_within(&victims[0], 60);
+        assert_eq!(vfin.finish_reason, FinishReason::Cancelled);
+        assert!(!vfin.generated.is_empty() && vfin.generated.len() < long);
+        let n = vfin.generated.len().min(reference.len());
+        assert_eq!(vfin.generated[..n], reference[..n], "partial != greedy prefix");
+
+        let qfin = finished_within(&queued, 60);
+        assert_eq!(qfin.finish_reason, FinishReason::Length);
+        assert_eq!(qfin.generated[..], reference[..4]);
+
+        // wind down the remaining victims
+        for v in &victims[1..] {
+            v.cancel();
+        }
+        for v in &victims[1..] {
+            assert_eq!(finished_within(v, 60).finish_reason, FinishReason::Cancelled);
+        }
+        let report = pool.finish().unwrap();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        // capacity accounting: the queued request got a slot because the
+        // cancel freed one, never because a worker overcommitted
+        assert_eq!(report.capacity_per_worker, 1);
+        for (w, &peak) in report.load_peak.iter().enumerate() {
+            assert!(peak <= 1, "worker {w} overcommitted: peak {peak}");
+        }
+        assert_eq!(report.merged.cancelled_requests, 4);
+        assert_eq!(report.merged.requests_completed, 5);
+        assert_eq!(report.assignments.iter().sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn dispatcher_cancels_queued_request_without_a_worker() {
+        use std::time::Duration;
+        // a request cancelled while still in the dispatcher backlog is
+        // resolved by the dispatcher itself: terminal event + aggregate
+        // result, no worker ever touches it
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let pool = serve_pool(
+            make,
+            PoolConfig {
+                engine: EngineConfig { max_active: 1, greedy_chunking: true },
+                n_workers: 1,
+                spec: None,
+                cache: None,
+            },
+        );
+        let prompt: Vec<u32> = (0..9).map(|j| ((j * 13 + 5) % 128) as u32).collect();
+        let victim = pool.submit(Request::new(0, prompt.clone(), 100_000, "fp32")).unwrap();
+        // wait until the victim is streaming, so the next submit must queue
+        loop {
+            match victim.next_event_timeout(Duration::from_secs(60)) {
+                Some(Event::Token { .. }) => break,
+                Some(_) => {}
+                None => panic!("victim never streamed"),
+            }
+        }
+        let queued = pool.submit(Request::new(1, prompt, 4, "fp32")).unwrap();
+        queued.cancel();
+        // the dispatcher's bounded wait re-runs the sweep even while the
+        // victim keeps generating — the queued cancel must resolve without
+        // waiting for any worker traffic
+        let qf = finished_within(&queued, 60);
+        assert_eq!(qf.finish_reason, FinishReason::Cancelled);
+        assert!(qf.generated.is_empty(), "never admitted: no tokens");
+        victim.cancel(); // wind down the never-ending request
+        assert_eq!(finished_within(&victim, 60).finish_reason, FinishReason::Cancelled);
+        let report = pool.finish().unwrap();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        assert_eq!(report.merged.cancelled_requests, 2);
+        assert_eq!(report.merged.requests_completed, 2);
+    }
+
+    #[test]
+    fn all_workers_dead_finishes_requests_with_worker_died() {
+        use std::time::Duration;
+        // the factory stalls long enough for the submission to reach the
+        // dispatcher and be routed, then fails: with no survivor to
+        // re-route to, the request must finish with WorkerDied on both the
+        // handle and the aggregate channel instead of vanishing
+        let make = || -> Result<Box<dyn InferenceBackend>> {
+            std::thread::sleep(Duration::from_millis(200));
+            Err(anyhow!("backend construction failed on purpose"))
+        };
+        let pool = serve_pool(
+            make,
+            PoolConfig {
+                engine: EngineConfig { max_active: 2, greedy_chunking: true },
+                n_workers: 1,
+                spec: None,
+                cache: None,
+            },
+        );
+        let h = pool.submit(Request::new(0, vec![1, 2, 3], 4, "fp32")).unwrap();
+        let f = pool.results.recv().expect("terminal WorkerDied result");
+        assert_eq!(f.finish_reason, FinishReason::WorkerDied);
+        assert!(f.generated.is_empty());
+        let hf = h.wait_finished().expect("terminal event on the handle");
+        assert_eq!(hf.finish_reason, FinishReason::WorkerDied);
+        let report = pool.finish().unwrap();
+        assert!(!report.errors.is_empty(), "worker failure must be recorded");
     }
 }

@@ -20,9 +20,13 @@ use anyhow::Result;
 use crate::backend::InferenceBackend;
 use crate::statecache::StateCache;
 
+use super::admission::{finish_unadmitted, seed_from_cache, AdmissionSeed};
 use super::batcher::{full_bucket_plan, DecodeBatcher};
 use super::metrics::Metrics;
-use super::request::{argmax, FinishedRequest, InFlight, Request};
+use super::request::{
+    argmax, insert_by_priority, Event, FinishReason, FinishedRequest, InFlight, Request,
+    SubmitHandle,
+};
 use super::state::StatePool;
 
 #[derive(Debug, Clone)]
@@ -84,8 +88,20 @@ impl<'be> Engine<'be> {
         self
     }
 
-    pub fn submit(&mut self, req: Request) {
-        self.pending.push_back(req);
+    /// Queue a request and return its streaming [`SubmitHandle`] (events
+    /// buffer until `step()`/`run()` produces them; dropping the handle
+    /// reverts to batch-style collection through [`Engine::finished`]).
+    pub fn submit(&mut self, mut req: Request) -> SubmitHandle {
+        let handle = req.attach_events();
+        self.enqueue(req);
+        handle
+    }
+
+    /// Queue a request whose event channel is already attached (the pool
+    /// worker path: [`super::router::ServePool::submit`] created the
+    /// handle before the request crossed into this worker).
+    pub(crate) fn enqueue(&mut self, req: Request) {
+        insert_by_priority(&mut self.pending, req);
         self.metrics
             .note_queue_depth(self.pending.len() + self.active.len());
     }
@@ -122,56 +138,25 @@ impl<'be> Engine<'be> {
             // of the user-visible TTFT
             let submitted = req.submitted_at;
 
-            let (mut chunks, mut remainder) = self.chunk_plan(req.prompt.len());
-            // state-cache seeding: a session hit (the previous turn's exact
-            // end state, which can reach past any bucket boundary) beats a
-            // prefix hit (longest bucket-aligned snapshot of this prompt's
-            // own canonical chunk plan); either way only the uncovered
-            // suffix is prefilled
-            let mut offset = 0usize; // prompt tokens the slot has consumed
-            let mut done_chunks: Vec<usize> = Vec::new(); // canonical chunk prefix
-            let mut prefix_cacheable = self.cache.is_some();
-            if let Some(cache) = self.cache.clone() {
-                let probed = req.session_id.is_some() || !chunks.is_empty();
-                let mut hit = false;
-                if let Some(sid) = req.session_id {
-                    if let Some(s) = cache.lookup_session(sid, &req.variant, &req.prompt)
-                    {
-                        if self.pool.seed(slot, &s.conv, &s.ssm) {
-                            offset = s.covered;
-                            // the session state's provenance is the previous
-                            // turn's trajectory, not this prompt's canonical
-                            // chunk plan: plan the suffix fresh and insert no
-                            // prefix entries from it
-                            let (c, r) = full_bucket_plan(
-                                &self.prefill_buckets,
-                                req.prompt.len() - offset - 1,
-                            );
-                            chunks = c;
-                            remainder = r + 1;
-                            prefix_cacheable = false;
-                            hit = true;
-                        }
-                    }
-                }
-                if !hit {
-                    if let Some(p) = cache.lookup_prefix(&req.variant, &req.prompt, &chunks)
-                    {
-                        if self.pool.seed(slot, &p.conv, &p.ssm) {
-                            offset = p.covered;
-                            done_chunks = chunks[..p.chunks_used].to_vec();
-                            chunks = chunks[p.chunks_used..].to_vec();
-                            hit = true;
-                        }
-                    }
-                }
-                if hit {
-                    self.metrics.cache_hits += 1;
-                    self.metrics.cache_tokens_saved += offset as u64;
-                } else if probed {
-                    self.metrics.cache_misses += 1;
-                }
-            }
+            let (chunks, _) = self.chunk_plan(req.prompt.len());
+            // state-cache seeding (shared with SpecEngine::admit — the two
+            // admission paths must stay in lock-step for entry interchange)
+            let AdmissionSeed { mut offset, chunks, mut done_chunks, prefix_cacheable } =
+                seed_from_cache(
+                    self.cache.as_ref(),
+                    &mut self.pool,
+                    &mut self.metrics,
+                    slot,
+                    &req.variant,
+                    &req.prompt,
+                    req.session_id,
+                    &self.prefill_buckets,
+                    chunks,
+                );
+            // whatever the seeded coverage and remaining chunks, the
+            // decode-path remainder is the uncovered tail (always >= 1:
+            // chunk plans reserve the final prompt token)
+            let remainder = req.prompt.len() - offset - chunks.iter().sum::<usize>();
             for chunk_len in chunks {
                 let toks: Vec<i32> = req.prompt[offset..offset + chunk_len]
                     .iter()
@@ -220,24 +205,29 @@ impl<'be> Engine<'be> {
             // (chunk_plan guarantees remainder >= 1, so last_logits is set)
             let vocab = self.be.cfg().vocab_size;
             let first = argmax(&last_logits.expect("remainder >= 1")[..vocab]);
+            let now = Instant::now();
             let mut infl = InFlight {
                 next_token: 0,
                 slot,
                 generated: Vec::new(),
                 submitted,
                 first_token_at: None,
+                last_token_at: None,
                 req,
             };
             infl.next_token = first;
-            infl.first_token_at = Some(Instant::now());
+            infl.first_token_at = Some(now);
+            infl.last_token_at = Some(now);
             infl.generated.push(first);
+            infl.req.emit(Event::FirstToken);
+            infl.req.emit(Event::Token { tok: first, index: 0 });
             self.metrics.ttft_s.push(submitted.elapsed().as_secs_f64());
             self.metrics.tokens_generated += 1;
             // finished immediately?
-            if infl.generated.len() >= infl.req.max_new_tokens
-                || infl.req.stop_token == Some(first)
-            {
-                self.retire(infl);
+            if infl.req.stop_token == Some(first) {
+                self.retire(infl, FinishReason::StopToken);
+            } else if infl.generated.len() >= infl.req.max_new_tokens {
+                self.retire(infl, FinishReason::Length);
             } else {
                 self.active.push(infl);
             }
@@ -245,7 +235,7 @@ impl<'be> Engine<'be> {
         Ok(())
     }
 
-    fn retire(&mut self, infl: InFlight) {
+    fn retire(&mut self, infl: InFlight, reason: FinishReason) {
         // session entries capture the end-of-turn state before the slot is
         // recycled.  The state has consumed prompt + generated[..n-1]: the
         // last sampled token was never fed back, so it is not part of the
@@ -258,21 +248,51 @@ impl<'be> Engine<'be> {
             cache.insert_session(sid, &infl.req.variant, &toks, &st.conv, &st.ssm);
         }
         self.pool.release(infl.slot);
+        self.metrics.note_finish_reason(reason);
         self.metrics.requests_completed += 1;
         self.metrics
             .request_latency_s
             .push(infl.submitted.elapsed().as_secs_f64());
-        self.finished.push(FinishedRequest {
+        let fin = FinishedRequest {
             id: infl.req.id,
             prompt_len: infl.req.prompt.len(),
             generated: infl.generated,
+            finish_reason: reason,
             ttft_s: infl
                 .first_token_at
                 .map(|t| (t - infl.submitted).as_secs_f64())
                 .unwrap_or(0.0),
             total_s: infl.submitted.elapsed().as_secs_f64(),
             spec: None,
-        });
+        };
+        infl.req.emit(Event::Finished(fin.clone()));
+        self.finished.push(fin);
+    }
+
+    /// Retire cancelled / past-deadline requests with the right
+    /// [`FinishReason`].  Active requests go through the normal retire
+    /// path — slot freed immediately, partial `generated` returned,
+    /// state-cache session entry still published for resumable turns;
+    /// still-pending requests finish with empty output and no slot churn.
+    fn sweep_lifecycle(&mut self) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            if let Some(reason) = self.pending[i].lifecycle_reason() {
+                let req = self.pending.remove(i).expect("index in bounds");
+                finish_unadmitted(&mut self.metrics, &mut self.finished, req, reason);
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.active.len() {
+            if let Some(reason) = self.active[i].req.lifecycle_reason() {
+                let infl = self.active.swap_remove(i);
+                self.retire(infl, reason);
+            } else {
+                i += 1;
+            }
+        }
     }
 
     /// One batched decode step over all active sequences.
@@ -289,7 +309,7 @@ impl<'be> Engine<'be> {
             v
         };
         let vocab = self.be.cfg().vocab_size;
-        let mut to_retire: Vec<usize> = Vec::new();
+        let mut to_retire: Vec<(usize, FinishReason)> = Vec::new();
 
         for variant in variants {
             let idxs: Vec<usize> = self
@@ -328,31 +348,39 @@ impl<'be> Engine<'be> {
                 self.metrics.decode_padded_slots += plan.padding as u64;
                 self.metrics.decode_batch_slots += plan.bucket as u64;
 
+                let now = Instant::now();
                 for (b, &ai) in members.iter().enumerate() {
                     let logits = &out.logits[b * vocab..(b + 1) * vocab];
                     let tok = argmax(logits);
                     let infl = &mut self.active[ai];
                     infl.next_token = tok;
                     infl.generated.push(tok);
+                    if let Some(prev) = infl.last_token_at.replace(now) {
+                        self.metrics.note_tpot((now - prev).as_secs_f64());
+                    }
+                    infl.req
+                        .emit(Event::Token { tok, index: infl.generated.len() - 1 });
                     self.metrics.tokens_generated += 1;
-                    if infl.generated.len() >= infl.req.max_new_tokens
-                        || infl.req.stop_token == Some(tok)
-                    {
-                        to_retire.push(ai);
+                    if infl.req.stop_token == Some(tok) {
+                        to_retire.push((ai, FinishReason::StopToken));
+                    } else if infl.generated.len() >= infl.req.max_new_tokens {
+                        to_retire.push((ai, FinishReason::Length));
                     }
                 }
             }
         }
-        to_retire.sort_unstable();
-        for ai in to_retire.into_iter().rev() {
+        to_retire.sort_unstable_by_key(|(ai, _)| *ai);
+        for (ai, reason) in to_retire.into_iter().rev() {
             let infl = self.active.swap_remove(ai);
-            self.retire(infl);
+            self.retire(infl, reason);
         }
         Ok(())
     }
 
-    /// One scheduler iteration: admit then decode.
+    /// One scheduler iteration: resolve cancellations/deadlines, admit,
+    /// then decode.
     pub fn step(&mut self) -> Result<()> {
+        self.sweep_lifecycle();
         let depth = self.pending.len() + self.active.len();
         self.metrics.note_queue_depth(depth);
         let t0 = Instant::now();
@@ -586,18 +614,212 @@ mod tests {
         let mut probe = Engine::new(&be, EngineConfig::default());
         probe.submit(Request::new(0, prompt.clone(), 8, "fp32"));
         probe.run().unwrap();
+        assert_eq!(probe.finished[0].finish_reason, FinishReason::Length);
         let gen = probe.finished[0].generated.clone();
         let stop = gen[2];
         if gen[..2].contains(&stop) {
             return; // degenerate trace; stop position ambiguous
         }
         let mut eng = Engine::new(&be, EngineConfig::default());
-        let mut req = Request::new(0, prompt, 8, "fp32");
-        req.stop_token = Some(stop);
-        eng.submit(req);
+        eng.submit(Request::new(0, prompt, 8, "fp32").with_stop_token(stop));
         eng.run().unwrap();
         let got = &eng.finished[0].generated;
         assert_eq!(got.last(), Some(&stop));
         assert_eq!(got.len(), 3, "must halt at the stop token, got {got:?}");
+        assert_eq!(eng.finished[0].finish_reason, FinishReason::StopToken);
+    }
+
+    /// Drain a handle's buffered events into (saw_first, tokens, terminal).
+    fn drain(h: &SubmitHandle) -> (bool, Vec<u32>, Option<FinishedRequest>) {
+        let mut first = false;
+        let mut toks = Vec::new();
+        let mut fin = None;
+        while let Some(ev) = h.try_event() {
+            match ev {
+                Event::FirstToken => {
+                    assert!(!first, "FirstToken emitted twice");
+                    assert!(toks.is_empty(), "FirstToken must precede Token 0");
+                    first = true;
+                }
+                Event::Token { tok, index } => {
+                    assert_eq!(index, toks.len(), "token indexes must be contiguous");
+                    toks.push(tok);
+                }
+                Event::Finished(f) => {
+                    assert!(fin.is_none(), "Finished emitted twice");
+                    fin = Some(f);
+                }
+            }
+        }
+        (first, toks, fin)
+    }
+
+    #[test]
+    fn streamed_events_match_batch_output_for_all_variants() {
+        use crate::model::Variant;
+        // the acceptance contract: the streamed token sequence is
+        // bit-identical to the batch FinishedRequest for every variant
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let mut eng = Engine::new(&be, EngineConfig::default());
+        let mut handles = Vec::new();
+        for (i, v) in Variant::ALL.iter().enumerate() {
+            let plen = 9 + 13 * i;
+            let prompt: Vec<u32> =
+                (0..plen).map(|j| ((i * 131 + j * 17) % vocab) as u32).collect();
+            handles.push(eng.submit(Request::new(i as u64, prompt, 5, v.name())));
+        }
+        eng.run().unwrap();
+        assert_eq!(eng.finished.len(), Variant::ALL.len());
+        for h in &handles {
+            let want = eng.finished.iter().find(|f| f.id == h.id()).unwrap();
+            let (first, toks, fin) = drain(h);
+            assert!(first, "req {}", h.id());
+            assert_eq!(toks, want.generated, "req {}: stream != batch output", h.id());
+            let fin = fin.expect("terminal event");
+            assert_eq!(fin.generated, want.generated);
+            assert_eq!(fin.finish_reason, FinishReason::Length);
+        }
+    }
+
+    #[test]
+    fn cancel_mid_generation_frees_slot_and_keeps_greedy_prefix() {
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..33).map(|j| ((j * 13) % vocab) as u32).collect();
+        // reference greedy trace
+        let mut probe = Engine::new(&be, EngineConfig::default());
+        probe.submit(Request::new(9, prompt.clone(), 24, "fp32"));
+        probe.run().unwrap();
+        let want = probe.finished[0].generated.clone();
+        assert_eq!(want.len(), 24);
+
+        // one-slot engine: a long request holds the slot, a short one queues
+        let mut eng = Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true });
+        let long = eng.submit(Request::new(0, prompt.clone(), 24, "fp32"));
+        let short = eng.submit(Request::new(1, prompt.clone(), 3, "fp32"));
+        let mut streamed = 0usize;
+        while streamed < 4 {
+            eng.step().unwrap();
+            while let Some(ev) = long.try_event() {
+                if matches!(ev, Event::Token { .. }) {
+                    streamed += 1;
+                }
+            }
+            assert_eq!(eng.n_active(), 1, "short request must wait on capacity");
+        }
+        long.cancel();
+        eng.run().unwrap(); // sweeps the cancel, then serves the queued request
+
+        let long_fin = eng.finished.iter().find(|f| f.id == 0).unwrap();
+        let short_fin = eng.finished.iter().find(|f| f.id == 1).unwrap();
+        assert_eq!(long_fin.finish_reason, FinishReason::Cancelled);
+        let n = long_fin.generated.len();
+        assert!(n >= 4 && n < 24, "partial output expected, got {n}");
+        assert_eq!(long_fin.generated[..], want[..n], "partial != greedy prefix");
+        // the freed slot let the queued request run to completion
+        assert_eq!(short_fin.finish_reason, FinishReason::Length);
+        assert_eq!(short_fin.generated[..], want[..3]);
+        assert_eq!(eng.metrics.cancelled_requests, 1);
+        // both handles saw their terminal events
+        let (_, _, fin) = drain(&long);
+        assert_eq!(fin.expect("terminal").finish_reason, FinishReason::Cancelled);
+        let (_, _, fin) = drain(&short);
+        assert_eq!(fin.expect("terminal").finish_reason, FinishReason::Length);
+    }
+
+    #[test]
+    fn deadline_expiry_reports_reason() {
+        use std::time::Duration;
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..24).map(|j| ((j * 7) % vocab) as u32).collect();
+        // already expired at the first step: retired from pending, empty
+        let mut eng = Engine::new(&be, EngineConfig::default());
+        let h = eng
+            .submit(Request::new(0, prompt.clone(), 8, "fp32").with_deadline(Duration::ZERO));
+        eng.run().unwrap();
+        assert_eq!(eng.finished[0].finish_reason, FinishReason::Deadline);
+        assert!(eng.finished[0].generated.is_empty());
+        assert_eq!(eng.metrics.deadline_expired, 1);
+        let (_, _, fin) = drain(&h);
+        assert_eq!(fin.expect("terminal").finish_reason, FinishReason::Deadline);
+
+        // expires mid-generation: partial output, same reason
+        let mut eng = Engine::new(&be, EngineConfig::default());
+        eng.submit(
+            Request::new(1, prompt, 100_000, "fp32")
+                .with_deadline(Duration::from_millis(15)),
+        );
+        while eng.n_pending() > 0 || eng.n_active() > 0 {
+            eng.step().unwrap();
+            std::thread::sleep(Duration::from_millis(4));
+        }
+        let f = &eng.finished[0];
+        assert_eq!(f.finish_reason, FinishReason::Deadline);
+        assert!(f.generated.len() < 100_000);
+    }
+
+    #[test]
+    fn priority_admits_high_before_fifo() {
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..9).map(|j| ((j * 5) % vocab) as u32).collect();
+        let mut eng = Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true });
+        eng.submit(Request::new(0, prompt.clone(), 2, "fp32"));
+        eng.submit(Request::new(1, prompt.clone(), 2, "fp32"));
+        eng.submit(Request::new(2, prompt, 2, "fp32").with_priority(5));
+        eng.run().unwrap();
+        let order: Vec<u64> = eng.finished.iter().map(|f| f.id).collect();
+        assert_eq!(order, vec![2, 0, 1], "higher priority first, FIFO within a level");
+    }
+
+    #[test]
+    fn cancelled_request_still_publishes_session_entry() {
+        use crate::statecache::{CacheConfig, StateCache};
+        // abandoning a turn must not lose the conversation: the partial
+        // end-of-turn state is published so the next turn still resumes
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let cache = Arc::new(StateCache::new(CacheConfig::default()));
+        let p1: Vec<u32> = (0..40).map(|j| ((j * 13 + 1) % vocab) as u32).collect();
+
+        let mut eng =
+            Engine::new(&be, EngineConfig::default()).with_cache(Arc::clone(&cache));
+        let h = eng.submit(Request::new(0, p1.clone(), 24, "fp32").with_session(77));
+        let mut streamed = 0usize;
+        while streamed < 3 {
+            eng.step().unwrap();
+            while let Some(ev) = h.try_event() {
+                if matches!(ev, Event::Token { .. }) {
+                    streamed += 1;
+                }
+            }
+        }
+        h.cancel();
+        eng.run().unwrap();
+        let gen1 = eng.finished[0].generated.clone();
+        assert_eq!(eng.finished[0].finish_reason, FinishReason::Cancelled);
+        assert!(!gen1.is_empty());
+
+        // turn 2 extends the partial transcript and resumes from the
+        // cancelled turn's session entry
+        let mut p2 = p1.clone();
+        p2.extend_from_slice(&gen1);
+        p2.extend((0..5).map(|j| ((j * 29 + 3) % vocab) as u32));
+        let mut eng2 =
+            Engine::new(&be, EngineConfig::default()).with_cache(Arc::clone(&cache));
+        eng2.submit(Request::new(1, p2.clone(), 4, "fp32").with_session(77));
+        eng2.run().unwrap();
+        assert_eq!(eng2.metrics.cache_hits, 1, "{}", eng2.metrics.summary());
+        assert_eq!(
+            eng2.metrics.cache_tokens_saved,
+            (p1.len() + gen1.len() - 1) as u64
+        );
+        // resumed output matches serving the full prompt from scratch
+        let mut base = Engine::new(&be, EngineConfig::default());
+        base.submit(Request::new(2, p2, 4, "fp32"));
+        base.run().unwrap();
+        assert_eq!(eng2.finished[0].generated, base.finished[0].generated);
     }
 }

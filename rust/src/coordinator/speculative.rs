@@ -53,9 +53,13 @@ use anyhow::{anyhow, Result};
 use crate::backend::InferenceBackend;
 use crate::statecache::StateCache;
 
+use super::admission::{finish_unadmitted, seed_from_cache, AdmissionSeed};
 use super::batcher::{full_bucket_plan, smallest_covering};
 use super::metrics::Metrics;
-use super::request::{argmax, FinishedRequest, Request, SpecStats};
+use super::request::{
+    argmax, insert_by_priority, Event, FinishReason, FinishedRequest, Request, SpecStats,
+    SubmitHandle,
+};
 use super::state::{SnapshotId, StatePool};
 
 /// Longest accepted draft prefix under greedy verification.
@@ -128,7 +132,11 @@ struct SpecInFlight {
     rounds: u64,
     submitted: Instant,
     first_token_at: Option<Instant>,
+    /// when the latest committed token was emitted (TPOT anchor)
+    last_token_at: Option<Instant>,
     done: bool,
+    /// why `done` (set by the round that finished the request)
+    reason: FinishReason,
 }
 
 /// The speculative serving engine: drives a draft-k / verify-1 loop per
@@ -240,8 +248,19 @@ impl<'be> SpecEngine<'be> {
         self
     }
 
-    pub fn submit(&mut self, req: Request) {
-        self.pending.push_back(req);
+    /// Queue a request and return its streaming [`SubmitHandle`].  Token
+    /// events are emitted only when the verifier consolidates a round —
+    /// the stream carries committed tokens, never unverified drafts.
+    pub fn submit(&mut self, mut req: Request) -> SubmitHandle {
+        let handle = req.attach_events();
+        self.enqueue(req);
+        handle
+    }
+
+    /// Queue a request whose event channel is already attached (the pool
+    /// worker path).
+    pub(crate) fn enqueue(&mut self, req: Request) {
+        insert_by_priority(&mut self.pending, req);
         self.metrics
             .note_queue_depth(self.pending.len() + self.active.len());
     }
@@ -302,54 +321,23 @@ impl<'be> SpecEngine<'be> {
             // sub-bucket remainder becomes debt and the last prompt token
             // the frontier (its logits come from the first verify round)
             let body = req.prompt[..req.prompt.len() - 1].to_vec();
-            let (mut chunks, _rest) = full_bucket_plan(&self.prefill_buckets, body.len());
-            // state-cache seeding, exactly as in the plain engine's
-            // admission: the body plan here equals Engine::chunk_plan's
-            // chunk list for the same prompt, so prefix entries interchange
-            // between the two engines (verify_variant keys them)
-            let mut offset = 0usize;
-            let mut done_chunks: Vec<usize> = Vec::new();
-            let mut prefix_cacheable = self.cache.is_some();
-            if let Some(cache) = self.cache.clone() {
-                let probed = req.session_id.is_some() || !chunks.is_empty();
-                let mut hit = false;
-                if let Some(sid) = req.session_id {
-                    if let Some(s) =
-                        cache.lookup_session(sid, &self.cfg.verify_variant, &req.prompt)
-                    {
-                        // lookup_session bounds coverage at prompt.len()-1,
-                        // i.e. at most the whole body
-                        if self.pool.seed(verify_slot, &s.conv, &s.ssm) {
-                            offset = s.covered;
-                            let (c, _r) = full_bucket_plan(
-                                &self.prefill_buckets,
-                                body.len() - offset,
-                            );
-                            chunks = c;
-                            prefix_cacheable = false;
-                            hit = true;
-                        }
-                    }
-                }
-                if !hit {
-                    if let Some(p) =
-                        cache.lookup_prefix(&self.cfg.verify_variant, &body, &chunks)
-                    {
-                        if self.pool.seed(verify_slot, &p.conv, &p.ssm) {
-                            offset = p.covered;
-                            done_chunks = chunks[..p.chunks_used].to_vec();
-                            chunks = chunks[p.chunks_used..].to_vec();
-                            hit = true;
-                        }
-                    }
-                }
-                if hit {
-                    self.metrics.cache_hits += 1;
-                    self.metrics.cache_tokens_saved += offset as u64;
-                } else if probed {
-                    self.metrics.cache_misses += 1;
-                }
-            }
+            let (chunks, _rest) = full_bucket_plan(&self.prefill_buckets, body.len());
+            // state-cache seeding, shared with Engine::admit: the body plan
+            // here equals Engine::chunk_plan's chunk list for the same
+            // prompt, so prefix entries interchange between the two engines
+            // (verify_variant keys them)
+            let AdmissionSeed { mut offset, chunks, mut done_chunks, prefix_cacheable } =
+                seed_from_cache(
+                    self.cache.as_ref(),
+                    &mut self.pool,
+                    &mut self.metrics,
+                    verify_slot,
+                    &self.cfg.verify_variant,
+                    &req.prompt,
+                    req.session_id,
+                    &self.prefill_buckets,
+                    chunks,
+                );
             for chunk in chunks {
                 let toks = body[offset..offset + chunk].to_vec();
                 self.verifier_prefill(verify_slot, &toks)?;
@@ -396,7 +384,9 @@ impl<'be> SpecEngine<'be> {
                 rounds: 0,
                 submitted,
                 first_token_at: None,
+                last_token_at: None,
                 done: false,
+                reason: FinishReason::Length,
             });
         }
         Ok(())
@@ -511,29 +501,52 @@ impl<'be> SpecEngine<'be> {
             .collect();
         let (m, bonus) = accept_drafts(&drafts, &verify);
 
-        // --- commit the accepted prefix + the verifier's bonus token
+        // --- commit the accepted prefix + the verifier's bonus token.
+        // This consolidation point is where the per-request stream advances:
+        // every committed token is emitted now — drafts the verifier has
+        // not accepted are never visible on the event channel.
         self.metrics.draft_tokens += k as u64;
         self.metrics.draft_accepted += m as u64;
         self.metrics.spec_rounds += 1;
         let is_first = self.active[ai].first_token_at.is_none();
         let mut done = false;
         let mut n_committed = 0usize;
+        let now = Instant::now();
+        let prev_emit;
         {
             let a = &mut self.active[ai];
             a.drafted += k as u64;
             a.accepted += m as u64;
             a.rounds += 1;
+            prev_emit = a.last_token_at.replace(now);
+            if is_first {
+                a.first_token_at = Some(now);
+                a.req.emit(Event::FirstToken);
+            }
             for &t in drafts[..m].iter().chain(std::iter::once(&bonus)) {
                 a.generated.push(t);
                 n_committed += 1;
-                if a.generated.len() >= max_new || stop == Some(t) {
+                a.req.emit(Event::Token { tok: t, index: a.generated.len() - 1 });
+                if stop == Some(t) {
                     done = true;
+                    a.reason = FinishReason::StopToken;
+                    break;
+                }
+                if a.generated.len() >= max_new {
+                    done = true;
+                    a.reason = FinishReason::Length;
                     break;
                 }
             }
-            if is_first {
-                a.first_token_at = Some(Instant::now());
-            }
+        }
+        // TPOT: the round's first committed token carries the wall time
+        // since the previous emission; the rest of the burst arrives with
+        // it (~0 inter-token gap — what a streaming client actually sees)
+        if let Some(prev) = prev_emit {
+            self.metrics.note_tpot((now - prev).as_secs_f64());
+        }
+        for _ in 1..n_committed {
+            self.metrics.note_tpot(0.0);
         }
         self.metrics.tokens_generated += n_committed as u64;
         if is_first {
@@ -582,7 +595,7 @@ impl<'be> SpecEngine<'be> {
         Ok(())
     }
 
-    fn retire(&mut self, infl: SpecInFlight) {
+    fn retire(&mut self, infl: SpecInFlight, reason: FinishReason) {
         // session entry: the verifier slot's exact state covers the first
         // `consumed` tokens of the transcript (un-consolidated debt and
         // the frontier stay outside it — a resumed turn prefills them as
@@ -604,6 +617,7 @@ impl<'be> SpecEngine<'be> {
         }
         self.pool.release(infl.draft_slot);
         self.pool.release(infl.verify_slot);
+        self.metrics.note_finish_reason(reason);
         self.metrics.requests_completed += 1;
         self.metrics
             .request_latency_s
@@ -613,10 +627,11 @@ impl<'be> SpecEngine<'be> {
                 .per_request_acceptance
                 .push(infl.accepted as f64 / infl.drafted as f64);
         }
-        self.finished.push(FinishedRequest {
+        let fin = FinishedRequest {
             id: infl.req.id,
             prompt_len: infl.req.prompt.len(),
             generated: infl.generated,
+            finish_reason: reason,
             ttft_s: infl
                 .first_token_at
                 .map(|t| (t - infl.submitted).as_secs_f64())
@@ -627,11 +642,42 @@ impl<'be> SpecEngine<'be> {
                 accepted: infl.accepted,
                 rounds: infl.rounds,
             }),
-        });
+        };
+        infl.req.emit(Event::Finished(fin.clone()));
+        self.finished.push(fin);
     }
 
-    /// One scheduler iteration: admit, then one round per active request.
+    /// Retire cancelled / past-deadline requests (pending and active).
+    /// Active ones go through the normal retire path: both slots freed,
+    /// partial `generated` returned, session entry still published (the
+    /// verifier slot's exact coverage is `consumed`, unaffected by where
+    /// in the draft/verify cycle the cancel landed — no snapshots are live
+    /// between rounds).
+    fn sweep_lifecycle(&mut self) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            if let Some(reason) = self.pending[i].lifecycle_reason() {
+                let req = self.pending.remove(i).expect("index in bounds");
+                finish_unadmitted(&mut self.metrics, &mut self.finished, req, reason);
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.active.len() {
+            if let Some(reason) = self.active[i].req.lifecycle_reason() {
+                let infl = self.active.swap_remove(i);
+                self.retire(infl, reason);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// One scheduler iteration: resolve cancellations/deadlines, admit,
+    /// then one round per active request.
     pub fn step(&mut self) -> Result<()> {
+        self.sweep_lifecycle();
         let depth = self.pending.len() + self.active.len();
         self.metrics.note_queue_depth(depth);
         let t0 = Instant::now();
@@ -641,7 +687,8 @@ impl<'be> SpecEngine<'be> {
             self.round(i)?;
             if self.active[i].done {
                 let infl = self.active.swap_remove(i);
-                self.retire(infl);
+                let reason = infl.reason;
+                self.retire(infl, reason);
             } else {
                 i += 1;
             }
@@ -1087,12 +1134,119 @@ mod tests {
         }
 
         let mut spec = SpecEngine::new(&be, SpecConfig::default());
-        let mut req = Request::new(0, prompt, 8, "fp32");
-        req.stop_token = Some(stop);
-        spec.submit(req);
+        spec.submit(Request::new(0, prompt, 8, "fp32").with_stop_token(stop));
         spec.run().unwrap();
         let got = &spec.finished[0].generated;
         assert_eq!(got.last(), Some(&stop));
         assert_eq!(got.len(), 3, "must halt at the stop token, got {got:?}");
+        assert_eq!(spec.finished[0].finish_reason, FinishReason::StopToken);
+    }
+
+    #[test]
+    fn spec_stream_commits_only_verified_tokens_all_variants() {
+        use crate::model::Variant;
+        // every Token event must be a verifier-committed token: the drained
+        // stream equals the final output exactly — no unverified draft is
+        // ever visible, whatever the verify variant quantizes
+        let be = micro();
+        let vocab = be.cfg().vocab_size;
+        for v in Variant::ALL {
+            let mut spec = SpecEngine::new(
+                &be,
+                SpecConfig {
+                    draft_k: 2,
+                    max_active: 2,
+                    verify_variant: v.name().into(),
+                    ..SpecConfig::default()
+                },
+            );
+            let prompt: Vec<u32> =
+                (0..17).map(|j| ((j * 13 + 2) % vocab) as u32).collect();
+            let h = spec.submit(Request::new(0, prompt, 7, v.name()));
+            spec.run().unwrap();
+            let want = spec.finished[0].generated.clone();
+            assert_eq!(want.len(), 7, "verify={}", v.name());
+
+            let mut toks = Vec::new();
+            let mut first = false;
+            let mut fin = None;
+            while let Some(ev) = h.try_event() {
+                match ev {
+                    Event::FirstToken => {
+                        assert!(toks.is_empty(), "FirstToken must precede Token 0");
+                        first = true;
+                    }
+                    Event::Token { tok, index } => {
+                        assert_eq!(index, toks.len(), "indexes contiguous");
+                        toks.push(tok);
+                    }
+                    Event::Finished(f) => fin = Some(f),
+                }
+            }
+            assert!(first, "verify={}", v.name());
+            assert_eq!(
+                toks,
+                want,
+                "verify={}: stream must carry exactly the committed tokens",
+                v.name()
+            );
+            let fin = fin.expect("terminal event");
+            assert_eq!(fin.finish_reason, FinishReason::Length);
+            assert!(fin.spec.is_some());
+        }
+    }
+
+    #[test]
+    fn spec_cancel_mid_generation_returns_greedy_prefix() {
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..33).map(|j| ((j * 13) % vocab) as u32).collect();
+        let mut base =
+            Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true });
+        base.submit(Request::new(0, prompt.clone(), 40, "fp32"));
+        base.run().unwrap();
+        let want = base.finished[0].generated.clone();
+
+        let mut spec = SpecEngine::new(
+            &be,
+            SpecConfig { draft_k: 4, max_active: 1, ..SpecConfig::default() },
+        );
+        let h = spec.submit(Request::new(0, prompt, 40, "fp32"));
+        let mut streamed = 0usize;
+        while streamed < 5 {
+            spec.step().unwrap();
+            while let Some(ev) = h.try_event() {
+                if matches!(ev, Event::Token { .. }) {
+                    streamed += 1;
+                }
+            }
+        }
+        h.cancel();
+        spec.run().unwrap(); // next step sweeps the cancel and retires
+        let f = &spec.finished[0];
+        assert_eq!(f.finish_reason, FinishReason::Cancelled);
+        let n = f.generated.len();
+        assert!(n >= 5 && n < 40, "partial output expected, got {n}");
+        assert_eq!(f.generated[..], want[..n], "partial != greedy fp32 prefix");
+        assert_eq!(spec.metrics.cancelled_requests, 1);
+        assert_eq!(spec.n_active(), 0, "both slots freed");
+    }
+
+    #[test]
+    fn spec_deadline_expiry_reports_reason() {
+        use std::time::Duration;
+        let be = be();
+        let mut spec = SpecEngine::new(&be, SpecConfig::default());
+        let h = spec.submit(
+            Request::new(0, vec![1, 2, 3, 4, 5], 8, "fp32")
+                .with_deadline(Duration::ZERO),
+        );
+        spec.run().unwrap();
+        assert_eq!(spec.finished[0].finish_reason, FinishReason::Deadline);
+        assert!(spec.finished[0].generated.is_empty());
+        assert_eq!(spec.metrics.deadline_expired, 1);
+        assert!(
+            matches!(h.wait_finished(), Some(f) if f.finish_reason == FinishReason::Deadline)
+        );
     }
 }

@@ -13,13 +13,15 @@
 //! artifact-free native backend.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use fastmamba::backend::{self, BackendKind, InferenceBackend, NativeBackend};
 use fastmamba::config::{AcceleratorConfig, ModelConfig};
 use fastmamba::coordinator::{
-    serve_pool, Engine, EngineConfig, PoolConfig, Request, SpecConfig, SpecEngine,
+    serve_pool, Engine, EngineConfig, Event, FinishReason, PoolConfig, Request, SpecConfig,
+    SpecEngine, SubmitHandle,
 };
 use fastmamba::statecache::{CacheConfig, StateCache};
 use fastmamba::model::weights::{artifacts_dir, Manifest};
@@ -45,11 +47,35 @@ fn main() -> Result<()> {
                  \n           --backend auto|pjrt|native --max-active N --workers N\
                  \n           --speculate K [--draft-backend native|pjrt]\
                  \n           --state-cache-mb N (0 = off; shared SSM prefix/session cache)\
+                 \n           --stream (print tokens as they are produced)\
+                 \n           --deadline-ms N (per-request completion deadline)\
                  \n  report   --id all|table1|table2|table3|table4|table_spec|fig1|fig3|fig9|fig10\
                  \n  simulate --model mamba2-130m|mamba2-2.7b --seq-len N --batch N\
                  \n  info"
             );
             Ok(())
+        }
+    }
+}
+
+fn print_event(id: u64, ev: &Event) {
+    match ev {
+        Event::FirstToken => println!("[stream] req {id}: first token"),
+        Event::Token { tok, index } => println!("[stream] req {id}: #{index} -> {tok}"),
+        Event::Finished(f) => println!(
+            "[stream] req {id}: finished ({:?}, {} tokens, {:.1} ms)",
+            f.finish_reason,
+            f.generated.len(),
+            f.total_s * 1e3
+        ),
+    }
+}
+
+/// Drain and print whatever each handle has buffered.
+fn drain_handles(handles: &[SubmitHandle]) {
+    for h in handles {
+        while let Some(ev) = h.try_event() {
+            print_event(h.id(), &ev);
         }
     }
 }
@@ -80,6 +106,13 @@ fn serve(args: &Args) -> Result<()> {
     let cache_mb = args.usize_or("state-cache-mb", 0);
     let cache: Option<Arc<StateCache>> =
         (cache_mb > 0).then(|| Arc::new(StateCache::new(CacheConfig::with_mb(cache_mb))));
+    // streaming lifecycle flags: --stream prints tokens as each engine
+    // step produces them; --deadline-ms bounds per-request latency
+    // (expired requests finish with FinishReason::Deadline and partial
+    // output).  Both work on all four serve paths (plain/speculative x
+    // single-engine/pool).
+    let stream = args.bool("stream");
+    let deadline_ms = args.usize_or("deadline-ms", 0);
     let vocab = be.cfg().vocab_size;
 
     let mut rng = Rng::new(args.usize_or("seed", 7) as u64);
@@ -91,7 +124,11 @@ fn serve(args: &Args) -> Result<()> {
                 .iter()
                 .map(|t| t % vocab as u32)
                 .collect();
-            Request::new(id as u64, prompt, max_new, &variant)
+            let mut r = Request::new(id as u64, prompt, max_new, &variant);
+            if deadline_ms > 0 {
+                r = r.with_deadline(Duration::from_millis(deadline_ms as u64));
+            }
+            r
         })
         .collect();
 
@@ -129,16 +166,55 @@ fn serve(args: &Args) -> Result<()> {
                 cache: cache.clone(),
             },
         );
+        let mut handles = Vec::with_capacity(n_requests);
         for r in requests {
-            pool.submit(r)?;
+            handles.push(pool.submit(r)?);
+        }
+        if !stream {
+            handles.clear(); // unread events would only buffer
         }
         let mut finished = Vec::with_capacity(n_requests);
-        for _ in 0..n_requests {
-            match pool.results.recv() {
-                Ok(f) => finished.push(f),
-                // pool collapsed (all workers dead): stop reading so
-                // finish() can surface the per-worker failure causes
-                Err(_) => break,
+        if stream {
+            // poll the per-request event streams (printing tokens live)
+            // alongside the aggregate results channel
+            let mut open = true;
+            while open && finished.len() < n_requests {
+                let mut progressed = false;
+                for h in &handles {
+                    while let Some(ev) = h.try_event() {
+                        progressed = true;
+                        print_event(h.id(), &ev);
+                    }
+                }
+                loop {
+                    use std::sync::mpsc::TryRecvError;
+                    match pool.results.try_recv() {
+                        Ok(f) => {
+                            finished.push(f);
+                            progressed = true;
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        // pool collapsed (all workers dead): stop reading
+                        // so finish() can surface the failure causes
+                        Err(TryRecvError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+                if !progressed {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            drain_handles(&handles);
+        } else {
+            for _ in 0..n_requests {
+                match pool.results.recv() {
+                    Ok(f) => finished.push(f),
+                    // pool collapsed (all workers dead): stop reading so
+                    // finish() can surface the per-worker failure causes
+                    Err(_) => break,
+                }
             }
         }
         let report = pool.finish()?;
@@ -150,11 +226,16 @@ fn serve(args: &Args) -> Result<()> {
             "pool: workers={} assignments={:?} load_peak={:?} (capacity {}/worker)",
             workers, report.assignments, report.load_peak, report.capacity_per_worker
         );
-        if finished.len() < n_requests {
+        let died = finished
+            .iter()
+            .filter(|f| f.finish_reason == FinishReason::WorkerDied)
+            .count();
+        if finished.len() < n_requests || died > 0 {
             bail!(
-                "pool completed {}/{} requests (worker errors above)",
-                finished.len(),
-                n_requests
+                "pool completed {}/{} requests ({} worker-died; worker errors above)",
+                finished.len() - died,
+                n_requests,
+                died
             );
         }
         finished
@@ -187,10 +268,25 @@ fn serve(args: &Args) -> Result<()> {
         if let Some(c) = &cache {
             engine = engine.with_cache(Arc::clone(c));
         }
+        let mut handles = Vec::with_capacity(n_requests);
         for r in requests {
-            engine.submit(r);
+            handles.push(engine.submit(r));
         }
-        engine.run()?;
+        if !stream {
+            handles.clear(); // unread events would only buffer
+        }
+        if stream {
+            // manual drive: drain and print each request's events after
+            // every engine step (spec streams verifier-committed runs)
+            engine.metrics.start();
+            while engine.n_pending() > 0 || engine.n_active() > 0 {
+                engine.step()?;
+                drain_handles(&handles);
+            }
+            engine.metrics.stop();
+        } else {
+            engine.run()?;
+        }
         println!("{}", engine.metrics.summary());
         println!(
             "speculative: k={} drafter={} rounds={} verify_calls={} rollbacks={} \
@@ -209,16 +305,40 @@ fn serve(args: &Args) -> Result<()> {
         if let Some(c) = &cache {
             engine = engine.with_cache(Arc::clone(c));
         }
+        let mut handles = Vec::with_capacity(n_requests);
         for r in requests {
-            engine.submit(r);
+            handles.push(engine.submit(r));
         }
-        engine.run()?;
+        if !stream {
+            handles.clear(); // unread events would only buffer
+        }
+        if stream {
+            engine.metrics.start();
+            while engine.n_pending() > 0 || engine.n_active() > 0 {
+                engine.step()?;
+                drain_handles(&handles);
+            }
+            engine.metrics.stop();
+        } else {
+            engine.run()?;
+        }
         println!("{}", engine.metrics.summary());
         engine.finished
     };
     if let Some(c) = &cache {
         println!("state cache ({cache_mb} MiB): {}", c.stats().summary());
     }
+    // finish-reason accounting (Length/StopToken are the normal outcomes;
+    // Cancelled/Deadline show the streaming lifecycle at work)
+    let count = |r: FinishReason| finished.iter().filter(|f| f.finish_reason == r).count();
+    println!(
+        "finish_reasons: length={} stop={} cancelled={} deadline={} worker_died={}",
+        count(FinishReason::Length),
+        count(FinishReason::StopToken),
+        count(FinishReason::Cancelled),
+        count(FinishReason::Deadline),
+        count(FinishReason::WorkerDied),
+    );
     for f in finished.iter().take(3) {
         println!(
             "  req {}: {} prompt toks -> {:?}...",

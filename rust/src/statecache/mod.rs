@@ -41,7 +41,9 @@
 //! [`CacheConfig::max_bytes`] bounds residency.  The budget is split
 //! evenly over the lock shards; inserting past a shard's slice evicts
 //! least-recently-used entries (hits refresh recency) until it fits.
-//! Entries larger than a shard's whole slice are not cached at all.
+//! Victim selection is O(log n) through an ordered tick index per shard
+//! (`store::Shard`) — no per-eviction scan.  Entries larger than a shard's
+//! whole slice are not cached at all.
 //!
 //! [`Request::session_id`]: crate::coordinator::Request::session_id
 //! [`serve_pool`]: crate::coordinator::serve_pool
@@ -252,15 +254,24 @@ impl StateCache {
     ) -> Option<PrefixHit> {
         let tick = self.next_tick();
         let mut shard = self.shard_for(hash).lock().unwrap();
-        let chain = shard.prefix.get_mut(&hash)?;
-        let e = chain.iter_mut().find(|e| e.matches(variant, chunks, tokens))?;
-        e.last_used = tick;
-        Some(PrefixHit {
-            covered: tokens.len(),
-            chunks_used: chunks.len(),
-            conv: e.conv.clone(),
-            ssm: e.ssm.clone(),
-        })
+        let (pos, hit) = {
+            let chain = shard.prefix_chain(hash)?;
+            let (pos, e) = chain
+                .iter()
+                .enumerate()
+                .find(|(_, e)| e.matches(variant, chunks, tokens))?;
+            (
+                pos,
+                PrefixHit {
+                    covered: tokens.len(),
+                    chunks_used: chunks.len(),
+                    conv: e.conv.clone(),
+                    ssm: e.ssm.clone(),
+                },
+            )
+        };
+        shard.touch_prefix(hash, pos, tick);
+        Some(hit)
     }
 
     /// Insert a boundary snapshot: the state after prefilling exactly
@@ -298,13 +309,16 @@ impl StateCache {
         }
         let tick = self.next_tick();
         let mut shard = self.shard_for(hash).lock().unwrap();
-        {
-            let chain = shard.prefix.entry(hash).or_default();
-            if let Some(e) = chain.iter_mut().find(|e| e.matches(variant, chunks, tokens)) {
-                e.last_used = tick; // dedupe: identical key -> refresh only
-                return;
-            }
-            chain.push(Entry {
+        let existing = shard
+            .prefix_chain(hash)
+            .and_then(|c| c.iter().position(|e| e.matches(variant, chunks, tokens)));
+        if let Some(pos) = existing {
+            shard.touch_prefix(hash, pos, tick); // dedupe: refresh only
+            return;
+        }
+        shard.insert_prefix_entry(
+            hash,
+            Entry {
                 variant: variant.to_string(),
                 chunks: chunks.to_vec(),
                 tokens: tokens.to_vec(),
@@ -312,9 +326,8 @@ impl StateCache {
                 ssm: ssm.to_vec(),
                 last_used: tick,
                 bytes,
-            });
-        }
-        shard.bytes += bytes;
+            },
+        );
         self.insertions.fetch_add(1, Ordering::Relaxed);
         let evicted = shard.evict_to(self.shard_budget);
         self.evictions.fetch_add(evicted, Ordering::Relaxed);
@@ -332,13 +345,12 @@ impl StateCache {
         let tick = self.next_tick();
         let hit = {
             let mut shard = self.session_shard(id).lock().unwrap();
-            match shard.sessions.get_mut(&id) {
+            let found = match shard.session(id) {
                 Some(e)
                     if e.variant == variant
                         && e.tokens.len() + 1 <= tokens.len()
                         && e.tokens[..] == tokens[..e.tokens.len()] =>
                 {
-                    e.last_used = tick;
                     Some(SessionHit {
                         covered: e.tokens.len(),
                         conv: e.conv.clone(),
@@ -346,7 +358,11 @@ impl StateCache {
                     })
                 }
                 _ => None,
+            };
+            if found.is_some() {
+                shard.touch_session(id, tick);
             }
+            found
         };
         if hit.is_some() {
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -375,19 +391,18 @@ impl StateCache {
         }
         let tick = self.next_tick();
         let mut shard = self.session_shard(id).lock().unwrap();
-        let entry = Entry {
-            variant: variant.to_string(),
-            chunks: Vec::new(),
-            tokens: tokens.to_vec(),
-            conv: conv.to_vec(),
-            ssm: ssm.to_vec(),
-            last_used: tick,
-            bytes,
-        };
-        if let Some(old) = shard.sessions.insert(id, entry) {
-            shard.bytes -= old.bytes;
-        }
-        shard.bytes += bytes;
+        shard.insert_session_entry(
+            id,
+            Entry {
+                variant: variant.to_string(),
+                chunks: Vec::new(),
+                tokens: tokens.to_vec(),
+                conv: conv.to_vec(),
+                ssm: ssm.to_vec(),
+                last_used: tick,
+                bytes,
+            },
+        );
         self.insertions.fetch_add(1, Ordering::Relaxed);
         let evicted = shard.evict_to(self.shard_budget);
         self.evictions.fetch_add(evicted, Ordering::Relaxed);

@@ -3,11 +3,16 @@
 //!
 //! A shard owns two maps under one mutex — content-hashed prefix entries
 //! (with a collision chain per hash, because a hit must *never* be decided
-//! by the hash alone) and per-session end-of-turn entries — plus the
-//! running byte total the eviction policy keeps under the shard's slice of
-//! the global budget.
+//! by the hash alone) and per-session end-of-turn entries — plus an
+//! **ordered eviction index**: a `BTreeMap` from LRU tick to entry key.
+//! Ticks come from the cache's global monotonic clock, so they are unique
+//! and totally ordered; the LRU victim is `index.first_key_value()`, making
+//! an eviction O(log n) instead of the former full-shard linear scan
+//! (ROADMAP-flagged PR-4 follow-up).  Every mutation goes through the
+//! shard's insert/touch/evict methods so the index, the maps, and the byte
+//! total stay consistent.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Fixed per-entry overhead charged on top of the payload buffers
 /// (map slots, Vec headers, LRU bookkeeping) so the byte budget tracks
@@ -42,7 +47,8 @@ pub(crate) struct Entry {
     pub tokens: Vec<u32>,
     pub conv: Vec<f32>,
     pub ssm: Vec<f32>,
-    /// LRU clock value at last insert/hit (global monotonic tick)
+    /// LRU clock value at last insert/hit (global monotonic tick — unique,
+    /// which is what lets the eviction index key on it)
     pub last_used: u64,
     /// accounted size ([`entry_bytes`])
     pub bytes: usize,
@@ -55,21 +61,27 @@ impl Entry {
     }
 }
 
+/// Where an eviction-index tick points.  Prefix entries are identified by
+/// their hash; the position inside the (nearly always length-1) collision
+/// chain is recovered by tick at eviction time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum IndexKey {
+    Prefix { hash: u64 },
+    Session { id: u64 },
+}
+
 /// One lock domain of the cache.
 #[derive(Debug, Default)]
 pub(crate) struct Shard {
     /// content hash -> collision chain of prefix entries
-    pub prefix: HashMap<u64, Vec<Entry>>,
+    prefix: HashMap<u64, Vec<Entry>>,
     /// session id -> latest end-of-turn entry
-    pub sessions: HashMap<u64, Entry>,
+    sessions: HashMap<u64, Entry>,
     /// accounted bytes across both maps
     pub bytes: usize,
-}
-
-/// What `evict_one` decided to remove.
-enum Victim {
-    Prefix { hash: u64, pos: usize },
-    Session { id: u64 },
+    /// ordered eviction index: LRU tick -> entry key (kept in lock-step
+    /// with the maps by the methods below)
+    index: BTreeMap<u64, IndexKey>,
 }
 
 impl Shard {
@@ -77,44 +89,87 @@ impl Shard {
         self.prefix.values().map(|c| c.len()).sum::<usize>() + self.sessions.len()
     }
 
-    /// Remove the least-recently-used entry (across both maps).  Returns
-    /// false when the shard is already empty.
+    /// The prefix entry chain stored under `hash` (read-only probing).
+    pub fn prefix_chain(&self, hash: u64) -> Option<&[Entry]> {
+        self.prefix.get(&hash).map(|c| c.as_slice())
+    }
+
+    /// The session entry stored under `id` (read-only probing).
+    pub fn session(&self, id: u64) -> Option<&Entry> {
+        self.sessions.get(&id)
+    }
+
+    /// Insert a prefix entry, updating bytes and the eviction index.
+    pub fn insert_prefix_entry(&mut self, hash: u64, e: Entry) {
+        debug_assert!(!self.index.contains_key(&e.last_used), "tick reuse");
+        self.bytes += e.bytes;
+        self.index.insert(e.last_used, IndexKey::Prefix { hash });
+        self.prefix.entry(hash).or_default().push(e);
+    }
+
+    /// Insert (or overwrite) the session entry for `id`, swapping the byte
+    /// accounting and the index slot of any previous entry.
+    pub fn insert_session_entry(&mut self, id: u64, e: Entry) {
+        debug_assert!(!self.index.contains_key(&e.last_used), "tick reuse");
+        self.bytes += e.bytes;
+        self.index.insert(e.last_used, IndexKey::Session { id });
+        if let Some(old) = self.sessions.insert(id, e) {
+            self.bytes -= old.bytes;
+            self.index.remove(&old.last_used);
+        }
+    }
+
+    /// Refresh the recency of the prefix entry at `pos` in `hash`'s chain.
+    pub fn touch_prefix(&mut self, hash: u64, pos: usize, tick: u64) {
+        if let Some(e) = self.prefix.get_mut(&hash).and_then(|c| c.get_mut(pos)) {
+            self.index.remove(&e.last_used);
+            e.last_used = tick;
+            self.index.insert(tick, IndexKey::Prefix { hash });
+        }
+    }
+
+    /// Refresh the recency of session `id`'s entry.
+    pub fn touch_session(&mut self, id: u64, tick: u64) {
+        if let Some(e) = self.sessions.get_mut(&id) {
+            self.index.remove(&e.last_used);
+            e.last_used = tick;
+            self.index.insert(tick, IndexKey::Session { id });
+        }
+    }
+
+    /// Remove the least-recently-used entry (across both maps): the
+    /// smallest tick in the ordered index.  Returns false when the shard
+    /// is already empty.
     fn evict_one(&mut self) -> bool {
-        let mut best: Option<(u64, Victim)> = None;
-        for (h, chain) in &self.prefix {
-            for (i, e) in chain.iter().enumerate() {
-                if best.as_ref().is_none_or(|(t, _)| e.last_used < *t) {
-                    best = Some((e.last_used, Victim::Prefix { hash: *h, pos: i }));
-                }
-            }
-        }
-        for (id, e) in &self.sessions {
-            if best.as_ref().is_none_or(|(t, _)| e.last_used < *t) {
-                best = Some((e.last_used, Victim::Session { id: *id }));
-            }
-        }
-        match best {
-            None => false,
-            Some((_, Victim::Prefix { hash, pos })) => {
-                let chain = self.prefix.get_mut(&hash).expect("victim chain");
+        let Some((&tick, &key)) = self.index.first_key_value() else {
+            return false;
+        };
+        self.index.remove(&tick);
+        match key {
+            IndexKey::Prefix { hash } => {
+                let chain = self.prefix.get_mut(&hash).expect("indexed chain exists");
+                let pos = chain
+                    .iter()
+                    .position(|e| e.last_used == tick)
+                    .expect("indexed entry in chain");
                 let e = chain.remove(pos);
                 self.bytes -= e.bytes;
                 if chain.is_empty() {
                     self.prefix.remove(&hash);
                 }
-                true
             }
-            Some((_, Victim::Session { id })) => {
-                let e = self.sessions.remove(&id).expect("victim session");
+            IndexKey::Session { id } => {
+                let e = self.sessions.remove(&id).expect("indexed session exists");
                 self.bytes -= e.bytes;
-                true
             }
         }
+        true
     }
 
     /// Evict LRU entries until the shard holds at most `budget` bytes.
     /// Returns how many entries were evicted.
     pub fn evict_to(&mut self, budget: usize) -> u64 {
+        debug_assert_eq!(self.index.len(), self.n_entries(), "index out of sync");
         let mut n = 0u64;
         while self.bytes > budget {
             if !self.evict_one() {
@@ -151,34 +206,108 @@ mod tests {
         let e2 = entry(2, 5); // oldest
         let e3 = entry(3, 20);
         let per = e1.bytes;
-        s.bytes = 3 * per;
-        s.prefix.insert(101, vec![e1]);
-        s.prefix.insert(102, vec![e2]);
-        s.sessions.insert(7, e3);
+        s.insert_prefix_entry(101, e1);
+        s.insert_prefix_entry(102, e2);
+        s.insert_session_entry(7, e3);
         assert_eq!(s.n_entries(), 3);
+        assert_eq!(s.bytes, 3 * per);
 
         let n = s.evict_to(2 * per);
         assert_eq!(n, 1);
-        assert!(!s.prefix.contains_key(&102), "LRU prefix entry evicted first");
-        assert!(s.sessions.contains_key(&7));
+        assert!(s.prefix_chain(102).is_none(), "LRU prefix entry evicted first");
+        assert!(s.session(7).is_some());
 
         let n = s.evict_to(per);
         assert_eq!(n, 1);
-        assert!(!s.prefix.contains_key(&101), "next-oldest evicted second");
-        assert!(s.sessions.contains_key(&7), "newest survives");
+        assert!(s.prefix_chain(101).is_none(), "next-oldest evicted second");
+        assert!(s.session(7).is_some(), "newest survives");
         assert_eq!(s.bytes, per);
     }
 
     #[test]
     fn evict_to_zero_empties_shard() {
         let mut s = Shard::default();
-        let e = entry(1, 1);
-        s.bytes = e.bytes;
-        s.sessions.insert(1, e);
+        s.insert_session_entry(1, entry(1, 1));
         assert_eq!(s.evict_to(0), 1);
         assert_eq!(s.n_entries(), 0);
         assert_eq!(s.bytes, 0);
         assert_eq!(s.evict_to(0), 0, "empty shard evicts nothing");
+    }
+
+    #[test]
+    fn eviction_order_matches_linear_lru_scan() {
+        // the ordered index must reproduce the former linear scan's policy
+        // exactly: strictly ascending last_used ticks, interleaved across
+        // both maps and across collision chains
+        let mut s = Shard::default();
+        // (tick, where): shuffled insertion order, two entries sharing one
+        // prefix hash (a collision chain), sessions mixed in
+        s.insert_prefix_entry(200, entry(1, 14));
+        s.insert_session_entry(40, entry(2, 3));
+        s.insert_prefix_entry(201, entry(3, 9));
+        s.insert_prefix_entry(200, entry(4, 1)); // same hash: chained
+        s.insert_session_entry(41, entry(5, 22));
+        s.insert_prefix_entry(202, entry(6, 6));
+        assert_eq!(s.n_entries(), 6);
+
+        // evict one at a time and record each victim's tick by diffing the
+        // surviving ticks against the previous set
+        let survivors = |s: &Shard| -> Vec<u64> {
+            let mut t: Vec<u64> = [200u64, 201, 202]
+                .iter()
+                .filter_map(|h| s.prefix_chain(*h))
+                .flatten()
+                .map(|e| e.last_used)
+                .chain([40u64, 41].iter().filter_map(|id| s.session(*id)).map(|e| e.last_used))
+                .collect();
+            t.sort_unstable();
+            t
+        };
+        let mut order = Vec::new();
+        while s.n_entries() > 0 {
+            let before = survivors(&s);
+            let target = s.bytes - 1; // force exactly one eviction
+            assert_eq!(s.evict_to(target), 1);
+            let after = survivors(&s);
+            let victim: Vec<u64> =
+                before.iter().filter(|t| !after.contains(t)).copied().collect();
+            assert_eq!(victim.len(), 1);
+            order.push(victim[0]);
+        }
+        assert_eq!(order, vec![1, 3, 6, 9, 14, 22], "must evict in LRU-tick order");
+        assert_eq!(s.bytes, 0);
+    }
+
+    #[test]
+    fn touch_reorders_eviction() {
+        let mut s = Shard::default();
+        let per = entry(0, 0).bytes;
+        s.insert_prefix_entry(1, entry(1, 1));
+        s.insert_prefix_entry(2, entry(2, 2));
+        // refresh the older entry: the other becomes the victim
+        s.touch_prefix(1, 0, 3);
+        assert_eq!(s.evict_to(per), 1);
+        assert!(s.prefix_chain(1).is_some(), "touched entry survives");
+        assert!(s.prefix_chain(2).is_none(), "untouched entry evicted");
+
+        s.insert_session_entry(9, entry(3, 4));
+        s.touch_session(9, 5);
+        assert_eq!(s.evict_to(per), 1);
+        assert!(s.session(9).is_some(), "touched session survives");
+        assert!(s.prefix_chain(1).is_none());
+    }
+
+    #[test]
+    fn session_overwrite_swaps_index_slot() {
+        let mut s = Shard::default();
+        s.insert_session_entry(9, entry(1, 1));
+        s.insert_session_entry(9, entry(2, 2)); // overwrite: old tick 1 unindexed
+        assert_eq!(s.n_entries(), 1);
+        s.insert_prefix_entry(5, entry(3, 3));
+        // the stale tick 1 must not be evictable; LRU is the session at 2
+        assert_eq!(s.evict_to(s.bytes - 1), 1);
+        assert!(s.session(9).is_none(), "overwritten session is the LRU victim");
+        assert!(s.prefix_chain(5).is_some());
     }
 
     #[test]
