@@ -15,8 +15,9 @@
 use std::time::Instant;
 
 use fastmamba::backend::{self, BackendKind};
-use fastmamba::coordinator::{serve_pool, EngineConfig, PoolConfig, Request};
+use fastmamba::coordinator::{serve_pool, EngineConfig, Metrics, PoolConfig, Request};
 use fastmamba::util::cli::Args;
+use fastmamba::util::json::{self, num, obj, s as js, Json};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
@@ -42,7 +43,7 @@ fn main() -> anyhow::Result<()> {
             .collect()
     };
 
-    let mut rows: Vec<(usize, u64, f64, f64)> = Vec::new();
+    let mut rows: Vec<(usize, u64, f64, f64, Metrics)> = Vec::new();
     let mut outputs: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
     for n_workers in [1usize, 2, 4] {
         let pool = serve_pool(
@@ -52,6 +53,7 @@ fn main() -> anyhow::Result<()> {
                 n_workers,
                 spec: None,
                 cache: None,
+                ..PoolConfig::default()
             },
         );
         // warm up outside the timed window: one tiny request per worker
@@ -88,7 +90,7 @@ fn main() -> anyhow::Result<()> {
             report.assignments, report.load_peak
         );
         println!("  merged: {}", report.merged.summary());
-        rows.push((n_workers, toks, wall, tok_s));
+        rows.push((n_workers, toks, wall, tok_s, report.merged));
     }
 
     for w in outputs.windows(2) {
@@ -99,22 +101,30 @@ fn main() -> anyhow::Result<()> {
     println!("aggregate gen tok/s monotone non-decreasing 1 -> 4 workers: {monotonic}");
 
     if let Some(path) = args.get("json") {
-        let entries: Vec<String> = rows
+        // each run embeds its pool's full metrics under the same
+        // `fastmamba.metrics.v1` schema that `serve --metrics-json` and
+        // the streaming bench emit
+        let runs: Vec<Json> = rows
             .iter()
-            .map(|(n, t, w, ts)| {
-                format!(
-                    "{{\"workers\":{n},\"gen_tokens\":{t},\"wall_s\":{w:.6},\
-                     \"tok_per_s\":{ts:.2}}}"
-                )
+            .map(|(n, t, w, ts, m)| {
+                obj(vec![
+                    ("workers", num(*n as f64)),
+                    ("gen_tokens", num(*t as f64)),
+                    ("wall_s", num(*w)),
+                    ("tok_per_s", num(*ts)),
+                    ("metrics", m.to_json()),
+                ])
             })
             .collect();
-        let json = format!(
-            "{{\"bench\":\"multi_worker_throughput\",\"requests\":{n_requests},\
-             \"max_new\":{max_new},\"max_active\":{max_active},\
-             \"monotonic\":{monotonic},\"runs\":[{}]}}\n",
-            entries.join(",")
-        );
-        std::fs::write(path, json)?;
+        let doc = obj(vec![
+            ("bench", js("multi_worker_throughput")),
+            ("requests", num(n_requests as f64)),
+            ("max_new", num(max_new as f64)),
+            ("max_active", num(max_active as f64)),
+            ("monotonic", Json::Bool(monotonic)),
+            ("runs", Json::Arr(runs)),
+        ]);
+        std::fs::write(path, json::to_string(&doc))?;
         println!("wrote {path}");
     }
     Ok(())

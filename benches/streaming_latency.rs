@@ -21,17 +21,10 @@
 use std::time::{Duration, Instant};
 
 use fastmamba::backend::{self, BackendKind};
-use fastmamba::coordinator::{serve_pool, EngineConfig, Event, PoolConfig, Request};
+use fastmamba::coordinator::{serve_pool, EngineConfig, Event, Metrics, PoolConfig, Request};
+use fastmamba::obs::SortedSamples;
 use fastmamba::util::cli::Args;
-
-fn pct(samples: &[f64], p: f64) -> f64 {
-    if samples.is_empty() {
-        return 0.0;
-    }
-    let mut s = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    s[((s.len() as f64 * p) as usize).min(s.len() - 1)]
-}
+use fastmamba::util::json::{self, num, obj, s as js, Json};
 
 struct Row {
     workers: usize,
@@ -42,6 +35,9 @@ struct Row {
     tpot_p95_ms: f64,
     wall_s: f64,
     tok_per_s: f64,
+    /// the pool's merged metrics for this run — exported whole under the
+    /// shared `fastmamba.metrics.v1` schema
+    metrics: Metrics,
 }
 
 fn main() -> anyhow::Result<()> {
@@ -77,6 +73,7 @@ fn main() -> anyhow::Result<()> {
                 n_workers,
                 spec: None,
                 cache: None,
+                ..PoolConfig::default()
             },
         );
         // warm up outside the timed window: one tiny request per worker
@@ -135,17 +132,20 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..n_requests {
             pool.results.recv().expect("buffered result"); // drain aggregate
         }
-        pool.finish()?;
+        let report = pool.finish()?;
         let toks: u64 = streams.iter().map(|s| s.len() as u64).sum();
+        // nearest-rank percentiles, sorted once per sample set (obs)
+        let (ttft, tpot) = (SortedSamples::new(ttft), SortedSamples::new(tpot));
         rows.push(Row {
             workers: n_workers,
             mode: "stream",
-            ttft_p50_ms: pct(&ttft, 0.50) * 1e3,
-            ttft_p95_ms: pct(&ttft, 0.95) * 1e3,
-            tpot_p50_ms: pct(&tpot, 0.50) * 1e3,
-            tpot_p95_ms: pct(&tpot, 0.95) * 1e3,
+            ttft_p50_ms: ttft.pct(0.50) * 1e3,
+            ttft_p95_ms: ttft.pct(0.95) * 1e3,
+            tpot_p50_ms: tpot.pct(0.50) * 1e3,
+            tpot_p95_ms: tpot.pct(0.95) * 1e3,
             wall_s: wall,
             tok_per_s: toks as f64 / wall,
+            metrics: report.merged,
         });
 
         // --- batch: only the aggregate results channel; the first output
@@ -166,17 +166,19 @@ fn main() -> anyhow::Result<()> {
             batch.push((f.id, f.generated));
         }
         let wall = t0.elapsed().as_secs_f64();
-        pool.finish()?;
+        let report = pool.finish()?;
         let toks: u64 = batch.iter().map(|(_, g)| g.len() as u64).sum();
+        let first_visible = SortedSamples::new(first_visible);
         rows.push(Row {
             workers: n_workers,
             mode: "batch",
-            ttft_p50_ms: pct(&first_visible, 0.50) * 1e3,
-            ttft_p95_ms: pct(&first_visible, 0.95) * 1e3,
+            ttft_p50_ms: first_visible.pct(0.50) * 1e3,
+            ttft_p95_ms: first_visible.pct(0.95) * 1e3,
             tpot_p50_ms: 0.0,
             tpot_p95_ms: 0.0,
             wall_s: wall,
             tok_per_s: toks as f64 / wall,
+            metrics: report.merged,
         });
 
         // streaming changes delivery, never tokens
@@ -206,30 +208,33 @@ fn main() -> anyhow::Result<()> {
     }
 
     if let Some(path) = args.get("json") {
-        let entries: Vec<String> = rows
+        // each run embeds its pool's full metrics under the same
+        // `fastmamba.metrics.v1` schema that `serve --metrics-json` and
+        // the throughput bench emit
+        let runs: Vec<Json> = rows
             .iter()
             .map(|r| {
-                format!(
-                    "{{\"workers\":{},\"mode\":\"{}\",\"ttft_p50_ms\":{:.4},\
-                     \"ttft_p95_ms\":{:.4},\"tpot_p50_ms\":{:.4},\
-                     \"tpot_p95_ms\":{:.4},\"wall_s\":{:.6},\"tok_per_s\":{:.2}}}",
-                    r.workers,
-                    r.mode,
-                    r.ttft_p50_ms,
-                    r.ttft_p95_ms,
-                    r.tpot_p50_ms,
-                    r.tpot_p95_ms,
-                    r.wall_s,
-                    r.tok_per_s
-                )
+                obj(vec![
+                    ("workers", num(r.workers as f64)),
+                    ("mode", js(r.mode)),
+                    ("ttft_p50_ms", num(r.ttft_p50_ms)),
+                    ("ttft_p95_ms", num(r.ttft_p95_ms)),
+                    ("tpot_p50_ms", num(r.tpot_p50_ms)),
+                    ("tpot_p95_ms", num(r.tpot_p95_ms)),
+                    ("wall_s", num(r.wall_s)),
+                    ("tok_per_s", num(r.tok_per_s)),
+                    ("metrics", r.metrics.to_json()),
+                ])
             })
             .collect();
-        let json = format!(
-            "{{\"bench\":\"streaming_latency\",\"requests\":{n_requests},\
-             \"max_new\":{max_new},\"max_active\":{max_active},\"runs\":[{}]}}\n",
-            entries.join(",")
-        );
-        std::fs::write(path, json)?;
+        let doc = obj(vec![
+            ("bench", js("streaming_latency")),
+            ("requests", num(n_requests as f64)),
+            ("max_new", num(max_new as f64)),
+            ("max_active", num(max_active as f64)),
+            ("runs", Json::Arr(runs)),
+        ]);
+        std::fs::write(path, json::to_string(&doc))?;
         println!("wrote {path}");
     }
     Ok(())

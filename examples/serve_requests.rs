@@ -29,10 +29,14 @@
 use std::sync::Arc;
 
 use fastmamba::backend::{self, BackendKind};
-use fastmamba::coordinator::{serve_pool, Engine, EngineConfig, Event, PoolConfig, Request};
+use fastmamba::coordinator::{
+    serve_pool, Engine, EngineConfig, Event, Metrics, PoolConfig, Request,
+};
 use fastmamba::eval::corpus_for;
+use fastmamba::obs::TraceSink;
 use fastmamba::statecache::{CacheConfig, StateCache};
 use fastmamba::util::cli::Args;
+use fastmamba::util::json;
 use fastmamba::util::rng::Rng;
 
 /// Record a token event into the per-request stream transcript.
@@ -52,6 +56,18 @@ fn main() -> anyhow::Result<()> {
     let turns = args.usize_or("turns", 3);
     let cache_mb = args.usize_or("state-cache-mb", 64);
     let stream = args.bool("stream");
+    // observability: --metrics-json writes one aggregated
+    // `fastmamba.metrics.v1` snapshot merged over every phase below;
+    // --trace-out records request spans across all of them
+    let metrics_json = args.get("metrics-json");
+    let trace_sample = args.usize_or("trace-sample", 1).max(1);
+    let trace_sink: Option<Arc<TraceSink>> = args
+        .get("trace-out")
+        .is_some()
+        .then(|| Arc::new(TraceSink::new(trace_sample as u64)));
+    let mut agg = Metrics::default();
+    // each engine/pool phase gets its own trace lane for its batch spans
+    let mut lane = 0u32;
 
     let kind = BackendKind::from_name(&args.get_or("backend", "auto"))
         .expect("--backend auto|pjrt|native");
@@ -74,6 +90,10 @@ fn main() -> anyhow::Result<()> {
             be.as_ref(),
             EngineConfig { max_active, greedy_chunking: true },
         );
+        if let Some(s) = &trace_sink {
+            engine = engine.with_trace(Arc::clone(s), lane);
+            lane += 1;
+        }
         let mut rng = Rng::new(11);
         let mut handles = Vec::with_capacity(n_requests);
         for id in 0..n_requests {
@@ -156,6 +176,8 @@ fn main() -> anyhow::Result<()> {
                     n_workers: workers,
                     spec: None,
                     cache: pool_cache.clone(),
+                    trace: trace_sink.clone(),
+                    ..PoolConfig::default()
                 },
             );
             let mut rng = Rng::new(11);
@@ -187,7 +209,9 @@ fn main() -> anyhow::Result<()> {
             if let Some(c) = &pool_cache {
                 println!("[{variant}] pool state cache: {}", c.stats().summary());
             }
+            agg.merge(&report.merged);
         }
+        agg.merge(&engine.metrics);
     }
 
     if sessions > 0 && turns > 1 && cache_mb > 0 {
@@ -200,6 +224,10 @@ fn main() -> anyhow::Result<()> {
             EngineConfig { max_active, greedy_chunking: true },
         )
         .with_cache(Arc::clone(&cache));
+        if let Some(s) = &trace_sink {
+            engine = engine.with_trace(Arc::clone(s), lane);
+            lane += 1;
+        }
         let mut rng = Rng::new(23);
         // per-session transcript so far (prompt of the next turn)
         let mut history: Vec<Vec<u32>> = (0..sessions)
@@ -243,6 +271,15 @@ fn main() -> anyhow::Result<()> {
             "session resume skipped {} of {} transcript prompt tokens",
             m.cache_tokens_saved, m.prompt_tokens
         );
+        agg.merge(m);
+    }
+    if let (Some(sink), Some(path)) = (&trace_sink, args.get("trace-out")) {
+        sink.write(path)?;
+        println!("trace: {} events -> {path}", sink.len());
+    }
+    if let Some(path) = metrics_json {
+        std::fs::write(path, json::to_string(&agg.to_json()))?;
+        println!("metrics json -> {path}");
     }
     println!("serve_requests OK");
     Ok(())

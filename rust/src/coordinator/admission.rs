@@ -19,6 +19,8 @@ use super::batcher::full_bucket_plan;
 use super::metrics::Metrics;
 use super::request::{Event, FinishReason, FinishedRequest, Request};
 use super::state::StatePool;
+use crate::obs::trace::TraceCtx;
+use crate::obs::Counter;
 use crate::statecache::StateCache;
 
 /// Outcome of seeding one admission from the shared state cache.
@@ -90,10 +92,10 @@ pub(crate) fn seed_from_cache(
         }
     }
     if hit {
-        metrics.cache_hits += 1;
-        metrics.cache_tokens_saved += seed.offset as u64;
+        metrics.count(Counter::CacheHits, 1);
+        metrics.count(Counter::CacheTokensSaved, seed.offset as u64);
     } else if probed {
-        metrics.cache_misses += 1;
+        metrics.count(Counter::CacheMisses, 1);
     }
     seed
 }
@@ -103,14 +105,20 @@ pub(crate) fn seed_from_cache(
 /// event emitted — the same `FinishedRequest` surface as the normal path.
 pub(crate) fn finish_unadmitted(
     metrics: &mut Metrics,
+    trace: Option<&TraceCtx>,
     finished: &mut Vec<FinishedRequest>,
     req: Request,
     reason: FinishReason,
 ) {
     metrics.note_finish_reason(reason);
-    metrics.requests_completed += 1;
+    metrics.count(Counter::RequestsCompleted, 1);
     let total_s = req.submitted_at.elapsed().as_secs_f64();
-    metrics.request_latency_s.push(total_s);
+    metrics.note_latency(total_s);
+    if let Some(t) = trace {
+        if t.sink.sampled(req.id) {
+            t.sink.end_request(req.id, &format!("{reason:?}"), 0);
+        }
+    }
     let fin = FinishedRequest {
         id: req.id,
         prompt_len: req.prompt.len(),

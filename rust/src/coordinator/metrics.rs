@@ -4,10 +4,33 @@
 //! deadline expiries), and — for the multi-worker pool — per-worker
 //! queue-depth/utilization roll-ups merged into one aggregate view
 //! ([`Metrics::merge`]).
+//!
+//! Since the observability layer landed, `Metrics` is the *snapshot* side
+//! of a live pair: every mutation goes through a method
+//! ([`Metrics::count`], the `note_*` family) that also writes through to
+//! an optionally attached [`crate::obs::Telemetry`] — the `Arc`-shared
+//! atomic cells a Prometheus scrape or the periodic stdout log reads
+//! while the engine is serving.  [`Metrics::from_telemetry`]
+//! reconstructs a snapshot from those cells alone, so the live view and
+//! the end-of-run summary can never disagree.
+//!
+//! Per-request latency samples live in fixed-memory log-bucketed
+//! [`Histogram`]s (TTFT, end-to-end latency, draft acceptance, and
+//! per-call backend prefill/decode latency) instead of one `f64` per
+//! request: a long-lived serving process stays bounded, and the
+//! cross-worker [`Metrics::merge`] is an exact bucket-wise add rather
+//! than a raw-vector concatenation.  Inter-token latency (TPOT)
+//! additionally keeps its [`TPOT_SAMPLE_CAP`]-bounded ring of recent raw
+//! samples — the recent-window view the summary line reports.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::request::FinishReason;
+use crate::obs::histogram::Histogram;
+use crate::obs::telemetry::{Counter, Gauge, HistKind, Telemetry};
+use crate::obs::SortedSamples;
+use crate::util::json::{num, obj, s, Json};
 
 /// Per-worker roll-up attached to a merged [`Metrics`] by the multi-worker
 /// pool dispatcher (`coordinator::router::serve_pool`).
@@ -29,6 +52,22 @@ pub struct WorkerStat {
     pub deadline_expired: u64,
     /// this worker's median inter-token latency, seconds
     pub tpot_p50_s: f64,
+}
+
+impl WorkerStat {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("requests_completed", num(self.requests_completed as f64)),
+            ("tokens_generated", num(self.tokens_generated as f64)),
+            ("queue_depth_peak", num(self.queue_depth_peak as f64)),
+            ("utilization", num(self.utilization)),
+            ("cache_hits", num(self.cache_hits as f64)),
+            ("cache_tokens_saved", num(self.cache_tokens_saved as f64)),
+            ("cancelled", num(self.cancelled as f64)),
+            ("deadline_expired", num(self.deadline_expired as f64)),
+            ("tpot_p50_s", num(self.tpot_p50_s)),
+        ])
+    }
 }
 
 #[derive(Debug, Default, Clone)]
@@ -77,16 +116,23 @@ pub struct Metrics {
     /// token emissions of one request.  The speculative engine commits a
     /// round's accepted run at once, so intra-round tokens record ~0 and
     /// the round's first token carries the verify-call latency — the
-    /// honest arrival-time view a streaming client sees.  Unlike the
-    /// per-request sample vectors, this grows per *token*, so it is
-    /// bounded: past [`TPOT_SAMPLE_CAP`] samples, [`Metrics::note_tpot`]
-    /// overwrites ring-buffer style and the percentiles describe the most
-    /// recent window.
+    /// honest arrival-time view a streaming client sees.  This is the
+    /// *recent-window* raw view: past [`TPOT_SAMPLE_CAP`] samples,
+    /// [`Metrics::note_tpot`] overwrites ring-buffer style.  The all-time
+    /// distribution lives in the bounded [`Metrics::tpot`] histogram.
     pub tpot_s: Vec<f64>,
-    /// per-request draft acceptance rate, pushed at retire time
-    pub per_request_acceptance: Vec<f64>,
-    pub ttft_s: Vec<f64>,
-    pub request_latency_s: Vec<f64>,
+    /// all-time TPOT distribution (fixed-memory log buckets)
+    pub tpot: Histogram,
+    /// per-request draft acceptance rate, observed at retire time
+    pub acceptance: Histogram,
+    /// time to first token per request, seconds
+    pub ttft: Histogram,
+    /// end-to-end request latency (submit → retire), seconds
+    pub latency: Histogram,
+    /// per-call backend prefill latency (chunked prefill + verify calls)
+    pub prefill_call: Histogram,
+    /// per-call backend decode latency (batched decode + draft steps)
+    pub decode_call: Histogram,
     /// peak pending+active requests observed by the engine (max across
     /// workers after a merge)
     pub queue_depth_peak: u64,
@@ -99,6 +145,9 @@ pub struct Metrics {
     /// total TPOT samples observed (drives the ring-buffer overwrite
     /// position once `tpot_s` is at capacity)
     tpot_seen: u64,
+    /// live write-through target: every counter/sample mutation that goes
+    /// through a method also lands in these shared atomic cells
+    tel: Option<Arc<Telemetry>>,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -125,38 +174,150 @@ impl Metrics {
         }
     }
 
+    /// Attach the live telemetry cells this instance writes through to.
+    /// (Counters already accumulated are not replayed; attach before
+    /// serving starts.)
+    pub fn attach_telemetry(&mut self, tel: Arc<Telemetry>) {
+        self.tel = Some(tel);
+    }
+
+    pub fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        self.tel.as_ref()
+    }
+
+    /// Rebuild a snapshot from live telemetry cells alone — the scrape
+    /// view and this snapshot are two reads of the same atomics, so they
+    /// agree by construction.  (The TPOT recent-window ring is engine
+    /// local and stays empty here; the all-time `tpot` histogram carries
+    /// the distribution.)
+    pub fn from_telemetry(tel: &Telemetry) -> Metrics {
+        let mut m = Metrics {
+            requests_completed: tel.get(Counter::RequestsCompleted),
+            tokens_generated: tel.get(Counter::TokensGenerated),
+            prompt_tokens: tel.get(Counter::PromptTokens),
+            prefill_chunks: tel.get(Counter::PrefillChunks),
+            decode_steps: tel.get(Counter::DecodeSteps),
+            decode_padded_slots: tel.get(Counter::DecodePaddedSlots),
+            decode_batch_slots: tel.get(Counter::DecodeBatchSlots),
+            draft_tokens: tel.get(Counter::DraftTokens),
+            draft_accepted: tel.get(Counter::DraftAccepted),
+            spec_rounds: tel.get(Counter::SpecRounds),
+            verify_calls: tel.get(Counter::VerifyCalls),
+            rollbacks: tel.get(Counter::Rollbacks),
+            resync_steps: tel.get(Counter::ResyncSteps),
+            drafter_reseeds: tel.get(Counter::DrafterReseeds),
+            cache_hits: tel.get(Counter::CacheHits),
+            cache_misses: tel.get(Counter::CacheMisses),
+            cache_tokens_saved: tel.get(Counter::CacheTokensSaved),
+            cancelled_requests: tel.get(Counter::CancelledRequests),
+            deadline_expired: tel.get(Counter::DeadlineExpired),
+            busy_s: tel.get(Counter::BusyMicros) as f64 / 1e6,
+            queue_depth_peak: tel.gauge_peak(Gauge::QueueDepth),
+            ..Metrics::default()
+        };
+        m.ttft = tel.hist(HistKind::Ttft);
+        m.latency = tel.hist(HistKind::Latency);
+        m.tpot = tel.hist(HistKind::Tpot);
+        m.acceptance = tel.hist(HistKind::Acceptance);
+        m.prefill_call = tel.hist(HistKind::PrefillCall);
+        m.decode_call = tel.hist(HistKind::DecodeCall);
+        m
+    }
+
+    /// Bump a monotone counter (and its live telemetry cell, when one is
+    /// attached).  This is the single mutation path for the `u64` fields —
+    /// the engines never touch them directly anymore.
+    pub fn count(&mut self, c: Counter, n: u64) {
+        match c {
+            Counter::RequestsCompleted => self.requests_completed += n,
+            Counter::TokensGenerated => self.tokens_generated += n,
+            Counter::PromptTokens => self.prompt_tokens += n,
+            Counter::PrefillChunks => self.prefill_chunks += n,
+            Counter::DecodeSteps => self.decode_steps += n,
+            Counter::DecodePaddedSlots => self.decode_padded_slots += n,
+            Counter::DecodeBatchSlots => self.decode_batch_slots += n,
+            Counter::DraftTokens => self.draft_tokens += n,
+            Counter::DraftAccepted => self.draft_accepted += n,
+            Counter::SpecRounds => self.spec_rounds += n,
+            Counter::VerifyCalls => self.verify_calls += n,
+            Counter::Rollbacks => self.rollbacks += n,
+            Counter::ResyncSteps => self.resync_steps += n,
+            Counter::DrafterReseeds => self.drafter_reseeds += n,
+            Counter::CacheHits => self.cache_hits += n,
+            Counter::CacheMisses => self.cache_misses += n,
+            Counter::CacheTokensSaved => self.cache_tokens_saved += n,
+            Counter::CancelledRequests => self.cancelled_requests += n,
+            Counter::DeadlineExpired => self.deadline_expired += n,
+            // busy time goes through note_busy (float seconds field)
+            Counter::BusyMicros => {}
+        }
+        if let Some(t) = &self.tel {
+            t.add(c, n);
+        }
+    }
+
     pub fn decode_tokens_per_s(&self) -> f64 {
         self.tokens_generated as f64 / self.wall_s().max(1e-12)
     }
 
-    fn pct(v: &[f64], p: f64) -> f64 {
-        if v.is_empty() {
-            return 0.0;
+    pub fn note_ttft(&mut self, seconds: f64) {
+        self.ttft.observe(seconds);
+        if let Some(t) = &self.tel {
+            t.observe(HistKind::Ttft, seconds);
         }
-        let mut s = v.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        s[((s.len() as f64 * p) as usize).min(s.len() - 1)]
+    }
+
+    pub fn note_latency(&mut self, seconds: f64) {
+        self.latency.observe(seconds);
+        if let Some(t) = &self.tel {
+            t.observe(HistKind::Latency, seconds);
+        }
+    }
+
+    /// Record one request's draft-acceptance rate at retire time.
+    pub fn note_acceptance(&mut self, rate: f64) {
+        self.acceptance.observe(rate);
+        if let Some(t) = &self.tel {
+            t.observe(HistKind::Acceptance, rate);
+        }
+    }
+
+    /// Record one backend prefill-call latency (chunk or verify window).
+    pub fn note_prefill_call(&mut self, seconds: f64) {
+        self.prefill_call.observe(seconds);
+        if let Some(t) = &self.tel {
+            t.observe(HistKind::PrefillCall, seconds);
+        }
+    }
+
+    /// Record one backend decode-call latency.
+    pub fn note_decode_call(&mut self, seconds: f64) {
+        self.decode_call.observe(seconds);
+        if let Some(t) = &self.tel {
+            t.observe(HistKind::DecodeCall, seconds);
+        }
     }
 
     pub fn ttft_p50(&self) -> f64 {
-        Self::pct(&self.ttft_s, 0.50)
+        self.ttft.quantile(0.50)
     }
 
     pub fn ttft_p95(&self) -> f64 {
-        Self::pct(&self.ttft_s, 0.95)
+        self.ttft.quantile(0.95)
     }
 
     pub fn latency_p50(&self) -> f64 {
-        Self::pct(&self.request_latency_s, 0.50)
+        self.latency.quantile(0.50)
     }
 
     pub fn latency_p95(&self) -> f64 {
-        Self::pct(&self.request_latency_s, 0.95)
+        self.latency.quantile(0.95)
     }
 
-    /// Record one inter-token latency sample (ring-buffered at
-    /// [`TPOT_SAMPLE_CAP`] so per-token accounting stays bounded).
-    pub fn note_tpot(&mut self, seconds: f64) {
+    /// Push into the recent-window ring only (no histogram/telemetry
+    /// write-through) — used by [`Metrics::merge`], whose source histogram
+    /// counts already include these samples.
+    fn tpot_ring_push(&mut self, seconds: f64) {
         if self.tpot_s.len() < TPOT_SAMPLE_CAP {
             self.tpot_s.push(seconds);
         } else {
@@ -165,21 +326,32 @@ impl Metrics {
         self.tpot_seen += 1;
     }
 
-    /// Median inter-token latency (seconds).
+    /// Record one inter-token latency sample: ring-buffered at
+    /// [`TPOT_SAMPLE_CAP`] for the recent-window view, plus the all-time
+    /// histogram (and its live cell).
+    pub fn note_tpot(&mut self, seconds: f64) {
+        self.tpot_ring_push(seconds);
+        self.tpot.observe(seconds);
+        if let Some(t) = &self.tel {
+            t.observe(HistKind::Tpot, seconds);
+        }
+    }
+
+    /// Median inter-token latency (seconds) over the recent window.
     pub fn tpot_p50(&self) -> f64 {
-        Self::pct(&self.tpot_s, 0.50)
+        SortedSamples::new(self.tpot_s.clone()).pct(0.50)
     }
 
     pub fn tpot_p95(&self) -> f64 {
-        Self::pct(&self.tpot_s, 0.95)
+        SortedSamples::new(self.tpot_s.clone()).pct(0.95)
     }
 
     /// Count a retirement's lifecycle reason (normal reasons are already
     /// covered by `requests_completed`).
     pub fn note_finish_reason(&mut self, reason: FinishReason) {
         match reason {
-            FinishReason::Cancelled => self.cancelled_requests += 1,
-            FinishReason::Deadline => self.deadline_expired += 1,
+            FinishReason::Cancelled => self.count(Counter::CancelledRequests, 1),
+            FinishReason::Deadline => self.count(Counter::DeadlineExpired, 1),
             _ => {}
         }
     }
@@ -202,7 +374,7 @@ impl Metrics {
 
     /// Median per-request acceptance rate (speculative requests only).
     pub fn acceptance_p50(&self) -> f64 {
-        Self::pct(&self.per_request_acceptance, 0.50)
+        self.acceptance.quantile(0.50)
     }
 
     /// State-cache hit rate over admissions that probed the cache
@@ -226,16 +398,52 @@ impl Metrics {
         self.busy_s / w
     }
 
+    /// Accumulate busy wall time (live cell: integer microseconds).
+    pub fn note_busy(&mut self, seconds: f64) {
+        self.busy_s += seconds;
+        if let Some(t) = &self.tel {
+            t.add(Counter::BusyMicros, (seconds * 1e6) as u64);
+        }
+    }
+
     /// Record that the engine currently holds `depth` requests
-    /// (pending + active), keeping the peak.
+    /// (pending + active), keeping the peak (and the live gauge).
     pub fn note_queue_depth(&mut self, depth: usize) {
         self.queue_depth_peak = self.queue_depth_peak.max(depth as u64);
+        if let Some(t) = &self.tel {
+            t.set_gauge(Gauge::QueueDepth, depth as u64);
+        }
+    }
+
+    /// Update the live active-slots gauge (state slots bound to in-flight
+    /// requests right now); snapshot-only instances ignore it.
+    pub fn note_active_slots(&mut self, active: usize) {
+        if let Some(t) = &self.tel {
+            t.set_gauge(Gauge::ActiveSlots, active as u64);
+        }
+    }
+
+    /// Heap bytes held by the latency-sample structures — constant once
+    /// warm (six fixed bucket arrays plus the capped TPOT ring), where the
+    /// old raw vectors grew one `f64` per request forever.
+    pub fn sample_heap_bytes(&self) -> usize {
+        self.ttft.heap_bytes()
+            + self.latency.heap_bytes()
+            + self.acceptance.heap_bytes()
+            + self.tpot.heap_bytes()
+            + self.prefill_call.heap_bytes()
+            + self.decode_call.heap_bytes()
+            + self.tpot_s.capacity() * std::mem::size_of::<f64>()
     }
 
     /// Fold another engine's metrics into this one (the multi-worker
-    /// aggregate): counters add, latency samples concatenate, the wall
-    /// clock spans the earliest start to the latest stop, and the queue
-    /// depth keeps the per-worker peak.
+    /// aggregate): counters add, histograms merge bucket-wise (exact —
+    /// merged quantiles equal pooled-stream quantiles), the TPOT
+    /// recent-window rings concatenate within their cap, the wall clock
+    /// spans the earliest start to the latest stop, and the queue depth
+    /// keeps the per-worker peak.  Fields are written directly — no
+    /// telemetry write-through, since the source samples already live in
+    /// their own workers' cells.
     pub fn merge(&mut self, other: &Metrics) {
         self.requests_completed += other.requests_completed;
         self.tokens_generated += other.tokens_generated;
@@ -256,13 +464,15 @@ impl Metrics {
         self.cache_tokens_saved += other.cache_tokens_saved;
         self.cancelled_requests += other.cancelled_requests;
         self.deadline_expired += other.deadline_expired;
-        for &s in &other.tpot_s {
-            self.note_tpot(s);
+        for &v in &other.tpot_s {
+            self.tpot_ring_push(v);
         }
-        self.per_request_acceptance
-            .extend_from_slice(&other.per_request_acceptance);
-        self.ttft_s.extend_from_slice(&other.ttft_s);
-        self.request_latency_s.extend_from_slice(&other.request_latency_s);
+        self.tpot.merge(&other.tpot);
+        self.acceptance.merge(&other.acceptance);
+        self.ttft.merge(&other.ttft);
+        self.latency.merge(&other.latency);
+        self.prefill_call.merge(&other.prefill_call);
+        self.decode_call.merge(&other.decode_call);
         self.queue_depth_peak = self.queue_depth_peak.max(other.queue_depth_peak);
         self.busy_s += other.busy_s;
         self.worker_stats.extend(other.worker_stats.iter().cloned());
@@ -325,6 +535,8 @@ impl Metrics {
                 tpots.join("/")
             )
         };
+        // one sort for both recent-window TPOT percentiles
+        let tpot = SortedSamples::new(self.tpot_s.clone());
         format!(
             "requests={} prompt_toks={} gen_toks={} wall={:.3}s gen_tok/s={:.1} \
              ttft_p50={:.1}ms ttft_p95={:.1}ms lat_p50={:.1}ms lat_p95={:.1}ms \
@@ -340,8 +552,8 @@ impl Metrics {
             self.ttft_p95() * 1e3,
             self.latency_p50() * 1e3,
             self.latency_p95() * 1e3,
-            self.tpot_p50() * 1e3,
-            self.tpot_p95() * 1e3,
+            tpot.pct(0.50) * 1e3,
+            tpot.pct(0.95) * 1e3,
             self.prefill_chunks,
             self.decode_steps,
             self.padding_frac() * 100.0,
@@ -353,6 +565,61 @@ impl Metrics {
             workers,
         )
     }
+
+    /// Machine-readable final snapshot (`serve --metrics-json PATH`, and
+    /// the schema the bench JSON artifacts embed per run).
+    pub fn to_json(&self) -> Json {
+        fn hist(h: &Histogram) -> Json {
+            obj(vec![
+                ("count", num(h.count() as f64)),
+                ("sum", num(h.sum())),
+                ("mean", num(h.mean())),
+                ("min", num(h.min())),
+                ("max", num(h.max())),
+                ("p50", num(h.quantile(0.50))),
+                ("p95", num(h.quantile(0.95))),
+                ("p99", num(h.quantile(0.99))),
+            ])
+        }
+        let workers: Vec<Json> = self.worker_stats.iter().map(WorkerStat::to_json).collect();
+        obj(vec![
+            ("schema", s("fastmamba.metrics.v1")),
+            ("requests_completed", num(self.requests_completed as f64)),
+            ("prompt_tokens", num(self.prompt_tokens as f64)),
+            ("tokens_generated", num(self.tokens_generated as f64)),
+            ("prefill_chunks", num(self.prefill_chunks as f64)),
+            ("decode_steps", num(self.decode_steps as f64)),
+            ("decode_padded_slots", num(self.decode_padded_slots as f64)),
+            ("decode_batch_slots", num(self.decode_batch_slots as f64)),
+            ("draft_tokens", num(self.draft_tokens as f64)),
+            ("draft_accepted", num(self.draft_accepted as f64)),
+            ("spec_rounds", num(self.spec_rounds as f64)),
+            ("verify_calls", num(self.verify_calls as f64)),
+            ("rollbacks", num(self.rollbacks as f64)),
+            ("resync_steps", num(self.resync_steps as f64)),
+            ("drafter_reseeds", num(self.drafter_reseeds as f64)),
+            ("cache_hits", num(self.cache_hits as f64)),
+            ("cache_misses", num(self.cache_misses as f64)),
+            ("cache_tokens_saved", num(self.cache_tokens_saved as f64)),
+            ("cancelled_requests", num(self.cancelled_requests as f64)),
+            ("deadline_expired", num(self.deadline_expired as f64)),
+            ("queue_depth_peak", num(self.queue_depth_peak as f64)),
+            ("wall_s", num(self.wall_s())),
+            ("busy_s", num(self.busy_s)),
+            ("utilization", num(self.utilization())),
+            ("gen_tok_per_s", num(self.decode_tokens_per_s())),
+            ("padding_frac", num(self.padding_frac())),
+            ("acceptance_rate", num(self.acceptance_rate())),
+            ("cache_hit_rate", num(self.cache_hit_rate())),
+            ("ttft_s", hist(&self.ttft)),
+            ("request_latency_s", hist(&self.latency)),
+            ("tpot_s", hist(&self.tpot)),
+            ("draft_acceptance", hist(&self.acceptance)),
+            ("prefill_call_s", hist(&self.prefill_call)),
+            ("decode_call_s", hist(&self.decode_call)),
+            ("workers", Json::Arr(workers)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -362,9 +629,14 @@ mod tests {
     #[test]
     fn percentiles() {
         let mut m = Metrics::default();
-        m.ttft_s = vec![0.1, 0.2, 0.3, 0.4, 1.0];
-        assert_eq!(m.ttft_p50(), 0.3);
-        assert_eq!(m.ttft_p95(), 1.0);
+        for v in [0.1, 0.2, 0.3, 0.4, 1.0] {
+            m.note_ttft(v);
+        }
+        // histogram-backed: within one bucket (≈9%) of the exact
+        // nearest-rank quantiles 0.3 / 1.0
+        assert!((m.ttft_p50() - 0.3).abs() / 0.3 < 0.10, "{}", m.ttft_p50());
+        assert!((m.ttft_p95() - 1.0).abs() / 1.0 < 0.10, "{}", m.ttft_p95());
+        assert_eq!(m.ttft.count(), 5);
     }
 
     #[test]
@@ -373,6 +645,7 @@ mod tests {
         assert_eq!(m.ttft_p50(), 0.0);
         assert_eq!(m.decode_tokens_per_s(), 0.0);
         let _ = m.summary();
+        let _ = m.to_json();
     }
 
     #[test]
@@ -401,8 +674,10 @@ mod tests {
         m.draft_tokens = 10;
         m.draft_accepted = 8;
         assert!((m.acceptance_rate() - 0.8).abs() < 1e-12);
-        m.per_request_acceptance = vec![0.5, 0.8, 0.9];
-        assert_eq!(m.acceptance_p50(), 0.8);
+        for v in [0.5, 0.8, 0.9] {
+            m.note_acceptance(v);
+        }
+        assert!((m.acceptance_p50() - 0.8).abs() / 0.8 < 0.10, "{}", m.acceptance_p50());
     }
 
     #[test]
@@ -465,7 +740,7 @@ mod tests {
         a.requests_completed = 2;
         a.tokens_generated = 20;
         a.decode_steps = 5;
-        a.ttft_s = vec![0.1];
+        a.note_ttft(0.1);
         a.queue_depth_peak = 3;
         a.busy_s = 0.5;
         std::thread::sleep(std::time::Duration::from_millis(3));
@@ -476,7 +751,8 @@ mod tests {
         b.requests_completed = 3;
         b.tokens_generated = 10;
         b.decode_steps = 7;
-        b.ttft_s = vec![0.2, 0.3];
+        b.note_ttft(0.2);
+        b.note_ttft(0.3);
         b.queue_depth_peak = 5;
         b.busy_s = 0.25;
         std::thread::sleep(std::time::Duration::from_millis(3));
@@ -488,7 +764,7 @@ mod tests {
         assert_eq!(m.requests_completed, 5);
         assert_eq!(m.tokens_generated, 30);
         assert_eq!(m.decode_steps, 12);
-        assert_eq!(m.ttft_s.len(), 3);
+        assert_eq!(m.ttft.count(), 3, "histogram merge carries all samples");
         assert_eq!(m.queue_depth_peak, 5); // max, not sum
         assert!((m.busy_s - 0.75).abs() < 1e-12); // sum
         // the merged wall spans a's start to b's stop, so it is at least
@@ -568,6 +844,8 @@ mod tests {
         assert_eq!(m.tpot_s[0], TPOT_SAMPLE_CAP as f64);
         assert_eq!(m.tpot_s[99], (TPOT_SAMPLE_CAP + 99) as f64);
         assert_eq!(m.tpot_s[100], 100.0);
+        // the all-time histogram kept every sample without growing
+        assert_eq!(m.tpot.count(), (TPOT_SAMPLE_CAP + 100) as u64);
     }
 
     #[test]
@@ -581,5 +859,102 @@ mod tests {
         m.draft_tokens = 4;
         m.draft_accepted = 3;
         assert!(m.summary().contains("accept=75.0%"), "{}", m.summary());
+    }
+
+    #[test]
+    fn histogram_backed_samples_stay_bounded_in_memory() {
+        let mut m = Metrics::default();
+        // warm: allocate every histogram and fill the TPOT ring past cap
+        for i in 0..(TPOT_SAMPLE_CAP + 10) {
+            let v = 1e-4 + (i % 1000) as f64 * 1e-5;
+            m.note_tpot(v);
+        }
+        for i in 0..1000 {
+            let v = 1e-3 + (i % 100) as f64 * 1e-4;
+            m.note_ttft(v);
+            m.note_latency(v * 10.0);
+            m.note_acceptance((i % 10) as f64 / 10.0);
+            m.note_prefill_call(v);
+            m.note_decode_call(v);
+        }
+        let warm = m.sample_heap_bytes();
+        // before the histogram migration this loop grew ~3 Vec entries per
+        // request forever; now 100k more requests allocate nothing
+        for i in 0..100_000 {
+            let v = 1e-3 + (i % 997) as f64 * 1e-5;
+            m.note_ttft(v);
+            m.note_latency(v * 10.0);
+            m.note_acceptance((i % 10) as f64 / 10.0);
+            m.note_tpot(v / 10.0);
+            m.note_prefill_call(v);
+            m.note_decode_call(v);
+        }
+        assert_eq!(m.sample_heap_bytes(), warm, "sample memory is flat");
+        assert_eq!(m.ttft.count(), 101_000);
+        // sanity bound: six bucket arrays + the f64 ring, < 2 MiB total
+        assert!(warm < 2 << 20, "warm sample memory {warm} bytes");
+    }
+
+    #[test]
+    fn telemetry_write_through_matches_snapshot() {
+        let tel = Arc::new(Telemetry::new());
+        let mut m = Metrics::default();
+        m.attach_telemetry(Arc::clone(&tel));
+        m.count(Counter::RequestsCompleted, 3);
+        m.count(Counter::TokensGenerated, 48);
+        m.count(Counter::PromptTokens, 96);
+        m.count(Counter::CacheHits, 2);
+        m.note_finish_reason(FinishReason::Cancelled);
+        m.note_ttft(0.05);
+        m.note_latency(0.5);
+        m.note_tpot(0.002);
+        m.note_acceptance(0.75);
+        m.note_busy(0.25);
+        m.note_queue_depth(4);
+        m.note_queue_depth(2);
+        m.note_active_slots(3);
+
+        let snap = Metrics::from_telemetry(&tel);
+        assert_eq!(snap.requests_completed, m.requests_completed);
+        assert_eq!(snap.tokens_generated, m.tokens_generated);
+        assert_eq!(snap.prompt_tokens, m.prompt_tokens);
+        assert_eq!(snap.cache_hits, m.cache_hits);
+        assert_eq!(snap.cancelled_requests, m.cancelled_requests);
+        assert_eq!(snap.queue_depth_peak, m.queue_depth_peak);
+        assert!((snap.busy_s - m.busy_s).abs() < 1e-5);
+        assert_eq!(snap.ttft.count(), m.ttft.count());
+        assert_eq!(snap.ttft.quantile(0.5), m.ttft.quantile(0.5));
+        assert_eq!(snap.latency.count(), 1);
+        assert_eq!(snap.tpot.count(), 1);
+        assert_eq!(snap.acceptance.count(), 1);
+        assert_eq!(tel.gauge(crate::obs::Gauge::ActiveSlots), 3);
+    }
+
+    #[test]
+    fn metrics_json_snapshot_has_schema_and_histograms() {
+        let mut m = Metrics::default();
+        m.count(Counter::RequestsCompleted, 2);
+        m.note_ttft(0.1);
+        m.note_latency(1.0);
+        m.worker_stats.push(WorkerStat {
+            requests_completed: 2,
+            tokens_generated: 16,
+            queue_depth_peak: 1,
+            utilization: 0.5,
+            cache_hits: 0,
+            cache_tokens_saved: 0,
+            cancelled: 0,
+            deadline_expired: 0,
+            tpot_p50_s: 0.001,
+        });
+        let j = m.to_json();
+        let text = crate::util::json::to_string(&j);
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.str_field("schema").unwrap(), "fastmamba.metrics.v1");
+        assert_eq!(back.usize_field("requests_completed").unwrap(), 2);
+        assert_eq!(back.get("ttft_s").unwrap().usize_field("count").unwrap(), 1);
+        assert_eq!(back.arr_field("workers").unwrap().len(), 1);
+        let p50 = back.get("ttft_s").unwrap().get("p50").unwrap().as_f64().unwrap();
+        assert!((p50 - 0.1).abs() / 0.1 < 0.10, "{p50}");
     }
 }

@@ -43,6 +43,15 @@
 //! collection is unchanged — `finished` vectors and the pool's aggregate
 //! `results` channel receive every terminal result.
 //!
+//! Everything above is observable live: [`metrics::Metrics`] optionally
+//! write through to [`crate::obs`] telemetry cells
+//! (`Engine::with_telemetry`, [`PoolConfig`]`::hub`), so a Prometheus
+//! scrape or the periodic status line reads the same counters and
+//! log-bucketed histograms the end-of-run report merges — and a shared
+//! [`crate::obs::TraceSink`] (`Engine::with_trace`, [`PoolConfig`]`::trace`)
+//! records each request's queued → admitted → prefill-chunk →
+//! first-token → retire lifecycle as a Chrome-trace span tree.
+//!
 //! The second serving mode is speculative: [`speculative::SpecEngine`]
 //! drives a draft-k / verify-1 loop in which the quantized `fastmamba`
 //! variant drafts candidate tokens with single-token decode steps (on any

@@ -28,6 +28,8 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::backend::InferenceBackend;
+use crate::obs::trace::TraceCtx;
+use crate::obs::{Counter, Telemetry, TelemetryHub, TraceSink};
 use crate::statecache::StateCache;
 
 use super::metrics::{Metrics, WorkerStat};
@@ -90,6 +92,28 @@ pub struct PoolConfig {
     /// hit by every other worker (interior sharded locking — no
     /// coordination through the dispatcher)
     pub cache: Option<Arc<StateCache>>,
+    /// live telemetry hub: each worker registers its own [`Telemetry`]
+    /// cell (label = worker id) and the dispatcher registers one for the
+    /// requests it resolves itself, so a `/metrics` scrape mid-run reads
+    /// the same cells the end-of-run report merges
+    pub hub: Option<Arc<TelemetryHub>>,
+    /// span-trace sink shared by every worker: the dispatcher opens each
+    /// request's envelope at ingress, the owning worker fills in
+    /// admission/prefill/decode spans and closes it at retire
+    pub trace: Option<Arc<TraceSink>>,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            engine: EngineConfig::default(),
+            n_workers: 1,
+            spec: None,
+            cache: None,
+            hub: None,
+            trace: None,
+        }
+    }
 }
 
 impl PoolConfig {
@@ -104,6 +128,18 @@ impl PoolConfig {
     /// Attach a shared state cache to every worker.
     pub fn with_cache(mut self, cache: Arc<StateCache>) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Attach a telemetry hub for live (mid-run) metric reads.
+    pub fn with_telemetry_hub(mut self, hub: Arc<TelemetryHub>) -> Self {
+        self.hub = Some(hub);
+        self
+    }
+
+    /// Attach a span-trace sink shared by the dispatcher and all workers.
+    pub fn with_trace(mut self, sink: Arc<TraceSink>) -> Self {
+        self.trace = Some(sink);
         self
     }
 }
@@ -262,6 +298,13 @@ impl<'be> WorkerEngine<'be> {
         }
     }
 
+    fn set_trace(&mut self, ctx: TraceCtx) {
+        match self {
+            Self::Plain(e) => e.set_trace(ctx),
+            Self::Spec(e) => e.set_trace(ctx),
+        }
+    }
+
     fn into_metrics(self) -> Metrics {
         match self {
             Self::Plain(e) => e.metrics,
@@ -334,6 +377,18 @@ where
             WorkerEngine::Plain(e)
         }
     };
+    if let Some(hub) = &cfg.hub {
+        engine
+            .metrics_mut()
+            .attach_telemetry(hub.register(&id.to_string()));
+    }
+    if let Some(sink) = &cfg.trace {
+        // the dispatcher opened the request envelope at ingress; the
+        // worker only fills in admission/prefill/decode spans and closes it
+        let mut ctx = TraceCtx::new(Arc::clone(sink), id as u32);
+        ctx.record_queued = false;
+        engine.set_trace(ctx);
+    }
     engine.metrics_mut().start();
     loop {
         // drain whatever is queued without blocking; block only if idle
@@ -378,6 +433,8 @@ fn dispatch(
     handles: Vec<thread::JoinHandle<Result<Metrics>>>,
     pool_rx: mpsc::Receiver<Msg>,
     tx_done: mpsc::Sender<FinishedRequest>,
+    dtel: Option<Arc<Telemetry>>,
+    trace: Option<Arc<TraceSink>>,
 ) -> Result<PoolReport> {
     let mut router = Router::new(n);
     // the dispatcher keeps a copy of every request a worker currently
@@ -395,6 +452,26 @@ fn dispatch(
     // queued, or terminally lost to worker death) — folded into the merged
     // metrics so the aggregate accounts for every submitted request
     let mut dispatcher = Metrics::default();
+    if let Some(t) = dtel {
+        dispatcher.attach_telemetry(t);
+    }
+    // the dispatcher opens each sampled request's trace envelope at
+    // ingress (workers run with `record_queued = false`), so queue time
+    // shows up inside the request span
+    let open_envelope = |req: &Request| {
+        if let Some(s) = &trace {
+            if s.sampled(req.id) {
+                s.begin_request(req.id, req.prompt.len(), req.priority);
+            }
+        }
+    };
+    let close_envelope = |id: u64, reason: FinishReason| {
+        if let Some(s) = &trace {
+            if s.sampled(id) {
+                s.end_request(id, &format!("{reason:?}"), 0);
+            }
+        }
+    };
 
     /// Terminal result for a request that never finished on a worker.
     fn dropped_fin(req: &Request, reason: FinishReason) -> FinishedRequest {
@@ -444,14 +521,16 @@ fn dispatch(
                 let req = backlog.remove(i).expect("index in bounds");
                 let fin = dropped_fin(&req, reason);
                 dispatcher.note_finish_reason(reason);
-                dispatcher.requests_completed += 1;
-                dispatcher.request_latency_s.push(fin.total_s);
+                dispatcher.count(Counter::RequestsCompleted, 1);
+                dispatcher.note_latency(fin.total_s);
+                close_envelope(fin.id, reason);
                 req.emit(Event::Finished(fin.clone()));
                 let _ = tx_done.send(fin);
             } else {
                 i += 1;
             }
         }
+        dispatcher.note_queue_depth(backlog.len());
 
         // place as much backlog as worker capacity allows; `route` returning
         // None means every live worker is at capacity — wait for a `Done`
@@ -505,7 +584,10 @@ fn dispatch(
                         bury(worker, &mut alive, &mut outstanding, &mut backlog,
                              &mut errors);
                     }
-                    Msg::Incoming(req) => insert_by_priority(&mut backlog, req),
+                    Msg::Incoming(req) => {
+                        open_envelope(&req);
+                        insert_by_priority(&mut backlog, req);
+                    }
                     Msg::IngressClosed => {}
                 }
             }
@@ -516,8 +598,9 @@ fn dispatch(
             {
                 lost += 1;
                 let fin = dropped_fin(&req, FinishReason::WorkerDied);
-                dispatcher.requests_completed += 1;
-                dispatcher.request_latency_s.push(fin.total_s);
+                dispatcher.count(Counter::RequestsCompleted, 1);
+                dispatcher.note_latency(fin.total_s);
+                close_envelope(fin.id, FinishReason::WorkerDied);
                 req.emit(Event::Finished(fin.clone()));
                 let _ = tx_done.send(fin);
             }
@@ -549,7 +632,10 @@ fn dispatch(
             }
         };
         match msg {
-            Ok(Msg::Incoming(req)) => insert_by_priority(&mut backlog, req),
+            Ok(Msg::Incoming(req)) => {
+                open_envelope(&req);
+                insert_by_priority(&mut backlog, req);
+            }
             Ok(Msg::IngressClosed) => ingress_open = false,
             Ok(Msg::Done { worker, fin }) => {
                 if let Some(pos) =
@@ -632,6 +718,12 @@ where
     let (tx_done, rx_done) = mpsc::channel::<FinishedRequest>();
     let (pool_tx, pool_rx) = mpsc::channel::<Msg>();
 
+    let dtel = cfg.hub.as_ref().map(|h| h.register("dispatcher"));
+    let dtrace = cfg.trace.as_ref().map(Arc::clone);
+    if let (Some(hub), Some(cache)) = (&cfg.hub, &cfg.cache) {
+        hub.attach_cache(Arc::clone(cache));
+    }
+
     // ingress forwarder: bridges the public Sender<Request> into the
     // dispatcher's message stream and signals end-of-input when every
     // submitter handle is dropped
@@ -659,8 +751,9 @@ where
     }
     drop(pool_tx);
 
-    let dispatcher =
-        thread::spawn(move || dispatch(n, capacity, worker_tx, handles, pool_rx, tx_done));
+    let dispatcher = thread::spawn(move || {
+        dispatch(n, capacity, worker_tx, handles, pool_rx, tx_done, dtel, dtrace)
+    });
     ServePool {
         submit: Some(tx_req),
         results: rx_done,
@@ -677,7 +770,7 @@ where
 {
     serve_pool(
         make_backend,
-        PoolConfig { engine: cfg, n_workers: 1, spec: None, cache: None },
+        PoolConfig { engine: cfg, n_workers: 1, ..PoolConfig::default() },
     )
 }
 
@@ -801,6 +894,7 @@ mod tests {
                     n_workers,
                     spec: None,
                     cache: None,
+                    ..PoolConfig::default()
                 },
             );
             // rebuilt per run: Request::new stamps submitted_at, and reusing
@@ -883,6 +977,7 @@ mod tests {
                     n_workers: 4,
                     spec: None,
                     cache,
+                    ..PoolConfig::default()
                 },
             );
             for r in make_reqs() {
@@ -961,6 +1056,7 @@ mod tests {
                     n_workers,
                     spec,
                     cache: None,
+                    ..PoolConfig::default()
                 },
             );
             for r in make_reqs() {
@@ -1012,6 +1108,7 @@ mod tests {
                 n_workers: 4,
                 spec: None,
                 cache: None,
+                ..PoolConfig::default()
             },
         );
         let n = 20usize;
@@ -1074,6 +1171,7 @@ mod tests {
                 n_workers,
                 spec: None,
                 cache: None,
+                ..PoolConfig::default()
             },
         );
         let prompt: Vec<u32> = (0..17).map(|j| ((j * 13 + 5) % 128) as u32).collect();
@@ -1154,6 +1252,7 @@ mod tests {
                 n_workers: 1,
                 spec: None,
                 cache: None,
+                ..PoolConfig::default()
             },
         );
         let prompt: Vec<u32> = (0..9).map(|j| ((j * 13 + 5) % 128) as u32).collect();
@@ -1200,6 +1299,7 @@ mod tests {
                 n_workers: 1,
                 spec: None,
                 cache: None,
+                ..PoolConfig::default()
             },
         );
         let h = pool.submit(Request::new(0, vec![1, 2, 3], 4, "fp32")).unwrap();
@@ -1210,5 +1310,116 @@ mod tests {
         assert_eq!(hf.finish_reason, FinishReason::WorkerDied);
         let report = pool.finish().unwrap();
         assert!(!report.errors.is_empty(), "worker failure must be recorded");
+    }
+
+    #[test]
+    fn pool_trace_envelopes_are_balanced_and_hub_totals_match() {
+        use crate::util::json::Json;
+        // distributed envelope handoff: the dispatcher opens each request
+        // span at ingress, the owning worker closes it at retire — across
+        // 4 workers every lane must still balance, and the hub's live
+        // cells must agree with the merged end-of-run report
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let hub = Arc::new(TelemetryHub::new());
+        let sink = Arc::new(TraceSink::new(1));
+        let pool = serve_pool(
+            make,
+            PoolConfig {
+                engine: EngineConfig { max_active: 4, greedy_chunking: true },
+                n_workers: 4,
+                hub: Some(Arc::clone(&hub)),
+                trace: Some(Arc::clone(&sink)),
+                ..PoolConfig::default()
+            },
+        );
+        let reqs = stress_requests();
+        let n = reqs.len();
+        for r in reqs {
+            pool.submit(r).unwrap();
+        }
+        for _ in 0..n {
+            pool.results.recv().expect("pool result");
+        }
+        let report = pool.finish().unwrap();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+
+        // scrape view == report view: two reads of the same cells
+        assert_eq!(
+            hub.total(Counter::RequestsCompleted),
+            report.merged.requests_completed
+        );
+        assert_eq!(
+            hub.total(Counter::TokensGenerated),
+            report.merged.tokens_generated
+        );
+        assert_eq!(hub.total(Counter::PromptTokens), report.merged.prompt_tokens);
+
+        let doc = sink.to_chrome_json();
+        let events = doc.arr_field("traceEvents").unwrap();
+        for id in 0..n as u64 {
+            let (mut begins, mut ends) = (0usize, 0usize);
+            for e in events {
+                if e.usize_field("pid").unwrap() != 0
+                    || e.usize_field("tid").unwrap() as u64 != id
+                {
+                    continue;
+                }
+                match e.str_field("ph").unwrap() {
+                    "B" => begins += 1,
+                    "E" => ends += 1,
+                    _ => {}
+                }
+            }
+            assert_eq!(
+                (begins, ends),
+                (1, 1),
+                "req {id}: dispatcher-opened envelope must close exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn worker_died_requests_close_their_trace_envelopes() {
+        use crate::util::json::Json;
+        use std::time::Duration;
+        // a request lost to worker death is resolved by the dispatcher —
+        // its trace envelope must still close, with the WorkerDied reason
+        let make = || -> Result<Box<dyn InferenceBackend>> {
+            std::thread::sleep(Duration::from_millis(200));
+            Err(anyhow!("backend construction failed on purpose"))
+        };
+        let sink = Arc::new(TraceSink::new(1));
+        let pool = serve_pool(
+            make,
+            PoolConfig {
+                engine: EngineConfig { max_active: 2, greedy_chunking: true },
+                n_workers: 1,
+                trace: Some(Arc::clone(&sink)),
+                ..PoolConfig::default()
+            },
+        );
+        let h = pool.submit(Request::new(0, vec![1, 2, 3], 4, "fp32")).unwrap();
+        let f = pool.results.recv().expect("terminal WorkerDied result");
+        assert_eq!(f.finish_reason, FinishReason::WorkerDied);
+        drop(h);
+        let _ = pool.finish().unwrap();
+
+        let doc = sink.to_chrome_json();
+        let events = doc.arr_field("traceEvents").unwrap();
+        let lane: Vec<&Json> = events
+            .iter()
+            .filter(|e| {
+                e.usize_field("pid").unwrap() == 0 && e.usize_field("tid").unwrap() == 0
+            })
+            .collect();
+        let begins = lane.iter().filter(|e| e.str_field("ph").unwrap() == "B").count();
+        let ends: Vec<_> =
+            lane.iter().filter(|e| e.str_field("ph").unwrap() == "E").collect();
+        assert_eq!(begins, 1, "envelope opened at ingress");
+        assert_eq!(ends.len(), 1, "envelope closed by the dispatcher");
+        assert_eq!(
+            ends[0].get("args").unwrap().str_field("finish_reason").unwrap(),
+            "WorkerDied"
+        );
     }
 }

@@ -18,7 +18,10 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::backend::InferenceBackend;
+use crate::obs::trace::TraceCtx;
+use crate::obs::{Counter, Telemetry, TraceSink};
 use crate::statecache::StateCache;
+use crate::util::json::{num, Json};
 
 use super::admission::{finish_unadmitted, seed_from_cache, AdmissionSeed};
 use super::batcher::{full_bucket_plan, DecodeBatcher};
@@ -53,6 +56,8 @@ pub struct Engine<'be> {
     /// shared SSM state cache (prefix reuse + session resume); `None`
     /// runs every prompt through full prefill
     cache: Option<Arc<StateCache>>,
+    /// span-trace attachment (sink + worker lane); `None` = zero overhead
+    trace: Option<TraceCtx>,
     pending: VecDeque<Request>,
     active: Vec<InFlight>,
     pub finished: Vec<FinishedRequest>,
@@ -71,6 +76,7 @@ impl<'be> Engine<'be> {
             batcher,
             prefill_buckets,
             cache: None,
+            trace: None,
             pending: VecDeque::new(),
             active: Vec::new(),
             finished: Vec::new(),
@@ -88,6 +94,26 @@ impl<'be> Engine<'be> {
         self
     }
 
+    /// Attach live telemetry cells: every metrics mutation from here on
+    /// also lands in `tel`'s shared atomics (Prometheus scrape / live log).
+    pub fn with_telemetry(mut self, tel: Arc<Telemetry>) -> Self {
+        self.metrics.attach_telemetry(tel);
+        self
+    }
+
+    /// Attach a span-trace sink; `lane` identifies this engine's process
+    /// lane in the exported Chrome trace.
+    pub fn with_trace(mut self, sink: Arc<TraceSink>, lane: u32) -> Self {
+        self.trace = Some(TraceCtx::new(sink, lane));
+        self
+    }
+
+    /// Pool-worker trace attachment (the dispatcher already opened the
+    /// request envelopes, so `ctx.record_queued` is false there).
+    pub(crate) fn set_trace(&mut self, ctx: TraceCtx) {
+        self.trace = Some(ctx);
+    }
+
     /// Queue a request and return its streaming [`SubmitHandle`] (events
     /// buffer until `step()`/`run()` produces them; dropping the handle
     /// reverts to batch-style collection through [`Engine::finished`]).
@@ -101,6 +127,11 @@ impl<'be> Engine<'be> {
     /// worker path: [`super::router::ServePool::submit`] created the
     /// handle before the request crossed into this worker).
     pub(crate) fn enqueue(&mut self, req: Request) {
+        if let Some(t) = &self.trace {
+            if t.record_queued && t.sink.sampled(req.id) {
+                t.sink.begin_request(req.id, req.prompt.len(), req.priority);
+            }
+        }
         insert_by_priority(&mut self.pending, req);
         self.metrics
             .note_queue_depth(self.pending.len() + self.active.len());
@@ -153,6 +184,21 @@ impl<'be> Engine<'be> {
                     &self.prefill_buckets,
                     chunks,
                 );
+            if let Some(t) = &self.trace {
+                if t.sink.sampled(req.id) {
+                    t.sink.instant(req.id, "admitted", vec![("slot", num(slot as f64))]);
+                    if self.cache.is_some() {
+                        t.sink.instant(
+                            req.id,
+                            "cache_probe",
+                            vec![
+                                ("hit", Json::Bool(offset > 0)),
+                                ("tokens_saved", num(offset as f64)),
+                            ],
+                        );
+                    }
+                }
+            }
             // whatever the seeded coverage and remaining chunks, the
             // decode-path remainder is the uncovered tail (always >= 1:
             // chunk plans reserve the final prompt token)
@@ -163,12 +209,25 @@ impl<'be> Engine<'be> {
                     .map(|t| *t as i32)
                     .collect();
                 let st = self.pool.get(slot);
+                let call_t0 = Instant::now();
                 let out = self.be.prefill(&req.variant, &toks, &st.conv, &st.ssm)?;
+                let call_s = call_t0.elapsed().as_secs_f64();
                 let stm = self.pool.get_mut(slot);
                 stm.conv = out.conv_state;
                 stm.ssm = out.ssm_state;
                 offset += chunk_len;
-                self.metrics.prefill_chunks += 1;
+                self.metrics.note_prefill_call(call_s);
+                self.metrics.count(Counter::PrefillChunks, 1);
+                if let Some(t) = &self.trace {
+                    if t.sink.sampled(req.id) {
+                        t.sink.span_request(
+                            req.id,
+                            "prefill_chunk",
+                            call_s,
+                            vec![("len", num(chunk_len as f64))],
+                        );
+                    }
+                }
                 if prefix_cacheable {
                     // publish the boundary snapshot: the next request that
                     // shares this (variant, chunk-plan prefix, token prefix)
@@ -191,15 +250,18 @@ impl<'be> Engine<'be> {
             for i in 0..remainder {
                 let tok = req.prompt[offset + i] as i32;
                 let st = self.pool.get(slot);
+                let call_t0 = Instant::now();
                 let out = self.be.decode(&req.variant, 1, &st.conv, &st.ssm, &[tok])?;
+                self.metrics.note_decode_call(call_t0.elapsed().as_secs_f64());
                 let stm = self.pool.get_mut(slot);
                 stm.conv = out.conv_state;
                 stm.ssm = out.ssm_state;
                 last_logits = Some(out.logits);
-                self.metrics.decode_steps += 1;
-                self.metrics.decode_batch_slots += 1;
+                self.metrics.count(Counter::DecodeSteps, 1);
+                self.metrics.count(Counter::DecodeBatchSlots, 1);
             }
-            self.metrics.prompt_tokens += req.prompt.len() as u64;
+            self.metrics
+                .count(Counter::PromptTokens, req.prompt.len() as u64);
 
             // first generated token comes from the last prompt position
             // (chunk_plan guarantees remainder >= 1, so last_logits is set)
@@ -221,8 +283,13 @@ impl<'be> Engine<'be> {
             infl.generated.push(first);
             infl.req.emit(Event::FirstToken);
             infl.req.emit(Event::Token { tok: first, index: 0 });
-            self.metrics.ttft_s.push(submitted.elapsed().as_secs_f64());
-            self.metrics.tokens_generated += 1;
+            self.metrics.note_ttft(submitted.elapsed().as_secs_f64());
+            self.metrics.count(Counter::TokensGenerated, 1);
+            if let Some(t) = &self.trace {
+                if t.sink.sampled(infl.req.id) {
+                    t.sink.instant(infl.req.id, "first_token", Vec::new());
+                }
+            }
             // finished immediately?
             if infl.req.stop_token == Some(first) {
                 self.retire(infl, FinishReason::StopToken);
@@ -249,10 +316,9 @@ impl<'be> Engine<'be> {
         }
         self.pool.release(infl.slot);
         self.metrics.note_finish_reason(reason);
-        self.metrics.requests_completed += 1;
+        self.metrics.count(Counter::RequestsCompleted, 1);
         self.metrics
-            .request_latency_s
-            .push(infl.submitted.elapsed().as_secs_f64());
+            .note_latency(infl.submitted.elapsed().as_secs_f64());
         let fin = FinishedRequest {
             id: infl.req.id,
             prompt_len: infl.req.prompt.len(),
@@ -265,6 +331,12 @@ impl<'be> Engine<'be> {
             total_s: infl.submitted.elapsed().as_secs_f64(),
             spec: None,
         };
+        if let Some(t) = &self.trace {
+            if t.sink.sampled(fin.id) {
+                t.sink
+                    .end_request(fin.id, &format!("{reason:?}"), fin.generated.len());
+            }
+        }
         infl.req.emit(Event::Finished(fin.clone()));
         self.finished.push(fin);
     }
@@ -279,7 +351,13 @@ impl<'be> Engine<'be> {
         while i < self.pending.len() {
             if let Some(reason) = self.pending[i].lifecycle_reason() {
                 let req = self.pending.remove(i).expect("index in bounds");
-                finish_unadmitted(&mut self.metrics, &mut self.finished, req, reason);
+                finish_unadmitted(
+                    &mut self.metrics,
+                    self.trace.as_ref(),
+                    &mut self.finished,
+                    req,
+                    reason,
+                );
             } else {
                 i += 1;
             }
@@ -334,7 +412,21 @@ impl<'be> Engine<'be> {
                     tokens.push(tokens[0]);
                 }
                 let (conv, ssm) = self.pool.gather(&slot_ids);
+                let call_t0 = Instant::now();
                 let out = self.be.decode(&variant, plan.bucket, &conv, &ssm, &tokens)?;
+                let call_s = call_t0.elapsed().as_secs_f64();
+                self.metrics.note_decode_call(call_s);
+                if let Some(t) = &self.trace {
+                    t.sink.span_engine(
+                        t.lane,
+                        "decode_step",
+                        call_s,
+                        vec![
+                            ("bucket", num(plan.bucket as f64)),
+                            ("padding", num(plan.padding as f64)),
+                        ],
+                    );
+                }
                 // scatter only real members
                 let real = members.len();
                 let conv_len = conv.len() / plan.bucket;
@@ -344,9 +436,11 @@ impl<'be> Engine<'be> {
                     &out.conv_state[..real * conv_len],
                     &out.ssm_state[..real * ssm_len],
                 );
-                self.metrics.decode_steps += 1;
-                self.metrics.decode_padded_slots += plan.padding as u64;
-                self.metrics.decode_batch_slots += plan.bucket as u64;
+                self.metrics.count(Counter::DecodeSteps, 1);
+                self.metrics
+                    .count(Counter::DecodePaddedSlots, plan.padding as u64);
+                self.metrics
+                    .count(Counter::DecodeBatchSlots, plan.bucket as u64);
 
                 let now = Instant::now();
                 for (b, &ai) in members.iter().enumerate() {
@@ -360,7 +454,7 @@ impl<'be> Engine<'be> {
                     }
                     infl.req
                         .emit(Event::Token { tok, index: infl.generated.len() - 1 });
-                    self.metrics.tokens_generated += 1;
+                    self.metrics.count(Counter::TokensGenerated, 1);
                     if infl.req.stop_token == Some(tok) {
                         to_retire.push((ai, FinishReason::StopToken));
                     } else if infl.generated.len() >= infl.req.max_new_tokens {
@@ -385,10 +479,11 @@ impl<'be> Engine<'be> {
         self.metrics.note_queue_depth(depth);
         let t0 = Instant::now();
         self.admit()?;
+        self.metrics.note_active_slots(self.active.len());
         let r = self.decode_step();
         if depth > 0 {
             // only steps that had work count toward utilization
-            self.metrics.busy_s += t0.elapsed().as_secs_f64();
+            self.metrics.note_busy(t0.elapsed().as_secs_f64());
         }
         r
     }
@@ -821,5 +916,147 @@ mod tests {
         base.submit(Request::new(2, p2, 4, "fp32"));
         base.run().unwrap();
         assert_eq!(eng2.finished[0].generated, base.finished[0].generated);
+    }
+
+    #[test]
+    fn trace_spans_are_balanced_with_one_retire_per_request() {
+        use std::time::Duration;
+        // every request lane must be a well-formed envelope: one B at
+        // enqueue, one E at retire carrying the terminal reason — including
+        // the Cancelled and Deadline exits, which never reach decode
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let sink = Arc::new(TraceSink::new(1));
+        let mut eng =
+            Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true })
+                .with_trace(Arc::clone(&sink), 0);
+        let prompt: Vec<u32> = (0..33).map(|j| ((j * 13) % vocab) as u32).collect();
+        let long = eng.submit(Request::new(0, prompt.clone(), 24, "fp32"));
+        eng.submit(Request::new(1, prompt.clone(), 3, "fp32"));
+        eng.submit(Request::new(2, prompt, 4, "fp32").with_deadline(Duration::ZERO));
+        let mut streamed = 0usize;
+        while streamed < 4 {
+            eng.step().unwrap();
+            while let Some(ev) = long.try_event() {
+                if matches!(ev, Event::Token { .. }) {
+                    streamed += 1;
+                }
+            }
+        }
+        long.cancel();
+        eng.run().unwrap();
+        assert_eq!(eng.finished.len(), 3);
+
+        let doc = sink.to_chrome_json();
+        let events = doc.arr_field("traceEvents").unwrap();
+        assert!(!events.is_empty());
+        for f in &eng.finished {
+            let lane: Vec<&Json> = events
+                .iter()
+                .filter(|e| {
+                    e.usize_field("pid").unwrap() == 0
+                        && e.usize_field("tid").unwrap() as u64 == f.id
+                })
+                .collect();
+            assert!(!lane.is_empty(), "req {}: no trace events", f.id);
+            // balanced B/E envelope: depth never negative, closes at zero
+            let mut depth = 0i64;
+            let mut ends = 0usize;
+            for e in &lane {
+                match e.str_field("ph").unwrap() {
+                    "B" => depth += 1,
+                    "E" => {
+                        depth -= 1;
+                        ends += 1;
+                    }
+                    _ => {}
+                }
+                assert!(depth >= 0, "req {}: E before B", f.id);
+            }
+            assert_eq!(depth, 0, "req {}: unbalanced envelope", f.id);
+            assert_eq!(ends, 1, "req {}: exactly one retire", f.id);
+            // timestamps monotone in record order ('X' spans back-date
+            // their start and are exempt)
+            let mut prev = f64::NEG_INFINITY;
+            for e in &lane {
+                if e.str_field("ph").unwrap() == "X" {
+                    continue;
+                }
+                let ts = e.get("ts").unwrap().as_f64().unwrap();
+                assert!(ts >= prev, "req {}: timestamps went backwards", f.id);
+                prev = ts;
+            }
+            // the retire carries the terminal reason and token count
+            let end = lane
+                .iter()
+                .find(|e| e.str_field("ph").unwrap() == "E")
+                .unwrap();
+            let args = end.get("args").expect("retire args");
+            assert_eq!(
+                args.str_field("finish_reason").unwrap(),
+                format!("{:?}", f.finish_reason),
+                "req {}",
+                f.id
+            );
+            assert_eq!(args.usize_field("generated").unwrap(), f.generated.len());
+        }
+        // the reasons this trace must cover
+        let reasons: Vec<FinishReason> =
+            eng.finished.iter().map(|f| f.finish_reason).collect();
+        assert!(reasons.contains(&FinishReason::Cancelled));
+        assert!(reasons.contains(&FinishReason::Deadline));
+        assert!(reasons.contains(&FinishReason::Length));
+        // batch-level decode spans landed in the engine's own lane (pid 1)
+        assert!(
+            events.iter().any(|e| e.usize_field("pid").unwrap() == 1
+                && e.str_field("ph").unwrap() == "X"),
+            "no engine-lane decode spans"
+        );
+    }
+
+    #[test]
+    fn telemetry_snapshot_matches_legacy_summary_across_variants() {
+        use crate::model::Variant;
+        // the write-through contract: a snapshot rebuilt from the live
+        // telemetry cells alone equals the engine's own Metrics, for a
+        // workload spanning every quantization variant
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let tel = Arc::new(Telemetry::new());
+        let mut eng =
+            Engine::new(&be, EngineConfig::default()).with_telemetry(Arc::clone(&tel));
+        for (i, v) in Variant::ALL.iter().enumerate() {
+            let plen = 9 + 13 * i;
+            let prompt: Vec<u32> =
+                (0..plen).map(|j| ((i * 131 + j * 17) % vocab) as u32).collect();
+            eng.submit(Request::new(i as u64, prompt, 5, v.name()));
+        }
+        eng.run().unwrap();
+        let m = &eng.metrics;
+        assert_eq!(m.requests_completed, Variant::ALL.len() as u64);
+
+        let snap = Metrics::from_telemetry(&tel);
+        assert_eq!(snap.requests_completed, m.requests_completed);
+        assert_eq!(snap.tokens_generated, m.tokens_generated);
+        assert_eq!(snap.prompt_tokens, m.prompt_tokens);
+        assert_eq!(snap.prefill_chunks, m.prefill_chunks);
+        assert_eq!(snap.decode_steps, m.decode_steps);
+        assert_eq!(snap.decode_batch_slots, m.decode_batch_slots);
+        assert_eq!(snap.decode_padded_slots, m.decode_padded_slots);
+        assert_eq!(snap.cache_hits, m.cache_hits);
+        assert_eq!(snap.cache_misses, m.cache_misses);
+        assert_eq!(snap.cache_tokens_saved, m.cache_tokens_saved);
+        assert_eq!(snap.cancelled_requests, m.cancelled_requests);
+        assert_eq!(snap.deadline_expired, m.deadline_expired);
+        assert_eq!(snap.queue_depth_peak, m.queue_depth_peak);
+        // histograms carry identical observation counts and sums
+        assert_eq!(snap.ttft.count(), m.ttft.count());
+        assert_eq!(snap.latency.count(), m.latency.count());
+        assert_eq!(snap.prefill_call.count(), m.prefill_call.count());
+        assert_eq!(snap.decode_call.count(), m.decode_call.count());
+        assert_eq!(snap.tpot.count(), m.tpot.count());
+        assert_eq!(snap.latency.count(), m.requests_completed);
+        // busy time round-trips through integer microseconds
+        assert!((snap.busy_s - m.busy_s).abs() < 1e-2, "{} vs {}", snap.busy_s, m.busy_s);
     }
 }

@@ -51,7 +51,10 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::backend::InferenceBackend;
+use crate::obs::trace::TraceCtx;
+use crate::obs::{Counter, Telemetry, TraceSink};
 use crate::statecache::StateCache;
+use crate::util::json::{num, Json};
 
 use super::admission::{finish_unadmitted, seed_from_cache, AdmissionSeed};
 use super::batcher::{full_bucket_plan, smallest_covering};
@@ -155,6 +158,8 @@ pub struct SpecEngine<'be> {
     active: Vec<SpecInFlight>,
     pub finished: Vec<FinishedRequest>,
     pub metrics: Metrics,
+    /// per-request span tracing; `None` = zero overhead
+    trace: Option<TraceCtx>,
 }
 
 impl<'be> SpecEngine<'be> {
@@ -236,6 +241,7 @@ impl<'be> SpecEngine<'be> {
             active: Vec::new(),
             finished: Vec::new(),
             metrics: Metrics::default(),
+            trace: None,
         }
     }
 
@@ -246,6 +252,23 @@ impl<'be> SpecEngine<'be> {
     pub fn with_cache(mut self, cache: Arc<StateCache>) -> Self {
         self.cache = Some(cache);
         self
+    }
+
+    /// Attach a live telemetry cell: every metrics mutation writes through
+    /// to it, so a scrape mid-run sees current counts.
+    pub fn with_telemetry(mut self, tel: Arc<Telemetry>) -> Self {
+        self.metrics.attach_telemetry(tel);
+        self
+    }
+
+    /// Attach a span-trace sink; `lane` labels this engine's batch spans.
+    pub fn with_trace(mut self, sink: Arc<TraceSink>, lane: u32) -> Self {
+        self.trace = Some(TraceCtx::new(sink, lane));
+        self
+    }
+
+    pub(crate) fn set_trace(&mut self, ctx: TraceCtx) {
+        self.trace = Some(ctx);
     }
 
     /// Queue a request and return its streaming [`SubmitHandle`].  Token
@@ -260,6 +283,11 @@ impl<'be> SpecEngine<'be> {
     /// Queue a request whose event channel is already attached (the pool
     /// worker path).
     pub(crate) fn enqueue(&mut self, req: Request) {
+        if let Some(t) = &self.trace {
+            if t.record_queued && t.sink.sampled(req.id) {
+                t.sink.begin_request(req.id, req.prompt.len(), req.priority);
+            }
+        }
         insert_by_priority(&mut self.pending, req);
         self.metrics
             .note_queue_depth(self.pending.len() + self.active.len());
@@ -275,9 +303,10 @@ impl<'be> SpecEngine<'be> {
 
     /// One single-token drafter decode on `slot`; returns the logits.
     fn draft_step(&mut self, slot: usize, token: u32) -> Result<Vec<f32>> {
-        self.metrics.decode_steps += 1;
-        self.metrics.decode_batch_slots += 1;
+        self.metrics.count(Counter::DecodeSteps, 1);
+        self.metrics.count(Counter::DecodeBatchSlots, 1);
         let st = self.pool.get(slot);
+        let call_t0 = Instant::now();
         let out = self.drafter.decode(
             &self.cfg.draft_variant,
             1,
@@ -285,23 +314,28 @@ impl<'be> SpecEngine<'be> {
             &st.ssm,
             &[token as i32],
         )?;
+        self.metrics.note_decode_call(call_t0.elapsed().as_secs_f64());
         let stm = self.pool.get_mut(slot);
         stm.conv = out.conv_state;
         stm.ssm = out.ssm_state;
         Ok(out.logits)
     }
 
-    /// Advance the verifier slot over `tokens` with one exact prefill call.
-    fn verifier_prefill(&mut self, slot: usize, tokens: &[u32]) -> Result<()> {
+    /// Advance the verifier slot over `tokens` with one exact prefill
+    /// call; returns the backend call's wall time.
+    fn verifier_prefill(&mut self, slot: usize, tokens: &[u32]) -> Result<f64> {
         let toks: Vec<i32> = tokens.iter().map(|t| *t as i32).collect();
         let st = self.pool.get(slot);
+        let call_t0 = Instant::now();
         let out =
             self.verifier.prefill(&self.cfg.verify_variant, &toks, &st.conv, &st.ssm)?;
+        let call_s = call_t0.elapsed().as_secs_f64();
         let stm = self.pool.get_mut(slot);
         stm.conv = out.conv_state;
         stm.ssm = out.ssm_state;
-        self.metrics.prefill_chunks += 1;
-        Ok(())
+        self.metrics.note_prefill_call(call_s);
+        self.metrics.count(Counter::PrefillChunks, 1);
+        Ok(call_s)
     }
 
     /// Admit pending requests while two state slots remain.
@@ -338,9 +372,35 @@ impl<'be> SpecEngine<'be> {
                     &self.prefill_buckets,
                     chunks,
                 );
+            if let Some(t) = &self.trace {
+                if t.sink.sampled(req.id) {
+                    t.sink
+                        .instant(req.id, "admitted", vec![("slot", num(verify_slot as f64))]);
+                    if self.cache.is_some() {
+                        t.sink.instant(
+                            req.id,
+                            "cache_probe",
+                            vec![
+                                ("hit", Json::Bool(offset > 0)),
+                                ("tokens_saved", num(offset as f64)),
+                            ],
+                        );
+                    }
+                }
+            }
             for chunk in chunks {
                 let toks = body[offset..offset + chunk].to_vec();
-                self.verifier_prefill(verify_slot, &toks)?;
+                let call_s = self.verifier_prefill(verify_slot, &toks)?;
+                if let Some(t) = &self.trace {
+                    if t.sink.sampled(req.id) {
+                        t.sink.span_request(
+                            req.id,
+                            "prefill_chunk",
+                            call_s,
+                            vec![("len", num(chunk as f64))],
+                        );
+                    }
+                }
                 offset += chunk;
                 if prefix_cacheable {
                     done_chunks.push(chunk);
@@ -369,7 +429,8 @@ impl<'be> SpecEngine<'be> {
                 let _ = self.draft_step(draft_slot, t)?;
             }
 
-            self.metrics.prompt_tokens += req.prompt.len() as u64;
+            self.metrics
+                .count(Counter::PromptTokens, req.prompt.len() as u64);
             let frontier = *req.prompt.last().unwrap();
             self.active.push(SpecInFlight {
                 req,
@@ -433,8 +494,9 @@ impl<'be> SpecEngine<'be> {
             for &t in &residual {
                 let _ = self.draft_step(dslot, t)?;
             }
-            self.metrics.drafter_reseeds += 1;
-            self.metrics.resync_steps += residual.len() as u64;
+            self.metrics.count(Counter::DrafterReseeds, 1);
+            self.metrics
+                .count(Counter::ResyncSteps, residual.len() as u64);
         }
         Ok(())
     }
@@ -442,6 +504,7 @@ impl<'be> SpecEngine<'be> {
     /// One draft-k / verify-1 round for active request `ai`.
     fn round(&mut self, ai: usize) -> Result<()> {
         self.consolidate(ai)?;
+        let round_t0 = Instant::now();
         let vocab = self.verifier.cfg().vocab_size;
         let (dslot, vslot, frontier, max_new, stop, gen_len) = {
             let a = &self.active[ai];
@@ -491,9 +554,11 @@ impl<'be> SpecEngine<'be> {
         let pad = *window.last().unwrap();
         window.resize(bucket, pad);
         let st = self.pool.get(vslot);
+        let call_t0 = Instant::now();
         let out =
             self.verifier.prefill(&self.cfg.verify_variant, &window, &st.conv, &st.ssm)?;
-        self.metrics.verify_calls += 1;
+        self.metrics.note_prefill_call(call_t0.elapsed().as_secs_f64());
+        self.metrics.count(Counter::VerifyCalls, 1);
 
         // verify[i] = verifier's token after consuming frontier + drafts[..i]
         let verify: Vec<u32> = (0..=k)
@@ -505,9 +570,9 @@ impl<'be> SpecEngine<'be> {
         // This consolidation point is where the per-request stream advances:
         // every committed token is emitted now — drafts the verifier has
         // not accepted are never visible on the event channel.
-        self.metrics.draft_tokens += k as u64;
-        self.metrics.draft_accepted += m as u64;
-        self.metrics.spec_rounds += 1;
+        self.metrics.count(Counter::DraftTokens, k as u64);
+        self.metrics.count(Counter::DraftAccepted, m as u64);
+        self.metrics.count(Counter::SpecRounds, 1);
         let is_first = self.active[ai].first_token_at.is_none();
         let mut done = false;
         let mut n_committed = 0usize;
@@ -548,11 +613,32 @@ impl<'be> SpecEngine<'be> {
         for _ in 1..n_committed {
             self.metrics.note_tpot(0.0);
         }
-        self.metrics.tokens_generated += n_committed as u64;
+        self.metrics
+            .count(Counter::TokensGenerated, n_committed as u64);
         if is_first {
             self.metrics
-                .ttft_s
-                .push(self.active[ai].submitted.elapsed().as_secs_f64());
+                .note_ttft(self.active[ai].submitted.elapsed().as_secs_f64());
+        }
+        if let Some(t) = &self.trace {
+            let rid = self.active[ai].req.id;
+            if t.sink.sampled(rid) {
+                if is_first {
+                    t.sink.instant(rid, "first_token", Vec::new());
+                }
+                // mid-round rejection (below) restores a drafter snapshot
+                let rollback = !done && k >= 1 && m + 1 < k;
+                t.sink.span_request(
+                    rid,
+                    "spec_round",
+                    round_t0.elapsed().as_secs_f64(),
+                    vec![
+                        ("k", num(k as f64)),
+                        ("accepted", num(m as f64)),
+                        ("committed", num(n_committed as f64)),
+                        ("rollback", Json::Bool(rollback)),
+                    ],
+                );
+            }
         }
         if done {
             self.pool.clear_snapshots(dslot);
@@ -570,7 +656,7 @@ impl<'be> SpecEngine<'be> {
                 self.pool.discard(s);
             }
             let _ = self.draft_step(dslot, drafts[k - 1])?;
-            self.metrics.resync_steps += 1;
+            self.metrics.count(Counter::ResyncSteps, 1);
         } else if m == k - 1 {
             // the rejected draft was never consumed — already in sync
             for s in snaps {
@@ -583,7 +669,7 @@ impl<'be> SpecEngine<'be> {
             for s in &snaps[..m] {
                 self.pool.discard(*s);
             }
-            self.metrics.rollbacks += 1;
+            self.metrics.count(Counter::Rollbacks, 1);
         }
 
         // --- the old frontier and accepted drafts become verifier debt;
@@ -618,14 +704,12 @@ impl<'be> SpecEngine<'be> {
         self.pool.release(infl.draft_slot);
         self.pool.release(infl.verify_slot);
         self.metrics.note_finish_reason(reason);
-        self.metrics.requests_completed += 1;
+        self.metrics.count(Counter::RequestsCompleted, 1);
         self.metrics
-            .request_latency_s
-            .push(infl.submitted.elapsed().as_secs_f64());
+            .note_latency(infl.submitted.elapsed().as_secs_f64());
         if infl.drafted > 0 {
             self.metrics
-                .per_request_acceptance
-                .push(infl.accepted as f64 / infl.drafted as f64);
+                .note_acceptance(infl.accepted as f64 / infl.drafted as f64);
         }
         let fin = FinishedRequest {
             id: infl.req.id,
@@ -643,6 +727,12 @@ impl<'be> SpecEngine<'be> {
                 rounds: infl.rounds,
             }),
         };
+        if let Some(t) = &self.trace {
+            if t.sink.sampled(fin.id) {
+                t.sink
+                    .end_request(fin.id, &format!("{reason:?}"), fin.generated.len());
+            }
+        }
         infl.req.emit(Event::Finished(fin.clone()));
         self.finished.push(fin);
     }
@@ -658,7 +748,13 @@ impl<'be> SpecEngine<'be> {
         while i < self.pending.len() {
             if let Some(reason) = self.pending[i].lifecycle_reason() {
                 let req = self.pending.remove(i).expect("index in bounds");
-                finish_unadmitted(&mut self.metrics, &mut self.finished, req, reason);
+                finish_unadmitted(
+                    &mut self.metrics,
+                    self.trace.as_ref(),
+                    &mut self.finished,
+                    req,
+                    reason,
+                );
             } else {
                 i += 1;
             }
@@ -682,6 +778,7 @@ impl<'be> SpecEngine<'be> {
         self.metrics.note_queue_depth(depth);
         let t0 = Instant::now();
         self.admit()?;
+        self.metrics.note_active_slots(self.active.len());
         let mut i = 0;
         while i < self.active.len() {
             self.round(i)?;
@@ -694,7 +791,7 @@ impl<'be> SpecEngine<'be> {
             }
         }
         if depth > 0 {
-            self.metrics.busy_s += t0.elapsed().as_secs_f64();
+            self.metrics.note_busy(t0.elapsed().as_secs_f64());
         }
         Ok(())
     }

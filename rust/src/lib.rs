@@ -41,6 +41,14 @@
 //! shared across all pool workers, so shared system prompts and
 //! multi-turn conversations skip their redundant prefill entirely.
 //!
+//! Serving is observable while it runs: the [`obs`] layer threads
+//! `Arc`-shared atomic telemetry through both engines and the pool
+//! dispatcher (`serve --metrics-addr` exposes a Prometheus `/metrics`
+//! scrape endpoint, `--log-every-s` a one-line status log), and
+//! per-request span traces export as Chrome `trace_event` JSON
+//! (`--trace-out`, Perfetto-loadable) — reproducing the paper's
+//! per-stage prefill/decode breakdown for the serving path.
+//!
 //! Python never runs on the request path: `make artifacts` lowers
 //! everything once, and the `fastmamba` binary is self-contained.  Build
 //! with `--no-default-features` on hosts without `xla_extension`: every
@@ -53,6 +61,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod model;
 pub mod nonlinear;
+pub mod obs;
 pub mod quant;
 pub mod report;
 #[cfg(feature = "pjrt")]

@@ -12,6 +12,7 @@
 //! xla_extension: `--backend auto` (the default) falls back to the
 //! artifact-free native backend.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -23,10 +24,12 @@ use fastmamba::coordinator::{
     serve_pool, Engine, EngineConfig, Event, FinishReason, PoolConfig, Request, SpecConfig,
     SpecEngine, SubmitHandle,
 };
+use fastmamba::obs::{serve_metrics, TelemetryHub, TraceSink};
 use fastmamba::statecache::{CacheConfig, StateCache};
 use fastmamba::model::weights::{artifacts_dir, Manifest};
 use fastmamba::sim::PerfModel;
 use fastmamba::util::cli::Args;
+use fastmamba::util::json;
 use fastmamba::util::rng::Rng;
 use fastmamba::{eval, report};
 
@@ -49,6 +52,11 @@ fn main() -> Result<()> {
                  \n           --state-cache-mb N (0 = off; shared SSM prefix/session cache)\
                  \n           --stream (print tokens as they are produced)\
                  \n           --deadline-ms N (per-request completion deadline)\
+                 \n           --metrics-addr HOST:PORT (live Prometheus /metrics endpoint)\
+                 \n           --metrics-json PATH (write the final metrics snapshot as JSON)\
+                 \n           --trace-out PATH (Chrome trace_event JSON of request spans)\
+                 \n           --trace-sample N (trace every Nth request; default 1 = all)\
+                 \n           --log-every-s N (periodic one-line status log to stdout)\
                  \n  report   --id all|table1|table2|table3|table4|table_spec|fig1|fig3|fig9|fig10\
                  \n  simulate --model mamba2-130m|mamba2-2.7b --seq-len N --batch N\
                  \n  info"
@@ -113,6 +121,46 @@ fn serve(args: &Args) -> Result<()> {
     // single-engine/pool).
     let stream = args.bool("stream");
     let deadline_ms = args.usize_or("deadline-ms", 0);
+    // observability (see README "Observability"): a telemetry hub backs
+    // both the live /metrics endpoint and the periodic status line; the
+    // trace sink records per-request spans for --trace-out
+    let metrics_addr = args.get("metrics-addr");
+    let metrics_json = args.get("metrics-json");
+    let trace_out = args.get("trace-out");
+    let trace_sample = args.usize_or("trace-sample", 1).max(1);
+    let log_every_s = args.usize_or("log-every-s", 0);
+    let hub: Option<Arc<TelemetryHub>> = (metrics_addr.is_some() || log_every_s > 0)
+        .then(|| Arc::new(TelemetryHub::new()));
+    let trace_sink: Option<Arc<TraceSink>> =
+        trace_out.is_some().then(|| Arc::new(TraceSink::new(trace_sample as u64)));
+    let mut metrics_server = match (&hub, metrics_addr) {
+        (Some(h), Some(addr)) => {
+            let srv = serve_metrics(addr, Arc::clone(h))?;
+            println!("metrics: http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        _ => None,
+    };
+    if let (Some(h), Some(c)) = (&hub, &cache) {
+        h.attach_cache(Arc::clone(c));
+    }
+    let ticker_stop = Arc::new(AtomicBool::new(false));
+    let ticker = (log_every_s > 0).then(|| {
+        let h = Arc::clone(hub.as_ref().expect("hub exists when --log-every-s is set"));
+        let stop = Arc::clone(&ticker_stop);
+        std::thread::spawn(move || {
+            let period = Duration::from_secs(log_every_s as u64);
+            let mut slept = Duration::ZERO;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(100));
+                slept += Duration::from_millis(100);
+                if slept >= period {
+                    slept = Duration::ZERO;
+                    println!("[obs] {}", h.one_line());
+                }
+            }
+        })
+    });
     let vocab = be.cfg().vocab_size;
 
     let mut rng = Rng::new(args.usize_or("seed", 7) as u64);
@@ -139,7 +187,7 @@ fn serve(args: &Args) -> Result<()> {
         be.prefill_buckets(),
         be.decode_batches()
     );
-    let finished = if workers > 1 {
+    let (finished, final_metrics) = if workers > 1 {
         // multi-worker pool: every worker builds its own backend from the
         // factory and runs its own engine behind the capacity-aware router
         // (speculative workers draft and verify on their own backend, so
@@ -164,6 +212,8 @@ fn serve(args: &Args) -> Result<()> {
                     reseed_drafter: true,
                 }),
                 cache: cache.clone(),
+                hub: hub.clone(),
+                trace: trace_sink.clone(),
             },
         );
         let mut handles = Vec::with_capacity(n_requests);
@@ -238,7 +288,7 @@ fn serve(args: &Args) -> Result<()> {
                 died
             );
         }
-        finished
+        (finished, report.merged)
     } else if speculate > 0 {
         // speculative mode: quantized drafter, `--variant` as the verifier.
         // The drafter is its own backend ("native": in-process golden
@@ -267,6 +317,12 @@ fn serve(args: &Args) -> Result<()> {
         );
         if let Some(c) = &cache {
             engine = engine.with_cache(Arc::clone(c));
+        }
+        if let Some(h) = &hub {
+            engine = engine.with_telemetry(h.register("0"));
+        }
+        if let Some(s) = &trace_sink {
+            engine = engine.with_trace(Arc::clone(s), 0);
         }
         let mut handles = Vec::with_capacity(n_requests);
         for r in requests {
@@ -298,12 +354,18 @@ fn serve(args: &Args) -> Result<()> {
             engine.metrics.rollbacks,
             engine.metrics.acceptance_p50() * 100.0
         );
-        engine.finished
+        (engine.finished, engine.metrics)
     } else {
         let mut engine =
             Engine::new(be.as_ref(), EngineConfig { max_active, greedy_chunking: true });
         if let Some(c) = &cache {
             engine = engine.with_cache(Arc::clone(c));
+        }
+        if let Some(h) = &hub {
+            engine = engine.with_telemetry(h.register("0"));
+        }
+        if let Some(s) = &trace_sink {
+            engine = engine.with_trace(Arc::clone(s), 0);
         }
         let mut handles = Vec::with_capacity(n_requests);
         for r in requests {
@@ -323,7 +385,7 @@ fn serve(args: &Args) -> Result<()> {
             engine.run()?;
         }
         println!("{}", engine.metrics.summary());
-        engine.finished
+        (engine.finished, engine.metrics)
     };
     if let Some(c) = &cache {
         println!("state cache ({cache_mb} MiB): {}", c.stats().summary());
@@ -346,6 +408,28 @@ fn serve(args: &Args) -> Result<()> {
             f.prompt_len,
             &f.generated[..f.generated.len().min(8)]
         );
+    }
+    // observability teardown: stop the live endpoints, then export the
+    // final artifacts (the JSON snapshot and the trace share the exact
+    // metrics the summary above printed)
+    ticker_stop.store(true, Ordering::Relaxed);
+    if let Some(t) = ticker {
+        let _ = t.join();
+    }
+    if let Some(srv) = metrics_server.as_mut() {
+        srv.shutdown();
+    }
+    if let (Some(sink), Some(path)) = (&trace_sink, trace_out) {
+        sink.write(path)?;
+        println!(
+            "trace: {} events -> {path} ({} dropped)",
+            sink.len(),
+            sink.dropped()
+        );
+    }
+    if let Some(path) = metrics_json {
+        std::fs::write(path, json::to_string(&final_metrics.to_json()))?;
+        println!("metrics json -> {path}");
     }
     Ok(())
 }

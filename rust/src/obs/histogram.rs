@@ -1,0 +1,314 @@
+//! Fixed-memory log-bucketed latency histogram.
+//!
+//! The serving metrics used to keep one raw `f64` per request (TTFT,
+//! end-to-end latency, acceptance rate), which grows without bound in a
+//! long-lived process, and the multi-worker aggregate concatenated those
+//! raw vectors — O(requests) memory and O(n log n) re-sorts per percentile.
+//! This histogram replaces both: observation is O(1) into a fixed bucket
+//! array, and [`Histogram::merge`] is an exact bucket-wise add, so the
+//! merged quantiles are *identical* to the quantiles of the concatenated
+//! sample streams (within one bucket's resolution of the true sample
+//! quantile — buckets grow by 2^(1/8) ≈ 9% per step).
+//!
+//! Layout: bucket 0 covers `(0, MIN_VALUE]`, bucket `i` covers
+//! `(MIN_VALUE·G^(i-1), MIN_VALUE·G^i]` with `G = 2^(1/8)`; values ≤ 0 are
+//! counted separately (speculative decode legitimately records 0-second
+//! inter-token gaps for tokens committed in one verify burst), and values
+//! above the top bucket clamp into it.  With `MIN_VALUE = 1 µs` and 272
+//! buckets the range tops out above 4½ hours — more than any latency this
+//! stack can produce.
+
+/// Lower bound of the first bucket, in the recorded unit (seconds for all
+/// latency histograms in this crate): 1 µs.
+pub const MIN_VALUE: f64 = 1e-6;
+
+/// Buckets per factor-of-two; resolution is `2^(1/8) - 1 ≈ 9.05%`.
+pub const BUCKETS_PER_OCTAVE: usize = 8;
+
+/// Total buckets: 34 octaves above [`MIN_VALUE`] (top edge ≈ 17 180 s).
+pub const N_BUCKETS: usize = 34 * BUCKETS_PER_OCTAVE;
+
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    /// per-bucket counts; allocated lazily on the first observation so an
+    /// empty histogram costs nothing
+    counts: Vec<u64>,
+    /// observations ≤ 0 (kept out of the log buckets)
+    zero: u64,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+fn bucket_index(v: f64) -> usize {
+    if v <= MIN_VALUE {
+        return 0;
+    }
+    let i = ((v / MIN_VALUE).log2() * BUCKETS_PER_OCTAVE as f64).ceil() as usize;
+    i.min(N_BUCKETS - 1)
+}
+
+/// Inclusive upper edge of bucket `i`.
+fn bucket_upper(i: usize) -> f64 {
+    MIN_VALUE * 2f64.powf(i as f64 / BUCKETS_PER_OCTAVE as f64)
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+        if v <= 0.0 {
+            self.zero += 1;
+        } else {
+            if self.counts.is_empty() {
+                self.counts = vec![0; N_BUCKETS];
+            }
+            self.counts[bucket_index(v)] += 1;
+        }
+    }
+
+    /// Exact bucket-wise merge: because every histogram shares one bucket
+    /// layout, `a.merge(&b)` has bucket counts equal to observing both
+    /// sample streams into one histogram — merged quantiles are identical
+    /// to concatenated-stream quantiles, unlike raw-vector concatenation
+    /// which was only as good as its unbounded memory.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        if !other.counts.is_empty() {
+            if self.counts.is_empty() {
+                self.counts = vec![0; N_BUCKETS];
+            }
+            for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+                *a += b;
+            }
+        }
+        self.zero += other.zero;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank quantile over the bucket counts: the returned value is
+    /// the upper edge of the bucket holding the rank-`⌈q·n⌉` observation,
+    /// clamped to the exact observed `[min, max]` — within one bucket's
+    /// resolution (≈9%) of the true sample quantile.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.n as f64).ceil() as u64).clamp(1, self.n);
+        if rank == self.n {
+            return self.max;
+        }
+        let mut cum = self.zero;
+        if rank <= cum {
+            // rank falls in the ≤0 class; min is its only exact bound
+            return self.min;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if rank <= cum {
+                return bucket_upper(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Heap bytes held — constant once the bucket array is allocated, which
+    /// is the whole point versus one `f64` per request.
+    pub fn heap_bytes(&self) -> usize {
+        self.counts.capacity() * std::mem::size_of::<u64>()
+    }
+
+    /// Cumulative `(le, count)` pairs for Prometheus exposition, keeping
+    /// every `stride`-th bucket edge (34 edges at `stride = 8`) plus the
+    /// implicit `+Inf` which callers render from [`Histogram::count`].
+    pub fn cumulative_buckets(&self, stride: usize) -> Vec<(f64, u64)> {
+        let stride = stride.max(1);
+        let mut out = Vec::new();
+        let mut cum = self.zero;
+        for i in 0..N_BUCKETS {
+            cum += self.counts.get(i).copied().unwrap_or(0);
+            if (i + 1) % stride == 0 {
+                out.push((bucket_upper(i), cum));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn samples(seed: u64, n: usize) -> Vec<f64> {
+        // log-uniform latencies spanning 20 µs .. ~2 s
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| 2e-5 * (rng.uniform() * 11.5).exp()).collect()
+    }
+
+    fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+        let n = sorted.len();
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        sorted[rank - 1]
+    }
+
+    #[test]
+    fn histogram_quantiles_track_exact_within_bucket_resolution() {
+        let vals = samples(7, 4096);
+        let mut h = Histogram::new();
+        for &v in &vals {
+            h.observe(v);
+        }
+        let mut sorted = vals.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.5, 0.95, 0.99] {
+            let exact = exact_quantile(&sorted, q);
+            let approx = h.quantile(q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.10, "q={q}: exact={exact} approx={approx} rel={rel}");
+        }
+        assert_eq!(h.count(), 4096);
+        assert!((h.min() - sorted[0]).abs() < 1e-15);
+        assert!((h.max() - sorted[sorted.len() - 1]).abs() < 1e-15);
+    }
+
+    #[test]
+    fn histogram_merge_is_exactly_bucketwise_concat() {
+        let a = samples(11, 1500);
+        let b = samples(12, 700);
+        let (mut ha, mut hb, mut hc) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for &v in &a {
+            ha.observe(v);
+            hc.observe(v);
+        }
+        for &v in &b {
+            hb.observe(v);
+            hc.observe(v);
+        }
+        let mut merged = ha.clone();
+        merged.merge(&hb);
+        assert_eq!(merged.counts, hc.counts, "bucket-wise add ≡ concat");
+        assert_eq!(merged.count(), hc.count());
+        assert_eq!(merged.zero, hc.zero);
+        assert!((merged.sum() - hc.sum()).abs() < 1e-9 * hc.sum().abs().max(1.0));
+        assert_eq!(merged.min(), hc.min());
+        assert_eq!(merged.max(), hc.max());
+        // identical bucket counts and min/max ⇒ identical quantiles, the
+        // property raw-vector concatenation needed unbounded memory for
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(merged.quantile(q), hc.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_into_empty_and_with_empty() {
+        let mut h = Histogram::new();
+        h.observe(0.25);
+        let mut e = Histogram::new();
+        e.merge(&h);
+        assert_eq!(e.count(), 1);
+        assert_eq!(e.quantile(0.5), 0.25);
+        let before = e.count();
+        e.merge(&Histogram::new());
+        assert_eq!(e.count(), before);
+    }
+
+    #[test]
+    fn histogram_memory_is_constant_after_first_observation() {
+        let mut h = Histogram::new();
+        assert_eq!(h.heap_bytes(), 0, "empty histogram allocates nothing");
+        h.observe(0.003);
+        let fixed = h.heap_bytes();
+        assert_eq!(fixed, N_BUCKETS * 8);
+        for i in 0..200_000 {
+            h.observe((i % 977) as f64 * 1e-5);
+        }
+        assert_eq!(h.heap_bytes(), fixed, "200k observations allocate nothing");
+        assert_eq!(h.count(), 200_001);
+    }
+
+    #[test]
+    fn histogram_handles_zero_and_huge_values() {
+        let mut h = Histogram::new();
+        h.observe(0.0);
+        h.observe(-1.0);
+        h.observe(1e9); // clamps into the top bucket
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(0.01), -1.0, "low quantile lands in the ≤0 class");
+        assert_eq!(h.quantile(1.0), 1e9, "top quantile clamps to observed max");
+    }
+
+    #[test]
+    fn histogram_cumulative_buckets_are_monotone_and_end_at_count() {
+        let mut h = Histogram::new();
+        for &v in &samples(3, 512) {
+            h.observe(v);
+        }
+        let edges = h.cumulative_buckets(BUCKETS_PER_OCTAVE);
+        assert_eq!(edges.len(), N_BUCKETS / BUCKETS_PER_OCTAVE);
+        let mut prev = 0;
+        for &(le, c) in &edges {
+            assert!(le > 0.0);
+            assert!(c >= prev, "cumulative counts are monotone");
+            prev = c;
+        }
+        assert_eq!(edges.last().unwrap().1, h.count());
+    }
+}

@@ -1,0 +1,109 @@
+//! Live observability layer: telemetry registry, latency histograms,
+//! request span tracing, and the Prometheus scrape endpoint.
+//!
+//! Dependency-free (std only), wired through every serving layer:
+//!
+//! * [`telemetry::Telemetry`] — `Arc`-shared atomic counters, gauges, and
+//!   log-bucketed histograms that [`crate::coordinator::Engine`],
+//!   [`crate::coordinator::SpecEngine`], and the pool dispatcher update
+//!   *live*; `coordinator::Metrics` writes through to it, so mid-run
+//!   scrapes and the end-of-run summary read the same cells.
+//! * [`histogram::Histogram`] — fixed-memory log buckets with exact
+//!   bucket-wise [`histogram::Histogram::merge`], replacing the unbounded
+//!   per-request sample vectors and the concat-based cross-worker
+//!   percentile merge.
+//! * [`trace::TraceSink`] — per-request span tracing
+//!   (queued → admitted → cache probe → prefill chunks → decode/spec
+//!   rounds → retire), exported as Chrome `trace_event` JSON
+//!   (`serve --trace-out FILE`, sampled by `--trace-sample N`).
+//! * [`scrape::serve_metrics`] — the `/metrics` Prometheus-text endpoint
+//!   (`serve --metrics-addr HOST:PORT`) over
+//!   [`telemetry::TelemetryHub`], which aggregates per-worker telemetry
+//!   and reads state-cache occupancy live.
+
+pub mod histogram;
+pub mod scrape;
+pub mod telemetry;
+pub mod trace;
+
+pub use histogram::Histogram;
+pub use scrape::{serve_metrics, MetricsServer};
+pub use telemetry::{Counter, Gauge, HistKind, Telemetry, TelemetryHub};
+pub use trace::{TraceCtx, TraceSink};
+
+/// Nearest-rank percentile of an ascending-sorted slice: the smallest
+/// element with at least `⌈p·n⌉` elements ≤ it.  The previous
+/// implementation indexed `(n as f64 * p) as usize`, which *truncates*
+/// toward an off-by-one-high rank and biases small samples: for 100
+/// sorted samples it returned the 51st value as the median.
+pub fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Samples sorted once, queried many times — the snapshot-time view that
+/// replaces re-sorting a cloned `Vec` on every percentile call.
+#[derive(Debug, Clone)]
+pub struct SortedSamples(Vec<f64>);
+
+impl SortedSamples {
+    pub fn new(mut samples: Vec<f64>) -> Self {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self(samples)
+    }
+
+    pub fn pct(&self, p: f64) -> f64 {
+        nearest_rank(&self.0, p)
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_nearest_rank_matches_known_quantiles() {
+        // 1..=100 sorted: nearest-rank p50 is the 50th value, p95 the
+        // 95th, p99 the 99th.  The old truncating index returned 51/96/100.
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(nearest_rank(&v, 0.50), 50.0);
+        assert_eq!(nearest_rank(&v, 0.95), 95.0);
+        assert_eq!(nearest_rank(&v, 0.99), 99.0);
+        assert_eq!(nearest_rank(&v, 1.00), 100.0);
+        assert_eq!(nearest_rank(&v, 0.0), 1.0);
+    }
+
+    #[test]
+    fn obs_nearest_rank_small_samples() {
+        assert_eq!(nearest_rank(&[7.0], 0.5), 7.0);
+        assert_eq!(nearest_rank(&[], 0.5), 0.0);
+        // two samples: the median is the 1st (rank ⌈0.5·2⌉ = 1), the old
+        // index (2·0.5 = 1 → second element) overshot
+        assert_eq!(nearest_rank(&[1.0, 2.0], 0.5), 1.0);
+        assert_eq!(nearest_rank(&[1.0, 2.0], 0.95), 2.0);
+        // five samples, the seed repo's own doctest case
+        let v = [0.1, 0.2, 0.3, 0.4, 1.0];
+        assert_eq!(nearest_rank(&v, 0.50), 0.3);
+        assert_eq!(nearest_rank(&v, 0.95), 1.0);
+    }
+
+    #[test]
+    fn obs_sorted_samples_sorts_once_and_answers_many() {
+        let s = SortedSamples::new(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.pct(0.5), 3.0);
+        assert_eq!(s.pct(0.95), 5.0);
+        assert_eq!(s.pct(0.2), 1.0);
+    }
+}

@@ -1,0 +1,261 @@
+//! Prometheus scrape endpoint: a minimal HTTP/1.1 responder on a
+//! `std::net::TcpListener` thread (`serve --metrics-addr HOST:PORT`).
+//!
+//! `GET /metrics` returns the [`TelemetryHub`]'s text exposition; any
+//! other path is a 404.  The listener thread blocks in `accept`; shutdown
+//! flips an atomic and self-connects to unblock it, so dropping the
+//! [`MetricsServer`] never hangs.  Bind to port 0 to let the OS pick — the
+//! bound address is available from [`MetricsServer::addr`] (which is how
+//! the integration tests scrape a live pool without a fixed port).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::telemetry::TelemetryHub;
+
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Start serving `hub`'s Prometheus exposition on `addr`
+/// (e.g. `"127.0.0.1:9898"`, or `"127.0.0.1:0"` for an OS-picked port).
+pub fn serve_metrics(addr: &str, hub: Arc<TelemetryHub>) -> Result<MetricsServer> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding metrics endpoint {addr}"))?;
+    let bound = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_in = Arc::clone(&stop);
+    let handle = std::thread::Builder::new()
+        .name("metrics-scrape".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop_in.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                // one scrape per connection; errors only drop that scrape
+                let _ = handle_conn(stream, &hub);
+            }
+        })?;
+    Ok(MetricsServer { addr: bound, stop, handle: Some(handle) })
+}
+
+fn handle_conn(mut stream: TcpStream, hub: &TelemetryHub) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf)?;
+    let request_line = std::str::from_utf8(&buf[..n])
+        .unwrap_or("")
+        .lines()
+        .next()
+        .unwrap_or("");
+    let path = request_line.split_whitespace().nth(1).unwrap_or("");
+    let (status, body) = if path == "/metrics" || path.starts_with("/metrics?") {
+        ("200 OK", hub.render_prometheus())
+    } else {
+        ("404 Not Found", String::from("not found; scrape /metrics\n"))
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    Ok(())
+}
+
+impl MetricsServer {
+    /// The bound address (resolves port 0 to the OS-picked port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener thread (idempotent).
+    pub fn shutdown(&mut self) {
+        if self.handle.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn http_get(addr: SocketAddr, path: &str) -> Result<(String, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n")?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .context("malformed HTTP response")?;
+    Ok((head.to_string(), body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::telemetry::Counter;
+    use super::*;
+
+    /// Parse Prometheus text exposition into (series, value) pairs,
+    /// failing on any malformed line.
+    pub(crate) fn parse_prometheus(text: &str) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        for line in text.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect("line has a value");
+            let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+            out.push((series.to_string(), v));
+        }
+        out
+    }
+
+    #[test]
+    fn scrape_endpoint_serves_metrics_and_404s_elsewhere() {
+        let hub = Arc::new(TelemetryHub::new());
+        let tel = hub.register("0");
+        tel.add(Counter::TokensGenerated, 42);
+        let mut server = serve_metrics("127.0.0.1:0", Arc::clone(&hub)).unwrap();
+
+        let (head, body) = http_get(server.addr(), "/metrics").unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(head.contains("text/plain"), "{head}");
+        let series = parse_prometheus(&body);
+        assert!(series
+            .iter()
+            .any(|(s, v)| s == "fastmamba_tokens_generated_total" && *v == 42.0));
+
+        let (head, _) = http_get(server.addr(), "/other").unwrap();
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+
+        server.shutdown();
+        server.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn scrape_counters_are_monotone_between_scrapes() {
+        let hub = Arc::new(TelemetryHub::new());
+        let tel = hub.register("0");
+        tel.add(Counter::RequestsCompleted, 1);
+        let mut server = serve_metrics("127.0.0.1:0", Arc::clone(&hub)).unwrap();
+        let (_, b1) = http_get(server.addr(), "/metrics").unwrap();
+        tel.add(Counter::RequestsCompleted, 5);
+        let (_, b2) = http_get(server.addr(), "/metrics").unwrap();
+        let v = |body: &str, name: &str| {
+            parse_prometheus(body)
+                .into_iter()
+                .find(|(s, _)| s == name)
+                .unwrap()
+                .1
+        };
+        let name = "fastmamba_requests_completed_total";
+        assert!(v(&b2, name) >= v(&b1, name));
+        assert_eq!(v(&b2, name), 6.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn scrape_live_pool_mid_run_matches_final_report() {
+        use crate::backend::{InferenceBackend, NativeBackend};
+        use crate::coordinator::{serve_pool, EngineConfig, PoolConfig, Request};
+
+        // the micro model the router stress tests use: small enough that
+        // the 64-request trace finishes fast in debug builds
+        let make = || -> Result<Box<dyn InferenceBackend>> {
+            let mut cfg = crate::config::ModelConfig::tiny();
+            cfg.name = "mamba2-micro".into();
+            cfg.d_model = 64;
+            cfg.n_layer = 2;
+            cfg.d_state = 16;
+            cfg.headdim = 16;
+            cfg.vocab_size = 128;
+            Ok(Box::new(
+                NativeBackend::new(crate::model::ModelWeights::random(&cfg, 9))
+                    .with_buckets(vec![8, 16, 32], vec![1, 2, 4]),
+            ))
+        };
+        let hub = Arc::new(TelemetryHub::new());
+        let mut server = serve_metrics("127.0.0.1:0", Arc::clone(&hub)).unwrap();
+        let pool = serve_pool(
+            make,
+            PoolConfig {
+                engine: EngineConfig { max_active: 4, greedy_chunking: true },
+                n_workers: 4,
+                hub: Some(Arc::clone(&hub)),
+                ..PoolConfig::default()
+            },
+        );
+        let n = 64usize;
+        for i in 0..n {
+            let plen = [3usize, 9, 17, 33][i % 4];
+            let prompt: Vec<u32> =
+                (0..plen).map(|j| ((i * 131 + j * 17) % 128) as u32).collect();
+            pool.submit(Request::new(i as u64, prompt, 2 + (i % 5), "fp32")).unwrap();
+        }
+        // mid-run scrape: once half the results arrived, the endpoint must
+        // already account for at least that many completions
+        for _ in 0..n / 2 {
+            pool.results.recv().expect("pool result");
+        }
+        let (head, mid_body) = http_get(server.addr(), "/metrics").unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        let v = |body: &str, name: &str| -> f64 {
+            parse_prometheus(body)
+                .into_iter()
+                .find(|(s, _)| s == name)
+                .unwrap_or_else(|| panic!("missing series {name}"))
+                .1
+        };
+        let name = "fastmamba_requests_completed_total";
+        let mid = v(&mid_body, name);
+        assert!(mid >= (n / 2) as f64, "mid-run scrape lagged: {mid}");
+        assert!(mid <= n as f64);
+        // per-worker labeled series render alongside the bare aggregate
+        assert!(parse_prometheus(&mid_body)
+            .iter()
+            .any(|(s, _)| s.starts_with("fastmamba_requests_completed_total{worker=")));
+
+        for _ in 0..n - n / 2 {
+            pool.results.recv().expect("pool result");
+        }
+        let report = pool.finish().unwrap();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+
+        // final scrape: monotone over the mid-run read, and the aggregate
+        // equals the merged end-of-run snapshot exactly — the scrape and
+        // the report are two reads of the same atomics
+        let (_, final_body) = http_get(server.addr(), "/metrics").unwrap();
+        let fin = v(&final_body, name);
+        assert!(fin >= mid);
+        assert_eq!(fin, report.merged.requests_completed as f64);
+        assert_eq!(
+            v(&final_body, "fastmamba_tokens_generated_total"),
+            report.merged.tokens_generated as f64
+        );
+        assert_eq!(
+            v(&final_body, "fastmamba_request_latency_seconds_count"),
+            report.merged.requests_completed as f64
+        );
+        server.shutdown();
+    }
+}

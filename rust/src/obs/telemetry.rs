@@ -1,0 +1,456 @@
+//! Lock-light live telemetry registry.
+//!
+//! A [`Telemetry`] is an `Arc`-shared bundle of atomic counters, gauges,
+//! and mutex-guarded [`Histogram`]s that an engine updates *while it
+//! serves* — the write path for counters is one `fetch_add(Relaxed)`, so
+//! the serving hot loop pays nanoseconds, not locks.  Each pool worker
+//! registers its own `Telemetry` with the shared [`TelemetryHub`]; the hub
+//! renders the Prometheus text exposition (per-worker series plus an
+//! exact bucket-wise aggregate) and the periodic one-line stdout log, and
+//! reads state-cache occupancy gauges straight from the attached
+//! [`StateCache`] at scrape time.
+//!
+//! `coordinator::Metrics` writes through to an attached `Telemetry` on
+//! every mutation, so the live view and the end-of-run snapshot are two
+//! reads of the same cells — `Metrics::from_telemetry` reconstructs a full
+//! snapshot from the atomics alone, and a scrape taken mid-run is always a
+//! prefix (counter-monotone) of the final numbers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::histogram::{Histogram, BUCKETS_PER_OCTAVE};
+use crate::statecache::StateCache;
+
+/// Monotone counters an engine maintains (mirrors the `u64` fields of
+/// `coordinator::Metrics`, plus busy time in integer microseconds so it
+/// can live in an atomic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    RequestsCompleted,
+    TokensGenerated,
+    PromptTokens,
+    PrefillChunks,
+    DecodeSteps,
+    DecodePaddedSlots,
+    DecodeBatchSlots,
+    DraftTokens,
+    DraftAccepted,
+    SpecRounds,
+    VerifyCalls,
+    Rollbacks,
+    ResyncSteps,
+    DrafterReseeds,
+    CacheHits,
+    CacheMisses,
+    CacheTokensSaved,
+    CancelledRequests,
+    DeadlineExpired,
+    BusyMicros,
+}
+
+pub const N_COUNTERS: usize = 20;
+
+impl Counter {
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::RequestsCompleted,
+        Counter::TokensGenerated,
+        Counter::PromptTokens,
+        Counter::PrefillChunks,
+        Counter::DecodeSteps,
+        Counter::DecodePaddedSlots,
+        Counter::DecodeBatchSlots,
+        Counter::DraftTokens,
+        Counter::DraftAccepted,
+        Counter::SpecRounds,
+        Counter::VerifyCalls,
+        Counter::Rollbacks,
+        Counter::ResyncSteps,
+        Counter::DrafterReseeds,
+        Counter::CacheHits,
+        Counter::CacheMisses,
+        Counter::CacheTokensSaved,
+        Counter::CancelledRequests,
+        Counter::DeadlineExpired,
+        Counter::BusyMicros,
+    ];
+
+    pub fn index(self) -> usize {
+        Self::ALL.iter().position(|c| *c == self).unwrap()
+    }
+
+    /// Prometheus series base name (rendered as `fastmamba_<name>_total`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::RequestsCompleted => "requests_completed",
+            Counter::TokensGenerated => "tokens_generated",
+            Counter::PromptTokens => "prompt_tokens",
+            Counter::PrefillChunks => "prefill_chunks",
+            Counter::DecodeSteps => "decode_steps",
+            Counter::DecodePaddedSlots => "decode_padded_slots",
+            Counter::DecodeBatchSlots => "decode_batch_slots",
+            Counter::DraftTokens => "draft_tokens",
+            Counter::DraftAccepted => "draft_accepted",
+            Counter::SpecRounds => "spec_rounds",
+            Counter::VerifyCalls => "verify_calls",
+            Counter::Rollbacks => "rollbacks",
+            Counter::ResyncSteps => "resync_steps",
+            Counter::DrafterReseeds => "drafter_reseeds",
+            Counter::CacheHits => "cache_hits",
+            Counter::CacheMisses => "cache_misses",
+            Counter::CacheTokensSaved => "cache_tokens_saved",
+            Counter::CancelledRequests => "cancelled_requests",
+            Counter::DeadlineExpired => "deadline_expired",
+            Counter::BusyMicros => "busy_microseconds",
+        }
+    }
+}
+
+/// Instantaneous values (each also keeps its observed peak).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// pending + active requests the engine currently holds
+    QueueDepth,
+    /// state slots currently bound to in-flight requests
+    ActiveSlots,
+}
+
+pub const N_GAUGES: usize = 2;
+
+impl Gauge {
+    pub const ALL: [Gauge; N_GAUGES] = [Gauge::QueueDepth, Gauge::ActiveSlots];
+
+    pub fn index(self) -> usize {
+        Self::ALL.iter().position(|g| *g == self).unwrap()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::QueueDepth => "queue_depth",
+            Gauge::ActiveSlots => "active_slots",
+        }
+    }
+}
+
+/// The latency/ratio distributions an engine records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HistKind {
+    Ttft,
+    Latency,
+    Tpot,
+    Acceptance,
+    PrefillCall,
+    DecodeCall,
+}
+
+pub const N_HISTS: usize = 6;
+
+impl HistKind {
+    pub const ALL: [HistKind; N_HISTS] = [
+        HistKind::Ttft,
+        HistKind::Latency,
+        HistKind::Tpot,
+        HistKind::Acceptance,
+        HistKind::PrefillCall,
+        HistKind::DecodeCall,
+    ];
+
+    pub fn index(self) -> usize {
+        Self::ALL.iter().position(|h| *h == self).unwrap()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HistKind::Ttft => "ttft_seconds",
+            HistKind::Latency => "request_latency_seconds",
+            HistKind::Tpot => "tpot_seconds",
+            HistKind::Acceptance => "draft_acceptance_ratio",
+            HistKind::PrefillCall => "prefill_call_seconds",
+            HistKind::DecodeCall => "decode_call_seconds",
+        }
+    }
+}
+
+/// One engine's live cells.  Counter/gauge writes are relaxed atomics;
+/// histogram observes take a short uncontended mutex (only the owning
+/// engine writes, scrapes clone).
+#[derive(Debug)]
+pub struct Telemetry {
+    counters: [AtomicU64; N_COUNTERS],
+    gauges: [AtomicU64; N_GAUGES],
+    gauge_peaks: [AtomicU64; N_GAUGES],
+    hists: [Mutex<Histogram>; N_HISTS],
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            gauges: std::array::from_fn(|_| AtomicU64::new(0)),
+            gauge_peaks: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: std::array::from_fn(|_| Mutex::new(Histogram::new())),
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, c: Counter, n: u64) {
+        self.counters[c.index()].fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, c: Counter) -> u64 {
+        self.counters[c.index()].load(Ordering::Relaxed)
+    }
+
+    pub fn set_gauge(&self, g: Gauge, v: u64) {
+        self.gauges[g.index()].store(v, Ordering::Relaxed);
+        self.gauge_peaks[g.index()].fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, g: Gauge) -> u64 {
+        self.gauges[g.index()].load(Ordering::Relaxed)
+    }
+
+    pub fn gauge_peak(&self, g: Gauge) -> u64 {
+        self.gauge_peaks[g.index()].load(Ordering::Relaxed)
+    }
+
+    pub fn observe(&self, h: HistKind, v: f64) {
+        self.hists[h.index()].lock().unwrap().observe(v);
+    }
+
+    /// Clone the named histogram (a scrape-time snapshot).
+    pub fn hist(&self, h: HistKind) -> Histogram {
+        self.hists[h.index()].lock().unwrap().clone()
+    }
+}
+
+/// Shared registry over all per-worker [`Telemetry`] handles, plus the
+/// optional [`StateCache`] whose occupancy it exposes as gauges.
+#[derive(Debug, Default)]
+pub struct TelemetryHub {
+    workers: Mutex<Vec<(String, Arc<Telemetry>)>>,
+    cache: Mutex<Option<Arc<StateCache>>>,
+}
+
+impl TelemetryHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new labeled telemetry handle (one per pool worker, plus
+    /// `"dispatcher"` for backlog-resolved requests).
+    pub fn register(&self, label: &str) -> Arc<Telemetry> {
+        let tel = Arc::new(Telemetry::new());
+        self.workers
+            .lock()
+            .unwrap()
+            .push((label.to_string(), Arc::clone(&tel)));
+        tel
+    }
+
+    pub fn attach_cache(&self, cache: Arc<StateCache>) {
+        *self.cache.lock().unwrap() = Some(cache);
+    }
+
+    fn handles(&self) -> Vec<(String, Arc<Telemetry>)> {
+        self.workers.lock().unwrap().clone()
+    }
+
+    /// Sum of one counter across every registered handle.
+    pub fn total(&self, c: Counter) -> u64 {
+        self.handles().iter().map(|(_, t)| t.get(c)).sum()
+    }
+
+    /// Sum of one gauge's current value across every registered handle.
+    pub fn gauge_total(&self, g: Gauge) -> u64 {
+        self.handles().iter().map(|(_, t)| t.gauge(g)).sum()
+    }
+
+    /// Exact bucket-wise aggregate of one histogram across workers — the
+    /// merged quantiles equal the quantiles of the pooled sample stream.
+    pub fn hist_aggregate(&self, h: HistKind) -> Histogram {
+        let mut agg = Histogram::new();
+        for (_, t) in self.handles() {
+            agg.merge(&t.hist(h));
+        }
+        agg
+    }
+
+    /// Prometheus text exposition (format version 0.0.4): every counter
+    /// and gauge per worker and aggregated, histogram `_bucket`/`_sum`/
+    /// `_count` series per worker and aggregated, and the state-cache
+    /// occupancy read live from the attached cache.
+    pub fn render_prometheus(&self) -> String {
+        let handles = self.handles();
+        let mut out = String::new();
+        for c in Counter::ALL {
+            let full = format!("fastmamba_{}_total", c.name());
+            out.push_str(&format!("# TYPE {full} counter\n"));
+            for (label, t) in &handles {
+                out.push_str(&format!("{full}{{worker=\"{label}\"}} {}\n", t.get(c)));
+            }
+            out.push_str(&format!("{full} {}\n", self.total(c)));
+        }
+        for g in Gauge::ALL {
+            let full = format!("fastmamba_{}", g.name());
+            out.push_str(&format!("# TYPE {full} gauge\n"));
+            for (label, t) in &handles {
+                out.push_str(&format!("{full}{{worker=\"{label}\"}} {}\n", t.gauge(g)));
+            }
+            out.push_str(&format!("{full} {}\n", self.gauge_total(g)));
+            out.push_str(&format!("# TYPE {full}_peak gauge\n"));
+            for (label, t) in &handles {
+                out.push_str(&format!(
+                    "{full}_peak{{worker=\"{label}\"}} {}\n",
+                    t.gauge_peak(g)
+                ));
+            }
+        }
+        for h in HistKind::ALL {
+            let full = format!("fastmamba_{}", h.name());
+            out.push_str(&format!("# TYPE {full} histogram\n"));
+            for (label, t) in &handles {
+                render_histogram(&mut out, &full, &format!("worker=\"{label}\","), &t.hist(h));
+            }
+            render_histogram(&mut out, &full, "", &self.hist_aggregate(h));
+        }
+        if let Some(cache) = self.cache.lock().unwrap().as_ref() {
+            let s = cache.stats();
+            out.push_str("# TYPE fastmamba_cache_bytes_resident gauge\n");
+            out.push_str(&format!("fastmamba_cache_bytes_resident {}\n", s.bytes_resident));
+            out.push_str("# TYPE fastmamba_cache_bytes_max gauge\n");
+            out.push_str(&format!("fastmamba_cache_bytes_max {}\n", cache.max_bytes()));
+            out.push_str("# TYPE fastmamba_cache_entries gauge\n");
+            out.push_str(&format!("fastmamba_cache_entries {}\n", s.entries));
+            out.push_str("# TYPE fastmamba_cache_lookup_hits_total counter\n");
+            out.push_str(&format!("fastmamba_cache_lookup_hits_total {}\n", s.hits));
+            out.push_str("# TYPE fastmamba_cache_lookup_misses_total counter\n");
+            out.push_str(&format!("fastmamba_cache_lookup_misses_total {}\n", s.misses));
+            out.push_str("# TYPE fastmamba_cache_insertions_total counter\n");
+            out.push_str(&format!("fastmamba_cache_insertions_total {}\n", s.insertions));
+            out.push_str("# TYPE fastmamba_cache_evictions_total counter\n");
+            out.push_str(&format!("fastmamba_cache_evictions_total {}\n", s.evictions));
+        }
+        out
+    }
+
+    /// One-line live status for the periodic stdout log
+    /// (`serve --log-every-s`).
+    pub fn one_line(&self) -> String {
+        let ttft = self.hist_aggregate(HistKind::Ttft);
+        let tpot = self.hist_aggregate(HistKind::Tpot);
+        let cache = match self.cache.lock().unwrap().as_ref() {
+            Some(c) => format!(
+                " cache={:.1}MiB/{}ent",
+                c.bytes_resident() as f64 / (1 << 20) as f64,
+                c.entries()
+            ),
+            None => String::new(),
+        };
+        format!(
+            "req={} gen_toks={} q={} active={} ttft_p50={:.1}ms tpot_p50={:.2}ms \
+             cancelled={} deadline={}{}",
+            self.total(Counter::RequestsCompleted),
+            self.total(Counter::TokensGenerated),
+            self.gauge_total(Gauge::QueueDepth),
+            self.gauge_total(Gauge::ActiveSlots),
+            ttft.quantile(0.5) * 1e3,
+            tpot.quantile(0.5) * 1e3,
+            self.total(Counter::CancelledRequests),
+            self.total(Counter::DeadlineExpired),
+            cache,
+        )
+    }
+}
+
+fn render_histogram(out: &mut String, full: &str, label_prefix: &str, h: &Histogram) {
+    for (le, cum) in h.cumulative_buckets(BUCKETS_PER_OCTAVE) {
+        out.push_str(&format!(
+            "{full}_bucket{{{label_prefix}le=\"{le:.6e}\"}} {cum}\n"
+        ));
+    }
+    out.push_str(&format!(
+        "{full}_bucket{{{label_prefix}le=\"+Inf\"}} {}\n",
+        h.count()
+    ));
+    let label_block = label_prefix.trim_end_matches(',');
+    if label_block.is_empty() {
+        out.push_str(&format!("{full}_sum {:.9}\n", h.sum()));
+        out.push_str(&format!("{full}_count {}\n", h.count()));
+    } else {
+        out.push_str(&format!("{full}_sum{{{label_block}}} {:.9}\n", h.sum()));
+        out.push_str(&format!("{full}_count{{{label_block}}} {}\n", h.count()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_counter_and_gauge_cells_are_shared_across_threads() {
+        let tel = Arc::new(Telemetry::new());
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let t = Arc::clone(&tel);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    t.add(Counter::TokensGenerated, 1);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(tel.get(Counter::TokensGenerated), 4000);
+
+        tel.set_gauge(Gauge::QueueDepth, 7);
+        tel.set_gauge(Gauge::QueueDepth, 2);
+        assert_eq!(tel.gauge(Gauge::QueueDepth), 2, "gauge is instantaneous");
+        assert_eq!(tel.gauge_peak(Gauge::QueueDepth), 7, "peak is sticky");
+    }
+
+    #[test]
+    fn obs_hub_aggregates_counters_and_histograms_across_workers() {
+        let hub = TelemetryHub::new();
+        let w0 = hub.register("0");
+        let w1 = hub.register("1");
+        w0.add(Counter::RequestsCompleted, 3);
+        w1.add(Counter::RequestsCompleted, 5);
+        for v in [0.010, 0.020, 0.030] {
+            w0.observe(HistKind::Ttft, v);
+        }
+        for v in [0.040, 0.050] {
+            w1.observe(HistKind::Ttft, v);
+        }
+        assert_eq!(hub.total(Counter::RequestsCompleted), 8);
+        let agg = hub.hist_aggregate(HistKind::Ttft);
+        assert_eq!(agg.count(), 5);
+        assert_eq!(agg.min(), 0.010);
+        assert_eq!(agg.max(), 0.050);
+    }
+
+    #[test]
+    fn obs_prometheus_exposition_has_per_worker_and_aggregate_series() {
+        let hub = TelemetryHub::new();
+        let w0 = hub.register("0");
+        let w1 = hub.register("1");
+        w0.add(Counter::TokensGenerated, 10);
+        w1.add(Counter::TokensGenerated, 32);
+        w0.observe(HistKind::Tpot, 0.002);
+        let text = hub.render_prometheus();
+        assert!(text.contains("# TYPE fastmamba_tokens_generated_total counter"));
+        assert!(text.contains("fastmamba_tokens_generated_total{worker=\"0\"} 10"));
+        assert!(text.contains("fastmamba_tokens_generated_total{worker=\"1\"} 32"));
+        assert!(text.contains("fastmamba_tokens_generated_total 42"));
+        assert!(text.contains("fastmamba_tpot_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("fastmamba_tpot_seconds_count 1"));
+        assert!(text.contains("# TYPE fastmamba_queue_depth gauge"));
+    }
+}

@@ -1,0 +1,308 @@
+//! Per-request span tracing, exported as Chrome `trace_event` JSON
+//! (loadable in Perfetto / `chrome://tracing`).
+//!
+//! A [`TraceSink`] is shared by every engine (and the pool dispatcher)
+//! through an `Arc`; recording is append-into-a-mutex with a hard event
+//! cap, and a sampling knob (`--trace-sample N` keeps every Nth request)
+//! bounds per-request overhead.  With no sink attached the engines pay a
+//! single `Option` check per record point — the disabled path does no
+//! clock reads and no allocation.
+//!
+//! Lane layout: request lifecycles live in pid 0 ("requests"), one thread
+//! lane per request id, as a `B`("request") … instants … `E` pair — the
+//! instants mark admission, the cache probe (hit/miss + tokens saved),
+//! and the first token, and per-prefill-chunk / per-spec-round `X` spans
+//! nest inside.  Engine-level batch work (decode steps over the whole
+//! batch) lives in pid `1 + worker lane`, so a multi-worker pool shows one
+//! process per worker next to the request swimlanes, reproducing the
+//! paper's per-stage prefill/decode breakdown for the serving path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::{self, num, obj, s, Json};
+
+/// Synthetic Chrome-trace process id that holds one lane per request.
+pub const REQUEST_PID: u64 = 0;
+
+/// Default hard cap on buffered events (~tens of MB of JSON at worst);
+/// overflow increments a drop counter instead of growing without bound.
+pub const DEFAULT_MAX_EVENTS: usize = 1 << 18;
+
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    /// Chrome phase: 'B' begin, 'E' end, 'i' instant, 'X' complete
+    pub ph: char,
+    pub pid: u64,
+    pub tid: u64,
+    /// microseconds since the sink's epoch
+    pub ts_us: f64,
+    /// duration in microseconds ('X' events only)
+    pub dur_us: f64,
+    pub args: Vec<(&'static str, Json)>,
+}
+
+#[derive(Debug)]
+pub struct TraceSink {
+    epoch: Instant,
+    /// keep every Nth request id (1 = every request)
+    sample_every: u64,
+    max_events: usize,
+    events: Mutex<Vec<TraceEvent>>,
+    dropped: AtomicU64,
+}
+
+impl TraceSink {
+    pub fn new(sample_every: u64) -> Self {
+        Self::with_limits(sample_every, DEFAULT_MAX_EVENTS)
+    }
+
+    pub fn with_limits(sample_every: u64, max_events: usize) -> Self {
+        Self {
+            epoch: Instant::now(),
+            sample_every: sample_every.max(1),
+            max_events,
+            events: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether this request id is in the sampled subset.
+    #[inline]
+    pub fn sampled(&self, req_id: u64) -> bool {
+        self.sample_every == 1 || req_id % self.sample_every == 0
+    }
+
+    pub fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut events = self.events.lock().unwrap();
+        if events.len() >= self.max_events {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        events.push(ev);
+    }
+
+    /// Open a request's lifecycle span (the queued→retire envelope).
+    pub fn begin_request(&self, req_id: u64, prompt_len: usize, priority: i32) {
+        self.push(TraceEvent {
+            name: "request",
+            ph: 'B',
+            pid: REQUEST_PID,
+            tid: req_id,
+            ts_us: self.now_us(),
+            dur_us: 0.0,
+            args: vec![
+                ("prompt_len", num(prompt_len as f64)),
+                ("priority", num(priority as f64)),
+            ],
+        });
+    }
+
+    /// Mark a point inside a request's lifecycle (admitted, cache_probe,
+    /// first_token, …).
+    pub fn instant(&self, req_id: u64, name: &'static str, args: Vec<(&'static str, Json)>) {
+        self.push(TraceEvent {
+            name,
+            ph: 'i',
+            pid: REQUEST_PID,
+            tid: req_id,
+            ts_us: self.now_us(),
+            dur_us: 0.0,
+            args,
+        });
+    }
+
+    /// Close a request's lifecycle span with its terminal reason.
+    pub fn end_request(&self, req_id: u64, reason: &str, generated: usize) {
+        self.push(TraceEvent {
+            name: "request",
+            ph: 'E',
+            pid: REQUEST_PID,
+            tid: req_id,
+            ts_us: self.now_us(),
+            dur_us: 0.0,
+            args: vec![
+                ("finish_reason", s(reason)),
+                ("generated", num(generated as f64)),
+            ],
+        });
+    }
+
+    /// A completed sub-span of one request (prefill chunk, spec round),
+    /// recorded at its end: `dur_s` back-dates the start.
+    pub fn span_request(
+        &self,
+        req_id: u64,
+        name: &'static str,
+        dur_s: f64,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        let dur_us = dur_s * 1e6;
+        self.push(TraceEvent {
+            name,
+            ph: 'X',
+            pid: REQUEST_PID,
+            tid: req_id,
+            ts_us: self.now_us() - dur_us,
+            dur_us,
+            args,
+        });
+    }
+
+    /// A completed batch-level engine span (decode step over the whole
+    /// decode batch) in the worker's own process lane.
+    pub fn span_engine(
+        &self,
+        lane: u32,
+        name: &'static str,
+        dur_s: f64,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        let dur_us = dur_s * 1e6;
+        self.push(TraceEvent {
+            name,
+            ph: 'X',
+            pid: 1 + lane as u64,
+            tid: 0,
+            ts_us: self.now_us() - dur_us,
+            dur_us,
+            args,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events that hit the cap and were discarded.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Chrome trace JSON object: `{"traceEvents": [...], ...}`.
+    pub fn to_chrome_json(&self) -> Json {
+        let events = self.events.lock().unwrap();
+        let arr: Vec<Json> = events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("name", s(e.name)),
+                    ("ph", s(&e.ph.to_string())),
+                    ("pid", num(e.pid as f64)),
+                    ("tid", num(e.tid as f64)),
+                    ("ts", num(e.ts_us)),
+                ];
+                if e.ph == 'X' {
+                    fields.push(("dur", num(e.dur_us)));
+                }
+                if e.ph == 'i' {
+                    // instant scope: thread
+                    fields.push(("s", s("t")));
+                }
+                if !e.args.is_empty() {
+                    fields.push(("args", obj(e.args.clone())));
+                }
+                obj(fields)
+            })
+            .collect();
+        obj(vec![
+            ("traceEvents", Json::Arr(arr)),
+            ("displayTimeUnit", s("ms")),
+            ("dropped_events", num(self.dropped() as f64)),
+        ])
+    }
+
+    pub fn write(&self, path: &str) -> Result<()> {
+        std::fs::write(path, json::to_string(&self.to_chrome_json()))?;
+        Ok(())
+    }
+}
+
+/// An engine's tracing attachment: the shared sink, the worker lane for
+/// batch-level spans, and whether this engine opens the request envelope
+/// at enqueue (false for pool workers — the dispatcher already opened it
+/// when the request entered the ingress queue).
+#[derive(Debug, Clone)]
+pub struct TraceCtx {
+    pub sink: Arc<TraceSink>,
+    pub lane: u32,
+    pub record_queued: bool,
+}
+
+impl TraceCtx {
+    pub fn new(sink: Arc<TraceSink>, lane: u32) -> Self {
+        Self { sink, lane, record_queued: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_events_round_trip_through_chrome_json() {
+        let sink = TraceSink::new(1);
+        sink.begin_request(3, 17, 0);
+        sink.instant(3, "admitted", vec![]);
+        sink.span_request(3, "prefill_chunk", 0.001, vec![("len", num(16.0))]);
+        sink.end_request(3, "Length", 8);
+        let text = json::to_string(&sink.to_chrome_json());
+        let back = Json::parse(&text).unwrap();
+        let events = back.arr_field("traceEvents").unwrap();
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0].str_field("ph").unwrap(), "B");
+        assert_eq!(events[3].str_field("ph").unwrap(), "E");
+        assert_eq!(
+            events[3].get("args").unwrap().str_field("finish_reason").unwrap(),
+            "Length"
+        );
+        let x = &events[2];
+        assert_eq!(x.str_field("ph").unwrap(), "X");
+        assert!(x.get("dur").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn trace_sampling_keeps_every_nth_request() {
+        let sink = TraceSink::new(4);
+        let kept: Vec<u64> = (0..12).filter(|&id| sink.sampled(id)).collect();
+        assert_eq!(kept, vec![0, 4, 8]);
+        let all = TraceSink::new(1);
+        assert!((0..12).all(|id| all.sampled(id)));
+    }
+
+    #[test]
+    fn trace_event_cap_drops_instead_of_growing() {
+        let sink = TraceSink::with_limits(1, 8);
+        for i in 0..20 {
+            sink.instant(i, "tick", vec![]);
+        }
+        assert_eq!(sink.len(), 8);
+        assert_eq!(sink.dropped(), 12);
+        let back = Json::parse(&json::to_string(&sink.to_chrome_json())).unwrap();
+        assert_eq!(back.usize_field("dropped_events").unwrap(), 12);
+    }
+
+    #[test]
+    fn trace_timestamps_are_monotonic_in_record_order() {
+        let sink = TraceSink::new(1);
+        for i in 0..64 {
+            sink.instant(1, "tick", vec![("i", num(i as f64))]);
+        }
+        let events = sink.events.lock().unwrap();
+        for w in events.windows(2) {
+            assert!(w[1].ts_us >= w[0].ts_us);
+        }
+    }
+}
