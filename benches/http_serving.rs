@@ -1,0 +1,294 @@
+//! Bench: HTTP/SSE serving overhead — requests/s and TTFT through the
+//! OpenAI-style frontend vs direct in-process `ServePool::submit`, at 1
+//! and 4 workers.
+//!
+//! The direct mode consumes each request's `Event` stream off its
+//! `SubmitHandle` (no sockets anywhere); the HTTP mode drives the same
+//! pool through `serve_http` with one raw-TCP client thread per request,
+//! POSTing `stream: true` completions and timestamping the first SSE
+//! token frame.  The delta between the two TTFT columns is the wire +
+//! frontend cost; tokens are asserted identical per prompt (greedy
+//! decoding is deterministic, so transport must never change output).
+//!
+//! `--json PATH` writes a machine-readable record (uploaded as a CI
+//! artifact to track the serving-overhead trajectory over time).
+//!
+//! Run: cargo bench --bench http_serving [-- --requests 24 --json out.json]
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastmamba::backend::{self, BackendKind};
+use fastmamba::coordinator::{serve_pool, EngineConfig, Event, Metrics, PoolConfig, Request};
+use fastmamba::obs::SortedSamples;
+use fastmamba::server::{serve_http, ApiConfig, ChannelSubmitter, HttpConfig};
+use fastmamba::util::cli::Args;
+use fastmamba::util::json::{self, num, obj, s as js, Json};
+
+struct Row {
+    workers: usize,
+    mode: &'static str,
+    reqs_per_s: f64,
+    ttft_p50_ms: f64,
+    ttft_p95_ms: f64,
+    wall_s: f64,
+    tok_per_s: f64,
+    metrics: Metrics,
+}
+
+/// One streamed completion over raw TCP: returns the token stream and the
+/// client-observed TTFT (request written → first token frame parsed).
+fn http_stream_completion(addr: SocketAddr, body: &str) -> anyhow::Result<(Vec<u32>, f64)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let t0 = Instant::now();
+    write!(
+        stream,
+        "POST /v1/completions HTTP/1.1\r\nHost: bench\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut raw: Vec<u8> = Vec::with_capacity(4096);
+    let mut chunk = [0u8; 4096];
+    let mut cursor = 0usize; // next unparsed byte
+    let mut head_done = false;
+    let mut tokens: Vec<u32> = Vec::new();
+    let mut ttft = None;
+    'read: loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        raw.extend_from_slice(&chunk[..n]);
+        if !head_done {
+            match raw.windows(4).position(|w| w == b"\r\n\r\n") {
+                Some(p) => {
+                    let head = std::str::from_utf8(&raw[..p])?;
+                    anyhow::ensure!(head.starts_with("HTTP/1.1 200"), "bad response: {head}");
+                    cursor = p + 4;
+                    head_done = true;
+                }
+                None => continue,
+            }
+        }
+        // complete SSE frames end with \n\n (the head's \r\n\r\n cannot
+        // false-match)
+        while let Some(p) = raw[cursor..].windows(2).position(|w| w == b"\n\n") {
+            let frame = std::str::from_utf8(&raw[cursor..cursor + p])?;
+            cursor += p + 2;
+            let payload = frame.strip_prefix("data: ").unwrap_or(frame);
+            if payload == "[DONE]" {
+                break 'read;
+            }
+            let v = Json::parse(payload)?;
+            let choice = &v.arr_field("choices")?[0];
+            if let Some(tok) = choice.get("token").and_then(Json::as_usize) {
+                if tokens.is_empty() {
+                    ttft = Some(t0.elapsed().as_secs_f64());
+                }
+                tokens.push(tok as u32);
+            }
+        }
+    }
+    Ok((tokens, ttft.unwrap_or_else(|| t0.elapsed().as_secs_f64())))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_requests = args.usize_or("requests", 24);
+    let max_new = args.usize_or("max-new", 16);
+    let max_active = args.usize_or("max-active", 8);
+    let kind = BackendKind::from_name(&args.get_or("backend", "native"))
+        .expect("--backend auto|pjrt|native");
+
+    let probe = backend::load(kind)?;
+    let vocab = probe.cfg().vocab_size;
+    let variants = probe.variants();
+    println!(
+        "backend: {} ({n_requests} requests, max_new {max_new})",
+        probe.name()
+    );
+    drop(probe); // workers construct their own
+
+    let make_prompts = || -> Vec<Vec<u32>> {
+        (0..n_requests)
+            .map(|i| {
+                let plen = [9usize, 17, 33, 48][i % 4];
+                (0..plen).map(|j| ((i * 131 + j * 17) % vocab) as u32).collect()
+            })
+            .collect()
+    };
+
+    let make_pool = |n_workers: usize| {
+        let pool = serve_pool(
+            move || backend::load(kind),
+            PoolConfig {
+                engine: EngineConfig { max_active, greedy_chunking: true },
+                n_workers,
+                ..PoolConfig::default()
+            },
+        );
+        // warm up outside the timed window: one tiny request per worker
+        for w in 0..n_workers {
+            pool.submit(Request::new(1_000_000 + w as u64, vec![1, 2, 3], 2, "fp32"))
+                .unwrap();
+        }
+        for _ in 0..n_workers {
+            pool.results.recv().expect("warmup result");
+        }
+        pool
+    };
+
+    let mut rows: Vec<Row> = Vec::new();
+    for n_workers in [1usize, 4] {
+        // --- direct: in-process SubmitHandle event streams
+        let pool = make_pool(n_workers);
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(n_requests);
+        let mut submit_at = Vec::with_capacity(n_requests);
+        for (i, prompt) in make_prompts().into_iter().enumerate() {
+            submit_at.push(Instant::now());
+            handles.push(pool.submit(Request::new(i as u64, prompt, max_new, "fp32"))?);
+        }
+        let mut direct: Vec<Vec<u32>> = vec![Vec::new(); n_requests];
+        let mut ttft = Vec::with_capacity(n_requests);
+        let mut done = 0usize;
+        while done < n_requests {
+            let mut progressed = false;
+            for (i, h) in handles.iter().enumerate() {
+                while let Some(ev) = h.try_event() {
+                    progressed = true;
+                    match ev {
+                        Event::FirstToken => {}
+                        Event::Token { tok, .. } => {
+                            if direct[i].is_empty() {
+                                ttft.push((Instant::now() - submit_at[i]).as_secs_f64());
+                            }
+                            direct[i].push(tok);
+                        }
+                        Event::Finished(_) => done += 1,
+                    }
+                }
+            }
+            if !progressed {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        for _ in 0..n_requests {
+            pool.results.recv().expect("buffered result");
+        }
+        let report = pool.finish()?;
+        let toks: u64 = direct.iter().map(|s| s.len() as u64).sum();
+        let ttft = SortedSamples::new(ttft);
+        rows.push(Row {
+            workers: n_workers,
+            mode: "direct",
+            reqs_per_s: n_requests as f64 / wall,
+            ttft_p50_ms: ttft.pct(0.50) * 1e3,
+            ttft_p95_ms: ttft.pct(0.95) * 1e3,
+            wall_s: wall,
+            tok_per_s: toks as f64 / wall,
+            metrics: report.merged,
+        });
+
+        // --- http: same pool topology behind the SSE frontend, one raw-TCP
+        // client thread per request
+        let pool = make_pool(n_workers);
+        let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
+        let mut server = serve_http(
+            "127.0.0.1:0",
+            submitter,
+            HttpConfig::new(ApiConfig {
+                variant: "fp32".into(),
+                variants: variants.clone(),
+                vocab_size: vocab,
+                default_max_tokens: max_new,
+            }),
+        )?;
+        let addr = server.addr();
+        let t0 = Instant::now();
+        let clients: Vec<_> = make_prompts()
+            .into_iter()
+            .map(|prompt| {
+                std::thread::spawn(move || {
+                    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+                    let body = format!(
+                        r#"{{"prompt": [{}], "max_tokens": {max_new}, "stream": true}}"#,
+                        toks.join(", ")
+                    );
+                    http_stream_completion(addr, &body)
+                })
+            })
+            .collect();
+        let mut http: Vec<Vec<u32>> = Vec::with_capacity(n_requests);
+        let mut ttft = Vec::with_capacity(n_requests);
+        for c in clients {
+            let (tokens, t) = c.join().expect("client thread")?;
+            http.push(tokens);
+            ttft.push(t);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        server.shutdown();
+        for _ in 0..n_requests {
+            pool.results.recv().expect("buffered result");
+        }
+        let report = pool.finish()?;
+        let toks: u64 = http.iter().map(|s| s.len() as u64).sum();
+        let ttft = SortedSamples::new(ttft);
+        rows.push(Row {
+            workers: n_workers,
+            mode: "http",
+            reqs_per_s: n_requests as f64 / wall,
+            ttft_p50_ms: ttft.pct(0.50) * 1e3,
+            ttft_p95_ms: ttft.pct(0.95) * 1e3,
+            wall_s: wall,
+            tok_per_s: toks as f64 / wall,
+            metrics: report.merged,
+        });
+
+        // transport must never change output: greedy decoding of the same
+        // prompt yields the same tokens over HTTP as in-process (both
+        // vectors are indexed by prompt order)
+        assert_eq!(http, direct, "HTTP tokens diverged from direct submit");
+        println!("workers={n_workers}: http == direct (token-identical)");
+    }
+
+    for r in &rows {
+        println!(
+            "workers={} mode={:<6} req/s={:.1} ttft_p50={:.2}ms ttft_p95={:.2}ms \
+             wall={:.3}s tok/s={:.1}",
+            r.workers, r.mode, r.reqs_per_s, r.ttft_p50_ms, r.ttft_p95_ms, r.wall_s, r.tok_per_s
+        );
+    }
+
+    if let Some(path) = args.get("json") {
+        let runs: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("workers", num(r.workers as f64)),
+                    ("mode", js(r.mode)),
+                    ("reqs_per_s", num(r.reqs_per_s)),
+                    ("ttft_p50_ms", num(r.ttft_p50_ms)),
+                    ("ttft_p95_ms", num(r.ttft_p95_ms)),
+                    ("wall_s", num(r.wall_s)),
+                    ("tok_per_s", num(r.tok_per_s)),
+                    ("metrics", r.metrics.to_json()),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![
+            ("schema", js("fastmamba.http_serving.v1")),
+            ("bench", js("http_serving")),
+            ("requests", num(n_requests as f64)),
+            ("max_new", num(max_new as f64)),
+            ("max_active", num(max_active as f64)),
+            ("runs", Json::Arr(runs)),
+        ]);
+        std::fs::write(path, json::to_string(&doc))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -70,6 +70,7 @@ pub mod batcher;
 pub mod metrics;
 pub mod request;
 pub mod router;
+pub mod sampler;
 pub mod scheduler;
 pub mod speculative;
 pub mod state;
@@ -79,6 +80,7 @@ pub use metrics::{Metrics, WorkerStat};
 pub use request::{
     CancelFlag, Event, FinishReason, FinishedRequest, Request, SpecStats, SubmitHandle,
 };
+pub use sampler::{Sampler, SamplingParams, StopMatcher};
 pub use router::{serve_pool, serve_threaded, PoolConfig, PoolReport, Router, ServePool};
 pub use scheduler::{Engine, EngineConfig};
 pub use speculative::{SpecConfig, SpecEngine};

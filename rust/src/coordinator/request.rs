@@ -19,6 +19,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
+use super::sampler::{OutStream, Sampler, SamplingParams};
+
 /// Shared cancellation flag: one per request, shared by every clone of the
 /// request (the pool dispatcher's outstanding copy, the owning worker's
 /// copy) and by the [`SubmitHandle`] — so a `cancel()` reaches the owning
@@ -44,6 +46,10 @@ pub enum FinishReason {
     Length,
     /// the configured stop token was sampled
     StopToken,
+    /// a string stop sequence ([`SamplingParams::stop_sequences`])
+    /// completed in the rendered token stream; `generated` is truncated
+    /// to the client-visible tokens before the match
+    StopSequence,
     /// the client cancelled via [`SubmitHandle::cancel`]; `generated`
     /// holds the partial output produced before the cancel was observed
     Cancelled,
@@ -125,6 +131,15 @@ impl SubmitHandle {
         self.events.recv_timeout(timeout).ok()
     }
 
+    /// Like [`next_event_timeout`](Self::next_event_timeout) but
+    /// distinguishes a timeout (serving side still alive — poll again)
+    /// from a disconnect (engine dropped / pool shut down — stop
+    /// waiting).  The HTTP/SSE edge needs the distinction to probe the
+    /// client connection on idle ticks without giving up on the request.
+    pub fn poll_event(&self, timeout: Duration) -> Result<Event, mpsc::RecvTimeoutError> {
+        self.events.recv_timeout(timeout)
+    }
+
     /// Drain events (blocking) until the terminal [`Event::Finished`]
     /// arrives; `None` if the channel closes first.  Intermediate
     /// `FirstToken`/`Token` events are discarded — batch-style callers
@@ -149,6 +164,9 @@ pub struct Request {
     pub variant: String,
     /// optional stop token (generation halts when sampled)
     pub stop_token: Option<u32>,
+    /// how to turn logits into tokens (default: pure greedy argmax,
+    /// bit-exact with the pre-sampler engines)
+    pub sampling: SamplingParams,
     /// optional conversation id for the state cache: on completion the
     /// request's end-of-turn SSM state is stored under this id, and a
     /// follow-up request carrying the same id whose prompt extends the
@@ -181,6 +199,7 @@ impl Request {
             max_new_tokens,
             variant: variant.to_string(),
             stop_token: None,
+            sampling: SamplingParams::default(),
             session_id: None,
             deadline: None,
             priority: 0,
@@ -212,6 +231,13 @@ impl Request {
     /// Halt generation when `tok` is sampled.
     pub fn with_stop_token(mut self, tok: u32) -> Self {
         self.stop_token = Some(tok);
+        self
+    }
+
+    /// Sampling configuration (temperature, top-k/top-p, penalties,
+    /// logit bias, stop sequences, seed).  The default is pure greedy.
+    pub fn with_sampling(mut self, sampling: SamplingParams) -> Self {
+        self.sampling = sampling;
         self
     }
 
@@ -314,9 +340,27 @@ pub(crate) struct InFlight {
     /// when the latest token was emitted — the TPOT (inter-token latency)
     /// anchor
     pub last_token_at: Option<Instant>,
+    /// per-request sampling state (penalty bookkeeping + params)
+    pub sampler: Sampler,
+    /// stop-sequence-aware token emitter
+    pub stream: OutStream,
 }
 
 /// Greedy (argmax) sampling over one logits row.
+///
+/// Semantics, pinned by unit tests:
+/// - **NaN-safe**: the strict `>` comparison means `NaN` never replaces
+///   the running max (`NaN > x` is false), so NaN logits can never win.
+/// - **First-max tie-breaking**: on exact ties the *lowest* index wins
+///   (strict `>` keeps the earlier maximum).
+/// - **Degenerate rows**: an empty, all-NaN, or all-`-inf` row returns
+///   token 0.
+///
+/// This is the `temperature = 0` fast path of
+/// [`Sampler::sample`](super::sampler::Sampler::sample) — the sampler
+/// calls straight into it on the raw logits row for default
+/// [`SamplingParams`], which is what keeps greedy decoding bit-exact with
+/// the pre-sampler engines.
 pub fn argmax(logits: &[f32]) -> u32 {
     let mut best = 0usize;
     let mut bv = f32::NEG_INFINITY;
@@ -337,6 +381,30 @@ mod tests {
     fn argmax_picks_max() {
         assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.9]), 1);
         assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn argmax_is_nan_safe() {
+        // NaN never wins: strict > comparison rejects NaN candidates
+        assert_eq!(argmax(&[f32::NAN, 1.0, 0.5]), 1);
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(argmax(&[0.5, 1.0, f32::NAN]), 1);
+        // degenerate rows fall back to token 0
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn argmax_breaks_ties_toward_first_max() {
+        assert_eq!(argmax(&[2.0, 2.0, 2.0]), 0);
+        assert_eq!(argmax(&[1.0, 2.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn argmax_single_element() {
+        assert_eq!(argmax(&[f32::NEG_INFINITY]), 0);
+        assert_eq!(argmax(&[42.0]), 0);
     }
 
     #[test]

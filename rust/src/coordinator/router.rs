@@ -882,6 +882,61 @@ mod tests {
     }
 
     #[test]
+    fn sampled_pool_matches_single_engine_same_seed() {
+        use crate::coordinator::sampler::SamplingParams;
+        use crate::coordinator::scheduler::Engine;
+        // sampled determinism across the fan-out: position-keyed draws
+        // make the sampled stream independent of worker count and batch
+        // packing, so a 4-worker pool reproduces the single engine exactly
+        let sampled_reqs = || -> Vec<Request> {
+            (0..12usize)
+                .map(|i| {
+                    let plen = [3usize, 9, 17, 33][i % 4];
+                    let prompt: Vec<u32> =
+                        (0..plen).map(|j| ((i * 131 + j * 17) % 128) as u32).collect();
+                    Request::new(i as u64, prompt, 6, "fp32").with_sampling(
+                        SamplingParams {
+                            temperature: 1.0,
+                            seed: 9000 + i as u64,
+                            ..SamplingParams::default()
+                        },
+                    )
+                })
+                .collect()
+        };
+        let be = micro_backend();
+        let mut eng = Engine::new(&be, EngineConfig { max_active: 4, greedy_chunking: true });
+        for r in sampled_reqs() {
+            eng.submit(r);
+        }
+        eng.run().unwrap();
+        let mut want: Vec<(u64, Vec<u32>)> =
+            eng.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+        want.sort();
+
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let pool = serve_pool(
+            make,
+            PoolConfig {
+                engine: EngineConfig { max_active: 4, greedy_chunking: true },
+                n_workers: 4,
+                ..PoolConfig::default()
+            },
+        );
+        for r in sampled_reqs() {
+            pool.submit(r).unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..12 {
+            let f = pool.results.recv().expect("pool result");
+            got.push((f.id, f.generated));
+        }
+        got.sort();
+        pool.finish().unwrap();
+        assert_eq!(want, got, "4-worker sampled output != single engine");
+    }
+
+    #[test]
     fn multi_worker_pool_token_exact_and_capacity_bounded() {
         let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
         let n_reqs = stress_requests().len();

@@ -1,0 +1,781 @@
+//! Token sampling: the [`SamplingParams`] surface carried on every
+//! [`Request`], the [`Sampler`] that turns a logits row into a token, and
+//! the string stop-sequence [`StopMatcher`] with its stream-side
+//! [`OutStream`] wrapper.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **`temperature = 0` is bit-exact with the pre-sampler greedy path.**
+//!    The default [`SamplingParams`] routes straight through
+//!    [`request::argmax`] on the *raw* logits row — no copy, no float
+//!    transform — so every existing token-exactness suite (engine vs
+//!    batch, spec vs plain, pool vs single worker, cache on vs off) holds
+//!    unchanged.
+//! 2. **Reproducible and position-keyed.** All randomness derives from
+//!    [`keyed_uniform`]`(seed, position, salt)` — a stateless hash of the
+//!    request seed, the token position, and a per-use salt — instead of a
+//!    sequential RNG.  This is what makes sampled speculative decoding
+//!    (speculative.rs) line up with the plain engine: the draw used at
+//!    generation position `i` does not depend on *how many* draws happened
+//!    before it (draft rounds burn extra randomness for rejected
+//!    positions), only on `i` itself.
+//! 3. **Documented processing order.** Logits are transformed as:
+//!    repetition penalty → presence/frequency penalties → logit bias →
+//!    temperature → top-k → softmax → top-p → renormalize.  Penalty state
+//!    (`seen` for repetition, per-token counts for presence/frequency) is
+//!    only tracked when a penalty is active, so penalty-free requests pay
+//!    nothing.
+//!
+//! [`Request`]: super::request::Request
+//! [`request::argmax`]: super::request::argmax
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use super::request::{argmax, Event, Request};
+use crate::util::rng::Rng;
+
+/// Salt for the primary per-position token draw (plain sampling, draft
+/// proposals, and the full-acceptance bonus token).
+pub const SALT_SAMPLE: u64 = 0x5341_4D50;
+/// Salt for the speculative accept/reject coin at each draft position.
+pub const SALT_ACCEPT: u64 = 0x4143_4350;
+/// Salt for the residual-distribution resample after a draft rejection.
+pub const SALT_RESAMPLE: u64 = 0x5245_534D;
+
+/// Stateless uniform draw in `[0, 1)` keyed by (request seed, generation
+/// position, salt).  Same key → same draw, always — the speculative
+/// engine's lossless-acceptance coupling depends on it (see module doc).
+pub fn keyed_uniform(seed: u64, index: usize, salt: u64) -> f64 {
+    let s = seed
+        .wrapping_add((index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(salt.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    Rng::new(s).uniform()
+}
+
+/// Per-request sampling configuration, carried on
+/// [`Request::sampling`](super::request::Request::sampling).
+///
+/// The default is **pure greedy** (`temperature = 0`, every filter off),
+/// which the engines fast-path to a raw [`argmax`] — bit-exact with the
+/// pre-sampler behavior.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// softmax temperature; `<= 0` selects greedy argmax decoding
+    pub temperature: f32,
+    /// keep only the `top_k` highest logits before softmax (`0` = off)
+    pub top_k: usize,
+    /// nucleus sampling: keep the smallest probability-sorted prefix with
+    /// cumulative mass `>= top_p` (`>= 1.0` = off; at least one token is
+    /// always kept)
+    pub top_p: f32,
+    /// divide positive / multiply negative logits of every token already
+    /// seen (prompt + generated) by this factor (`1.0` = off)
+    pub repetition_penalty: f32,
+    /// flat logit subtraction for every token generated at least once
+    pub presence_penalty: f32,
+    /// per-occurrence logit subtraction (count × penalty) over generated
+    /// tokens
+    pub frequency_penalty: f32,
+    /// additive per-token logit adjustments, applied after penalties
+    pub logit_bias: Vec<(u32, f32)>,
+    /// string stop sequences matched against the rendered token stream
+    /// (decimal token ids joined by single spaces); on match the request
+    /// retires with [`FinishReason::StopSequence`] and the matched text is
+    /// withheld from the stream
+    ///
+    /// [`FinishReason::StopSequence`]: super::request::FinishReason::StopSequence
+    pub stop_sequences: Vec<String>,
+    /// seed for the per-request position-keyed RNG ([`keyed_uniform`])
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            presence_penalty: 0.0,
+            frequency_penalty: 0.0,
+            logit_bias: Vec::new(),
+            stop_sequences: Vec::new(),
+            seed: 0,
+        }
+    }
+}
+
+impl SamplingParams {
+    /// Greedy decoding? (`temperature <= 0`)
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// Does any logits transform apply before the argmax/softmax?
+    pub fn has_processing(&self) -> bool {
+        self.repetition_penalty != 1.0
+            || self.presence_penalty != 0.0
+            || self.frequency_penalty != 0.0
+            || !self.logit_bias.is_empty()
+    }
+
+    /// Pure greedy: raw argmax over the untouched logits row — the
+    /// bit-exactness fast path the engines take for default requests.
+    pub fn is_pure_greedy(&self) -> bool {
+        self.is_greedy() && !self.has_processing()
+    }
+}
+
+/// Per-request sampling state: the params plus the penalty bookkeeping
+/// (tokens seen for repetition, generation counts for presence/frequency).
+///
+/// The sampler is `Clone` so the speculative engine can run a draft round
+/// on a scratch copy and only commit `observe()` calls for tokens the
+/// verifier accepted.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    params: SamplingParams,
+    /// tokens in the prompt or generated so far (repetition penalty)
+    seen: HashSet<u32>,
+    /// generated-token occurrence counts (presence/frequency penalties)
+    counts: HashMap<u32, u32>,
+}
+
+impl Sampler {
+    pub fn new(params: SamplingParams) -> Self {
+        Self { params, seen: HashSet::new(), counts: HashMap::new() }
+    }
+
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
+    fn tracks_penalties(&self) -> bool {
+        self.params.repetition_penalty != 1.0
+            || self.params.presence_penalty != 0.0
+            || self.params.frequency_penalty != 0.0
+    }
+
+    /// Record the prompt tokens (repetition penalty covers prompt +
+    /// generated; presence/frequency cover generated only).
+    pub fn observe_context(&mut self, prompt: &[u32]) {
+        if !self.tracks_penalties() {
+            return;
+        }
+        self.seen.extend(prompt.iter().copied());
+    }
+
+    /// Record one committed generated token.
+    pub fn observe(&mut self, tok: u32) {
+        if !self.tracks_penalties() {
+            return;
+        }
+        self.seen.insert(tok);
+        *self.counts.entry(tok).or_insert(0) += 1;
+    }
+
+    /// Apply penalties + bias (the pre-temperature transforms), in the
+    /// documented order: repetition → presence/frequency → bias.
+    fn processed(&self, logits: &[f32]) -> Vec<f32> {
+        let mut l = logits.to_vec();
+        let rp = self.params.repetition_penalty;
+        if rp != 1.0 && rp > 0.0 {
+            for &t in &self.seen {
+                if let Some(v) = l.get_mut(t as usize) {
+                    // the CTRL-paper rule: shrink positive logits, push
+                    // negative ones further down
+                    *v = if *v > 0.0 { *v / rp } else { *v * rp };
+                }
+            }
+        }
+        if self.params.presence_penalty != 0.0 || self.params.frequency_penalty != 0.0 {
+            for (&t, &c) in &self.counts {
+                if let Some(v) = l.get_mut(t as usize) {
+                    *v -= self.params.presence_penalty
+                        + self.params.frequency_penalty * c as f32;
+                }
+            }
+        }
+        for &(t, b) in &self.params.logit_bias {
+            if let Some(v) = l.get_mut(t as usize) {
+                *v += b;
+            }
+        }
+        l
+    }
+
+    /// Sample one token for generation position `index`.
+    ///
+    /// Greedy params reduce to [`argmax`] (over raw logits when no
+    /// penalty/bias applies — the bit-exact fast path); otherwise an
+    /// inverse-CDF draw from [`Sampler::dist`] using the position-keyed
+    /// uniform.
+    pub fn sample(&self, logits: &[f32], index: usize) -> u32 {
+        if self.params.is_greedy() {
+            if !self.params.has_processing() {
+                return argmax(logits);
+            }
+            return argmax(&self.processed(logits));
+        }
+        let dist = self.dist(logits);
+        Self::pick(&dist, keyed_uniform(self.params.seed, index, SALT_SAMPLE))
+    }
+
+    /// The full post-filter probability distribution over the vocabulary
+    /// (zeros for filtered-out tokens).  Only meaningful for
+    /// `temperature > 0`; the speculative engine uses these rows directly
+    /// for the rejection-sampling acceptance rule.
+    ///
+    /// Pipeline: penalties/bias → NaN→-inf → ÷temperature → sort (value
+    /// desc, index asc) → top-k cut → softmax (max-subtracted, f64
+    /// accumulation) → top-p cut (≥ 1 token kept) → renormalize.
+    pub fn dist(&self, logits: &[f32]) -> Vec<f32> {
+        let mut l = if self.params.has_processing() {
+            self.processed(logits)
+        } else {
+            logits.to_vec()
+        };
+        let temp = self.params.temperature;
+        debug_assert!(temp > 0.0, "dist() requires temperature > 0");
+        for v in l.iter_mut() {
+            *v = if v.is_nan() { f32::NEG_INFINITY } else { *v / temp };
+        }
+        let mut idx: Vec<usize> = (0..l.len()).collect();
+        // value descending, index ascending on ties — deterministic and
+        // total (NaNs were cleared above)
+        idx.sort_by(|&a, &b| {
+            l[b].partial_cmp(&l[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        let k = if self.params.top_k == 0 { l.len() } else { self.params.top_k.min(l.len()) };
+        idx.truncate(k.max(1));
+        let mx = l[idx[0]];
+        let mut out = vec![0.0f32; l.len()];
+        if mx == f32::NEG_INFINITY || !mx.is_finite() {
+            // every candidate masked: degenerate point mass on the
+            // first-index survivor
+            out[idx[0]] = 1.0;
+            return out;
+        }
+        let mut probs: Vec<f64> = idx.iter().map(|&i| ((l[i] - mx) as f64).exp()).collect();
+        let sum: f64 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= sum;
+        }
+        let keep = if self.params.top_p < 1.0 {
+            let target = (self.params.top_p as f64).max(0.0);
+            let mut cum = 0.0f64;
+            let mut n = 0usize;
+            for &q in &probs {
+                cum += q;
+                n += 1;
+                if cum >= target {
+                    break;
+                }
+            }
+            n.max(1)
+        } else {
+            probs.len()
+        };
+        let kept: f64 = probs[..keep].iter().sum();
+        for j in 0..keep {
+            out[idx[j]] = (probs[j] / kept) as f32;
+        }
+        out
+    }
+
+    /// Inverse-CDF draw from a (possibly unnormalized) weight vector.
+    /// Non-positive / non-finite weights are skipped; an all-zero vector
+    /// falls back to token 0.
+    pub fn pick(dist: &[f32], u: f64) -> u32 {
+        let total: f64 =
+            dist.iter().filter(|p| p.is_finite() && **p > 0.0).map(|&p| p as f64).sum();
+        if total <= 0.0 {
+            return 0;
+        }
+        let target = u * total;
+        let mut cum = 0.0f64;
+        let mut last = 0u32;
+        for (i, &p) in dist.iter().enumerate() {
+            if !p.is_finite() || p <= 0.0 {
+                continue;
+            }
+            cum += p as f64;
+            last = i as u32;
+            if cum > target {
+                return i as u32;
+            }
+        }
+        // float round-off pushed the target past the final cum: the last
+        // positive-weight token
+        last
+    }
+}
+
+/// The result of pushing one token into a [`StopMatcher`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StopScan {
+    /// no stop sequence completed; these tokens are now safe to stream
+    /// (tokens overlapping a *partial* match stay held back)
+    Continue(Vec<u32>),
+    /// a stop sequence completed; `release` is the final safe-to-stream
+    /// tail (tokens strictly before the match), everything else —
+    /// including the matched text — is withheld
+    Stopped { release: Vec<u32> },
+}
+
+/// Incremental string stop-sequence detector over the rendered token
+/// stream.
+///
+/// Tokens render as their decimal ids joined by single spaces (the crate
+/// has no text tokenizer), so `"7 19"` stops generation the moment token
+/// 19 follows token 7.  Matching is resilient to sequences spanning token
+/// boundaries: after each push the matcher computes the longest tail of
+/// the rendered text that is a proper prefix of any stop sequence and
+/// holds back every token overlapping it, releasing the rest — so a
+/// partial match is never streamed and then "un-streamed".
+#[derive(Debug, Clone)]
+pub struct StopMatcher {
+    seqs: Vec<String>,
+    /// rendered text kept for matching (suffix of the full stream)
+    tail: String,
+    /// absolute byte offset of `tail[0]` in the full rendered stream
+    base: usize,
+    /// total rendered bytes so far
+    total: usize,
+    /// held-back tokens: (token, absolute byte start, rendered length)
+    pending: VecDeque<(u32, usize, usize)>,
+}
+
+impl StopMatcher {
+    pub fn new(seqs: &[String]) -> Self {
+        Self {
+            seqs: seqs.iter().filter(|s| !s.is_empty()).cloned().collect(),
+            tail: String::new(),
+            base: 0,
+            total: 0,
+            pending: VecDeque::new(),
+        }
+    }
+
+    /// The canonical rendering of one token at stream position `first`.
+    pub fn render(tok: u32, first: bool) -> String {
+        if first {
+            tok.to_string()
+        } else {
+            format!(" {tok}")
+        }
+    }
+
+    /// Longest `l >= 1` such that the last `l` bytes of `tail` equal a
+    /// *proper* prefix of some stop sequence (a full match was already
+    /// ruled out by the caller).
+    fn hold_len(&self) -> usize {
+        let tb = self.tail.as_bytes();
+        let mut hold = 0usize;
+        for s in &self.seqs {
+            let sb = s.as_bytes();
+            let max_l = sb.len().saturating_sub(1).min(tb.len());
+            for l in (hold + 1..=max_l).rev() {
+                if tb[tb.len() - l..] == sb[..l] {
+                    hold = hold.max(l);
+                    break;
+                }
+            }
+        }
+        hold
+    }
+
+    /// Earliest full-match byte offset (absolute) across all sequences.
+    fn earliest_match(&self) -> Option<usize> {
+        self.seqs
+            .iter()
+            .filter_map(|s| self.tail.find(s.as_str()).map(|p| self.base + p))
+            .min()
+    }
+
+    /// Push one token; returns which pending tokens are now releasable,
+    /// or the stop verdict.
+    pub fn push(&mut self, tok: u32) -> StopScan {
+        let text = Self::render(tok, self.total == 0);
+        let start = self.total;
+        self.tail.push_str(&text);
+        self.total += text.len();
+        self.pending.push_back((tok, start, text.len()));
+
+        if let Some(match_abs) = self.earliest_match() {
+            // release tokens entirely before the match; the matched text
+            // (and any token overlapping it) is withheld
+            let mut release = Vec::new();
+            while let Some(&(t, s, len)) = self.pending.front() {
+                if s + len <= match_abs {
+                    release.push(t);
+                    self.pending.pop_front();
+                } else {
+                    break;
+                }
+            }
+            return StopScan::Stopped { release };
+        }
+
+        let hold = self.hold_len();
+        let hold_from = self.total - hold;
+        let mut release = Vec::new();
+        while let Some(&(t, s, len)) = self.pending.front() {
+            if s + len <= hold_from {
+                release.push(t);
+                self.pending.pop_front();
+            } else {
+                break;
+            }
+        }
+        // trim the tail: matching never needs text before the first
+        // held-back token (or before the hold window when nothing is held)
+        let keep_from = self.pending.front().map(|&(_, s, _)| s).unwrap_or(self.total);
+        if keep_from > self.base {
+            self.tail.drain(..keep_from - self.base);
+            self.base = keep_from;
+        }
+        StopScan::Continue(release)
+    }
+
+    /// End of generation without a match: everything held back is safe.
+    pub fn flush(&mut self) -> Vec<u32> {
+        self.pending.drain(..).map(|(t, _, _)| t).collect()
+    }
+}
+
+/// Stream-side wrapper the engines use: routes committed tokens through
+/// the optional [`StopMatcher`], emits [`Event::Token`] only for released
+/// tokens, and tracks how many tokens are client-visible (the
+/// [`FinishedRequest::generated`] truncation point when a stop sequence
+/// fires).
+///
+/// [`FinishedRequest::generated`]: super::request::FinishedRequest::generated
+#[derive(Debug)]
+pub(crate) struct OutStream {
+    matcher: Option<StopMatcher>,
+    streamed: usize,
+}
+
+impl OutStream {
+    pub(crate) fn new(params: &SamplingParams) -> Self {
+        let matcher = if params.stop_sequences.iter().any(|s| !s.is_empty()) {
+            Some(StopMatcher::new(&params.stop_sequences))
+        } else {
+            None
+        };
+        Self { matcher, streamed: 0 }
+    }
+
+    /// Route one committed token; returns `true` when a stop sequence
+    /// completed (the engine should retire the request with
+    /// `FinishReason::StopSequence`).
+    pub(crate) fn push(&mut self, req: &Request, tok: u32) -> bool {
+        match &mut self.matcher {
+            None => {
+                req.emit(Event::Token { tok, index: self.streamed });
+                self.streamed += 1;
+                false
+            }
+            Some(m) => match m.push(tok) {
+                StopScan::Continue(release) => {
+                    for t in release {
+                        req.emit(Event::Token { tok: t, index: self.streamed });
+                        self.streamed += 1;
+                    }
+                    false
+                }
+                StopScan::Stopped { release } => {
+                    for t in release {
+                        req.emit(Event::Token { tok: t, index: self.streamed });
+                        self.streamed += 1;
+                    }
+                    true
+                }
+            },
+        }
+    }
+
+    /// Generation ended without a stop-sequence match: release any
+    /// held-back partial-match tokens.
+    pub(crate) fn flush(&mut self, req: &Request) {
+        if let Some(m) = &mut self.matcher {
+            for t in m.flush() {
+                req.emit(Event::Token { tok: t, index: self.streamed });
+                self.streamed += 1;
+            }
+        }
+    }
+
+    /// Number of client-visible tokens (== `generated.len()` unless a stop
+    /// sequence withheld a tail).
+    pub(crate) fn visible(&self) -> usize {
+        self.streamed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sampled(temp: f32) -> SamplingParams {
+        SamplingParams { temperature: temp, seed: 42, ..SamplingParams::default() }
+    }
+
+    #[test]
+    fn sampler_default_is_pure_greedy_argmax() {
+        let p = SamplingParams::default();
+        assert!(p.is_pure_greedy());
+        let s = Sampler::new(p);
+        let logits = [0.1f32, 3.0, -1.0, 2.9];
+        for index in 0..4 {
+            assert_eq!(s.sample(&logits, index), argmax(&logits));
+        }
+    }
+
+    #[test]
+    fn sampler_keyed_uniform_is_stateless_and_salted() {
+        let a = keyed_uniform(7, 3, SALT_SAMPLE);
+        assert_eq!(a, keyed_uniform(7, 3, SALT_SAMPLE));
+        assert_ne!(a, keyed_uniform(7, 4, SALT_SAMPLE));
+        assert_ne!(a, keyed_uniform(8, 3, SALT_SAMPLE));
+        assert_ne!(a, keyed_uniform(7, 3, SALT_ACCEPT));
+        assert_ne!(a, keyed_uniform(7, 3, SALT_RESAMPLE));
+        assert!((0.0..1.0).contains(&a));
+    }
+
+    #[test]
+    fn sampler_top_k_edges() {
+        let logits = [1.0f32, 2.0, 3.0, 4.0];
+        // k >= vocab: identical to k = 0 (off)
+        let off = Sampler::new(SamplingParams { top_k: 0, ..sampled(1.0) });
+        let big = Sampler::new(SamplingParams { top_k: 99, ..sampled(1.0) });
+        assert_eq!(off.dist(&logits), big.dist(&logits));
+        // k = 1: point mass on the argmax
+        let one = Sampler::new(SamplingParams { top_k: 1, ..sampled(1.0) });
+        let d = one.dist(&logits);
+        assert_eq!(d, vec![0.0, 0.0, 0.0, 1.0]);
+        for index in 0..8 {
+            assert_eq!(one.sample(&logits, index), 3);
+        }
+    }
+
+    #[test]
+    fn sampler_top_p_edges() {
+        let logits = [1.0f32, 2.0, 3.0, 4.0];
+        // p = 1.0: off — full softmax support, sums to 1
+        let off = Sampler::new(SamplingParams { top_p: 1.0, ..sampled(1.0) });
+        let d = off.dist(&logits);
+        assert!(d.iter().all(|&p| p > 0.0));
+        assert!((d.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        // p -> 0: at least one token survives (the argmax), renormalized
+        let tiny = Sampler::new(SamplingParams { top_p: 1e-9, ..sampled(1.0) });
+        let d = tiny.dist(&logits);
+        assert_eq!(d, vec![0.0, 0.0, 0.0, 1.0]);
+        // mid p keeps a proper prefix of the sorted tokens and renormalizes
+        let mid = Sampler::new(SamplingParams { top_p: 0.6, ..sampled(1.0) });
+        let d = mid.dist(&logits);
+        assert!(d[3] > 0.0 && d[0] == 0.0);
+        assert!((d.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sampler_temperature_sharpens() {
+        let logits = [1.0f32, 2.0, 3.0, 4.0];
+        let hot = Sampler::new(sampled(2.0)).dist(&logits);
+        let cold = Sampler::new(sampled(0.25)).dist(&logits);
+        assert!(cold[3] > hot[3], "lower temperature concentrates mass on the max");
+    }
+
+    #[test]
+    fn sampler_penalty_application_order() {
+        // repetition divides the positive logit FIRST, then
+        // presence+frequency subtract, then bias adds — order changes the
+        // result, so pin it.
+        let params = SamplingParams {
+            temperature: 1.0,
+            repetition_penalty: 2.0,
+            presence_penalty: 0.5,
+            frequency_penalty: 0.25,
+            logit_bias: vec![(1, 3.0)],
+            seed: 1,
+            ..SamplingParams::default()
+        };
+        let mut s = Sampler::new(params);
+        s.observe_context(&[1]); // token 1 in the prompt
+        s.observe(1); // generated twice
+        s.observe(1);
+        let l = s.processed(&[0.0f32, 4.0, -4.0]);
+        // token 1: 4.0 / 2.0 (repetition) - (0.5 + 0.25 * 2) (pres+freq)
+        //          + 3.0 (bias) = 4.0
+        assert!((l[1] - 4.0).abs() < 1e-6, "got {}", l[1]);
+        // untouched token
+        assert_eq!(l[0], 0.0);
+        // negative logits are multiplied by the repetition penalty
+        let mut s2 = Sampler::new(SamplingParams {
+            temperature: 1.0,
+            repetition_penalty: 2.0,
+            seed: 1,
+            ..SamplingParams::default()
+        });
+        s2.observe(2);
+        let l2 = s2.processed(&[0.0f32, 4.0, -4.0]);
+        assert_eq!(l2[2], -8.0);
+    }
+
+    #[test]
+    fn sampler_logit_bias_overrides_stop_token_choice() {
+        // a strong negative bias on the would-be argmax flips the greedy
+        // pick — the "ban a stop token" use case
+        let params = SamplingParams {
+            logit_bias: vec![(1, -100.0)],
+            ..SamplingParams::default()
+        };
+        let s = Sampler::new(params);
+        let logits = [0.1f32, 3.0, -1.0, 2.9];
+        assert_eq!(argmax(&logits), 1);
+        assert_eq!(s.sample(&logits, 0), 3);
+    }
+
+    #[test]
+    fn sampler_nan_logits_never_win() {
+        let s = Sampler::new(sampled(1.0));
+        let logits = [f32::NAN, 1.0, f32::NAN, 5.0];
+        let d = s.dist(&logits);
+        assert_eq!(d[0], 0.0);
+        assert_eq!(d[2], 0.0);
+        assert!(d[3] > d[1]);
+        for index in 0..16 {
+            let t = s.sample(&logits, index);
+            assert!(t == 1 || t == 3);
+        }
+    }
+
+    #[test]
+    fn sampler_pick_inverse_cdf() {
+        let d = [0.25f32, 0.0, 0.5, 0.25];
+        assert_eq!(Sampler::pick(&d, 0.0), 0);
+        assert_eq!(Sampler::pick(&d, 0.24), 0);
+        assert_eq!(Sampler::pick(&d, 0.26), 2);
+        assert_eq!(Sampler::pick(&d, 0.74), 2);
+        assert_eq!(Sampler::pick(&d, 0.76), 3);
+        assert_eq!(Sampler::pick(&d, 0.999_999), 3);
+        // unnormalized weights and the all-zero fallback
+        assert_eq!(Sampler::pick(&[0.0, 2.0, 2.0], 0.49), 1);
+        assert_eq!(Sampler::pick(&[0.0, 2.0, 2.0], 0.51), 2);
+        assert_eq!(Sampler::pick(&[0.0, 0.0], 0.5), 0);
+    }
+
+    #[test]
+    fn sampler_same_seed_same_stream_different_seed_diverges() {
+        let logits: Vec<f32> = (0..32).map(|i| ((i * 37 % 13) as f32) * 0.3).collect();
+        let a = Sampler::new(SamplingParams { seed: 5, ..sampled(1.0) });
+        let b = Sampler::new(SamplingParams { seed: 5, ..sampled(1.0) });
+        let c = Sampler::new(SamplingParams { seed: 6, ..sampled(1.0) });
+        let ta: Vec<u32> = (0..64).map(|i| a.sample(&logits, i)).collect();
+        let tb: Vec<u32> = (0..64).map(|i| b.sample(&logits, i)).collect();
+        let tc: Vec<u32> = (0..64).map(|i| c.sample(&logits, i)).collect();
+        assert_eq!(ta, tb);
+        assert_ne!(ta, tc);
+    }
+
+    #[test]
+    fn stop_matcher_single_token_sequence() {
+        let mut m = StopMatcher::new(&["19".to_string()]);
+        assert_eq!(m.push(7), StopScan::Continue(vec![7]));
+        assert_eq!(m.push(19), StopScan::Stopped { release: vec![] });
+    }
+
+    #[test]
+    fn stop_matcher_spans_token_boundary_and_holds_partial() {
+        // stop sequence "7 19" spans two rendered tokens; pushing 7 must
+        // hold it back (partial match), a following 19 completes the stop,
+        // a following non-19 releases the held 7
+        let mut m = StopMatcher::new(&["7 19".to_string()]);
+        assert_eq!(m.push(3), StopScan::Continue(vec![3]));
+        // "3 7": the trailing "7" (and its leading space: " 7" contains
+        // the prefix "7 "? no — "7" alone is the proper prefix) is held
+        assert_eq!(m.push(7), StopScan::Continue(vec![]));
+        let mut done = m.clone();
+        assert_eq!(done.push(19), StopScan::Stopped { release: vec![] });
+        // divergence: "3 7 191" does NOT contain "7 19"? it does — "7 19"
+        // matches inside "7 191".  Use 21 instead.
+        assert_eq!(m.push(21), StopScan::Continue(vec![7, 21]));
+    }
+
+    #[test]
+    fn stop_matcher_match_inside_longer_render() {
+        // "7 19" occurs inside "... 7 191 ..." because rendered text is
+        // matched as a plain substring — pin that behavior
+        let mut m = StopMatcher::new(&["7 19".to_string()]);
+        assert_eq!(m.push(7), StopScan::Continue(vec![]));
+        assert_eq!(m.push(191), StopScan::Stopped { release: vec![] });
+    }
+
+    #[test]
+    fn stop_matcher_flush_releases_held_tokens() {
+        let mut m = StopMatcher::new(&["7 19".to_string()]);
+        assert_eq!(m.push(5), StopScan::Continue(vec![5]));
+        assert_eq!(m.push(7), StopScan::Continue(vec![]));
+        assert_eq!(m.flush(), vec![7]);
+        assert_eq!(m.flush(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn stop_matcher_releases_prefix_before_match() {
+        let mut m = StopMatcher::new(&["8 9".to_string()]);
+        assert_eq!(m.push(1), StopScan::Continue(vec![1]));
+        assert_eq!(m.push(8), StopScan::Continue(vec![]));
+        // match completes; token 1 already released, 8 and 9 withheld
+        assert_eq!(m.push(9), StopScan::Stopped { release: vec![] });
+    }
+
+    #[test]
+    fn out_stream_emits_only_released_tokens_and_truncates() {
+        let params = SamplingParams {
+            stop_sequences: vec!["7 19".to_string()],
+            ..SamplingParams::default()
+        };
+        let mut req = Request::new(1, vec![0], 8, "fp32");
+        let h = req.attach_events();
+        let mut out = OutStream::new(&params);
+        assert!(!out.push(&req, 3));
+        assert!(!out.push(&req, 7)); // held: partial match
+        assert!(out.push(&req, 19)); // stop completes
+        assert_eq!(out.visible(), 1);
+        let mut toks = Vec::new();
+        while let Some(Event::Token { tok, index }) = h.try_event() {
+            assert_eq!(index, toks.len());
+            toks.push(tok);
+        }
+        assert_eq!(toks, vec![3]);
+    }
+
+    #[test]
+    fn out_stream_flush_streams_held_tail() {
+        let params = SamplingParams {
+            stop_sequences: vec!["7 19".to_string()],
+            ..SamplingParams::default()
+        };
+        let mut req = Request::new(1, vec![0], 8, "fp32");
+        let h = req.attach_events();
+        let mut out = OutStream::new(&params);
+        assert!(!out.push(&req, 7));
+        assert_eq!(out.visible(), 0);
+        out.flush(&req);
+        assert_eq!(out.visible(), 1);
+        assert!(matches!(h.try_event(), Some(Event::Token { tok: 7, index: 0 })));
+    }
+
+    #[test]
+    fn out_stream_without_stop_sequences_passes_through() {
+        let mut req = Request::new(1, vec![0], 8, "fp32");
+        let h = req.attach_events();
+        let mut out = OutStream::new(&SamplingParams::default());
+        for (i, t) in [4u32, 5, 6].into_iter().enumerate() {
+            assert!(!out.push(&req, t));
+            assert!(matches!(h.try_event(), Some(Event::Token { tok, index }) if tok == t && index == i));
+        }
+        assert_eq!(out.visible(), 3);
+    }
+}

@@ -27,9 +27,10 @@ use super::admission::{finish_unadmitted, seed_from_cache, AdmissionSeed};
 use super::batcher::{full_bucket_plan, DecodeBatcher};
 use super::metrics::Metrics;
 use super::request::{
-    argmax, insert_by_priority, Event, FinishReason, FinishedRequest, InFlight, Request,
+    insert_by_priority, Event, FinishReason, FinishedRequest, InFlight, Request,
     SubmitHandle,
 };
+use super::sampler::{OutStream, Sampler};
 use super::state::StatePool;
 
 #[derive(Debug, Clone)]
@@ -123,10 +124,12 @@ impl<'be> Engine<'be> {
         handle
     }
 
-    /// Queue a request whose event channel is already attached (the pool
-    /// worker path: [`super::router::ServePool::submit`] created the
-    /// handle before the request crossed into this worker).
-    pub(crate) fn enqueue(&mut self, req: Request) {
+    /// Queue a request whose event channel was attached by an external
+    /// submit path — the pool worker ([`super::router::ServePool::submit`]
+    /// created the handle before the request crossed into this worker) or
+    /// an HTTP frontend feeding requests through a channel
+    /// ([`crate::server::ChannelSubmitter`]).
+    pub fn enqueue(&mut self, req: Request) {
         if let Some(t) = &self.trace {
             if t.record_queued && t.sink.sampled(req.id) {
                 t.sink.begin_request(req.id, req.prompt.len(), req.priority);
@@ -264,9 +267,16 @@ impl<'be> Engine<'be> {
                 .count(Counter::PromptTokens, req.prompt.len() as u64);
 
             // first generated token comes from the last prompt position
-            // (chunk_plan guarantees remainder >= 1, so last_logits is set)
+            // (chunk_plan guarantees remainder >= 1, so last_logits is set).
+            // Default (pure greedy) params route through raw argmax inside
+            // the sampler — bit-exact with the pre-sampler engine.
             let vocab = self.be.cfg().vocab_size;
-            let first = argmax(&last_logits.expect("remainder >= 1")[..vocab]);
+            let mut sampler = Sampler::new(req.sampling.clone());
+            sampler.observe_context(&req.prompt);
+            let first =
+                sampler.sample(&last_logits.expect("remainder >= 1")[..vocab], 0);
+            sampler.observe(first);
+            let stream = OutStream::new(&req.sampling);
             let now = Instant::now();
             let mut infl = InFlight {
                 next_token: 0,
@@ -275,6 +285,8 @@ impl<'be> Engine<'be> {
                 submitted,
                 first_token_at: None,
                 last_token_at: None,
+                sampler,
+                stream,
                 req,
             };
             infl.next_token = first;
@@ -282,7 +294,7 @@ impl<'be> Engine<'be> {
             infl.last_token_at = Some(now);
             infl.generated.push(first);
             infl.req.emit(Event::FirstToken);
-            infl.req.emit(Event::Token { tok: first, index: 0 });
+            let stopped_seq = infl.stream.push(&infl.req, first);
             self.metrics.note_ttft(submitted.elapsed().as_secs_f64());
             self.metrics.count(Counter::TokensGenerated, 1);
             if let Some(t) = &self.trace {
@@ -291,7 +303,9 @@ impl<'be> Engine<'be> {
                 }
             }
             // finished immediately?
-            if infl.req.stop_token == Some(first) {
+            if stopped_seq {
+                self.retire(infl, FinishReason::StopSequence);
+            } else if infl.req.stop_token == Some(first) {
                 self.retire(infl, FinishReason::StopToken);
             } else if infl.generated.len() >= infl.req.max_new_tokens {
                 self.retire(infl, FinishReason::Length);
@@ -302,7 +316,12 @@ impl<'be> Engine<'be> {
         Ok(())
     }
 
-    fn retire(&mut self, infl: InFlight, reason: FinishReason) {
+    fn retire(&mut self, mut infl: InFlight, reason: FinishReason) {
+        // a stop-sequence match withholds the matched tail from the
+        // client; any other finish releases held-back partial-match tokens
+        if reason != FinishReason::StopSequence {
+            infl.stream.flush(&infl.req);
+        }
         // session entries capture the end-of-turn state before the slot is
         // recycled.  The state has consumed prompt + generated[..n-1]: the
         // last sampled token was never fed back, so it is not part of the
@@ -319,10 +338,15 @@ impl<'be> Engine<'be> {
         self.metrics.count(Counter::RequestsCompleted, 1);
         self.metrics
             .note_latency(infl.submitted.elapsed().as_secs_f64());
+        // client-visible output: full `generated` unless a stop sequence
+        // withheld a tail (session-cache accounting above already used the
+        // untruncated vector — the state really did consume those tokens)
+        let mut generated = infl.generated;
+        generated.truncate(infl.stream.visible());
         let fin = FinishedRequest {
             id: infl.req.id,
             prompt_len: infl.req.prompt.len(),
-            generated: infl.generated,
+            generated,
             finish_reason: reason,
             ttft_s: infl
                 .first_token_at
@@ -445,17 +469,19 @@ impl<'be> Engine<'be> {
                 let now = Instant::now();
                 for (b, &ai) in members.iter().enumerate() {
                     let logits = &out.logits[b * vocab..(b + 1) * vocab];
-                    let tok = argmax(logits);
                     let infl = &mut self.active[ai];
+                    let tok = infl.sampler.sample(logits, infl.generated.len());
+                    infl.sampler.observe(tok);
                     infl.next_token = tok;
                     infl.generated.push(tok);
                     if let Some(prev) = infl.last_token_at.replace(now) {
                         self.metrics.note_tpot((now - prev).as_secs_f64());
                     }
-                    infl.req
-                        .emit(Event::Token { tok, index: infl.generated.len() - 1 });
+                    let stopped_seq = infl.stream.push(&infl.req, tok);
                     self.metrics.count(Counter::TokensGenerated, 1);
-                    if infl.req.stop_token == Some(tok) {
+                    if stopped_seq {
+                        to_retire.push((ai, FinishReason::StopSequence));
+                    } else if infl.req.stop_token == Some(tok) {
                         to_retire.push((ai, FinishReason::StopToken));
                     } else if infl.generated.len() >= infl.req.max_new_tokens {
                         to_retire.push((ai, FinishReason::Length));
@@ -722,6 +748,80 @@ mod tests {
         assert_eq!(got.last(), Some(&stop));
         assert_eq!(got.len(), 3, "must halt at the stop token, got {got:?}");
         assert_eq!(eng.finished[0].finish_reason, FinishReason::StopToken);
+    }
+
+    #[test]
+    fn sampled_stream_same_seed_identical_different_seed_diverges() {
+        use super::super::sampler::SamplingParams;
+        // same seed + params => identical streams (and batching-invariant,
+        // because draws are position-keyed); different seeds diverge
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let run = |seed: u64, max_active: usize| -> Vec<(u64, Vec<u32>)> {
+            let mut eng =
+                Engine::new(&be, EngineConfig { max_active, greedy_chunking: true });
+            for r in requests(vocab, 8) {
+                let sp = SamplingParams {
+                    temperature: 1.0,
+                    seed: seed.wrapping_add(r.id),
+                    ..SamplingParams::default()
+                };
+                eng.submit(r.with_sampling(sp));
+            }
+            eng.run().unwrap();
+            let mut got: Vec<(u64, Vec<u32>)> =
+                eng.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+            got.sort();
+            got
+        };
+        let a = run(500, 8);
+        assert_eq!(a, run(500, 8), "same seed must reproduce the stream");
+        assert_eq!(a, run(500, 1), "sampling must be batching-invariant");
+        assert_ne!(a, run(501, 8), "different seeds must diverge");
+    }
+
+    #[test]
+    fn stop_sequence_halts_engine_and_withholds_match() {
+        use super::super::sampler::SamplingParams;
+        // discover the greedy trace, then stop on the rendered text of its
+        // 2nd+3rd tokens — a sequence spanning a token boundary
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..33).map(|j| ((j * 13) % vocab) as u32).collect();
+        let mut probe = Engine::new(&be, EngineConfig::default());
+        probe.submit(Request::new(0, prompt.clone(), 8, "fp32"));
+        probe.run().unwrap();
+        let gen = probe.finished[0].generated.clone();
+        let stop = format!("{} {}", gen[1], gen[2]);
+        let mut eng = Engine::new(&be, EngineConfig::default());
+        let sp = SamplingParams {
+            stop_sequences: vec![stop.clone()],
+            ..SamplingParams::default()
+        };
+        let h = eng.submit(Request::new(0, prompt, 8, "fp32").with_sampling(sp));
+        eng.run().unwrap();
+        let fin = &eng.finished[0];
+        assert_eq!(fin.finish_reason, FinishReason::StopSequence);
+        // the visible output is a strict prefix of the greedy trace whose
+        // rendering does not contain the stop text (the match — wherever
+        // the substring first lands — is withheld)
+        assert!(fin.generated.len() < gen.len());
+        assert_eq!(fin.generated, gen[..fin.generated.len()]);
+        let rendered = fin
+            .generated
+            .iter()
+            .map(|t| t.to_string())
+            .collect::<Vec<_>>()
+            .join(" ");
+        assert!(
+            !rendered.contains(&stop),
+            "visible stream {rendered:?} must not contain stop {stop:?}"
+        );
+        // the streamed events agree with the truncated batch output
+        let (first, toks, fin_ev) = drain(&h);
+        assert!(first);
+        assert_eq!(toks, fin.generated);
+        assert_eq!(fin_ev.unwrap().finish_reason, FinishReason::StopSequence);
     }
 
     /// Drain a handle's buffered events into (saw_first, tokens, terminal).

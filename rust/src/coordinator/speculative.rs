@@ -60,8 +60,11 @@ use super::admission::{finish_unadmitted, seed_from_cache, AdmissionSeed};
 use super::batcher::{full_bucket_plan, smallest_covering};
 use super::metrics::Metrics;
 use super::request::{
-    argmax, insert_by_priority, Event, FinishReason, FinishedRequest, Request, SpecStats,
+    insert_by_priority, Event, FinishReason, FinishedRequest, Request, SpecStats,
     SubmitHandle,
+};
+use super::sampler::{
+    keyed_uniform, OutStream, Sampler, SALT_ACCEPT, SALT_RESAMPLE, SALT_SAMPLE,
 };
 use super::state::{SnapshotId, StatePool};
 
@@ -140,6 +143,11 @@ struct SpecInFlight {
     done: bool,
     /// why `done` (set by the round that finished the request)
     reason: FinishReason,
+    /// per-request sampling state over *committed* tokens (draft rounds
+    /// work on scratch clones; only verifier-approved tokens land here)
+    sampler: Sampler,
+    /// stop-sequence-aware token emitter
+    stream: OutStream,
 }
 
 /// The speculative serving engine: drives a draft-k / verify-1 loop per
@@ -280,9 +288,10 @@ impl<'be> SpecEngine<'be> {
         handle
     }
 
-    /// Queue a request whose event channel is already attached (the pool
-    /// worker path).
-    pub(crate) fn enqueue(&mut self, req: Request) {
+    /// Queue a request whose event channel was attached by an external
+    /// submit path (the pool worker, or an HTTP frontend feeding requests
+    /// through a channel — [`crate::server::ChannelSubmitter`]).
+    pub fn enqueue(&mut self, req: Request) {
         if let Some(t) = &self.trace {
             if t.record_queued && t.sink.sampled(req.id) {
                 t.sink.begin_request(req.id, req.prompt.len(), req.priority);
@@ -432,7 +441,12 @@ impl<'be> SpecEngine<'be> {
             self.metrics
                 .count(Counter::PromptTokens, req.prompt.len() as u64);
             let frontier = *req.prompt.last().unwrap();
+            let mut sampler = Sampler::new(req.sampling.clone());
+            sampler.observe_context(&req.prompt);
+            let stream = OutStream::new(&req.sampling);
             self.active.push(SpecInFlight {
+                sampler,
+                stream,
                 req,
                 draft_slot,
                 verify_slot,
@@ -521,19 +535,39 @@ impl<'be> SpecEngine<'be> {
         // remaining-1 (k = 0 near the budget: a pure verify round)
         let remaining = max_new.saturating_sub(gen_len);
         let k = self.cfg.draft_k.min(remaining.saturating_sub(1));
+        let greedy = self.active[ai].sampler.params().is_greedy();
+        let seed = self.active[ai].sampler.params().seed;
 
-        // --- draft: k greedy single-token steps on the quantized variant,
+        // --- draft: k single-token steps on the quantized variant,
         // checkpointing the state before every step after the first
-        // (snaps[i] = drafter state at committed position round_start+i+1)
+        // (snaps[i] = drafter state at committed position round_start+i+1).
+        // Sampling runs on a *scratch clone* of the committed sampler (the
+        // round's drafts feed its penalty state, but only accepted tokens
+        // feed the real one) using the position-keyed uniforms — the same
+        // draw the plain engine would use at the same position, which is
+        // what makes a same-backend fp32 drafter propose exactly the plain
+        // engine's tokens.
         let mut drafts: Vec<u32> = Vec::with_capacity(k);
+        // draft distributions q_i, kept for the rejection-sampling rule
+        let mut qdists: Vec<Vec<f32>> = Vec::new();
         let mut snaps: Vec<SnapshotId> = Vec::with_capacity(k.saturating_sub(1));
+        let mut round_sampler = self.active[ai].sampler.clone();
         let mut inp = frontier;
         for i in 0..k {
             if i > 0 {
                 snaps.push(self.pool.snapshot(dslot));
             }
             let logits = self.draft_step(dslot, inp)?;
-            let d = argmax(&logits[..vocab]);
+            let d = if greedy {
+                round_sampler.sample(&logits[..vocab], gen_len + i)
+            } else {
+                let q = round_sampler.dist(&logits[..vocab]);
+                let d =
+                    Sampler::pick(&q, keyed_uniform(seed, gen_len + i, SALT_SAMPLE));
+                qdists.push(q);
+                d
+            };
+            round_sampler.observe(d);
             drafts.push(d);
             inp = d;
         }
@@ -560,11 +594,67 @@ impl<'be> SpecEngine<'be> {
         self.metrics.note_prefill_call(call_t0.elapsed().as_secs_f64());
         self.metrics.count(Counter::VerifyCalls, 1);
 
-        // verify[i] = verifier's token after consuming frontier + drafts[..i]
-        let verify: Vec<u32> = (0..=k)
-            .map(|i| argmax(&out.logits[(debt_len + i) * vocab..(debt_len + i + 1) * vocab]))
-            .collect();
-        let (m, bonus) = accept_drafts(&drafts, &verify);
+        // row(i) = verifier logits after consuming frontier + drafts[..i]
+        let row = |i: usize| &out.logits[(debt_len + i) * vocab..(debt_len + i + 1) * vocab];
+
+        // --- acceptance.  Greedy: the classic token-equality prefix rule
+        // ([`accept_drafts`], bit-exact with plain greedy decode).
+        // Sampled: rejection sampling — accept draft d_i with probability
+        // min(1, p_i[d]/q_i[d]) against the verifier's distribution p_i;
+        // on reject, resample from the residual max(p - q, 0).  The
+        // committed marginals equal plain sampling from p (the
+        // speculative-decoding losslessness theorem), so sampled
+        // speculation changes throughput, not the distribution.
+        let (m, bonus) = if greedy {
+            // a scratch verifier-side sampler tracks penalty state along
+            // the draft prefix so processed logits match what the plain
+            // engine would see at each position
+            let mut vs = self.active[ai].sampler.clone();
+            let mut verify: Vec<u32> = Vec::with_capacity(k + 1);
+            for i in 0..=k {
+                verify.push(vs.sample(row(i), gen_len + i));
+                if i < k {
+                    vs.observe(drafts[i]);
+                }
+            }
+            accept_drafts(&drafts, &verify)
+        } else {
+            let mut vs = self.active[ai].sampler.clone();
+            let mut verdict: Option<(usize, u32)> = None;
+            for i in 0..k {
+                let p = vs.dist(row(i));
+                let d = drafts[i] as usize;
+                let q_d = qdists[i][d] as f64;
+                let ratio = if q_d > 0.0 { ((p[d] as f64) / q_d).min(1.0) } else { 1.0 };
+                if keyed_uniform(seed, gen_len + i, SALT_ACCEPT) < ratio {
+                    vs.observe(drafts[i]);
+                    continue;
+                }
+                // rejected: resample from the residual distribution
+                let adj: Vec<f32> = p
+                    .iter()
+                    .zip(&qdists[i])
+                    .map(|(&pv, &qv)| (pv - qv).max(0.0))
+                    .collect();
+                let u = keyed_uniform(seed, gen_len + i, SALT_RESAMPLE);
+                let t = if adj.iter().any(|&v| v > 0.0) {
+                    Sampler::pick(&adj, u)
+                } else {
+                    // p == q exactly (fp32 self-drafting): residual is
+                    // empty, fall back to the verifier's distribution
+                    Sampler::pick(&p, u)
+                };
+                verdict = Some((i, t));
+                break;
+            }
+            verdict.unwrap_or_else(|| {
+                // every draft accepted: the bonus token is a plain sample
+                // from the verifier's next-position distribution, keyed
+                // exactly as the plain engine would key position gen_len+k
+                let p = vs.dist(row(k));
+                (k, Sampler::pick(&p, keyed_uniform(seed, gen_len + k, SALT_SAMPLE)))
+            })
+        };
 
         // --- commit the accepted prefix + the verifier's bonus token.
         // This consolidation point is where the per-request stream advances:
@@ -590,8 +680,14 @@ impl<'be> SpecEngine<'be> {
             }
             for &t in drafts[..m].iter().chain(std::iter::once(&bonus)) {
                 a.generated.push(t);
+                a.sampler.observe(t);
                 n_committed += 1;
-                a.req.emit(Event::Token { tok: t, index: a.generated.len() - 1 });
+                let stopped_seq = a.stream.push(&a.req, t);
+                if stopped_seq {
+                    done = true;
+                    a.reason = FinishReason::StopSequence;
+                    break;
+                }
                 if stop == Some(t) {
                     done = true;
                     a.reason = FinishReason::StopToken;
@@ -681,7 +777,12 @@ impl<'be> SpecEngine<'be> {
         Ok(())
     }
 
-    fn retire(&mut self, infl: SpecInFlight, reason: FinishReason) {
+    fn retire(&mut self, mut infl: SpecInFlight, reason: FinishReason) {
+        // a stop-sequence match withholds the matched tail; any other
+        // finish releases held-back partial-match tokens
+        if reason != FinishReason::StopSequence {
+            infl.stream.flush(&infl.req);
+        }
         // session entry: the verifier slot's exact state covers the first
         // `consumed` tokens of the transcript (un-consolidated debt and
         // the frontier stay outside it — a resumed turn prefills them as
@@ -711,10 +812,15 @@ impl<'be> SpecEngine<'be> {
             self.metrics
                 .note_acceptance(infl.accepted as f64 / infl.drafted as f64);
         }
+        // client-visible output: full `generated` unless a stop sequence
+        // withheld a tail (the session entry above already used the
+        // untruncated transcript — the verifier really consumed it)
+        let mut generated = infl.generated;
+        generated.truncate(infl.stream.visible());
         let fin = FinishedRequest {
             id: infl.req.id,
             prompt_len: infl.req.prompt.len(),
-            generated: infl.generated,
+            generated,
             finish_reason: reason,
             ttft_s: infl
                 .first_token_at
@@ -811,6 +917,8 @@ impl<'be> SpecEngine<'be> {
 mod tests {
     use super::*;
     use crate::backend::NativeBackend;
+    use crate::coordinator::request::argmax;
+    use crate::coordinator::sampler::SamplingParams;
     use crate::coordinator::scheduler::{Engine, EngineConfig};
 
     #[test]
@@ -1345,5 +1453,139 @@ mod tests {
         assert!(
             matches!(h.wait_finished(), Some(f) if f.finish_reason == FinishReason::Deadline)
         );
+    }
+
+    fn sampled_reqs(vocab: usize) -> Vec<Request> {
+        let lens = [5usize, 11, 21];
+        lens.iter()
+            .enumerate()
+            .map(|(i, &plen)| {
+                let prompt: Vec<u32> =
+                    (0..plen).map(|j| ((i * 131 + j * 17) % vocab) as u32).collect();
+                Request::new(i as u64, prompt, 8, "fp32").with_sampling(SamplingParams {
+                    temperature: 1.5,
+                    seed: 1000 + i as u64,
+                    ..SamplingParams::default()
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sampled_speculative_is_lossless_vs_plain_sampled_fp32() {
+        // the rejection-sampling regression: with an fp32 self-drafting
+        // SpecEngine, the drafter's decode trajectory is bit-identical to
+        // the plain engine's, so every position's draft distribution q_i
+        // equals the plain sampling distribution exactly and the
+        // position-keyed draw proposes exactly the plain engine's token.
+        // Acceptance ratios p_i[d]/q_i[d] then sit at 1 - O(eps) (the
+        // verify row comes from the chunk-exact prefill path, the draft
+        // row from the decode path — same math, different FP association),
+        // so the sampled speculative output matches plain sampled decoding
+        // token-for-token.  reseed_drafter stays off: re-seeding copies
+        // the verifier's prefill-path state into the drafter, which is
+        // correct but not bit-identical to the plain decode trajectory.
+        let be = micro();
+        let vocab = be.cfg().vocab_size;
+        let mut base =
+            Engine::new(&be, EngineConfig { max_active: 2, greedy_chunking: true });
+        for r in sampled_reqs(vocab) {
+            base.submit(r);
+        }
+        base.run().unwrap();
+        let mut want: Vec<(u64, Vec<u32>)> =
+            base.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+        want.sort();
+        assert!(want.iter().all(|(_, g)| g.len() == 8));
+
+        for k in [1usize, 2, 4] {
+            let mut spec = SpecEngine::new(
+                &be,
+                SpecConfig {
+                    draft_k: k,
+                    draft_variant: "fp32".into(),
+                    verify_variant: "fp32".into(),
+                    max_active: 2,
+                    reseed_drafter: false,
+                },
+            );
+            for r in sampled_reqs(vocab) {
+                spec.submit(r);
+            }
+            spec.run().unwrap();
+            let mut got: Vec<(u64, Vec<u32>)> =
+                spec.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+            got.sort();
+            assert_eq!(
+                want, got,
+                "k={k}: sampled speculative output diverged from plain sampled fp32"
+            );
+        }
+    }
+
+    #[test]
+    fn sampled_spec_reproducible_same_seed_diverges_different_seed() {
+        // quantized drafter + fp32 verifier under sampling: rejections
+        // really happen (q != p), but the run is fully deterministic for a
+        // fixed seed and diverges across seeds
+        let be = micro();
+        let vocab = be.cfg().vocab_size;
+        let run = |seed_base: u64| -> Vec<(u64, Vec<u32>)> {
+            let mut spec = SpecEngine::new(
+                &be,
+                SpecConfig { draft_k: 3, max_active: 2, ..SpecConfig::default() },
+            );
+            for (i, r) in sampled_reqs(vocab).into_iter().enumerate() {
+                let mut sp = r.sampling.clone();
+                sp.seed = seed_base + i as u64;
+                spec.submit(r.with_sampling(sp));
+            }
+            spec.run().unwrap();
+            let mut got: Vec<(u64, Vec<u32>)> =
+                spec.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+            got.sort();
+            got
+        };
+        let a = run(7000);
+        assert_eq!(a, run(7000), "same seed must reproduce the sampled spec run");
+        assert_ne!(a, run(7500), "different seeds must diverge");
+    }
+
+    #[test]
+    fn stop_sequence_halts_speculative_engine() {
+        // boundary-spanning stop sequence on the spec engine: discover the
+        // greedy trace, stop on the rendered 2nd+3rd tokens
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..33).map(|j| ((j * 13) % vocab) as u32).collect();
+        let mut base =
+            Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true });
+        base.submit(Request::new(0, prompt.clone(), 8, "fp32"));
+        base.run().unwrap();
+        let gen = base.finished[0].generated.clone();
+        let stop = format!("{} {}", gen[1], gen[2]);
+
+        let mut spec = SpecEngine::new(
+            &be,
+            SpecConfig { draft_k: 4, max_active: 1, ..SpecConfig::default() },
+        );
+        let sp = SamplingParams {
+            stop_sequences: vec![stop.clone()],
+            ..SamplingParams::default()
+        };
+        spec.submit(Request::new(0, prompt, 8, "fp32").with_sampling(sp));
+        spec.run().unwrap();
+        let fin = &spec.finished[0];
+        assert_eq!(fin.finish_reason, FinishReason::StopSequence);
+        assert!(fin.generated.len() < gen.len());
+        assert_eq!(fin.generated, gen[..fin.generated.len()]);
+        let rendered = fin
+            .generated
+            .iter()
+            .map(|t| t.to_string())
+            .collect::<Vec<_>>()
+            .join(" ");
+        assert!(!rendered.contains(&stop));
+        assert_eq!(spec.n_active(), 0, "both slots freed");
     }
 }

@@ -66,6 +66,7 @@ pub mod quant;
 pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod statecache;
 pub mod util;

@@ -52,6 +52,9 @@ fn main() -> Result<()> {
                  \n           --state-cache-mb N (0 = off; shared SSM prefix/session cache)\
                  \n           --stream (print tokens as they are produced)\
                  \n           --deadline-ms N (per-request completion deadline)\
+                 \n           --http-addr HOST:PORT (OpenAI-style /v1/completions + SSE frontend;\
+                 \n                                  port 0 picks a free port, printed on startup)\
+                 \n           --http-requests N (serve N completions then exit; 0 = run until killed)\
                  \n           --metrics-addr HOST:PORT (live Prometheus /metrics endpoint)\
                  \n           --metrics-json PATH (write the final metrics snapshot as JSON)\
                  \n           --trace-out PATH (Chrome trace_event JSON of request spans)\
@@ -97,6 +100,11 @@ fn backend_kind(args: &Args) -> Result<BackendKind> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    // --http-addr switches from the synthetic trace to the HTTP frontend
+    // (requests come from the network instead of the corpus sampler)
+    if args.get("http-addr").is_some() {
+        return serve_over_http(args);
+    }
     let kind = backend_kind(args)?;
     let be = backend::load(kind)?;
     let n_requests = args.usize_or("requests", 8);
@@ -390,17 +398,7 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(c) = &cache {
         println!("state cache ({cache_mb} MiB): {}", c.stats().summary());
     }
-    // finish-reason accounting (Length/StopToken are the normal outcomes;
-    // Cancelled/Deadline show the streaming lifecycle at work)
-    let count = |r: FinishReason| finished.iter().filter(|f| f.finish_reason == r).count();
-    println!(
-        "finish_reasons: length={} stop={} cancelled={} deadline={} worker_died={}",
-        count(FinishReason::Length),
-        count(FinishReason::StopToken),
-        count(FinishReason::Cancelled),
-        count(FinishReason::Deadline),
-        count(FinishReason::WorkerDied),
-    );
+    print_finish_reasons(&finished);
     for f in finished.iter().take(3) {
         println!(
             "  req {}: {} prompt toks -> {:?}...",
@@ -426,6 +424,236 @@ fn serve(args: &Args) -> Result<()> {
             sink.len(),
             sink.dropped()
         );
+    }
+    if let Some(path) = metrics_json {
+        std::fs::write(path, json::to_string(&final_metrics.to_json()))?;
+        println!("metrics json -> {path}");
+    }
+    Ok(())
+}
+
+/// Finish-reason accounting (Length/StopToken/StopSequence are the normal
+/// outcomes; Cancelled/Deadline show the streaming lifecycle at work).
+fn print_finish_reasons(finished: &[fastmamba::coordinator::FinishedRequest]) {
+    let count = |r: FinishReason| finished.iter().filter(|f| f.finish_reason == r).count();
+    println!(
+        "finish_reasons: length={} stop={} stop_sequence={} cancelled={} deadline={} \
+         worker_died={}",
+        count(FinishReason::Length),
+        count(FinishReason::StopToken),
+        count(FinishReason::StopSequence),
+        count(FinishReason::Cancelled),
+        count(FinishReason::Deadline),
+        count(FinishReason::WorkerDied),
+    );
+}
+
+/// `serve --http-addr`: the OpenAI-style HTTP/SSE frontend over whichever
+/// serving topology the other flags select (single/pool x
+/// plain/speculative).  Requests arrive over the network as
+/// `POST /v1/completions` bodies instead of the synthetic trace; sampling
+/// parameters, session ids, deadlines, and priorities ride in on each
+/// body.  Telemetry, the state cache, and span traces thread through
+/// exactly as in trace-driven serving.
+fn serve_over_http(args: &Args) -> Result<()> {
+    use fastmamba::server::{serve_http, ApiConfig, ChannelSubmitter, HttpConfig};
+    use std::sync::mpsc;
+
+    let kind = backend_kind(args)?;
+    let http_addr = args.get("http-addr").expect("caller checked --http-addr");
+    let http_requests = args.usize_or("http-requests", 0);
+    let variant = args.get_or("variant", "fp32");
+    let speculate = args.usize_or("speculate", 0);
+    let workers = args.usize_or("workers", 1);
+    let max_active = args.usize_or("max-active", if speculate > 0 { 8 } else { 64 });
+    let cache_mb = args.usize_or("state-cache-mb", 0);
+    let cache: Option<Arc<StateCache>> =
+        (cache_mb > 0).then(|| Arc::new(StateCache::new(CacheConfig::with_mb(cache_mb))));
+    let metrics_addr = args.get("metrics-addr");
+    let metrics_json = args.get("metrics-json");
+    let trace_out = args.get("trace-out");
+    let trace_sample = args.usize_or("trace-sample", 1).max(1);
+    let hub: Option<Arc<TelemetryHub>> =
+        metrics_addr.is_some().then(|| Arc::new(TelemetryHub::new()));
+    let trace_sink: Option<Arc<TraceSink>> =
+        trace_out.is_some().then(|| Arc::new(TraceSink::new(trace_sample as u64)));
+    let mut metrics_server = match (&hub, metrics_addr) {
+        (Some(h), Some(addr)) => {
+            let srv = serve_metrics(addr, Arc::clone(h))?;
+            println!("metrics: http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        _ => None,
+    };
+    if let (Some(h), Some(c)) = (&hub, &cache) {
+        h.attach_cache(Arc::clone(c));
+    }
+
+    // probe the backend once for the API surface (vocab + served variants)
+    let be = backend::load(kind)?;
+    let http_cfg = HttpConfig::new(ApiConfig {
+        variant: variant.clone(),
+        variants: be.variants(),
+        vocab_size: be.cfg().vocab_size,
+        default_max_tokens: args.usize_or("max-new", 16),
+    });
+    println!(
+        "backend: {} ({}; prefill buckets {:?}, decode batches {:?})",
+        be.name(),
+        be.cfg().name,
+        be.prefill_buckets(),
+        be.decode_batches()
+    );
+
+    let (finished, final_metrics) = if workers > 1 {
+        // worker pool: the frontend submits straight into the pool ingress;
+        // workers emit events in real time from their own threads
+        if speculate > 0 && args.get("draft-backend").is_some() {
+            eprintln!(
+                "note: --draft-backend is ignored with --workers > 1 \
+                 (each worker drafts on its own backend)"
+            );
+        }
+        drop(be);
+        let pool = serve_pool(
+            move || backend::load(kind),
+            PoolConfig {
+                engine: EngineConfig { max_active, greedy_chunking: true },
+                n_workers: workers,
+                spec: (speculate > 0).then(|| SpecConfig {
+                    draft_k: speculate,
+                    draft_variant: args.get_or("draft-variant", "fastmamba"),
+                    verify_variant: variant.clone(),
+                    max_active,
+                    reseed_drafter: true,
+                }),
+                cache: cache.clone(),
+                hub: hub.clone(),
+                trace: trace_sink.clone(),
+            },
+        );
+        let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
+        let mut server = serve_http(http_addr, submitter, http_cfg)?;
+        println!("http: listening on {}", server.addr());
+        let mut finished = Vec::new();
+        loop {
+            match pool.results.recv_timeout(Duration::from_millis(200)) {
+                Ok(f) => {
+                    finished.push(f);
+                    if http_requests > 0 && finished.len() >= http_requests {
+                        break;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        server.shutdown();
+        let report = pool.finish()?;
+        for e in &report.errors {
+            eprintln!("worker error: {e}");
+        }
+        println!("{}", report.merged.summary());
+        println!(
+            "pool: workers={} assignments={:?} load_peak={:?} (capacity {}/worker)",
+            workers, report.assignments, report.load_peak, report.capacity_per_worker
+        );
+        (finished, report.merged)
+    } else {
+        // single engine: the frontend feeds a channel; this thread pumps it
+        // into the engine between steps (the engines are synchronous, so the
+        // serve loop is the event loop)
+        let (tx, rx) = mpsc::channel::<Request>();
+        let submitter = Arc::new(ChannelSubmitter::new(tx));
+        let mut server = serve_http(http_addr, submitter, http_cfg)?;
+        println!("http: listening on {}", server.addr());
+        if speculate > 0 {
+            let drafter_box: Option<Box<dyn InferenceBackend>> =
+                match args.get_or("draft-backend", "native").as_str() {
+                    "pjrt" if be.name() == "pjrt" => None,
+                    "pjrt" => Some(backend::load(BackendKind::Pjrt)?),
+                    "native" if be.name() == "native" => None,
+                    "native" => Some(Box::new(NativeBackend::load_default()?)),
+                    other => bail!("unknown draft backend {other} (expected native|pjrt)"),
+                };
+            let drafter: &dyn InferenceBackend =
+                drafter_box.as_deref().unwrap_or(be.as_ref());
+            let mut engine = SpecEngine::with_drafter(
+                drafter,
+                be.as_ref(),
+                SpecConfig {
+                    draft_k: speculate,
+                    draft_variant: args.get_or("draft-variant", "fastmamba"),
+                    verify_variant: variant.clone(),
+                    max_active,
+                    reseed_drafter: true,
+                },
+            );
+            if let Some(c) = &cache {
+                engine = engine.with_cache(Arc::clone(c));
+            }
+            if let Some(h) = &hub {
+                engine = engine.with_telemetry(h.register("0"));
+            }
+            if let Some(s) = &trace_sink {
+                engine = engine.with_trace(Arc::clone(s), 0);
+            }
+            engine.metrics.start();
+            loop {
+                while let Ok(req) = rx.try_recv() {
+                    engine.enqueue(req);
+                }
+                if engine.n_pending() > 0 || engine.n_active() > 0 {
+                    engine.step()?;
+                } else if http_requests > 0 && engine.finished.len() >= http_requests {
+                    break;
+                } else {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            engine.metrics.stop();
+            println!("{}", engine.metrics.summary());
+            (engine.finished, engine.metrics)
+        } else {
+            let mut engine =
+                Engine::new(be.as_ref(), EngineConfig { max_active, greedy_chunking: true });
+            if let Some(c) = &cache {
+                engine = engine.with_cache(Arc::clone(c));
+            }
+            if let Some(h) = &hub {
+                engine = engine.with_telemetry(h.register("0"));
+            }
+            if let Some(s) = &trace_sink {
+                engine = engine.with_trace(Arc::clone(s), 0);
+            }
+            engine.metrics.start();
+            loop {
+                while let Ok(req) = rx.try_recv() {
+                    engine.enqueue(req);
+                }
+                if engine.n_pending() > 0 || engine.n_active() > 0 {
+                    engine.step()?;
+                } else if http_requests > 0 && engine.finished.len() >= http_requests {
+                    break;
+                } else {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            engine.metrics.stop();
+            println!("{}", engine.metrics.summary());
+            (engine.finished, engine.metrics)
+        }
+    };
+    if let Some(c) = &cache {
+        println!("state cache ({cache_mb} MiB): {}", c.stats().summary());
+    }
+    print_finish_reasons(&finished);
+    if let Some(srv) = metrics_server.as_mut() {
+        srv.shutdown();
+    }
+    if let (Some(sink), Some(path)) = (&trace_sink, trace_out) {
+        sink.write(path)?;
+        println!("trace: {} events -> {path} ({} dropped)", sink.len(), sink.dropped());
     }
     if let Some(path) = metrics_json {
         std::fs::write(path, json::to_string(&final_metrics.to_json()))?;

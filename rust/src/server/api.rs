@@ -1,0 +1,421 @@
+//! OpenAI-style completion API: request-body → [`Request`] mapping and
+//! JSON rendering for both response shapes (non-streaming completion,
+//! SSE chunks).
+//!
+//! The crate serves token ids, not text (there is no tokenizer on the
+//! serving path), so `prompt` is an array of integer token ids and
+//! `choices[0].text` renders tokens as decimal ids joined by single
+//! spaces — the same canonical rendering the string stop-sequence matcher
+//! ([`crate::coordinator::sampler::StopMatcher`]) runs on, which keeps
+//! `stop` semantics consistent between the API surface and the engine.
+
+use std::time::Duration;
+
+use crate::coordinator::request::{Event, FinishReason, FinishedRequest, Request};
+use crate::coordinator::sampler::SamplingParams;
+use crate::util::json::{self, num, obj, s, Json};
+
+/// Server-side knobs the API mapping needs (derived from the backend).
+#[derive(Debug, Clone)]
+pub struct ApiConfig {
+    /// default model variant when the body omits `model`
+    pub variant: String,
+    /// every variant the backend serves (the `model` whitelist)
+    pub variants: Vec<String>,
+    pub vocab_size: usize,
+    /// `max_tokens` default when the body omits it
+    pub default_max_tokens: usize,
+}
+
+/// A parsed `POST /v1/completions` body.
+#[derive(Debug)]
+pub struct ParsedCompletion {
+    pub req: Request,
+    pub stream: bool,
+}
+
+fn opt_f32(body: &Json, key: &str) -> Result<Option<f32>, String> {
+    match body.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(|n| Some(n as f32))
+            .ok_or_else(|| format!("`{key}` must be a number")),
+    }
+}
+
+fn opt_u64(body: &Json, key: &str) -> Result<Option<u64>, String> {
+    match body.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => match v.as_f64() {
+            Some(n) if n >= 0.0 && n.fract() == 0.0 => Ok(Some(n as u64)),
+            _ => Err(format!("`{key}` must be a non-negative integer")),
+        },
+    }
+}
+
+/// Map a completion request body onto a [`Request`] with id `id`.
+/// Errors are client errors (HTTP 400) phrased for the response body.
+pub fn parse_completion(
+    body: &[u8],
+    id: u64,
+    cfg: &ApiConfig,
+) -> Result<ParsedCompletion, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let v = Json::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+    if !matches!(v, Json::Obj(_)) {
+        return Err("body must be a JSON object".into());
+    }
+
+    let prompt_json = v.get("prompt").ok_or("missing `prompt` (array of token ids)")?;
+    let prompt_arr = prompt_json
+        .as_arr()
+        .ok_or("`prompt` must be an array of integer token ids")?;
+    if prompt_arr.is_empty() {
+        return Err("`prompt` must not be empty".into());
+    }
+    let mut prompt = Vec::with_capacity(prompt_arr.len());
+    for t in prompt_arr {
+        let n = t.as_f64().ok_or("`prompt` entries must be numbers")?;
+        if n < 0.0 || n.fract() != 0.0 || n >= cfg.vocab_size as f64 {
+            return Err(format!(
+                "prompt token {n} out of range (vocab size {})",
+                cfg.vocab_size
+            ));
+        }
+        prompt.push(n as u32);
+    }
+
+    let variant = match v.get("model") {
+        None | Some(Json::Null) => cfg.variant.clone(),
+        Some(m) => {
+            let name = m.as_str().ok_or("`model` must be a string")?;
+            if !cfg.variants.iter().any(|v| v == name) {
+                return Err(format!(
+                    "unknown model {name:?}; served variants: {}",
+                    cfg.variants.join(", ")
+                ));
+            }
+            name.to_string()
+        }
+    };
+
+    let max_tokens = match opt_u64(&v, "max_tokens")? {
+        None => cfg.default_max_tokens,
+        Some(0) => return Err("`max_tokens` must be >= 1".into()),
+        Some(n) => n as usize,
+    };
+
+    let mut sampling = SamplingParams::default();
+    if let Some(t) = opt_f32(&v, "temperature")? {
+        if !(0.0..=100.0).contains(&t) {
+            return Err("`temperature` must be in [0, 100]".into());
+        }
+        sampling.temperature = t;
+    }
+    if let Some(k) = opt_u64(&v, "top_k")? {
+        sampling.top_k = k as usize;
+    }
+    if let Some(p) = opt_f32(&v, "top_p")? {
+        if !(0.0..=1.0).contains(&p) {
+            return Err("`top_p` must be in [0, 1]".into());
+        }
+        sampling.top_p = p;
+    }
+    if let Some(rp) = opt_f32(&v, "repetition_penalty")? {
+        if rp <= 0.0 {
+            return Err("`repetition_penalty` must be > 0".into());
+        }
+        sampling.repetition_penalty = rp;
+    }
+    if let Some(p) = opt_f32(&v, "presence_penalty")? {
+        sampling.presence_penalty = p;
+    }
+    if let Some(p) = opt_f32(&v, "frequency_penalty")? {
+        sampling.frequency_penalty = p;
+    }
+    if let Some(seed) = opt_u64(&v, "seed")? {
+        sampling.seed = seed;
+    }
+    if let Some(bias) = v.get("logit_bias") {
+        let Json::Obj(fields) = bias else {
+            return Err("`logit_bias` must be an object of token-id -> bias".into());
+        };
+        for (k, b) in fields {
+            let tok: u32 = k
+                .parse()
+                .map_err(|_| format!("logit_bias key {k:?} is not a token id"))?;
+            if tok as usize >= cfg.vocab_size {
+                return Err(format!("logit_bias token {tok} out of range"));
+            }
+            let b = b.as_f64().ok_or("logit_bias values must be numbers")?;
+            sampling.logit_bias.push((tok, b as f32));
+        }
+    }
+    match v.get("stop") {
+        None | Some(Json::Null) => {}
+        Some(Json::Str(one)) => sampling.stop_sequences.push(one.clone()),
+        Some(Json::Arr(many)) => {
+            for e in many {
+                let e = e.as_str().ok_or("`stop` entries must be strings")?;
+                sampling.stop_sequences.push(e.to_string());
+            }
+        }
+        Some(_) => return Err("`stop` must be a string or an array of strings".into()),
+    }
+
+    let mut req = Request::new(id, prompt, max_tokens, &variant).with_sampling(sampling);
+    if let Some(tok) = opt_u64(&v, "stop_token_id")? {
+        if tok as usize >= cfg.vocab_size {
+            return Err(format!("stop_token_id {tok} out of range"));
+        }
+        req = req.with_stop_token(tok as u32);
+    }
+    if let Some(sid) = opt_u64(&v, "session_id")? {
+        req = req.with_session(sid);
+    }
+    if let Some(ms) = opt_u64(&v, "deadline_ms")? {
+        req = req.with_deadline(Duration::from_millis(ms));
+    }
+    if let Some(p) = v.get("priority") {
+        let n = p.as_f64().ok_or("`priority` must be a number")?;
+        req = req.with_priority(n as i32);
+    }
+
+    let stream = match v.get("stream") {
+        None | Some(Json::Null) => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => return Err("`stream` must be a boolean".into()),
+    };
+    Ok(ParsedCompletion { req, stream })
+}
+
+/// The API string for a [`FinishReason`] (`finish_reason` in responses).
+pub fn finish_reason_str(reason: FinishReason) -> &'static str {
+    match reason {
+        FinishReason::Length => "length",
+        FinishReason::StopToken | FinishReason::StopSequence => "stop",
+        FinishReason::Cancelled => "cancelled",
+        FinishReason::Deadline => "deadline",
+        FinishReason::WorkerDied => "worker_died",
+    }
+}
+
+/// Canonical text rendering of a token sequence: decimal ids joined by
+/// single spaces (matches [`StopMatcher::render`]).
+///
+/// [`StopMatcher::render`]: crate::coordinator::sampler::StopMatcher::render
+pub fn render_text(toks: &[u32]) -> String {
+    toks.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
+}
+
+fn usage_json(fin: &FinishedRequest) -> Json {
+    obj(vec![
+        ("prompt_tokens", num(fin.prompt_len as f64)),
+        ("completion_tokens", num(fin.generated.len() as f64)),
+        ("total_tokens", num((fin.prompt_len + fin.generated.len()) as f64)),
+    ])
+}
+
+/// Non-streaming completion response body.
+pub fn completion_json(id: u64, model: &str, fin: &FinishedRequest) -> String {
+    let choice = obj(vec![
+        ("index", num(0.0)),
+        ("text", s(&render_text(&fin.generated))),
+        ("tokens", Json::Arr(fin.generated.iter().map(|t| num(*t as f64)).collect())),
+        ("finish_reason", s(finish_reason_str(fin.finish_reason))),
+    ]);
+    json::to_string(&obj(vec![
+        ("id", s(&format!("cmpl-{id}"))),
+        ("object", s("text_completion")),
+        ("model", s(model)),
+        ("choices", Json::Arr(vec![choice])),
+        ("usage", usage_json(fin)),
+    ]))
+}
+
+/// One SSE chunk for one lifecycle [`Event`] — the 1:1 event→frame
+/// mapping (`FirstToken` announces TTFT, each `Token` carries one token,
+/// `Finished` carries `finish_reason` + usage; the `[DONE]` sentinel
+/// follows separately).
+pub fn chunk_json(id: u64, model: &str, ev: &Event) -> String {
+    let choice = match ev {
+        Event::FirstToken => obj(vec![
+            ("index", num(0.0)),
+            ("text", s("")),
+            ("first_token", Json::Bool(true)),
+            ("finish_reason", Json::Null),
+        ]),
+        Event::Token { tok, index } => {
+            // token at stream index 0 renders bare, later ones carry the
+            // joining space — concatenating `text` fields reproduces
+            // render_text() exactly
+            let text =
+                if *index == 0 { tok.to_string() } else { format!(" {tok}") };
+            obj(vec![
+                ("index", num(0.0)),
+                ("text", s(&text)),
+                ("token", num(*tok as f64)),
+                ("token_index", num(*index as f64)),
+                ("finish_reason", Json::Null),
+            ])
+        }
+        Event::Finished(fin) => obj(vec![
+            ("index", num(0.0)),
+            ("text", s("")),
+            ("finish_reason", s(finish_reason_str(fin.finish_reason))),
+        ]),
+    };
+    let mut fields = vec![
+        ("id", s(&format!("cmpl-{id}"))),
+        ("object", s("text_completion.chunk")),
+        ("model", s(model)),
+        ("choices", Json::Arr(vec![choice])),
+    ];
+    if let Event::Finished(fin) = ev {
+        fields.push(("usage", usage_json(fin)));
+    }
+    json::to_string(&obj(fields))
+}
+
+/// Error response body.
+pub fn error_json(message: &str, kind: &str) -> String {
+    json::to_string(&obj(vec![(
+        "error",
+        obj(vec![("message", s(message)), ("type", s(kind))]),
+    )]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ApiConfig {
+        ApiConfig {
+            variant: "fp32".into(),
+            variants: vec!["fp32".into(), "fastmamba".into()],
+            vocab_size: 128,
+            default_max_tokens: 16,
+        }
+    }
+
+    #[test]
+    fn server_parse_completion_full_surface() {
+        let body = br#"{
+            "prompt": [1, 2, 3],
+            "model": "fastmamba",
+            "max_tokens": 8,
+            "stream": true,
+            "temperature": 0.9,
+            "top_k": 40,
+            "top_p": 0.95,
+            "repetition_penalty": 1.1,
+            "presence_penalty": 0.2,
+            "frequency_penalty": 0.3,
+            "seed": 7,
+            "logit_bias": {"5": -10.0},
+            "stop": ["9 12", "44"],
+            "stop_token_id": 99,
+            "session_id": 123,
+            "deadline_ms": 5000,
+            "priority": 2
+        }"#;
+        let p = parse_completion(body, 42, &cfg()).unwrap();
+        assert!(p.stream);
+        assert_eq!(p.req.id, 42);
+        assert_eq!(p.req.prompt, vec![1, 2, 3]);
+        assert_eq!(p.req.variant, "fastmamba");
+        assert_eq!(p.req.max_new_tokens, 8);
+        assert_eq!(p.req.stop_token, Some(99));
+        assert_eq!(p.req.session_id, Some(123));
+        assert_eq!(p.req.deadline, Some(Duration::from_millis(5000)));
+        assert_eq!(p.req.priority, 2);
+        let sp = &p.req.sampling;
+        assert_eq!(sp.temperature, 0.9);
+        assert_eq!(sp.top_k, 40);
+        assert_eq!(sp.top_p, 0.95);
+        assert_eq!(sp.repetition_penalty, 1.1);
+        assert_eq!(sp.seed, 7);
+        assert_eq!(sp.logit_bias, vec![(5, -10.0)]);
+        assert_eq!(sp.stop_sequences, vec!["9 12".to_string(), "44".to_string()]);
+    }
+
+    #[test]
+    fn server_parse_completion_defaults_are_pure_greedy() {
+        let p = parse_completion(br#"{"prompt": [4]}"#, 1, &cfg()).unwrap();
+        assert!(!p.stream);
+        assert_eq!(p.req.variant, "fp32");
+        assert_eq!(p.req.max_new_tokens, 16);
+        assert!(p.req.sampling.is_pure_greedy());
+    }
+
+    #[test]
+    fn server_parse_completion_rejects_bad_bodies() {
+        let c = cfg();
+        let cases: Vec<(&[u8], &str)> = vec![
+            (b"not json", "invalid JSON"),
+            (br#"{"max_tokens": 4}"#, "missing `prompt`"),
+            (br#"{"prompt": []}"#, "must not be empty"),
+            (br#"{"prompt": [999]}"#, "out of range"),
+            (br#"{"prompt": [1.5]}"#, "out of range"),
+            (br#"{"prompt": [1], "model": "nope"}"#, "unknown model"),
+            (br#"{"prompt": [1], "max_tokens": 0}"#, "max_tokens"),
+            (br#"{"prompt": [1], "temperature": -1}"#, "temperature"),
+            (br#"{"prompt": [1], "top_p": 1.5}"#, "top_p"),
+            (br#"{"prompt": [1], "stop": 7}"#, "stop"),
+            (br#"{"prompt": [1], "logit_bias": {"x": 1}}"#, "not a token id"),
+            (br#"{"prompt": [1], "stream": "yes"}"#, "stream"),
+        ];
+        for (body, frag) in cases {
+            let err = parse_completion(body, 1, &c).unwrap_err();
+            assert!(err.contains(frag), "body {body:?}: {err:?} missing {frag:?}");
+        }
+    }
+
+    #[test]
+    fn server_chunk_text_concatenation_matches_render_text() {
+        let toks = [7u32, 19, 3];
+        let mut text = String::new();
+        for (i, &t) in toks.iter().enumerate() {
+            let chunk = chunk_json(1, "fp32", &Event::Token { tok: t, index: i });
+            let v = Json::parse(&chunk).unwrap();
+            let c = &v.arr_field("choices").unwrap()[0];
+            text.push_str(c.str_field("text").unwrap());
+            assert_eq!(c.usize_field("token").unwrap(), t as usize);
+        }
+        assert_eq!(text, render_text(&toks));
+    }
+
+    #[test]
+    fn server_completion_json_shape() {
+        let fin = FinishedRequest {
+            id: 5,
+            generated: vec![7, 19],
+            finish_reason: FinishReason::Length,
+            ttft_s: 0.01,
+            total_s: 0.05,
+            prompt_len: 3,
+            spec: None,
+        };
+        let v = Json::parse(&completion_json(5, "fp32", &fin)).unwrap();
+        assert_eq!(v.str_field("id").unwrap(), "cmpl-5");
+        assert_eq!(v.str_field("object").unwrap(), "text_completion");
+        let c = &v.arr_field("choices").unwrap()[0];
+        assert_eq!(c.str_field("text").unwrap(), "7 19");
+        assert_eq!(c.str_field("finish_reason").unwrap(), "length");
+        let u = v.get("usage").unwrap();
+        assert_eq!(u.usize_field("prompt_tokens").unwrap(), 3);
+        assert_eq!(u.usize_field("completion_tokens").unwrap(), 2);
+        assert_eq!(u.usize_field("total_tokens").unwrap(), 5);
+    }
+
+    #[test]
+    fn server_finish_reason_strings() {
+        assert_eq!(finish_reason_str(FinishReason::Length), "length");
+        assert_eq!(finish_reason_str(FinishReason::StopToken), "stop");
+        assert_eq!(finish_reason_str(FinishReason::StopSequence), "stop");
+        assert_eq!(finish_reason_str(FinishReason::Cancelled), "cancelled");
+        assert_eq!(finish_reason_str(FinishReason::Deadline), "deadline");
+        assert_eq!(finish_reason_str(FinishReason::WorkerDied), "worker_died");
+    }
+}

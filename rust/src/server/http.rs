@@ -1,0 +1,134 @@
+//! Minimal HTTP/1.1 wire handling for the serving frontend — the same
+//! dependency-free `std::net` approach as [`crate::obs::scrape`], extended
+//! with request-body reads and SSE (`text/event-stream`) writes.
+//!
+//! Scope is deliberately small: one request per connection
+//! (`Connection: close`), `Content-Length` bodies only (no chunked
+//! uploads), and bounded header/body sizes so a misbehaving client cannot
+//! balloon memory.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// Upper bound on the request head (request line + headers).
+const MAX_HEAD_BYTES: usize = 64 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// First position of `needle` in `haystack`.
+pub fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    if needle.is_empty() || haystack.len() < needle.len() {
+        return None;
+    }
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Read and parse one request from the stream (blocking, with a read
+/// timeout so an idle half-open connection cannot pin the thread).
+pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<HttpRequest> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        let n = stream.read(&mut chunk).context("reading request head")?;
+        if n == 0 {
+            bail!("connection closed before request head completed");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).context("request head is not UTF-8")?;
+    let mut lines = head.lines();
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        bail!("malformed request line: {request_line:?}");
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().context("bad Content-Length")?;
+            }
+        }
+    }
+    if content_length > max_body {
+        bail!("request body {content_length} bytes exceeds limit {max_body}");
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).context("reading request body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(HttpRequest { method, path, body })
+}
+
+/// Write a complete response and flush (`Connection: close` framing).
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> Result<()> {
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Start an SSE response: headers only; frames follow via
+/// [`write_sse_data`].
+pub fn write_sse_headers(stream: &mut TcpStream) -> Result<()> {
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
+          Connection: close\r\n\r\n",
+    )?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// One SSE frame: `data: <payload>\n\n`, flushed immediately (each frame
+/// is one streamed event — TTFT on the wire is TTFT in the engine).
+pub fn write_sse_data(stream: &mut TcpStream, data: &str) -> Result<()> {
+    stream.write_all(format!("data: {data}\n\n").as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_subslice_positions() {
+        assert_eq!(find_subslice(b"abcd", b"cd"), Some(2));
+        assert_eq!(find_subslice(b"abcd", b"ab"), Some(0));
+        assert_eq!(find_subslice(b"abcd", b"xy"), None);
+        assert_eq!(find_subslice(b"ab", b"abcd"), None);
+        assert_eq!(find_subslice(b"abcd", b""), None);
+    }
+}

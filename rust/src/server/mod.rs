@@ -1,0 +1,644 @@
+//! OpenAI-style HTTP/SSE serving frontend over the streaming request
+//! lifecycle.
+//!
+//! The server is the same dependency-free `std::net` construction as the
+//! Prometheus scrape endpoint ([`crate::obs::scrape`]): one
+//! `TcpListener` accept thread, one short-lived thread per connection,
+//! shutdown by flipping an atomic and self-connecting.  What it serves is
+//! the full request lifecycle instead of a metrics snapshot:
+//!
+//! - `POST /v1/completions` maps the body onto a [`Request`] (sampling
+//!   params, session id, deadline, priority — see [`api::parse_completion`])
+//!   and submits it through a [`Submitter`].  Non-streaming requests block
+//!   for the terminal event and answer with one JSON completion;
+//!   `"stream": true` answers as SSE where each lifecycle [`Event`] is one
+//!   frame ([`Event::FirstToken`] → the TTFT marker frame, each
+//!   [`Event::Token`] → one chunk, [`Event::Finished`] → the
+//!   `finish_reason` + usage frame) followed by the `data: [DONE]`
+//!   terminator.
+//! - A client that disappears mid-stream is detected (write failure or
+//!   idle-tick EOF probe) and turns into [`SubmitHandle::cancel`], so the
+//!   engine frees the state slot instead of decoding to `max_new_tokens`
+//!   for nobody.
+//! - `GET /healthz` reports the served variants.
+//!
+//! [`Submitter`] decouples the frontend from the serving topology: the
+//! worker pool, the single-threaded [`Engine`], and the [`SpecEngine`] all
+//! feed through [`ChannelSubmitter`] (an `mpsc::Sender<Request>` that
+//! attaches the event channel before sending), so every CLI serve path —
+//! single/pool × plain/speculative — exposes the same HTTP surface.
+//!
+//! [`Engine`]: crate::coordinator::scheduler::Engine
+//! [`SpecEngine`]: crate::coordinator::speculative::SpecEngine
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::request::{Event, Request, SubmitHandle};
+
+pub mod api;
+pub mod http;
+
+pub use api::ApiConfig;
+
+/// How the HTTP frontend hands a parsed [`Request`] to a serving backend.
+///
+/// Implementations must attach the event channel (the returned
+/// [`SubmitHandle`] is how the connection thread streams tokens back and
+/// propagates cancellation).
+pub trait Submitter: Send + Sync {
+    fn submit(&self, req: Request) -> Result<SubmitHandle>;
+}
+
+/// [`Submitter`] over a raw `mpsc::Sender<Request>` — the pool's
+/// [`ServePool::sender`] ingress clone, or the feed channel of a
+/// single-engine pump loop (see `serve_over_http` in the CLI).  Attaches
+/// the per-request event channel before sending, which is what a raw
+/// sender clone does not do on its own.
+///
+/// The sender sits behind a `Mutex` because `mpsc::Sender` is `!Sync`;
+/// submission is one short `send` per request, so the lock is uncontended
+/// in practice.
+///
+/// [`ServePool::sender`]: crate::coordinator::router::ServePool::sender
+pub struct ChannelSubmitter {
+    tx: Mutex<mpsc::Sender<Request>>,
+}
+
+impl ChannelSubmitter {
+    pub fn new(tx: mpsc::Sender<Request>) -> Self {
+        Self { tx: Mutex::new(tx) }
+    }
+}
+
+impl Submitter for ChannelSubmitter {
+    fn submit(&self, mut req: Request) -> Result<SubmitHandle> {
+        let handle = req.attach_events();
+        self.tx
+            .lock()
+            .map_err(|_| anyhow!("submitter lock poisoned"))?
+            .send(req)
+            .map_err(|_| anyhow!("serving side is gone"))?;
+        Ok(handle)
+    }
+}
+
+/// Frontend configuration: the API mapping knobs plus wire-level bounds.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    pub api: ApiConfig,
+    /// request-body size cap (413-class rejection above this)
+    pub max_body_bytes: usize,
+}
+
+impl HttpConfig {
+    pub fn new(api: ApiConfig) -> Self {
+        Self { api, max_body_bytes: 1024 * 1024 }
+    }
+}
+
+/// A running HTTP frontend (see [`serve_http`]).
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    served: Arc<AtomicU64>,
+}
+
+impl HttpServer {
+    /// The bound address (resolves port 0 to the OS-picked port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Completion requests that reached a terminal outcome (finished,
+    /// cancelled, or abandoned by the client) — the CLI's
+    /// `--http-requests N` exit condition reads this.
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, join every connection thread, and release the
+    /// submitter (idempotent).  Joining matters: the accept thread owns
+    /// the `Arc<dyn Submitter>`, so for a [`ChannelSubmitter`] over a pool
+    /// ingress clone, shutdown is what lets `ServePool::finish()` observe
+    /// end-of-input and unblock.
+    pub fn shutdown(&mut self) {
+        if self.accept.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serve the OpenAI-style completion API on `addr`
+/// (e.g. `"127.0.0.1:8080"`, or `"127.0.0.1:0"` for an OS-picked port).
+///
+/// The accept thread holds the only long-lived clone of `submitter`; each
+/// connection runs on its own thread and streams straight from its
+/// request's [`SubmitHandle`], so slow clients only ever stall their own
+/// request.
+pub fn serve_http(
+    addr: &str,
+    submitter: Arc<dyn Submitter>,
+    cfg: HttpConfig,
+) -> Result<HttpServer> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding http frontend {addr}"))?;
+    let bound = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(AtomicU64::new(0));
+    let stop_in = Arc::clone(&stop);
+    let served_in = Arc::clone(&served);
+    let cfg = Arc::new(cfg);
+    let accept = std::thread::Builder::new()
+        .name("http-accept".into())
+        .spawn(move || {
+            let next_id = AtomicU64::new(1);
+            let mut conns: Vec<JoinHandle<()>> = Vec::new();
+            for conn in listener.incoming() {
+                if stop_in.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let submitter = Arc::clone(&submitter);
+                let cfg = Arc::clone(&cfg);
+                let served = Arc::clone(&served_in);
+                let stop = Arc::clone(&stop_in);
+                let id = next_id.fetch_add(1, Ordering::SeqCst);
+                let spawned = std::thread::Builder::new().name("http-conn".into()).spawn(
+                    move || {
+                        // connection errors only drop that connection
+                        let _ = handle_conn(stream, id, &*submitter, &cfg, &served, &stop);
+                    },
+                );
+                if let Ok(h) = spawned {
+                    conns.push(h);
+                }
+                conns.retain(|h| !h.is_finished());
+            }
+            // join every in-flight connection before dropping `submitter`:
+            // streams get to retire their requests, and the pool-ingress
+            // sender clone drops only once nothing can submit through it
+            for h in conns {
+                let _ = h.join();
+            }
+        })?;
+    Ok(HttpServer { addr: bound, stop, accept: Some(accept), served })
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    id: u64,
+    submitter: &dyn Submitter,
+    cfg: &HttpConfig,
+    served: &AtomicU64,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let req = match http::read_request(&mut stream, cfg.max_body_bytes) {
+        Ok(r) => r,
+        Err(e) => {
+            let body = api::error_json(&format!("{e:#}"), "invalid_request_error");
+            return http::write_response(&mut stream, "400 Bad Request", "application/json", &body);
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            use crate::util::json::{obj, s, Json};
+            let body = crate::util::json::to_string(&obj(vec![
+                ("status", s("ok")),
+                ("model", s(&cfg.api.variant)),
+                (
+                    "variants",
+                    Json::Arr(cfg.api.variants.iter().map(|v| s(v)).collect()),
+                ),
+            ]));
+            http::write_response(&mut stream, "200 OK", "application/json", &body)
+        }
+        ("POST", "/v1/completions") => {
+            let parsed = match api::parse_completion(&req.body, id, &cfg.api) {
+                Ok(p) => p,
+                Err(msg) => {
+                    let body = api::error_json(&msg, "invalid_request_error");
+                    return http::write_response(
+                        &mut stream,
+                        "400 Bad Request",
+                        "application/json",
+                        &body,
+                    );
+                }
+            };
+            let model = parsed.req.variant.clone();
+            let handle = match submitter.submit(parsed.req) {
+                Ok(h) => h,
+                Err(e) => {
+                    let body = api::error_json(&format!("{e:#}"), "server_error");
+                    return http::write_response(
+                        &mut stream,
+                        "503 Service Unavailable",
+                        "application/json",
+                        &body,
+                    );
+                }
+            };
+            let out = if parsed.stream {
+                stream_completion(stream, id, &model, &handle, stop)
+            } else {
+                match handle.wait_finished() {
+                    Some(fin) => http::write_response(
+                        &mut stream,
+                        "200 OK",
+                        "application/json",
+                        &api::completion_json(id, &model, &fin),
+                    ),
+                    None => http::write_response(
+                        &mut stream,
+                        "500 Internal Server Error",
+                        "application/json",
+                        &api::error_json("serving side shut down mid-request", "server_error"),
+                    ),
+                }
+            };
+            served.fetch_add(1, Ordering::SeqCst);
+            out
+        }
+        _ => http::write_response(
+            &mut stream,
+            "404 Not Found",
+            "application/json",
+            &api::error_json("unknown route; POST /v1/completions or GET /healthz", "not_found"),
+        ),
+    }
+}
+
+/// Stream one request as SSE: every lifecycle event is one frame, the
+/// terminal frame is followed by `data: [DONE]`.  A vanished client — a
+/// failed frame write, or EOF on the idle-tick probe — becomes
+/// [`SubmitHandle::cancel`] so the engine frees the slot; the handle is
+/// then drained to the terminal event so the retire is observed before
+/// the connection thread exits.
+fn stream_completion(
+    mut stream: TcpStream,
+    id: u64,
+    model: &str,
+    handle: &SubmitHandle,
+    stop: &AtomicBool,
+) -> Result<()> {
+    http::write_sse_headers(&mut stream)?;
+    loop {
+        match handle.poll_event(Duration::from_millis(100)) {
+            Ok(ev) => {
+                let frame = api::chunk_json(id, model, &ev);
+                let wrote = http::write_sse_data(&mut stream, &frame).is_ok();
+                if matches!(ev, Event::Finished(_)) {
+                    if wrote {
+                        let _ = http::write_sse_data(&mut stream, "[DONE]");
+                    }
+                    return Ok(());
+                }
+                if !wrote {
+                    handle.cancel();
+                    drain_until_finished(handle);
+                    return Ok(());
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // serving side alive but quiet: probe the client and honor
+                // server shutdown so a stalled stream cannot pin a slot
+                if stop.load(Ordering::SeqCst) || client_gone(&stream) {
+                    handle.cancel();
+                    drain_until_finished(handle);
+                    return Ok(());
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // engine/pool dropped without a terminal event
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// After a cancel, wait (bounded) for the terminal event so the request
+/// is known-retired — its slot freed — before this connection thread
+/// exits.
+fn drain_until_finished(handle: &SubmitHandle) {
+    for _ in 0..50 {
+        match handle.poll_event(Duration::from_millis(100)) {
+            Ok(Event::Finished(_)) | Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            Ok(_) | Err(mpsc::RecvTimeoutError::Timeout) => {}
+        }
+    }
+}
+
+/// Has the client closed its end?  A completions client sends nothing
+/// after the request body, so a successful zero-byte read is EOF; a
+/// `WouldBlock` means the socket is open with nothing to read (the normal
+/// mid-stream state).
+fn client_gone(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut probe = [0u8; 16];
+    let gone = match (&*stream).read(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false, // stray bytes: not EOF, keep serving
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Write;
+
+    use super::*;
+    use crate::backend::{InferenceBackend, NativeBackend};
+    use crate::coordinator::request::{FinishReason, FinishedRequest};
+    use crate::coordinator::sampler::SamplingParams;
+    use crate::coordinator::{serve_pool, EngineConfig, PoolConfig, ServePool};
+    use crate::util::json::Json;
+
+    fn micro_backend() -> NativeBackend {
+        let mut cfg = crate::config::ModelConfig::tiny();
+        cfg.name = "mamba2-micro".into();
+        cfg.d_model = 64;
+        cfg.n_layer = 2;
+        cfg.d_state = 16;
+        cfg.headdim = 16;
+        cfg.vocab_size = 128;
+        NativeBackend::new(crate::model::ModelWeights::random(&cfg, 9))
+            .with_buckets(vec![8, 16, 32], vec![1, 2, 4])
+    }
+
+    fn micro_pool(n_workers: usize, max_active: usize) -> ServePool {
+        serve_pool(
+            || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>),
+            PoolConfig {
+                engine: EngineConfig { max_active, greedy_chunking: true },
+                n_workers,
+                ..PoolConfig::default()
+            },
+        )
+    }
+
+    fn test_cfg() -> HttpConfig {
+        HttpConfig::new(ApiConfig {
+            variant: "fp32".into(),
+            variants: vec!["fp32".into(), "fastmamba".into()],
+            vocab_size: 128,
+            default_max_tokens: 8,
+        })
+    }
+
+    fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write!(stream, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+        read_split(stream)
+    }
+
+    fn http_post(addr: SocketAddr, path: &str, body: &str) -> (String, String) {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write!(
+            stream,
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        read_split(stream)
+    }
+
+    fn read_split(mut stream: TcpStream) -> (String, String) {
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).unwrap();
+        let (head, body) = raw.split_once("\r\n\r\n").expect("malformed response");
+        (head.to_string(), body.to_string())
+    }
+
+    /// SSE body → frame payloads (strips `data: `, keeps order).
+    fn sse_payloads(body: &str) -> Vec<String> {
+        body.split("\n\n")
+            .filter(|f| !f.is_empty())
+            .map(|f| f.strip_prefix("data: ").expect("frame prefix").to_string())
+            .collect()
+    }
+
+    #[test]
+    fn server_healthz_routes_and_rejects() {
+        let pool = micro_pool(1, 2);
+        let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
+        let mut server = serve_http("127.0.0.1:0", submitter, test_cfg()).unwrap();
+
+        let (head, body) = http_get(server.addr(), "/healthz");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.str_field("status").unwrap(), "ok");
+        assert_eq!(v.str_field("model").unwrap(), "fp32");
+        assert_eq!(v.arr_field("variants").unwrap().len(), 2);
+
+        let (head, _) = http_get(server.addr(), "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+
+        let (head, body) = http_post(server.addr(), "/v1/completions", r#"{"prompt": []}"#);
+        assert!(head.starts_with("HTTP/1.1 400"), "{head}");
+        let v = Json::parse(&body).unwrap();
+        assert!(v.get("error").unwrap().str_field("message").unwrap().contains("empty"));
+
+        let (head, _) = http_post(server.addr(), "/v1/completions", "{not json");
+        assert!(head.starts_with("HTTP/1.1 400"), "{head}");
+
+        server.shutdown();
+        server.shutdown(); // idempotent
+        pool.finish().unwrap();
+    }
+
+    #[test]
+    fn server_completion_over_pool_matches_direct_submit() {
+        let pool = micro_pool(2, 2);
+        let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
+        let mut server = serve_http("127.0.0.1:0", submitter, test_cfg()).unwrap();
+
+        // one greedy, one sampled — both must match an in-process submit
+        // of the same prompt + params (sampling is position-keyed, so the
+        // draws don't depend on request id or worker)
+        for (i, (body, direct_sampling)) in [
+            (
+                r#"{"prompt": [1, 2, 3], "max_tokens": 6}"#.to_string(),
+                SamplingParams::default(),
+            ),
+            (
+                r#"{"prompt": [5, 9, 2, 44], "max_tokens": 6,
+                    "temperature": 1.0, "seed": 77}"#
+                    .to_string(),
+                SamplingParams { temperature: 1.0, seed: 77, ..Default::default() },
+            ),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let parsed = Json::parse(&body).unwrap();
+            let prompt: Vec<u32> = parsed
+                .arr_field("prompt")
+                .unwrap()
+                .iter()
+                .map(|t| t.as_usize().unwrap() as u32)
+                .collect();
+            let direct = pool
+                .submit(
+                    Request::new(1000 + i as u64, prompt, 6, "fp32")
+                        .with_sampling(direct_sampling),
+                )
+                .unwrap()
+                .wait_finished()
+                .unwrap();
+
+            let (head, resp) = http_post(server.addr(), "/v1/completions", &body);
+            assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+            let v = Json::parse(&resp).unwrap();
+            let choice = &v.arr_field("choices").unwrap()[0];
+            let toks: Vec<u32> = choice
+                .arr_field("tokens")
+                .unwrap()
+                .iter()
+                .map(|t| t.as_usize().unwrap() as u32)
+                .collect();
+            assert_eq!(toks, direct.generated, "HTTP tokens != direct submit");
+            assert_eq!(choice.str_field("text").unwrap(), api::render_text(&direct.generated));
+            assert_eq!(choice.str_field("finish_reason").unwrap(), "length");
+            let u = v.get("usage").unwrap();
+            assert_eq!(u.usize_field("completion_tokens").unwrap(), direct.generated.len());
+        }
+
+        assert_eq!(server.served(), 2);
+        server.shutdown();
+        pool.finish().unwrap();
+    }
+
+    #[test]
+    fn sse_stream_matches_in_process_submit_handle() {
+        let pool = micro_pool(1, 2);
+        let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
+        let mut server = serve_http("127.0.0.1:0", submitter, test_cfg()).unwrap();
+
+        // in-process reference: the exact event stream off a SubmitHandle
+        let sampling = SamplingParams { temperature: 1.0, seed: 42, ..Default::default() };
+        let h = pool
+            .submit(
+                Request::new(2000, vec![3, 1, 4, 1, 5], 5, "fp32")
+                    .with_sampling(sampling),
+            )
+            .unwrap();
+        let mut direct_tokens: Vec<(u32, usize)> = Vec::new();
+        let mut saw_first = false;
+        let direct_fin: FinishedRequest = loop {
+            match h.next_event().expect("event stream ended early") {
+                Event::FirstToken => saw_first = true,
+                Event::Token { tok, index } => direct_tokens.push((tok, index)),
+                Event::Finished(f) => break f,
+            }
+        };
+        assert!(saw_first);
+
+        let body = r#"{"prompt": [3, 1, 4, 1, 5], "max_tokens": 5, "stream": true,
+                       "temperature": 1.0, "seed": 42}"#;
+        let (head, resp) = http_post(server.addr(), "/v1/completions", body);
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(head.contains("text/event-stream"), "{head}");
+
+        let payloads = sse_payloads(&resp);
+        assert_eq!(payloads.last().map(String::as_str), Some("[DONE]"));
+        let frames: Vec<Json> = payloads[..payloads.len() - 1]
+            .iter()
+            .map(|p| Json::parse(p).unwrap())
+            .collect();
+        // frame 0: TTFT marker; frames 1..=n: tokens; last: finish_reason
+        let choice = |f: &Json| f.arr_field("choices").unwrap()[0].clone();
+        assert!(matches!(choice(&frames[0]).get("first_token"), Some(Json::Bool(true))));
+        let sse_tokens: Vec<(u32, usize)> = frames[1..frames.len() - 1]
+            .iter()
+            .map(|f| {
+                let c = choice(f);
+                (c.usize_field("token").unwrap() as u32, c.usize_field("token_index").unwrap())
+            })
+            .collect();
+        assert_eq!(sse_tokens, direct_tokens, "SSE stream != in-process event stream");
+        let last = choice(frames.last().unwrap());
+        assert_eq!(last.str_field("finish_reason").unwrap(), "length");
+        assert_eq!(direct_fin.finish_reason, FinishReason::Length);
+        // concatenated chunk text reproduces the canonical rendering
+        let text: String = frames[..frames.len() - 1]
+            .iter()
+            .map(|f| choice(f).str_field("text").unwrap().to_string())
+            .collect();
+        assert_eq!(text, api::render_text(&direct_fin.generated));
+
+        server.shutdown();
+        pool.finish().unwrap();
+    }
+
+    #[test]
+    fn sse_client_disconnect_cancels_and_frees_slot() {
+        // single worker, single slot: a huge streamed request owns the only
+        // slot; dropping its connection must cancel it (freeing the slot)
+        // so a queued follow-up request can complete
+        let pool = micro_pool(1, 1);
+        let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
+        let mut server = serve_http("127.0.0.1:0", submitter, test_cfg()).unwrap();
+
+        let body = r#"{"prompt": [1, 2, 3], "max_tokens": 100000, "stream": true}"#;
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        write!(
+            stream,
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        // read until a couple of SSE frames arrived (the response head's
+        // \r\n\r\n contains no \n\n, so every \n\n is a frame terminator),
+        // then vanish without closing cleanly at a frame boundary
+        let mut seen = String::new();
+        let mut byte = [0u8; 1];
+        while seen.matches("\n\n").count() < 3 {
+            let n = stream.read(&mut byte).unwrap();
+            assert!(n > 0, "server closed early: {seen}");
+            seen.push(byte[0] as char);
+        }
+        drop(stream);
+
+        // the freed slot serves a follow-up to completion
+        let follow = r#"{"prompt": [7, 8], "max_tokens": 3}"#;
+        let (head, resp) = http_post(server.addr(), "/v1/completions", follow);
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        let v = Json::parse(&resp).unwrap();
+        let choice = &v.arr_field("choices").unwrap()[0];
+        assert_eq!(choice.str_field("finish_reason").unwrap(), "length");
+        assert_eq!(choice.arr_field("tokens").unwrap().len(), 3);
+        assert_eq!(server.served(), 2);
+        server.shutdown();
+        let report = pool.finish().unwrap();
+        assert_eq!(report.merged.cancelled_requests, 1, "disconnect did not cancel");
+        assert_eq!(report.merged.requests_completed, 2);
+    }
+}
