@@ -100,31 +100,56 @@ pub(crate) fn seed_from_cache(
     seed
 }
 
-/// Retire a request that never reached admission (cancelled or past its
-/// deadline while still pending): no slot to free, empty output, terminal
-/// event emitted — the same `FinishedRequest` surface as the normal path.
+/// Retire a request that never reached admission (cancelled, past its
+/// deadline, or shed at a full queue while still pending): no slot to
+/// free, terminal event emitted — the same `FinishedRequest` surface as
+/// the normal path.  These requests never produced a token from this
+/// admission, so no latency sample is recorded: the latency histogram
+/// holds completed requests only.  Non-shed retirements count under
+/// `requests_dropped`; `Overloaded` sheds count under `requests_shed`
+/// (via `note_finish_reason`).
+///
+/// A previously preempted request carries its already-streamed transcript
+/// in `resume`; the terminal `FinishedRequest` reports those tokens so the
+/// client-visible output stays consistent across the preemption.
 pub(crate) fn finish_unadmitted(
     metrics: &mut Metrics,
     trace: Option<&TraceCtx>,
     finished: &mut Vec<FinishedRequest>,
-    req: Request,
+    mut req: Request,
     reason: FinishReason,
 ) {
     metrics.note_finish_reason(reason);
     metrics.count(Counter::RequestsCompleted, 1);
+    if reason != FinishReason::Overloaded {
+        metrics.count(Counter::RequestsDropped, 1);
+    }
     let total_s = req.submitted_at.elapsed().as_secs_f64();
-    metrics.note_latency(total_s);
+    let (generated, ttft_s) = match req.resume.take() {
+        Some(mut r) => {
+            // release tokens a partial stop-sequence match was holding
+            // back — same as the non-StopSequence retire path
+            r.stream.flush(&req);
+            (
+                r.generated,
+                r.first_token_at
+                    .map(|t| t.saturating_duration_since(req.submitted_at).as_secs_f64())
+                    .unwrap_or(0.0),
+            )
+        }
+        None => (Vec::new(), 0.0),
+    };
     if let Some(t) = trace {
         if t.sink.sampled(req.id) {
-            t.sink.end_request(req.id, &format!("{reason:?}"), 0);
+            t.sink.end_request(req.id, &format!("{reason:?}"), generated.len());
         }
     }
     let fin = FinishedRequest {
         id: req.id,
         prompt_len: req.prompt.len(),
-        generated: Vec::new(),
+        generated,
         finish_reason: reason,
-        ttft_s: 0.0,
+        ttft_s,
         total_s,
         spec: None,
     };

@@ -112,6 +112,17 @@ pub struct Metrics {
     /// streaming lifecycle: requests retired with
     /// [`FinishReason::Deadline`]
     pub deadline_expired: u64,
+    /// scheduling: running requests preempted (snapshot + requeue) to
+    /// make room for higher-priority arrivals
+    pub preempted_requests: u64,
+    /// scheduling: requests refused at admission with
+    /// [`FinishReason::Overloaded`] (bounded-queue load shedding)
+    pub requests_shed: u64,
+    /// scheduling: queued requests dropped before admission
+    /// (backlog cancel/deadline/worker-death — no latency sample)
+    pub requests_dropped: u64,
+    /// scheduling: queue re-orders performed by priority aging
+    pub aging_reorders: u64,
     /// inter-token latency (TPOT) samples: seconds between consecutive
     /// token emissions of one request.  The speculative engine commits a
     /// round's accepted run at once, so intra-round tokens record ~0 and
@@ -211,6 +222,10 @@ impl Metrics {
             cache_tokens_saved: tel.get(Counter::CacheTokensSaved),
             cancelled_requests: tel.get(Counter::CancelledRequests),
             deadline_expired: tel.get(Counter::DeadlineExpired),
+            preempted_requests: tel.get(Counter::PreemptedRequests),
+            requests_shed: tel.get(Counter::RequestsShed),
+            requests_dropped: tel.get(Counter::RequestsDropped),
+            aging_reorders: tel.get(Counter::AgingReorders),
             busy_s: tel.get(Counter::BusyMicros) as f64 / 1e6,
             queue_depth_peak: tel.gauge_peak(Gauge::QueueDepth),
             ..Metrics::default()
@@ -248,6 +263,10 @@ impl Metrics {
             Counter::CacheTokensSaved => self.cache_tokens_saved += n,
             Counter::CancelledRequests => self.cancelled_requests += n,
             Counter::DeadlineExpired => self.deadline_expired += n,
+            Counter::PreemptedRequests => self.preempted_requests += n,
+            Counter::RequestsShed => self.requests_shed += n,
+            Counter::RequestsDropped => self.requests_dropped += n,
+            Counter::AgingReorders => self.aging_reorders += n,
             // busy time goes through note_busy (float seconds field)
             Counter::BusyMicros => {}
         }
@@ -352,6 +371,8 @@ impl Metrics {
         match reason {
             FinishReason::Cancelled => self.count(Counter::CancelledRequests, 1),
             FinishReason::Deadline => self.count(Counter::DeadlineExpired, 1),
+            FinishReason::Preempted => self.count(Counter::PreemptedRequests, 1),
+            FinishReason::Overloaded => self.count(Counter::RequestsShed, 1),
             _ => {}
         }
     }
@@ -464,6 +485,10 @@ impl Metrics {
         self.cache_tokens_saved += other.cache_tokens_saved;
         self.cancelled_requests += other.cancelled_requests;
         self.deadline_expired += other.deadline_expired;
+        self.preempted_requests += other.preempted_requests;
+        self.requests_shed += other.requests_shed;
+        self.requests_dropped += other.requests_dropped;
+        self.aging_reorders += other.aging_reorders;
         for &v in &other.tpot_s {
             self.tpot_ring_push(v);
         }
@@ -509,6 +534,22 @@ impl Metrics {
         } else {
             String::new()
         };
+        let sched = if self.preempted_requests
+            + self.requests_shed
+            + self.requests_dropped
+            + self.aging_reorders
+            > 0
+        {
+            format!(
+                " preempted={} shed={} dropped={} aging_reorders={}",
+                self.preempted_requests,
+                self.requests_shed,
+                self.requests_dropped,
+                self.aging_reorders
+            )
+        } else {
+            String::new()
+        };
         let workers = if self.worker_stats.is_empty() {
             String::new()
         } else {
@@ -541,7 +582,7 @@ impl Metrics {
             "requests={} prompt_toks={} gen_toks={} wall={:.3}s gen_tok/s={:.1} \
              ttft_p50={:.1}ms ttft_p95={:.1}ms lat_p50={:.1}ms lat_p95={:.1}ms \
              tpot_p50={:.2}ms tpot_p95={:.2}ms \
-             prefill_chunks={} decode_steps={} pad_waste={:.1}% accept={}{}{} \
+             prefill_chunks={} decode_steps={} pad_waste={:.1}% accept={}{}{}{} \
              qdepth_peak={} util={:.0}%{}",
             self.requests_completed,
             self.prompt_tokens,
@@ -560,6 +601,7 @@ impl Metrics {
             accept,
             cache,
             lifecycle,
+            sched,
             self.queue_depth_peak,
             self.utilization() * 100.0,
             workers,
@@ -603,6 +645,10 @@ impl Metrics {
             ("cache_tokens_saved", num(self.cache_tokens_saved as f64)),
             ("cancelled_requests", num(self.cancelled_requests as f64)),
             ("deadline_expired", num(self.deadline_expired as f64)),
+            ("preempted_requests", num(self.preempted_requests as f64)),
+            ("requests_shed", num(self.requests_shed as f64)),
+            ("requests_dropped", num(self.requests_dropped as f64)),
+            ("aging_reorders", num(self.aging_reorders as f64)),
             ("queue_depth_peak", num(self.queue_depth_peak as f64)),
             ("wall_s", num(self.wall_s())),
             ("busy_s", num(self.busy_s)),
@@ -831,6 +877,56 @@ mod tests {
         assert!(s.contains("cancelled=2"), "{s}");
         assert!(s.contains("deadline_expired=1"), "{s}");
         assert!(s.contains("tpot_p50=2.00ms"), "{s}");
+    }
+
+    #[test]
+    fn overload_scheduling_counters_merge_and_summary() {
+        let m = Metrics::default();
+        assert!(
+            !m.summary().contains("preempted="),
+            "no scheduling block before any preempt/shed/drop/reorder"
+        );
+
+        let mut a = Metrics::default();
+        a.note_finish_reason(FinishReason::Preempted);
+        a.note_finish_reason(FinishReason::Overloaded);
+        a.count(Counter::RequestsDropped, 2);
+        let mut b = Metrics::default();
+        b.note_finish_reason(FinishReason::Overloaded);
+        b.count(Counter::AgingReorders, 3);
+
+        let mut m = Metrics::default();
+        m.merge(&a);
+        m.merge(&b);
+        assert_eq!(m.preempted_requests, 1);
+        assert_eq!(m.requests_shed, 2);
+        assert_eq!(m.requests_dropped, 2);
+        assert_eq!(m.aging_reorders, 3);
+        let s = m.summary();
+        assert!(s.contains("preempted=1"), "{s}");
+        assert!(s.contains("shed=2"), "{s}");
+        assert!(s.contains("dropped=2"), "{s}");
+        assert!(s.contains("aging_reorders=3"), "{s}");
+
+        // round-trip through telemetry and the JSON snapshot
+        let tel = Arc::new(Telemetry::new());
+        let mut live = Metrics::default();
+        live.attach_telemetry(Arc::clone(&tel));
+        live.note_finish_reason(FinishReason::Preempted);
+        live.note_finish_reason(FinishReason::Overloaded);
+        live.count(Counter::RequestsDropped, 1);
+        live.count(Counter::AgingReorders, 4);
+        let snap = Metrics::from_telemetry(&tel);
+        assert_eq!(snap.preempted_requests, 1);
+        assert_eq!(snap.requests_shed, 1);
+        assert_eq!(snap.requests_dropped, 1);
+        assert_eq!(snap.aging_reorders, 4);
+        let j = crate::util::json::to_string(&live.to_json());
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(back.usize_field("preempted_requests").unwrap(), 1);
+        assert_eq!(back.usize_field("requests_shed").unwrap(), 1);
+        assert_eq!(back.usize_field("requests_dropped").unwrap(), 1);
+        assert_eq!(back.usize_field("aging_reorders").unwrap(), 4);
     }
 
     #[test]

@@ -78,7 +78,8 @@ pub mod state;
 pub use batcher::DecodeBatcher;
 pub use metrics::{Metrics, WorkerStat};
 pub use request::{
-    CancelFlag, Event, FinishReason, FinishedRequest, Request, SpecStats, SubmitHandle,
+    CancelFlag, Event, FinishReason, FinishedRequest, Request, SchedPolicy, SpecStats,
+    SubmitHandle,
 };
 pub use sampler::{Sampler, SamplingParams, StopMatcher};
 pub use router::{serve_pool, serve_threaded, PoolConfig, PoolReport, Router, ServePool};

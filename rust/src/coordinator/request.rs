@@ -59,6 +59,17 @@ pub enum FinishReason {
     /// the owning pool worker died and no survivor could re-serve the
     /// request (every worker dead); `generated` is empty
     WorkerDied,
+    /// internal: a higher-priority arrival evicted this request from its
+    /// state slot mid-generation.  Never surfaces on the client stream —
+    /// the engine snapshots the recurrent state, requeues a continuation
+    /// under the same event channel, and the stream resumes seamlessly
+    /// where it left off
+    Preempted,
+    /// shed by admission control: the bounded pending/backlog queue
+    /// (`SchedPolicy::max_queue`) was full at submission.  Retriable —
+    /// nothing was generated and no state was consumed; the HTTP edge
+    /// maps it to `429 Too Many Requests` + `Retry-After`
+    Overloaded,
 }
 
 /// One step of a request's streaming lifecycle.
@@ -189,6 +200,9 @@ pub struct Request {
     /// per-request event stream, attached by the submit path; `None` for
     /// requests injected through a raw pool `sender()` clone
     pub(crate) events: Option<mpsc::Sender<Event>>,
+    /// saved progress of a preempted request (set by the engine when it
+    /// evicts the request from its state slot; consumed at re-admission)
+    pub(crate) resume: Option<Box<ResumeState>>,
 }
 
 impl Request {
@@ -206,6 +220,7 @@ impl Request {
             submitted_at: Instant::now(),
             cancel: CancelFlag::default(),
             events: None,
+            resume: None,
         }
     }
 
@@ -281,13 +296,105 @@ impl Request {
 /// Insert into a pending queue keeping higher [`Request::priority`] first
 /// and FIFO order within a priority level (all-default-priority traffic
 /// degenerates to plain `push_back`, preserving the old admission order).
+///
+/// The queue is priority-sorted by construction, so the insertion point is
+/// a `partition_point` binary search — O(log n) compares per insert, which
+/// matters once `--max-queue` allows deep backlogs (the old `rposition`
+/// scan walked the whole queue for every default-priority arrival).
 pub(crate) fn insert_by_priority(queue: &mut VecDeque<Request>, req: Request) {
-    let pos = queue
-        .iter()
-        .rposition(|r| r.priority >= req.priority)
-        .map(|p| p + 1)
-        .unwrap_or(0);
+    let pos = queue.partition_point(|r| r.priority >= req.priority);
     queue.insert(pos, req);
+}
+
+/// Scheduling policy shared by both engines and the pool dispatcher
+/// backlog — the `serve` flags `--age-rate`, `--preempt-threshold`, and
+/// `--max-queue` map onto it 1:1.  The default is the pre-policy
+/// behavior: static priorities, no preemption, unbounded queues.
+#[derive(Debug, Clone)]
+pub struct SchedPolicy {
+    /// priority levels gained per second of queue wait (0 = aging off).
+    /// With aging on, a starved low-priority request's *effective*
+    /// priority rises until it overtakes a steady high-priority stream —
+    /// the floor always drains.
+    pub age_rate: f64,
+    /// an arrival with effective priority >= this threshold may evict the
+    /// lowest-priority running request from a full engine
+    /// (`None` = preemption off).  Constant-size Mamba2 state makes the
+    /// eviction one O(state) snapshot; the victim resumes via a
+    /// state-cache session hit with zero recompute.
+    pub preempt_threshold: Option<i32>,
+    /// bound on the pending/backlog queue; a submission that finds the
+    /// queue full is shed immediately with [`FinishReason::Overloaded`]
+    /// (0 = unbounded)
+    pub max_queue: usize,
+}
+
+impl Default for SchedPolicy {
+    fn default() -> Self {
+        Self { age_rate: 0.0, preempt_threshold: None, max_queue: 0 }
+    }
+}
+
+impl SchedPolicy {
+    /// Effective (aged) priority at `now`: static priority plus whole
+    /// levels earned by queue wait.  Flooring to whole levels keeps
+    /// FIFO-within-level exact — two same-priority requests never swap.
+    pub fn effective_priority(&self, req: &Request, now: Instant) -> i64 {
+        let aged = if self.age_rate > 0.0 {
+            (now.saturating_duration_since(req.submitted_at).as_secs_f64()
+                * self.age_rate) as i64
+        } else {
+            0
+        };
+        req.priority as i64 + aged
+    }
+
+    /// Whether a queue currently holding `len` entries must shed the next
+    /// arrival.
+    pub fn queue_full(&self, len: usize) -> bool {
+        self.max_queue > 0 && len >= self.max_queue
+    }
+}
+
+/// Re-sort a pending queue by effective (aged) priority, highest first.
+/// Stable, so FIFO order within an effective-priority level is preserved;
+/// with `age_rate == 0` the queue is already in this order and the call is
+/// a no-op.  Returns `true` when aging actually changed the order (a
+/// promotion happened) — callers count those under the aging counter.
+pub(crate) fn age_queue(queue: &mut VecDeque<Request>, policy: &SchedPolicy) -> bool {
+    if policy.age_rate <= 0.0 || queue.len() < 2 {
+        return false;
+    }
+    let now = Instant::now();
+    let before: Vec<u64> = queue.iter().map(|r| r.id).collect();
+    queue
+        .make_contiguous()
+        .sort_by_key(|r| std::cmp::Reverse(policy.effective_priority(r, now)));
+    queue.iter().map(|r| r.id).ne(before.iter().copied())
+}
+
+/// Saved mid-generation progress of a preempted request, carried back
+/// through the pending queue so re-admission continues exactly where the
+/// evicted run stopped: same sampler state (penalty bookkeeping and
+/// position-keyed draws stay aligned), same stop-sequence matcher (a
+/// partial match in flight keeps matching), same stream indexes (the
+/// client's event stream continues without a gap or reset).
+#[derive(Debug, Clone)]
+pub(crate) struct ResumeState {
+    /// tokens generated before preemption — the continuation's transcript
+    /// is `prompt ++ generated`, and re-admission seeds `InFlight` with
+    /// this vector so positions and the `max_new_tokens` budget carry over
+    pub generated: Vec<u32>,
+    /// per-request sampling state over the committed transcript
+    pub sampler: Sampler,
+    /// stop-sequence matcher + emitted-token index state
+    pub stream: OutStream,
+    pub first_token_at: Option<Instant>,
+    pub last_token_at: Option<Instant>,
+    /// internal session-cache key the preempting engine stored the slot
+    /// snapshot under; re-admission probes it for an O(state) resume (a
+    /// cache miss just re-prefills the transcript — slower, still exact)
+    pub snapshot_sid: u64,
 }
 
 /// Speculative-decoding accounting for one request.
@@ -475,6 +582,75 @@ mod tests {
         insert_by_priority(&mut q, mk(5, 0));
         let order: Vec<u64> = q.iter().map(|r| r.id).collect();
         assert_eq!(order, vec![2, 3, 0, 1, 5, 4]);
+    }
+
+    #[test]
+    fn priority_queue_insert_matches_linear_scan_reference() {
+        // partition_point must place every arrival exactly where the old
+        // rposition scan did, across a mixed arrival order
+        let mk = |id: u64, p: i32| Request::new(id, vec![1], 1, "fp32").with_priority(p);
+        let arrivals = [0i32, 5, -3, 5, 0, 2, 2, -3, 7, 0, 5, -1];
+        let mut fast = VecDeque::new();
+        let mut slow: VecDeque<Request> = VecDeque::new();
+        for (id, &p) in arrivals.iter().enumerate() {
+            insert_by_priority(&mut fast, mk(id as u64, p));
+            let r = mk(id as u64, p);
+            let pos = slow
+                .iter()
+                .rposition(|q| q.priority >= r.priority)
+                .map(|i| i + 1)
+                .unwrap_or(0);
+            slow.insert(pos, r);
+        }
+        let f: Vec<u64> = fast.iter().map(|r| r.id).collect();
+        let s: Vec<u64> = slow.iter().map(|r| r.id).collect();
+        assert_eq!(f, s);
+    }
+
+    #[test]
+    fn aging_promotes_waited_request_past_static_priority() {
+        let mut q = VecDeque::new();
+        let mut low = Request::new(0, vec![1], 1, "fp32").with_priority(0);
+        // the low-priority request has been queued for 10s
+        low.submitted_at = Instant::now() - Duration::from_secs(10);
+        insert_by_priority(&mut q, low);
+        insert_by_priority(&mut q, Request::new(1, vec![1], 1, "fp32").with_priority(5));
+        insert_by_priority(&mut q, Request::new(2, vec![1], 1, "fp32").with_priority(5));
+        // static order: the high-priority pair first
+        assert_eq!(q.front().unwrap().id, 1);
+
+        // aging off: no reorder
+        assert!(!age_queue(&mut q, &SchedPolicy::default()));
+        assert_eq!(q.front().unwrap().id, 1);
+
+        // 1 level/s: 10s of wait beats static priority 5
+        let policy = SchedPolicy { age_rate: 1.0, ..SchedPolicy::default() };
+        assert!(age_queue(&mut q, &policy));
+        let order: Vec<u64> = q.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 1, 2], "fresh same-priority pair stays FIFO");
+    }
+
+    #[test]
+    fn aging_preserves_fifo_within_level() {
+        // same static priority, same (fresh) age: aging must never swap
+        let mut q = VecDeque::new();
+        for id in 0..6u64 {
+            insert_by_priority(&mut q, Request::new(id, vec![1], 1, "fp32"));
+        }
+        let policy = SchedPolicy { age_rate: 100.0, ..SchedPolicy::default() };
+        age_queue(&mut q, &policy);
+        let order: Vec<u64> = q.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn sched_policy_queue_bound() {
+        let unbounded = SchedPolicy::default();
+        assert!(!unbounded.queue_full(1_000_000));
+        let bounded = SchedPolicy { max_queue: 4, ..SchedPolicy::default() };
+        assert!(!bounded.queue_full(3));
+        assert!(bounded.queue_full(4));
+        assert!(bounded.queue_full(5));
     }
 
     #[test]

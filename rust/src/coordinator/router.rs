@@ -34,7 +34,8 @@ use crate::statecache::StateCache;
 
 use super::metrics::{Metrics, WorkerStat};
 use super::request::{
-    insert_by_priority, Event, FinishReason, FinishedRequest, Request, SubmitHandle,
+    age_queue, insert_by_priority, Event, FinishReason, FinishedRequest, Request,
+    SchedPolicy, SubmitHandle,
 };
 use super::scheduler::{Engine, EngineConfig};
 use super::speculative::{SpecConfig, SpecEngine};
@@ -101,6 +102,12 @@ pub struct PoolConfig {
     /// request's envelope at ingress, the owning worker fills in
     /// admission/prefill/decode spans and closes it at retire
     pub trace: Option<Arc<TraceSink>>,
+    /// overload policy.  `max_queue` bounds the *dispatcher backlog* (the
+    /// pool's single admission point — worker queues are already bounded
+    /// by routing capacity, so workers run with shedding disabled);
+    /// `age_rate` ages both the backlog and every worker's pending queue;
+    /// `preempt_threshold` applies inside each worker's engine.
+    pub sched: SchedPolicy,
 }
 
 impl Default for PoolConfig {
@@ -112,6 +119,7 @@ impl Default for PoolConfig {
             cache: None,
             hub: None,
             trace: None,
+            sched: SchedPolicy::default(),
         }
     }
 }
@@ -140,6 +148,12 @@ impl PoolConfig {
     /// Attach a span-trace sink shared by the dispatcher and all workers.
     pub fn with_trace(mut self, sink: Arc<TraceSink>) -> Self {
         self.trace = Some(sink);
+        self
+    }
+
+    /// Attach an overload policy (aging, preemption, bounded backlog).
+    pub fn with_sched(mut self, sched: SchedPolicy) -> Self {
+        self.sched = sched;
         self
     }
 }
@@ -361,16 +375,20 @@ where
             return Err(e); // the death notice fires on drop
         }
     };
+    // workers inherit the pool policy with shedding disabled: the
+    // dispatcher backlog is the single admission point, and the router
+    // never sends a worker more than its capacity anyway
+    let wpolicy = SchedPolicy { max_queue: 0, ..cfg.sched.clone() };
     let mut engine = match &cfg.spec {
         Some(sc) => {
-            let mut e = SpecEngine::new(be.as_ref(), sc.clone());
+            let mut e = SpecEngine::new(be.as_ref(), sc.clone()).with_policy(wpolicy);
             if let Some(c) = &cfg.cache {
                 e = e.with_cache(Arc::clone(c));
             }
             WorkerEngine::Spec(e)
         }
         None => {
-            let mut e = Engine::new(be.as_ref(), cfg.engine.clone());
+            let mut e = Engine::new(be.as_ref(), cfg.engine.clone()).with_policy(wpolicy);
             if let Some(c) = &cfg.cache {
                 e = e.with_cache(Arc::clone(c));
             }
@@ -435,6 +453,7 @@ fn dispatch(
     tx_done: mpsc::Sender<FinishedRequest>,
     dtel: Option<Arc<Telemetry>>,
     trace: Option<Arc<TraceSink>>,
+    sched: SchedPolicy,
 ) -> Result<PoolReport> {
     let mut router = Router::new(n);
     // the dispatcher keeps a copy of every request a worker currently
@@ -522,7 +541,11 @@ fn dispatch(
                 let fin = dropped_fin(&req, reason);
                 dispatcher.note_finish_reason(reason);
                 dispatcher.count(Counter::RequestsCompleted, 1);
-                dispatcher.note_latency(fin.total_s);
+                // no latency sample: the histogram holds requests that
+                // actually completed on a worker, not dispatcher-resolved
+                // drops (a dropped request's near-zero "latency" would
+                // deflate every percentile under load)
+                dispatcher.count(Counter::RequestsDropped, 1);
                 close_envelope(fin.id, reason);
                 req.emit(Event::Finished(fin.clone()));
                 let _ = tx_done.send(fin);
@@ -531,6 +554,13 @@ fn dispatch(
             }
         }
         dispatcher.note_queue_depth(backlog.len());
+
+        // priority aging: re-sort the backlog by effective priority so a
+        // starved low-priority request eventually places ahead of fresh
+        // high-priority arrivals
+        if age_queue(&mut backlog, &sched) {
+            dispatcher.count(Counter::AgingReorders, 1);
+        }
 
         // place as much backlog as worker capacity allows; `route` returning
         // None means every live worker is at capacity — wait for a `Done`
@@ -599,7 +629,9 @@ fn dispatch(
                 lost += 1;
                 let fin = dropped_fin(&req, FinishReason::WorkerDied);
                 dispatcher.count(Counter::RequestsCompleted, 1);
-                dispatcher.note_latency(fin.total_s);
+                // dropped, not completed: no latency sample (see the
+                // backlog lifecycle sweep above)
+                dispatcher.count(Counter::RequestsDropped, 1);
                 close_envelope(fin.id, FinishReason::WorkerDied);
                 req.emit(Event::Finished(fin.clone()));
                 let _ = tx_done.send(fin);
@@ -634,7 +666,19 @@ fn dispatch(
         match msg {
             Ok(Msg::Incoming(req)) => {
                 open_envelope(&req);
-                insert_by_priority(&mut backlog, req);
+                // admission control at the pool's single admission point:
+                // a full backlog sheds the arrival with a retriable
+                // terminal event and no latency sample
+                if sched.queue_full(backlog.len()) {
+                    let fin = dropped_fin(&req, FinishReason::Overloaded);
+                    dispatcher.note_finish_reason(FinishReason::Overloaded);
+                    dispatcher.count(Counter::RequestsCompleted, 1);
+                    close_envelope(fin.id, FinishReason::Overloaded);
+                    req.emit(Event::Finished(fin.clone()));
+                    let _ = tx_done.send(fin);
+                } else {
+                    insert_by_priority(&mut backlog, req);
+                }
             }
             Ok(Msg::IngressClosed) => ingress_open = false,
             Ok(Msg::Done { worker, fin }) => {
@@ -720,6 +764,7 @@ where
 
     let dtel = cfg.hub.as_ref().map(|h| h.register("dispatcher"));
     let dtrace = cfg.trace.as_ref().map(Arc::clone);
+    let dsched = cfg.sched.clone();
     if let (Some(hub), Some(cache)) = (&cfg.hub, &cfg.cache) {
         hub.attach_cache(Arc::clone(cache));
     }
@@ -752,7 +797,7 @@ where
     drop(pool_tx);
 
     let dispatcher = thread::spawn(move || {
-        dispatch(n, capacity, worker_tx, handles, pool_rx, tx_done, dtel, dtrace)
+        dispatch(n, capacity, worker_tx, handles, pool_rx, tx_done, dtel, dtrace, dsched)
     });
     ServePool {
         submit: Some(tx_req),
@@ -1475,6 +1520,102 @@ mod tests {
         assert_eq!(
             ends[0].get("args").unwrap().str_field("finish_reason").unwrap(),
             "WorkerDied"
+        );
+    }
+
+    #[test]
+    fn overload_dispatcher_sheds_backlog_and_retry_succeeds() {
+        use std::time::Duration;
+        // one capacity-1 worker held by a never-ending request, backlog
+        // bounded at 1: the second queued arrival must shed with a
+        // retriable Overloaded terminal, and once the backlog drains a
+        // retry completes normally — zero requests lost either way
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let pool = serve_pool(
+            make,
+            PoolConfig {
+                engine: EngineConfig { max_active: 1, greedy_chunking: true },
+                n_workers: 1,
+                sched: SchedPolicy { max_queue: 1, ..SchedPolicy::default() },
+                ..PoolConfig::default()
+            },
+        );
+        let prompt: Vec<u32> = (0..9).map(|j| ((j * 13 + 5) % 128) as u32).collect();
+        let victim = pool.submit(Request::new(0, prompt.clone(), 100_000, "fp32")).unwrap();
+        loop {
+            match victim.next_event_timeout(Duration::from_secs(60)) {
+                Some(Event::Token { .. }) => break,
+                Some(_) => {}
+                None => panic!("victim never streamed"),
+            }
+        }
+        // q1 fills the bounded backlog (the worker is at capacity); q2
+        // finds it full and sheds.  Ingress messages are ordered and the
+        // dispatcher re-runs placement between them, so the outcome is
+        // deterministic.
+        let q1 = pool.submit(Request::new(1, prompt.clone(), 4, "fp32")).unwrap();
+        let q2 = pool.submit(Request::new(2, prompt.clone(), 4, "fp32")).unwrap();
+        let shed = finished_within(&q2, 60);
+        assert_eq!(shed.finish_reason, FinishReason::Overloaded);
+        assert!(shed.generated.is_empty(), "shed before any admission");
+        // the freed slot serves the queued request, then a retry of the
+        // shed one lands in an empty backlog and completes
+        victim.cancel();
+        assert_eq!(finished_within(&victim, 60).finish_reason, FinishReason::Cancelled);
+        assert_eq!(finished_within(&q1, 60).finish_reason, FinishReason::Length);
+        let retry = pool.submit(Request::new(3, prompt, 4, "fp32")).unwrap();
+        assert_eq!(finished_within(&retry, 60).finish_reason, FinishReason::Length);
+        let report = pool.finish().unwrap();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        // zero lost: every submit reached exactly one terminal result
+        assert_eq!(report.merged.requests_completed, 4);
+        assert_eq!(report.merged.requests_shed, 1);
+        assert_eq!(report.merged.cancelled_requests, 1);
+        // latency purity: only the three worker-retired requests sampled
+        assert_eq!(report.merged.latency.count(), 3);
+        assert!(report.merged.summary().contains("shed=1"), "{}", report.merged.summary());
+    }
+
+    #[test]
+    fn dispatcher_drops_never_pollute_latency_histogram() {
+        use std::time::Duration;
+        // regression for the dispatcher recording `note_latency(total_s)`
+        // with `ttft_s: 0.0` for requests it resolves itself: a backlog
+        // cancellation must count under requests_dropped and leave the
+        // latency histogram to requests that actually completed on a worker
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let pool = serve_pool(
+            make,
+            PoolConfig {
+                engine: EngineConfig { max_active: 1, greedy_chunking: true },
+                n_workers: 1,
+                ..PoolConfig::default()
+            },
+        );
+        let prompt: Vec<u32> = (0..9).map(|j| ((j * 13 + 5) % 128) as u32).collect();
+        let victim = pool.submit(Request::new(0, prompt.clone(), 100_000, "fp32")).unwrap();
+        loop {
+            match victim.next_event_timeout(Duration::from_secs(60)) {
+                Some(Event::Token { .. }) => break,
+                Some(_) => {}
+                None => panic!("victim never streamed"),
+            }
+        }
+        let queued = pool.submit(Request::new(1, prompt, 4, "fp32")).unwrap();
+        queued.cancel();
+        assert_eq!(finished_within(&queued, 60).finish_reason, FinishReason::Cancelled);
+        victim.cancel();
+        assert_eq!(finished_within(&victim, 60).finish_reason, FinishReason::Cancelled);
+        let report = pool.finish().unwrap();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        assert_eq!(report.merged.requests_completed, 2);
+        assert_eq!(report.merged.cancelled_requests, 2);
+        // the dispatcher-resolved cancel is a drop, not a latency sample
+        assert_eq!(report.merged.requests_dropped, 1);
+        assert_eq!(
+            report.merged.latency.count(),
+            1,
+            "only the worker-retired request may sample latency"
         );
     }
 }

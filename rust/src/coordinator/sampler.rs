@@ -451,7 +451,7 @@ impl StopMatcher {
 /// fires).
 ///
 /// [`FinishedRequest::generated`]: super::request::FinishedRequest::generated
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub(crate) struct OutStream {
     matcher: Option<StopMatcher>,
     streamed: usize,

@@ -27,8 +27,8 @@ use super::admission::{finish_unadmitted, seed_from_cache, AdmissionSeed};
 use super::batcher::{full_bucket_plan, DecodeBatcher};
 use super::metrics::Metrics;
 use super::request::{
-    insert_by_priority, Event, FinishReason, FinishedRequest, InFlight, Request,
-    SubmitHandle,
+    age_queue, insert_by_priority, Event, FinishReason, FinishedRequest, InFlight,
+    Request, ResumeState, SchedPolicy, SubmitHandle,
 };
 use super::sampler::{OutStream, Sampler};
 use super::state::StatePool;
@@ -48,6 +48,13 @@ impl Default for EngineConfig {
     }
 }
 
+/// High-bit tag for the internal session ids preemption snapshots are
+/// filed under in the state cache, keeping them out of the user
+/// session-id space (a colliding user id would only see its entry
+/// replaced by a newer snapshot — never wrong tokens, since session
+/// lookups verify the stored transcript is a prefix of the prompt).
+const PREEMPT_SID_TAG: u64 = 1 << 63;
+
 pub struct Engine<'be> {
     be: &'be dyn InferenceBackend,
     cfg: EngineConfig,
@@ -59,6 +66,9 @@ pub struct Engine<'be> {
     cache: Option<Arc<StateCache>>,
     /// span-trace attachment (sink + worker lane); `None` = zero overhead
     trace: Option<TraceCtx>,
+    /// overload scheduling: priority aging, preemption, bounded queue.
+    /// The default disables all three (static-priority pre-policy behavior)
+    policy: SchedPolicy,
     pending: VecDeque<Request>,
     active: Vec<InFlight>,
     pub finished: Vec<FinishedRequest>,
@@ -78,6 +88,7 @@ impl<'be> Engine<'be> {
             prefill_buckets,
             cache: None,
             trace: None,
+            policy: SchedPolicy::default(),
             pending: VecDeque::new(),
             active: Vec::new(),
             finished: Vec::new(),
@@ -115,6 +126,17 @@ impl<'be> Engine<'be> {
         self.trace = Some(ctx);
     }
 
+    /// Attach an overload-scheduling policy: priority aging
+    /// (`age_rate` levels/second of queue wait), preemption
+    /// (`preempt_threshold`, requires an attached state cache for the
+    /// snapshot — see [`Engine::try_preempt`]), and bounded-queue
+    /// admission control (`max_queue` sheds with
+    /// [`FinishReason::Overloaded`]).
+    pub fn with_policy(mut self, policy: SchedPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
     /// Queue a request and return its streaming [`SubmitHandle`] (events
     /// buffer until `step()`/`run()` produces them; dropping the handle
     /// reverts to batch-style collection through [`Engine::finished`]).
@@ -134,6 +156,20 @@ impl<'be> Engine<'be> {
             if t.record_queued && t.sink.sampled(req.id) {
                 t.sink.begin_request(req.id, req.prompt.len(), req.priority);
             }
+        }
+        // admission control: a full pending queue sheds the arrival
+        // immediately with a retriable terminal event (preempted requests
+        // re-enter through `preempt`, never through here — a victim is
+        // never shed)
+        if self.policy.queue_full(self.pending.len()) {
+            finish_unadmitted(
+                &mut self.metrics,
+                self.trace.as_ref(),
+                &mut self.finished,
+                req,
+                FinishReason::Overloaded,
+            );
+            return;
         }
         insert_by_priority(&mut self.pending, req);
         self.metrics
@@ -159,14 +195,33 @@ impl<'be> Engine<'be> {
         (chunks, rest + 1)
     }
 
-    /// Admit pending requests (prefill) while capacity lasts.
+    /// Admit pending requests (prefill) while capacity lasts.  Priority
+    /// aging re-sorts the queue first (stable, by effective priority), and
+    /// when the engine is full a qualifying front request may evict the
+    /// lowest-priority running one (see [`Engine::try_preempt`]).
     fn admit(&mut self) -> Result<()> {
-        while let Some(_peek) = self.pending.front() {
+        if age_queue(&mut self.pending, &self.policy) {
+            self.metrics.count(Counter::AgingReorders, 1);
+        }
+        while self.pending.front().is_some() {
             if self.pool.in_use() >= self.cfg.max_active {
-                break;
+                if !self.try_preempt() {
+                    break;
+                }
+                continue; // a slot was freed; the front is the preemptor
             }
-            let Some(slot) = self.pool.alloc() else { break };
+            let Some(slot) = self.pool.alloc() else {
+                if !self.try_preempt() {
+                    break;
+                }
+                continue;
+            };
             let req = self.pending.pop_front().unwrap();
+            if req.resume.is_some() {
+                // a preempted request continues where it stopped
+                self.admit_resumed(req, slot)?;
+                continue;
+            }
             // latency anchors at request creation, not admission: queue
             // time (engine pending list, pool dispatcher backlog) is part
             // of the user-visible TTFT
@@ -312,6 +367,208 @@ impl<'be> Engine<'be> {
             } else {
                 self.active.push(infl);
             }
+        }
+        Ok(())
+    }
+
+    /// Preemption check at a full engine: when the queue front's effective
+    /// priority clears `preempt_threshold` and a strictly lower-priority
+    /// (static) request is running, snapshot that victim's state into the
+    /// state cache, free its slot, and requeue it carrying a
+    /// [`ResumeState`].  The strict static-priority requirement is the
+    /// no-livelock invariant: the requeued victim always sorts behind the
+    /// preemptor, so the freed slot goes to the preemptor, never back to
+    /// the victim.  Requires an attached state cache — re-prefilling a
+    /// quantized variant under a different chunk plan would not be
+    /// bit-exact, so without a cache preemption stays off.
+    fn try_preempt(&mut self) -> bool {
+        let Some(threshold) = self.policy.preempt_threshold else {
+            return false;
+        };
+        if self.cache.is_none() {
+            return false;
+        }
+        let Some(front) = self.pending.front() else {
+            return false;
+        };
+        // an already-preempted request never preempts in turn: one snapshot
+        // per victim at a time keeps preemption from thrashing
+        if front.resume.is_some()
+            || self.policy.effective_priority(front, Instant::now()) < threshold as i64
+        {
+            return false;
+        }
+        let front_priority = front.priority;
+        let victim = self
+            .active
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, a)| (a.req.priority, a.generated.len(), a.req.id))
+            .map(|(i, _)| i);
+        let Some(vi) = victim else { return false };
+        if self.active[vi].req.priority >= front_priority {
+            return false;
+        }
+        let infl = self.active.swap_remove(vi);
+        self.preempt(infl);
+        true
+    }
+
+    /// Evict one running request: publish its exact mid-generation state
+    /// as an internal session-cache entry (same slot invariant as
+    /// [`Engine::retire`] — the state has consumed
+    /// `prompt ++ generated[..n-1]`, and the last sampled token re-feeds
+    /// at resume), release the slot, and requeue the request with its
+    /// sampler/stream progress attached.  The client stream sees nothing:
+    /// no terminal event, no latency sample — the continuation is seamless.
+    fn preempt(&mut self, infl: InFlight) {
+        let InFlight {
+            mut req,
+            slot,
+            generated,
+            first_token_at,
+            last_token_at,
+            sampler,
+            stream,
+            ..
+        } = infl;
+        let sid = PREEMPT_SID_TAG | req.id;
+        let consumed = generated.len().saturating_sub(1);
+        let mut toks = req.prompt.clone();
+        toks.extend_from_slice(&generated[..consumed]);
+        let cache = self.cache.as_ref().expect("preemption requires a cache");
+        let st = self.pool.get(slot);
+        cache.insert_session(sid, &req.variant, &toks, &st.conv, &st.ssm);
+        self.pool.release(slot);
+        self.metrics.note_finish_reason(FinishReason::Preempted);
+        if let Some(t) = &self.trace {
+            if t.sink.sampled(req.id) {
+                t.sink.instant(
+                    req.id,
+                    "preempted",
+                    vec![("generated", num(generated.len() as f64))],
+                );
+            }
+        }
+        req.resume = Some(Box::new(ResumeState {
+            generated,
+            sampler,
+            stream,
+            first_token_at,
+            last_token_at,
+            snapshot_sid: sid,
+        }));
+        insert_by_priority(&mut self.pending, req);
+        self.metrics
+            .note_queue_depth(self.pending.len() + self.active.len());
+    }
+
+    /// Re-admit a preempted request: rebuild its state (session-cache hit
+    /// on the preemption snapshot → zero prefill; a cold miss re-prefills
+    /// `prompt ++ generated[..n-1]` — slower, still exact for fp32),
+    /// restore the saved sampler/stream, and continue decoding at the next
+    /// position.  No FirstToken event, TTFT sample, or PromptTokens
+    /// re-count — from the client's view this is the same in-flight
+    /// request.
+    fn admit_resumed(&mut self, mut req: Request, slot: usize) -> Result<()> {
+        let resume = *req.resume.take().expect("resume state present");
+        let submitted = req.submitted_at;
+        // the state to rebuild has consumed prompt ++ generated[..n-1];
+        // the final transcript token re-feeds through decode below
+        let mut transcript = req.prompt.clone();
+        transcript.extend_from_slice(&resume.generated);
+        let plan_len = transcript.len() - 1;
+        let (mut chunks, _) = full_bucket_plan(&self.prefill_buckets, plan_len);
+        let mut offset = 0usize;
+        if let Some(cache) = &self.cache {
+            if let Some(s) =
+                cache.lookup_session(resume.snapshot_sid, &req.variant, &transcript)
+            {
+                if self.pool.seed(slot, &s.conv, &s.ssm) {
+                    offset = s.covered;
+                    chunks = full_bucket_plan(&self.prefill_buckets, plan_len - s.covered).0;
+                    self.metrics.count(Counter::CacheHits, 1);
+                    self.metrics.count(Counter::CacheTokensSaved, offset as u64);
+                }
+            }
+        }
+        if let Some(t) = &self.trace {
+            if t.sink.sampled(req.id) {
+                t.sink.instant(
+                    req.id,
+                    "resumed",
+                    vec![
+                        ("slot", num(slot as f64)),
+                        ("tokens_saved", num(offset as f64)),
+                    ],
+                );
+            }
+        }
+        let remainder = transcript.len() - offset - chunks.iter().sum::<usize>();
+        for chunk_len in chunks {
+            let toks: Vec<i32> = transcript[offset..offset + chunk_len]
+                .iter()
+                .map(|t| *t as i32)
+                .collect();
+            let st = self.pool.get(slot);
+            let call_t0 = Instant::now();
+            let out = self.be.prefill(&req.variant, &toks, &st.conv, &st.ssm)?;
+            self.metrics.note_prefill_call(call_t0.elapsed().as_secs_f64());
+            let stm = self.pool.get_mut(slot);
+            stm.conv = out.conv_state;
+            stm.ssm = out.ssm_state;
+            offset += chunk_len;
+            self.metrics.count(Counter::PrefillChunks, 1);
+        }
+        let mut last_logits: Option<Vec<f32>> = None;
+        for i in 0..remainder {
+            let tok = transcript[offset + i] as i32;
+            let st = self.pool.get(slot);
+            let call_t0 = Instant::now();
+            let out = self.be.decode(&req.variant, 1, &st.conv, &st.ssm, &[tok])?;
+            self.metrics.note_decode_call(call_t0.elapsed().as_secs_f64());
+            let stm = self.pool.get_mut(slot);
+            stm.conv = out.conv_state;
+            stm.ssm = out.ssm_state;
+            last_logits = Some(out.logits);
+            self.metrics.count(Counter::DecodeSteps, 1);
+            self.metrics.count(Counter::DecodeBatchSlots, 1);
+        }
+        let vocab = self.be.cfg().vocab_size;
+        let mut sampler = resume.sampler;
+        let mut generated = resume.generated;
+        // position-keyed draws: sampling at position `generated.len()`
+        // continues the exact sequence an unpreempted run would produce
+        let tok =
+            sampler.sample(&last_logits.expect("remainder >= 1")[..vocab], generated.len());
+        sampler.observe(tok);
+        let now = Instant::now();
+        if let Some(prev) = resume.last_token_at {
+            self.metrics
+                .note_tpot(now.saturating_duration_since(prev).as_secs_f64());
+        }
+        generated.push(tok);
+        let mut infl = InFlight {
+            next_token: tok,
+            slot,
+            generated,
+            submitted,
+            first_token_at: resume.first_token_at,
+            last_token_at: Some(now),
+            sampler,
+            stream: resume.stream,
+            req,
+        };
+        let stopped_seq = infl.stream.push(&infl.req, tok);
+        self.metrics.count(Counter::TokensGenerated, 1);
+        if stopped_seq {
+            self.retire(infl, FinishReason::StopSequence);
+        } else if infl.req.stop_token == Some(tok) {
+            self.retire(infl, FinishReason::StopToken);
+        } else if infl.generated.len() >= infl.req.max_new_tokens {
+            self.retire(infl, FinishReason::Length);
+        } else {
+            self.active.push(infl);
         }
         Ok(())
     }
@@ -1158,5 +1415,185 @@ mod tests {
         assert_eq!(snap.latency.count(), m.requests_completed);
         // busy time round-trips through integer microseconds
         assert!((snap.busy_s - m.busy_s).abs() < 1e-2, "{} vs {}", snap.busy_s, m.busy_s);
+    }
+
+    #[test]
+    fn aging_promotes_starved_low_priority_over_steady_high_stream() {
+        use std::time::Duration;
+        // a low-priority request that has waited 10s must overtake fresh
+        // high-priority arrivals once its aged effective priority clears
+        // theirs — and must not without aging
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..9).map(|j| ((j * 5) % vocab) as u32).collect();
+        let run = |age_rate: f64| -> (Vec<u64>, u64) {
+            let mut eng =
+                Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true })
+                    .with_policy(SchedPolicy { age_rate, ..SchedPolicy::default() });
+            let mut low = Request::new(0, prompt.clone(), 2, "fp32");
+            low.submitted_at = low
+                .submitted_at
+                .checked_sub(Duration::from_secs(10))
+                .expect("backdate submitted_at");
+            eng.submit(low);
+            eng.submit(Request::new(1, prompt.clone(), 2, "fp32").with_priority(5));
+            eng.submit(Request::new(2, prompt.clone(), 2, "fp32").with_priority(5));
+            eng.run().unwrap();
+            (
+                eng.finished.iter().map(|f| f.id).collect(),
+                eng.metrics.aging_reorders,
+            )
+        };
+        let (off, off_reorders) = run(0.0);
+        assert_eq!(off, vec![1, 2, 0], "no aging: strict priority order");
+        assert_eq!(off_reorders, 0);
+        let (on, on_reorders) = run(1.0);
+        // 0 + 10s * 1/s = 10 > 5; the two high-priority requests stay FIFO
+        assert_eq!(on, vec![0, 1, 2], "aged request must run first");
+        assert!(on_reorders >= 1, "reorder must be counted");
+    }
+
+    #[test]
+    fn preempt_resumes_token_exact_with_seamless_stream() {
+        use crate::statecache::{CacheConfig, StateCache};
+        // a high-priority arrival evicts the running request; the victim
+        // later resumes from its snapshot and its full output — batch and
+        // streamed — is identical to an undisturbed greedy run
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..33).map(|j| ((j * 13) % vocab) as u32).collect();
+        let hi_prompt: Vec<u32> = (0..9).map(|j| ((j * 7 + 2) % vocab) as u32).collect();
+        let mut probe = Engine::new(&be, EngineConfig::default());
+        probe.submit(Request::new(9, prompt.clone(), 16, "fp32"));
+        probe.run().unwrap();
+        let want = probe.finished[0].generated.clone();
+        assert_eq!(want.len(), 16);
+
+        let cache = Arc::new(StateCache::new(CacheConfig::default()));
+        let mut eng =
+            Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true })
+                .with_cache(Arc::clone(&cache))
+                .with_policy(SchedPolicy {
+                    preempt_threshold: Some(5),
+                    ..SchedPolicy::default()
+                });
+        let v = eng.submit(Request::new(0, prompt.clone(), 16, "fp32"));
+        let mut streamed = 0usize;
+        while streamed < 4 {
+            eng.step().unwrap();
+            while let Some(ev) = v.try_event() {
+                if matches!(ev, Event::Token { .. }) {
+                    streamed += 1;
+                }
+            }
+        }
+        let hi = eng.submit(Request::new(1, hi_prompt, 2, "fp32").with_priority(9));
+        eng.run().unwrap();
+
+        assert_eq!(eng.metrics.preempted_requests, 1, "{}", eng.metrics.summary());
+        // the resume was a session-cache hit on the preemption snapshot,
+        // which covered prompt ++ generated[..n-1]
+        assert_eq!(eng.metrics.cache_hits, 1, "{}", eng.metrics.summary());
+        assert_eq!(
+            eng.metrics.cache_tokens_saved,
+            (prompt.len() + streamed - 1) as u64
+        );
+        // the preemptor ran first on the freed slot
+        let order: Vec<u64> = eng.finished.iter().map(|f| f.id).collect();
+        assert_eq!(order, vec![1, 0]);
+        let v_fin = eng.finished.iter().find(|f| f.id == 0).unwrap();
+        assert_eq!(v_fin.finish_reason, FinishReason::Length);
+        assert_eq!(v_fin.generated, want, "preemption changed the output");
+        // the client stream is seamless: one FirstToken, contiguous token
+        // indexes across the preemption, one terminal event
+        let (first, toks, fin) = drain(&v);
+        assert!(first);
+        assert_eq!(toks, want);
+        assert_eq!(fin.expect("terminal").finish_reason, FinishReason::Length);
+        let (_, _, hi_fin) = drain(&hi);
+        assert_eq!(hi_fin.expect("terminal").finish_reason, FinishReason::Length);
+        // a preemption is not a completion: both requests retired exactly
+        // once, each with one latency sample
+        assert_eq!(eng.metrics.requests_completed, 2);
+        assert_eq!(eng.metrics.latency.count(), 2);
+        assert!(eng.metrics.summary().contains("preempted=1"), "{}", eng.metrics.summary());
+    }
+
+    #[test]
+    fn preempt_sampled_stream_is_bit_exact_across_preemption() {
+        use super::super::sampler::SamplingParams;
+        use crate::statecache::{CacheConfig, StateCache};
+        // position-keyed draws + carried sampler state: a preempted sampled
+        // stream continues the exact sequence of an undisturbed run
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..33).map(|j| ((j * 13) % vocab) as u32).collect();
+        let hi_prompt: Vec<u32> = (0..9).map(|j| ((j * 7 + 2) % vocab) as u32).collect();
+        let sp = SamplingParams { temperature: 1.0, seed: 1234, ..SamplingParams::default() };
+        let mut probe = Engine::new(&be, EngineConfig::default());
+        probe.submit(Request::new(9, prompt.clone(), 16, "fp32").with_sampling(sp.clone()));
+        probe.run().unwrap();
+        let want = probe.finished[0].generated.clone();
+
+        let cache = Arc::new(StateCache::new(CacheConfig::default()));
+        let mut eng =
+            Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true })
+                .with_cache(Arc::clone(&cache))
+                .with_policy(SchedPolicy {
+                    preempt_threshold: Some(5),
+                    ..SchedPolicy::default()
+                });
+        let v = eng.submit(Request::new(0, prompt, 16, "fp32").with_sampling(sp));
+        let mut streamed = 0usize;
+        while streamed < 4 {
+            eng.step().unwrap();
+            while let Some(ev) = v.try_event() {
+                if matches!(ev, Event::Token { .. }) {
+                    streamed += 1;
+                }
+            }
+        }
+        eng.submit(Request::new(1, hi_prompt, 2, "fp32").with_priority(9));
+        eng.run().unwrap();
+        assert_eq!(eng.metrics.preempted_requests, 1);
+        let v_fin = eng.finished.iter().find(|f| f.id == 0).unwrap();
+        assert_eq!(v_fin.generated, want, "sampled stream diverged across preemption");
+    }
+
+    #[test]
+    fn overload_shed_returns_overloaded_and_retry_succeeds() {
+        // a full pending queue sheds the arrival synchronously with a
+        // retriable terminal event; the shed request never pollutes the
+        // latency histogram, and a later retry completes normally
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..9).map(|j| ((j * 5) % vocab) as u32).collect();
+        let mut eng =
+            Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true })
+                .with_policy(SchedPolicy { max_queue: 2, ..SchedPolicy::default() });
+        eng.submit(Request::new(0, prompt.clone(), 2, "fp32"));
+        eng.submit(Request::new(1, prompt.clone(), 2, "fp32"));
+        let shed = eng.submit(Request::new(2, prompt.clone(), 2, "fp32"));
+        // the shed decision is synchronous at submit
+        let (first, toks, fin) = drain(&shed);
+        assert!(!first, "a shed request must not see FirstToken");
+        assert!(toks.is_empty());
+        let fin = fin.expect("synchronous terminal event");
+        assert_eq!(fin.finish_reason, FinishReason::Overloaded);
+        assert!(fin.generated.is_empty());
+        assert_eq!(eng.metrics.requests_shed, 1);
+        assert_eq!(eng.metrics.requests_dropped, 0, "sheds are not drops");
+        eng.run().unwrap();
+        // the retry lands in a drained queue and completes
+        let retry = eng.submit(Request::new(3, prompt, 2, "fp32"));
+        eng.run().unwrap();
+        let (_, _, fin) = drain(&retry);
+        assert_eq!(fin.expect("terminal").finish_reason, FinishReason::Length);
+        // zero requests lost: every submit reached a terminal event
+        assert_eq!(eng.metrics.requests_completed, 4);
+        assert_eq!(eng.finished.len(), 4);
+        // the latency histogram holds completed requests only
+        assert_eq!(eng.metrics.latency.count(), 3);
+        assert!(eng.metrics.summary().contains("shed=1"), "{}", eng.metrics.summary());
     }
 }

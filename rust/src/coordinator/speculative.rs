@@ -60,8 +60,8 @@ use super::admission::{finish_unadmitted, seed_from_cache, AdmissionSeed};
 use super::batcher::{full_bucket_plan, smallest_covering};
 use super::metrics::Metrics;
 use super::request::{
-    insert_by_priority, Event, FinishReason, FinishedRequest, Request, SpecStats,
-    SubmitHandle,
+    age_queue, insert_by_priority, Event, FinishReason, FinishedRequest, Request,
+    SchedPolicy, SpecStats, SubmitHandle,
 };
 use super::sampler::{
     keyed_uniform, OutStream, Sampler, SALT_ACCEPT, SALT_RESAMPLE, SALT_SAMPLE,
@@ -168,6 +168,11 @@ pub struct SpecEngine<'be> {
     pub metrics: Metrics,
     /// per-request span tracing; `None` = zero overhead
     trace: Option<TraceCtx>,
+    /// overload policy: priority aging + bounded-queue shedding.  The
+    /// speculative engine does not preempt (an active request holds two
+    /// coupled slots plus verifier debt — no single-state snapshot to
+    /// resume from); qualifying traffic preempts on the plain engine.
+    policy: SchedPolicy,
 }
 
 impl<'be> SpecEngine<'be> {
@@ -250,6 +255,7 @@ impl<'be> SpecEngine<'be> {
             finished: Vec::new(),
             metrics: Metrics::default(),
             trace: None,
+            policy: SchedPolicy::default(),
         }
     }
 
@@ -279,6 +285,14 @@ impl<'be> SpecEngine<'be> {
         self.trace = Some(ctx);
     }
 
+    /// Attach an overload policy (aging + bounded queue; see
+    /// [`SchedPolicy`]).  `preempt_threshold` is ignored here — see the
+    /// field note on `policy`.
+    pub fn with_policy(mut self, policy: SchedPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
     /// Queue a request and return its streaming [`SubmitHandle`].  Token
     /// events are emitted only when the verifier consolidates a round —
     /// the stream carries committed tokens, never unverified drafts.
@@ -296,6 +310,19 @@ impl<'be> SpecEngine<'be> {
             if t.record_queued && t.sink.sampled(req.id) {
                 t.sink.begin_request(req.id, req.prompt.len(), req.priority);
             }
+        }
+        // admission control: a full pending queue sheds the arrival
+        // immediately with a retriable terminal event (same contract as
+        // Engine::enqueue)
+        if self.policy.queue_full(self.pending.len()) {
+            finish_unadmitted(
+                &mut self.metrics,
+                self.trace.as_ref(),
+                &mut self.finished,
+                req,
+                FinishReason::Overloaded,
+            );
+            return;
         }
         insert_by_priority(&mut self.pending, req);
         self.metrics
@@ -347,8 +374,12 @@ impl<'be> SpecEngine<'be> {
         Ok(call_s)
     }
 
-    /// Admit pending requests while two state slots remain.
+    /// Admit pending requests while two state slots remain.  Priority
+    /// aging re-sorts the queue first (stable, by effective priority).
     fn admit(&mut self) -> Result<()> {
+        if age_queue(&mut self.pending, &self.policy) {
+            self.metrics.count(Counter::AgingReorders, 1);
+        }
         while !self.pending.is_empty() && self.active.len() < self.cfg.max_active {
             if self.pool.capacity() - self.pool.in_use() < 2 {
                 break;

@@ -21,8 +21,8 @@ use anyhow::{bail, Result};
 use fastmamba::backend::{self, BackendKind, InferenceBackend, NativeBackend};
 use fastmamba::config::{AcceleratorConfig, ModelConfig};
 use fastmamba::coordinator::{
-    serve_pool, Engine, EngineConfig, Event, FinishReason, PoolConfig, Request, SpecConfig,
-    SpecEngine, SubmitHandle,
+    serve_pool, Engine, EngineConfig, Event, FinishReason, PoolConfig, Request, SchedPolicy,
+    SpecConfig, SpecEngine, SubmitHandle,
 };
 use fastmamba::obs::{serve_metrics, TelemetryHub, TraceSink};
 use fastmamba::statecache::{CacheConfig, StateCache};
@@ -52,6 +52,13 @@ fn main() -> Result<()> {
                  \n           --state-cache-mb N (0 = off; shared SSM prefix/session cache)\
                  \n           --stream (print tokens as they are produced)\
                  \n           --deadline-ms N (per-request completion deadline)\
+                 \n           --max-queue N (bound the pending queue; excess submissions are\
+                 \n                          shed with Overloaded / HTTP 429; 0 = unbounded)\
+                 \n           --age-rate R (priority levels gained per second of queue wait;\
+                 \n                         0 = strict static priority)\
+                 \n           --preempt-threshold P (arrivals at effective priority >= P evict\
+                 \n                                  the lowest-priority running request; needs\
+                 \n                                  --state-cache-mb > 0 for exact resume)\
                  \n           --http-addr HOST:PORT (OpenAI-style /v1/completions + SSE frontend;\
                  \n                                  port 0 picks a free port, printed on startup)\
                  \n           --http-requests N (serve N completions then exit; 0 = run until killed)\
@@ -99,6 +106,30 @@ fn backend_kind(args: &Args) -> Result<BackendKind> {
     Ok(kind)
 }
 
+/// Overload-safe scheduling knobs shared by every serve path (see README
+/// "Production scheduling"): `--max-queue` bounds admission, `--age-rate`
+/// ages queued priorities, `--preempt-threshold` arms preemption.
+fn sched_policy(args: &Args) -> Result<SchedPolicy> {
+    let mut policy = SchedPolicy {
+        age_rate: args.f64_or("age-rate", 0.0),
+        max_queue: args.usize_or("max-queue", 0),
+        ..SchedPolicy::default()
+    };
+    if let Some(raw) = args.get("preempt-threshold") {
+        let Ok(t) = raw.parse::<i32>() else {
+            bail!("--preempt-threshold must be an integer priority, got {raw:?}");
+        };
+        policy.preempt_threshold = Some(t);
+        if args.usize_or("state-cache-mb", 0) == 0 {
+            eprintln!(
+                "note: --preempt-threshold has no effect without --state-cache-mb > 0 \
+                 (preempted state snapshots live in the state cache)"
+            );
+        }
+    }
+    Ok(policy)
+}
+
 fn serve(args: &Args) -> Result<()> {
     // --http-addr switches from the synthetic trace to the HTTP frontend
     // (requests come from the network instead of the corpus sampler)
@@ -129,6 +160,8 @@ fn serve(args: &Args) -> Result<()> {
     // single-engine/pool).
     let stream = args.bool("stream");
     let deadline_ms = args.usize_or("deadline-ms", 0);
+    // overload-safe scheduling: admission bound, priority aging, preemption
+    let sched = sched_policy(args)?;
     // observability (see README "Observability"): a telemetry hub backs
     // both the live /metrics endpoint and the periodic status line; the
     // trace sink records per-request spans for --trace-out
@@ -222,6 +255,7 @@ fn serve(args: &Args) -> Result<()> {
                 cache: cache.clone(),
                 hub: hub.clone(),
                 trace: trace_sink.clone(),
+                sched: sched.clone(),
             },
         );
         let mut handles = Vec::with_capacity(n_requests);
@@ -322,7 +356,8 @@ fn serve(args: &Args) -> Result<()> {
                 max_active,
                 reseed_drafter: true,
             },
-        );
+        )
+        .with_policy(sched.clone());
         if let Some(c) = &cache {
             engine = engine.with_cache(Arc::clone(c));
         }
@@ -365,7 +400,8 @@ fn serve(args: &Args) -> Result<()> {
         (engine.finished, engine.metrics)
     } else {
         let mut engine =
-            Engine::new(be.as_ref(), EngineConfig { max_active, greedy_chunking: true });
+            Engine::new(be.as_ref(), EngineConfig { max_active, greedy_chunking: true })
+                .with_policy(sched.clone());
         if let Some(c) = &cache {
             engine = engine.with_cache(Arc::clone(c));
         }
@@ -438,13 +474,14 @@ fn print_finish_reasons(finished: &[fastmamba::coordinator::FinishedRequest]) {
     let count = |r: FinishReason| finished.iter().filter(|f| f.finish_reason == r).count();
     println!(
         "finish_reasons: length={} stop={} stop_sequence={} cancelled={} deadline={} \
-         worker_died={}",
+         worker_died={} overloaded={}",
         count(FinishReason::Length),
         count(FinishReason::StopToken),
         count(FinishReason::StopSequence),
         count(FinishReason::Cancelled),
         count(FinishReason::Deadline),
         count(FinishReason::WorkerDied),
+        count(FinishReason::Overloaded),
     );
 }
 
@@ -469,6 +506,7 @@ fn serve_over_http(args: &Args) -> Result<()> {
     let cache_mb = args.usize_or("state-cache-mb", 0);
     let cache: Option<Arc<StateCache>> =
         (cache_mb > 0).then(|| Arc::new(StateCache::new(CacheConfig::with_mb(cache_mb))));
+    let sched = sched_policy(args)?;
     let metrics_addr = args.get("metrics-addr");
     let metrics_json = args.get("metrics-json");
     let trace_out = args.get("trace-out");
@@ -530,6 +568,7 @@ fn serve_over_http(args: &Args) -> Result<()> {
                 cache: cache.clone(),
                 hub: hub.clone(),
                 trace: trace_sink.clone(),
+                sched: sched.clone(),
             },
         );
         let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
@@ -588,7 +627,8 @@ fn serve_over_http(args: &Args) -> Result<()> {
                     max_active,
                     reseed_drafter: true,
                 },
-            );
+            )
+            .with_policy(sched.clone());
             if let Some(c) = &cache {
                 engine = engine.with_cache(Arc::clone(c));
             }
@@ -616,7 +656,8 @@ fn serve_over_http(args: &Args) -> Result<()> {
             (engine.finished, engine.metrics)
         } else {
             let mut engine =
-                Engine::new(be.as_ref(), EngineConfig { max_active, greedy_chunking: true });
+                Engine::new(be.as_ref(), EngineConfig { max_active, greedy_chunking: true })
+                    .with_policy(sched.clone());
             if let Some(c) = &cache {
                 engine = engine.with_cache(Arc::clone(c));
             }

@@ -46,10 +46,23 @@ pub enum Counter {
     CacheTokensSaved,
     CancelledRequests,
     DeadlineExpired,
+    /// requests evicted from a state slot by a higher-priority arrival
+    /// (each later resumes and finishes under its real reason)
+    PreemptedRequests,
+    /// requests shed by admission control (bounded queue full at
+    /// submission; terminal reason `Overloaded`)
+    RequestsShed,
+    /// requests dropped undone at the dispatcher (cancel/deadline/worker
+    /// death resolved from the backlog — no token was ever produced, so
+    /// they stay out of the latency histograms)
+    RequestsDropped,
+    /// pending-queue re-orderings where priority aging promoted at least
+    /// one request past a higher-static-priority one
+    AgingReorders,
     BusyMicros,
 }
 
-pub const N_COUNTERS: usize = 20;
+pub const N_COUNTERS: usize = 24;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -72,6 +85,10 @@ impl Counter {
         Counter::CacheTokensSaved,
         Counter::CancelledRequests,
         Counter::DeadlineExpired,
+        Counter::PreemptedRequests,
+        Counter::RequestsShed,
+        Counter::RequestsDropped,
+        Counter::AgingReorders,
         Counter::BusyMicros,
     ];
 
@@ -101,6 +118,10 @@ impl Counter {
             Counter::CacheTokensSaved => "cache_tokens_saved",
             Counter::CancelledRequests => "cancelled_requests",
             Counter::DeadlineExpired => "deadline_expired",
+            Counter::PreemptedRequests => "preempted_requests",
+            Counter::RequestsShed => "requests_shed",
+            Counter::RequestsDropped => "requests_dropped",
+            Counter::AgingReorders => "aging_reorders",
             Counter::BusyMicros => "busy_microseconds",
         }
     }

@@ -198,6 +198,10 @@ pub fn finish_reason_str(reason: FinishReason) -> &'static str {
         FinishReason::Cancelled => "cancelled",
         FinishReason::Deadline => "deadline",
         FinishReason::WorkerDied => "worker_died",
+        // internal marker — a preempted request resumes and retires with a
+        // real terminal reason, so this never reaches a client response
+        FinishReason::Preempted => "preempted",
+        FinishReason::Overloaded => "overloaded",
     }
 }
 
@@ -417,5 +421,22 @@ mod tests {
         assert_eq!(finish_reason_str(FinishReason::Cancelled), "cancelled");
         assert_eq!(finish_reason_str(FinishReason::Deadline), "deadline");
         assert_eq!(finish_reason_str(FinishReason::WorkerDied), "worker_died");
+        assert_eq!(finish_reason_str(FinishReason::Preempted), "preempted");
+        assert_eq!(finish_reason_str(FinishReason::Overloaded), "overloaded");
+    }
+
+    #[test]
+    fn server_stop_sequence_with_newline_parses_and_serializes_one_line() {
+        // `stop` strings may contain raw newlines; they must survive the
+        // body parse and the serializer must keep every response body on a
+        // single line (SSE frames rely on it — raw newlines would split a
+        // frame mid-payload without the multi-line `data:` encoding)
+        let p = parse_completion(br#"{"prompt": [1], "stop": "12\n7"}"#, 1, &cfg()).unwrap();
+        assert_eq!(p.req.sampling.stop_sequences, vec!["12\n7".to_string()]);
+        let msg = format!("stopped at {:?}", p.req.sampling.stop_sequences[0]);
+        let body = error_json(&msg, "test");
+        assert!(!body.contains('\n'), "serialized body must be newline-free: {body:?}");
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("error").unwrap().str_field("message").unwrap(), msg);
     }
 }

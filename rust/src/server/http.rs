@@ -60,14 +60,27 @@ pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<HttpReque
     if method.is_empty() || path.is_empty() {
         bail!("malformed request line: {request_line:?}");
     }
-    let mut content_length = 0usize;
+    let mut content_length: Option<usize> = None;
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
             if name.eq_ignore_ascii_case("content-length") {
-                content_length = value.trim().parse().context("bad Content-Length")?;
+                let n: usize = value.trim().parse().context("bad Content-Length")?;
+                // duplicate Content-Length headers with differing values are
+                // a request-smuggling vector — reject instead of letting the
+                // last one silently win
+                if content_length.is_some_and(|prev| prev != n) {
+                    bail!("conflicting Content-Length headers");
+                }
+                content_length = Some(n);
+            } else if name.eq_ignore_ascii_case("transfer-encoding") {
+                // this frontend frames bodies by Content-Length only; a
+                // Transfer-Encoding header (chunked or otherwise) would
+                // desynchronize body parsing, so it is rejected outright
+                bail!("Transfer-Encoding not supported (Content-Length bodies only)");
             }
         }
     }
+    let content_length = content_length.unwrap_or(0);
     if content_length > max_body {
         bail!("request body {content_length} bytes exceeds limit {max_body}");
     }
@@ -90,11 +103,28 @@ pub fn write_response(
     content_type: &str,
     body: &str,
 ) -> Result<()> {
-    let response = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
-         Connection: close\r\n\r\n{body}",
+    write_response_extra(stream, status, content_type, &[], body)
+}
+
+/// [`write_response`] with additional response headers (e.g. `Retry-After`
+/// on a 429).  Header values must be single-line tokens — no validation is
+/// done here.
+pub fn write_response_extra(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &str,
+) -> Result<()> {
+    let mut response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
         body.len()
     );
+    for (name, value) in extra_headers {
+        response.push_str(&format!("{name}: {value}\r\n"));
+    }
+    response.push_str("Connection: close\r\n\r\n");
+    response.push_str(body);
     stream.write_all(response.as_bytes())?;
     stream.flush()?;
     Ok(())
@@ -111,10 +141,25 @@ pub fn write_sse_headers(stream: &mut TcpStream) -> Result<()> {
     Ok(())
 }
 
-/// One SSE frame: `data: <payload>\n\n`, flushed immediately (each frame
-/// is one streamed event — TTFT on the wire is TTFT in the engine).
+/// Render one SSE frame.  Per the SSE spec a payload newline becomes a
+/// line break *between* `data:` lines of the same frame (clients rejoin
+/// them with `\n`), so a multi-line payload can never terminate a frame
+/// early — `data: {data}\n\n` with an embedded newline would.
+pub fn sse_frame(data: &str) -> String {
+    let mut frame = String::with_capacity(data.len() + 16);
+    for line in data.split('\n') {
+        frame.push_str("data: ");
+        frame.push_str(line);
+        frame.push('\n');
+    }
+    frame.push('\n');
+    frame
+}
+
+/// One SSE frame, flushed immediately (each frame is one streamed event —
+/// TTFT on the wire is TTFT in the engine).
 pub fn write_sse_data(stream: &mut TcpStream, data: &str) -> Result<()> {
-    stream.write_all(format!("data: {data}\n\n").as_bytes())?;
+    stream.write_all(sse_frame(data).as_bytes())?;
     stream.flush()?;
     Ok(())
 }
@@ -122,6 +167,27 @@ pub fn write_sse_data(stream: &mut TcpStream, data: &str) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn server_sse_frame_splits_payload_newlines_per_spec() {
+        assert_eq!(sse_frame("plain"), "data: plain\n\n");
+        assert_eq!(sse_frame(""), "data: \n\n");
+        let frame = sse_frame("line1\nline2\n");
+        assert_eq!(frame, "data: line1\ndata: line2\ndata: \n\n");
+        // a conforming client strips one "data: " prefix per line and
+        // rejoins with '\n' — the payload round-trips exactly
+        let payload = frame
+            .strip_suffix("\n\n")
+            .unwrap()
+            .split('\n')
+            .map(|l| l.strip_prefix("data: ").unwrap())
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert_eq!(payload, "line1\nline2\n");
+        // no intermediate line ever ends a frame: "\n\n" appears only at
+        // the very end, so framing survives any payload
+        assert_eq!(find_subslice(frame.as_bytes(), b"\n\n"), Some(frame.len() - 2));
+    }
 
     #[test]
     fn find_subslice_positions() {

@@ -20,6 +20,11 @@
 //!   idle-tick EOF probe) and turns into [`SubmitHandle::cancel`], so the
 //!   engine frees the state slot instead of decoding to `max_new_tokens`
 //!   for nobody.
+//! - A request shed by admission control (`--max-queue`, see
+//!   [`crate::coordinator::request::SchedPolicy`]) answers `429 Too Many
+//!   Requests` with a `Retry-After` header on both response shapes — the
+//!   SSE headers are held back until the first lifecycle event so a shed
+//!   streaming request still gets the plain retriable status code.
 //! - `GET /healthz` reports the served variants.
 //!
 //! [`Submitter`] decouples the frontend from the serving topology: the
@@ -40,7 +45,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::request::{Event, Request, SubmitHandle};
+use crate::coordinator::request::{Event, FinishReason, Request, SubmitHandle};
 
 pub mod api;
 pub mod http;
@@ -262,6 +267,9 @@ fn handle_conn(
                 stream_completion(stream, id, &model, &handle, stop)
             } else {
                 match handle.wait_finished() {
+                    Some(fin) if fin.finish_reason == FinishReason::Overloaded => {
+                        write_overloaded(&mut stream)
+                    }
                     Some(fin) => http::write_response(
                         &mut stream,
                         "200 OK",
@@ -288,12 +296,34 @@ fn handle_conn(
     }
 }
 
+/// `429 Too Many Requests` + `Retry-After` for a request shed by
+/// admission control: it consumed no slot and generated nothing, so the
+/// client can retry verbatim after backing off.
+fn write_overloaded(stream: &mut TcpStream) -> Result<()> {
+    http::write_response_extra(
+        stream,
+        "429 Too Many Requests",
+        "application/json",
+        &[("Retry-After", "1")],
+        &api::error_json(
+            "server overloaded: request shed by admission control; retry after backoff",
+            "overloaded_error",
+        ),
+    )
+}
+
 /// Stream one request as SSE: every lifecycle event is one frame, the
 /// terminal frame is followed by `data: [DONE]`.  A vanished client — a
 /// failed frame write, or EOF on the idle-tick probe — becomes
 /// [`SubmitHandle::cancel`] so the engine frees the slot; the handle is
 /// then drained to the terminal event so the retire is observed before
 /// the connection thread exits.
+///
+/// The SSE headers are deferred until the first lifecycle event arrives:
+/// a request shed by admission control terminates without producing any
+/// stream, and it must answer with a plain `429` + `Retry-After` (the
+/// retriable status code) instead of committing to a `200` SSE response
+/// whose only frame is an `overloaded` finish.
 fn stream_completion(
     mut stream: TcpStream,
     id: u64,
@@ -301,24 +331,9 @@ fn stream_completion(
     handle: &SubmitHandle,
     stop: &AtomicBool,
 ) -> Result<()> {
-    http::write_sse_headers(&mut stream)?;
-    loop {
+    let first = loop {
         match handle.poll_event(Duration::from_millis(100)) {
-            Ok(ev) => {
-                let frame = api::chunk_json(id, model, &ev);
-                let wrote = http::write_sse_data(&mut stream, &frame).is_ok();
-                if matches!(ev, Event::Finished(_)) {
-                    if wrote {
-                        let _ = http::write_sse_data(&mut stream, "[DONE]");
-                    }
-                    return Ok(());
-                }
-                if !wrote {
-                    handle.cancel();
-                    drain_until_finished(handle);
-                    return Ok(());
-                }
-            }
+            Ok(ev) => break ev,
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 // serving side alive but quiet: probe the client and honor
                 // server shutdown so a stalled stream cannot pin a slot
@@ -329,9 +344,55 @@ fn stream_completion(
                 }
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // engine/pool dropped without a terminal event
-                return Ok(());
+                // engine/pool dropped before any event: still pre-headers,
+                // so a proper status line goes out instead of a dead stream
+                return http::write_response(
+                    &mut stream,
+                    "500 Internal Server Error",
+                    "application/json",
+                    &api::error_json("serving side shut down mid-request", "server_error"),
+                );
             }
+        }
+    };
+    if let Event::Finished(fin) = &first {
+        if fin.finish_reason == FinishReason::Overloaded {
+            return write_overloaded(&mut stream);
+        }
+    }
+    http::write_sse_headers(&mut stream)?;
+    let mut next = Some(first);
+    loop {
+        let ev = match next.take() {
+            Some(ev) => ev,
+            None => match handle.poll_event(Duration::from_millis(100)) {
+                Ok(ev) => ev,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if stop.load(Ordering::SeqCst) || client_gone(&stream) {
+                        handle.cancel();
+                        drain_until_finished(handle);
+                        return Ok(());
+                    }
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // engine/pool dropped without a terminal event
+                    return Ok(());
+                }
+            },
+        };
+        let frame = api::chunk_json(id, model, &ev);
+        let wrote = http::write_sse_data(&mut stream, &frame).is_ok();
+        if matches!(ev, Event::Finished(_)) {
+            if wrote {
+                let _ = http::write_sse_data(&mut stream, "[DONE]");
+            }
+            return Ok(());
+        }
+        if !wrote {
+            handle.cancel();
+            drain_until_finished(handle);
+            return Ok(());
         }
     }
 }
@@ -375,7 +436,7 @@ mod tests {
     use crate::backend::{InferenceBackend, NativeBackend};
     use crate::coordinator::request::{FinishReason, FinishedRequest};
     use crate::coordinator::sampler::SamplingParams;
-    use crate::coordinator::{serve_pool, EngineConfig, PoolConfig, ServePool};
+    use crate::coordinator::{serve_pool, EngineConfig, PoolConfig, SchedPolicy, ServePool};
     use crate::util::json::Json;
 
     fn micro_backend() -> NativeBackend {
@@ -640,5 +701,136 @@ mod tests {
         let report = pool.finish().unwrap();
         assert_eq!(report.merged.cancelled_requests, 1, "disconnect did not cancel");
         assert_eq!(report.merged.requests_completed, 2);
+    }
+
+    #[test]
+    fn server_rejects_request_smuggling_headers() {
+        let pool = micro_pool(1, 2);
+        let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
+        let mut server = serve_http("127.0.0.1:0", submitter, test_cfg()).unwrap();
+        let body = r#"{"prompt": [1]}"#;
+
+        // duplicate Content-Length headers that disagree: reject instead of
+        // letting the last one silently win (request-smuggling vector)
+        let mut s1 = TcpStream::connect(server.addr()).unwrap();
+        write!(
+            s1,
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len(),
+            body.len() + 2,
+        )
+        .unwrap();
+        let (head, resp) = read_split(s1);
+        assert!(head.starts_with("HTTP/1.1 400"), "{head}");
+        assert!(resp.contains("conflicting Content-Length"), "{resp}");
+
+        // chunked transfer coding is unsupported — reject, never misparse
+        let mut s2 = TcpStream::connect(server.addr()).unwrap();
+        write!(
+            s2,
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nTransfer-Encoding: chunked\r\n\
+             Connection: close\r\n\r\n0\r\n\r\n"
+        )
+        .unwrap();
+        let (head, resp) = read_split(s2);
+        assert!(head.starts_with("HTTP/1.1 400"), "{head}");
+        assert!(resp.contains("Transfer-Encoding"), "{resp}");
+
+        // repeated Content-Length headers that agree stay valid
+        let mut s3 = TcpStream::connect(server.addr()).unwrap();
+        write!(
+            s3,
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {len}\r\n\
+             Content-Length: {len}\r\nConnection: close\r\n\r\n{body}",
+            len = body.len(),
+        )
+        .unwrap();
+        let (head, _) = read_split(s3);
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+
+        server.shutdown();
+        pool.finish().unwrap();
+    }
+
+    #[test]
+    fn server_overload_returns_429_with_retry_after_and_retry_succeeds() {
+        // 1 worker × 1 slot with a 1-deep dispatcher backlog: a streaming
+        // victim owns the slot and one queued request fills the backlog, so
+        // the next submission sheds → HTTP 429 + Retry-After.  Dropping the
+        // victim frees everything and the retried request completes.
+        let pool = serve_pool(
+            || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>),
+            PoolConfig {
+                engine: EngineConfig { max_active: 1, greedy_chunking: true },
+                n_workers: 1,
+                sched: SchedPolicy { max_queue: 1, ..SchedPolicy::default() },
+                ..PoolConfig::default()
+            },
+        );
+        let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
+        let mut server = serve_http("127.0.0.1:0", submitter, test_cfg()).unwrap();
+
+        // victim: read until SSE frames flow, so it is placed on the worker
+        let body = r#"{"prompt": [1, 2, 3], "max_tokens": 100000, "stream": true}"#;
+        let mut victim = TcpStream::connect(server.addr()).unwrap();
+        victim.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        write!(
+            victim,
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut seen = String::new();
+        let mut byte = [0u8; 1];
+        while seen.matches("\n\n").count() < 2 {
+            let n = victim.read(&mut byte).unwrap();
+            assert!(n > 0, "server closed early: {seen}");
+            seen.push(byte[0] as char);
+        }
+
+        // q1 fills the one-deep backlog (no slot free → no frames yet,
+        // because SSE headers wait for the first event)
+        let q1body = r#"{"prompt": [4, 5], "max_tokens": 2, "stream": true}"#;
+        let mut q1 = TcpStream::connect(server.addr()).unwrap();
+        q1.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        write!(
+            q1,
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{q1body}",
+            q1body.len()
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(400)); // q1 → dispatcher backlog
+
+        // q2 sheds: a plain retriable 429, not a 200 SSE stream
+        let q2body = r#"{"prompt": [6], "max_tokens": 2}"#;
+        let (head, resp) = http_post(server.addr(), "/v1/completions", q2body);
+        assert!(head.starts_with("HTTP/1.1 429"), "{head}");
+        assert!(head.contains("Retry-After: 1"), "{head}");
+        let v = Json::parse(&resp).unwrap();
+        assert_eq!(v.get("error").unwrap().str_field("type").unwrap(), "overloaded_error");
+
+        // the vanished victim cancels → slot frees → q1 completes, and the
+        // shed request succeeds verbatim on retry: zero requests lost
+        drop(victim);
+        let (h1, b1) = read_split(q1);
+        assert!(h1.starts_with("HTTP/1.1 200"), "{h1}");
+        assert_eq!(sse_payloads(&b1).last().map(String::as_str), Some("[DONE]"));
+
+        let (head, resp) = http_post(server.addr(), "/v1/completions", q2body);
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        let v = Json::parse(&resp).unwrap();
+        let choice = &v.arr_field("choices").unwrap()[0];
+        assert_eq!(choice.str_field("finish_reason").unwrap(), "length");
+        assert_eq!(choice.arr_field("tokens").unwrap().len(), 2);
+
+        assert_eq!(server.served(), 4);
+        server.shutdown();
+        let report = pool.finish().unwrap();
+        assert_eq!(report.merged.requests_shed, 1, "q2 was not shed");
+        assert_eq!(report.merged.cancelled_requests, 1, "victim was not cancelled");
+        assert_eq!(report.merged.requests_completed, 4);
     }
 }
