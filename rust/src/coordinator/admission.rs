@@ -20,7 +20,7 @@ use super::metrics::Metrics;
 use super::request::{Event, FinishReason, FinishedRequest, Request};
 use super::state::StatePool;
 use crate::obs::trace::TraceCtx;
-use crate::obs::Counter;
+use crate::obs::{Counter, FlightCtx, FlightKind};
 use crate::statecache::StateCache;
 
 /// Outcome of seeding one admission from the shared state cache.
@@ -115,6 +115,7 @@ pub(crate) fn seed_from_cache(
 pub(crate) fn finish_unadmitted(
     metrics: &mut Metrics,
     trace: Option<&TraceCtx>,
+    flight: Option<&FlightCtx>,
     finished: &mut Vec<FinishedRequest>,
     mut req: Request,
     reason: FinishReason,
@@ -141,8 +142,21 @@ pub(crate) fn finish_unadmitted(
     };
     if let Some(t) = trace {
         if t.sink.sampled(req.id) {
+            if reason == FinishReason::Overloaded {
+                t.sink.instant(req.id, "shed", Vec::new());
+            }
             t.sink.end_request(req.id, &format!("{reason:?}"), generated.len());
         }
+    }
+    if let Some(f) = flight {
+        if reason == FinishReason::Overloaded {
+            f.record(req.id, FlightKind::Shed, "queue at shed threshold");
+        }
+        f.record(
+            req.id,
+            FlightKind::Finish,
+            format!("{reason:?} unadmitted tokens={}", generated.len()),
+        );
     }
     let fin = FinishedRequest {
         id: req.id,

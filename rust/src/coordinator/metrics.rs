@@ -621,6 +621,20 @@ impl Metrics {
                 ("p50", num(h.quantile(0.50))),
                 ("p95", num(h.quantile(0.95))),
                 ("p99", num(h.quantile(0.99))),
+                // exact reconstruction surface: the ≤0-class count plus
+                // sparse [bucket_index, count] pairs — enough to recompute
+                // quantiles and SLO burn rates offline bit-for-bit
+                // (obs::slo::burn_from_buckets)
+                ("zero", num(h.zero_count() as f64)),
+                (
+                    "buckets",
+                    Json::Arr(
+                        h.nonzero_buckets()
+                            .iter()
+                            .map(|&(i, c)| Json::Arr(vec![num(i as f64), num(c as f64)]))
+                            .collect(),
+                    ),
+                ),
             ])
         }
         let workers: Vec<Json> = self.worker_stats.iter().map(WorkerStat::to_json).collect();
@@ -1024,6 +1038,36 @@ mod tests {
         assert_eq!(snap.tpot.count(), 1);
         assert_eq!(snap.acceptance.count(), 1);
         assert_eq!(tel.gauge(crate::obs::Gauge::ActiveSlots), 3);
+    }
+
+    #[test]
+    fn metrics_json_histograms_carry_bucket_counts() {
+        let mut m = Metrics::default();
+        m.note_tpot(0.0); // spec engines legitimately record 0-second gaps
+        m.note_tpot(0.002);
+        m.note_tpot(0.002);
+        m.note_tpot(0.750);
+        let text = crate::util::json::to_string(&m.to_json());
+        let back = Json::parse(&text).unwrap();
+        let h = back.get("tpot_s").unwrap();
+        assert_eq!(h.usize_field("count").unwrap(), 4);
+        assert_eq!(h.usize_field("zero").unwrap(), 1);
+        let buckets = h.arr_field("buckets").unwrap();
+        let total: usize = buckets
+            .iter()
+            .map(|p| p.as_arr().unwrap()[1].as_usize().unwrap())
+            .sum();
+        assert_eq!(total + 1, 4, "zero class + bucket counts == count");
+        // round-trip: the exported pairs rebuild the exact count_over view
+        let mut rebuilt = 0u64;
+        for p in buckets {
+            let p = p.as_arr().unwrap();
+            let (i, c) = (p[0].as_usize().unwrap(), p[1].as_usize().unwrap() as u64);
+            if Histogram::bucket_upper_edge(i) > 0.01 {
+                rebuilt += c;
+            }
+        }
+        assert_eq!(rebuilt, m.tpot.count_over(0.01));
     }
 
     #[test]

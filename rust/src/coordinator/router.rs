@@ -28,9 +28,11 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::backend::InferenceBackend;
+use crate::obs::flight::DISPATCHER_LANE;
 use crate::obs::trace::TraceCtx;
-use crate::obs::{Counter, Telemetry, TelemetryHub, TraceSink};
+use crate::obs::{Counter, FlightCtx, FlightKind, Telemetry, TelemetryHub, TraceSink};
 use crate::statecache::StateCache;
+use crate::util::json;
 
 use super::metrics::{Metrics, WorkerStat};
 use super::request::{
@@ -319,6 +321,13 @@ impl<'be> WorkerEngine<'be> {
         }
     }
 
+    fn set_flight(&mut self, ctx: FlightCtx) {
+        match self {
+            Self::Plain(e) => e.set_flight(ctx),
+            Self::Spec(e) => e.set_flight(ctx),
+        }
+    }
+
     fn into_metrics(self) -> Metrics {
         match self {
             Self::Plain(e) => e.metrics,
@@ -399,6 +408,9 @@ where
         engine
             .metrics_mut()
             .attach_telemetry(hub.register(&id.to_string()));
+        // lifecycle transitions land in the hub's shared flight recorder
+        // under this worker's lane
+        engine.set_flight(FlightCtx::new(Arc::clone(hub.flight()), id as u32));
     }
     if let Some(sink) = &cfg.trace {
         // the dispatcher opened the request envelope at ingress; the
@@ -454,6 +466,7 @@ fn dispatch(
     dtel: Option<Arc<Telemetry>>,
     trace: Option<Arc<TraceSink>>,
     sched: SchedPolicy,
+    flight: Option<FlightCtx>,
 ) -> Result<PoolReport> {
     let mut router = Router::new(n);
     // the dispatcher keeps a copy of every request a worker currently
@@ -471,9 +484,29 @@ fn dispatch(
     // queued, or terminally lost to worker death) — folded into the merged
     // metrics so the aggregate accounts for every submitted request
     let mut dispatcher = Metrics::default();
+    // the status slot is published directly (not through Metrics), so keep
+    // a handle alongside the write-through attachment
+    let dstatus = dtel.clone();
     if let Some(t) = dtel {
         dispatcher.attach_telemetry(t);
     }
+    // the dispatcher's live status: pool liveness (`/healthz`, `/readyz`)
+    // and the `/statusz` dispatcher row both read this slot, so it must be
+    // (re)published before every blocking wait — an idle pool still
+    // answers readiness probes from its latest publish
+    let publish_status =
+        |alive: &[bool], backlog_len: usize, dispatched: u64| {
+            if let Some(t) = &dstatus {
+                let n_alive = alive.iter().filter(|a| **a).count();
+                t.set_status(json::obj(vec![
+                    ("role", json::s("dispatcher")),
+                    ("workers_alive", json::num(n_alive as f64)),
+                    ("backlog", json::num(backlog_len as f64)),
+                    ("max_queue", json::num(sched.max_queue as f64)),
+                    ("dispatched_total", json::num(dispatched as f64)),
+                ]));
+            }
+        };
     // the dispatcher opens each sampled request's trace envelope at
     // ingress (workers run with `record_queued = false`), so queue time
     // shows up inside the request span
@@ -546,6 +579,13 @@ fn dispatch(
                 // drops (a dropped request's near-zero "latency" would
                 // deflate every percentile under load)
                 dispatcher.count(Counter::RequestsDropped, 1);
+                if let Some(f) = &flight {
+                    f.record(
+                        req.id,
+                        FlightKind::Finish,
+                        format!("{reason:?} unadmitted tokens=0"),
+                    );
+                }
                 close_envelope(fin.id, reason);
                 req.emit(Event::Finished(fin.clone()));
                 let _ = tx_done.send(fin);
@@ -575,6 +615,9 @@ fn dispatch(
             let req = backlog.pop_front().unwrap();
             match worker_tx[w].send(req.clone()) {
                 Ok(()) => {
+                    if let Some(f) = &flight {
+                        f.record(req.id, FlightKind::Dispatch, format!("worker={w}"));
+                    }
                     outstanding[w].push(req);
                     load_peak[w] = load_peak[w].max(outstanding[w].len());
                 }
@@ -591,6 +634,12 @@ fn dispatch(
                 }
             }
         }
+
+        publish_status(
+            &alive,
+            backlog.len(),
+            router.assignments.iter().sum::<u64>(),
+        );
 
         if !alive.iter().any(|a| *a) {
             // nothing can make progress; drain the queue — forwarding
@@ -610,6 +659,9 @@ fn dispatch(
                         let _ = tx_done.send(fin);
                     }
                     Msg::WorkerDead { worker, error } => {
+                        if let Some(f) = &flight {
+                            f.record(0, FlightKind::WorkerDeath, format!("worker={worker} {error}"));
+                        }
                         errors.push(format!("worker {worker}: {error}"));
                         bury(worker, &mut alive, &mut outstanding, &mut backlog,
                              &mut errors);
@@ -628,6 +680,9 @@ fn dispatch(
             {
                 lost += 1;
                 let fin = dropped_fin(&req, FinishReason::WorkerDied);
+                if let Some(f) = &flight {
+                    f.record(req.id, FlightKind::Finish, "WorkerDied unadmitted tokens=0");
+                }
                 dispatcher.count(Counter::RequestsCompleted, 1);
                 // dropped, not completed: no latency sample (see the
                 // backlog lifecycle sweep above)
@@ -673,6 +728,19 @@ fn dispatch(
                     let fin = dropped_fin(&req, FinishReason::Overloaded);
                     dispatcher.note_finish_reason(FinishReason::Overloaded);
                     dispatcher.count(Counter::RequestsCompleted, 1);
+                    if let Some(s) = &trace {
+                        if s.sampled(fin.id) {
+                            s.instant(fin.id, "shed", Vec::new());
+                        }
+                    }
+                    if let Some(f) = &flight {
+                        f.record(
+                            req.id,
+                            FlightKind::Shed,
+                            format!("backlog at shed threshold {}", sched.max_queue),
+                        );
+                        f.record(req.id, FlightKind::Finish, "Overloaded unadmitted tokens=0");
+                    }
                     close_envelope(fin.id, FinishReason::Overloaded);
                     req.emit(Event::Finished(fin.clone()));
                     let _ = tx_done.send(fin);
@@ -690,6 +758,9 @@ fn dispatch(
                 let _ = tx_done.send(fin);
             }
             Ok(Msg::WorkerDead { worker, error }) => {
+                if let Some(f) = &flight {
+                    f.record(0, FlightKind::WorkerDeath, format!("worker={worker} {error}"));
+                }
                 errors.push(format!("worker {worker}: {error}"));
                 bury(worker, &mut alive, &mut outstanding, &mut backlog, &mut errors);
             }
@@ -765,6 +836,12 @@ where
     let dtel = cfg.hub.as_ref().map(|h| h.register("dispatcher"));
     let dtrace = cfg.trace.as_ref().map(Arc::clone);
     let dsched = cfg.sched.clone();
+    // dispatcher-side flight lane: worker ids are 0..n, so the dispatcher
+    // writes under a reserved sentinel lane
+    let dflight = cfg
+        .hub
+        .as_ref()
+        .map(|h| FlightCtx::new(Arc::clone(h.flight()), DISPATCHER_LANE));
     if let (Some(hub), Some(cache)) = (&cfg.hub, &cfg.cache) {
         hub.attach_cache(Arc::clone(cache));
     }
@@ -797,7 +874,7 @@ where
     drop(pool_tx);
 
     let dispatcher = thread::spawn(move || {
-        dispatch(n, capacity, worker_tx, handles, pool_rx, tx_done, dtel, dtrace, dsched)
+        dispatch(n, capacity, worker_tx, handles, pool_rx, tx_done, dtel, dtrace, dsched, dflight)
     });
     ServePool {
         submit: Some(tx_req),

@@ -19,9 +19,9 @@ use anyhow::Result;
 
 use crate::backend::InferenceBackend;
 use crate::obs::trace::TraceCtx;
-use crate::obs::{Counter, Telemetry, TraceSink};
+use crate::obs::{Counter, FlightCtx, FlightKind, Telemetry, TraceSink};
 use crate::statecache::StateCache;
-use crate::util::json::{num, Json};
+use crate::util::json::{num, s, Json};
 
 use super::admission::{finish_unadmitted, seed_from_cache, AdmissionSeed};
 use super::batcher::{full_bucket_plan, DecodeBatcher};
@@ -55,6 +55,37 @@ impl Default for EngineConfig {
 /// lookups verify the stored transcript is a prefix of the prompt).
 const PREEMPT_SID_TAG: u64 = 1 << 63;
 
+/// One `/statusz` request-table row: the fields the hub's table (and the
+/// stall watchdog, which keys on `id`/`tokens`) reads per live request.
+/// Shared with [`super::speculative::SpecEngine`] so both engines publish
+/// identical schemas.
+pub(crate) fn status_row(
+    req: &Request,
+    state: &str,
+    eff_priority: i64,
+    tokens: usize,
+    now: Instant,
+) -> Json {
+    Json::Obj(vec![
+        ("id".to_string(), num(req.id as f64)),
+        ("state".to_string(), s(state)),
+        ("priority".to_string(), num(req.priority as f64)),
+        ("effective_priority".to_string(), num(eff_priority as f64)),
+        (
+            "age_s".to_string(),
+            num(now.saturating_duration_since(req.submitted_at).as_secs_f64()),
+        ),
+        ("tokens".to_string(), num(tokens as f64)),
+        (
+            "session".to_string(),
+            match req.session_id {
+                Some(sid) => num(sid as f64),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
 pub struct Engine<'be> {
     be: &'be dyn InferenceBackend,
     cfg: EngineConfig,
@@ -66,6 +97,9 @@ pub struct Engine<'be> {
     cache: Option<Arc<StateCache>>,
     /// span-trace attachment (sink + worker lane); `None` = zero overhead
     trace: Option<TraceCtx>,
+    /// flight-recorder attachment (shared ring + worker lane); `None` =
+    /// zero overhead
+    flight: Option<FlightCtx>,
     /// overload scheduling: priority aging, preemption, bounded queue.
     /// The default disables all three (static-priority pre-policy behavior)
     policy: SchedPolicy,
@@ -88,6 +122,7 @@ impl<'be> Engine<'be> {
             prefill_buckets,
             cache: None,
             trace: None,
+            flight: None,
             policy: SchedPolicy::default(),
             pending: VecDeque::new(),
             active: Vec::new(),
@@ -126,6 +161,20 @@ impl<'be> Engine<'be> {
         self.trace = Some(ctx);
     }
 
+    /// Attach the shared flight recorder; `worker` is this engine's lane
+    /// in the recorded events.  Every lifecycle transition (enqueue,
+    /// admit, cache probe, preempt/resume, shed, finish) lands in the
+    /// bounded ring from here on.
+    pub fn with_flight(mut self, rec: Arc<crate::obs::FlightRecorder>, worker: u32) -> Self {
+        self.flight = Some(FlightCtx::new(rec, worker));
+        self
+    }
+
+    /// Pool-worker flight attachment (same pattern as [`Engine::set_trace`]).
+    pub(crate) fn set_flight(&mut self, ctx: FlightCtx) {
+        self.flight = Some(ctx);
+    }
+
     /// Attach an overload-scheduling policy: priority aging
     /// (`age_rate` levels/second of queue wait), preemption
     /// (`preempt_threshold`, requires an attached state cache for the
@@ -157,6 +206,13 @@ impl<'be> Engine<'be> {
                 t.sink.begin_request(req.id, req.prompt.len(), req.priority);
             }
         }
+        if let Some(f) = &self.flight {
+            f.record(
+                req.id,
+                FlightKind::Enqueue,
+                format!("prompt={} priority={}", req.prompt.len(), req.priority),
+            );
+        }
         // admission control: a full pending queue sheds the arrival
         // immediately with a retriable terminal event (preempted requests
         // re-enter through `preempt`, never through here — a victim is
@@ -165,6 +221,7 @@ impl<'be> Engine<'be> {
             finish_unadmitted(
                 &mut self.metrics,
                 self.trace.as_ref(),
+                self.flight.as_ref(),
                 &mut self.finished,
                 req,
                 FinishReason::Overloaded,
@@ -255,6 +312,16 @@ impl<'be> Engine<'be> {
                             ],
                         );
                     }
+                }
+            }
+            if let Some(f) = &self.flight {
+                f.record(req.id, FlightKind::Admit, format!("slot={slot}"));
+                if self.cache.is_some() {
+                    f.record(
+                        req.id,
+                        FlightKind::CacheProbe,
+                        format!("hit={} tokens_saved={offset}", offset > 0),
+                    );
                 }
             }
             // whatever the seeded coverage and remaining chunks, the
@@ -450,6 +517,13 @@ impl<'be> Engine<'be> {
                 );
             }
         }
+        if let Some(f) = &self.flight {
+            f.record(
+                req.id,
+                FlightKind::Preempt,
+                format!("generated={}", generated.len()),
+            );
+        }
         req.resume = Some(Box::new(ResumeState {
             generated,
             sampler,
@@ -503,6 +577,13 @@ impl<'be> Engine<'be> {
                     ],
                 );
             }
+        }
+        if let Some(f) = &self.flight {
+            f.record(
+                req.id,
+                FlightKind::Resume,
+                format!("slot={slot} tokens_saved={offset}"),
+            );
         }
         let remainder = transcript.len() - offset - chunks.iter().sum::<usize>();
         for chunk_len in chunks {
@@ -618,6 +699,13 @@ impl<'be> Engine<'be> {
                     .end_request(fin.id, &format!("{reason:?}"), fin.generated.len());
             }
         }
+        if let Some(f) = &self.flight {
+            f.record(
+                fin.id,
+                FlightKind::Finish,
+                format!("{reason:?} tokens={}", fin.generated.len()),
+            );
+        }
         infl.req.emit(Event::Finished(fin.clone()));
         self.finished.push(fin);
     }
@@ -635,6 +723,7 @@ impl<'be> Engine<'be> {
                 finish_unadmitted(
                     &mut self.metrics,
                     self.trace.as_ref(),
+                    self.flight.as_ref(),
                     &mut self.finished,
                     req,
                     reason,
@@ -754,6 +843,42 @@ impl<'be> Engine<'be> {
         Ok(())
     }
 
+    /// Publish this engine's live request table into its telemetry status
+    /// slot — the `/statusz` feed.  Re-published every step so the table
+    /// reflects the engine's latest scheduling decisions; with no attached
+    /// telemetry this is free.
+    fn publish_status(&mut self) {
+        let Some(tel) = self.metrics.telemetry() else { return };
+        let now = Instant::now();
+        let mut rows = Vec::with_capacity(self.pending.len() + self.active.len());
+        for r in &self.pending {
+            let tokens = r.resume.as_ref().map(|x| x.generated.len()).unwrap_or(0);
+            rows.push(status_row(
+                r,
+                "pending",
+                self.policy.effective_priority(r, now),
+                tokens,
+                now,
+            ));
+        }
+        for a in &self.active {
+            rows.push(status_row(
+                &a.req,
+                "active",
+                a.req.priority as i64,
+                a.generated.len(),
+                now,
+            ));
+        }
+        let status = Json::Obj(vec![
+            ("pending".to_string(), num(self.pending.len() as f64)),
+            ("active".to_string(), num(self.active.len() as f64)),
+            ("max_queue".to_string(), num(self.policy.max_queue as f64)),
+            ("requests".to_string(), Json::Arr(rows)),
+        ]);
+        tel.set_status(status);
+    }
+
     /// One scheduler iteration: resolve cancellations/deadlines, admit,
     /// then decode.
     pub fn step(&mut self) -> Result<()> {
@@ -768,6 +893,7 @@ impl<'be> Engine<'be> {
             // only steps that had work count toward utilization
             self.metrics.note_busy(t0.elapsed().as_secs_f64());
         }
+        self.publish_status();
         r
     }
 
@@ -1595,5 +1721,117 @@ mod tests {
         // the latency histogram holds completed requests only
         assert_eq!(eng.metrics.latency.count(), 3);
         assert!(eng.metrics.summary().contains("shed=1"), "{}", eng.metrics.summary());
+    }
+
+    #[test]
+    fn trace_covers_preempt_resume_and_shed_instants() {
+        use crate::obs::{FlightKind, FlightRecorder};
+        use crate::statecache::{CacheConfig, StateCache};
+        // overload-path instants: a preempted-and-resumed request's lane
+        // carries "preempted" and "resumed" instants inside a balanced
+        // B/E envelope, and a shed arrival's lane carries "shed" before
+        // its terminal E.  The flight recorder sees the same transitions.
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..33).map(|j| ((j * 13) % vocab) as u32).collect();
+        let hi_prompt: Vec<u32> = (0..9).map(|j| ((j * 7 + 2) % vocab) as u32).collect();
+        let sink = Arc::new(TraceSink::new(1));
+        let flight = Arc::new(FlightRecorder::with_capacity(256));
+        let cache = Arc::new(StateCache::new(CacheConfig::default()));
+        let mut eng =
+            Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true })
+                .with_cache(Arc::clone(&cache))
+                .with_trace(Arc::clone(&sink), 0)
+                .with_flight(Arc::clone(&flight), 0)
+                .with_policy(SchedPolicy {
+                    preempt_threshold: Some(5),
+                    max_queue: 2,
+                    ..SchedPolicy::default()
+                });
+        let v = eng.submit(Request::new(0, prompt.clone(), 16, "fp32"));
+        let mut streamed = 0usize;
+        while streamed < 4 {
+            eng.step().unwrap();
+            while let Some(ev) = v.try_event() {
+                if matches!(ev, Event::Token { .. }) {
+                    streamed += 1;
+                }
+            }
+        }
+        // the preemptor, then two more arrivals; the second finds the
+        // pending queue at max_queue=2 and is shed synchronously
+        eng.submit(Request::new(1, hi_prompt, 2, "fp32").with_priority(9));
+        eng.submit(Request::new(2, prompt.clone(), 2, "fp32"));
+        let shed = eng.submit(Request::new(3, prompt.clone(), 2, "fp32"));
+        let (_, _, fin) = drain(&shed);
+        assert_eq!(fin.expect("terminal").finish_reason, FinishReason::Overloaded);
+        eng.run().unwrap();
+        assert_eq!(eng.metrics.preempted_requests, 1, "{}", eng.metrics.summary());
+        assert_eq!(eng.metrics.requests_shed, 1);
+
+        let doc = sink.to_chrome_json();
+        let events = doc.arr_field("traceEvents").unwrap();
+        let lane = |id: u64| -> Vec<&Json> {
+            events
+                .iter()
+                .filter(|e| {
+                    e.usize_field("pid").unwrap() == 0
+                        && e.usize_field("tid").unwrap() as u64 == id
+                })
+                .collect()
+        };
+        // the victim's lane: balanced envelope containing both instants
+        let victim = lane(0);
+        let names: Vec<&str> = victim
+            .iter()
+            .filter(|e| e.str_field("ph").unwrap() == "i")
+            .map(|e| e.str_field("name").unwrap())
+            .collect();
+        assert!(names.contains(&"preempted"), "victim instants: {names:?}");
+        assert!(names.contains(&"resumed"), "victim instants: {names:?}");
+        let pre = names.iter().position(|n| *n == "preempted").unwrap();
+        let res = names.iter().position(|n| *n == "resumed").unwrap();
+        assert!(pre < res, "preempted must precede resumed");
+        let mut depth = 0i64;
+        for e in &victim {
+            match e.str_field("ph").unwrap() {
+                "B" => depth += 1,
+                "E" => depth -= 1,
+                _ => {}
+            }
+            assert!(depth >= 0, "victim: E before B");
+        }
+        assert_eq!(depth, 0, "victim: unbalanced envelope");
+        // the shed request's lane: one "shed" instant, then the terminal E
+        let shed_lane = lane(3);
+        let shed_names: Vec<&str> = shed_lane
+            .iter()
+            .filter(|e| e.str_field("ph").unwrap() == "i")
+            .map(|e| e.str_field("name").unwrap())
+            .collect();
+        assert!(shed_names.contains(&"shed"), "shed instants: {shed_names:?}");
+        let end = shed_lane
+            .iter()
+            .find(|e| e.str_field("ph").unwrap() == "E")
+            .expect("shed request's terminal E");
+        assert_eq!(
+            end.get("args").unwrap().str_field("finish_reason").unwrap(),
+            "Overloaded"
+        );
+        // the flight recorder saw the same lifecycle transitions
+        let evs = flight.dump(usize::MAX);
+        let kind_for = |id: u64, kind: FlightKind| {
+            evs.iter().any(|e| e.req == id && e.kind == kind)
+        };
+        assert!(kind_for(0, FlightKind::Enqueue));
+        assert!(kind_for(0, FlightKind::Admit));
+        assert!(kind_for(0, FlightKind::Preempt));
+        assert!(kind_for(0, FlightKind::Resume));
+        assert!(kind_for(0, FlightKind::Finish));
+        assert!(kind_for(3, FlightKind::Shed));
+        assert!(kind_for(3, FlightKind::Finish));
+        // every recorded event fits the ring (no wrap in this run), and
+        // the engine published a live status table along the way
+        assert!(flight.recorded() <= 256);
     }
 }

@@ -52,7 +52,7 @@ use anyhow::{anyhow, Result};
 
 use crate::backend::InferenceBackend;
 use crate::obs::trace::TraceCtx;
-use crate::obs::{Counter, Telemetry, TraceSink};
+use crate::obs::{Counter, FlightCtx, FlightKind, Telemetry, TraceSink};
 use crate::statecache::StateCache;
 use crate::util::json::{num, Json};
 
@@ -168,6 +168,8 @@ pub struct SpecEngine<'be> {
     pub metrics: Metrics,
     /// per-request span tracing; `None` = zero overhead
     trace: Option<TraceCtx>,
+    /// flight-recorder attachment; `None` = zero overhead
+    flight: Option<FlightCtx>,
     /// overload policy: priority aging + bounded-queue shedding.  The
     /// speculative engine does not preempt (an active request holds two
     /// coupled slots plus verifier debt — no single-state snapshot to
@@ -255,6 +257,7 @@ impl<'be> SpecEngine<'be> {
             finished: Vec::new(),
             metrics: Metrics::default(),
             trace: None,
+            flight: None,
             policy: SchedPolicy::default(),
         }
     }
@@ -285,6 +288,17 @@ impl<'be> SpecEngine<'be> {
         self.trace = Some(ctx);
     }
 
+    /// Attach the shared flight recorder under lane `worker` (same
+    /// contract as [`Engine::with_flight`](crate::coordinator::Engine)).
+    pub fn with_flight(mut self, rec: Arc<crate::obs::FlightRecorder>, worker: u32) -> Self {
+        self.flight = Some(FlightCtx::new(rec, worker));
+        self
+    }
+
+    pub(crate) fn set_flight(&mut self, ctx: FlightCtx) {
+        self.flight = Some(ctx);
+    }
+
     /// Attach an overload policy (aging + bounded queue; see
     /// [`SchedPolicy`]).  `preempt_threshold` is ignored here — see the
     /// field note on `policy`.
@@ -311,6 +325,13 @@ impl<'be> SpecEngine<'be> {
                 t.sink.begin_request(req.id, req.prompt.len(), req.priority);
             }
         }
+        if let Some(f) = &self.flight {
+            f.record(
+                req.id,
+                FlightKind::Enqueue,
+                format!("prompt={} priority={}", req.prompt.len(), req.priority),
+            );
+        }
         // admission control: a full pending queue sheds the arrival
         // immediately with a retriable terminal event (same contract as
         // Engine::enqueue)
@@ -318,6 +339,7 @@ impl<'be> SpecEngine<'be> {
             finish_unadmitted(
                 &mut self.metrics,
                 self.trace.as_ref(),
+                self.flight.as_ref(),
                 &mut self.finished,
                 req,
                 FinishReason::Overloaded,
@@ -426,6 +448,16 @@ impl<'be> SpecEngine<'be> {
                             ],
                         );
                     }
+                }
+            }
+            if let Some(f) = &self.flight {
+                f.record(req.id, FlightKind::Admit, format!("slot={verify_slot}"));
+                if self.cache.is_some() {
+                    f.record(
+                        req.id,
+                        FlightKind::CacheProbe,
+                        format!("hit={} tokens_saved={offset}", offset > 0),
+                    );
                 }
             }
             for chunk in chunks {
@@ -870,6 +902,13 @@ impl<'be> SpecEngine<'be> {
                     .end_request(fin.id, &format!("{reason:?}"), fin.generated.len());
             }
         }
+        if let Some(f) = &self.flight {
+            f.record(
+                fin.id,
+                FlightKind::Finish,
+                format!("{reason:?} tokens={}", fin.generated.len()),
+            );
+        }
         infl.req.emit(Event::Finished(fin.clone()));
         self.finished.push(fin);
     }
@@ -888,6 +927,7 @@ impl<'be> SpecEngine<'be> {
                 finish_unadmitted(
                     &mut self.metrics,
                     self.trace.as_ref(),
+                    self.flight.as_ref(),
                     &mut self.finished,
                     req,
                     reason,
@@ -905,6 +945,40 @@ impl<'be> SpecEngine<'be> {
                 i += 1;
             }
         }
+    }
+
+    /// Publish this engine's live request table into its telemetry status
+    /// slot (same schema as `Engine::publish_status` — the hub's
+    /// `/statusz` table is engine-agnostic).
+    fn publish_status(&mut self) {
+        let Some(tel) = self.metrics.telemetry() else { return };
+        let now = Instant::now();
+        let mut rows = Vec::with_capacity(self.pending.len() + self.active.len());
+        for r in &self.pending {
+            rows.push(super::scheduler::status_row(
+                r,
+                "pending",
+                self.policy.effective_priority(r, now),
+                0,
+                now,
+            ));
+        }
+        for a in &self.active {
+            rows.push(super::scheduler::status_row(
+                &a.req,
+                "active",
+                a.req.priority as i64,
+                a.generated.len(),
+                now,
+            ));
+        }
+        let status = Json::Obj(vec![
+            ("pending".to_string(), num(self.pending.len() as f64)),
+            ("active".to_string(), num(self.active.len() as f64)),
+            ("max_queue".to_string(), num(self.policy.max_queue as f64)),
+            ("requests".to_string(), Json::Arr(rows)),
+        ]);
+        tel.set_status(status);
     }
 
     /// One scheduler iteration: resolve cancellations/deadlines, admit,
@@ -930,6 +1004,7 @@ impl<'be> SpecEngine<'be> {
         if depth > 0 {
             self.metrics.note_busy(t0.elapsed().as_secs_f64());
         }
+        self.publish_status();
         Ok(())
     }
 

@@ -47,7 +47,17 @@
 //! scrape endpoint, `--log-every-s` a one-line status log), and
 //! per-request span traces export as Chrome `trace_event` JSON
 //! (`--trace-out`, Perfetto-loadable) — reproducing the paper's
-//! per-stage prefill/decode breakdown for the serving path.
+//! per-stage prefill/decode breakdown for the serving path.  The same
+//! listener serves live introspection: `/statusz` (per-request and
+//! per-worker live tables), `/readyz` (load-balancer readiness, distinct
+//! from `/healthz` liveness), `/debug/config` (the resolved serving
+//! configuration), and `/debug/flight` — a bounded in-memory flight
+//! recorder ([`obs::FlightRecorder`]) of request lifecycle events that a
+//! stall watchdog (`--stall-ms`) dumps when progress wedges.  SLO
+//! objectives (`--slo-ttft-ms`, `--slo-tpot-ms`, `--slo-availability`)
+//! evaluate as error-budget burn rates ([`obs::SloMonitor`]) on the
+//! exact histograms `/metrics` exports, so an offline recompute from a
+//! snapshot reproduces the live gauges bit-for-bit.
 //!
 //! Python never runs on the request path: `make artifacts` lowers
 //! everything once, and the `fastmamba` binary is self-contained.  Build

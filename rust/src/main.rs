@@ -24,7 +24,9 @@ use fastmamba::coordinator::{
     serve_pool, Engine, EngineConfig, Event, FinishReason, PoolConfig, Request, SchedPolicy,
     SpecConfig, SpecEngine, SubmitHandle,
 };
-use fastmamba::obs::{serve_metrics, TelemetryHub, TraceSink};
+use fastmamba::obs::{
+    serve_metrics, SloConfig, SloMonitor, StallWatchdog, TelemetryHub, TraceSink,
+};
 use fastmamba::statecache::{CacheConfig, StateCache};
 use fastmamba::model::weights::{artifacts_dir, Manifest};
 use fastmamba::sim::PerfModel;
@@ -62,8 +64,18 @@ fn main() -> Result<()> {
                  \n           --http-addr HOST:PORT (OpenAI-style /v1/completions + SSE frontend;\
                  \n                                  port 0 picks a free port, printed on startup)\
                  \n           --http-requests N (serve N completions then exit; 0 = run until killed)\
-                 \n           --metrics-addr HOST:PORT (live Prometheus /metrics endpoint)\
+                 \n           --metrics-addr HOST:PORT (live introspection listener: Prometheus\
+                 \n                                     /metrics plus /statusz /readyz\
+                 \n                                     /debug/config /debug/flight)\
                  \n           --metrics-json PATH (write the final metrics snapshot as JSON)\
+                 \n           --slo-ttft-ms N (time-to-first-token SLO; burn-rate gauges and\
+                 \n                            violation counters on /metrics)\
+                 \n           --slo-tpot-ms N (per-token latency SLO)\
+                 \n           --slo-availability F (availability SLO in (0,1), e.g. 0.999;\
+                 \n                                 shed + dropped requests burn the budget)\
+                 \n           --stall-ms N (stall watchdog: flag requests with no token\
+                 \n                         progress and a dispatcher with no dispatch\
+                 \n                         progress for N ms; dumps the flight recorder)\
                  \n           --trace-out PATH (Chrome trace_event JSON of request spans)\
                  \n           --trace-sample N (trace every Nth request; default 1 = all)\
                  \n           --log-every-s N (periodic one-line status log to stdout)\
@@ -130,6 +142,72 @@ fn sched_policy(args: &Args) -> Result<SchedPolicy> {
     Ok(policy)
 }
 
+/// SLO objectives from the `--slo-*` flags (0 / absent = objective off).
+fn slo_config(args: &Args) -> SloConfig {
+    let ms = |flag: &str| {
+        let v = args.usize_or(flag, 0);
+        (v > 0).then(|| v as f64 / 1e3)
+    };
+    let avail = args.f64_or("slo-availability", 0.0);
+    SloConfig {
+        ttft_s: ms("slo-ttft-ms"),
+        tpot_s: ms("slo-tpot-ms"),
+        availability: (avail > 0.0 && avail < 1.0).then_some(avail),
+        ..SloConfig::default()
+    }
+}
+
+/// The resolved serving configuration, as served by `/debug/config`: the
+/// effective values after every default/override, not the raw flags.
+#[allow(clippy::too_many_arguments)]
+fn resolved_config(
+    topology: &str,
+    workers: usize,
+    max_active: usize,
+    speculate: usize,
+    variant: &str,
+    cache_mb: usize,
+    sched: &SchedPolicy,
+    slo: &SloConfig,
+    stall_ms: usize,
+) -> json::Json {
+    use json::{num, obj, s, Json};
+    obj(vec![
+        ("topology", s(topology)),
+        ("workers", num(workers as f64)),
+        ("max_active", num(max_active as f64)),
+        ("speculate", num(speculate as f64)),
+        ("variant", s(variant)),
+        ("state_cache_mb", num(cache_mb as f64)),
+        (
+            "sched",
+            obj(vec![
+                ("age_rate", num(sched.age_rate)),
+                (
+                    "preempt_threshold",
+                    sched
+                        .preempt_threshold
+                        .map(|t| num(t as f64))
+                        .unwrap_or(Json::Null),
+                ),
+                ("max_queue", num(sched.max_queue as f64)),
+            ]),
+        ),
+        ("slo", slo.to_json()),
+        ("stall_ms", num(stall_ms as f64)),
+    ])
+}
+
+/// Which of the four serving topologies the flags select.
+fn topology_name(workers: usize, speculate: usize) -> &'static str {
+    match (workers > 1, speculate > 0) {
+        (true, true) => "pool-spec",
+        (true, false) => "pool-plain",
+        (false, true) => "single-spec",
+        (false, false) => "single-plain",
+    }
+}
+
 fn serve(args: &Args) -> Result<()> {
     // --http-addr switches from the synthetic trace to the HTTP frontend
     // (requests come from the network instead of the corpus sampler)
@@ -170,7 +248,15 @@ fn serve(args: &Args) -> Result<()> {
     let trace_out = args.get("trace-out");
     let trace_sample = args.usize_or("trace-sample", 1).max(1);
     let log_every_s = args.usize_or("log-every-s", 0);
-    let hub: Option<Arc<TelemetryHub>> = (metrics_addr.is_some() || log_every_s > 0)
+    // SLO objectives (--slo-*) and the stall watchdog (--stall-ms) both
+    // live on the telemetry hub, so either one forces it into existence
+    // even without a /metrics listener
+    let slo = slo_config(args);
+    let stall_ms = args.usize_or("stall-ms", 0);
+    let hub: Option<Arc<TelemetryHub>> = (metrics_addr.is_some()
+        || log_every_s > 0
+        || slo.is_enabled()
+        || stall_ms > 0)
         .then(|| Arc::new(TelemetryHub::new()));
     let trace_sink: Option<Arc<TraceSink>> =
         trace_out.is_some().then(|| Arc::new(TraceSink::new(trace_sample as u64)));
@@ -182,20 +268,48 @@ fn serve(args: &Args) -> Result<()> {
         }
         _ => None,
     };
-    if let (Some(h), Some(c)) = (&hub, &cache) {
-        h.attach_cache(Arc::clone(c));
+    if let Some(h) = &hub {
+        if let Some(c) = &cache {
+            h.attach_cache(Arc::clone(c));
+        }
+        if slo.is_enabled() {
+            h.attach_slo(Arc::new(SloMonitor::new(slo.clone())));
+        }
+        if stall_ms > 0 {
+            h.attach_watchdog(Arc::new(StallWatchdog::new(Duration::from_millis(
+                stall_ms as u64,
+            ))));
+        }
+        h.attach_config(resolved_config(
+            topology_name(workers, speculate),
+            workers,
+            max_active,
+            speculate,
+            &variant,
+            cache_mb,
+            &sched,
+            &slo,
+            stall_ms,
+        ));
     }
     let ticker_stop = Arc::new(AtomicBool::new(false));
-    let ticker = (log_every_s > 0).then(|| {
-        let h = Arc::clone(hub.as_ref().expect("hub exists when --log-every-s is set"));
+    let watchdog = hub.as_ref().and_then(|h| h.watchdog());
+    let ticker = (log_every_s > 0 || watchdog.is_some()).then(|| {
+        let h = Arc::clone(hub.as_ref().expect("hub exists when the obs ticker runs"));
         let stop = Arc::clone(&ticker_stop);
+        let watchdog = watchdog.clone();
         std::thread::spawn(move || {
             let period = Duration::from_secs(log_every_s as u64);
             let mut slept = Duration::ZERO;
             while !stop.load(Ordering::Relaxed) {
                 std::thread::sleep(Duration::from_millis(100));
                 slept += Duration::from_millis(100);
-                if slept >= period {
+                // the watchdog rides the 100 ms tick so a wedged request
+                // is flagged within ~threshold + 100 ms, not +period
+                if let Some(wd) = &watchdog {
+                    wd.check(&h);
+                }
+                if log_every_s > 0 && slept >= period {
                     slept = Duration::ZERO;
                     println!("[obs] {}", h.one_line());
                 }
@@ -362,7 +476,9 @@ fn serve(args: &Args) -> Result<()> {
             engine = engine.with_cache(Arc::clone(c));
         }
         if let Some(h) = &hub {
-            engine = engine.with_telemetry(h.register("0"));
+            engine = engine
+                .with_telemetry(h.register("0"))
+                .with_flight(Arc::clone(h.flight()), 0);
         }
         if let Some(s) = &trace_sink {
             engine = engine.with_trace(Arc::clone(s), 0);
@@ -406,7 +522,9 @@ fn serve(args: &Args) -> Result<()> {
             engine = engine.with_cache(Arc::clone(c));
         }
         if let Some(h) = &hub {
-            engine = engine.with_telemetry(h.register("0"));
+            engine = engine
+                .with_telemetry(h.register("0"))
+                .with_flight(Arc::clone(h.flight()), 0);
         }
         if let Some(s) = &trace_sink {
             engine = engine.with_trace(Arc::clone(s), 0);
@@ -511,8 +629,12 @@ fn serve_over_http(args: &Args) -> Result<()> {
     let metrics_json = args.get("metrics-json");
     let trace_out = args.get("trace-out");
     let trace_sample = args.usize_or("trace-sample", 1).max(1);
-    let hub: Option<Arc<TelemetryHub>> =
-        metrics_addr.is_some().then(|| Arc::new(TelemetryHub::new()));
+    let slo = slo_config(args);
+    let stall_ms = args.usize_or("stall-ms", 0);
+    let hub: Option<Arc<TelemetryHub>> = (metrics_addr.is_some()
+        || slo.is_enabled()
+        || stall_ms > 0)
+        .then(|| Arc::new(TelemetryHub::new()));
     let trace_sink: Option<Arc<TraceSink>> =
         trace_out.is_some().then(|| Arc::new(TraceSink::new(trace_sample as u64)));
     let mut metrics_server = match (&hub, metrics_addr) {
@@ -523,18 +645,55 @@ fn serve_over_http(args: &Args) -> Result<()> {
         }
         _ => None,
     };
-    if let (Some(h), Some(c)) = (&hub, &cache) {
-        h.attach_cache(Arc::clone(c));
+    if let Some(h) = &hub {
+        if let Some(c) = &cache {
+            h.attach_cache(Arc::clone(c));
+        }
+        if slo.is_enabled() {
+            h.attach_slo(Arc::new(SloMonitor::new(slo.clone())));
+        }
+        if stall_ms > 0 {
+            h.attach_watchdog(Arc::new(StallWatchdog::new(Duration::from_millis(
+                stall_ms as u64,
+            ))));
+        }
+        h.attach_config(resolved_config(
+            topology_name(workers, speculate),
+            workers,
+            max_active,
+            speculate,
+            &variant,
+            cache_mb,
+            &sched,
+            &slo,
+            stall_ms,
+        ));
     }
+    let ticker_stop = Arc::new(AtomicBool::new(false));
+    let watchdog = hub.as_ref().and_then(|h| h.watchdog());
+    let ticker = watchdog.clone().map(|wd| {
+        let h = Arc::clone(hub.as_ref().expect("hub exists when --stall-ms is set"));
+        let stop = Arc::clone(&ticker_stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(100));
+                wd.check(&h);
+            }
+        })
+    });
 
     // probe the backend once for the API surface (vocab + served variants)
     let be = backend::load(kind)?;
-    let http_cfg = HttpConfig::new(ApiConfig {
+    let mut http_cfg = HttpConfig::new(ApiConfig {
         variant: variant.clone(),
         variants: be.variants(),
         vocab_size: be.cfg().vocab_size,
         default_max_tokens: args.usize_or("max-new", 16),
     });
+    // the frontend's /healthz consults pool liveness through the hub
+    if let Some(h) = &hub {
+        http_cfg = http_cfg.with_hub(Arc::clone(h));
+    }
     println!(
         "backend: {} ({}; prefill buckets {:?}, decode batches {:?})",
         be.name(),
@@ -633,7 +792,9 @@ fn serve_over_http(args: &Args) -> Result<()> {
                 engine = engine.with_cache(Arc::clone(c));
             }
             if let Some(h) = &hub {
-                engine = engine.with_telemetry(h.register("0"));
+                engine = engine
+                    .with_telemetry(h.register("0"))
+                    .with_flight(Arc::clone(h.flight()), 0);
             }
             if let Some(s) = &trace_sink {
                 engine = engine.with_trace(Arc::clone(s), 0);
@@ -662,7 +823,9 @@ fn serve_over_http(args: &Args) -> Result<()> {
                 engine = engine.with_cache(Arc::clone(c));
             }
             if let Some(h) = &hub {
-                engine = engine.with_telemetry(h.register("0"));
+                engine = engine
+                    .with_telemetry(h.register("0"))
+                    .with_flight(Arc::clone(h.flight()), 0);
             }
             if let Some(s) = &trace_sink {
                 engine = engine.with_trace(Arc::clone(s), 0);
@@ -689,6 +852,10 @@ fn serve_over_http(args: &Args) -> Result<()> {
         println!("state cache ({cache_mb} MiB): {}", c.stats().summary());
     }
     print_finish_reasons(&finished);
+    ticker_stop.store(true, Ordering::Relaxed);
+    if let Some(t) = ticker {
+        let _ = t.join();
+    }
     if let Some(srv) = metrics_server.as_mut() {
         srv.shutdown();
     }

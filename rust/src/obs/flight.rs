@@ -1,0 +1,283 @@
+//! Flight recorder: a bounded, lock-light ring buffer of structured
+//! request-lifecycle events.
+//!
+//! Chrome traces (`obs::trace`) answer "what did this run look like" after
+//! the fact; the flight recorder answers "what just happened" *while the
+//! process is live* — the last few thousand lifecycle transitions
+//! (enqueue, admit, cache probe, preempt/resume, shed, dispatch, worker
+//! death, finish, stall) are always resident and dumpable as JSON on
+//! demand (`GET /debug/flight?n=N`, or automatically when the stall
+//! watchdog fires).  One recorder lives on the [`super::TelemetryHub`] and
+//! is shared by every engine and the pool dispatcher.
+//!
+//! Concurrency: writers claim a slot with one `fetch_add` on a global
+//! sequence counter, then fill `slots[seq % capacity]` under that slot's
+//! own mutex — writers on different slots never contend, and a writer
+//! lapping a reader simply overwrites the oldest event (that is the ring
+//! contract).  The sequence number is strictly increasing across all
+//! threads, so a dump sorted by `seq` is a globally consistent order even
+//! when slot writes race.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// Default ring capacity: at ~100 bytes/event this is ≈400 KiB resident,
+/// and deep enough to hold every transition of several hundred in-flight
+/// requests.
+pub const DEFAULT_FLIGHT_CAPACITY: usize = 4096;
+
+/// Worker id the pool dispatcher records under (it is not a worker).
+pub const DISPATCHER_LANE: u32 = u32::MAX;
+
+/// What happened to a request (or worker) at one lifecycle transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlightKind {
+    /// request entered an engine's pending queue
+    Enqueue,
+    /// request bound to a state slot and began prefill
+    Admit,
+    /// state-cache probe at admission (detail says hit/miss + tokens)
+    CacheProbe,
+    /// running request evicted from its slot by a higher-priority arrival
+    Preempt,
+    /// previously preempted request re-admitted from its snapshot
+    Resume,
+    /// request shed by admission control (queue full, `Overloaded`)
+    Shed,
+    /// dispatcher handed the request to a worker
+    Dispatch,
+    /// a pool worker died (req field is 0; detail names the worker)
+    WorkerDeath,
+    /// request retired (detail carries the finish reason)
+    Finish,
+    /// stall watchdog flagged this request/worker as wedged
+    Stall,
+}
+
+impl FlightKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FlightKind::Enqueue => "enqueue",
+            FlightKind::Admit => "admit",
+            FlightKind::CacheProbe => "cache_probe",
+            FlightKind::Preempt => "preempt",
+            FlightKind::Resume => "resume",
+            FlightKind::Shed => "shed",
+            FlightKind::Dispatch => "dispatch",
+            FlightKind::WorkerDeath => "worker_death",
+            FlightKind::Finish => "finish",
+            FlightKind::Stall => "stall",
+        }
+    }
+}
+
+/// One recorded lifecycle transition.
+#[derive(Debug, Clone)]
+pub struct FlightEvent {
+    /// global strictly-increasing sequence number (dump order)
+    pub seq: u64,
+    /// microseconds since the recorder was created
+    pub t_us: u64,
+    /// recording lane: worker index, or [`DISPATCHER_LANE`]
+    pub worker: u32,
+    /// request id (0 for worker-scoped events)
+    pub req: u64,
+    pub kind: FlightKind,
+    /// small free-form detail, e.g. `"slot=2"` or `"reason=Length"`
+    pub detail: String,
+}
+
+impl FlightEvent {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("seq", json::num(self.seq as f64)),
+            ("t_us", json::num(self.t_us as f64)),
+            (
+                "worker",
+                if self.worker == DISPATCHER_LANE {
+                    json::s("dispatcher")
+                } else {
+                    json::num(self.worker as f64)
+                },
+            ),
+            ("req", json::num(self.req as f64)),
+            ("kind", json::s(self.kind.name())),
+            ("detail", json::s(&self.detail)),
+        ])
+    }
+}
+
+/// The shared bounded event ring (see module docs for the concurrency
+/// contract).
+#[derive(Debug)]
+pub struct FlightRecorder {
+    epoch: Instant,
+    seq: AtomicU64,
+    slots: Vec<Mutex<Option<FlightEvent>>>,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_FLIGHT_CAPACITY)
+    }
+}
+
+impl FlightRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever recorded (≥ events still resident).
+    pub fn recorded(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Record one event: claim the next sequence number, overwrite the ring
+    /// slot it maps to.  O(1), one atomic plus one uncontended slot lock.
+    pub fn record(&self, worker: u32, req: u64, kind: FlightKind, detail: impl Into<String>) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let ev = FlightEvent {
+            seq,
+            t_us: self.epoch.elapsed().as_micros() as u64,
+            worker,
+            req,
+            kind,
+            detail: detail.into(),
+        };
+        *self.slots[(seq % self.slots.len() as u64) as usize].lock().unwrap() = Some(ev);
+    }
+
+    /// Snapshot the last `n` resident events in global sequence order.
+    /// Events being overwritten concurrently may be missing or replaced by
+    /// newer ones — the dump is always a consistent set of real events,
+    /// sorted by `seq`, never a torn record.
+    pub fn dump(&self, n: usize) -> Vec<FlightEvent> {
+        let mut evs: Vec<FlightEvent> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.lock().unwrap().clone())
+            .collect();
+        evs.sort_by_key(|e| e.seq);
+        if evs.len() > n {
+            evs.drain(..evs.len() - n);
+        }
+        evs
+    }
+
+    /// JSON dump body for `/debug/flight` and the watchdog report.
+    pub fn dump_json(&self, n: usize) -> Json {
+        let evs = self.dump(n);
+        json::obj(vec![
+            ("capacity", json::num(self.capacity() as f64)),
+            ("recorded", json::num(self.recorded() as f64)),
+            ("returned", json::num(evs.len() as f64)),
+            (
+                "events",
+                Json::Arr(evs.iter().map(FlightEvent::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// An engine's handle into the shared recorder: the recorder plus the
+/// lane (worker index) this engine records under.
+#[derive(Debug, Clone)]
+pub struct FlightCtx {
+    pub rec: Arc<FlightRecorder>,
+    pub worker: u32,
+}
+
+impl FlightCtx {
+    pub fn new(rec: Arc<FlightRecorder>, worker: u32) -> Self {
+        Self { rec, worker }
+    }
+
+    #[inline]
+    pub fn record(&self, req: u64, kind: FlightKind, detail: impl Into<String>) {
+        self.rec.record(self.worker, req, kind, detail);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flight_ring_wraps_and_keeps_latest_events() {
+        let rec = FlightRecorder::with_capacity(8);
+        for i in 0..20u64 {
+            rec.record(0, i, FlightKind::Enqueue, format!("i={i}"));
+        }
+        assert_eq!(rec.recorded(), 20);
+        let evs = rec.dump(usize::MAX);
+        assert_eq!(evs.len(), 8, "ring holds exactly its capacity");
+        let seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (12..20).collect::<Vec<_>>(), "oldest overwritten");
+        // last-n trims from the front
+        let last3 = rec.dump(3);
+        assert_eq!(
+            last3.iter().map(|e| e.seq).collect::<Vec<_>>(),
+            vec![17, 18, 19]
+        );
+        assert_eq!(last3.last().unwrap().req, 19);
+        assert_eq!(last3.last().unwrap().detail, "i=19");
+        // the JSON dump parses back and reports the same shape
+        let text = json::to_string(&rec.dump_json(3));
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.usize_field("capacity").unwrap(), 8);
+        assert_eq!(v.usize_field("recorded").unwrap(), 20);
+        assert_eq!(v.arr_field("events").unwrap().len(), 3);
+        assert_eq!(
+            v.arr_field("events").unwrap()[0].str_field("kind").unwrap(),
+            "enqueue"
+        );
+    }
+
+    #[test]
+    fn flight_concurrent_writers_yield_distinct_ordered_seqs() {
+        let rec = Arc::new(FlightRecorder::with_capacity(4096));
+        let n_threads = 8;
+        let per_thread = 400u64;
+        let mut joins = Vec::new();
+        for t in 0..n_threads {
+            let r = Arc::clone(&rec);
+            joins.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    r.record(t, i, FlightKind::Dispatch, "");
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let total = n_threads as u64 * per_thread;
+        assert_eq!(rec.recorded(), total);
+        let evs = rec.dump(usize::MAX);
+        assert_eq!(evs.len(), total as usize, "capacity exceeds writes: none lost");
+        // sequence numbers are globally unique and the dump is sorted
+        for (i, e) in evs.iter().enumerate() {
+            assert_eq!(e.seq, i as u64, "dense, distinct, ordered seqs");
+        }
+        // every thread's events appear in its own program order
+        for t in 0..n_threads {
+            let mine: Vec<u64> = evs.iter().filter(|e| e.worker == t).map(|e| e.req).collect();
+            assert_eq!(mine, (0..per_thread).collect::<Vec<_>>());
+        }
+    }
+}

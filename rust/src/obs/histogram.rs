@@ -175,6 +175,47 @@ impl Histogram {
         self.counts.capacity() * std::mem::size_of::<u64>()
     }
 
+    /// Observations whose value may exceed `threshold`, bucket-quantized:
+    /// a bucket counts as "over" iff its inclusive upper edge exceeds the
+    /// threshold, so an observation in the straddling bucket is counted as
+    /// violating (the conservative direction for an SLO error fraction).
+    /// The ≤0 class counts only for a negative threshold.  Because the
+    /// answer is a pure function of the bucket counts, recomputing it
+    /// offline from an exported `(bucket, count)` list reproduces the live
+    /// value bit-for-bit.
+    pub fn count_over(&self, threshold: f64) -> u64 {
+        let mut over = if threshold < 0.0 { self.zero } else { 0 };
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 && bucket_upper(i) > threshold {
+                over += c;
+            }
+        }
+        over
+    }
+
+    /// Count of observations in the ≤0 class (kept out of the log buckets).
+    pub fn zero_count(&self) -> u64 {
+        self.zero
+    }
+
+    /// Sparse `(bucket_index, count)` pairs for every non-empty log bucket
+    /// — the export shape for `fastmamba.metrics.v1` snapshots, from which
+    /// [`Histogram::count_over`] is exactly recomputable.
+    pub fn nonzero_buckets(&self) -> Vec<(usize, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+            .collect()
+    }
+
+    /// Inclusive upper edge of log bucket `i` — public so offline snapshot
+    /// consumers share the exact same edge arithmetic as the live path.
+    pub fn bucket_upper_edge(i: usize) -> f64 {
+        bucket_upper(i)
+    }
+
     /// Cumulative `(le, count)` pairs for Prometheus exposition, keeping
     /// every `stride`-th bucket edge (34 edges at `stride = 8`) plus the
     /// implicit `+Inf` which callers render from [`Histogram::count`].
@@ -293,6 +334,45 @@ mod tests {
         assert_eq!(h.count(), 3);
         assert_eq!(h.quantile(0.01), -1.0, "low quantile lands in the ≤0 class");
         assert_eq!(h.quantile(1.0), 1e9, "top quantile clamps to observed max");
+    }
+
+    #[test]
+    fn histogram_count_over_is_bucket_quantized_and_merge_consistent() {
+        let mut h = Histogram::new();
+        h.observe(0.0); // ≤0 class
+        for &v in &[0.001, 0.010, 0.100, 1.0] {
+            h.observe(v);
+        }
+        // threshold below every positive observation: all four are over
+        assert_eq!(h.count_over(1e-9), 4);
+        // negative threshold also sweeps in the ≤0 class
+        assert_eq!(h.count_over(-1.0), 5);
+        // threshold above the top observation's bucket edge: none are over
+        assert_eq!(h.count_over(10.0), 0);
+        // bucket-quantized boundary: an observation's own bucket upper edge
+        // is ≥ the observation, so thresholding exactly at a recorded value
+        // still counts it (the straddling bucket is "over")
+        assert!(h.count_over(0.010) >= 2, "0.100 and 1.0 are over");
+        assert!(h.count_over(0.009) >= 3);
+        // count_over is a pure function of the bucket counts: recomputing
+        // from the sparse export reproduces it exactly, and merge adds it
+        let recompute = |h: &Histogram, t: f64| -> u64 {
+            let mut over = if t < 0.0 { h.zero_count() } else { 0 };
+            for (i, c) in h.nonzero_buckets() {
+                if Histogram::bucket_upper_edge(i) > t {
+                    over += c;
+                }
+            }
+            over
+        };
+        for t in [-1.0, 1e-9, 0.009, 0.010, 0.05, 10.0] {
+            assert_eq!(h.count_over(t), recompute(&h, t), "t={t}");
+        }
+        let mut other = Histogram::new();
+        other.observe(0.5);
+        let mut merged = h.clone();
+        merged.merge(&other);
+        assert_eq!(merged.count_over(0.009), h.count_over(0.009) + 1);
     }
 
     #[test]

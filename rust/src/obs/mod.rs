@@ -19,15 +19,29 @@
 //! * [`scrape::serve_metrics`] — the `/metrics` Prometheus-text endpoint
 //!   (`serve --metrics-addr HOST:PORT`) over
 //!   [`telemetry::TelemetryHub`], which aggregates per-worker telemetry
-//!   and reads state-cache occupancy live.
+//!   and reads state-cache occupancy live.  The same listener serves the
+//!   live introspection routes: `/statusz` (request/worker tables),
+//!   `/readyz` (readiness distinct from `/healthz` liveness),
+//!   `/debug/config`, and `/debug/flight?n=N`.
+//! * [`flight::FlightRecorder`] — a bounded ring of structured lifecycle
+//!   events (enqueue/admit/preempt/resume/shed/dispatch/finish/...),
+//!   always resident, dumpable as JSON on demand.
+//! * [`slo::SloMonitor`] / [`slo::StallWatchdog`] — burn-rate gauges +
+//!   windowed `slo_violations_total` against configured TTFT/TPOT/
+//!   availability objectives (`--slo-*`), and a watchdog that flags
+//!   no-progress requests/workers and dumps the flight recorder.
 
+pub mod flight;
 pub mod histogram;
 pub mod scrape;
+pub mod slo;
 pub mod telemetry;
 pub mod trace;
 
+pub use flight::{FlightCtx, FlightEvent, FlightKind, FlightRecorder};
 pub use histogram::Histogram;
 pub use scrape::{serve_metrics, MetricsServer};
+pub use slo::{SloConfig, SloMonitor, StallWatchdog};
 pub use telemetry::{Counter, Gauge, HistKind, Telemetry, TelemetryHub};
 pub use trace::{TraceCtx, TraceSink};
 

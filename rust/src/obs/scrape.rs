@@ -1,12 +1,23 @@
-//! Prometheus scrape endpoint: a minimal HTTP/1.1 responder on a
-//! `std::net::TcpListener` thread (`serve --metrics-addr HOST:PORT`).
+//! Metrics + live-introspection endpoint: a minimal HTTP/1.1 responder on
+//! a `std::net::TcpListener` thread (`serve --metrics-addr HOST:PORT`).
 //!
-//! `GET /metrics` returns the [`TelemetryHub`]'s text exposition; any
-//! other path is a 404.  The listener thread blocks in `accept`; shutdown
-//! flips an atomic and self-connects to unblock it, so dropping the
-//! [`MetricsServer`] never hangs.  Bind to port 0 to let the OS pick — the
-//! bound address is available from [`MetricsServer::addr`] (which is how
-//! the integration tests scrape a live pool without a fixed port).
+//! Routes, all `GET`:
+//!
+//! * `/metrics` — the [`TelemetryHub`]'s Prometheus text exposition.
+//! * `/statusz` — the live request/worker table as JSON (per-request id,
+//!   state, worker, priorities, age, tokens; per-worker queue depth and
+//!   utilization counters; dispatcher view; cache shard occupancy).
+//! * `/readyz` — readiness: 200 only with at least one live worker and
+//!   the ingress queue below its shed threshold (the load balancer's
+//!   signal, distinct from `/healthz` liveness on the API port).
+//! * `/debug/config` — the resolved serving configuration dump.
+//! * `/debug/flight?n=N` — the last N flight-recorder events as JSON.
+//!
+//! Anything else is a 404.  The listener thread blocks in `accept`;
+//! shutdown flips an atomic and self-connects to unblock it, so dropping
+//! the [`MetricsServer`] never hangs.  Bind to port 0 to let the OS pick
+//! — the bound address is available from [`MetricsServer::addr`] (which
+//! is how the integration tests scrape a live pool without a fixed port).
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -18,6 +29,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::telemetry::TelemetryHub;
+use crate::util::json;
 
 pub struct MetricsServer {
     addr: SocketAddr,
@@ -58,13 +70,51 @@ fn handle_conn(mut stream: TcpStream, hub: &TelemetryHub) -> Result<()> {
         .next()
         .unwrap_or("");
     let path = request_line.split_whitespace().nth(1).unwrap_or("");
-    let (status, body) = if path == "/metrics" || path.starts_with("/metrics?") {
-        ("200 OK", hub.render_prometheus())
-    } else {
-        ("404 Not Found", String::from("not found; scrape /metrics\n"))
+    let (route, query) = match path.split_once('?') {
+        Some((r, q)) => (r, q),
+        None => (path, ""),
+    };
+    const PROM: &str = "text/plain; version=0.0.4; charset=utf-8";
+    const JSON: &str = "application/json";
+    let (status, ctype, body) = match route {
+        "/metrics" => ("200 OK", PROM, hub.render_prometheus()),
+        "/statusz" => {
+            let mut b = json::to_string(&hub.statusz_json());
+            b.push('\n');
+            ("200 OK", JSON, b)
+        }
+        "/readyz" => {
+            let (ready, body) = hub.readiness();
+            let mut b = json::to_string(&body);
+            b.push('\n');
+            let status = if ready { "200 OK" } else { "503 Service Unavailable" };
+            (status, JSON, b)
+        }
+        "/debug/config" => {
+            let mut b = json::to_string(&hub.config_json());
+            b.push('\n');
+            ("200 OK", JSON, b)
+        }
+        "/debug/flight" => {
+            let n = query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("n="))
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(256);
+            let mut b = json::to_string(&hub.flight().dump_json(n));
+            b.push('\n');
+            ("200 OK", JSON, b)
+        }
+        _ => (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            String::from(
+                "not found; try /metrics /statusz /readyz /debug/config /debug/flight?n=N\n",
+            ),
+        ),
     };
     let response = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     );
@@ -150,6 +200,70 @@ mod tests {
 
         server.shutdown();
         server.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn scrape_statusz_readyz_and_flight_routes_serve_json() {
+        use crate::obs::flight::FlightKind;
+        use crate::util::json::{self as j, Json};
+
+        let hub = Arc::new(TelemetryHub::new());
+        let mut server = serve_metrics("127.0.0.1:0", Arc::clone(&hub)).unwrap();
+
+        // nothing registered yet: /readyz says not ready with a reason
+        let (head, body) = http_get(server.addr(), "/readyz").unwrap();
+        assert!(head.starts_with("HTTP/1.1 503"), "{head}");
+        assert!(head.contains("application/json"), "{head}");
+        let v = Json::parse(body.trim()).unwrap();
+        assert_eq!(v.get("ready").unwrap(), &Json::Bool(false));
+
+        // one worker with a published status flips readiness and fills
+        // the /statusz tables
+        let w = hub.register("0");
+        w.set_status(j::obj(vec![
+            (
+                "requests",
+                Json::Arr(vec![j::obj(vec![
+                    ("id", j::num(5.0)),
+                    ("state", j::s("active")),
+                    ("tokens", j::num(2.0)),
+                ])]),
+            ),
+            ("pending", j::num(0.0)),
+            ("active", j::num(1.0)),
+        ]));
+        let (head, _) = http_get(server.addr(), "/readyz").unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+
+        let (head, body) = http_get(server.addr(), "/statusz").unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        let v = Json::parse(body.trim()).unwrap();
+        assert_eq!(v.arr_field("workers").unwrap().len(), 1);
+        let reqs = v.arr_field("requests").unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].usize_field("id").unwrap(), 5);
+        assert_eq!(reqs[0].str_field("worker").unwrap(), "0");
+
+        // /debug/config serves whatever was attached at startup
+        hub.attach_config(j::obj(vec![("workers", j::num(4.0))]));
+        let (head, body) = http_get(server.addr(), "/debug/config").unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        let v = Json::parse(body.trim()).unwrap();
+        assert_eq!(v.usize_field("workers").unwrap(), 4);
+
+        // /debug/flight?n=N returns the last N events
+        for i in 0..10u64 {
+            hub.flight().record(0, i, FlightKind::Admit, "slot=0");
+        }
+        let (head, body) = http_get(server.addr(), "/debug/flight?n=4").unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        let v = Json::parse(body.trim()).unwrap();
+        assert_eq!(v.usize_field("recorded").unwrap(), 10);
+        let evs = v.arr_field("events").unwrap();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[3].usize_field("req").unwrap(), 9);
+
+        server.shutdown();
     }
 
     #[test]

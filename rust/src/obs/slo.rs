@@ -1,0 +1,632 @@
+//! SLO burn-rate monitoring and the stall watchdog.
+//!
+//! Objectives come from the CLI (`--slo-ttft-ms`, `--slo-tpot-ms`,
+//! `--slo-availability`); each [`SloMonitor::evaluate`] call reads the
+//! [`TelemetryHub`]'s aggregated cells and reports two views per
+//! objective:
+//!
+//! * **burn rate** — the cumulative error fraction divided by the error
+//!   budget, over the full process history.  Because it is a pure
+//!   function of integer bucket counts (see
+//!   [`crate::obs::Histogram::count_over`]), the exported
+//!   `fastmamba.metrics.v1` snapshot reproduces the live gauge
+//!   *bit-for-bit* offline via [`burn_from_buckets`] — latency
+//!   attribution you can audit, not just trust.
+//! * **windowed violations** — each `evaluate` call closes a rolling
+//!   window over the delta since the previous call; a window whose own
+//!   error fraction exceeds the budget increments
+//!   `slo_violations_total{objective=...}` exactly once.  The scrape
+//!   interval (or the `--log-every-s` ticker) is the window length, the
+//!   usual Prometheus arrangement.
+//!
+//! The [`StallWatchdog`] is the liveness side: it watches the live
+//! `/statusz` view for requests whose token count stops advancing and for
+//! a dispatcher whose dispatch counter stops moving while a backlog
+//! exists, and when it fires it counts `stalls_detected_total`, records a
+//! [`FlightKind::Stall`] event, and dumps the flight recorder to stderr —
+//! the post-mortem is captured at detection time, not reconstructed later.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::flight::{FlightKind, DISPATCHER_LANE};
+use super::histogram::Histogram;
+use super::telemetry::{Counter, HistKind, TelemetryHub};
+use crate::util::json::{self, Json};
+
+/// Configured objectives.  Latency thresholds are stored in seconds; a
+/// `None` objective is not evaluated or exported.
+#[derive(Debug, Clone)]
+pub struct SloConfig {
+    /// time-to-first-token objective: `latency_target` of requests must
+    /// see their first token within this many seconds
+    pub ttft_s: Option<f64>,
+    /// inter-token latency objective, seconds
+    pub tpot_s: Option<f64>,
+    /// availability target in (0, 1): the allowed failure budget is
+    /// `1 - availability`, burned by shed + dropped requests
+    pub availability: Option<f64>,
+    /// fraction of requests that must meet each latency threshold — the
+    /// latency error budget is `1 - latency_target`
+    pub latency_target: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        Self { ttft_s: None, tpot_s: None, availability: None, latency_target: 0.99 }
+    }
+}
+
+impl SloConfig {
+    pub fn is_enabled(&self) -> bool {
+        self.ttft_s.is_some() || self.tpot_s.is_some() || self.availability.is_some()
+    }
+
+    /// The latency error budget, `1.0 - latency_target`, as the one
+    /// expression both the live gauges and offline recomputes must share:
+    /// `1.0 - 0.99` is *not* bit-identical to the literal `0.01` in f64,
+    /// so consumers that hard-code the budget instead of deriving it from
+    /// the exported `latency_target` lose the bit-for-bit guarantee.
+    pub fn latency_budget(&self) -> f64 {
+        1.0 - self.latency_target
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(json::num).unwrap_or(Json::Null);
+        json::obj(vec![
+            ("ttft_s", opt(self.ttft_s)),
+            ("tpot_s", opt(self.tpot_s)),
+            ("availability", opt(self.availability)),
+            ("latency_target", json::num(self.latency_target)),
+        ])
+    }
+}
+
+/// Burn rate from an error/total pair: `(errors/total) / budget`.  Both
+/// the live gauges and the offline recompute reduce to this one function,
+/// which is what makes them bit-identical.
+pub fn burn_from_counts(errors: u64, total: u64, budget: f64) -> f64 {
+    if total == 0 || budget <= 0.0 {
+        return 0.0;
+    }
+    (errors as f64 / total as f64) / budget
+}
+
+/// Recompute a latency burn rate from an exported sparse bucket list
+/// (`[[bucket_index, count], ...]` plus the ≤0-class count and the total
+/// count, as written by `Metrics::to_json`).  Uses the same bucket-edge
+/// arithmetic as the live [`Histogram::count_over`] path, so the result
+/// is bit-for-bit identical to the live gauge at the same snapshot.
+pub fn burn_from_buckets(
+    buckets: &[(usize, u64)],
+    zero: u64,
+    total: u64,
+    threshold_s: f64,
+    budget: f64,
+) -> f64 {
+    let mut errors = if threshold_s < 0.0 { zero } else { 0 };
+    for &(i, c) in buckets {
+        if Histogram::bucket_upper_edge(i) > threshold_s {
+            errors += c;
+        }
+    }
+    burn_from_counts(errors, total, budget)
+}
+
+/// One objective's evaluation result.
+#[derive(Debug, Clone)]
+pub struct ObjectiveReport {
+    /// `"ttft"`, `"tpot"`, or `"availability"`
+    pub name: &'static str,
+    /// cumulative error-fraction / error-budget over the full history
+    pub burn_rate: f64,
+    /// burn rate of the window this evaluation closed
+    pub window_burn: f64,
+    /// true when this window burned past its budget (a violation)
+    pub violated_now: bool,
+    /// total violation windows since startup
+    pub violations: u64,
+}
+
+/// Per-objective window anchor: cumulative (errors, total) at the last
+/// window close.
+#[derive(Debug, Default, Clone, Copy)]
+struct Anchor {
+    errors: u64,
+    total: u64,
+}
+
+const OBJ_TTFT: usize = 0;
+const OBJ_TPOT: usize = 1;
+const OBJ_AVAIL: usize = 2;
+
+/// Evaluates the configured objectives against a [`TelemetryHub`].
+#[derive(Debug)]
+pub struct SloMonitor {
+    cfg: SloConfig,
+    violations: [AtomicU64; 3],
+    anchors: Mutex<[Anchor; 3]>,
+}
+
+impl SloMonitor {
+    pub fn new(cfg: SloConfig) -> Self {
+        Self {
+            cfg,
+            violations: std::array::from_fn(|_| AtomicU64::new(0)),
+            anchors: Mutex::new([Anchor::default(); 3]),
+        }
+    }
+
+    pub fn config(&self) -> &SloConfig {
+        &self.cfg
+    }
+
+    /// Evaluate every configured objective: refresh the cumulative burn
+    /// gauges and close one violation window per objective.
+    pub fn evaluate(&self, hub: &TelemetryHub) -> Vec<ObjectiveReport> {
+        let mut anchors = self.anchors.lock().unwrap();
+        let mut out = Vec::new();
+        if let Some(t) = self.cfg.ttft_s {
+            let h = hub.hist_aggregate(HistKind::Ttft);
+            let budget = self.cfg.latency_budget();
+            out.push(self.close_window(
+                OBJ_TTFT,
+                "ttft",
+                h.count_over(t),
+                h.count(),
+                budget,
+                &mut anchors[OBJ_TTFT],
+            ));
+        }
+        if let Some(t) = self.cfg.tpot_s {
+            let h = hub.hist_aggregate(HistKind::Tpot);
+            let budget = self.cfg.latency_budget();
+            out.push(self.close_window(
+                OBJ_TPOT,
+                "tpot",
+                h.count_over(t),
+                h.count(),
+                budget,
+                &mut anchors[OBJ_TPOT],
+            ));
+        }
+        if let Some(target) = self.cfg.availability {
+            let errors = hub.total(Counter::RequestsShed) + hub.total(Counter::RequestsDropped);
+            let total = hub.total(Counter::RequestsCompleted);
+            out.push(self.close_window(
+                OBJ_AVAIL,
+                "availability",
+                errors,
+                total,
+                1.0 - target,
+                &mut anchors[OBJ_AVAIL],
+            ));
+        }
+        out
+    }
+
+    fn close_window(
+        &self,
+        idx: usize,
+        name: &'static str,
+        errors: u64,
+        total: u64,
+        budget: f64,
+        anchor: &mut Anchor,
+    ) -> ObjectiveReport {
+        let burn_rate = burn_from_counts(errors, total, budget);
+        let d_errors = errors.saturating_sub(anchor.errors);
+        let d_total = total.saturating_sub(anchor.total);
+        let window_burn = burn_from_counts(d_errors, d_total, budget);
+        let violated_now = d_total > 0 && window_burn > 1.0;
+        if violated_now {
+            self.violations[idx].fetch_add(1, Ordering::Relaxed);
+        }
+        *anchor = Anchor { errors, total };
+        ObjectiveReport {
+            name,
+            burn_rate,
+            window_burn,
+            violated_now,
+            violations: self.violations[idx].load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Flags requests with no token progress and a dispatcher with no
+/// dispatch progress past `threshold`.  `check` is explicit (called by
+/// the ticker thread, or directly in tests) so a wedged request is
+/// detectable deterministically.
+#[derive(Debug)]
+pub struct StallWatchdog {
+    threshold: Duration,
+    stalls: AtomicU64,
+    state: Mutex<WatchState>,
+}
+
+#[derive(Debug, Default)]
+struct WatchState {
+    /// request id → (last seen token count, unchanged since)
+    reqs: HashMap<u64, (u64, Instant)>,
+    /// (last seen dispatched_total, unchanged since)
+    dispatch: Option<(u64, Instant)>,
+}
+
+impl StallWatchdog {
+    pub fn new(threshold: Duration) -> Self {
+        Self {
+            threshold,
+            stalls: AtomicU64::new(0),
+            state: Mutex::new(WatchState::default()),
+        }
+    }
+
+    pub fn threshold(&self) -> Duration {
+        self.threshold
+    }
+
+    /// Total stalls detected since startup (`fastmamba_stalls_detected_total`).
+    pub fn stalls_detected(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    /// One watchdog pass over the hub's live status view.  Returns how
+    /// many stalls fired this pass; each firing records a `Stall` flight
+    /// event, and any firing pass dumps the flight recorder to stderr.
+    pub fn check(&self, hub: &TelemetryHub) -> usize {
+        let status = hub.statusz_json();
+        let now = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        let mut fired = 0usize;
+        let mut live_ids = Vec::new();
+        if let Some(reqs) = status.get("requests").and_then(Json::as_arr) {
+            for r in reqs {
+                let (Some(id), Some(tokens)) = (
+                    r.get("id").and_then(Json::as_f64),
+                    r.get("tokens").and_then(Json::as_f64),
+                ) else {
+                    continue;
+                };
+                let (id, tokens) = (id as u64, tokens as u64);
+                live_ids.push(id);
+                match st.reqs.entry(id) {
+                    Entry::Vacant(v) => {
+                        v.insert((tokens, now));
+                    }
+                    Entry::Occupied(mut o) => {
+                        let e = o.get_mut();
+                        if e.0 != tokens {
+                            *e = (tokens, now);
+                        } else if now.duration_since(e.1) >= self.threshold {
+                            fired += 1;
+                            self.stalls.fetch_add(1, Ordering::Relaxed);
+                            let worker = r
+                                .get("worker")
+                                .map(json::to_string)
+                                .unwrap_or_default();
+                            hub.flight().record(
+                                DISPATCHER_LANE,
+                                id,
+                                FlightKind::Stall,
+                                format!("no token progress (tokens={tokens} worker={worker})"),
+                            );
+                            e.1 = now; // re-arm instead of refiring every pass
+                        }
+                    }
+                }
+            }
+        }
+        st.reqs.retain(|id, _| live_ids.contains(id));
+        if let Some(d) = status.get("dispatcher") {
+            let dispatched = d
+                .get("dispatched_total")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0) as u64;
+            let backlog = d.get("backlog").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            match st.dispatch {
+                None => st.dispatch = Some((dispatched, now)),
+                Some((prev, _)) if prev != dispatched => st.dispatch = Some((dispatched, now)),
+                Some((_, since))
+                    if backlog > 0 && now.duration_since(since) >= self.threshold =>
+                {
+                    fired += 1;
+                    self.stalls.fetch_add(1, Ordering::Relaxed);
+                    hub.flight().record(
+                        DISPATCHER_LANE,
+                        0,
+                        FlightKind::Stall,
+                        format!("no dispatch progress (backlog={backlog})"),
+                    );
+                    st.dispatch = Some((dispatched, now));
+                }
+                _ => {}
+            }
+        }
+        drop(st);
+        if fired > 0 {
+            eprintln!(
+                "[watchdog] {fired} stall(s) detected; flight dump: {}",
+                json::to_string(&hub.flight().dump_json(64))
+            );
+        }
+        fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::telemetry::TelemetryHub;
+    use super::*;
+
+    #[test]
+    fn slo_violations_count_once_per_window() {
+        let hub = TelemetryHub::new();
+        let w = hub.register("0");
+        let slo = SloMonitor::new(SloConfig {
+            ttft_s: Some(0.001),
+            ..SloConfig::default()
+        });
+
+        // window 1: ten requests, all blowing the 1 ms TTFT objective
+        for _ in 0..10 {
+            w.observe(HistKind::Ttft, 1.0);
+        }
+        let r = &slo.evaluate(&hub)[0];
+        assert_eq!(r.name, "ttft");
+        assert!(r.violated_now, "{r:?}");
+        assert_eq!(r.violations, 1);
+        assert!(r.burn_rate > 1.0);
+
+        // window 2: no new observations — the same cumulative data must
+        // not be double-counted as a fresh violation
+        let r = &slo.evaluate(&hub)[0];
+        assert!(!r.violated_now, "{r:?}");
+        assert_eq!(r.violations, 1, "one violation per violating window");
+        assert_eq!(r.window_burn, 0.0);
+
+        // window 3: more bad data opens (and violates) a new window
+        for _ in 0..5 {
+            w.observe(HistKind::Ttft, 2.0);
+        }
+        let r = &slo.evaluate(&hub)[0];
+        assert!(r.violated_now);
+        assert_eq!(r.violations, 2);
+
+        // window 4: only healthy observations — window burn stays within
+        // budget even though the cumulative burn is still elevated
+        for _ in 0..5 {
+            w.observe(HistKind::Ttft, 1e-6);
+        }
+        let r = &slo.evaluate(&hub)[0];
+        assert!(!r.violated_now, "{r:?}");
+        assert_eq!(r.violations, 2);
+        assert!(r.burn_rate > 1.0, "cumulative view still remembers");
+    }
+
+    #[test]
+    fn slo_availability_burn_tracks_shed_and_dropped() {
+        let hub = TelemetryHub::new();
+        let w = hub.register("0");
+        // 0.875 and 0.125 are exact in binary, so "exactly at budget" is
+        // exactly at budget: 1.0 - 0.875 == 0.125 bit-for-bit (a target of
+        // 0.90 would give a budget of 1.0 - 0.90 ≈ 0.09999999999999998,
+        // which the literal 0.1 does NOT equal)
+        let slo = SloMonitor::new(SloConfig {
+            availability: Some(0.875),
+            ..SloConfig::default()
+        });
+        // 40 completions, 2 shed + 3 dropped: error fraction 5/40 == budget
+        w.add(Counter::RequestsCompleted, 40);
+        w.add(Counter::RequestsShed, 2);
+        w.add(Counter::RequestsDropped, 3);
+        let r = &slo.evaluate(&hub)[0];
+        assert_eq!(r.name, "availability");
+        assert_eq!(r.burn_rate.to_bits(), burn_from_counts(5, 40, 0.125).to_bits());
+        assert_eq!(r.burn_rate.to_bits(), 1.0f64.to_bits());
+        assert!(!r.violated_now, "exactly at budget is not a violation");
+        // five more sheds in the next window: 5/5 error fraction, burn 8×
+        w.add(Counter::RequestsCompleted, 5);
+        w.add(Counter::RequestsShed, 5);
+        let r = &slo.evaluate(&hub)[0];
+        assert!(r.violated_now);
+        assert_eq!(r.violations, 1);
+    }
+
+    #[test]
+    fn stall_watchdog_fires_on_wedged_request_and_dumps_flight() {
+        let hub = TelemetryHub::new();
+        let w = hub.register("0");
+        // a worker whose status table shows request 7 frozen at 3 tokens
+        let wedged = json::obj(vec![
+            (
+                "requests",
+                Json::Arr(vec![json::obj(vec![
+                    ("id", json::num(7.0)),
+                    ("state", json::s("active")),
+                    ("tokens", json::num(3.0)),
+                ])]),
+            ),
+            ("pending", json::num(0.0)),
+            ("active", json::num(1.0)),
+        ]);
+        w.set_status(wedged.clone());
+
+        let wd = StallWatchdog::new(Duration::ZERO);
+        assert_eq!(wd.check(&hub), 0, "first sighting arms, never fires");
+        assert_eq!(wd.check(&hub), 1, "no progress past threshold fires");
+        assert_eq!(wd.stalls_detected(), 1);
+        let evs = hub.flight().dump(usize::MAX);
+        let stall = evs.iter().find(|e| e.kind == FlightKind::Stall).unwrap();
+        assert_eq!(stall.req, 7);
+        assert!(stall.detail.contains("no token progress"), "{}", stall.detail);
+
+        // progress re-arms: a new token count must not fire
+        let moved = json::obj(vec![(
+            "requests",
+            Json::Arr(vec![json::obj(vec![
+                ("id", json::num(7.0)),
+                ("state", json::s("active")),
+                ("tokens", json::num(4.0)),
+            ])]),
+        )]);
+        w.set_status(moved);
+        assert_eq!(wd.check(&hub), 0, "token progress resets the clock");
+
+        // a wedged dispatcher (backlog, dispatch counter frozen) fires too
+        let d = hub.register("dispatcher");
+        d.set_status(json::obj(vec![
+            ("role", json::s("dispatcher")),
+            ("workers_alive", json::num(2.0)),
+            ("backlog", json::num(4.0)),
+            ("dispatched_total", json::num(9.0)),
+        ]));
+        wd.check(&hub); // arms the dispatch anchor (request 7 fires again here)
+        let before = wd.stalls_detected();
+        assert!(wd.check(&hub) >= 1);
+        assert!(wd.stalls_detected() > before);
+        let evs = hub.flight().dump(usize::MAX);
+        assert!(
+            evs.iter()
+                .any(|e| e.kind == FlightKind::Stall && e.detail.contains("no dispatch progress")),
+            "{evs:?}"
+        );
+    }
+
+    #[test]
+    fn slo_burn_rate_matches_offline_recompute_bit_for_bit() {
+        use crate::backend::{InferenceBackend, NativeBackend};
+        use crate::coordinator::{serve_pool, EngineConfig, PoolConfig, Request};
+        use anyhow::Result;
+
+        // deterministic 4-worker run on the micro model (the same recipe
+        // as the live-scrape test)
+        let make = || -> Result<Box<dyn InferenceBackend>> {
+            let mut cfg = crate::config::ModelConfig::tiny();
+            cfg.name = "mamba2-micro".into();
+            cfg.d_model = 64;
+            cfg.n_layer = 2;
+            cfg.d_state = 16;
+            cfg.headdim = 16;
+            cfg.vocab_size = 128;
+            Ok(Box::new(
+                NativeBackend::new(crate::model::ModelWeights::random(&cfg, 9))
+                    .with_buckets(vec![8, 16, 32], vec![1, 2, 4]),
+            ))
+        };
+        let hub = Arc::new(TelemetryHub::new());
+        let slo = Arc::new(SloMonitor::new(SloConfig {
+            ttft_s: Some(0.005),
+            tpot_s: Some(0.0005),
+            availability: Some(0.99),
+            latency_target: 0.99,
+        }));
+        hub.attach_slo(Arc::clone(&slo));
+        let pool = serve_pool(
+            make,
+            PoolConfig {
+                engine: EngineConfig { max_active: 4, greedy_chunking: true },
+                n_workers: 4,
+                hub: Some(Arc::clone(&hub)),
+                ..PoolConfig::default()
+            },
+        );
+        let n = 64usize;
+        for i in 0..n {
+            let plen = [3usize, 9, 17, 33][i % 4];
+            let prompt: Vec<u32> =
+                (0..plen).map(|j| ((i * 131 + j * 17) % 128) as u32).collect();
+            pool.submit(Request::new(i as u64, prompt, 2 + (i % 5), "fp32")).unwrap();
+        }
+        for _ in 0..n {
+            pool.results.recv().expect("pool result");
+        }
+        let report = pool.finish().unwrap();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+
+        // live gauges: rendered into the Prometheus exposition, parsed
+        // back (Rust f64 Display round-trips exactly)
+        let text = hub.render_prometheus();
+        let gauge = |objective: &str| -> f64 {
+            let prefix = format!("fastmamba_slo_burn_rate{{objective=\"{objective}\"}} ");
+            text.lines()
+                .find(|l| l.starts_with(&prefix))
+                .unwrap_or_else(|| panic!("missing {prefix} in:\n{text}"))
+                .rsplit(' ')
+                .next()
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+
+        // offline recompute: the exported fastmamba.metrics.v1 snapshot
+        // carries the sparse bucket counts; the same pure function over
+        // them must reproduce the live gauges bit-for-bit.  The budgets
+        // are derived exactly as the live path derives them — a literal
+        // 0.01 is NOT bit-identical to 1.0 - 0.99 in f64.
+        let lat_budget = slo.config().latency_budget();
+        let avail_budget = 1.0 - slo.config().availability.unwrap();
+        let snapshot = json::to_string(&report.merged.to_json());
+        let snap = Json::parse(&snapshot).unwrap();
+        let recompute = |field: &str, threshold: f64| -> f64 {
+            let h = snap.get(field).unwrap();
+            let buckets: Vec<(usize, u64)> = h
+                .arr_field("buckets")
+                .unwrap()
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr().unwrap();
+                    (p[0].as_usize().unwrap(), p[1].as_f64().unwrap() as u64)
+                })
+                .collect();
+            burn_from_buckets(
+                &buckets,
+                h.usize_field("zero").unwrap() as u64,
+                h.usize_field("count").unwrap() as u64,
+                threshold,
+                lat_budget,
+            )
+        };
+        let off_ttft = recompute("ttft_s", 0.005);
+        let off_tpot = recompute("tpot_s", 0.0005);
+        assert!(off_ttft.is_finite() && off_tpot.is_finite());
+        assert_eq!(gauge("ttft").to_bits(), off_ttft.to_bits(), "ttft burn");
+        assert_eq!(gauge("tpot").to_bits(), off_tpot.to_bits(), "tpot burn");
+        let off_avail = burn_from_counts(
+            snap.usize_field("requests_shed").unwrap() as u64
+                + snap.usize_field("requests_dropped").unwrap() as u64,
+            snap.usize_field("requests_completed").unwrap() as u64,
+            avail_budget,
+        );
+        assert_eq!(gauge("availability").to_bits(), off_avail.to_bits());
+
+        // violations render as labeled counters alongside the gauges
+        assert!(
+            text.contains("fastmamba_slo_violations_total{objective=\"ttft\"}"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn slo_config_json_and_helpers() {
+        let cfg = SloConfig {
+            ttft_s: Some(0.25),
+            tpot_s: None,
+            availability: Some(0.999),
+            latency_target: 0.95,
+        };
+        assert!(cfg.is_enabled());
+        assert!(!SloConfig::default().is_enabled());
+        let j = Json::parse(&json::to_string(&cfg.to_json())).unwrap();
+        assert_eq!(j.get("ttft_s").unwrap().as_f64().unwrap(), 0.25);
+        assert_eq!(j.get("tpot_s").unwrap(), &Json::Null);
+        // burn helpers: empty data and zero budget are inert
+        assert_eq!(burn_from_counts(0, 0, 0.01), 0.0);
+        assert_eq!(burn_from_counts(5, 10, 0.0), 0.0);
+        assert_eq!(burn_from_buckets(&[], 0, 0, 0.1, 0.01), 0.0);
+    }
+}

@@ -18,9 +18,13 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
+use super::flight::FlightRecorder;
 use super::histogram::{Histogram, BUCKETS_PER_OCTAVE};
+use super::slo::{SloMonitor, StallWatchdog};
 use crate::statecache::StateCache;
+use crate::util::json::{self, Json};
 
 /// Monotone counters an engine maintains (mirrors the `u64` fields of
 /// `coordinator::Metrics`, plus busy time in integer microseconds so it
@@ -201,6 +205,9 @@ pub struct Telemetry {
     gauges: [AtomicU64; N_GAUGES],
     gauge_peaks: [AtomicU64; N_GAUGES],
     hists: [Mutex<Histogram>; N_HISTS],
+    /// live status slot: the owning engine (or dispatcher) republishes a
+    /// small JSON object each step; `/statusz` reads the latest
+    status: Mutex<Option<Json>>,
 }
 
 impl Default for Telemetry {
@@ -216,7 +223,23 @@ impl Telemetry {
             gauges: std::array::from_fn(|_| AtomicU64::new(0)),
             gauge_peaks: std::array::from_fn(|_| AtomicU64::new(0)),
             hists: std::array::from_fn(|_| Mutex::new(Histogram::new())),
+            status: Mutex::new(None),
         }
+    }
+
+    /// Publish this handle's live status object (overwrites the previous).
+    pub fn set_status(&self, status: Json) {
+        *self.status.lock().unwrap() = Some(status);
+    }
+
+    /// Latest published status object, if any.
+    pub fn status(&self) -> Option<Json> {
+        self.status.lock().unwrap().clone()
+    }
+
+    /// Heap bytes held by this handle's histogram bucket arrays.
+    pub fn hist_heap_bytes(&self) -> usize {
+        self.hists.iter().map(|h| h.lock().unwrap().heap_bytes()).sum()
     }
 
     #[inline]
@@ -252,16 +275,38 @@ impl Telemetry {
 }
 
 /// Shared registry over all per-worker [`Telemetry`] handles, plus the
-/// optional [`StateCache`] whose occupancy it exposes as gauges.
-#[derive(Debug, Default)]
+/// optional [`StateCache`] whose occupancy it exposes as gauges, the
+/// always-on [`FlightRecorder`], and the optional [`SloMonitor`] /
+/// [`StallWatchdog`] / resolved-config attachments behind the live
+/// introspection endpoints (`/statusz`, `/readyz`, `/debug/*`).
+#[derive(Debug)]
 pub struct TelemetryHub {
     workers: Mutex<Vec<(String, Arc<Telemetry>)>>,
     cache: Mutex<Option<Arc<StateCache>>>,
+    flight: Arc<FlightRecorder>,
+    slo: Mutex<Option<Arc<SloMonitor>>>,
+    watchdog: Mutex<Option<Arc<StallWatchdog>>>,
+    config: Mutex<Option<Json>>,
+    started: Instant,
+}
+
+impl Default for TelemetryHub {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl TelemetryHub {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            workers: Mutex::new(Vec::new()),
+            cache: Mutex::new(None),
+            flight: Arc::new(FlightRecorder::new()),
+            slo: Mutex::new(None),
+            watchdog: Mutex::new(None),
+            config: Mutex::new(None),
+            started: Instant::now(),
+        }
     }
 
     /// Register a new labeled telemetry handle (one per pool worker, plus
@@ -279,8 +324,203 @@ impl TelemetryHub {
         *self.cache.lock().unwrap() = Some(cache);
     }
 
+    /// The hub's flight recorder (always present; engines record via a
+    /// [`super::flight::FlightCtx`] built from this).
+    pub fn flight(&self) -> &Arc<FlightRecorder> {
+        &self.flight
+    }
+
+    pub fn attach_slo(&self, slo: Arc<SloMonitor>) {
+        *self.slo.lock().unwrap() = Some(slo);
+    }
+
+    pub fn slo(&self) -> Option<Arc<SloMonitor>> {
+        self.slo.lock().unwrap().clone()
+    }
+
+    pub fn attach_watchdog(&self, watchdog: Arc<StallWatchdog>) {
+        *self.watchdog.lock().unwrap() = Some(watchdog);
+    }
+
+    pub fn watchdog(&self) -> Option<Arc<StallWatchdog>> {
+        self.watchdog.lock().unwrap().clone()
+    }
+
+    /// Attach the resolved serving configuration dump (`/debug/config`).
+    pub fn attach_config(&self, config: Json) {
+        *self.config.lock().unwrap() = Some(config);
+    }
+
+    pub fn config_json(&self) -> Json {
+        self.config
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or_else(|| json::obj(vec![("note", json::s("no config attached"))]))
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
     fn handles(&self) -> Vec<(String, Arc<Telemetry>)> {
         self.workers.lock().unwrap().clone()
+    }
+
+    /// Whether a handle is the pool dispatcher's (by label, or by the
+    /// `role` field of its published status).
+    fn is_dispatcher(label: &str, status: Option<&Json>) -> bool {
+        label == "dispatcher"
+            || status.and_then(|s| s.get("role")).and_then(Json::as_str) == Some("dispatcher")
+    }
+
+    /// Pool liveness as the dispatcher last reported it: `Some(false)`
+    /// when every worker is dead, `None` when no dispatcher status exists
+    /// (single-engine topologies: process liveness is engine liveness).
+    pub fn liveness(&self) -> Option<bool> {
+        for (label, t) in self.handles() {
+            let status = t.status();
+            if Self::is_dispatcher(&label, status.as_ref()) {
+                if let Some(alive) = status
+                    .as_ref()
+                    .and_then(|s| s.get("workers_alive"))
+                    .and_then(Json::as_f64)
+                {
+                    return Some(alive > 0.0);
+                }
+            }
+        }
+        None
+    }
+
+    /// Readiness (`/readyz`): at least one live worker AND the ingress
+    /// queue below its shed threshold — distinct from liveness, which only
+    /// says the process is up.  Returns the verdict plus a JSON body
+    /// naming the reason.
+    pub fn readiness(&self) -> (bool, Json) {
+        let handles = self.handles();
+        let mut dispatcher = None;
+        let mut n_workers = 0usize;
+        let mut worker_overfull = false;
+        for (label, t) in &handles {
+            let status = t.status();
+            if Self::is_dispatcher(label, status.as_ref()) {
+                if status.is_some() {
+                    dispatcher = status;
+                }
+                continue;
+            }
+            n_workers += 1;
+            if let Some(s) = &status {
+                let pending = s.get("pending").and_then(Json::as_f64).unwrap_or(0.0);
+                let max_queue = s.get("max_queue").and_then(Json::as_f64).unwrap_or(0.0);
+                if max_queue > 0.0 && pending >= max_queue {
+                    worker_overfull = true;
+                }
+            }
+        }
+        let (ready, reason) = if let Some(d) = &dispatcher {
+            let alive = d.get("workers_alive").and_then(Json::as_f64).unwrap_or(0.0);
+            let backlog = d.get("backlog").and_then(Json::as_f64).unwrap_or(0.0);
+            let max_queue = d.get("max_queue").and_then(Json::as_f64).unwrap_or(0.0);
+            if alive <= 0.0 {
+                (false, "no live workers".to_string())
+            } else if max_queue > 0.0 && backlog >= max_queue {
+                (false, format!("backlog {backlog} at shed threshold {max_queue}"))
+            } else {
+                (true, "ok".to_string())
+            }
+        } else if n_workers == 0 {
+            (false, "no workers registered".to_string())
+        } else if worker_overfull {
+            (false, "queue at shed threshold".to_string())
+        } else {
+            (true, "ok".to_string())
+        };
+        let body = json::obj(vec![
+            ("ready", Json::Bool(ready)),
+            ("reason", json::s(&reason)),
+        ]);
+        (ready, body)
+    }
+
+    /// The live request/worker table (`/statusz`): every status row each
+    /// engine published on its latest step, flattened into one request
+    /// table (worker label attached per row), plus per-worker gauges, the
+    /// dispatcher's view, and state-cache shard occupancy.
+    pub fn statusz_json(&self) -> Json {
+        let handles = self.handles();
+        let mut workers = Vec::new();
+        let mut requests = Vec::new();
+        let mut dispatcher = None;
+        for (label, t) in &handles {
+            let status = t.status();
+            if Self::is_dispatcher(label, status.as_ref()) {
+                if status.is_some() {
+                    dispatcher = status;
+                }
+                continue;
+            }
+            let (mut pending, mut active) = (0.0, 0.0);
+            if let Some(s) = &status {
+                pending = s.get("pending").and_then(Json::as_f64).unwrap_or(0.0);
+                active = s.get("active").and_then(Json::as_f64).unwrap_or(0.0);
+                if let Some(reqs) = s.get("requests").and_then(Json::as_arr) {
+                    for r in reqs {
+                        if let Json::Obj(fields) = r {
+                            let mut row = fields.clone();
+                            row.push(("worker".to_string(), json::s(label)));
+                            requests.push(Json::Obj(row));
+                        }
+                    }
+                }
+            }
+            workers.push(json::obj(vec![
+                ("worker", json::s(label)),
+                ("queue_depth", json::num(t.gauge(Gauge::QueueDepth) as f64)),
+                ("active_slots", json::num(t.gauge(Gauge::ActiveSlots) as f64)),
+                ("pending", json::num(pending)),
+                ("active", json::num(active)),
+                (
+                    "requests_completed",
+                    json::num(t.get(Counter::RequestsCompleted) as f64),
+                ),
+                (
+                    "tokens_generated",
+                    json::num(t.get(Counter::TokensGenerated) as f64),
+                ),
+                ("busy_us", json::num(t.get(Counter::BusyMicros) as f64)),
+            ]));
+        }
+        let cache = self.cache.lock().unwrap().as_ref().map(|c| {
+            let s = c.stats();
+            json::obj(vec![
+                ("bytes_resident", json::num(s.bytes_resident as f64)),
+                ("bytes_max", json::num(c.max_bytes() as f64)),
+                ("entries", json::num(s.entries as f64)),
+                (
+                    "shards",
+                    Json::Arr(
+                        c.shard_occupancy()
+                            .iter()
+                            .map(|&(entries, bytes)| {
+                                json::obj(vec![
+                                    ("entries", json::num(entries as f64)),
+                                    ("bytes", json::num(bytes as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        });
+        json::obj(vec![
+            ("uptime_s", json::num(self.uptime_s())),
+            ("workers", Json::Arr(workers)),
+            ("requests", Json::Arr(requests)),
+            ("dispatcher", dispatcher.unwrap_or(Json::Null)),
+            ("cache", cache.unwrap_or(Json::Null)),
+        ])
     }
 
     /// Sum of one counter across every registered handle.
@@ -358,6 +598,61 @@ impl TelemetryHub {
             out.push_str("# TYPE fastmamba_cache_evictions_total counter\n");
             out.push_str(&format!("fastmamba_cache_evictions_total {}\n", s.evictions));
         }
+        // SLO burn rates: evaluating inside the scrape makes the scrape
+        // interval the violation window, the usual Prometheus arrangement.
+        // Burn gauges render via `{}` (shortest round-trip f64), so a
+        // scraped value parses back bit-identical to the live f64.
+        if let Some(slo) = self.slo() {
+            let reports = slo.evaluate(self);
+            if !reports.is_empty() {
+                out.push_str("# TYPE fastmamba_slo_burn_rate gauge\n");
+                for r in &reports {
+                    out.push_str(&format!(
+                        "fastmamba_slo_burn_rate{{objective=\"{}\"}} {}\n",
+                        r.name, r.burn_rate
+                    ));
+                }
+                out.push_str("# TYPE fastmamba_slo_window_burn_rate gauge\n");
+                for r in &reports {
+                    out.push_str(&format!(
+                        "fastmamba_slo_window_burn_rate{{objective=\"{}\"}} {}\n",
+                        r.name, r.window_burn
+                    ));
+                }
+                out.push_str("# TYPE fastmamba_slo_violations_total counter\n");
+                for r in &reports {
+                    out.push_str(&format!(
+                        "fastmamba_slo_violations_total{{objective=\"{}\"}} {}\n",
+                        r.name, r.violations
+                    ));
+                }
+            }
+        }
+        if let Some(wd) = self.watchdog() {
+            out.push_str("# TYPE fastmamba_stalls_detected_total counter\n");
+            out.push_str(&format!(
+                "fastmamba_stalls_detected_total {}\n",
+                wd.stalls_detected()
+            ));
+        }
+        out.push_str("# TYPE fastmamba_flight_events_recorded_total counter\n");
+        out.push_str(&format!(
+            "fastmamba_flight_events_recorded_total {}\n",
+            self.flight.recorded()
+        ));
+        // process self-metrics
+        out.push_str("# TYPE fastmamba_process_uptime_seconds gauge\n");
+        out.push_str(&format!(
+            "fastmamba_process_uptime_seconds {:.3}\n",
+            self.uptime_s()
+        ));
+        if let Some(rss) = rss_bytes() {
+            out.push_str("# TYPE fastmamba_process_resident_bytes gauge\n");
+            out.push_str(&format!("fastmamba_process_resident_bytes {rss}\n"));
+        }
+        let heap: usize = handles.iter().map(|(_, t)| t.hist_heap_bytes()).sum();
+        out.push_str("# TYPE fastmamba_telemetry_heap_bytes gauge\n");
+        out.push_str(&format!("fastmamba_telemetry_heap_bytes {heap}\n"));
         out
     }
 
@@ -374,9 +669,25 @@ impl TelemetryHub {
             ),
             None => String::new(),
         };
+        let slo = match self.slo() {
+            Some(s) => {
+                let reports = s.evaluate(self);
+                if reports.is_empty() {
+                    String::new()
+                } else {
+                    let burns: Vec<String> = reports
+                        .iter()
+                        .map(|r| format!("{}={:.2}x", r.name, r.burn_rate))
+                        .collect();
+                    let viols: u64 = reports.iter().map(|r| r.violations).sum();
+                    format!(" slo[{} viol={viols}]", burns.join(" "))
+                }
+            }
+            None => String::new(),
+        };
         format!(
             "req={} gen_toks={} q={} active={} ttft_p50={:.1}ms tpot_p50={:.2}ms \
-             cancelled={} deadline={}{}",
+             cancelled={} deadline={}{}{slo}",
             self.total(Counter::RequestsCompleted),
             self.total(Counter::TokensGenerated),
             self.gauge_total(Gauge::QueueDepth),
@@ -388,6 +699,21 @@ impl TelemetryHub {
             cache,
         )
     }
+}
+
+/// Resident set size from `/proc/self/statm` (field 2, in pages; the
+/// kernel's page size here is 4096 on every target this crate supports).
+/// Off Linux there is no procfs — the gauge is simply not rendered.
+#[cfg(target_os = "linux")]
+fn rss_bytes() -> Option<u64> {
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+    Some(pages * 4096)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn rss_bytes() -> Option<u64> {
+    None
 }
 
 fn render_histogram(out: &mut String, full: &str, label_prefix: &str, h: &Histogram) {
@@ -458,6 +784,130 @@ mod tests {
     }
 
     #[test]
+    fn statusz_reports_live_requests_and_workers() {
+        let hub = TelemetryHub::new();
+        let w0 = hub.register("0");
+        let w1 = hub.register("1");
+        w0.add(Counter::RequestsCompleted, 2);
+        w0.set_gauge(Gauge::QueueDepth, 3);
+        w0.set_status(json::obj(vec![
+            (
+                "requests",
+                Json::Arr(vec![
+                    json::obj(vec![
+                        ("id", json::num(11.0)),
+                        ("state", json::s("active")),
+                        ("tokens", json::num(5.0)),
+                    ]),
+                    json::obj(vec![
+                        ("id", json::num(12.0)),
+                        ("state", json::s("pending")),
+                        ("tokens", json::num(0.0)),
+                    ]),
+                ]),
+            ),
+            ("pending", json::num(1.0)),
+            ("active", json::num(1.0)),
+        ]));
+        w1.set_status(json::obj(vec![
+            ("requests", Json::Arr(vec![])),
+            ("pending", json::num(0.0)),
+            ("active", json::num(0.0)),
+        ]));
+        let d = hub.register("dispatcher");
+        d.set_status(json::obj(vec![
+            ("role", json::s("dispatcher")),
+            ("workers_alive", json::num(2.0)),
+            ("backlog", json::num(0.0)),
+        ]));
+
+        let text = json::to_string(&hub.statusz_json());
+        let v = Json::parse(&text).unwrap();
+        assert!(v.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+        let workers = v.arr_field("workers").unwrap();
+        assert_eq!(workers.len(), 2, "dispatcher is not a worker row");
+        assert_eq!(workers[0].str_field("worker").unwrap(), "0");
+        assert_eq!(workers[0].usize_field("queue_depth").unwrap(), 3);
+        assert_eq!(workers[0].usize_field("requests_completed").unwrap(), 2);
+        // requests flatten across workers, each row tagged with its worker
+        let reqs = v.arr_field("requests").unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].usize_field("id").unwrap(), 11);
+        assert_eq!(reqs[0].str_field("state").unwrap(), "active");
+        assert_eq!(reqs[0].str_field("worker").unwrap(), "0");
+        assert_eq!(reqs[1].usize_field("id").unwrap(), 12);
+        // the dispatcher's own view rides along
+        assert_eq!(
+            v.get("dispatcher").unwrap().usize_field("workers_alive").unwrap(),
+            2
+        );
+    }
+
+    #[test]
+    fn readyz_reflects_dispatcher_liveness_and_backlog() {
+        // no workers registered: not ready (nothing can serve)
+        let hub = TelemetryHub::new();
+        assert!(!hub.readiness().0);
+        assert_eq!(hub.liveness(), None, "no dispatcher: liveness unknown");
+
+        // a single engine with no dispatcher: registered == ready
+        let w = hub.register("0");
+        let (ready, body) = hub.readiness();
+        assert!(ready, "{body}");
+        // ... until its own queue hits the shed threshold
+        w.set_status(json::obj(vec![
+            ("requests", Json::Arr(vec![])),
+            ("pending", json::num(8.0)),
+            ("active", json::num(2.0)),
+            ("max_queue", json::num(8.0)),
+        ]));
+        assert!(!hub.readiness().0, "queue at shed threshold");
+        w.set_status(json::obj(vec![
+            ("requests", Json::Arr(vec![])),
+            ("pending", json::num(2.0)),
+            ("active", json::num(2.0)),
+            ("max_queue", json::num(8.0)),
+        ]));
+        assert!(hub.readiness().0);
+
+        // a dispatcher status takes over the verdict: backlog below the
+        // shed threshold and at least one live worker
+        let d = hub.register("dispatcher");
+        d.set_status(json::obj(vec![
+            ("role", json::s("dispatcher")),
+            ("workers_alive", json::num(2.0)),
+            ("backlog", json::num(3.0)),
+            ("max_queue", json::num(16.0)),
+            ("dispatched_total", json::num(40.0)),
+        ]));
+        assert!(hub.readiness().0);
+        assert_eq!(hub.liveness(), Some(true));
+        d.set_status(json::obj(vec![
+            ("role", json::s("dispatcher")),
+            ("workers_alive", json::num(2.0)),
+            ("backlog", json::num(16.0)),
+            ("max_queue", json::num(16.0)),
+            ("dispatched_total", json::num(40.0)),
+        ]));
+        let (ready, body) = hub.readiness();
+        assert!(!ready, "backlog at shed threshold");
+        assert!(
+            crate::util::json::to_string(&body).contains("shed threshold"),
+            "{body}"
+        );
+        // all workers dead: not ready AND not live
+        d.set_status(json::obj(vec![
+            ("role", json::s("dispatcher")),
+            ("workers_alive", json::num(0.0)),
+            ("backlog", json::num(0.0)),
+            ("max_queue", json::num(16.0)),
+            ("dispatched_total", json::num(40.0)),
+        ]));
+        assert!(!hub.readiness().0);
+        assert_eq!(hub.liveness(), Some(false));
+    }
+
+    #[test]
     fn obs_prometheus_exposition_has_per_worker_and_aggregate_series() {
         let hub = TelemetryHub::new();
         let w0 = hub.register("0");
@@ -473,5 +923,19 @@ mod tests {
         assert!(text.contains("fastmamba_tpot_seconds_bucket{le=\"+Inf\"} 1"));
         assert!(text.contains("fastmamba_tpot_seconds_count 1"));
         assert!(text.contains("# TYPE fastmamba_queue_depth gauge"));
+        // process self-metrics always render (RSS is Linux-only)
+        assert!(text.contains("# TYPE fastmamba_process_uptime_seconds gauge"));
+        assert!(text.contains("fastmamba_telemetry_heap_bytes"));
+        assert!(text.contains("fastmamba_flight_events_recorded_total 0"));
+        if cfg!(target_os = "linux") {
+            assert!(text.contains("fastmamba_process_resident_bytes"), "{text}");
+        }
+        // telemetry heap reflects w0's one allocated histogram
+        let heap_line = text
+            .lines()
+            .find(|l| l.starts_with("fastmamba_telemetry_heap_bytes"))
+            .unwrap();
+        let heap: usize = heap_line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!(heap >= crate::obs::histogram::N_BUCKETS * 8, "{heap_line}");
     }
 }

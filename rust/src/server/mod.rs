@@ -100,11 +100,23 @@ pub struct HttpConfig {
     pub api: ApiConfig,
     /// request-body size cap (413-class rejection above this)
     pub max_body_bytes: usize,
+    /// pool telemetry, when serving over a topology that registers one:
+    /// `/healthz` consults [`crate::obs::TelemetryHub::liveness`] so a
+    /// pool whose workers have all died answers `503` instead of `200`
+    /// (the process being up is not the service being alive)
+    pub hub: Option<Arc<crate::obs::TelemetryHub>>,
 }
 
 impl HttpConfig {
     pub fn new(api: ApiConfig) -> Self {
-        Self { api, max_body_bytes: 1024 * 1024 }
+        Self { api, max_body_bytes: 1024 * 1024, hub: None }
+    }
+
+    /// Attach the serving topology's telemetry hub (pool liveness on
+    /// `/healthz`).
+    pub fn with_hub(mut self, hub: Arc<crate::obs::TelemetryHub>) -> Self {
+        self.hub = Some(hub);
+        self
     }
 }
 
@@ -227,15 +239,25 @@ fn handle_conn(
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             use crate::util::json::{obj, s, Json};
+            // liveness, not readiness: the process answering is not the
+            // service being alive — a pool whose workers all died can
+            // still accept this connection, and must say so
+            let dead = cfg
+                .hub
+                .as_ref()
+                .and_then(|h| h.liveness())
+                .map(|alive| !alive)
+                .unwrap_or(false);
             let body = crate::util::json::to_string(&obj(vec![
-                ("status", s("ok")),
+                ("status", s(if dead { "unhealthy" } else { "ok" })),
                 ("model", s(&cfg.api.variant)),
                 (
                     "variants",
                     Json::Arr(cfg.api.variants.iter().map(|v| s(v)).collect()),
                 ),
             ]));
-            http::write_response(&mut stream, "200 OK", "application/json", &body)
+            let status = if dead { "503 Service Unavailable" } else { "200 OK" };
+            http::write_response(&mut stream, status, "application/json", &body)
         }
         ("POST", "/v1/completions") => {
             let parsed = match api::parse_completion(&req.body, id, &cfg.api) {
@@ -530,6 +552,52 @@ mod tests {
 
         server.shutdown();
         server.shutdown(); // idempotent
+        pool.finish().unwrap();
+    }
+
+    #[test]
+    fn server_healthz_reflects_pool_liveness_503_on_all_dead() {
+        use crate::util::json::{num, obj, s};
+
+        // fabricate a pool's telemetry state directly: the dispatcher
+        // status slot is the single source of truth for pool liveness,
+        // so the socket-level contract is testable without killing real
+        // worker threads
+        let hub = Arc::new(crate::obs::TelemetryHub::new());
+        let dtel = hub.register("dispatcher");
+        let pool = micro_pool(1, 2);
+        let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
+        let mut server =
+            serve_http("127.0.0.1:0", submitter, test_cfg().with_hub(Arc::clone(&hub)))
+                .unwrap();
+
+        // workers alive → 200, same body shape as the hub-less route
+        dtel.set_status(obj(vec![
+            ("role", s("dispatcher")),
+            ("workers_alive", num(2.0)),
+            ("backlog", num(0.0)),
+            ("max_queue", num(0.0)),
+            ("dispatched_total", num(0.0)),
+        ]));
+        let (head, body) = http_get(server.addr(), "/healthz");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert_eq!(Json::parse(&body).unwrap().str_field("status").unwrap(), "ok");
+
+        // every worker dead → 503 with an explicit "unhealthy" status
+        dtel.set_status(obj(vec![
+            ("role", s("dispatcher")),
+            ("workers_alive", num(0.0)),
+            ("backlog", num(0.0)),
+            ("max_queue", num(0.0)),
+            ("dispatched_total", num(0.0)),
+        ]));
+        let (head, body) = http_get(server.addr(), "/healthz");
+        assert!(head.starts_with("HTTP/1.1 503"), "{head}");
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.str_field("status").unwrap(), "unhealthy");
+        assert_eq!(v.str_field("model").unwrap(), "fp32");
+
+        server.shutdown();
         pool.finish().unwrap();
     }
 

@@ -186,6 +186,20 @@ impl StateCache {
         self.max_bytes
     }
 
+    /// Per-shard `(entries, accounted bytes)` snapshot, in shard order.
+    /// Each shard is locked briefly in turn, so the rows are individually
+    /// consistent but the vector is not a single atomic cut — fine for the
+    /// `/statusz` occupancy table this feeds.
+    pub fn shard_occupancy(&self) -> Vec<(usize, usize)> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let sh = s.lock().unwrap();
+                (sh.n_entries(), sh.bytes)
+            })
+            .collect()
+    }
+
     fn next_tick(&self) -> u64 {
         self.tick.fetch_add(1, Ordering::Relaxed) + 1
     }
@@ -470,6 +484,22 @@ mod tests {
         assert_eq!(s.hits, 2);
         assert_eq!(s.misses, 1);
         assert!(s.hit_rate() > 0.6 && s.hit_rate() < 0.7);
+    }
+
+    #[test]
+    fn shard_occupancy_sums_to_aggregate_stats() {
+        let c = StateCache::new(CacheConfig { max_bytes: 1 << 20, shards: 4 });
+        for i in 0..12u32 {
+            let t = toks(8, 100 + i);
+            let (cv, sm) = state(i as f32, 4);
+            c.insert_prefix("fp32", &t, &[8], &cv, &sm);
+        }
+        let occ = c.shard_occupancy();
+        assert_eq!(occ.len(), 4, "one row per shard");
+        let s = c.stats();
+        assert_eq!(occ.iter().map(|(e, _)| e).sum::<usize>(), s.entries);
+        assert_eq!(occ.iter().map(|(_, b)| b).sum::<usize>(), s.bytes_resident);
+        assert!(s.entries == 12, "all distinct inserts resident");
     }
 
     #[test]
