@@ -1,0 +1,157 @@
+//! Bench: distributed serving overhead — local threads vs remote worker
+//! processes behind the same pool router.
+//!
+//! Drives one fixed-seed mixed-length request trace through three
+//! topologies of equal total capacity — 2 local workers, 1 local +
+//! 1 remote, 2 remote — where each "remote" is a real `serve
+//! --worker-mode` loop behind a loopback TCP socket speaking the wire
+//! protocol.  Outputs are token-identical across topologies (asserted),
+//! so the numbers isolate what the wire costs: throughput delta plus
+//! frames/bytes shipped per generated token.
+//!
+//! `--json PATH` additionally writes a machine-readable record (uploaded
+//! as a CI artifact to track the overhead trajectory over time).
+//!
+//! Run: cargo bench --bench remote_serving [-- --requests 32 --json out.json]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fastmamba::backend::{self, BackendKind};
+use fastmamba::coordinator::{serve_pool, EngineConfig, PoolConfig, Request};
+use fastmamba::obs::TelemetryHub;
+use fastmamba::remote::serve_worker;
+use fastmamba::util::cli::Args;
+use fastmamba::util::json::{self, num, obj, s as js, Json};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_requests = args.usize_or("requests", 32);
+    let max_new = args.usize_or("max-new", 24);
+    let max_active = args.usize_or("max-active", 8);
+    let kind = BackendKind::from_name(&args.get_or("backend", "native"))
+        .expect("--backend auto|pjrt|native");
+
+    let probe = backend::load(kind)?;
+    let vocab = probe.cfg().vocab_size;
+    println!("backend: {} ({} requests, max_new {max_new})", probe.name(), n_requests);
+    drop(probe); // workers construct their own
+
+    let make_requests = || -> Vec<Request> {
+        (0..n_requests)
+            .map(|i| {
+                let plen = [9usize, 17, 33, 48][i % 4];
+                let prompt: Vec<u32> =
+                    (0..plen).map(|j| ((i * 131 + j * 17) % vocab) as u32).collect();
+                Request::new(i as u64, prompt, max_new, "fp32")
+            })
+            .collect()
+    };
+
+    // (label, local workers, remote workers)
+    let topologies = [("2-local", 2usize, 0usize), ("1+1-mixed", 1, 1), ("2-remote", 0, 2)];
+    let mut rows: Vec<Json> = Vec::new();
+    let mut outputs: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
+    for (label, n_local, n_remote) in topologies {
+        let servers: Vec<_> = (0..n_remote)
+            .map(|_| {
+                serve_worker(
+                    "127.0.0.1:0",
+                    move || backend::load(kind),
+                    PoolConfig {
+                        engine: EngineConfig { max_active, greedy_chunking: true },
+                        n_workers: 1,
+                        ..PoolConfig::default()
+                    },
+                )
+                .expect("bind remote worker")
+            })
+            .collect();
+        let remote: Vec<String> = servers.iter().map(|s| s.addr().to_string()).collect();
+        let hub = Arc::new(TelemetryHub::new());
+        let pool = serve_pool(
+            move || backend::load(kind),
+            PoolConfig {
+                engine: EngineConfig { max_active, greedy_chunking: true },
+                n_workers: n_local,
+                remote,
+                hub: Some(Arc::clone(&hub)),
+                ..PoolConfig::default()
+            },
+        );
+        // warm up outside the timed window: one tiny request per worker
+        // forces backend construction (and remote handshakes) to finish
+        // before the clock starts
+        let n_workers = n_local + n_remote;
+        for w in 0..n_workers {
+            pool.submit(Request::new(1_000_000 + w as u64, vec![1, 2, 3], 2, "fp32"))?;
+        }
+        for _ in 0..n_workers {
+            pool.results.recv().expect("warmup result");
+        }
+
+        let t0 = Instant::now();
+        for r in make_requests() {
+            pool.submit(r)?;
+        }
+        let mut got: Vec<(u64, Vec<u32>)> = (0..n_requests)
+            .map(|_| {
+                let f = pool.results.recv().expect("pool result");
+                (f.id, f.generated)
+            })
+            .collect();
+        let wall = t0.elapsed().as_secs_f64();
+        let report = pool.finish()?;
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        got.sort();
+
+        let toks: u64 = got.iter().map(|(_, g)| g.len() as u64).sum();
+        let (mut bytes, mut frames) = (0u64, 0u64);
+        for t in hub.remotes() {
+            bytes += t.bytes_in() + t.bytes_out();
+            frames += t.frames_in() + t.frames_out();
+        }
+        let wire_bytes_per_tok =
+            if n_remote > 0 { bytes as f64 / toks as f64 } else { 0.0 };
+        println!(
+            "{label:>10}: {:.2} tok/s  wall {:.3}s  wire {bytes} B / {frames} frames \
+             ({wire_bytes_per_tok:.1} B/tok)",
+            toks as f64 / wall,
+            wall,
+        );
+        rows.push(obj(vec![
+            ("topology", js(label)),
+            ("local", num(n_local as f64)),
+            ("remote", num(n_remote as f64)),
+            ("tokens", num(toks as f64)),
+            ("wall_s", num(wall)),
+            ("tok_per_s", num(toks as f64 / wall)),
+            ("wire_bytes", num(bytes as f64)),
+            ("wire_frames", num(frames as f64)),
+            ("wire_bytes_per_token", num(wire_bytes_per_tok)),
+        ]));
+        outputs.push(got);
+        for s in servers {
+            s.kill();
+            let _ = s.wait();
+        }
+    }
+
+    // the wire must never change tokens — only where they were computed
+    for o in &outputs[1..] {
+        assert_eq!(&outputs[0], o, "topology changed generated tokens");
+    }
+    println!("outputs token-identical across topologies ✓");
+
+    if let Some(path) = args.get("json") {
+        let doc = obj(vec![
+            ("bench", js("remote_serving")),
+            ("requests", num(n_requests as f64)),
+            ("max_new", num(max_new as f64)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        std::fs::write(path, json::to_string(&doc))?;
+        println!("json -> {path}");
+    }
+    Ok(())
+}

@@ -110,6 +110,13 @@ pub struct PoolConfig {
     /// `age_rate` ages both the backlog and every worker's pending queue;
     /// `preempt_threshold` applies inside each worker's engine.
     pub sched: SchedPolicy,
+    /// `HOST:PORT` addresses of remote worker processes (started with
+    /// `serve --worker-mode`) to adopt into the pool alongside the local
+    /// threads.  Each address is connected and handshaken synchronously at
+    /// pool start; its advertised capacity feeds the same router, and a
+    /// lost connection takes the established worker-death path (re-route
+    /// to survivors, zero results lost).
+    pub remote: Vec<String>,
 }
 
 impl Default for PoolConfig {
@@ -122,6 +129,7 @@ impl Default for PoolConfig {
             hub: None,
             trace: None,
             sched: SchedPolicy::default(),
+            remote: Vec::new(),
         }
     }
 }
@@ -158,6 +166,12 @@ impl PoolConfig {
         self.sched = sched;
         self
     }
+
+    /// Adopt remote worker processes at these `HOST:PORT` addresses.
+    pub fn with_remote_workers(mut self, addrs: Vec<String>) -> Self {
+        self.remote = addrs;
+        self
+    }
 }
 
 /// What the pool measured, returned by [`ServePool::finish`].
@@ -172,9 +186,15 @@ pub struct PoolReport {
     /// requests routed per worker (the router's accounting)
     pub assignments: Vec<u64>,
     /// highest outstanding (dispatched, not yet finished) count per
-    /// worker — never exceeds [`PoolReport::capacity_per_worker`]
+    /// worker — never exceeds that worker's entry in
+    /// [`PoolReport::capacities`]
     pub load_peak: Vec<usize>,
+    /// the uniform local-worker capacity (remote workers may advertise a
+    /// different one; see [`PoolReport::capacities`])
     pub capacity_per_worker: usize,
+    /// per-worker state-slot capacity the router budgeted: local workers
+    /// first, then one entry per adopted remote worker
+    pub capacities: Vec<usize>,
     /// worker failures (dead backends, engine errors).  A dead worker's
     /// genuinely unfinished requests re-route to the survivors (its own
     /// `Done` results always arrive first, so nothing duplicates; a
@@ -263,21 +283,48 @@ impl Worker for WorkerView {
     }
 }
 
-enum Msg {
+pub(crate) enum Msg {
     Incoming(Request),
     IngressClosed,
     Done { worker: usize, fin: FinishedRequest },
     WorkerDead { worker: usize, error: String },
 }
 
-/// Either serving engine, so one worker loop drives both modes.
-enum WorkerEngine<'be> {
+/// Either serving engine, so one worker loop drives both modes.  Also the
+/// engine a remote worker process pumps ([`crate::remote::worker`]) — the
+/// wire protocol changes transport, never serving behavior.
+pub(crate) enum WorkerEngine<'be> {
     Plain(Engine<'be>),
     Spec(SpecEngine<'be>),
 }
 
 impl<'be> WorkerEngine<'be> {
-    fn submit(&mut self, req: Request) {
+    /// Build the engine a pool worker (in-process or remote) runs: plain
+    /// or speculative per the config, shared cache attached, and the pool
+    /// policy with shedding disabled — the dispatcher backlog is the
+    /// single admission point, and the router never sends a worker more
+    /// than its capacity anyway.
+    pub(crate) fn build(be: &'be dyn InferenceBackend, cfg: &PoolConfig) -> Self {
+        let wpolicy = SchedPolicy { max_queue: 0, ..cfg.sched.clone() };
+        match &cfg.spec {
+            Some(sc) => {
+                let mut e = SpecEngine::new(be, sc.clone()).with_policy(wpolicy);
+                if let Some(c) = &cfg.cache {
+                    e = e.with_cache(Arc::clone(c));
+                }
+                Self::Spec(e)
+            }
+            None => {
+                let mut e = Engine::new(be, cfg.engine.clone()).with_policy(wpolicy);
+                if let Some(c) = &cfg.cache {
+                    e = e.with_cache(Arc::clone(c));
+                }
+                Self::Plain(e)
+            }
+        }
+    }
+
+    pub(crate) fn submit(&mut self, req: Request) {
         // enqueue, not submit: the event channel was attached by
         // ServePool::submit before the request crossed into this worker
         match self {
@@ -286,28 +333,33 @@ impl<'be> WorkerEngine<'be> {
         }
     }
 
-    fn idle(&self) -> bool {
+    pub(crate) fn idle(&self) -> bool {
+        self.load() == 0
+    }
+
+    /// pending + active requests currently held.
+    pub(crate) fn load(&self) -> usize {
         match self {
-            Self::Plain(e) => e.n_pending() == 0 && e.n_active() == 0,
-            Self::Spec(e) => e.n_pending() == 0 && e.n_active() == 0,
+            Self::Plain(e) => e.n_pending() + e.n_active(),
+            Self::Spec(e) => e.n_pending() + e.n_active(),
         }
     }
 
-    fn step(&mut self) -> Result<()> {
+    pub(crate) fn step(&mut self) -> Result<()> {
         match self {
             Self::Plain(e) => e.step(),
             Self::Spec(e) => e.step(),
         }
     }
 
-    fn drain_finished(&mut self) -> Vec<FinishedRequest> {
+    pub(crate) fn drain_finished(&mut self) -> Vec<FinishedRequest> {
         match self {
             Self::Plain(e) => e.finished.drain(..).collect(),
             Self::Spec(e) => e.finished.drain(..).collect(),
         }
     }
 
-    fn metrics_mut(&mut self) -> &mut Metrics {
+    pub(crate) fn metrics_mut(&mut self) -> &mut Metrics {
         match self {
             Self::Plain(e) => &mut e.metrics,
             Self::Spec(e) => &mut e.metrics,
@@ -341,11 +393,11 @@ impl<'be> WorkerEngine<'be> {
 /// (unwind drops the guard).  Because the notice travels the same channel
 /// as the worker's `Done` messages, it is guaranteed to arrive after all
 /// of them: the dispatcher's outstanding list is exact at burial time.
-struct DeathNotice {
-    worker: usize,
-    pool_tx: mpsc::Sender<Msg>,
-    error: String,
-    armed: bool,
+pub(crate) struct DeathNotice {
+    pub(crate) worker: usize,
+    pub(crate) pool_tx: mpsc::Sender<Msg>,
+    pub(crate) error: String,
+    pub(crate) armed: bool,
 }
 
 impl Drop for DeathNotice {
@@ -384,26 +436,7 @@ where
             return Err(e); // the death notice fires on drop
         }
     };
-    // workers inherit the pool policy with shedding disabled: the
-    // dispatcher backlog is the single admission point, and the router
-    // never sends a worker more than its capacity anyway
-    let wpolicy = SchedPolicy { max_queue: 0, ..cfg.sched.clone() };
-    let mut engine = match &cfg.spec {
-        Some(sc) => {
-            let mut e = SpecEngine::new(be.as_ref(), sc.clone()).with_policy(wpolicy);
-            if let Some(c) = &cfg.cache {
-                e = e.with_cache(Arc::clone(c));
-            }
-            WorkerEngine::Spec(e)
-        }
-        None => {
-            let mut e = Engine::new(be.as_ref(), cfg.engine.clone()).with_policy(wpolicy);
-            if let Some(c) = &cfg.cache {
-                e = e.with_cache(Arc::clone(c));
-            }
-            WorkerEngine::Plain(e)
-        }
-    };
+    let mut engine = WorkerEngine::build(be.as_ref(), &cfg);
     if let Some(hub) = &cfg.hub {
         engine
             .metrics_mut()
@@ -458,7 +491,7 @@ where
 #[allow(clippy::too_many_arguments)]
 fn dispatch(
     n: usize,
-    capacity: usize,
+    capacities: Vec<usize>,
     worker_tx: Vec<mpsc::Sender<Request>>,
     handles: Vec<thread::JoinHandle<Result<Metrics>>>,
     pool_rx: mpsc::Receiver<Msg>,
@@ -608,7 +641,7 @@ fn dispatch(
             let views: Vec<WorkerView> = (0..n)
                 .map(|i| WorkerView {
                     load: outstanding[i].len(),
-                    capacity: if alive[i] { capacity } else { 0 },
+                    capacity: if alive[i] { capacities[i] } else { 0 },
                 })
                 .collect();
             let Some(w) = router.route(&views) else { break };
@@ -809,7 +842,8 @@ fn dispatch(
         per_worker,
         assignments: router.assignments,
         load_peak,
-        capacity_per_worker: capacity,
+        capacity_per_worker: capacities.iter().copied().max().unwrap_or(0),
+        capacities,
         errors,
     })
 }
@@ -819,14 +853,25 @@ fn dispatch(
 /// `make_backend`; the dispatcher never sends a worker more outstanding
 /// requests than its state-slot capacity, so a worker's engine is always
 /// admitting from a queue it can hold.
+///
+/// Remote worker processes listed in [`PoolConfig::remote`] join the same
+/// router after the local threads: each address is connected and
+/// handshaken here (synchronously, so its advertised capacity is known
+/// before dispatch starts), then proxied by a thread that speaks the
+/// [`crate::remote::proto`] wire protocol.  An address that fails to
+/// connect joins dead — capacity 0, its death recorded through the normal
+/// worker-death path — rather than failing the whole pool.
 pub fn serve_pool<F>(make_backend: F, cfg: PoolConfig) -> ServePool
 where
     F: Fn() -> Result<Box<dyn InferenceBackend>> + Send + Sync + 'static,
 {
-    assert!(cfg.n_workers >= 1, "n_workers must be >= 1");
-    let n = cfg.n_workers;
-    let capacity = cfg.capacity_per_worker();
-    assert!(capacity >= 1, "worker capacity must be >= 1");
+    let n_local = cfg.n_workers;
+    let n = n_local + cfg.remote.len();
+    assert!(n >= 1, "pool needs at least one local or remote worker");
+    let local_capacity = cfg.capacity_per_worker();
+    if n_local > 0 {
+        assert!(local_capacity >= 1, "worker capacity must be >= 1");
+    }
     let make = Arc::new(make_backend);
 
     let (tx_req, rx_req) = mpsc::channel::<Request>();
@@ -863,7 +908,8 @@ where
 
     let mut worker_tx = Vec::with_capacity(n);
     let mut handles = Vec::with_capacity(n);
-    for id in 0..n {
+    let mut capacities = vec![local_capacity; n_local];
+    for id in 0..n_local {
         let (tx, rx) = mpsc::channel::<Request>();
         worker_tx.push(tx);
         let make = Arc::clone(&make);
@@ -871,10 +917,47 @@ where
         let ptx = pool_tx.clone();
         handles.push(thread::spawn(move || run_worker(id, make, wcfg, rx, ptx)));
     }
+    // remote workers take the indices after the locals; connect + handshake
+    // now so each one's advertised capacity is budgeted before dispatch
+    for (ri, addr) in cfg.remote.iter().enumerate() {
+        let id = n_local + ri;
+        let (tx, rx) = mpsc::channel::<Request>();
+        worker_tx.push(tx);
+        let ptx = pool_tx.clone();
+        let tel = cfg.hub.as_ref().map(|h| h.register(&format!("remote:{addr}")));
+        let transport = cfg.hub.as_ref().map(|h| h.register_remote(addr));
+        match crate::remote::client::connect(addr, Duration::from_secs(10)) {
+            Ok(conn) => {
+                capacities.push(conn.capacity.max(1));
+                handles.push(thread::spawn(move || {
+                    crate::remote::client::run_remote(id, conn, rx, ptx, tel, transport)
+                }));
+            }
+            Err(e) => {
+                // dead on arrival: capacity 0 keeps the router off it, and
+                // the armed notice records the death through the normal
+                // worker-death path instead of failing the whole pool
+                capacities.push(0);
+                let error = format!("remote worker {addr}: {e}");
+                if let Some(t) = &transport {
+                    t.note_disconnect(0);
+                }
+                handles.push(thread::spawn(move || {
+                    let _notice = DeathNotice {
+                        worker: id,
+                        pool_tx: ptx,
+                        error: error.clone(),
+                        armed: true,
+                    };
+                    Err(anyhow!(error))
+                }));
+            }
+        }
+    }
     drop(pool_tx);
 
     let dispatcher = thread::spawn(move || {
-        dispatch(n, capacity, worker_tx, handles, pool_rx, tx_done, dtel, dtrace, dsched, dflight)
+        dispatch(n, capacities, worker_tx, handles, pool_rx, tx_done, dtel, dtrace, dsched, dflight)
     });
     ServePool {
         submit: Some(tx_req),
@@ -1694,5 +1777,249 @@ mod tests {
             1,
             "only the worker-retired request may sample latency"
         );
+    }
+
+    /// Spin up `n` worker processes (well: in-process listeners with the
+    /// exact `serve --worker-mode` loop) on ephemeral ports, each holding
+    /// the same same-seed micro backend as the local workers.
+    fn start_remote_workers(n: usize) -> Vec<crate::remote::WorkerServer> {
+        (0..n)
+            .map(|_| {
+                crate::remote::serve_worker(
+                    "127.0.0.1:0",
+                    || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>),
+                    PoolConfig {
+                        engine: EngineConfig { max_active: 4, greedy_chunking: true },
+                        n_workers: 1,
+                        ..PoolConfig::default()
+                    },
+                )
+                .expect("bind remote worker")
+            })
+            .collect()
+    }
+
+    #[test]
+    fn remote_mixed_pool_token_exact_with_all_local_greedy() {
+        // 2 local threads + 2 remote processes must produce bit-identical
+        // tokens to 4 local threads on the same 64-request greedy trace —
+        // the wire changes placement, never results
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let n_reqs = stress_requests().len();
+
+        let run = |n_workers: usize, remote: Vec<String>| {
+            let pool = serve_pool(
+                make,
+                PoolConfig {
+                    engine: EngineConfig { max_active: 4, greedy_chunking: true },
+                    n_workers,
+                    remote,
+                    ..PoolConfig::default()
+                },
+            );
+            for r in stress_requests() {
+                pool.submit(r).unwrap();
+            }
+            let mut got: Vec<(u64, Vec<u32>)> = (0..n_reqs)
+                .map(|_| {
+                    let f = pool.results.recv().expect("pool result");
+                    (f.id, f.generated)
+                })
+                .collect();
+            let report = pool.finish().unwrap();
+            assert!(report.errors.is_empty(), "{:?}", report.errors);
+            got.sort();
+            (got, report)
+        };
+
+        let (want, _) = run(4, Vec::new());
+        let servers = start_remote_workers(2);
+        let addrs: Vec<String> = servers.iter().map(|s| s.addr().to_string()).collect();
+        let (got, report) = run(2, addrs);
+        assert_eq!(want, got, "mixing remote workers changed generated tokens");
+
+        // the remotes joined the router's budget with their handshaken
+        // capacity and actually took traffic
+        assert_eq!(report.capacities, vec![4, 4, 4, 4]);
+        assert_eq!(report.assignments.len(), 4);
+        assert_eq!(report.assignments.iter().sum::<u64>(), n_reqs as u64);
+        assert!(
+            report.assignments[2] + report.assignments[3] > 0,
+            "remote workers saw no traffic: {:?}",
+            report.assignments
+        );
+        for s in servers {
+            s.kill();
+            s.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn remote_mixed_pool_token_exact_with_all_local_sampled() {
+        use crate::coordinator::sampler::SamplingParams;
+        // seeded sampling is position-keyed, so the sampled stream must
+        // also survive the process boundary bit-exactly (the wire carries
+        // the full SamplingParams, including the seed)
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let sampled_reqs = || -> Vec<Request> {
+            (0..12usize)
+                .map(|i| {
+                    let plen = [3usize, 9, 17, 33][i % 4];
+                    let prompt: Vec<u32> =
+                        (0..plen).map(|j| ((i * 131 + j * 17) % 128) as u32).collect();
+                    Request::new(i as u64, prompt, 6, "fp32").with_sampling(
+                        SamplingParams {
+                            temperature: 1.0,
+                            top_k: 40,
+                            seed: 9000 + i as u64,
+                            ..SamplingParams::default()
+                        },
+                    )
+                })
+                .collect()
+        };
+        let run = |n_workers: usize, remote: Vec<String>| {
+            let pool = serve_pool(
+                make,
+                PoolConfig {
+                    engine: EngineConfig { max_active: 4, greedy_chunking: true },
+                    n_workers,
+                    remote,
+                    ..PoolConfig::default()
+                },
+            );
+            for r in sampled_reqs() {
+                pool.submit(r).unwrap();
+            }
+            let mut got: Vec<(u64, Vec<u32>)> = (0..12)
+                .map(|_| {
+                    let f = pool.results.recv().expect("pool result");
+                    (f.id, f.generated)
+                })
+                .collect();
+            let report = pool.finish().unwrap();
+            assert!(report.errors.is_empty(), "{:?}", report.errors);
+            got.sort();
+            got
+        };
+
+        let want = run(4, Vec::new());
+        let servers = start_remote_workers(2);
+        let addrs: Vec<String> = servers.iter().map(|s| s.addr().to_string()).collect();
+        let got = run(2, addrs);
+        assert_eq!(want, got, "sampled stream diverged across the wire");
+        for s in servers {
+            s.kill();
+            s.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn remote_worker_killed_mid_generation_reroutes_zero_lost() {
+        use std::time::Duration;
+        // a remote worker dies mid-stream (socket severed, no goodbye —
+        // what `kill -9` looks like): its in-flight requests must re-route
+        // to the survivor and every submit still reach exactly one
+        // terminal result
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let hub = Arc::new(TelemetryHub::new());
+        let servers = start_remote_workers(1);
+        let addr = servers[0].addr().to_string();
+        let pool = serve_pool(
+            make,
+            PoolConfig {
+                engine: EngineConfig { max_active: 4, greedy_chunking: true },
+                n_workers: 1,
+                remote: vec![addr.clone()],
+                hub: Some(Arc::clone(&hub)),
+                ..PoolConfig::default()
+            },
+        );
+        let n = 16usize;
+        for i in 0..n {
+            let plen = 5 + (i % 7) * 4;
+            let prompt: Vec<u32> =
+                (0..plen).map(|j| ((i * 131 + j * 17) % 128) as u32).collect();
+            pool.submit(Request::new(i as u64, prompt, 48, "fp32")).unwrap();
+        }
+        // wait until the remote is visibly streaming (its proxy has read
+        // event frames) so the kill lands mid-generation, not before
+        // routing or after completion
+        let transport = hub
+            .remotes()
+            .into_iter()
+            .find(|t| t.addr() == addr)
+            .expect("transport registered");
+        let t0 = std::time::Instant::now();
+        while transport.frames_in() < 3 {
+            assert!(t0.elapsed() < Duration::from_secs(60), "remote never streamed");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        servers.into_iter().next().unwrap().kill();
+
+        // every request completes — re-routed ones restart on the local
+        // survivor, already-finished ones are not duplicated
+        let mut seen: Vec<u64> = (0..n)
+            .map(|_| {
+                let f = pool.results.recv().expect("result despite worker death");
+                assert_eq!(f.generated.len(), 48, "req {} truncated", f.id);
+                f.id
+            })
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n as u64).collect::<Vec<_>>(), "lost or duplicated ids");
+
+        let report = pool.finish().unwrap();
+        assert!(
+            report.errors.iter().any(|e| e.contains(&format!("worker {}", 1))),
+            "death not recorded: {:?}",
+            report.errors
+        );
+        assert!(
+            report.errors.iter().any(|e| e.contains("re-routing")),
+            "re-route not recorded: {:?}",
+            report.errors
+        );
+        // the transport counted the disconnect and the requeued requests
+        assert!(transport.disconnects() >= 1);
+        assert!(transport.requeued() >= 1, "kill landed with nothing in flight");
+        assert_eq!(report.merged.requests_completed, n as u64);
+    }
+
+    #[test]
+    fn remote_unreachable_address_joins_dead_without_failing_pool() {
+        // nothing listens on this address: the pool must come up, record
+        // the connect failure as a worker death, and serve everything on
+        // the local worker
+        let make = || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>);
+        let dead_addr = {
+            // bind-then-drop yields a port that is almost surely closed
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let pool = serve_pool(
+            make,
+            PoolConfig {
+                engine: EngineConfig { max_active: 4, greedy_chunking: true },
+                n_workers: 1,
+                remote: vec![dead_addr],
+                ..PoolConfig::default()
+            },
+        );
+        for i in 0..4u64 {
+            pool.submit(Request::new(i, vec![1, 2, 3], 4, "fp32")).unwrap();
+        }
+        for _ in 0..4 {
+            let f = pool.results.recv().expect("local worker result");
+            assert_eq!(f.generated.len(), 4);
+        }
+        let report = pool.finish().unwrap();
+        assert_eq!(report.capacities, vec![4, 0], "dead remote budgets zero");
+        assert!(
+            report.errors.iter().any(|e| e.contains("remote worker")),
+            "connect failure must be recorded: {:?}",
+            report.errors
+        );
+        assert_eq!(report.merged.requests_completed, 4);
     }
 }

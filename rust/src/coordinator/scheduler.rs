@@ -228,9 +228,42 @@ impl<'be> Engine<'be> {
             );
             return;
         }
+        // admission-aware eviction: pin the cache keys this request will
+        // seed from at admission (shed above happens before the pin, so a
+        // shed request holds none)
+        self.pin_queued(&req);
         insert_by_priority(&mut self.pending, req);
         self.metrics
             .note_queue_depth(self.pending.len() + self.active.len());
+    }
+
+    /// Pin the cache keys a queued request will be admitted from — its
+    /// session entry and every bucket-boundary prefix of its prompt (for a
+    /// preempted request, the preemption snapshot instead) — so LRU
+    /// pressure between enqueue and admission cannot evict a snapshot the
+    /// scheduler is committed to resuming from.  Balanced by
+    /// [`Engine::unpin_queued`] the moment the request leaves the pending
+    /// queue: admission, or unadmitted termination.
+    fn pin_queued(&self, req: &Request) {
+        let Some(cache) = &self.cache else { return };
+        if let Some(r) = &req.resume {
+            cache.pin_session(r.snapshot_sid);
+            return;
+        }
+        let (chunks, _) = self.chunk_plan(req.prompt.len());
+        cache.pin_request(&req.variant, &req.prompt, &chunks, req.session_id);
+    }
+
+    /// Balance one [`Engine::pin_queued`] (the chunk plan is deterministic
+    /// in the prompt length, so the recomputed keys match exactly).
+    fn unpin_queued(&self, req: &Request) {
+        let Some(cache) = &self.cache else { return };
+        if let Some(r) = &req.resume {
+            cache.unpin_session(r.snapshot_sid);
+            return;
+        }
+        let (chunks, _) = self.chunk_plan(req.prompt.len());
+        cache.unpin_request(&req.variant, &req.prompt, &chunks, req.session_id);
     }
 
     pub fn n_pending(&self) -> usize {
@@ -274,6 +307,10 @@ impl<'be> Engine<'be> {
                 continue;
             };
             let req = self.pending.pop_front().unwrap();
+            // the request is leaving the queue: its snapshots are read
+            // (and the state seeded) within this admission, so the
+            // admission pins come off now
+            self.unpin_queued(&req);
             if req.resume.is_some() {
                 // a preempted request continues where it stopped
                 self.admit_resumed(req, slot)?;
@@ -532,6 +569,10 @@ impl<'be> Engine<'be> {
             last_token_at,
             snapshot_sid: sid,
         }));
+        // the snapshot just published is the only copy of this request's
+        // progress: pin it so queue-time cache pressure cannot evict it
+        // before the resume (unpinned again when it leaves the queue)
+        self.pin_queued(&req);
         insert_by_priority(&mut self.pending, req);
         self.metrics
             .note_queue_depth(self.pending.len() + self.active.len());
@@ -720,6 +761,7 @@ impl<'be> Engine<'be> {
         while i < self.pending.len() {
             if let Some(reason) = self.pending[i].lifecycle_reason() {
                 let req = self.pending.remove(i).expect("index in bounds");
+                self.unpin_queued(&req);
                 finish_unadmitted(
                     &mut self.metrics,
                     self.trace.as_ref(),
@@ -1684,6 +1726,71 @@ mod tests {
         assert_eq!(eng.metrics.preempted_requests, 1);
         let v_fin = eng.finished.iter().find(|f| f.id == 0).unwrap();
         assert_eq!(v_fin.generated, want, "sampled stream diverged across preemption");
+    }
+
+    #[test]
+    fn preempt_snapshot_pinned_survives_cache_pressure() {
+        use crate::statecache::{CacheConfig, StateCache};
+        // regression for admission-aware eviction: while a preempted
+        // request waits in the queue, enough cache traffic lands to evict
+        // the whole LRU several times over — but its pinned snapshot must
+        // survive, so the resume is still a session hit (and the output
+        // still bit-exact with an undisturbed run)
+        let be = be();
+        let vocab = be.cfg().vocab_size;
+        let prompt: Vec<u32> = (0..33).map(|j| ((j * 13) % vocab) as u32).collect();
+        let hi_prompt: Vec<u32> = (0..9).map(|j| ((j * 7 + 2) % vocab) as u32).collect();
+        let mut probe = Engine::new(&be, EngineConfig::default());
+        probe.submit(Request::new(9, prompt.clone(), 16, "fp32"));
+        probe.run().unwrap();
+        let want = probe.finished[0].generated.clone();
+
+        // one shard, 1 MiB: small enough to churn completely, large
+        // enough to hold the preemption snapshot
+        let cache =
+            Arc::new(StateCache::new(CacheConfig { max_bytes: 1 << 20, shards: 1 }));
+        let mut eng =
+            Engine::new(&be, EngineConfig { max_active: 1, greedy_chunking: true })
+                .with_cache(Arc::clone(&cache))
+                .with_policy(SchedPolicy {
+                    preempt_threshold: Some(5),
+                    ..SchedPolicy::default()
+                });
+        let v = eng.submit(Request::new(0, prompt.clone(), 16, "fp32"));
+        let mut streamed = 0usize;
+        while streamed < 4 {
+            eng.step().unwrap();
+            while let Some(ev) = v.try_event() {
+                if matches!(ev, Event::Token { .. }) {
+                    streamed += 1;
+                }
+            }
+        }
+        eng.submit(Request::new(1, hi_prompt, 2, "fp32").with_priority(9));
+        while eng.metrics.preempted_requests == 0 {
+            eng.step().unwrap();
+        }
+        // forced pressure: several budgets' worth of foreign inserts while
+        // the victim (the cache's least-recently-used entry) waits pinned
+        let big = vec![0.5f32; 4096]; // 32 KiB per entry
+        for i in 0..100u64 {
+            cache.insert_session(1000 + i, "fp32", &[1, 2, 3], &big, &big);
+        }
+        assert!(cache.stats().evictions > 0, "pressure must actually evict");
+        eng.run().unwrap();
+
+        // the resume found the pinned snapshot
+        assert_eq!(eng.metrics.cache_hits, 1, "{}", eng.metrics.summary());
+        assert_eq!(
+            eng.metrics.cache_tokens_saved,
+            (prompt.len() + streamed - 1) as u64
+        );
+        let v_fin = eng.finished.iter().find(|f| f.id == 0).unwrap();
+        assert_eq!(v_fin.generated, want, "pressured preemption changed the output");
+        let (first, toks, fin) = drain(&v);
+        assert!(first);
+        assert_eq!(toks, want);
+        assert_eq!(fin.expect("terminal").finish_reason, FinishReason::Length);
     }
 
     #[test]

@@ -73,6 +73,7 @@ pub mod model;
 pub mod nonlinear;
 pub mod obs;
 pub mod quant;
+pub mod remote;
 pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

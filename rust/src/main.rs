@@ -52,6 +52,15 @@ fn main() -> Result<()> {
                  \n           --backend auto|pjrt|native --max-active N --workers N\
                  \n           --speculate K [--draft-backend native|pjrt]\
                  \n           --state-cache-mb N (0 = off; shared SSM prefix/session cache)\
+                 \n           --state-cache-dir PATH (disk spill tier under the state cache;\
+                 \n                                   implies the cache on — snapshots survive\
+                 \n                                   restarts and warm-start session resume)\
+                 \n           --worker-mode HOST:PORT (run as a remote worker process: serve\
+                 \n                                    engine work to a dispatcher over the\
+                 \n                                    wire protocol until killed)\
+                 \n           --remote-worker HOST:PORT[,HOST:PORT...] (adopt remote worker\
+                 \n                                    processes into the serving pool\
+                 \n                                    alongside the local --workers threads)\
                  \n           --stream (print tokens as they are produced)\
                  \n           --deadline-ms N (per-request completion deadline)\
                  \n           --max-queue N (bound the pending queue; excess submissions are\
@@ -132,7 +141,7 @@ fn sched_policy(args: &Args) -> Result<SchedPolicy> {
             bail!("--preempt-threshold must be an integer priority, got {raw:?}");
         };
         policy.preempt_threshold = Some(t);
-        if args.usize_or("state-cache-mb", 0) == 0 {
+        if args.usize_or("state-cache-mb", 0) == 0 && args.get("state-cache-dir").is_none() {
             eprintln!(
                 "note: --preempt-threshold has no effect without --state-cache-mb > 0 \
                  (preempted state snapshots live in the state cache)"
@@ -163,6 +172,7 @@ fn slo_config(args: &Args) -> SloConfig {
 fn resolved_config(
     topology: &str,
     workers: usize,
+    remotes: usize,
     max_active: usize,
     speculate: usize,
     variant: &str,
@@ -175,6 +185,7 @@ fn resolved_config(
     obj(vec![
         ("topology", s(topology)),
         ("workers", num(workers as f64)),
+        ("remote_workers", num(remotes as f64)),
         ("max_active", num(max_active as f64)),
         ("speculate", num(speculate as f64)),
         ("variant", s(variant)),
@@ -198,9 +209,11 @@ fn resolved_config(
     ])
 }
 
-/// Which of the four serving topologies the flags select.
-fn topology_name(workers: usize, speculate: usize) -> &'static str {
-    match (workers > 1, speculate > 0) {
+/// Which of the four serving topologies the flags select (remote workers
+/// force the pool topology: they join the local threads behind the same
+/// router).
+fn topology_name(workers: usize, remotes: usize, speculate: usize) -> &'static str {
+    match (workers > 1 || remotes > 0, speculate > 0) {
         (true, true) => "pool-spec",
         (true, false) => "pool-plain",
         (false, true) => "single-spec",
@@ -208,7 +221,47 @@ fn topology_name(workers: usize, speculate: usize) -> &'static str {
     }
 }
 
+/// `--remote-worker HOST:PORT[,HOST:PORT...]` — remote worker processes
+/// to adopt into the serving pool.
+fn remote_workers(args: &Args) -> Vec<String> {
+    args.get("remote-worker")
+        .map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Resolve `--state-cache-mb` / `--state-cache-dir` into the shared cache.
+/// A disk dir implies the cache is on (64 MiB of RAM tier when no size is
+/// given) — the dir is the durable tier snapshots spill to and warm-start
+/// from across process restarts.
+fn state_cache(args: &Args) -> Result<(usize, Option<Arc<StateCache>>)> {
+    let dir = args.get("state-cache-dir");
+    let mut cache_mb = args.usize_or("state-cache-mb", 0);
+    if cache_mb == 0 && dir.is_some() {
+        cache_mb = 64;
+    }
+    if cache_mb == 0 {
+        return Ok((0, None));
+    }
+    let mut cache = StateCache::new(CacheConfig::with_mb(cache_mb));
+    if let Some(d) = dir {
+        cache = cache.with_disk(fastmamba::statecache::DiskTier::open(d)?);
+        println!("state cache disk tier: {d}");
+    }
+    Ok((cache_mb, Some(Arc::new(cache))))
+}
+
 fn serve(args: &Args) -> Result<()> {
+    // --worker-mode turns this process into a remote pool worker: no
+    // local trace, no HTTP — it serves a dispatcher over the wire protocol
+    if let Some(addr) = args.get("worker-mode") {
+        let addr = addr.to_string();
+        return serve_worker_mode(args, &addr);
+    }
     // --http-addr switches from the synthetic trace to the HTTP frontend
     // (requests come from the network instead of the corpus sampler)
     if args.get("http-addr").is_some() {
@@ -222,15 +275,14 @@ fn serve(args: &Args) -> Result<()> {
     let variant = args.get_or("variant", "fp32");
     let speculate = args.usize_or("speculate", 0);
     let workers = args.usize_or("workers", 1);
+    let remote = remote_workers(args);
     // both engine paths honor --max-active (speculative requests hold two
     // state slots each, hence the lower default)
     let max_active = args.usize_or("max-active", if speculate > 0 { 8 } else { 64 });
-    // shared SSM state cache (prefix reuse + session resume); one Arc is
-    // threaded through whichever serving path runs, including every pool
-    // worker
-    let cache_mb = args.usize_or("state-cache-mb", 0);
-    let cache: Option<Arc<StateCache>> =
-        (cache_mb > 0).then(|| Arc::new(StateCache::new(CacheConfig::with_mb(cache_mb))));
+    // shared SSM state cache (prefix reuse + session resume, optionally
+    // disk-tiered); one Arc is threaded through whichever serving path
+    // runs, including every pool worker
+    let (cache_mb, cache) = state_cache(args)?;
     // streaming lifecycle flags: --stream prints tokens as each engine
     // step produces them; --deadline-ms bounds per-request latency
     // (expired requests finish with FinishReason::Deadline and partial
@@ -281,8 +333,9 @@ fn serve(args: &Args) -> Result<()> {
             ))));
         }
         h.attach_config(resolved_config(
-            topology_name(workers, speculate),
+            topology_name(workers, remote.len(), speculate),
             workers,
+            remote.len(),
             max_active,
             speculate,
             &variant,
@@ -342,16 +395,20 @@ fn serve(args: &Args) -> Result<()> {
         be.prefill_buckets(),
         be.decode_batches()
     );
-    let (finished, final_metrics) = if workers > 1 {
+    let (finished, final_metrics) = if workers > 1 || !remote.is_empty() {
         // multi-worker pool: every worker builds its own backend from the
         // factory and runs its own engine behind the capacity-aware router
         // (speculative workers draft and verify on their own backend, so
-        // --draft-backend does not apply here)
+        // --draft-backend does not apply here); remote worker processes
+        // join the same router behind wire-protocol proxies
         if speculate > 0 && args.get("draft-backend").is_some() {
             eprintln!(
                 "note: --draft-backend is ignored with --workers > 1 \
                  (each worker drafts on its own backend)"
             );
+        }
+        if !remote.is_empty() {
+            println!("remote workers: {}", remote.join(", "));
         }
         drop(be); // workers own their backends; the probe served request gen
         let pool = serve_pool(
@@ -370,6 +427,7 @@ fn serve(args: &Args) -> Result<()> {
                 hub: hub.clone(),
                 trace: trace_sink.clone(),
                 sched: sched.clone(),
+                remote: remote.clone(),
             },
         );
         let mut handles = Vec::with_capacity(n_requests);
@@ -429,8 +487,8 @@ fn serve(args: &Args) -> Result<()> {
         }
         println!("{}", report.merged.summary());
         println!(
-            "pool: workers={} assignments={:?} load_peak={:?} (capacity {}/worker)",
-            workers, report.assignments, report.load_peak, report.capacity_per_worker
+            "pool: workers={}+{} remote, assignments={:?} load_peak={:?} capacities={:?}",
+            workers, remote.len(), report.assignments, report.load_peak, report.capacities
         );
         let died = finished
             .iter()
@@ -603,6 +661,46 @@ fn print_finish_reasons(finished: &[fastmamba::coordinator::FinishedRequest]) {
     );
 }
 
+/// `serve --worker-mode HOST:PORT`: run this process as a remote pool
+/// worker.  Builds the backend once, binds the wire-protocol listener,
+/// and serves dispatcher connections until the process is killed — a
+/// dispatcher started with `--remote-worker HOST:PORT` adopts it into its
+/// pool next to the local worker threads.  `--max-active`, `--speculate`,
+/// the scheduling flags, and the state-cache flags configure the worker's
+/// engine exactly as they would a local worker's.
+fn serve_worker_mode(args: &Args, addr: &str) -> Result<()> {
+    let kind = backend_kind(args)?;
+    let variant = args.get_or("variant", "fp32");
+    let speculate = args.usize_or("speculate", 0);
+    let max_active = args.usize_or("max-active", if speculate > 0 { 8 } else { 64 });
+    let (cache_mb, cache) = state_cache(args)?;
+    let sched = sched_policy(args)?;
+    let cfg = PoolConfig {
+        engine: EngineConfig { max_active, greedy_chunking: true },
+        n_workers: 1,
+        spec: (speculate > 0).then(|| SpecConfig {
+            draft_k: speculate,
+            draft_variant: args.get_or("draft-variant", "fastmamba"),
+            verify_variant: variant.clone(),
+            max_active,
+            reseed_drafter: true,
+        }),
+        cache,
+        sched,
+        ..PoolConfig::default()
+    };
+    let capacity = cfg.capacity_per_worker();
+    let server = fastmamba::remote::serve_worker(addr, move || backend::load(kind), cfg)?;
+    // parse-friendly: a supervising script scrapes the bound address off
+    // this line (port 0 resolves to an OS-picked port)
+    println!("worker: listening on {}", server.addr());
+    println!(
+        "worker: variant={variant} capacity={capacity} speculate={speculate} \
+         state_cache_mb={cache_mb} (serving until killed)"
+    );
+    server.wait()
+}
+
 /// `serve --http-addr`: the OpenAI-style HTTP/SSE frontend over whichever
 /// serving topology the other flags select (single/pool x
 /// plain/speculative).  Requests arrive over the network as
@@ -620,10 +718,9 @@ fn serve_over_http(args: &Args) -> Result<()> {
     let variant = args.get_or("variant", "fp32");
     let speculate = args.usize_or("speculate", 0);
     let workers = args.usize_or("workers", 1);
+    let remote = remote_workers(args);
     let max_active = args.usize_or("max-active", if speculate > 0 { 8 } else { 64 });
-    let cache_mb = args.usize_or("state-cache-mb", 0);
-    let cache: Option<Arc<StateCache>> =
-        (cache_mb > 0).then(|| Arc::new(StateCache::new(CacheConfig::with_mb(cache_mb))));
+    let (cache_mb, cache) = state_cache(args)?;
     let sched = sched_policy(args)?;
     let metrics_addr = args.get("metrics-addr");
     let metrics_json = args.get("metrics-json");
@@ -658,8 +755,9 @@ fn serve_over_http(args: &Args) -> Result<()> {
             ))));
         }
         h.attach_config(resolved_config(
-            topology_name(workers, speculate),
+            topology_name(workers, remote.len(), speculate),
             workers,
+            remote.len(),
             max_active,
             speculate,
             &variant,
@@ -702,14 +800,18 @@ fn serve_over_http(args: &Args) -> Result<()> {
         be.decode_batches()
     );
 
-    let (finished, final_metrics) = if workers > 1 {
+    let (finished, final_metrics) = if workers > 1 || !remote.is_empty() {
         // worker pool: the frontend submits straight into the pool ingress;
-        // workers emit events in real time from their own threads
+        // workers emit events in real time from their own threads (remote
+        // worker processes join behind wire-protocol proxies)
         if speculate > 0 && args.get("draft-backend").is_some() {
             eprintln!(
                 "note: --draft-backend is ignored with --workers > 1 \
                  (each worker drafts on its own backend)"
             );
+        }
+        if !remote.is_empty() {
+            println!("remote workers: {}", remote.join(", "));
         }
         drop(be);
         let pool = serve_pool(
@@ -728,6 +830,7 @@ fn serve_over_http(args: &Args) -> Result<()> {
                 hub: hub.clone(),
                 trace: trace_sink.clone(),
                 sched: sched.clone(),
+                remote: remote.clone(),
             },
         );
         let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
@@ -753,8 +856,8 @@ fn serve_over_http(args: &Args) -> Result<()> {
         }
         println!("{}", report.merged.summary());
         println!(
-            "pool: workers={} assignments={:?} load_peak={:?} (capacity {}/worker)",
-            workers, report.assignments, report.load_peak, report.capacity_per_worker
+            "pool: workers={}+{} remote, assignments={:?} load_peak={:?} capacities={:?}",
+            workers, remote.len(), report.assignments, report.load_peak, report.capacities
         );
         (finished, report.merged)
     } else {

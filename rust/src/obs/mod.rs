@@ -42,7 +42,7 @@ pub use flight::{FlightCtx, FlightEvent, FlightKind, FlightRecorder};
 pub use histogram::Histogram;
 pub use scrape::{serve_metrics, MetricsServer};
 pub use slo::{SloConfig, SloMonitor, StallWatchdog};
-pub use telemetry::{Counter, Gauge, HistKind, Telemetry, TelemetryHub};
+pub use telemetry::{Counter, Gauge, HistKind, RemoteTransport, Telemetry, TelemetryHub};
 pub use trace::{TraceCtx, TraceSink};
 
 /// Nearest-rank percentile of an ascending-sorted slice: the smallest

@@ -274,16 +274,107 @@ impl Telemetry {
     }
 }
 
+/// Transport-level statistics for one remote worker connection: what the
+/// dispatcher-side proxy sent/received, how often the link dropped (and
+/// how many in-flight requests each drop re-queued), and the round-trip
+/// time distribution of the protocol's ping/pong health probes.
+///
+/// Counters are relaxed atomics written by the proxy's reader/writer
+/// threads; the RTT histogram takes a short uncontended mutex, exactly
+/// like [`Telemetry`]'s histograms.  `/metrics` renders these as
+/// `fastmamba_remote_*` series labeled by address, and `/statusz` carries
+/// one `remote_workers` row per registered transport.
+#[derive(Debug)]
+pub struct RemoteTransport {
+    addr: String,
+    bytes_out: AtomicU64,
+    bytes_in: AtomicU64,
+    frames_out: AtomicU64,
+    frames_in: AtomicU64,
+    disconnects: AtomicU64,
+    requeued: AtomicU64,
+    rtt: Mutex<Histogram>,
+}
+
+impl RemoteTransport {
+    pub fn new(addr: &str) -> Self {
+        Self {
+            addr: addr.to_string(),
+            bytes_out: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            frames_out: AtomicU64::new(0),
+            frames_in: AtomicU64::new(0),
+            disconnects: AtomicU64::new(0),
+            requeued: AtomicU64::new(0),
+            rtt: Mutex::new(Histogram::new()),
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// One frame written to the socket (`bytes` = framed size).
+    pub fn note_out(&self, bytes: usize) {
+        self.frames_out.fetch_add(1, Ordering::Relaxed);
+        self.bytes_out.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// One frame read off the socket (`bytes` = framed size).
+    pub fn note_in(&self, bytes: usize) {
+        self.frames_in.fetch_add(1, Ordering::Relaxed);
+        self.bytes_in.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// The link dropped while `requeued` requests were in flight (each is
+    /// re-routed to a surviving worker by the dispatcher).
+    pub fn note_disconnect(&self, requeued: u64) {
+        self.disconnects.fetch_add(1, Ordering::Relaxed);
+        self.requeued.fetch_add(requeued, Ordering::Relaxed);
+    }
+
+    /// One ping/pong round trip, in seconds.
+    pub fn observe_rtt(&self, seconds: f64) {
+        self.rtt.lock().unwrap().observe(seconds);
+    }
+
+    pub fn bytes_out(&self) -> u64 {
+        self.bytes_out.load(Ordering::Relaxed)
+    }
+    pub fn bytes_in(&self) -> u64 {
+        self.bytes_in.load(Ordering::Relaxed)
+    }
+    pub fn frames_out(&self) -> u64 {
+        self.frames_out.load(Ordering::Relaxed)
+    }
+    pub fn frames_in(&self) -> u64 {
+        self.frames_in.load(Ordering::Relaxed)
+    }
+    pub fn disconnects(&self) -> u64 {
+        self.disconnects.load(Ordering::Relaxed)
+    }
+    pub fn requeued(&self) -> u64 {
+        self.requeued.load(Ordering::Relaxed)
+    }
+
+    /// Scrape-time snapshot of the RTT distribution.
+    pub fn rtt(&self) -> Histogram {
+        self.rtt.lock().unwrap().clone()
+    }
+}
+
 /// Shared registry over all per-worker [`Telemetry`] handles, plus the
 /// optional [`StateCache`] whose occupancy it exposes as gauges, the
-/// always-on [`FlightRecorder`], and the optional [`SloMonitor`] /
-/// [`StallWatchdog`] / resolved-config attachments behind the live
-/// introspection endpoints (`/statusz`, `/readyz`, `/debug/*`).
+/// always-on [`FlightRecorder`], per-connection [`RemoteTransport`]
+/// stats, and the optional [`SloMonitor`] / [`StallWatchdog`] /
+/// resolved-config attachments behind the live introspection endpoints
+/// (`/statusz`, `/readyz`, `/debug/*`).
 #[derive(Debug)]
 pub struct TelemetryHub {
     workers: Mutex<Vec<(String, Arc<Telemetry>)>>,
     cache: Mutex<Option<Arc<StateCache>>>,
     flight: Arc<FlightRecorder>,
+    remotes: Mutex<Vec<Arc<RemoteTransport>>>,
     slo: Mutex<Option<Arc<SloMonitor>>>,
     watchdog: Mutex<Option<Arc<StallWatchdog>>>,
     config: Mutex<Option<Json>>,
@@ -302,6 +393,7 @@ impl TelemetryHub {
             workers: Mutex::new(Vec::new()),
             cache: Mutex::new(None),
             flight: Arc::new(FlightRecorder::new()),
+            remotes: Mutex::new(Vec::new()),
             slo: Mutex::new(None),
             watchdog: Mutex::new(None),
             config: Mutex::new(None),
@@ -322,6 +414,19 @@ impl TelemetryHub {
 
     pub fn attach_cache(&self, cache: Arc<StateCache>) {
         *self.cache.lock().unwrap() = Some(cache);
+    }
+
+    /// Register transport stats for one remote worker connection (one per
+    /// `--remote-worker` address; the proxy writes, scrapes read).
+    pub fn register_remote(&self, addr: &str) -> Arc<RemoteTransport> {
+        let t = Arc::new(RemoteTransport::new(addr));
+        self.remotes.lock().unwrap().push(Arc::clone(&t));
+        t
+    }
+
+    /// Every registered remote transport, in registration order.
+    pub fn remotes(&self) -> Vec<Arc<RemoteTransport>> {
+        self.remotes.lock().unwrap().clone()
     }
 
     /// The hub's flight recorder (always present; engines record via a
@@ -514,11 +619,28 @@ impl TelemetryHub {
                 ),
             ])
         });
+        let remote_workers: Vec<Json> = self
+            .remotes()
+            .iter()
+            .map(|t| {
+                json::obj(vec![
+                    ("addr", json::s(t.addr())),
+                    ("bytes_out", json::num(t.bytes_out() as f64)),
+                    ("bytes_in", json::num(t.bytes_in() as f64)),
+                    ("frames_out", json::num(t.frames_out() as f64)),
+                    ("frames_in", json::num(t.frames_in() as f64)),
+                    ("disconnects", json::num(t.disconnects() as f64)),
+                    ("requeued", json::num(t.requeued() as f64)),
+                    ("rpc_p50_ms", json::num(t.rtt().quantile(0.5) * 1e3)),
+                ])
+            })
+            .collect();
         json::obj(vec![
             ("uptime_s", json::num(self.uptime_s())),
             ("workers", Json::Arr(workers)),
             ("requests", Json::Arr(requests)),
             ("dispatcher", dispatcher.unwrap_or(Json::Null)),
+            ("remote_workers", Json::Arr(remote_workers)),
             ("cache", cache.unwrap_or(Json::Null)),
         ])
     }
@@ -634,6 +756,59 @@ impl TelemetryHub {
                 "fastmamba_stalls_detected_total {}\n",
                 wd.stalls_detected()
             ));
+        }
+        // per-remote-worker transport stats
+        let remotes = self.remotes();
+        if !remotes.is_empty() {
+            out.push_str("# TYPE fastmamba_remote_bytes_total counter\n");
+            for t in &remotes {
+                let a = t.addr();
+                out.push_str(&format!(
+                    "fastmamba_remote_bytes_total{{addr=\"{a}\",dir=\"out\"}} {}\n",
+                    t.bytes_out()
+                ));
+                out.push_str(&format!(
+                    "fastmamba_remote_bytes_total{{addr=\"{a}\",dir=\"in\"}} {}\n",
+                    t.bytes_in()
+                ));
+            }
+            out.push_str("# TYPE fastmamba_remote_frames_total counter\n");
+            for t in &remotes {
+                let a = t.addr();
+                out.push_str(&format!(
+                    "fastmamba_remote_frames_total{{addr=\"{a}\",dir=\"out\"}} {}\n",
+                    t.frames_out()
+                ));
+                out.push_str(&format!(
+                    "fastmamba_remote_frames_total{{addr=\"{a}\",dir=\"in\"}} {}\n",
+                    t.frames_in()
+                ));
+            }
+            out.push_str("# TYPE fastmamba_remote_disconnects_total counter\n");
+            for t in &remotes {
+                out.push_str(&format!(
+                    "fastmamba_remote_disconnects_total{{addr=\"{}\"}} {}\n",
+                    t.addr(),
+                    t.disconnects()
+                ));
+            }
+            out.push_str("# TYPE fastmamba_remote_requeued_requests_total counter\n");
+            for t in &remotes {
+                out.push_str(&format!(
+                    "fastmamba_remote_requeued_requests_total{{addr=\"{}\"}} {}\n",
+                    t.addr(),
+                    t.requeued()
+                ));
+            }
+            out.push_str("# TYPE fastmamba_remote_rpc_seconds histogram\n");
+            for t in &remotes {
+                render_histogram(
+                    &mut out,
+                    "fastmamba_remote_rpc_seconds",
+                    &format!("addr=\"{}\",", t.addr()),
+                    &t.rtt(),
+                );
+            }
         }
         out.push_str("# TYPE fastmamba_flight_events_recorded_total counter\n");
         out.push_str(&format!(
@@ -905,6 +1080,57 @@ mod tests {
         ]));
         assert!(!hub.readiness().0);
         assert_eq!(hub.liveness(), Some(false));
+    }
+
+    #[test]
+    fn remote_transport_stats_render_in_statusz_and_prometheus() {
+        use crate::util::json::Json;
+        let hub = TelemetryHub::new();
+        let t = hub.register_remote("127.0.0.1:7070");
+        t.note_out(100);
+        t.note_out(50);
+        t.note_in(700);
+        t.note_disconnect(3);
+        t.observe_rtt(0.002);
+        t.observe_rtt(0.004);
+
+        assert_eq!(t.bytes_out(), 150);
+        assert_eq!(t.frames_out(), 2);
+        assert_eq!(t.bytes_in(), 700);
+        assert_eq!(t.frames_in(), 1);
+        assert_eq!(t.disconnects(), 1);
+        assert_eq!(t.requeued(), 3);
+        assert_eq!(t.rtt().count(), 2);
+
+        let status = hub.statusz_json();
+        let rows = status.arr_field("remote_workers").unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].str_field("addr").unwrap(), "127.0.0.1:7070");
+        assert_eq!(rows[0].usize_field("bytes_out").unwrap(), 150);
+        assert_eq!(rows[0].usize_field("disconnects").unwrap(), 1);
+        assert_eq!(rows[0].usize_field("requeued").unwrap(), 3);
+        assert!(rows[0].get("rpc_p50_ms").and_then(Json::as_f64).unwrap() > 0.0);
+
+        let text = hub.render_prometheus();
+        assert!(text.contains(
+            "fastmamba_remote_bytes_total{addr=\"127.0.0.1:7070\",dir=\"out\"} 150"
+        ));
+        assert!(text.contains(
+            "fastmamba_remote_frames_total{addr=\"127.0.0.1:7070\",dir=\"in\"} 1"
+        ));
+        assert!(text
+            .contains("fastmamba_remote_disconnects_total{addr=\"127.0.0.1:7070\"} 1"));
+        assert!(text.contains(
+            "fastmamba_remote_requeued_requests_total{addr=\"127.0.0.1:7070\"} 3"
+        ));
+        assert!(text.contains(
+            "fastmamba_remote_rpc_seconds_count{addr=\"127.0.0.1:7070\"} 2"
+        ));
+
+        // a hub with no remotes renders none of the remote series
+        let bare = TelemetryHub::new();
+        assert!(!bare.render_prometheus().contains("fastmamba_remote_"));
+        assert_eq!(bare.statusz_json().arr_field("remote_workers").unwrap().len(), 0);
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Dispatcher-side proxy for a remote worker process.
+//!
+//! [`connect`] performs the handshake and learns the worker's capacity;
+//! [`run_remote`] then runs in place of a local worker thread: it takes
+//! the same `mpsc::Receiver<Request>` the dispatcher feeds local workers,
+//! ships each request over the wire, and replays the worker's event
+//! frames into the request's own event channel — the [`SubmitHandle`]
+//! held by the submitting client cannot tell a remote worker from a local
+//! one.
+//!
+//! [`SubmitHandle`]: crate::coordinator::SubmitHandle
+//!
+//! Failure maps onto the pool's existing worker-death seam: the proxy's
+//! reader thread owns the armed [`DeathNotice`], so a lost connection
+//! (worker crash, network partition) sends `Msg::WorkerDead` *after* all
+//! of that worker's `Msg::Done` results — exactly the invariant the
+//! dispatcher's re-routing logic relies on for local threads.  The
+//! dispatcher then re-routes every request the dead remote still held;
+//! nothing is lost, nothing duplicates.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{self};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{Event, Request};
+use crate::coordinator::router::{DeathNotice, Msg};
+use crate::obs::{Counter, Gauge, RemoteTransport, Telemetry};
+use crate::util::json;
+
+use super::proto::{self, Frame, WireRequest, PROTO_VERSION};
+
+/// How often the proxy probes the link with a ping when otherwise idle.
+const PING_EVERY: Duration = Duration::from_millis(500);
+
+/// A handshaken connection to a remote worker.
+pub(crate) struct RemoteConn {
+    pub(crate) stream: TcpStream,
+    /// concurrent state slots the worker advertised in its `HelloAck`
+    pub(crate) capacity: usize,
+    pub(crate) addr: String,
+}
+
+/// Connect to a `serve --worker-mode` process and complete the
+/// `Hello`/`HelloAck` handshake.  A protocol-version mismatch (the worker
+/// closes without acking, or acks a different version) is an error here,
+/// before any request state exists.
+pub(crate) fn connect(addr: &str, timeout: Duration) -> Result<RemoteConn> {
+    let sockaddr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolve {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("{addr}: no address"))?;
+    let stream = TcpStream::connect_timeout(&sockaddr, timeout)
+        .with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout))?;
+    proto::write_frame(&mut &stream, &proto::hello())
+        .with_context(|| format!("{addr}: handshake send"))?;
+    match proto::read_frame(&mut &stream) {
+        Ok(Frame::HelloAck { version, capacity }) => {
+            if version != PROTO_VERSION {
+                bail!(
+                    "{addr}: protocol version mismatch (ours {PROTO_VERSION}, worker {version})"
+                );
+            }
+            stream.set_read_timeout(None)?;
+            Ok(RemoteConn { stream, capacity: capacity as usize, addr: addr.to_string() })
+        }
+        Ok(other) => bail!("{addr}: unexpected handshake reply {other:?}"),
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => {
+            bail!("{addr}: worker rejected handshake (version mismatch?)")
+        }
+        Err(e) => Err(e).with_context(|| format!("{addr}: handshake read")),
+    }
+}
+
+/// Proxy one remote worker for the pool dispatcher.  Runs on the thread
+/// the dispatcher would have given a local worker; returns the
+/// proxy-observed [`Metrics`] on clean drain, an error on connection
+/// loss (with the `WorkerDead` notice already sent by the reader).
+pub(crate) fn run_remote(
+    id: usize,
+    conn: RemoteConn,
+    rx: mpsc::Receiver<Request>,
+    pool_tx: mpsc::Sender<Msg>,
+    tel: Option<Arc<Telemetry>>,
+    transport: Option<Arc<RemoteTransport>>,
+) -> Result<Metrics> {
+    let RemoteConn { stream, capacity, addr } = conn;
+    // requests currently on the worker, by id: the event-emission targets
+    // (each entry shares its submitter's event channel and cancel flag)
+    let in_flight: Arc<Mutex<HashMap<u64, Request>>> = Arc::new(Mutex::new(HashMap::new()));
+    let closing = Arc::new(AtomicBool::new(false));
+    // (seq, sent-at) of the ping awaiting its pong
+    let pending_ping: Arc<Mutex<Option<(u64, Instant)>>> = Arc::new(Mutex::new(None));
+
+    // Armed from the very start: any exit path that is not the clean
+    // close below reports WorkerDead, including failures before the
+    // reader thread spawns.
+    let notice = DeathNotice {
+        worker: id,
+        pool_tx: pool_tx.clone(),
+        error: format!("remote worker {addr}: proxy failed"),
+        armed: true,
+    };
+
+    let rstream = stream.try_clone().context("clone remote stream")?;
+    let reader = {
+        let in_flight = Arc::clone(&in_flight);
+        let closing = Arc::clone(&closing);
+        let pending_ping = Arc::clone(&pending_ping);
+        let transport = transport.clone();
+        let addr = addr.clone();
+        // the reader owns the death notice from here on: it sends this
+        // worker's Done messages, so its WorkerDead is ordered after all
+        // of them on the pool channel
+        thread::spawn(move || {
+            run_reader(
+                id, rstream, notice, in_flight, closing, pending_ping, pool_tx, tel,
+                transport, addr,
+            )
+        })
+    };
+    // writer: this thread.  Ships submits and cancels, probes with pings.
+    // (`notice` has moved into the reader — the writer never touches it.)
+    let mut w = &stream;
+    let mut cancels_sent: HashSet<u64> = HashSet::new();
+    let mut ping_seq = 0u64;
+    let mut last_ping = Instant::now();
+    let mut ingress_open = true;
+    let mut write_failed = false;
+    let mut send = |w: &mut &TcpStream, frame: &Frame, failed: &mut bool| {
+        match proto::write_frame(w, frame) {
+            Ok(n) => {
+                if let Some(t) = &transport {
+                    t.note_out(n);
+                }
+            }
+            Err(_) => *failed = true, // reader fires the death path
+        }
+    };
+    loop {
+        if ingress_open {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(req) => {
+                    let wire = WireRequest::from_request(&req);
+                    in_flight.lock().unwrap().insert(req.id, req);
+                    send(&mut w, &Frame::Submit(wire), &mut write_failed);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // end-of-input: no new requests will ever arrive.  Keep
+                    // servicing cancels/pings until the worker finishes
+                    // what it holds, then close the write side.
+                    ingress_open = false;
+                    closing.store(true, Ordering::SeqCst);
+                }
+            }
+        } else {
+            thread::sleep(Duration::from_millis(10));
+        }
+
+        // relay cancellations: the shared flag flips locally (the
+        // submitter cancelled), the worker needs a frame to see it
+        let to_cancel: Vec<u64> = {
+            let inf = in_flight.lock().unwrap();
+            inf.iter()
+                .filter(|(id, r)| {
+                    r.cancel_flag().is_cancelled() && !cancels_sent.contains(*id)
+                })
+                .map(|(id, _)| *id)
+                .collect()
+        };
+        for cid in to_cancel {
+            cancels_sent.insert(cid);
+            send(&mut w, &Frame::Cancel { id: cid }, &mut write_failed);
+        }
+
+        // periodic health probe (also what feeds the RTT histogram)
+        if !write_failed && last_ping.elapsed() >= PING_EVERY {
+            ping_seq += 1;
+            *pending_ping.lock().unwrap() = Some((ping_seq, Instant::now()));
+            last_ping = Instant::now();
+            send(&mut w, &Frame::Ping { seq: ping_seq }, &mut write_failed);
+        }
+
+        if write_failed {
+            break; // connection died; the reader reports it
+        }
+        if !ingress_open && in_flight.lock().unwrap().is_empty() {
+            // clean close: half-shutdown tells the worker we're done; the
+            // reader sees EOF with nothing in flight and disarms
+            let _ = stream.shutdown(Shutdown::Write);
+            break;
+        }
+        if reader.is_finished() {
+            break; // connection died; stop writing
+        }
+    }
+
+    match reader.join() {
+        Ok(m) => m,
+        Err(_) => Err(anyhow!("remote worker {addr}: proxy reader panicked")),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_reader(
+    id: usize,
+    stream: TcpStream,
+    mut notice: DeathNotice,
+    in_flight: Arc<Mutex<HashMap<u64, Request>>>,
+    closing: Arc<AtomicBool>,
+    pending_ping: Arc<Mutex<Option<(u64, Instant)>>>,
+    pool_tx: mpsc::Sender<Msg>,
+    tel: Option<Arc<Telemetry>>,
+    transport: Option<Arc<RemoteTransport>>,
+    addr: String,
+) -> Result<Metrics> {
+    // proxy-observed metrics: the remote engine keeps its own; this side
+    // records what crossed back (completions, tokens, finish reasons,
+    // worker-measured ttft/latency), which is what the pool report and
+    // the hub aggregate over
+    let mut m = Metrics::default();
+    let publish_status = |tel: &Option<Arc<Telemetry>>, n_in_flight: usize| {
+        if let Some(t) = tel {
+            t.set_gauge(Gauge::ActiveSlots, n_in_flight as u64);
+            t.set_gauge(Gauge::QueueDepth, n_in_flight as u64);
+            t.set_status(json::obj(vec![
+                ("role", json::s("remote_proxy")),
+                ("addr", json::s(&addr)),
+                ("active", json::num(n_in_flight as f64)),
+                ("pending", json::num(0.0)),
+            ]));
+        }
+    };
+    if let Some(t) = &tel {
+        m.attach_telemetry(Arc::clone(t));
+    }
+    m.start();
+    publish_status(&tel, 0);
+    loop {
+        match proto::read_frame_counted(&mut &stream) {
+            Ok((frame, n)) => {
+                if let Some(t) = &transport {
+                    t.note_in(n);
+                }
+                match frame {
+                    Frame::FirstToken { id } => {
+                        if let Some(r) = in_flight.lock().unwrap().get(&id) {
+                            r.emit(Event::FirstToken);
+                        }
+                    }
+                    Frame::Token { id, tok, index } => {
+                        if let Some(r) = in_flight.lock().unwrap().get(&id) {
+                            r.emit(Event::Token { tok, index: index as usize });
+                        }
+                    }
+                    Frame::Finished { fin } => {
+                        let req = in_flight.lock().unwrap().remove(&fin.id);
+                        m.count(Counter::RequestsCompleted, 1);
+                        m.count(Counter::TokensGenerated, fin.generated.len() as u64);
+                        m.count(Counter::PromptTokens, fin.prompt_len as u64);
+                        m.note_finish_reason(fin.finish_reason);
+                        if fin.ttft_s > 0.0 {
+                            m.note_ttft(fin.ttft_s);
+                        }
+                        m.note_latency(fin.total_s);
+                        publish_status(&tel, in_flight.lock().unwrap().len());
+                        if let Some(r) = req {
+                            r.emit(Event::Finished(fin.clone()));
+                        }
+                        let _ = pool_tx.send(Msg::Done { worker: id, fin });
+                    }
+                    Frame::Pong { seq, .. } => {
+                        let mut p = pending_ping.lock().unwrap();
+                        if let Some((want, sent)) = *p {
+                            if want == seq {
+                                if let Some(t) = &transport {
+                                    t.observe_rtt(sent.elapsed().as_secs_f64());
+                                }
+                                *p = None;
+                            }
+                        }
+                    }
+                    // Hello/HelloAck/Submit/Cancel/Ping are
+                    // dispatcher→worker traffic; ignore if echoed
+                    _ => {}
+                }
+            }
+            Err(e) => {
+                let n_lost = in_flight.lock().unwrap().len() as u64;
+                m.stop();
+                if closing.load(Ordering::SeqCst) && n_lost == 0 {
+                    // expected EOF after our half-shutdown: clean drain
+                    notice.armed = false;
+                    publish_status(&tel, 0);
+                    return Ok(m);
+                }
+                if let Some(t) = &transport {
+                    t.note_disconnect(n_lost);
+                }
+                notice.error = format!(
+                    "remote worker {addr}: connection lost ({e}); \
+                     {n_lost} in-flight request(s) re-routing"
+                );
+                // the armed notice fires on return, after every Done this
+                // thread already sent
+                return Err(anyhow!("remote worker {addr} died: {e}"));
+            }
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Distributed serving: remote worker processes behind the pool router.
+//!
+//! The multi-worker pool ([`crate::coordinator::serve_pool`]) fans
+//! requests out to worker threads in one process.  This module stretches
+//! that seam across process (and machine) boundaries without changing it:
+//!
+//! * [`proto`] — a compact, dependency-free, length-prefixed wire
+//!   protocol whose event frames mirror the in-process
+//!   [`Event`](crate::coordinator::Event) stream 1:1;
+//! * [`worker`] — the worker-process side (`serve --worker-mode
+//!   HOST:PORT`): one listener, one backend, one engine pump per
+//!   connection, speaking [`proto`];
+//! * [`client`] — the dispatcher-side proxy that makes a connected remote
+//!   worker look exactly like a local worker thread: same message
+//!   channel in, same `Done`/`WorkerDead` messages out, so the router,
+//!   re-routing on death, priority scheduling, and telemetry all apply
+//!   unchanged.
+//!
+//! Because Mamba2 serving state is position-keyed and constant-size, a
+//! remote worker's token stream is bit-identical to a local worker's for
+//! the same request — mixing `--remote-worker` processes into a pool
+//! changes capacity and placement, never tokens.
+
+pub mod client;
+pub mod proto;
+pub mod worker;
+
+pub use proto::{Frame, WireRequest, MAX_FRAME, PROTO_VERSION};
+pub use worker::{serve_worker, WorkerServer};

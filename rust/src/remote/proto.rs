@@ -1,0 +1,819 @@
+//! Compact wire protocol between the pool dispatcher and remote workers.
+//!
+//! Framing is minimal and dependency-free: every message is
+//!
+//! ```text
+//! [u32 len, little-endian] [u8 kind] [payload bytes]
+//! ```
+//!
+//! where `len` counts the kind byte plus the payload, and is bounded by
+//! [`MAX_FRAME`] so a corrupt or hostile peer can never make the reader
+//! allocate unbounded memory.  All integers are little-endian; floats are
+//! IEEE-754 bit patterns.  Decoding is bounds-checked at every read — a
+//! truncated or malformed frame is an `InvalidData` error, never a panic
+//! or an out-of-bounds read.
+//!
+//! The conversation is asymmetric:
+//!
+//! * dispatcher → worker: [`Frame::Hello`] (once), [`Frame::Submit`],
+//!   [`Frame::Cancel`], [`Frame::Ping`]
+//! * worker → dispatcher: [`Frame::HelloAck`] (once), then per-request
+//!   event frames mirroring [`coordinator::request::Event`] 1:1 —
+//!   [`Frame::FirstToken`], [`Frame::Token`], [`Frame::Finished`] — plus
+//!   [`Frame::Pong`] health replies carrying live load/capacity.
+//!
+//! The handshake pins compatibility: `Hello` carries a magic and a
+//! protocol version, and the worker answers `HelloAck` only when both
+//! match ([`PROTO_VERSION`]); a mismatch closes the connection before any
+//! request state exists.  `Submit` serializes the full request contract —
+//! prompt, budget, variant, stop token, session id, remaining deadline,
+//! priority, and every sampling field — so a remote worker reproduces
+//! the exact token stream an in-process worker would (position-keyed
+//! sampling makes the stream worker-invariant).  Deadlines cross the wire
+//! as *remaining* milliseconds: `Instant`s are process-local, so the
+//! sender computes what's left and the worker re-anchors on arrival.
+//!
+//! [`coordinator::request::Event`]: crate::coordinator::Event
+
+use std::io::{self, Read, Write};
+use std::time::Duration;
+
+use crate::coordinator::sampler::SamplingParams;
+use crate::coordinator::{FinishReason, FinishedRequest, Request, SpecStats};
+
+/// `b"FMRW"` little-endian: FastMamba Remote Worker.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"FMRW");
+
+/// Protocol version; bumped on any frame-layout change.  The handshake
+/// rejects mismatches outright — no cross-version negotiation.
+pub const PROTO_VERSION: u16 = 1;
+
+/// Upper bound on one frame's body (kind + payload).  Large enough for a
+/// long prompt or a long generation, small enough that a corrupt length
+/// prefix cannot drive a giant allocation.
+pub const MAX_FRAME: usize = 32 << 20;
+
+const KIND_HELLO: u8 = 1;
+const KIND_HELLO_ACK: u8 = 2;
+const KIND_SUBMIT: u8 = 3;
+const KIND_CANCEL: u8 = 4;
+const KIND_PING: u8 = 5;
+const KIND_PONG: u8 = 6;
+const KIND_FIRST_TOKEN: u8 = 7;
+const KIND_TOKEN: u8 = 8;
+const KIND_FINISHED: u8 = 9;
+
+/// A [`Request`] flattened for the wire.  Everything the serving contract
+/// needs crosses; process-local plumbing (event channel, cancel flag,
+/// resume state, `submitted_at`) never does — the worker re-creates its
+/// own at admission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: u64,
+    pub variant: String,
+    pub stop_token: Option<u32>,
+    pub session_id: Option<u64>,
+    /// deadline budget *remaining* at send time, in milliseconds
+    pub deadline_ms: Option<u64>,
+    pub priority: i32,
+    pub sampling: SamplingParams,
+}
+
+impl WireRequest {
+    /// Flatten a request for transmission.  The deadline is converted to
+    /// remaining budget now, so queue time on the dispatcher side counts
+    /// against it exactly as it would for a local worker.
+    pub fn from_request(req: &Request) -> Self {
+        let deadline_ms = req.deadline.map(|d| {
+            d.saturating_sub(req.submitted_at.elapsed()).as_millis() as u64
+        });
+        Self {
+            id: req.id,
+            prompt: req.prompt.clone(),
+            max_new_tokens: req.max_new_tokens as u64,
+            variant: req.variant.clone(),
+            stop_token: req.stop_token,
+            session_id: req.session_id,
+            deadline_ms,
+            priority: req.priority,
+            sampling: req.sampling.clone(),
+        }
+    }
+
+    /// Rebuild a local [`Request`] on the worker side.  `submitted_at`
+    /// re-anchors to now — TTFT/latency measured here cover the worker's
+    /// own queue + serving time; the dispatcher keeps end-to-end numbers.
+    pub fn into_request(self) -> Request {
+        let mut req = Request::new(
+            self.id,
+            self.prompt,
+            self.max_new_tokens as usize,
+            &self.variant,
+        );
+        if let Some(t) = self.stop_token {
+            req = req.with_stop_token(t);
+        }
+        if let Some(sid) = self.session_id {
+            req = req.with_session(sid);
+        }
+        if let Some(ms) = self.deadline_ms {
+            req = req.with_deadline(Duration::from_millis(ms));
+        }
+        req.with_priority(self.priority).with_sampling(self.sampling)
+    }
+}
+
+/// One protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// dispatcher → worker, first frame on a connection
+    Hello { magic: u32, version: u16 },
+    /// worker → dispatcher, handshake accept; `capacity` is the worker's
+    /// concurrent-slot count (its engine's `max_active`)
+    HelloAck { version: u16, capacity: u32 },
+    Submit(WireRequest),
+    /// dispatcher → worker: cancel request `id` (maps onto the local
+    /// cancel-flag path; the worker still answers with a terminal
+    /// `Finished { finish_reason: Cancelled }`)
+    Cancel { id: u64 },
+    Ping { seq: u64 },
+    /// health reply: `load` = requests pending+active on the worker
+    Pong { seq: u64, load: u32, capacity: u32 },
+    /// mirrors [`Event::FirstToken`](crate::coordinator::Event)
+    FirstToken { id: u64 },
+    /// mirrors [`Event::Token`](crate::coordinator::Event)
+    Token { id: u64, tok: u32, index: u64 },
+    /// mirrors [`Event::Finished`](crate::coordinator::Event) — terminal
+    Finished { fin: FinishedRequest },
+}
+
+/// The dispatcher's opening frame.
+pub fn hello() -> Frame {
+    Frame::Hello { magic: MAGIC, version: PROTO_VERSION }
+}
+
+fn reason_byte(r: FinishReason) -> u8 {
+    match r {
+        FinishReason::Length => 0,
+        FinishReason::StopToken => 1,
+        FinishReason::StopSequence => 2,
+        FinishReason::Cancelled => 3,
+        FinishReason::Deadline => 4,
+        FinishReason::WorkerDied => 5,
+        FinishReason::Preempted => 6,
+        FinishReason::Overloaded => 7,
+    }
+}
+
+fn byte_reason(b: u8) -> Option<FinishReason> {
+    Some(match b {
+        0 => FinishReason::Length,
+        1 => FinishReason::StopToken,
+        2 => FinishReason::StopSequence,
+        3 => FinishReason::Cancelled,
+        4 => FinishReason::Deadline,
+        5 => FinishReason::WorkerDied,
+        6 => FinishReason::Preempted,
+        7 => FinishReason::Overloaded,
+        _ => return None,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// payload writer
+
+struct W(Vec<u8>);
+
+impl W {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i32(&mut self, v: i32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn opt_u32(&mut self, v: Option<u32>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.u32(x);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.u64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn str(&mut self, v: &str) {
+        self.u32(v.len() as u32);
+        self.0.extend_from_slice(v.as_bytes());
+    }
+    fn u32s(&mut self, vs: &[u32]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.u32(v);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bounds-checked payload reader
+
+struct R<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> R<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(s)
+    }
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|s| s[0])
+    }
+    fn u16(&mut self) -> Option<u16> {
+        self.take(2).map(|s| u16::from_le_bytes(s.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|s| u32::from_le_bytes(s.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|s| u64::from_le_bytes(s.try_into().unwrap()))
+    }
+    fn i32(&mut self) -> Option<i32> {
+        self.take(4).map(|s| i32::from_le_bytes(s.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Option<f32> {
+        self.u32().map(f32::from_bits)
+    }
+    fn f64(&mut self) -> Option<f64> {
+        self.u64().map(f64::from_bits)
+    }
+    fn opt_u32(&mut self) -> Option<Option<u32>> {
+        match self.u8()? {
+            0 => Some(None),
+            1 => Some(Some(self.u32()?)),
+            _ => None,
+        }
+    }
+    fn opt_u64(&mut self) -> Option<Option<u64>> {
+        match self.u8()? {
+            0 => Some(None),
+            1 => Some(Some(self.u64()?)),
+            _ => None,
+        }
+    }
+    fn str(&mut self) -> Option<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).ok()
+    }
+    fn u32s(&mut self) -> Option<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Some(v)
+    }
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+fn write_sampling(w: &mut W, s: &SamplingParams) {
+    w.f32(s.temperature);
+    w.u64(s.top_k as u64);
+    w.f32(s.top_p);
+    w.f32(s.repetition_penalty);
+    w.f32(s.presence_penalty);
+    w.f32(s.frequency_penalty);
+    w.u32(s.logit_bias.len() as u32);
+    for (tok, bias) in &s.logit_bias {
+        w.u32(*tok);
+        w.f32(*bias);
+    }
+    w.u32(s.stop_sequences.len() as u32);
+    for seq in &s.stop_sequences {
+        w.str(seq);
+    }
+    w.u64(s.seed);
+}
+
+fn read_sampling(r: &mut R<'_>) -> Option<SamplingParams> {
+    let temperature = r.f32()?;
+    let top_k = r.u64()? as usize;
+    let top_p = r.f32()?;
+    let repetition_penalty = r.f32()?;
+    let presence_penalty = r.f32()?;
+    let frequency_penalty = r.f32()?;
+    let n_bias = r.u32()? as usize;
+    let mut logit_bias = Vec::with_capacity(n_bias.min(1 << 16));
+    for _ in 0..n_bias {
+        let tok = r.u32()?;
+        let bias = r.f32()?;
+        logit_bias.push((tok, bias));
+    }
+    let n_stop = r.u32()? as usize;
+    let mut stop_sequences = Vec::with_capacity(n_stop.min(1 << 10));
+    for _ in 0..n_stop {
+        stop_sequences.push(r.str()?);
+    }
+    let seed = r.u64()?;
+    Some(SamplingParams {
+        temperature,
+        top_k,
+        top_p,
+        repetition_penalty,
+        presence_penalty,
+        frequency_penalty,
+        logit_bias,
+        stop_sequences,
+        seed,
+    })
+}
+
+/// Serialize a frame, header included, ready to write to a socket.
+pub fn encode(f: &Frame) -> Vec<u8> {
+    let mut w = W(Vec::new());
+    let kind = match f {
+        Frame::Hello { magic, version } => {
+            w.u32(*magic);
+            w.u16(*version);
+            KIND_HELLO
+        }
+        Frame::HelloAck { version, capacity } => {
+            w.u16(*version);
+            w.u32(*capacity);
+            KIND_HELLO_ACK
+        }
+        Frame::Submit(req) => {
+            w.u64(req.id);
+            w.u32s(&req.prompt);
+            w.u64(req.max_new_tokens);
+            w.str(&req.variant);
+            w.opt_u32(req.stop_token);
+            w.opt_u64(req.session_id);
+            w.opt_u64(req.deadline_ms);
+            w.i32(req.priority);
+            write_sampling(&mut w, &req.sampling);
+            KIND_SUBMIT
+        }
+        Frame::Cancel { id } => {
+            w.u64(*id);
+            KIND_CANCEL
+        }
+        Frame::Ping { seq } => {
+            w.u64(*seq);
+            KIND_PING
+        }
+        Frame::Pong { seq, load, capacity } => {
+            w.u64(*seq);
+            w.u32(*load);
+            w.u32(*capacity);
+            KIND_PONG
+        }
+        Frame::FirstToken { id } => {
+            w.u64(*id);
+            KIND_FIRST_TOKEN
+        }
+        Frame::Token { id, tok, index } => {
+            w.u64(*id);
+            w.u32(*tok);
+            w.u64(*index);
+            KIND_TOKEN
+        }
+        Frame::Finished { fin } => {
+            w.u64(fin.id);
+            w.u32s(&fin.generated);
+            w.u8(reason_byte(fin.finish_reason));
+            w.f64(fin.ttft_s);
+            w.f64(fin.total_s);
+            w.u64(fin.prompt_len as u64);
+            match &fin.spec {
+                Some(s) => {
+                    w.u8(1);
+                    w.u64(s.drafted);
+                    w.u64(s.accepted);
+                    w.u64(s.rounds);
+                }
+                None => w.u8(0),
+            }
+            KIND_FINISHED
+        }
+    };
+    let body = w.0;
+    let mut out = Vec::with_capacity(5 + body.len());
+    out.extend_from_slice(&(body.len() as u32 + 1).to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(&body);
+    out
+}
+
+fn invalid(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("wire protocol: {what}"))
+}
+
+/// Decode one frame body (the bytes after the length prefix: kind +
+/// payload).  Every length and enum byte is validated; trailing bytes are
+/// rejected so a frame is exactly its declared content.
+pub fn decode_body(body: &[u8]) -> io::Result<Frame> {
+    let (&kind, payload) = body.split_first().ok_or_else(|| invalid("empty frame"))?;
+    let mut r = R { buf: payload, pos: 0 };
+    let frame = match kind {
+        KIND_HELLO => {
+            let magic = r.u32();
+            let version = r.u16();
+            match (magic, version) {
+                (Some(magic), Some(version)) => Some(Frame::Hello { magic, version }),
+                _ => None,
+            }
+        }
+        KIND_HELLO_ACK => match (r.u16(), r.u32()) {
+            (Some(version), Some(capacity)) => Some(Frame::HelloAck { version, capacity }),
+            _ => None,
+        },
+        KIND_SUBMIT => (|| {
+            let id = r.u64()?;
+            let prompt = r.u32s()?;
+            let max_new_tokens = r.u64()?;
+            let variant = r.str()?;
+            let stop_token = r.opt_u32()?;
+            let session_id = r.opt_u64()?;
+            let deadline_ms = r.opt_u64()?;
+            let priority = r.i32()?;
+            let sampling = read_sampling(&mut r)?;
+            Some(Frame::Submit(WireRequest {
+                id,
+                prompt,
+                max_new_tokens,
+                variant,
+                stop_token,
+                session_id,
+                deadline_ms,
+                priority,
+                sampling,
+            }))
+        })(),
+        KIND_CANCEL => r.u64().map(|id| Frame::Cancel { id }),
+        KIND_PING => r.u64().map(|seq| Frame::Ping { seq }),
+        KIND_PONG => (|| {
+            let seq = r.u64()?;
+            let load = r.u32()?;
+            let capacity = r.u32()?;
+            Some(Frame::Pong { seq, load, capacity })
+        })(),
+        KIND_FIRST_TOKEN => r.u64().map(|id| Frame::FirstToken { id }),
+        KIND_TOKEN => (|| {
+            let id = r.u64()?;
+            let tok = r.u32()?;
+            let index = r.u64()?;
+            Some(Frame::Token { id, tok, index })
+        })(),
+        KIND_FINISHED => (|| {
+            let id = r.u64()?;
+            let generated = r.u32s()?;
+            let finish_reason = byte_reason(r.u8()?)?;
+            let ttft_s = r.f64()?;
+            let total_s = r.f64()?;
+            let prompt_len = r.u64()? as usize;
+            let spec = match r.u8()? {
+                0 => None,
+                1 => {
+                    let drafted = r.u64()?;
+                    let accepted = r.u64()?;
+                    let rounds = r.u64()?;
+                    Some(SpecStats { drafted, accepted, rounds })
+                }
+                _ => return None,
+            };
+            Some(Frame::Finished {
+                fin: FinishedRequest {
+                    id,
+                    generated,
+                    finish_reason,
+                    ttft_s,
+                    total_s,
+                    prompt_len,
+                    spec,
+                },
+            })
+        })(),
+        _ => return Err(invalid("unknown frame kind")),
+    };
+    match frame {
+        Some(f) if r.done() => Ok(f),
+        Some(_) => Err(invalid("trailing bytes in frame")),
+        None => Err(invalid("truncated or malformed payload")),
+    }
+}
+
+/// Read one complete frame (blocking).  `UnexpectedEof` on connection
+/// close, `InvalidData` on a corrupt length prefix or payload.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Frame> {
+    read_frame_counted(r).map(|(f, _)| f)
+}
+
+/// [`read_frame`] plus the framed byte count (for transport byte
+/// counters).
+pub fn read_frame_counted(r: &mut impl Read) -> io::Result<(Frame, usize)> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(invalid("frame length out of bounds"));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    decode_body(&body).map(|f| (f, 4 + len))
+}
+
+/// Encode and write one frame; returns the bytes written (for transport
+/// byte counters).
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> io::Result<usize> {
+    let bytes = encode(f);
+    w.write_all(&bytes)?;
+    Ok(bytes.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frames() -> Vec<Frame> {
+        let sampling = SamplingParams {
+            temperature: 0.85,
+            top_k: 40,
+            top_p: 0.93,
+            repetition_penalty: 1.1,
+            presence_penalty: 0.25,
+            frequency_penalty: -0.5,
+            logit_bias: vec![(3, -100.0), (77, 2.5)],
+            stop_sequences: vec!["1 2".to_string(), "stop".to_string()],
+            seed: 0xDEAD_BEEF_CAFE,
+        };
+        vec![
+            hello(),
+            Frame::Hello { magic: 0x1234_5678, version: 9 },
+            Frame::HelloAck { version: PROTO_VERSION, capacity: 64 },
+            Frame::Submit(WireRequest {
+                id: u64::MAX,
+                prompt: vec![0, 1, u32::MAX, 42],
+                max_new_tokens: 128,
+                variant: "fastmamba".to_string(),
+                stop_token: Some(7),
+                session_id: Some(u64::MAX - 1),
+                deadline_ms: Some(30_000),
+                priority: -3,
+                sampling,
+            }),
+            Frame::Submit(WireRequest {
+                id: 0,
+                prompt: vec![5],
+                max_new_tokens: 1,
+                variant: "fp32".to_string(),
+                stop_token: None,
+                session_id: None,
+                deadline_ms: None,
+                priority: 0,
+                sampling: SamplingParams::default(),
+            }),
+            Frame::Cancel { id: 12 },
+            Frame::Ping { seq: 3 },
+            Frame::Pong { seq: 3, load: 17, capacity: 64 },
+            Frame::FirstToken { id: 5 },
+            Frame::Token { id: 5, tok: 1234, index: 0 },
+            Frame::Finished {
+                fin: FinishedRequest {
+                    id: 5,
+                    generated: (0..500).collect(),
+                    finish_reason: FinishReason::StopSequence,
+                    ttft_s: 0.0123,
+                    total_s: 1.5,
+                    prompt_len: 33,
+                    spec: Some(SpecStats { drafted: 10, accepted: 8, rounds: 3 }),
+                },
+            },
+            Frame::Finished {
+                fin: FinishedRequest {
+                    id: 6,
+                    generated: Vec::new(),
+                    finish_reason: FinishReason::WorkerDied,
+                    ttft_s: 0.0,
+                    total_s: 0.0,
+                    prompt_len: 1,
+                    spec: None,
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn remote_frame_roundtrip_all_kinds() {
+        for f in sample_frames() {
+            let bytes = encode(&f);
+            let mut cursor = io::Cursor::new(&bytes);
+            let back = read_frame(&mut cursor).unwrap_or_else(|e| panic!("{f:?}: {e}"));
+            assert_eq!(back, f);
+            assert_eq!(cursor.position() as usize, bytes.len(), "consumed exactly");
+        }
+        // every finish reason survives the byte mapping
+        for r in [
+            FinishReason::Length,
+            FinishReason::StopToken,
+            FinishReason::StopSequence,
+            FinishReason::Cancelled,
+            FinishReason::Deadline,
+            FinishReason::WorkerDied,
+            FinishReason::Preempted,
+            FinishReason::Overloaded,
+        ] {
+            assert_eq!(byte_reason(reason_byte(r)), Some(r));
+        }
+        assert_eq!(byte_reason(200), None);
+    }
+
+    #[test]
+    fn remote_frame_roundtrip_near_max_payload() {
+        // a prompt near the frame bound round-trips; the length prefix and
+        // element counts agree all the way up
+        let prompt: Vec<u32> = (0..1_000_000u32).collect(); // ~4 MB payload
+        let f = Frame::Submit(WireRequest {
+            id: 1,
+            prompt: prompt.clone(),
+            max_new_tokens: 4,
+            variant: "fp32".to_string(),
+            stop_token: None,
+            session_id: None,
+            deadline_ms: None,
+            priority: 0,
+            sampling: SamplingParams::default(),
+        });
+        let bytes = encode(&f);
+        assert!(bytes.len() < MAX_FRAME);
+        let back = read_frame(&mut io::Cursor::new(&bytes)).unwrap();
+        match back {
+            Frame::Submit(wr) => assert_eq!(wr.prompt, prompt),
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn remote_truncated_frames_are_rejected_at_every_cut() {
+        for f in sample_frames() {
+            let bytes = encode(&f);
+            // cut inside the header, at the body start, and through the body
+            let cuts: Vec<usize> =
+                [0, 1, 3, 4, 5, bytes.len() / 2, bytes.len() - 1].to_vec();
+            for cut in cuts {
+                if cut >= bytes.len() {
+                    continue;
+                }
+                let err = read_frame(&mut io::Cursor::new(&bytes[..cut]))
+                    .expect_err("truncated frame must fail");
+                assert!(
+                    matches!(
+                        err.kind(),
+                        io::ErrorKind::UnexpectedEof | io::ErrorKind::InvalidData
+                    ),
+                    "{f:?} cut at {cut}: {err}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn remote_corrupt_frames_are_rejected() {
+        // zero length
+        assert!(read_frame(&mut io::Cursor::new(&0u32.to_le_bytes())).is_err());
+        // length over the bound
+        let huge = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        let err = read_frame(&mut io::Cursor::new(&huge)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // unknown kind byte
+        let mut bad = encode(&Frame::Ping { seq: 1 });
+        bad[4] = 0xEE;
+        assert!(read_frame(&mut io::Cursor::new(&bad)).is_err());
+        // trailing garbage inside a declared frame
+        let mut padded = encode(&Frame::Cancel { id: 1 });
+        let len = (padded.len() - 4 + 3) as u32;
+        padded[..4].copy_from_slice(&len.to_le_bytes());
+        padded.extend_from_slice(&[0, 0, 0]);
+        let err = read_frame(&mut io::Cursor::new(&padded)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // invalid option tag inside Submit
+        let f = Frame::Submit(WireRequest {
+            id: 1,
+            prompt: vec![1],
+            max_new_tokens: 1,
+            variant: "fp32".to_string(),
+            stop_token: Some(3),
+            session_id: None,
+            deadline_ms: None,
+            priority: 0,
+            sampling: SamplingParams::default(),
+        });
+        let mut bytes = encode(&f);
+        // stop_token option tag sits right after id/prompt/max_new/variant
+        let tag_pos = 4 + 1 + 8 + (4 + 4) + 8 + (4 + 4);
+        assert_eq!(bytes[tag_pos], 1, "locating the option tag");
+        bytes[tag_pos] = 7;
+        assert!(read_frame(&mut io::Cursor::new(&bytes)).is_err());
+        // invalid finish-reason byte
+        let fin = Frame::Finished {
+            fin: FinishedRequest {
+                id: 1,
+                generated: vec![2],
+                finish_reason: FinishReason::Length,
+                ttft_s: 0.0,
+                total_s: 0.0,
+                prompt_len: 1,
+                spec: None,
+            },
+        };
+        let mut bytes = encode(&fin);
+        let reason_pos = 4 + 1 + 8 + (4 + 4);
+        assert_eq!(bytes[reason_pos], 0, "locating the reason byte");
+        bytes[reason_pos] = 99;
+        assert!(read_frame(&mut io::Cursor::new(&bytes)).is_err());
+    }
+
+    #[test]
+    fn remote_wire_request_preserves_serving_contract() {
+        use std::time::Duration;
+        let sampling = SamplingParams {
+            temperature: 0.7,
+            seed: 42,
+            stop_sequences: vec!["9 9".into()],
+            ..SamplingParams::default()
+        };
+        let req = Request::new(31, vec![1, 2, 3], 16, "fastmamba")
+            .with_stop_token(5)
+            .with_session(1234)
+            .with_priority(7)
+            .with_deadline(Duration::from_secs(60))
+            .with_sampling(sampling.clone());
+        let wire = WireRequest::from_request(&req);
+        assert_eq!(wire.id, 31);
+        let remaining = wire.deadline_ms.expect("deadline crosses as remaining ms");
+        assert!(remaining <= 60_000 && remaining > 59_000, "{remaining}");
+
+        let back = wire.into_request();
+        assert_eq!(back.id, req.id);
+        assert_eq!(back.prompt, req.prompt);
+        assert_eq!(back.max_new_tokens, req.max_new_tokens);
+        assert_eq!(back.variant, req.variant);
+        assert_eq!(back.stop_token, req.stop_token);
+        assert_eq!(back.session_id, req.session_id);
+        assert_eq!(back.priority, req.priority);
+        assert_eq!(back.sampling, sampling);
+        assert!(back.deadline.unwrap() <= Duration::from_secs(60));
+    }
+
+    #[test]
+    fn remote_streamed_frames_interleave_on_one_pipe() {
+        // several frames written back-to-back read out in order — the
+        // framing self-delimits with no separators
+        let frames = sample_frames();
+        let mut pipe = Vec::new();
+        for f in &frames {
+            pipe.extend_from_slice(&encode(f));
+        }
+        let mut cursor = io::Cursor::new(&pipe);
+        for want in &frames {
+            let got = read_frame(&mut cursor).unwrap();
+            assert_eq!(&got, want);
+        }
+        assert_eq!(cursor.position() as usize, pipe.len());
+        // the next read reports a clean EOF
+        let err = read_frame(&mut cursor).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+}

@@ -1,0 +1,527 @@
+//! The worker-process side of distributed serving (`serve --worker-mode`).
+//!
+//! [`serve_worker`] binds a TCP listener, builds one backend, and serves
+//! dispatcher connections sequentially: handshake
+//! ([`Frame::Hello`]/[`Frame::HelloAck`]), then an engine pump that turns
+//! [`Frame::Submit`] into local [`Request`]s and streams every request
+//! event back as [`Frame::FirstToken`]/[`Frame::Token`]/[`Frame::Finished`]
+//! — the same [`WorkerEngine`] loop an in-process pool worker runs, with
+//! the wire where the mpsc channels were.
+//!
+//! A dropped connection cancels whatever is in flight (the dispatcher
+//! re-routes those requests to surviving workers and counts the loss on
+//! its side), drains the engine, and returns to accepting — a worker
+//! process outlives its dispatcher and serves the next one that connects.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::InferenceBackend;
+use crate::coordinator::request::SubmitHandle;
+use crate::coordinator::router::{PoolConfig, WorkerEngine};
+use crate::coordinator::Event;
+
+use super::proto::{self, Frame, MAGIC, PROTO_VERSION};
+
+/// Handle to a running worker process loop.
+///
+/// [`WorkerServer::kill`] is deliberately abrupt — it severs the current
+/// connection without any protocol goodbye, exactly what a crashed
+/// process looks like from the dispatcher — so tests exercise the same
+/// re-routing path a real `kill -9` does.
+pub struct WorkerServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    current: Arc<Mutex<Option<TcpStream>>>,
+    handle: Option<thread::JoinHandle<Result<()>>>,
+}
+
+impl WorkerServer {
+    /// The bound address (resolves `:0` to the chosen port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Abruptly stop: sever the live connection mid-stream (the
+    /// dispatcher sees a dead worker) and stop accepting.
+    pub fn kill(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(s) = self.current.lock().unwrap().as_ref() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Wait for the accept loop to exit (after [`WorkerServer::kill`]).
+    pub fn wait(mut self) -> Result<()> {
+        match self.handle.take() {
+            Some(h) => h.join().map_err(|_| anyhow!("worker loop panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for WorkerServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(s) = self.current.lock().unwrap().as_ref() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// Run one remote worker: bind `addr`, build the backend once, then serve
+/// dispatcher connections until killed.  The engine configuration (plain
+/// vs speculative, state cache, scheduling policy) comes from the same
+/// [`PoolConfig`] an in-process worker would get.
+pub fn serve_worker<F>(addr: &str, make_backend: F, cfg: PoolConfig) -> Result<WorkerServer>
+where
+    F: Fn() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+{
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("worker-mode bind {addr}"))?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let current: Arc<Mutex<Option<TcpStream>>> = Arc::new(Mutex::new(None));
+    let handle = {
+        let stop = Arc::clone(&stop);
+        let current = Arc::clone(&current);
+        thread::spawn(move || accept_loop(listener, make_backend, cfg, stop, current))
+    };
+    Ok(WorkerServer { addr: local, stop, current, handle: Some(handle) })
+}
+
+fn accept_loop<F>(
+    listener: TcpListener,
+    make_backend: F,
+    cfg: PoolConfig,
+    stop: Arc<AtomicBool>,
+    current: Arc<Mutex<Option<TcpStream>>>,
+) -> Result<()>
+where
+    F: Fn() -> Result<Box<dyn InferenceBackend>>,
+{
+    // one backend for the process lifetime (construction is the expensive
+    // part); each connection gets a fresh engine over it
+    let be = make_backend().context("worker-mode backend construction")?;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                *current.lock().unwrap() = Some(
+                    stream.try_clone().context("clone connection for kill handle")?,
+                );
+                // a failed connection (bad handshake, mid-stream drop) must
+                // not take the worker down: log-free swallow, back to accept
+                let _ = serve_conn(stream, be.as_ref(), &cfg, &stop);
+                *current.lock().unwrap() = None;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e).context("worker-mode accept"),
+        }
+    }
+}
+
+/// Commands the connection reader thread feeds the engine pump.
+enum Cmd {
+    Frame(Frame),
+    /// the dispatcher hung up (EOF or read error)
+    Eof,
+}
+
+fn serve_conn(
+    stream: TcpStream,
+    be: &dyn InferenceBackend,
+    cfg: &PoolConfig,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // a bounded handshake window, so a silent connector can't wedge accept
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    match proto::read_frame(&mut &stream)? {
+        Frame::Hello { magic, version } if magic == MAGIC && version == PROTO_VERSION => {}
+        Frame::Hello { magic, version } => {
+            // a version/magic mismatch closes before any request state
+            // exists — the connecting dispatcher reads EOF instead of an
+            // ack and reports the handshake failure
+            bail!("handshake rejected: magic {magic:#x} version {version}");
+        }
+        other => bail!("expected Hello, got {other:?}"),
+    }
+    let capacity = cfg.capacity_per_worker();
+    proto::write_frame(
+        &mut &stream,
+        &Frame::HelloAck { version: PROTO_VERSION, capacity: capacity as u32 },
+    )?;
+    stream.set_read_timeout(None)?;
+
+    let (cmd_tx, cmds) = mpsc::channel::<Cmd>();
+    let rstream = stream.try_clone()?;
+    let reader = thread::spawn(move || loop {
+        match proto::read_frame(&mut &rstream) {
+            Ok(f) => {
+                if cmd_tx.send(Cmd::Frame(f)).is_err() {
+                    return;
+                }
+            }
+            Err(_) => {
+                let _ = cmd_tx.send(Cmd::Eof);
+                return;
+            }
+        }
+    });
+
+    let result = pump(&stream, be, cfg, capacity, &cmds, stop);
+    // sever our clone too, so the reader thread's blocking read returns
+    let _ = stream.shutdown(Shutdown::Both);
+    let _ = reader.join();
+    result
+}
+
+/// The engine pump: the in-process worker loop with frames for channels.
+fn pump(
+    stream: &TcpStream,
+    be: &dyn InferenceBackend,
+    cfg: &PoolConfig,
+    capacity: usize,
+    cmds: &mpsc::Receiver<Cmd>,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let mut engine = WorkerEngine::build(be, cfg);
+    engine.metrics_mut().start();
+    let mut handles: HashMap<u64, SubmitHandle> = HashMap::new();
+    let mut w = stream;
+    let mut eof = false;
+    let mut write_dead = false;
+
+    loop {
+        let stopping = stop.load(Ordering::SeqCst);
+        // gather commands: block briefly only when the engine has nothing
+        // to do, otherwise just drain what's queued
+        let mut queued: Vec<Cmd> = Vec::new();
+        if engine.idle() && !eof && !write_dead && !stopping {
+            match cmds.recv_timeout(Duration::from_millis(50)) {
+                Ok(c) => queued.push(c),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => eof = true,
+            }
+        }
+        loop {
+            match cmds.try_recv() {
+                Ok(c) => queued.push(c),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    eof = true;
+                    break;
+                }
+            }
+        }
+        for cmd in queued {
+            match cmd {
+                Cmd::Frame(Frame::Submit(wr)) => {
+                    let mut req = wr.into_request();
+                    let h = req.attach_events();
+                    handles.insert(h.id(), h);
+                    engine.submit(req);
+                }
+                Cmd::Frame(Frame::Cancel { id }) => {
+                    if let Some(h) = handles.get(&id) {
+                        h.cancel();
+                    }
+                }
+                Cmd::Frame(Frame::Ping { seq }) => {
+                    let pong = Frame::Pong {
+                        seq,
+                        load: engine.load() as u32,
+                        capacity: capacity as u32,
+                    };
+                    if proto::write_frame(&mut w, &pong).is_err() {
+                        write_dead = true;
+                    }
+                }
+                // anything else is protocol misuse from the peer; dropping
+                // it is safer than killing a connection mid-generation
+                Cmd::Frame(_) => {}
+                Cmd::Eof => eof = true,
+            }
+        }
+
+        if eof || write_dead || stopping {
+            // the dispatcher is gone (or we're shutting down): nobody will
+            // read these streams again.  Cancel everything so the engine
+            // retires it promptly and state slots free.
+            for h in handles.values() {
+                h.cancel();
+            }
+        }
+        if engine.idle() && handles.is_empty() && (eof || write_dead || stopping) {
+            break;
+        }
+        if !engine.idle() {
+            engine.step()?;
+        }
+
+        // forward every event as a frame, in per-request order
+        let mut done: Vec<u64> = Vec::new();
+        for (&id, h) in handles.iter() {
+            while let Some(ev) = h.try_event() {
+                let frame = match ev {
+                    Event::FirstToken => Frame::FirstToken { id },
+                    Event::Token { tok, index } => {
+                        Frame::Token { id, tok, index: index as u64 }
+                    }
+                    Event::Finished(fin) => {
+                        done.push(id);
+                        Frame::Finished { fin }
+                    }
+                };
+                if !write_dead && proto::write_frame(&mut w, &frame).is_err() {
+                    write_dead = true;
+                }
+            }
+        }
+        for id in done {
+            handles.remove(&id);
+        }
+        // results already traveled as Finished frames; keep the engine's
+        // finished buffer from growing without bound
+        engine.drain_finished();
+    }
+    engine.metrics_mut().stop();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::coordinator::{Engine, EngineConfig, FinishReason, Request};
+    use crate::remote::proto::WireRequest;
+    use std::net::TcpStream;
+
+    /// Same micro model the router tests use: same-seed construction means
+    /// the worker process and a local engine hold identical weights.
+    fn micro_backend() -> NativeBackend {
+        let mut cfg = crate::config::ModelConfig::tiny();
+        cfg.name = "mamba2-micro".into();
+        cfg.d_model = 64;
+        cfg.n_layer = 2;
+        cfg.d_state = 16;
+        cfg.headdim = 16;
+        cfg.vocab_size = 128;
+        NativeBackend::new(crate::model::ModelWeights::random(&cfg, 9))
+            .with_buckets(vec![8, 16, 32], vec![1, 2, 4])
+    }
+
+    fn micro_cfg() -> PoolConfig {
+        PoolConfig {
+            engine: EngineConfig { max_active: 4, greedy_chunking: true },
+            n_workers: 1,
+            ..PoolConfig::default()
+        }
+    }
+
+    fn start_worker() -> WorkerServer {
+        serve_worker(
+            "127.0.0.1:0",
+            || Ok(Box::new(micro_backend()) as Box<dyn InferenceBackend>),
+            micro_cfg(),
+        )
+        .expect("bind worker")
+    }
+
+    fn req(i: u64) -> Request {
+        let plen = [3usize, 9, 17, 33][i as usize % 4];
+        let prompt: Vec<u32> =
+            (0..plen).map(|j| ((i as usize * 131 + j * 17) % 128) as u32).collect();
+        Request::new(i, prompt, 5, "fp32")
+    }
+
+    fn handshake(stream: &TcpStream) -> u32 {
+        proto::write_frame(&mut &*stream, &proto::hello()).unwrap();
+        match proto::read_frame(&mut &*stream).unwrap() {
+            Frame::HelloAck { version, capacity } => {
+                assert_eq!(version, PROTO_VERSION);
+                capacity
+            }
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+    }
+
+    /// Drive `n` requests through one raw connection and collect the
+    /// streamed tokens per id, asserting event-order invariants.
+    fn collect(stream: &TcpStream, n: usize) -> Vec<(u64, Vec<u32>)> {
+        use std::collections::HashMap;
+        let mut toks: HashMap<u64, Vec<u32>> = HashMap::new();
+        let mut first: HashMap<u64, bool> = HashMap::new();
+        let mut out = Vec::new();
+        while out.len() < n {
+            match proto::read_frame(&mut &*stream).expect("event frame") {
+                Frame::FirstToken { id } => {
+                    assert!(!first.contains_key(&id), "duplicate FirstToken {id}");
+                    first.insert(id, true);
+                }
+                Frame::Token { id, tok, index } => {
+                    let v = toks.entry(id).or_default();
+                    assert_eq!(index as usize, v.len(), "req {id} out of order");
+                    v.push(tok);
+                }
+                Frame::Finished { fin } => {
+                    assert!(first.get(&fin.id).copied().unwrap_or(false));
+                    assert_eq!(
+                        toks.get(&fin.id).cloned().unwrap_or_default(),
+                        fin.generated,
+                        "req {} stream != batch result",
+                        fin.id
+                    );
+                    out.push((fin.id, fin.generated));
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        out.sort();
+        out
+    }
+
+    #[test]
+    fn remote_worker_socket_roundtrip_matches_local_engine() {
+        // what a local engine produces for these requests ...
+        let be = micro_backend();
+        let mut eng =
+            Engine::new(&be, EngineConfig { max_active: 4, greedy_chunking: true });
+        for i in 0..6 {
+            eng.submit(req(i));
+        }
+        eng.run().unwrap();
+        let mut want: Vec<(u64, Vec<u32>)> =
+            eng.finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+        want.sort();
+
+        // ... a worker process must reproduce over the wire, token-exact
+        let server = start_worker();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let cap = handshake(&stream);
+        assert_eq!(cap, 4, "worker advertises its engine capacity");
+        for i in 0..6 {
+            let wr = WireRequest::from_request(&req(i));
+            proto::write_frame(&mut &stream, &Frame::Submit(wr)).unwrap();
+        }
+        let got = collect(&stream, 6);
+        assert_eq!(want, got, "wire round-trip changed generated tokens");
+        for (_, g) in &got {
+            assert_eq!(g.len(), 5);
+        }
+        drop(stream);
+        server.kill();
+        server.wait().unwrap();
+    }
+
+    #[test]
+    fn remote_handshake_version_mismatch_is_rejected() {
+        let server = start_worker();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        proto::write_frame(
+            &mut &stream,
+            &Frame::Hello { magic: MAGIC, version: PROTO_VERSION + 1 },
+        )
+        .unwrap();
+        // the worker closes without an ack: the next read is EOF, never a
+        // HelloAck — exactly what client::connect reports as a version
+        // mismatch
+        match proto::read_frame(&mut &stream) {
+            Err(e) => assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof, "{e}"),
+            Ok(f) => panic!("worker acked a bad version with {f:?}"),
+        }
+        drop(stream);
+
+        // and the worker is still healthy: a correct handshake succeeds
+        let stream2 = TcpStream::connect(server.addr()).unwrap();
+        handshake(&stream2);
+        drop(stream2);
+        server.kill();
+        server.wait().unwrap();
+    }
+
+    #[test]
+    fn remote_worker_outlives_dispatcher_and_serves_next_connection() {
+        let server = start_worker();
+
+        // first dispatcher hangs up abruptly with a request in flight
+        {
+            let stream = TcpStream::connect(server.addr()).unwrap();
+            handshake(&stream);
+            let mut r = req(0);
+            r.max_new_tokens = 64; // long enough to still be running
+            proto::write_frame(&mut &stream, &Frame::Submit(WireRequest::from_request(&r)))
+                .unwrap();
+            // wait for generation to visibly start, then vanish
+            match proto::read_frame(&mut &stream).unwrap() {
+                Frame::FirstToken { id } => assert_eq!(id, 0),
+                other => panic!("expected FirstToken, got {other:?}"),
+            }
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+
+        // the worker cancels the orphan, drains, and accepts the next
+        // dispatcher; its output is unaffected by the earlier abort
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        handshake(&stream);
+        proto::write_frame(&mut &stream, &Frame::Submit(WireRequest::from_request(&req(1))))
+            .unwrap();
+        let got = collect(&stream, 1);
+        assert_eq!(got[0].0, 1);
+        assert_eq!(got[0].1.len(), 5);
+
+        // pings answer with live load/capacity on the same pipe
+        proto::write_frame(&mut &stream, &Frame::Ping { seq: 77 }).unwrap();
+        match proto::read_frame(&mut &stream).unwrap() {
+            Frame::Pong { seq, load, capacity } => {
+                assert_eq!(seq, 77);
+                assert_eq!(load, 0);
+                assert_eq!(capacity, 4);
+            }
+            other => panic!("expected Pong, got {other:?}"),
+        }
+        drop(stream);
+        server.kill();
+        server.wait().unwrap();
+    }
+
+    #[test]
+    fn remote_cancel_frame_finishes_request_as_cancelled() {
+        let server = start_worker();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        handshake(&stream);
+        let mut r = req(3);
+        r.max_new_tokens = 512; // would run far longer than the test allows
+        proto::write_frame(&mut &stream, &Frame::Submit(WireRequest::from_request(&r)))
+            .unwrap();
+        proto::write_frame(&mut &stream, &Frame::Cancel { id: 3 }).unwrap();
+        loop {
+            match proto::read_frame(&mut &stream).expect("frame") {
+                Frame::Finished { fin } => {
+                    assert_eq!(fin.id, 3);
+                    assert_eq!(fin.finish_reason, FinishReason::Cancelled);
+                    assert!(fin.generated.len() < 512);
+                    break;
+                }
+                Frame::FirstToken { .. } | Frame::Token { .. } => {}
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        drop(stream);
+        server.kill();
+        server.wait().unwrap();
+    }
+}

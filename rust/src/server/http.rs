@@ -2,10 +2,11 @@
 //! dependency-free `std::net` approach as [`crate::obs::scrape`], extended
 //! with request-body reads and SSE (`text/event-stream`) writes.
 //!
-//! Scope is deliberately small: one request per connection
-//! (`Connection: close`), `Content-Length` bodies only (no chunked
+//! Scope is deliberately small: `Content-Length` bodies only (no chunked
 //! uploads), and bounded header/body sizes so a misbehaving client cannot
-//! balloon memory.
+//! balloon memory.  Connections are kept alive per HTTP/1.1 semantics
+//! (`Connection: close` honored, HTTP/1.0 defaults to close); the caller
+//! bounds how many requests one connection may serve.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -22,6 +23,10 @@ pub struct HttpRequest {
     pub method: String,
     pub path: String,
     pub body: Vec<u8>,
+    /// whether the client may send another request on this connection
+    /// (HTTP/1.1 default unless `Connection: close`; HTTP/1.0 only with
+    /// an explicit `Connection: keep-alive`)
+    pub keep_alive: bool,
 }
 
 /// First position of `needle` in `haystack`.
@@ -34,9 +39,19 @@ pub fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
 
 /// Read and parse one request from the stream (blocking, with a read
 /// timeout so an idle half-open connection cannot pin the thread).
-pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<HttpRequest> {
+///
+/// `carry` holds bytes read past the previous request's body (a pipelining
+/// client may batch requests into one write); leftover bytes past this
+/// request's body are put back into it.  Returns `Ok(None)` when the
+/// connection reaches EOF cleanly between requests — the normal end of a
+/// keep-alive connection, not an error.
+pub fn read_request(
+    stream: &mut TcpStream,
+    max_body: usize,
+    carry: &mut Vec<u8>,
+) -> Result<Option<HttpRequest>> {
     stream.set_read_timeout(Some(Duration::from_secs(5)))?;
-    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut buf: Vec<u8> = std::mem::take(carry);
     let mut chunk = [0u8; 4096];
     let head_end = loop {
         if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
@@ -47,6 +62,9 @@ pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<HttpReque
         }
         let n = stream.read(&mut chunk).context("reading request head")?;
         if n == 0 {
+            if buf.is_empty() {
+                return Ok(None); // clean close between requests
+            }
             bail!("connection closed before request head completed");
         }
         buf.extend_from_slice(&chunk[..n]);
@@ -57,9 +75,12 @@ pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<HttpReque
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1");
     if method.is_empty() || path.is_empty() {
         bail!("malformed request line: {request_line:?}");
     }
+    // HTTP/1.1 defaults to persistent connections; 1.0 to one-shot
+    let mut keep_alive = !version.eq_ignore_ascii_case("HTTP/1.0");
     let mut content_length: Option<usize> = None;
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
@@ -77,6 +98,13 @@ pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<HttpReque
                 // Transfer-Encoding header (chunked or otherwise) would
                 // desynchronize body parsing, so it is rejected outright
                 bail!("Transfer-Encoding not supported (Content-Length bodies only)");
+            } else if name.eq_ignore_ascii_case("connection") {
+                let v = value.trim();
+                if v.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if v.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
             }
         }
     }
@@ -92,18 +120,22 @@ pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<HttpReque
         }
         body.extend_from_slice(&chunk[..n]);
     }
-    body.truncate(content_length);
-    Ok(HttpRequest { method, path, body })
+    // bytes past the body belong to the next pipelined request
+    *carry = body.split_off(content_length);
+    Ok(Some(HttpRequest { method, path, body, keep_alive }))
 }
 
-/// Write a complete response and flush (`Connection: close` framing).
+/// Write a complete response and flush.  `keep_alive` picks the
+/// `Connection:` framing — the caller decides it from the request *and*
+/// its own per-connection budget.
 pub fn write_response(
     stream: &mut TcpStream,
     status: &str,
     content_type: &str,
     body: &str,
+    keep_alive: bool,
 ) -> Result<()> {
-    write_response_extra(stream, status, content_type, &[], body)
+    write_response_extra(stream, status, content_type, &[], body, keep_alive)
 }
 
 /// [`write_response`] with additional response headers (e.g. `Retry-After`
@@ -115,6 +147,7 @@ pub fn write_response_extra(
     content_type: &str,
     extra_headers: &[(&str, &str)],
     body: &str,
+    keep_alive: bool,
 ) -> Result<()> {
     let mut response = format!(
         "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
@@ -123,7 +156,11 @@ pub fn write_response_extra(
     for (name, value) in extra_headers {
         response.push_str(&format!("{name}: {value}\r\n"));
     }
-    response.push_str("Connection: close\r\n\r\n");
+    response.push_str(if keep_alive {
+        "Connection: keep-alive\r\n\r\n"
+    } else {
+        "Connection: close\r\n\r\n"
+    });
     response.push_str(body);
     stream.write_all(response.as_bytes())?;
     stream.flush()?;

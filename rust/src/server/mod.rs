@@ -221,6 +221,12 @@ pub fn serve_http(
     Ok(HttpServer { addr: bound, stop, accept: Some(accept), served })
 }
 
+/// Requests one connection may serve before the server forces a close —
+/// bounds how long a single client can pin a connection thread while
+/// still amortizing the TCP handshake for well-behaved keep-alive
+/// clients.
+const MAX_REQUESTS_PER_CONN: usize = 32;
+
 fn handle_conn(
     mut stream: TcpStream,
     id: u64,
@@ -229,99 +235,145 @@ fn handle_conn(
     served: &AtomicU64,
     stop: &AtomicBool,
 ) -> Result<()> {
-    let req = match http::read_request(&mut stream, cfg.max_body_bytes) {
-        Ok(r) => r,
-        Err(e) => {
-            let body = api::error_json(&format!("{e:#}"), "invalid_request_error");
-            return http::write_response(&mut stream, "400 Bad Request", "application/json", &body);
-        }
-    };
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => {
-            use crate::util::json::{obj, s, Json};
-            // liveness, not readiness: the process answering is not the
-            // service being alive — a pool whose workers all died can
-            // still accept this connection, and must say so
-            let dead = cfg
-                .hub
-                .as_ref()
-                .and_then(|h| h.liveness())
-                .map(|alive| !alive)
-                .unwrap_or(false);
-            let body = crate::util::json::to_string(&obj(vec![
-                ("status", s(if dead { "unhealthy" } else { "ok" })),
-                ("model", s(&cfg.api.variant)),
-                (
-                    "variants",
-                    Json::Arr(cfg.api.variants.iter().map(|v| s(v)).collect()),
-                ),
-            ]));
-            let status = if dead { "503 Service Unavailable" } else { "200 OK" };
-            http::write_response(&mut stream, status, "application/json", &body)
-        }
-        ("POST", "/v1/completions") => {
-            let parsed = match api::parse_completion(&req.body, id, &cfg.api) {
-                Ok(p) => p,
-                Err(msg) => {
-                    let body = api::error_json(&msg, "invalid_request_error");
-                    return http::write_response(
-                        &mut stream,
-                        "400 Bad Request",
-                        "application/json",
-                        &body,
-                    );
+    // bytes read past one request's body belong to the next pipelined
+    // request on the same connection
+    let mut carry: Vec<u8> = Vec::new();
+    for served_n in 0..MAX_REQUESTS_PER_CONN {
+        let req = match http::read_request(&mut stream, cfg.max_body_bytes, &mut carry) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()), // client was done with the connection
+            Err(e) => {
+                if served_n > 0 {
+                    // an idle keep-alive connection timing out (or a
+                    // half-sent followup) is a normal end, not a protocol
+                    // error worth answering
+                    return Ok(());
                 }
-            };
-            let model = parsed.req.variant.clone();
-            let handle = match submitter.submit(parsed.req) {
-                Ok(h) => h,
-                Err(e) => {
-                    let body = api::error_json(&format!("{e:#}"), "server_error");
-                    return http::write_response(
-                        &mut stream,
-                        "503 Service Unavailable",
-                        "application/json",
-                        &body,
-                    );
+                let body = api::error_json(&format!("{e:#}"), "invalid_request_error");
+                return http::write_response(
+                    &mut stream,
+                    "400 Bad Request",
+                    "application/json",
+                    &body,
+                    false,
+                );
+            }
+        };
+        // honor the client's choice, the per-connection budget, and server
+        // shutdown; SSE responses are always terminal (their headers
+        // commit to `Connection: close`)
+        let ka = req.keep_alive
+            && served_n + 1 < MAX_REQUESTS_PER_CONN
+            && !stop.load(Ordering::SeqCst);
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => {
+                use crate::util::json::{obj, s, Json};
+                // liveness, not readiness: the process answering is not the
+                // service being alive — a pool whose workers all died can
+                // still accept this connection, and must say so
+                let dead = cfg
+                    .hub
+                    .as_ref()
+                    .and_then(|h| h.liveness())
+                    .map(|alive| !alive)
+                    .unwrap_or(false);
+                let body = crate::util::json::to_string(&obj(vec![
+                    ("status", s(if dead { "unhealthy" } else { "ok" })),
+                    ("model", s(&cfg.api.variant)),
+                    (
+                        "variants",
+                        Json::Arr(cfg.api.variants.iter().map(|v| s(v)).collect()),
+                    ),
+                ]));
+                let status = if dead { "503 Service Unavailable" } else { "200 OK" };
+                http::write_response(&mut stream, status, "application/json", &body, ka)?;
+            }
+            ("POST", "/v1/completions") => {
+                let parsed = match api::parse_completion(&req.body, id, &cfg.api) {
+                    Ok(p) => p,
+                    Err(msg) => {
+                        // the body was fully consumed, so framing survives a
+                        // rejection — the connection stays usable
+                        let body = api::error_json(&msg, "invalid_request_error");
+                        http::write_response(
+                            &mut stream,
+                            "400 Bad Request",
+                            "application/json",
+                            &body,
+                            ka,
+                        )?;
+                        if ka {
+                            continue;
+                        }
+                        return Ok(());
+                    }
+                };
+                let model = parsed.req.variant.clone();
+                let handle = match submitter.submit(parsed.req) {
+                    Ok(h) => h,
+                    Err(e) => {
+                        // the serving side is gone for good: answer and close
+                        let body = api::error_json(&format!("{e:#}"), "server_error");
+                        return http::write_response(
+                            &mut stream,
+                            "503 Service Unavailable",
+                            "application/json",
+                            &body,
+                            false,
+                        );
+                    }
+                };
+                if parsed.stream {
+                    let out = stream_completion(stream, id, &model, &handle, stop);
+                    served.fetch_add(1, Ordering::SeqCst);
+                    return out;
                 }
-            };
-            let out = if parsed.stream {
-                stream_completion(stream, id, &model, &handle, stop)
-            } else {
-                match handle.wait_finished() {
+                let out = match handle.wait_finished() {
                     Some(fin) if fin.finish_reason == FinishReason::Overloaded => {
-                        write_overloaded(&mut stream)
+                        write_overloaded(&mut stream, ka)
                     }
                     Some(fin) => http::write_response(
                         &mut stream,
                         "200 OK",
                         "application/json",
                         &api::completion_json(id, &model, &fin),
+                        ka,
                     ),
                     None => http::write_response(
                         &mut stream,
                         "500 Internal Server Error",
                         "application/json",
                         &api::error_json("serving side shut down mid-request", "server_error"),
+                        ka,
                     ),
-                }
-            };
-            served.fetch_add(1, Ordering::SeqCst);
-            out
+                };
+                served.fetch_add(1, Ordering::SeqCst);
+                out?;
+            }
+            _ => {
+                http::write_response(
+                    &mut stream,
+                    "404 Not Found",
+                    "application/json",
+                    &api::error_json(
+                        "unknown route; POST /v1/completions or GET /healthz",
+                        "not_found",
+                    ),
+                    ka,
+                )?;
+            }
         }
-        _ => http::write_response(
-            &mut stream,
-            "404 Not Found",
-            "application/json",
-            &api::error_json("unknown route; POST /v1/completions or GET /healthz", "not_found"),
-        ),
+        if !ka {
+            return Ok(());
+        }
     }
+    Ok(())
 }
 
 /// `429 Too Many Requests` + `Retry-After` for a request shed by
 /// admission control: it consumed no slot and generated nothing, so the
 /// client can retry verbatim after backing off.
-fn write_overloaded(stream: &mut TcpStream) -> Result<()> {
+fn write_overloaded(stream: &mut TcpStream, keep_alive: bool) -> Result<()> {
     http::write_response_extra(
         stream,
         "429 Too Many Requests",
@@ -331,6 +383,7 @@ fn write_overloaded(stream: &mut TcpStream) -> Result<()> {
             "server overloaded: request shed by admission control; retry after backoff",
             "overloaded_error",
         ),
+        keep_alive,
     )
 }
 
@@ -373,13 +426,14 @@ fn stream_completion(
                     "500 Internal Server Error",
                     "application/json",
                     &api::error_json("serving side shut down mid-request", "server_error"),
+                    false,
                 );
             }
         }
     };
     if let Event::Finished(fin) = &first {
         if fin.finish_reason == FinishReason::Overloaded {
-            return write_overloaded(&mut stream);
+            return write_overloaded(&mut stream, false);
         }
     }
     http::write_sse_headers(&mut stream)?;
@@ -900,5 +954,181 @@ mod tests {
         assert_eq!(report.merged.requests_shed, 1, "q2 was not shed");
         assert_eq!(report.merged.cancelled_requests, 1, "victim was not cancelled");
         assert_eq!(report.merged.requests_completed, 4);
+    }
+
+    /// Read exactly one `Content-Length`-framed response off a keep-alive
+    /// connection (the stream stays open for the next one).
+    fn read_one_response(stream: &mut TcpStream) -> (String, String) {
+        let mut buf: Vec<u8> = Vec::new();
+        let mut byte = [0u8; 1];
+        let head_end = loop {
+            if let Some(pos) = http::find_subslice(&buf, b"\r\n\r\n") {
+                break pos;
+            }
+            let n = stream.read(&mut byte).expect("response head");
+            assert!(n > 0, "EOF mid-head: {}", String::from_utf8_lossy(&buf));
+            buf.push(byte[0]);
+        };
+        let head = String::from_utf8(buf[..head_end].to_vec()).unwrap();
+        let clen: usize = head
+            .lines()
+            .find_map(|l| {
+                let (name, v) = l.split_once(':')?;
+                name.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().ok())?
+            })
+            .expect("Content-Length header");
+        let mut body = buf[head_end + 4..].to_vec();
+        while body.len() < clen {
+            let n = stream.read(&mut byte).expect("response body");
+            assert!(n > 0, "EOF mid-body");
+            body.push(byte[0]);
+        }
+        (head, String::from_utf8(body).unwrap())
+    }
+
+    #[test]
+    fn server_keep_alive_serves_many_requests_on_one_connection() {
+        let pool = micro_pool(1, 2);
+        let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
+        let mut server = serve_http("127.0.0.1:0", submitter, test_cfg()).unwrap();
+
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let body = r#"{"prompt": [1, 2, 3], "max_tokens": 3}"#;
+        // three completions on the same socket: HTTP/1.1 defaults to
+        // keep-alive, so no Connection header is sent at all
+        let mut want_tokens: Option<String> = None;
+        for i in 0..3 {
+            write!(
+                stream,
+                "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+                 Content-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .unwrap();
+            let (head, resp) = read_one_response(&mut stream);
+            assert!(head.starts_with("HTTP/1.1 200"), "request {i}: {head}");
+            assert!(head.contains("Connection: keep-alive"), "request {i}: {head}");
+            let v = Json::parse(&resp).unwrap();
+            let toks = crate::util::json::to_string(
+                &v.arr_field("choices").unwrap()[0].get("tokens").unwrap().clone(),
+            );
+            match &want_tokens {
+                None => want_tokens = Some(toks),
+                Some(w) => assert_eq!(&toks, w, "same prompt, different tokens"),
+            }
+        }
+        // a 404 and a parse-rejected request keep the connection usable too
+        write!(stream, "GET /nope HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let (head, _) = read_one_response(&mut stream);
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+        assert!(head.contains("Connection: keep-alive"), "{head}");
+        let bad = r#"{"prompt": []}"#;
+        write!(
+            stream,
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{bad}",
+            bad.len()
+        )
+        .unwrap();
+        let (head, _) = read_one_response(&mut stream);
+        assert!(head.starts_with("HTTP/1.1 400"), "{head}");
+        assert!(head.contains("Connection: keep-alive"), "{head}");
+
+        // Connection: close is honored: the response says close and the
+        // server actually closes (EOF after the body)
+        write!(
+            stream,
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let (head, _) = read_one_response(&mut stream);
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(head.contains("Connection: close"), "{head}");
+        let mut probe = [0u8; 1];
+        assert_eq!(stream.read(&mut probe).unwrap(), 0, "server did not close");
+
+        assert_eq!(server.served(), 4);
+        server.shutdown();
+        pool.finish().unwrap();
+    }
+
+    #[test]
+    fn server_pipelined_requests_share_the_carry_buffer() {
+        // both requests land in one TCP write: the bytes of the second
+        // arrive while the server reads the first's body, and must be
+        // carried over instead of dropped
+        let pool = micro_pool(1, 2);
+        let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
+        let mut server = serve_http("127.0.0.1:0", submitter, test_cfg()).unwrap();
+
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let b1 = r#"{"prompt": [1, 2, 3], "max_tokens": 2}"#;
+        let b2 = r#"{"prompt": [4, 5], "max_tokens": 3}"#;
+        let mut batch = String::new();
+        for b in [b1, b2] {
+            batch.push_str(&format!(
+                "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{b}",
+                b.len()
+            ));
+        }
+        stream.write_all(batch.as_bytes()).unwrap();
+        let (h1, r1) = read_one_response(&mut stream);
+        assert!(h1.starts_with("HTTP/1.1 200"), "{h1}");
+        let v1 = Json::parse(&r1).unwrap();
+        assert_eq!(
+            v1.arr_field("choices").unwrap()[0].arr_field("tokens").unwrap().len(),
+            2
+        );
+        let (h2, r2) = read_one_response(&mut stream);
+        assert!(h2.starts_with("HTTP/1.1 200"), "{h2}");
+        let v2 = Json::parse(&r2).unwrap();
+        assert_eq!(
+            v2.arr_field("choices").unwrap()[0].arr_field("tokens").unwrap().len(),
+            3
+        );
+        assert_eq!(server.served(), 2);
+        server.shutdown();
+        pool.finish().unwrap();
+    }
+
+    #[test]
+    fn server_http10_defaults_to_close_and_sse_is_terminal() {
+        let pool = micro_pool(1, 2);
+        let submitter = Arc::new(ChannelSubmitter::new(pool.sender()));
+        let mut server = serve_http("127.0.0.1:0", submitter, test_cfg()).unwrap();
+
+        // HTTP/1.0 without an explicit keep-alive: one request, then close
+        let mut s10 = TcpStream::connect(server.addr()).unwrap();
+        s10.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        write!(s10, "GET /healthz HTTP/1.0\r\nHost: t\r\n\r\n").unwrap();
+        let (head, _) = read_one_response(&mut s10);
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(head.contains("Connection: close"), "{head}");
+        let mut probe = [0u8; 1];
+        assert_eq!(s10.read(&mut probe).unwrap(), 0, "HTTP/1.0 must close");
+
+        // an SSE response commits to close even on an HTTP/1.1 keep-alive
+        // connection: frames end at [DONE] and then the socket ends
+        let body = r#"{"prompt": [1, 2], "max_tokens": 2, "stream": true}"#;
+        let mut sse = TcpStream::connect(server.addr()).unwrap();
+        sse.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        write!(
+            sse,
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut raw = String::new();
+        sse.read_to_string(&mut raw).unwrap(); // EOF-terminated: server closed
+        let (head, resp) = raw.split_once("\r\n\r\n").expect("response head");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(head.contains("Connection: close"), "{head}");
+        assert_eq!(sse_payloads(resp).last().map(String::as_str), Some("[DONE]"));
+
+        server.shutdown();
+        pool.finish().unwrap();
     }
 }

@@ -1,0 +1,419 @@
+//! Disk spill tier for the [`StateCache`](super::StateCache).
+//!
+//! Mamba2 snapshots are constant-size flat `f32` buffers, so persisting
+//! one is a single sequential write — no serialization framework needed.
+//! The tier is a directory of one file per entry:
+//!
+//! ```text
+//! sess_<session id, 16 hex>.state     session end-of-turn snapshots
+//! pfx_<content hash, 16 hex>.state    bucket-aligned prefix snapshots
+//! ```
+//!
+//! Sessions are **written through** on every insert (a session snapshot
+//! is the only copy of a conversation's state — losing it to process
+//! death is exactly what `--state-cache-dir` exists to prevent).  Prefix
+//! entries are written lazily, when the memory LRU evicts them: the
+//! memory tier stays the hot path and disk absorbs the overflow.
+//!
+//! Reads fall through memory → disk in the cache's lookup methods.  A
+//! disk hit runs the *same* verification as a memory hit (variant +
+//! chunk plan + full token prefix; see the exactness contract in the
+//! parent module) before any state is seeded — and is then re-admitted
+//! to the memory tier so repeat hits stay off the filesystem.
+//!
+//! Every load error — missing file, short read, bad magic, wrong
+//! version, truncated payload — degrades to a cache miss (corrupt files
+//! are counted and deleted, never trusted).  Writes go to a temp file in
+//! the same directory and `rename` into place, so a crash mid-write can
+//! never leave a half-written `.state` file under a live key.
+
+use std::fs::{self, File};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::store::Entry;
+
+/// `b"FMSC"` little-endian: FastMamba State Cache.
+const MAGIC: u32 = u32::from_le_bytes(*b"FMSC");
+const VERSION: u16 = 1;
+
+const KIND_PREFIX: u8 = 0;
+const KIND_SESSION: u8 = 1;
+
+/// What a stored snapshot is keyed by — mirrors
+/// [`store::IndexKey`](super::store::IndexKey) but is `pub(crate)` here
+/// so the cache can spill eviction victims without exposing shard
+/// internals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum DiskKey {
+    Prefix { hash: u64 },
+    Session { id: u64 },
+}
+
+impl DiskKey {
+    fn file_name(self) -> String {
+        match self {
+            DiskKey::Prefix { hash } => format!("pfx_{hash:016x}.state"),
+            DiskKey::Session { id } => format!("sess_{id:016x}.state"),
+        }
+    }
+
+    fn kind_byte(self) -> u8 {
+        match self {
+            DiskKey::Prefix { .. } => KIND_PREFIX,
+            DiskKey::Session { .. } => KIND_SESSION,
+        }
+    }
+}
+
+/// Counters for the tier, readable at any time (all relaxed atomics —
+/// they feed `/statusz` and the stats summary, not control flow).
+#[derive(Debug, Default)]
+pub struct DiskStats {
+    pub writes: AtomicU64,
+    pub write_bytes: AtomicU64,
+    pub reads: AtomicU64,
+    pub read_hits: AtomicU64,
+    pub read_bytes: AtomicU64,
+    /// files rejected by validation (bad magic/version/truncation) and
+    /// deleted; also counts files that failed mid-read
+    pub corrupt: AtomicU64,
+}
+
+/// Snapshot of [`DiskStats`] as plain values.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DiskStatsSnapshot {
+    pub writes: u64,
+    pub write_bytes: u64,
+    pub reads: u64,
+    pub read_hits: u64,
+    pub read_bytes: u64,
+    pub corrupt: u64,
+}
+
+/// The on-disk tier: a directory of snapshot files.
+#[derive(Debug)]
+pub struct DiskTier {
+    dir: PathBuf,
+    stats: DiskStats,
+    /// monotonic discriminator for temp-file names, so two threads
+    /// spilling the same key never write through each other's temp file
+    temp_seq: AtomicU64,
+}
+
+impl DiskTier {
+    /// Open (creating if needed) the tier rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> io::Result<Self> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        Ok(Self { dir, stats: DiskStats::default(), temp_seq: AtomicU64::new(0) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn stats(&self) -> DiskStatsSnapshot {
+        DiskStatsSnapshot {
+            writes: self.stats.writes.load(Ordering::Relaxed),
+            write_bytes: self.stats.write_bytes.load(Ordering::Relaxed),
+            reads: self.stats.reads.load(Ordering::Relaxed),
+            read_hits: self.stats.read_hits.load(Ordering::Relaxed),
+            read_bytes: self.stats.read_bytes.load(Ordering::Relaxed),
+            corrupt: self.stats.corrupt.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of `.state` files currently in the directory (test/ops
+    /// introspection; scans the directory).
+    pub fn n_files(&self) -> usize {
+        fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter(|e| {
+                        e.path().extension().map(|x| x == "state").unwrap_or(false)
+                    })
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Persist `entry` under `key`, replacing any previous file.  Errors
+    /// are swallowed (the disk tier is best-effort — a failed spill just
+    /// means the snapshot is gone, which is what would have happened with
+    /// no disk tier at all).
+    pub(crate) fn store(&self, key: DiskKey, entry: &Entry) {
+        let payload = encode(key, entry);
+        let n = self.temp_seq.fetch_add(1, Ordering::Relaxed);
+        let tmp = self.dir.join(format!(".tmp_{n:x}_{}", key.file_name()));
+        let fin = self.dir.join(key.file_name());
+        let write = (|| -> io::Result<()> {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&payload)?;
+            f.sync_data()?;
+            fs::rename(&tmp, &fin)
+        })();
+        match write {
+            Ok(()) => {
+                self.stats.writes.fetch_add(1, Ordering::Relaxed);
+                self.stats.write_bytes.fetch_add(payload.len() as u64, Ordering::Relaxed);
+            }
+            Err(_) => {
+                let _ = fs::remove_file(&tmp);
+            }
+        }
+    }
+
+    /// Load the snapshot stored under `key`.  Any failure (absent file,
+    /// corruption, version mismatch) is a miss; corrupt files are deleted
+    /// so they cannot fail the same way twice.
+    pub(crate) fn load(&self, key: DiskKey) -> Option<Entry> {
+        self.stats.reads.fetch_add(1, Ordering::Relaxed);
+        let path = self.dir.join(key.file_name());
+        let mut buf = Vec::new();
+        match File::open(&path).and_then(|mut f| f.read_to_end(&mut buf)) {
+            Ok(_) => {}
+            Err(_) => return None, // absent (or unreadable): plain miss
+        }
+        match decode(key, &buf) {
+            Some(e) => {
+                self.stats.read_hits.fetch_add(1, Ordering::Relaxed);
+                self.stats.read_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+                Some(e)
+            }
+            None => {
+                self.stats.corrupt.fetch_add(1, Ordering::Relaxed);
+                let _ = fs::remove_file(&path);
+                None
+            }
+        }
+    }
+
+    /// Remove the file for `key`, if present (session overwrite keeps
+    /// only the latest turn; the write path renames over the old file,
+    /// so this is only needed when a key is retired outright).
+    #[allow(dead_code)]
+    pub(crate) fn remove(&self, key: DiskKey) {
+        let _ = fs::remove_file(self.dir.join(key.file_name()));
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(out, vs.len() as u32);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn encode(key: DiskKey, e: &Entry) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        32 + e.variant.len() + 8 * e.chunks.len() + 4 * e.tokens.len()
+            + 4 * (e.conv.len() + e.ssm.len()),
+    );
+    put_u32(&mut out, MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(key.kind_byte());
+    put_u32(&mut out, e.variant.len() as u32);
+    out.extend_from_slice(e.variant.as_bytes());
+    put_u32(&mut out, e.chunks.len() as u32);
+    for &c in &e.chunks {
+        out.extend_from_slice(&(c as u64).to_le_bytes());
+    }
+    put_u32(&mut out, e.tokens.len() as u32);
+    for &t in &e.tokens {
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+    put_f32s(&mut out, &e.conv);
+    put_f32s(&mut out, &e.ssm);
+    out
+}
+
+/// Bounds-checked little-endian reader over a loaded file.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|s| s[0])
+    }
+
+    fn u16(&mut self) -> Option<u16> {
+        self.take(2).map(|s| u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|s| u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|s| {
+            u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]])
+        })
+    }
+
+    fn f32(&mut self) -> Option<f32> {
+        self.u32().map(f32::from_bits)
+    }
+}
+
+fn decode(key: DiskKey, buf: &[u8]) -> Option<Entry> {
+    let mut c = Cursor { buf, pos: 0 };
+    if c.u32()? != MAGIC || c.u16()? != VERSION || c.u8()? != key.kind_byte() {
+        return None;
+    }
+    let vlen = c.u32()? as usize;
+    let variant = String::from_utf8(c.take(vlen)?.to_vec()).ok()?;
+    let n_chunks = c.u32()? as usize;
+    let mut chunks = Vec::with_capacity(n_chunks.min(1 << 16));
+    for _ in 0..n_chunks {
+        chunks.push(c.u64()? as usize);
+    }
+    let n_tokens = c.u32()? as usize;
+    let mut tokens = Vec::with_capacity(n_tokens.min(1 << 20));
+    for _ in 0..n_tokens {
+        tokens.push(c.u32()?);
+    }
+    let conv_len = c.u32()? as usize;
+    let mut conv = Vec::with_capacity(conv_len.min(1 << 24));
+    for _ in 0..conv_len {
+        conv.push(c.f32()?);
+    }
+    let ssm_len = c.u32()? as usize;
+    let mut ssm = Vec::with_capacity(ssm_len.min(1 << 24));
+    for _ in 0..ssm_len {
+        ssm.push(c.f32()?);
+    }
+    if c.pos != buf.len() {
+        return None; // trailing garbage: treat as corrupt
+    }
+    let bytes =
+        super::store::entry_bytes(tokens.len(), chunks.len(), conv.len(), ssm.len());
+    Some(Entry { variant, chunks, tokens, conv, ssm, last_used: 0, bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("fastmamba_disk_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn entry(tag: u32) -> Entry {
+        let tokens: Vec<u32> = (0..6).map(|i| i * 7 + tag).collect();
+        Entry {
+            variant: "fastmamba".into(),
+            chunks: vec![2, 4],
+            tokens: tokens.clone(),
+            conv: (0..8).map(|i| i as f32 + tag as f32 * 0.5).collect(),
+            ssm: (0..8).map(|i| -(i as f32) - tag as f32).collect(),
+            last_used: 99, // not persisted: recency restarts on reload
+            bytes: super::super::store::entry_bytes(6, 2, 8, 8),
+        }
+    }
+
+    #[test]
+    fn disk_roundtrip_preserves_entry_exactly() {
+        let dir = tmpdir("roundtrip");
+        let tier = DiskTier::open(&dir).unwrap();
+        let e = entry(1);
+        let key = DiskKey::Session { id: 42 };
+        tier.store(key, &e);
+        assert_eq!(tier.n_files(), 1);
+
+        let back = tier.load(key).expect("stored entry loads");
+        assert_eq!(back.variant, e.variant);
+        assert_eq!(back.chunks, e.chunks);
+        assert_eq!(back.tokens, e.tokens);
+        assert_eq!(back.conv, e.conv);
+        assert_eq!(back.ssm, e.ssm);
+        assert_eq!(back.bytes, e.bytes, "accounted size recomputed on load");
+        assert_eq!(back.last_used, 0, "recency is a memory-tier concern");
+
+        let s = tier.stats();
+        assert_eq!(s.writes, 1);
+        assert_eq!(s.read_hits, 1);
+        assert!(s.write_bytes > 0 && s.read_bytes == s.write_bytes);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn absent_key_is_a_plain_miss() {
+        let dir = tmpdir("absent");
+        let tier = DiskTier::open(&dir).unwrap();
+        assert!(tier.load(DiskKey::Prefix { hash: 7 }).is_none());
+        let s = tier.stats();
+        assert_eq!(s.reads, 1);
+        assert_eq!(s.read_hits, 0);
+        assert_eq!(s.corrupt, 0, "absence is not corruption");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_files_are_rejected_and_deleted() {
+        let dir = tmpdir("corrupt");
+        let tier = DiskTier::open(&dir).unwrap();
+        let key = DiskKey::Prefix { hash: 0xAB };
+        let good = encode(key, &entry(2));
+
+        // every strict prefix of a valid file must be rejected (truncation
+        // at any byte), as must bad magic and a flipped version
+        for cut in [0, 4, 6, 7, 11, good.len() / 2, good.len() - 1] {
+            assert!(decode(key, &good[..cut]).is_none(), "truncated at {cut}");
+        }
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(decode(key, &bad_magic).is_none());
+        let mut bad_version = good.clone();
+        bad_version[4] ^= 0xFF;
+        assert!(decode(key, &bad_version).is_none());
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(decode(key, &trailing).is_none(), "trailing bytes rejected");
+        // a session-kind file must not decode under a prefix key
+        assert!(decode(DiskKey::Session { id: 0xAB }, &good).is_none());
+
+        // a corrupt file on disk counts and is removed
+        fs::write(dir.join(key.file_name()), &good[..good.len() - 3]).unwrap();
+        assert!(tier.load(key).is_none());
+        assert_eq!(tier.stats().corrupt, 1);
+        assert_eq!(tier.n_files(), 0, "corrupt file deleted");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn store_overwrites_and_remove_deletes() {
+        let dir = tmpdir("overwrite");
+        let tier = DiskTier::open(&dir).unwrap();
+        let key = DiskKey::Session { id: 9 };
+        tier.store(key, &entry(1));
+        tier.store(key, &entry(2)); // rename-over: still one file
+        assert_eq!(tier.n_files(), 1);
+        let back = tier.load(key).unwrap();
+        assert_eq!(back.tokens, entry(2).tokens, "latest write wins");
+        tier.remove(key);
+        assert!(tier.load(key).is_none());
+        assert_eq!(tier.n_files(), 0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

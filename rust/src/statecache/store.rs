@@ -64,8 +64,8 @@ impl Entry {
 /// Where an eviction-index tick points.  Prefix entries are identified by
 /// their hash; the position inside the (nearly always length-1) collision
 /// chain is recovered by tick at eviction time.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum IndexKey {
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) enum IndexKey {
     Prefix { hash: u64 },
     Session { id: u64 },
 }
@@ -82,6 +82,11 @@ pub(crate) struct Shard {
     /// ordered eviction index: LRU tick -> entry key (kept in lock-step
     /// with the maps by the methods below)
     index: BTreeMap<u64, IndexKey>,
+    /// admission pins: refcounted keys the LRU must not evict because the
+    /// scheduler is about to resume from them (queued session turns,
+    /// preemption snapshots).  A pin may precede the entry it protects —
+    /// it guards the *key*, so an insert-after-pin is covered too.
+    pins: HashMap<IndexKey, u32>,
 }
 
 impl Shard {
@@ -137,15 +142,44 @@ impl Shard {
         }
     }
 
-    /// Remove the least-recently-used entry (across both maps): the
-    /// smallest tick in the ordered index.  Returns false when the shard
-    /// is already empty.
-    fn evict_one(&mut self) -> bool {
-        let Some((&tick, &key)) = self.index.first_key_value() else {
-            return false;
-        };
+    /// Pin `key` against eviction (refcounted: pin/unpin calls must
+    /// balance).  Pinning a key with no resident entry is legal — the pin
+    /// protects whatever lands under the key later.
+    pub fn pin(&mut self, key: IndexKey) {
+        *self.pins.entry(key).or_insert(0) += 1;
+    }
+
+    /// Drop one pin reference on `key`; the key becomes evictable again
+    /// when the refcount reaches zero.  Unpinning a never-pinned key is a
+    /// no-op (lifecycle paths may race a pin that was never taken).
+    pub fn unpin(&mut self, key: IndexKey) {
+        if let Some(c) = self.pins.get_mut(&key) {
+            *c -= 1;
+            if *c == 0 {
+                self.pins.remove(&key);
+            }
+        }
+    }
+
+    #[cfg(test)]
+    pub fn n_pins(&self) -> usize {
+        self.pins.len()
+    }
+
+    /// Remove the least-recently-used **unpinned** entry (across both
+    /// maps): the smallest index tick whose key holds no admission pin.
+    /// Returns the evicted key + entry so the caller can spill it to a
+    /// disk tier; `None` when the shard is empty or everything left is
+    /// pinned (the byte budget is then temporarily exceeded — pins are
+    /// bounded by queued-request count, so this resolves at admission).
+    fn evict_one(&mut self) -> Option<(IndexKey, Entry)> {
+        let (tick, key) = self
+            .index
+            .iter()
+            .find(|(_, k)| !self.pins.contains_key(*k))
+            .map(|(&t, &k)| (t, k))?;
         self.index.remove(&tick);
-        match key {
+        let e = match key {
             IndexKey::Prefix { hash } => {
                 let chain = self.prefix.get_mut(&hash).expect("indexed chain exists");
                 let pos = chain
@@ -153,31 +187,32 @@ impl Shard {
                     .position(|e| e.last_used == tick)
                     .expect("indexed entry in chain");
                 let e = chain.remove(pos);
-                self.bytes -= e.bytes;
                 if chain.is_empty() {
                     self.prefix.remove(&hash);
                 }
+                e
             }
             IndexKey::Session { id } => {
-                let e = self.sessions.remove(&id).expect("indexed session exists");
-                self.bytes -= e.bytes;
+                self.sessions.remove(&id).expect("indexed session exists")
             }
-        }
-        true
+        };
+        self.bytes -= e.bytes;
+        Some((key, e))
     }
 
-    /// Evict LRU entries until the shard holds at most `budget` bytes.
-    /// Returns how many entries were evicted.
-    pub fn evict_to(&mut self, budget: usize) -> u64 {
+    /// Evict LRU entries until the shard holds at most `budget` bytes
+    /// (pinned entries are skipped).  Returns the victims, oldest first,
+    /// for the caller to count and optionally spill to disk.
+    pub fn evict_to(&mut self, budget: usize) -> Vec<(IndexKey, Entry)> {
         debug_assert_eq!(self.index.len(), self.n_entries(), "index out of sync");
-        let mut n = 0u64;
+        let mut victims = Vec::new();
         while self.bytes > budget {
-            if !self.evict_one() {
-                break;
+            match self.evict_one() {
+                Some(v) => victims.push(v),
+                None => break,
             }
-            n += 1;
         }
-        n
+        victims
     }
 }
 
@@ -212,12 +247,13 @@ mod tests {
         assert_eq!(s.n_entries(), 3);
         assert_eq!(s.bytes, 3 * per);
 
-        let n = s.evict_to(2 * per);
-        assert_eq!(n, 1);
+        let victims = s.evict_to(2 * per);
+        assert_eq!(victims.len(), 1);
+        assert_eq!(victims[0].0, IndexKey::Prefix { hash: 102 });
         assert!(s.prefix_chain(102).is_none(), "LRU prefix entry evicted first");
         assert!(s.session(7).is_some());
 
-        let n = s.evict_to(per);
+        let n = s.evict_to(per).len();
         assert_eq!(n, 1);
         assert!(s.prefix_chain(101).is_none(), "next-oldest evicted second");
         assert!(s.session(7).is_some(), "newest survives");
@@ -228,10 +264,10 @@ mod tests {
     fn evict_to_zero_empties_shard() {
         let mut s = Shard::default();
         s.insert_session_entry(1, entry(1, 1));
-        assert_eq!(s.evict_to(0), 1);
+        assert_eq!(s.evict_to(0).len(), 1);
         assert_eq!(s.n_entries(), 0);
         assert_eq!(s.bytes, 0);
-        assert_eq!(s.evict_to(0), 0, "empty shard evicts nothing");
+        assert!(s.evict_to(0).is_empty(), "empty shard evicts nothing");
     }
 
     #[test]
@@ -267,7 +303,7 @@ mod tests {
         while s.n_entries() > 0 {
             let before = survivors(&s);
             let target = s.bytes - 1; // force exactly one eviction
-            assert_eq!(s.evict_to(target), 1);
+            assert_eq!(s.evict_to(target).len(), 1);
             let after = survivors(&s);
             let victim: Vec<u64> =
                 before.iter().filter(|t| !after.contains(t)).copied().collect();
@@ -286,13 +322,13 @@ mod tests {
         s.insert_prefix_entry(2, entry(2, 2));
         // refresh the older entry: the other becomes the victim
         s.touch_prefix(1, 0, 3);
-        assert_eq!(s.evict_to(per), 1);
+        assert_eq!(s.evict_to(per).len(), 1);
         assert!(s.prefix_chain(1).is_some(), "touched entry survives");
         assert!(s.prefix_chain(2).is_none(), "untouched entry evicted");
 
         s.insert_session_entry(9, entry(3, 4));
         s.touch_session(9, 5);
-        assert_eq!(s.evict_to(per), 1);
+        assert_eq!(s.evict_to(per).len(), 1);
         assert!(s.session(9).is_some(), "touched session survives");
         assert!(s.prefix_chain(1).is_none());
     }
@@ -305,9 +341,42 @@ mod tests {
         assert_eq!(s.n_entries(), 1);
         s.insert_prefix_entry(5, entry(3, 3));
         // the stale tick 1 must not be evictable; LRU is the session at 2
-        assert_eq!(s.evict_to(s.bytes - 1), 1);
+        assert_eq!(s.evict_to(s.bytes - 1).len(), 1);
         assert!(s.session(9).is_none(), "overwritten session is the LRU victim");
         assert!(s.prefix_chain(5).is_some());
+    }
+
+    #[test]
+    fn pinned_entries_are_skipped_until_unpinned() {
+        let mut s = Shard::default();
+        let per = entry(0, 0).bytes;
+        s.insert_session_entry(9, entry(1, 1)); // oldest — the natural victim
+        s.insert_prefix_entry(5, entry(2, 2));
+        s.insert_prefix_entry(6, entry(3, 3));
+
+        // pin the LRU session: eviction must pass over it
+        s.pin(IndexKey::Session { id: 9 });
+        let victims = s.evict_to(2 * per);
+        assert_eq!(victims.len(), 1);
+        assert_eq!(victims[0].0, IndexKey::Prefix { hash: 5 }, "next-oldest unpinned evicted");
+        assert!(s.session(9).is_some(), "pinned session survives LRU pressure");
+
+        // everything pinned: eviction stalls rather than evicting a pin
+        s.pin(IndexKey::Prefix { hash: 6 });
+        assert!(s.evict_to(0).is_empty(), "all-pinned shard evicts nothing");
+        assert_eq!(s.bytes, 2 * per, "budget temporarily exceeded while pinned");
+
+        // refcounting: double-pin needs double-unpin
+        s.pin(IndexKey::Session { id: 9 });
+        s.unpin(IndexKey::Session { id: 9 });
+        assert!(s.evict_to(per).is_empty(), "still one pin ref on each entry");
+        s.unpin(IndexKey::Session { id: 9 });
+        s.unpin(IndexKey::Prefix { hash: 6 });
+        assert_eq!(s.n_pins(), 0);
+        assert_eq!(s.evict_to(0).len(), 2, "unpinned entries evict normally");
+
+        // unpinning a never-pinned key is a harmless no-op
+        s.unpin(IndexKey::Session { id: 777 });
     }
 
     #[test]
